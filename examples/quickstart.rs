@@ -1,0 +1,56 @@
+//! Quickstart: simulate one HPL configuration on a synthetic cluster and
+//! compare "reality" (hidden ground truth) against the calibrated
+//! prediction — the paper's Fig. 2 workflow in ~40 lines.
+//!
+//! Run with:  cargo run --release --example quickstart
+
+use hplsim::calibration::calibrate_models;
+use hplsim::hpl::{simulate_direct, simulate_with_artifacts, HplConfig};
+use hplsim::platform::{calibrate_network, CalProcedure, GroundTruth, Scenario};
+use hplsim::runtime::Artifacts;
+use hplsim::stats::mean;
+
+fn main() {
+    // 1. A hidden 8-node cluster (the "real" machine).
+    let gt = GroundTruth::generate(8, Scenario::Normal, 42);
+    let topo = gt.topology();
+    let net_truth = gt.net_model();
+
+    // 2. Calibrate: benchmark dgemm on every node + network ping-pongs.
+    let arts = Artifacts::load_default().ok();
+    if let Some(a) = &arts {
+        println!("using XLA artifacts on {}", a.platform());
+    } else {
+        println!("artifacts not built — falling back to the pure-Rust model path");
+    }
+    let models = calibrate_models(arts.as_ref(), &gt, 0, 512, 1);
+    let net_cal = calibrate_network(&gt, CalProcedure::Improved, 2);
+
+    // 3. An HPL configuration: N=8192, NB=64, 4x8 grid (4 ranks/node).
+    let mut cfg = HplConfig::dahu_default(8192, 4, 8);
+    cfg.nb = 64;
+
+    // 4. "Real" runs (ground truth) ...
+    let reality: Vec<f64> = (0..3)
+        .map(|day| {
+            let r = simulate_direct(&cfg, &topo, &net_truth, &gt.day_model(day), 4, 100 + day);
+            println!("reality day {day}: {:8.2} GFlop/s ({:.3} s)", r.gflops, r.seconds);
+            r.gflops
+        })
+        .collect();
+
+    // 5. ... versus the prediction from calibrated models only.
+    let pred = match &arts {
+        Some(a) => {
+            simulate_with_artifacts(&cfg, &topo, &net_cal, &models.full, a, 4, 7).unwrap()
+        }
+        None => simulate_direct(&cfg, &topo, &net_cal, &models.full, 4, 7),
+    };
+    let rm = mean(&reality);
+    println!(
+        "prediction   : {:8.2} GFlop/s  (error {:+.1}% — the paper predicts within a few %)",
+        pred.gflops,
+        100.0 * (pred.gflops / rm - 1.0)
+    );
+    assert!((pred.gflops / rm - 1.0).abs() < 0.10, "prediction off by >10%");
+}

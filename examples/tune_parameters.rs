@@ -1,0 +1,73 @@
+//! Parameter tuning entirely in simulation (the paper's §4.2 use case):
+//! sweep NB x DEPTH x BCAST x SWAP on the calibrated surrogate, rank the
+//! factors by ANOVA, and report the best configuration — without ever
+//! "running" the real machine except for calibration.
+//!
+//! Run with:  cargo run --release --example tune_parameters
+
+use hplsim::calibration::calibrate_models;
+use hplsim::hpl::{simulate_direct, Bcast, HplConfig, Rfact, SwapAlg};
+use hplsim::platform::{calibrate_network, CalProcedure, GroundTruth, Scenario};
+use hplsim::stats::anova_one_way;
+
+fn main() {
+    let gt = GroundTruth::generate(4, Scenario::Normal, 11);
+    let topo = gt.topology();
+    let net = calibrate_network(&gt, CalProcedure::Improved, 12);
+    let models = calibrate_models(None, &gt, 0, 512, 13);
+
+    let mut rows = Vec::new();
+    let mut y = Vec::new();
+    for nb in [32usize, 64] {
+        for depth in [0usize, 1] {
+            for bcast in Bcast::ALL {
+                for swap in SwapAlg::ALL {
+                    let cfg = HplConfig {
+                        n: 4096,
+                        nb,
+                        p: 4,
+                        q: 4,
+                        depth,
+                        bcast,
+                        swap,
+                        swap_threshold: 64,
+                        rfact: Rfact::Right,
+                        nbmin: 8,
+                    };
+                    let r = simulate_direct(&cfg, &topo, &net, &models.full, 4, 3);
+                    rows.push((nb, depth, bcast, swap));
+                    y.push(r.gflops);
+                }
+            }
+        }
+    }
+
+    // Factor ranking (the paper found NB and DEPTH dominate, then
+    // BCAST and SWAP).
+    for (name, groups) in [
+        ("nb", rows.iter().map(|r| r.0.to_string()).collect::<Vec<_>>()),
+        ("depth", rows.iter().map(|r| r.1.to_string()).collect()),
+        ("bcast", rows.iter().map(|r| r.2.name().to_string()).collect()),
+        ("swap", rows.iter().map(|r| r.3.name().to_string()).collect()),
+    ] {
+        let a = anova_one_way(name, &groups, &y);
+        println!("{name:>6}: eta^2 = {:.3}  F = {:.1}", a.eta_sq, a.f_stat);
+    }
+
+    let best = y
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let (nb, depth, bcast, swap) = rows[best];
+    println!(
+        "\nbest configuration in simulation: NB={nb} DEPTH={depth} BCAST={} SWAP={} \
+         ({:.1} GFlop/s over {} combinations)",
+        bcast.name(),
+        swap.name(),
+        y[best],
+        y.len()
+    );
+    assert_eq!(y.len(), 72);
+}

@@ -1,0 +1,89 @@
+//! End-to-end validation driver (recorded in EXPERIMENTS.md): the full
+//! Fig. 5 pipeline on a real (small) workload, proving all three layers
+//! compose:
+//!
+//!   ground truth  →  synthetic calibration benchmarks
+//!                 →  model fit through the AOT-compiled XLA artifact
+//!                    (Pallas gram kernel + Cholesky solve, via PJRT)
+//!                 →  HPL emulation with pooled durations evaluated by
+//!                    the dgemm_model artifact (Pallas poly kernel)
+//!                 →  prediction-vs-reality error ladder.
+//!
+//! Asserts the paper's §3.4 finding: naive ≫ heterogeneous > full, with
+//! the full model within a few percent.
+//!
+//! Run with:  make artifacts && cargo run --release --example validate_hpl
+
+use hplsim::calibration::calibrate_models;
+use hplsim::hpl::{simulate_with_artifacts, HplConfig};
+use hplsim::platform::{calibrate_network, CalProcedure, GroundTruth, Scenario};
+use hplsim::runtime::Artifacts;
+use hplsim::stats::{mean, std_dev};
+
+fn main() {
+    let arts = match Artifacts::load_default() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("validate_hpl requires the XLA artifacts (run `make artifacts`): {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}", arts.platform());
+
+    let gt = GroundTruth::generate(8, Scenario::Normal, 42);
+    let topo = gt.topology();
+    let net_truth = gt.net_model();
+    let net_cal = calibrate_network(&gt, CalProcedure::Improved, 43);
+    let models = calibrate_models(Some(&arts), &gt, 0, 512, 44);
+
+    let mut worst = [0.0f64; 3]; // naive, hetero, full |err|
+    println!(
+        "\n{:>6} {:>9} {:>6} {:>9} {:>8} {:>9} {:>8} {:>9} {:>8}",
+        "N", "reality", "sd", "naive", "err", "hetero", "err", "full", "err"
+    );
+    for n in [4096usize, 8192, 16384] {
+        let mut cfg = HplConfig::dahu_default(n, 4, 8);
+        cfg.nb = 64;
+        let reality: Vec<f64> = (0..3u64)
+            .map(|d| {
+                simulate_with_artifacts(
+                    &cfg, &topo, &net_truth, &gt.day_model(d), &arts, 4, 100 + d,
+                )
+                .unwrap()
+                .gflops
+            })
+            .collect();
+        let rm = mean(&reality);
+        let mut preds = [0.0f64; 3];
+        for (i, m) in [&models.naive, &models.hetero, &models.full].iter().enumerate() {
+            preds[i] = simulate_with_artifacts(&cfg, &topo, &net_cal, m, &arts, 4, 7)
+                .unwrap()
+                .gflops;
+            worst[i] = worst[i].max((preds[i] / rm - 1.0).abs());
+        }
+        println!(
+            "{:>6} {:>9.1} {:>6.1} {:>9.1} {:>+7.1}% {:>9.1} {:>+7.1}% {:>9.1} {:>+7.1}%",
+            n,
+            rm,
+            std_dev(&reality),
+            preds[0],
+            100.0 * (preds[0] / rm - 1.0),
+            preds[1],
+            100.0 * (preds[1] / rm - 1.0),
+            preds[2],
+            100.0 * (preds[2] / rm - 1.0),
+        );
+    }
+
+    println!(
+        "\nworst |error|: naive {:+.1}%  hetero {:+.1}%  full {:+.1}%",
+        100.0 * worst[0],
+        100.0 * worst[1],
+        100.0 * worst[2]
+    );
+    // The paper's ladder: naive ≫ hetero > full; full within a few %.
+    assert!(worst[0] > worst[1], "naive must be worse than heterogeneous");
+    assert!(worst[1] > worst[2], "heterogeneous must be worse than full");
+    assert!(worst[2] < 0.05, "full model must predict within 5%");
+    println!("validation PASSED: model-fidelity ladder reproduced, full model within 5%");
+}

@@ -1,0 +1,67 @@
+//! What-if capacity planning (the paper's §5): given only daily
+//! calibration measurements of a small testbed, extrapolate a larger
+//! hypothetical cluster with the hierarchical generative model and ask
+//! (a) how much does dgemm temporal variability cost? and (b) how many
+//! fat-tree top switches can be turned off?
+//!
+//! Run with:  cargo run --release --example whatif_capacity
+
+use hplsim::calibration::{bench_node, fit_day_linear};
+use hplsim::hpl::{simulate_direct, HplConfig};
+use hplsim::network::Topology;
+use hplsim::platform::{generative, GroundTruth, Hierarchical, Scenario};
+use hplsim::stats::Rng;
+
+fn main() {
+    // Observe a 16-node testbed for 8 "days" (benchmark regressions).
+    let gt = GroundTruth::generate(16, Scenario::Normal, 5);
+    let mut rng = Rng::new(6);
+    let data: Vec<Vec<[f64; 3]>> = (0..16)
+        .map(|p| {
+            (0..8u64)
+                .map(|d| fit_day_linear(&bench_node(&gt, &gt.day_model(d), p, 250, &mut rng)))
+                .collect()
+        })
+        .collect();
+    let h = Hierarchical::fit(&data);
+    println!(
+        "fitted hierarchy: alpha = {:.3e}  spatial sd = {:.1}%  daily sd = {:.1}%",
+        h.mu[0],
+        100.0 * h.sigma_s[(0, 0)].sqrt() / h.mu[0],
+        100.0 * h.sigma_t[(0, 0)].sqrt() / h.mu[0],
+    );
+
+    // Extrapolate a 64-node cluster that does not exist.
+    let cluster = h.sample_cluster(64, &mut rng);
+    let scaled: Vec<[f64; 3]> = cluster.iter().map(|c| [c[0] / 2.0, c[1], c[2] / 2.0]).collect();
+    let mut cfg = HplConfig::dahu_default(16384, 8, 8);
+    cfg.nb = 64;
+    let net = gt.net_model();
+
+    // (a) Temporal-variability sensitivity (Fig. 12).
+    let star = Topology::star(64, gt.node_bw, gt.loop_bw);
+    let t0 = simulate_direct(
+        &cfg, &star, &net,
+        &generative::model_from_linear(&scaled, Some(0.0)), 1, 1,
+    )
+    .seconds;
+    println!("\ntemporal variability (64-node what-if):");
+    for cv in [0.02, 0.05, 0.10] {
+        let m = generative::model_from_linear(&scaled, Some(cv));
+        let t = simulate_direct(&cfg, &star, &net, &m, 1, 2).seconds;
+        println!("  cv = {cv:<4}: overhead {:+.1}%", 100.0 * (t / t0 - 1.0));
+    }
+
+    // (b) Fat-tree tapering sensitivity (Fig. 16).
+    println!("\nfat-tree tapering (8 leaves x 8 nodes):");
+    let model = generative::model_from_linear(&scaled, None);
+    let mut base = 0.0;
+    for tops in (1..=4).rev() {
+        let ft = Topology::fat_tree(8, 8, tops, 2, gt.node_bw, gt.node_bw, gt.loop_bw);
+        let g = simulate_direct(&cfg, &ft, &net, &model, 1, 3).gflops;
+        if tops == 4 {
+            base = g;
+        }
+        println!("  {tops} top switch(es): {g:8.1} GFlop/s ({:+.1}%)", 100.0 * (g / base - 1.0));
+    }
+}

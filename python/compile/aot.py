@@ -1,0 +1,111 @@
+"""AOT compile path: lower the Layer-2 model to HLO *text* artifacts.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla_extension 0.5.1
+runtime behind the Rust `xla` crate rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Artifacts (fixed shapes; the Rust runtime chunks + pads):
+
+  dgemm_model_<B>.hlo.txt   (mnk f32[B,4], idx i32[B], mu f32[NODES,8],
+                             sg f32[NODES,8], z f32[B]) -> (dur f32[B],)
+  calibrate.hlo.txt         (mnk f32[P,S,4], y f32[P,S])
+                             -> (mu_coef f32[P,8], sg_coef f32[P,8])
+
+A `manifest.json` records every artifact's shapes so the Rust side can
+sanity-check at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import FEATS
+
+# Fixed AOT shapes.
+NODES = 1024  # max nodes addressable by one coefficient table
+BATCHES = (512, 8192, 65536)  # dgemm_model variants (small/med/large)
+CAL_P = 32  # nodes per calibration chunk
+CAL_S = 512  # benchmark samples per node
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_dgemm_model(batch: int):
+    args = (
+        _spec((batch, 4)),
+        _spec((batch,), jnp.int32),
+        _spec((NODES, FEATS)),
+        _spec((NODES, FEATS)),
+        _spec((batch,)),
+    )
+    return jax.jit(model.dgemm_model_entry).lower(*args), args
+
+
+def lower_calibrate():
+    args = (_spec((CAL_P, CAL_S, 4)), _spec((CAL_P, CAL_S)))
+    return jax.jit(model.calibrate_entry).lower(*args), args
+
+
+def _manifest_entry(args, outs):
+    def fmt(s):
+        return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+    return {"inputs": [fmt(a) for a in args], "outputs": [fmt(o) for o in outs]}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"feats": FEATS, "nodes": NODES, "cal_p": CAL_P, "cal_s": CAL_S}
+
+    for batch in BATCHES:
+        lowered, specs = lower_dgemm_model(batch)
+        text = to_hlo_text(lowered)
+        name = f"dgemm_model_{batch}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(model.dgemm_model_entry, *specs)
+        manifest[name] = _manifest_entry(specs, outs)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    lowered, specs = lower_calibrate()
+    text = to_hlo_text(lowered)
+    path = os.path.join(args.out_dir, "calibrate.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(model.calibrate_entry, *specs)
+    manifest["calibrate"] = _manifest_entry(specs, outs)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

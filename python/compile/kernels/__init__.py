@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels for hplsim (build-time only, never at runtime)."""
+
+from .poly_model import FEATS, poly_model_durations
+from .gram import gram
+
+__all__ = ["FEATS", "poly_model_durations", "gram"]

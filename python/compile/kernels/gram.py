@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernel: per-node Gram accumulation for OLS calibration.
+
+For each node p with design matrix F_p (S samples x FEATS features) and
+observations y_p (S), computes the normal-equation blocks
+
+    G_p = F_p^T F_p          (FEATS x FEATS)
+    v_p = F_p^T y_p          (FEATS)
+
+which Layer-2 then solves with an unrolled Cholesky (`model.solve_spd`).
+
+TPU shaping (§Hardware-Adaptation): this is the MXU-shaped piece — an
+(S x F)^T @ (S x F) reduction.  The grid iterates over (node, sample-block);
+each step does a (F x BLOCK_S) @ (BLOCK_S x F) matmul into a persistent
+f32 VMEM accumulator (FEATS=8 -> G tile is 8x8, v is 8; ~0.3 KB of
+accumulator state).  `interpret=True` for CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .poly_model import FEATS
+
+# Sample-axis tile.
+BLOCK_S = 256
+
+
+def _gram_kernel(f_ref, y_ref, g_ref, v_ref):
+    """Grid step (p, s): accumulate one sample block of node p."""
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    f = f_ref[0]  # [BLOCK_S, FEATS]
+    y = y_ref[0]  # [BLOCK_S]
+    g_ref[0] += jnp.dot(f.T, f, preferred_element_type=jnp.float32)
+    v_ref[0] += jnp.dot(f.T, y[:, None], preferred_element_type=jnp.float32)[
+        :, 0
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def gram(feats, y, *, block_s=BLOCK_S):
+    """Per-node Gram blocks.
+
+    Args:
+      feats: f32[P, S, FEATS] — per-node design matrices.
+      y:     f32[P, S]        — per-node observations.
+      block_s: sample tile (must divide S).
+
+    Returns:
+      (g, v): f32[P, FEATS, FEATS], f32[P, FEATS].
+    """
+    p, s, f = feats.shape
+    assert f == FEATS, feats.shape
+    assert s % block_s == 0, (s, block_s)
+    grid = (p, s // block_s)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, FEATS), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_s), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, FEATS, FEATS), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, FEATS), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, FEATS, FEATS), jnp.float32),
+            jax.ShapeDtypeStruct((p, FEATS), jnp.float32),
+        ],
+        interpret=True,
+    )(feats, y)

@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: stochastic polynomial dgemm-duration model.
+
+Implements Eq. (1)/(2) of Cornebize & Legrand 2021 in batched form:
+
+    dur_i = max(0, mu_i + |z_i| * max(0, sigma_i))
+    mu_i    = <feats(M_i, N_i, K_i), mu_coef_i>
+    sigma_i = <feats(M_i, N_i, K_i), sg_coef_i>
+    feats(M, N, K) = [M*N*K, M*N, M*K, N*K, 1, 0, 0, 0]   (padded to 8 lanes)
+
+The half-normal draw |z|*sigma uses a standard-normal `z` supplied by the
+caller (the Rust coordinator owns the RNG so that simulations are
+reproducible across layers).
+
+TPU shaping notes (§Hardware-Adaptation in DESIGN.md): the kernel is
+elementwise over the batch — one HBM->VMEM stream per block of
+`BLOCK_B` samples, feature axis padded to 8 lanes so the layout is
+(8, 128)-tileable.  No MXU use; this is a VPU kernel.  `interpret=True`
+is mandatory on CPU PJRT (real TPU lowering emits a Mosaic custom-call).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Number of feature lanes (5 real features, padded to 8 for TPU tiling).
+FEATS = 8
+# Default batch tile.  8192-sample batches split into 8 grid steps.
+BLOCK_B = 1024
+
+
+def _features(mnk):
+    """Feature expansion [b, 4] (M, N, K, pad) -> [b, FEATS].
+
+    Real features: [M*N*K, M*N, M*K, N*K, 1]; lanes 5..7 are zero.
+    """
+    m = mnk[:, 0]
+    n = mnk[:, 1]
+    k = mnk[:, 2]
+    one = jnp.ones_like(m)
+    zero = jnp.zeros_like(m)
+    return jnp.stack(
+        [m * n * k, m * n, m * k, n * k, one, zero, zero, zero], axis=-1
+    )
+
+
+def _poly_model_kernel(mnk_ref, mu_ref, sg_ref, z_ref, out_ref):
+    """One grid step: BLOCK_B samples."""
+    feats = _features(mnk_ref[...])
+    mu = jnp.sum(feats * mu_ref[...], axis=-1)
+    sigma = jnp.maximum(jnp.sum(feats * sg_ref[...], axis=-1), 0.0)
+    dur = mu + jnp.abs(z_ref[...]) * sigma
+    out_ref[...] = jnp.maximum(dur, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def poly_model_durations(mnk, mu_coef, sg_coef, z, *, block_b=BLOCK_B):
+    """Batched stochastic polynomial durations.
+
+    Args:
+      mnk:     f32[B, 4]     — (M, N, K, pad) per sample.
+      mu_coef: f32[B, FEATS] — per-sample mean-model coefficients.
+      sg_coef: f32[B, FEATS] — per-sample sigma-model coefficients.
+      z:       f32[B]        — standard-normal draws.
+      block_b: batch tile size (must divide B).
+
+    Returns:
+      f32[B] durations (seconds), non-negative.
+    """
+    b = mnk.shape[0]
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _poly_model_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, 4), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, FEATS), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, FEATS), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(mnk, mu_coef, sg_coef, z)

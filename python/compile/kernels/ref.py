@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness references).
+
+Everything here is straight-line jnp with no Pallas: pytest compares the
+kernels against these, and the Rust integration tests compare the loaded
+PJRT artifacts against values exported from these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .poly_model import FEATS
+
+
+def ref_features(mnk):
+    """[B, 4] (M, N, K, pad) -> [B, FEATS] feature expansion."""
+    m, n, k = mnk[:, 0], mnk[:, 1], mnk[:, 2]
+    one = jnp.ones_like(m)
+    zero = jnp.zeros_like(m)
+    return jnp.stack(
+        [m * n * k, m * n, m * k, n * k, one, zero, zero, zero], axis=-1
+    )
+
+
+def ref_durations(mnk, mu_coef, sg_coef, z):
+    """Oracle for poly_model.poly_model_durations."""
+    feats = ref_features(mnk)
+    mu = jnp.sum(feats * mu_coef, axis=-1)
+    sigma = jnp.maximum(jnp.sum(feats * sg_coef, axis=-1), 0.0)
+    return jnp.maximum(mu + jnp.abs(z) * sigma, 0.0)
+
+
+def ref_gram(feats, y):
+    """Oracle for gram.gram: einsum normal-equation blocks."""
+    g = jnp.einsum("psf,psg->pfg", feats, feats)
+    v = jnp.einsum("psf,ps->pf", feats, y)
+    return g, v
+
+
+def ref_ols(feats, y, ridge=1e-6):
+    """Reference batched OLS fit via jnp.linalg.solve (test-only)."""
+    g, v = ref_gram(feats, y)
+    eye = jnp.eye(FEATS, dtype=feats.dtype)
+    return jnp.linalg.solve(g + ridge * eye, v[..., None])[..., 0]

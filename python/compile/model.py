@@ -1,0 +1,178 @@
+"""Layer-2 JAX model: the paper's statistical performance models, batched.
+
+Two entry points, both lowered AOT to HLO text by `aot.py` and executed
+from the Rust coordinator via PJRT (never imported at runtime):
+
+* `dgemm_model` — Eq. (1)/(2): given a batch of (M, N, K) triples, per-node
+  coefficient tables and standard-normal draws, produce stochastic
+  durations.  The hot loop lives in the Pallas kernel
+  `kernels.poly_model`.
+
+* `calibrate` — step (1) of the paper's Fig. 2 workflow: per-node OLS fit
+  of the 5-term polynomial mean model *and* of the half-normal sigma model
+  from benchmark observations.  The Gram accumulation lives in the Pallas
+  kernel `kernels.gram`; the 8x8 normal-equation solve is an unrolled
+  Cholesky (plain HLO arithmetic — no LAPACK custom-calls, which the
+  xla_extension 0.5.1 runtime used by the Rust side may not provide).
+
+Fitting maths.  Observations follow  y = <f, c_mu> + |z| * <f, c_sg>  with
+z ~ N(0,1), so  E[y|f] = <f, c_mu + sqrt(2/pi) * c_sg>.  A first fit on y
+estimates  c_tot = c_mu + sqrt(2/pi) * c_sg.  Kernel durations are
+heteroscedastic (noise scales with size) and the simulator needs good
+*relative* accuracy across four decades of shapes, so this fit is a
+relative WLS (weights 1/y_i^2), solved on per-column scaled features for
+f32 conditioning.  The sigma model is proportional -- sigma = c * mu per
+node, matching the paper's observation that temporal variability is a
+roughly constant coefficient of variation (~3%, its section 5.2): with
+residual  r = y - <f, c_tot>  and  E[|r| | f] = C_ABS * sigma(f),
+c = sum(|r| * pred) / (C_ABS * sum(pred^2))  recovers the CV robustly;
+then  c_sg = c * c_tot / (1 + c * sqrt(2/pi))  and
+c_mu = c_tot - sqrt(2/pi) * c_sg.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import FEATS, gram, poly_model_durations
+
+SQRT_2_OVER_PI = 0.7978845608028654
+# E| |z| - sqrt(2/pi) | for z ~ N(0,1); see test_model.py for the
+# Monte-Carlo cross-check of this closed-form value.
+C_ABS = 0.48262419868598405
+# Ridge added to the (standardized) normal equations; also what zeroes the
+# padded/degenerate feature lanes.
+RIDGE = 1e-5
+
+
+def dgemm_model(mnk, idx, mu_tab, sg_tab, z):
+    """Stochastic durations for a batch of kernel invocations.
+
+    Args:
+      mnk:    f32[B, 4]        — (M, N, K, pad) per invocation.
+      idx:    i32[B]           — node index per invocation.
+      mu_tab: f32[NODES, FEATS] — per-node mean-model coefficients.
+      sg_tab: f32[NODES, FEATS] — per-node sigma-model coefficients.
+      z:      f32[B]           — standard-normal draws.
+
+    Returns:
+      f32[B] durations in seconds.
+    """
+    mu = jnp.take(mu_tab, idx, axis=0)
+    sg = jnp.take(sg_tab, idx, axis=0)
+    # One grid step per AOT batch: under interpret=True every grid step
+    # costs O(B) in buffer traffic (the Mosaic path would re-tile to
+    # BLOCK_B x 8 VMEM blocks instead) — measured 45 M samples/s vs
+    # 0.9 M samples/s for 64 steps. See EXPERIMENTS.md §Perf.
+    return poly_model_durations(mnk, mu, sg, z, block_b=mnk.shape[0])
+
+
+def _features(mnk):
+    """[..., 4] -> [..., FEATS] polynomial feature expansion."""
+    m, n, k = mnk[..., 0], mnk[..., 1], mnk[..., 2]
+    one = jnp.ones_like(m)
+    zero = jnp.zeros_like(m)
+    return jnp.stack(
+        [m * n * k, m * n, m * k, n * k, one, zero, zero, zero], axis=-1
+    )
+
+
+def solve_spd(a, b):
+    """Unrolled Cholesky solve of an SPD FEATS x FEATS system.
+
+    Pure jnp arithmetic (lowers to plain HLO).  Batched over leading dims.
+    a: f32[..., FEATS, FEATS], b: f32[..., FEATS] -> f32[..., FEATS].
+    """
+    n = FEATS
+    # Cholesky: a = L L^T, unrolled at trace time.
+    l = [[None] * n for _ in range(n)]
+    for i in range(n):
+        for j in range(i + 1):
+            s = a[..., i, j]
+            for k in range(j):
+                s = s - l[i][k] * l[j][k]
+            if i == j:
+                l[i][j] = jnp.sqrt(jnp.maximum(s, 1e-30))
+            else:
+                l[i][j] = s / l[j][j]
+    # Forward substitution L w = b.
+    w = [None] * n
+    for i in range(n):
+        s = b[..., i]
+        for k in range(i):
+            s = s - l[i][k] * w[k]
+        w[i] = s / l[i][i]
+    # Back substitution L^T x = w.
+    x = [None] * n
+    for i in reversed(range(n)):
+        s = w[i]
+        for k in range(i + 1, n):
+            s = s - l[k][i] * x[k]
+        x[i] = s / l[i][i]
+    return jnp.stack(x, axis=-1)
+
+
+def _relative_wls(feats, y):
+    """Batched relative WLS: minimize sum_i (1 - <f_i, c> / y_i)^2.
+
+    Equivalent to OLS of 1 on f_i / y_i: exact relative weighting, no
+    intercept ambiguity (the constant feature lane carries it).
+
+    feats: f32[P, S, FEATS], y: f32[P, S] (strictly positive) ->
+    coefficients f32[P, FEATS] in the original feature space.
+    """
+    s = feats.shape[1]
+    yw = jnp.maximum(y, 1e-12)[..., None]
+    fw = feats / yw  # [P, S, F]
+    # Per-column RMS scaling (no centering) for f32 conditioning.
+    scale = jnp.sqrt(jnp.mean(fw * fw, axis=1, keepdims=True))
+    scale = jnp.where(scale < 1e-12, 1.0, scale)
+    fs = fw / scale
+    ones = jnp.ones(y.shape, dtype=feats.dtype)
+    g, v = gram(fs, ones)
+    g = g + RIDGE * s * jnp.eye(FEATS, dtype=feats.dtype)
+    w = solve_spd(g, v)  # [P, F] in scaled space
+    return w / scale[:, 0, :]
+
+
+def calibrate(mnk, y):
+    """Per-node fit of the stochastic polynomial model.
+
+    Args:
+      mnk: f32[P, S, 4] -- benchmark design points per node.
+      y:   f32[P, S]    -- observed durations.
+
+    Returns:
+      (mu_coef, sg_coef): f32[P, FEATS] each, such that durations are
+      modeled as  <f, mu_coef> + |z| * <f, sg_coef>.
+    """
+    feats = _features(mnk)
+    c_tot = _relative_wls(feats, y)  # mu + sqrt(2/pi) sigma
+    pred = jnp.einsum("psf,pf->ps", feats, c_tot)
+    resid = y - pred
+    # Proportional sigma: project |resid| onto the prediction.
+    num = jnp.sum(jnp.abs(resid) * pred, axis=1)
+    den = jnp.maximum(C_ABS * jnp.sum(pred * pred, axis=1), 1e-30)
+    c = jnp.maximum(num / den, 0.0)  # per-node CV estimate
+    sg_scale = c / (1.0 + SQRT_2_OVER_PI * c)
+    c_sg = sg_scale[:, None] * c_tot
+    c_mu = c_tot - SQRT_2_OVER_PI * c_sg
+    return c_mu, c_sg
+
+
+# ----------------------------------------------------------------------
+# Jitted, fixed-shape entry points used by aot.py.
+# ----------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=())
+def dgemm_model_entry(mnk, idx, mu_tab, sg_tab, z):
+    return (dgemm_model(mnk, idx, mu_tab, sg_tab, z),)
+
+
+@functools.partial(jax.jit, static_argnums=())
+def calibrate_entry(mnk, y):
+    return calibrate(mnk, y)

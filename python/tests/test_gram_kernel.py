@@ -1,0 +1,59 @@
+"""L1 correctness: Pallas gram kernel vs the pure-jnp einsum oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram
+from compile.kernels import ref
+from compile.kernels.poly_model import FEATS
+
+
+def _feats(rng, p, s):
+    mnk = np.zeros((p * s, 4), np.float32)
+    mnk[:, 0] = rng.integers(1, 4096, p * s)
+    mnk[:, 1] = rng.integers(1, 4096, p * s)
+    mnk[:, 2] = rng.integers(1, 512, p * s)
+    f = np.asarray(ref.ref_features(jnp.array(mnk))).reshape(p, s, FEATS)
+    # Scale down so f32 Gram sums stay well conditioned in the comparison.
+    return (f / np.maximum(np.abs(f).max(axis=(0, 1)), 1.0)).astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.integers(1, 8),
+    s_blocks=st.integers(1, 4),
+    block_s=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(p, s_blocks, block_s, seed):
+    rng = np.random.default_rng(seed)
+    f = _feats(rng, p, s_blocks * block_s)
+    y = rng.standard_normal((p, s_blocks * block_s)).astype(np.float32)
+    g, v = gram(jnp.array(f), jnp.array(y), block_s=block_s)
+    g_ref, v_ref = ref.ref_gram(jnp.array(f), jnp.array(y))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=2e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref), rtol=2e-4, atol=1e-4)
+
+
+def test_gram_symmetry_and_psd():
+    rng = np.random.default_rng(11)
+    f = _feats(rng, 4, 256)
+    y = rng.standard_normal((4, 256)).astype(np.float32)
+    g, _ = gram(jnp.array(f), jnp.array(y), block_s=64)
+    g = np.asarray(g, np.float64)
+    np.testing.assert_allclose(g, np.swapaxes(g, 1, 2), rtol=1e-6, atol=1e-8)
+    for p in range(4):
+        eig = np.linalg.eigvalsh(g[p])
+        assert eig.min() > -1e-4 * max(1.0, eig.max())
+
+
+def test_gram_multi_block_accumulation_matches_single_block():
+    """Grid accumulation over sample blocks == one big block."""
+    rng = np.random.default_rng(12)
+    f = _feats(rng, 2, 256)
+    y = rng.standard_normal((2, 256)).astype(np.float32)
+    g1, v1 = gram(jnp.array(f), jnp.array(y), block_s=256)
+    g2, v2 = gram(jnp.array(f), jnp.array(y), block_s=32)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5, atol=1e-6)

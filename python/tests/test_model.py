@@ -1,0 +1,111 @@
+"""L2 correctness: dgemm_model gather path, solve_spd, calibration fit."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.poly_model import FEATS
+
+
+def test_c_abs_constant_monte_carlo():
+    """C_ABS = E||z| - sqrt(2/pi)| — cross-check the closed form."""
+    z = np.random.default_rng(0).standard_normal(4_000_000)
+    mc = np.abs(np.abs(z) - np.sqrt(2 / np.pi)).mean()
+    assert abs(mc - model.C_ABS) < 5e-4
+
+
+def test_dgemm_model_gathers_per_node_coefficients():
+    rng = np.random.default_rng(5)
+    nodes, b = 16, 512
+    mnk = np.zeros((b, 4), np.float32)
+    mnk[:, 0] = rng.integers(16, 2048, b)
+    mnk[:, 1] = rng.integers(16, 2048, b)
+    mnk[:, 2] = rng.integers(16, 256, b)
+    idx = rng.integers(0, nodes, b).astype(np.int32)
+    mu_tab = np.abs(rng.normal(0, 1e-11, (nodes, FEATS))).astype(np.float32)
+    sg_tab = (mu_tab * 0.05).astype(np.float32)
+    z = rng.standard_normal(b).astype(np.float32)
+    got = np.asarray(
+        model.dgemm_model(
+            jnp.array(mnk), jnp.array(idx), jnp.array(mu_tab),
+            jnp.array(sg_tab), jnp.array(z),
+        )
+    )
+    want = np.asarray(
+        ref.ref_durations(
+            jnp.array(mnk), jnp.array(mu_tab[idx]), jnp.array(sg_tab[idx]),
+            jnp.array(z),
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_solve_spd_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((3, FEATS, FEATS)).astype(np.float32)
+    a = a @ np.swapaxes(a, 1, 2) + 0.5 * np.eye(FEATS, dtype=np.float32)
+    b = rng.standard_normal((3, FEATS)).astype(np.float32)
+    got = np.asarray(model.solve_spd(jnp.array(a), jnp.array(b)))
+    want = np.linalg.solve(
+        a.astype(np.float64), b.astype(np.float64)[..., None]
+    )[..., 0]
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-4)
+
+
+def _planted_fit(noise, s=512, p=4, seed=42):
+    rng = np.random.default_rng(seed)
+    mnk = np.zeros((p, s, 4), np.float32)
+    mnk[..., 0] = rng.integers(64, 4096, (p, s))
+    mnk[..., 1] = rng.integers(64, 4096, (p, s))
+    mnk[..., 2] = rng.integers(64, 512, (p, s))
+    true_mu = np.zeros((p, FEATS), np.float32)
+    true_mu[:, 0] = rng.uniform(0.9e-11, 1.3e-11, p)
+    true_mu[:, 3] = rng.uniform(0, 5e-10, p)
+    true_mu[:, 4] = rng.uniform(1e-5, 1e-4, p)
+    true_sg = (true_mu * noise).astype(np.float32)
+    feats = np.asarray(ref.ref_features(jnp.array(mnk.reshape(-1, 4))))
+    feats = feats.reshape(p, s, FEATS).astype(np.float64)
+    zz = np.abs(rng.standard_normal((p, s)))
+    y = (feats @ true_mu[:, :, None].astype(np.float64))[..., 0]
+    y = y + zz * (feats @ true_sg[:, :, None].astype(np.float64))[..., 0]
+    c_mu, c_sg = model.calibrate_entry(
+        jnp.array(mnk), jnp.array(y.astype(np.float32))
+    )
+    return feats, true_mu, true_sg, np.asarray(c_mu), np.asarray(c_sg)
+
+
+def test_calibrate_noiseless_recovers_mean_predictions():
+    feats, true_mu, _, c_mu, c_sg = _planted_fit(noise=0.0)
+    pred = np.einsum("psf,pf->ps", feats, c_mu.astype(np.float64))
+    want = np.einsum("psf,pf->ps", feats, true_mu.astype(np.float64))
+    # Small ridge bias is visible only at tiny (sub-0.1 ms) durations.
+    np.testing.assert_allclose(pred, want, rtol=2e-2, atol=1e-5)
+    # Sigma model must be (nearly) zero when there is no noise.
+    sig = np.einsum("psf,pf->ps", feats, c_sg.astype(np.float64))
+    assert np.abs(sig).max() < 0.05 * want.max()
+
+
+def test_calibrate_recovers_dominant_coefficient_and_noise_scale():
+    feats, true_mu, true_sg, c_mu, c_sg = _planted_fit(noise=0.05)
+    # Dominant MNK coefficient of the mean model: within a few percent.
+    rel = np.abs(c_mu[:, 0] - true_mu[:, 0]) / true_mu[:, 0]
+    assert rel.max() < 0.05, rel
+    # Sigma predictions at large design points: right order of magnitude.
+    big = feats[..., 0] > np.quantile(feats[..., 0], 0.9)
+    sig_pred = np.einsum("psf,pf->ps", feats, c_sg.astype(np.float64))[big]
+    sig_true = np.einsum("psf,pf->ps", feats, true_sg.astype(np.float64))[big]
+    ratio = sig_pred / sig_true
+    assert 0.5 < np.median(ratio) < 1.5, np.median(ratio)
+
+
+def test_calibrate_mean_predictions_unbiased_under_noise():
+    feats, true_mu, true_sg, c_mu, _ = _planted_fit(noise=0.05)
+    pred = np.einsum("psf,pf->ps", feats, c_mu.astype(np.float64))
+    want = np.einsum("psf,pf->ps", feats, true_mu.astype(np.float64))
+    big = want > np.quantile(want, 0.5)
+    rel = np.abs(pred[big] - want[big]) / want[big]
+    assert np.median(rel) < 0.05, np.median(rel)

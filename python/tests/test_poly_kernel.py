@@ -1,0 +1,101 @@
+"""L1 correctness: Pallas poly_model kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import poly_model_durations
+from compile.kernels.poly_model import BLOCK_B
+from compile.kernels import ref
+
+
+def _inputs(rng, b, sigma_scale=0.03):
+    mnk = np.zeros((b, 4), np.float32)
+    mnk[:, 0] = rng.integers(1, 8192, b)
+    mnk[:, 1] = rng.integers(1, 8192, b)
+    mnk[:, 2] = rng.integers(1, 1024, b)
+    mu = np.abs(rng.normal(0, 1e-11, (b, 8))).astype(np.float32)
+    mu[:, 5:] = 0
+    sg = (mu * sigma_scale).astype(np.float32)
+    z = rng.standard_normal(b).astype(np.float32)
+    return mnk, mu, sg, z
+
+
+def _run_both(mnk, mu, sg, z, block_b):
+    got = poly_model_durations(
+        jnp.array(mnk), jnp.array(mu), jnp.array(sg), jnp.array(z),
+        block_b=block_b,
+    )
+    want = ref.ref_durations(
+        jnp.array(mnk), jnp.array(mu), jnp.array(sg), jnp.array(z)
+    )
+    return np.asarray(got), np.asarray(want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 6),
+    block_b=st.sampled_from([8, 32, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    sigma_scale=st.floats(0.0, 0.5),
+)
+def test_kernel_matches_ref(blocks, block_b, seed, sigma_scale):
+    rng = np.random.default_rng(seed)
+    mnk, mu, sg, z = _inputs(rng, blocks * block_b, sigma_scale)
+    got, want = _run_both(mnk, mu, sg, z, block_b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-12)
+
+
+def test_default_block_size():
+    rng = np.random.default_rng(7)
+    mnk, mu, sg, z = _inputs(rng, 4 * BLOCK_B)
+    got, want = _run_both(mnk, mu, sg, z, BLOCK_B)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-12)
+
+
+def test_zero_sigma_is_deterministic_polynomial():
+    """sigma = 0 -> pure polynomial, independent of z."""
+    rng = np.random.default_rng(1)
+    mnk, mu, _, z = _inputs(rng, 256)
+    sg = np.zeros_like(mu)
+    got1, _ = _run_both(mnk, mu, sg, z, 256)
+    got2, _ = _run_both(mnk, mu, sg, -z, 256)
+    np.testing.assert_array_equal(got1, got2)
+    feats = np.asarray(ref.ref_features(jnp.array(mnk)))
+    np.testing.assert_allclose(got1, (feats * mu).sum(-1), rtol=1e-6)
+
+
+def test_negative_sigma_clamped():
+    """A (non-physical) negative sigma row behaves like sigma = 0."""
+    rng = np.random.default_rng(2)
+    mnk, mu, sg, z = _inputs(rng, 128)
+    got_neg, _ = _run_both(mnk, mu, -sg, z, 128)
+    got_zero, _ = _run_both(mnk, mu, np.zeros_like(sg), z, 128)
+    np.testing.assert_array_equal(got_neg, got_zero)
+
+
+def test_durations_nonnegative_even_with_negative_mu():
+    rng = np.random.default_rng(3)
+    mnk, mu, sg, z = _inputs(rng, 128)
+    got, _ = _run_both(mnk, -mu, sg, z, 128)
+    assert (got >= 0).all()
+
+
+def test_z_sign_irrelevant():
+    """Half-normal: |z| is used, so the sign of z must not matter."""
+    rng = np.random.default_rng(4)
+    mnk, mu, sg, z = _inputs(rng, 128)
+    got_pos, _ = _run_both(mnk, mu, sg, np.abs(z), 128)
+    got_neg, _ = _run_both(mnk, mu, sg, -np.abs(z), 128)
+    np.testing.assert_array_equal(got_pos, got_neg)
+
+
+def test_batch_must_divide_block():
+    rng = np.random.default_rng(5)
+    mnk, mu, sg, z = _inputs(rng, 100)
+    with pytest.raises(AssertionError):
+        poly_model_durations(
+            jnp.array(mnk), jnp.array(mu), jnp.array(sg), jnp.array(z),
+            block_b=64,
+        )

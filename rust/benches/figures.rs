@@ -1,0 +1,152 @@
+//! `cargo bench` — regenerate every table and figure of the paper at
+//! bench scale (same structure as the paper's experiments, shrunk sizes;
+//! `hplsim exp <id> --full` runs paper-like sizes).
+//!
+//! The offline crate set has no criterion, so this is a plain
+//! `harness = false` binary that times each experiment and prints its
+//! result tables. A micro-benchmark section at the end reports engine
+//! throughput (events/s), the flow-level sharing solver, and the XLA
+//! artifact call rate — the §Perf numbers tracked in EXPERIMENTS.md.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use hplsim::blas::{DgemmModel, DirectSource, NodeCoef};
+use hplsim::coordinator::experiments::{self, ExpCtx, Scale};
+use hplsim::engine::Sim;
+use hplsim::hpl::{run_once, HplConfig};
+use hplsim::network::{sharing, NetModel, Topology};
+use hplsim::platform::Scenario;
+use hplsim::runtime::Artifacts;
+use hplsim::stats::Rng;
+
+fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("\n[bench] {name}: {:.2} s", t0.elapsed().as_secs_f64());
+    out
+}
+
+fn main() {
+    let arts = match Artifacts::load_default() {
+        Ok(a) => {
+            eprintln!("artifacts: loaded ({})", a.platform());
+            Some(Rc::new(a))
+        }
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e:#}); pure-Rust model path");
+            None
+        }
+    };
+    let mut ctx = ExpCtx::new(arts, Scale::Bench, 42);
+    ctx.out_dir = "results".into();
+    let micro_only = std::env::var("HPLSIM_BENCH_MICRO").is_ok();
+
+    // ---- every paper table & figure at bench scale ----
+    if !micro_only {
+    timed("table1", || experiments::table1(&ctx));
+    timed("fig4", || experiments::fig4(&ctx));
+    timed("fig5", || experiments::fig5(&ctx));
+    timed("fig6", || experiments::fig6(&ctx));
+    timed("fig7", || experiments::fig7(&ctx));
+    timed("fig8", || experiments::fig8(&ctx));
+    timed("table2", || experiments::table2(&ctx));
+    timed("fig10", || experiments::fig10_11(&ctx, Scenario::Normal));
+    timed("fig11", || experiments::fig10_11(&ctx, Scenario::Multimodal));
+    timed("fig12", || experiments::fig12(&ctx));
+    timed("fig13_14", || experiments::fig13_15(&ctx, Scenario::Normal));
+    timed("fig15", || experiments::fig13_15(&ctx, Scenario::Multimodal));
+    timed("fig16", || experiments::fig16(&ctx));
+    }
+
+    // ---- §Perf micro-benchmarks ----
+    println!("\n== §Perf micro-benchmarks ==");
+
+    // Engine: event throughput on a pure timer storm.
+    {
+        let sim = Sim::new();
+        for i in 0..200usize {
+            let s = sim.clone();
+            sim.spawn(async move {
+                for k in 0..2000u64 {
+                    s.sleep(1e-6 * ((i as u64 * 7 + k) % 13 + 1) as f64).await;
+                }
+            });
+        }
+        let t0 = Instant::now();
+        let (_, stats) = sim.run_with_stats();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "engine: {} events in {:.3} s = {:.2} M events/s",
+            stats.events,
+            dt,
+            stats.events as f64 / dt / 1e6
+        );
+    }
+
+    // Max-min sharing solver.
+    {
+        let mut rng = Rng::new(1);
+        let caps: Vec<f64> = (0..256).map(|_| rng.uniform_in(1e9, 2e9)).collect();
+        let routes_owned: Vec<Vec<u32>> = (0..512)
+            .map(|_| {
+                (0..4).map(|_| rng.below(256) as u32).collect()
+            })
+            .collect();
+        let routes: Vec<&[u32]> = routes_owned.iter().map(|r| r.as_slice()).collect();
+        let t0 = Instant::now();
+        let iters = 200;
+        for _ in 0..iters {
+            let r = sharing::max_min_rates(&caps, &routes);
+            std::hint::black_box(r);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "max-min: 512 flows x 256 links: {:.1} µs/solve",
+            dt / iters as f64 * 1e6
+        );
+    }
+
+    // End-to-end HPL simulation throughput.
+    {
+        let cfg = HplConfig::dahu_default(8192, 4, 8);
+        let topo = Topology::star(8, 12.5e9, 40e9);
+        let model = DgemmModel::homogeneous(NodeCoef::naive(5.6e-11));
+        let src = DirectSource::new(model, cfg.nranks(), 3);
+        let t0 = Instant::now();
+        let r = run_once(&cfg, topo, NetModel::ideal(), src, 4);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "hpl sim: N=8192 32 ranks: {} events, {} msgs in {:.3} s = {:.2} M events/s",
+            r.events,
+            r.comm.messages,
+            dt,
+            r.events as f64 / dt / 1e6
+        );
+    }
+
+    // XLA artifact throughput (when available).
+    if let Some(a) = &ctx.arts {
+        let b = 65536usize;
+        let mnk: Vec<[f32; 3]> = (0..b)
+            .map(|i| [(i % 4096 + 64) as f32, 64.0, 64.0])
+            .collect();
+        let idx = vec![0i32; b];
+        let mu = vec![[1e-11f32, 0.0, 0.0, 0.0, 1e-6, 0.0, 0.0, 0.0]];
+        let sg = vec![[3e-13f32, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]];
+        let mut z = vec![0f32; b];
+        Rng::new(1).fill_normal(&mut z);
+        let t0 = Instant::now();
+        let reps = 5;
+        for _ in 0..reps {
+            let d = a.dgemm_durations(&mnk, &idx, &mu, &sg, &z).unwrap();
+            std::hint::black_box(d);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "xla dgemm_model: {:.1} M samples/s ({} per call)",
+            reps as f64 * b as f64 / dt / 1e6,
+            b
+        );
+    }
+}

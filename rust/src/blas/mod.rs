@@ -1,0 +1,61 @@
+//! Statistical compute-kernel models (the paper's Eq. 1/2) and the
+//! duration sources that feed them into the simulation.
+//!
+//! The dgemm model is the performance-critical one: per node `p`,
+//!
+//! ```text
+//! dgemm_p(M, N, K) ~ H(mu_p, sigma_p)
+//! mu_p    = a_p MNK + b_p MN + c_p MK + d_p NK + e_p
+//! sigma_p = w_p MNK + x_p MN + y_p MK + z_p NK + r_p
+//! ```
+//!
+//! with `H` half-normal. In production runs, durations are evaluated in
+//! large batches through the AOT-compiled XLA artifact (see
+//! [`provider::PoolSource`] and `runtime`); a pure-Rust path exists for
+//! tests and cross-checks.
+//!
+//! The remaining kernels (dtrsm, dger, dlatcpy, daxpy, idamax) follow
+//! the paper's simple deterministic linear models.
+
+pub mod model;
+pub mod provider;
+
+pub use model::{DgemmModel, LinearModel, NodeCoef, N_COEF};
+pub use provider::{DgemmSource, DirectSource, PoolSource, Recorder, ReplayError};
+
+use std::rc::Rc;
+
+/// The full kernel-model set used by one simulation.
+#[derive(Clone)]
+pub struct KernelModels {
+    /// dgemm duration source (stochastic polynomial, possibly pooled).
+    pub dgemm: Rc<dyn DgemmSource>,
+    /// dtrsm(jb, n): triangular solve of a jb x jb block against n columns;
+    /// linear in `jb*jb*n`.
+    pub dtrsm: LinearModel,
+    /// dger / rank-1 update, linear in `m*n`.
+    pub dger: LinearModel,
+    /// dlatcpy (panel copy), linear in `m*n`.
+    pub dlatcpy: LinearModel,
+    /// daxpy, linear in `n`.
+    pub daxpy: LinearModel,
+    /// idamax, linear in `n`.
+    pub idamax: LinearModel,
+}
+
+impl KernelModels {
+    /// Deterministic defaults matching a ~2017 Xeon (used by tests and
+    /// as the non-dgemm part of every platform: the paper models these
+    /// kernels homogeneously and deterministically).
+    pub fn default_aux(dgemm: Rc<dyn DgemmSource>) -> KernelModels {
+        KernelModels {
+            dgemm,
+            // ~25 GF/s effective on the small triangular solves.
+            dtrsm: LinearModel { slope: 8.0e-11, intercept: 2.0e-7 },
+            dger: LinearModel { slope: 2.5e-10, intercept: 2.0e-7 },
+            dlatcpy: LinearModel { slope: 1.0e-10, intercept: 1.5e-7 },
+            daxpy: LinearModel { slope: 2.0e-10, intercept: 1.0e-7 },
+            idamax: LinearModel { slope: 1.5e-10, intercept: 1.0e-7 },
+        }
+    }
+}

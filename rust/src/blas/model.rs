@@ -1,0 +1,202 @@
+//! Coefficient containers for the polynomial dgemm model and the linear
+//! auxiliary-kernel models.
+
+/// Number of polynomial coefficients: `[MNK, MN, MK, NK, 1]`.
+pub const N_COEF: usize = 5;
+
+/// Per-node coefficients: mean polynomial + sigma polynomial.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeCoef {
+    pub mu: [f64; N_COEF],
+    pub sigma: [f64; N_COEF],
+}
+
+impl NodeCoef {
+    /// A deterministic model with only the MNK term (the "naive" model
+    /// of Fig. 3: `1/flops-rate * M*N*K`).
+    pub fn naive(inv_rate: f64) -> NodeCoef {
+        NodeCoef { mu: [inv_rate, 0.0, 0.0, 0.0, 0.0], sigma: [0.0; N_COEF] }
+    }
+
+    /// Evaluate the mean polynomial.
+    pub fn mu_of(&self, m: f64, n: f64, k: f64) -> f64 {
+        poly(&self.mu, m, n, k)
+    }
+
+    /// Evaluate the sigma polynomial (clamped at 0).
+    pub fn sigma_of(&self, m: f64, n: f64, k: f64) -> f64 {
+        poly(&self.sigma, m, n, k).max(0.0)
+    }
+
+    /// Zero out the variability (used to build deterministic variants of
+    /// a calibrated model — dashed line (b) of Fig. 5).
+    pub fn deterministic(mut self) -> NodeCoef {
+        self.sigma = [0.0; N_COEF];
+        self
+    }
+
+    /// Convert to the f32 feature-lane layout of the XLA artifacts
+    /// (5 real coefficients padded to 8 lanes).
+    pub fn to_f32_lanes(&self) -> ([f32; 8], [f32; 8]) {
+        let mut mu = [0f32; 8];
+        let mut sg = [0f32; 8];
+        for i in 0..N_COEF {
+            mu[i] = self.mu[i] as f32;
+            sg[i] = self.sigma[i] as f32;
+        }
+        (mu, sg)
+    }
+}
+
+fn poly(c: &[f64; N_COEF], m: f64, n: f64, k: f64) -> f64 {
+    c[0] * m * n * k + c[1] * m * n + c[2] * m * k + c[3] * n * k + c[4]
+}
+
+/// The dgemm model for a whole platform: one [`NodeCoef`] per node (a
+/// single entry means a homogeneous model).
+#[derive(Clone, Debug)]
+pub struct DgemmModel {
+    pub nodes: Vec<NodeCoef>,
+}
+
+impl DgemmModel {
+    pub fn homogeneous(c: NodeCoef) -> DgemmModel {
+        DgemmModel { nodes: vec![c] }
+    }
+
+    pub fn coef(&self, node: usize) -> &NodeCoef {
+        if self.nodes.len() == 1 {
+            &self.nodes[0]
+        } else {
+            &self.nodes[node]
+        }
+    }
+
+    /// Mean duration on `node`.
+    pub fn mu(&self, node: usize, m: usize, n: usize, k: usize) -> f64 {
+        self.coef(node).mu_of(m as f64, n as f64, k as f64).max(0.0)
+    }
+
+    /// Sample a stochastic duration on `node` (pure-Rust path).
+    pub fn sample(
+        &self,
+        node: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        rng: &mut crate::stats::Rng,
+    ) -> f64 {
+        let c = self.coef(node);
+        let (mf, nf, kf) = (m as f64, n as f64, k as f64);
+        rng.half_normal(c.mu_of(mf, nf, kf), c.sigma_of(mf, nf, kf)).max(0.0)
+    }
+
+    /// Strip all variability.
+    pub fn deterministic(&self) -> DgemmModel {
+        DgemmModel { nodes: self.nodes.iter().map(|c| c.deterministic()).collect() }
+    }
+
+    /// Collapse to a single global model (average of node coefficients)
+    /// — the "homogeneous" degradation used by Fig. 5's naive model.
+    pub fn homogenized(&self) -> DgemmModel {
+        let n = self.nodes.len() as f64;
+        let mut mu = [0.0; N_COEF];
+        let mut sigma = [0.0; N_COEF];
+        for c in &self.nodes {
+            for i in 0..N_COEF {
+                mu[i] += c.mu[i] / n;
+                sigma[i] += c.sigma[i] / n;
+            }
+        }
+        DgemmModel::homogeneous(NodeCoef { mu, sigma })
+    }
+}
+
+/// `duration = slope * size + intercept` (deterministic).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinearModel {
+    pub slope: f64,
+    pub intercept: f64,
+}
+
+impl LinearModel {
+    pub fn of(&self, size: f64) -> f64 {
+        (self.slope * size + self.intercept).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::Rng;
+
+    #[test]
+    fn poly_evaluation() {
+        let c = NodeCoef {
+            mu: [1e-11, 1e-9, 0.0, 0.0, 1e-5],
+            sigma: [0.0; N_COEF],
+        };
+        let got = c.mu_of(100.0, 200.0, 50.0);
+        let want = 1e-11 * (100.0 * 200.0 * 50.0) + 1e-9 * (100.0 * 200.0) + 1e-5;
+        assert!((got - want).abs() < 1e-15, "{got} vs {want}");
+    }
+
+    #[test]
+    fn naive_model_is_pure_mnk() {
+        let c = NodeCoef::naive(1.029e-11);
+        assert_eq!(c.mu_of(10.0, 10.0, 10.0), 1.029e-11 * 1000.0);
+        assert_eq!(c.sigma_of(1e4, 1e4, 1e4), 0.0);
+    }
+
+    #[test]
+    fn sample_at_least_mu_and_varies() {
+        let model = DgemmModel::homogeneous(NodeCoef {
+            mu: [1e-11, 0.0, 0.0, 0.0, 0.0],
+            sigma: [3e-13, 0.0, 0.0, 0.0, 0.0],
+        });
+        let mut rng = Rng::new(1);
+        let mu = model.mu(0, 1000, 1000, 100);
+        let a = model.sample(0, 1000, 1000, 100, &mut rng);
+        let b = model.sample(0, 1000, 1000, 100, &mut rng);
+        assert!(a >= mu && b >= mu);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn homogenized_averages() {
+        let m = DgemmModel {
+            nodes: vec![
+                NodeCoef::naive(1.0e-11),
+                NodeCoef::naive(3.0e-11),
+            ],
+        };
+        let h = m.homogenized();
+        assert_eq!(h.nodes.len(), 1);
+        assert!((h.nodes[0].mu[0] - 2.0e-11).abs() < 1e-24);
+    }
+
+    #[test]
+    fn per_node_lookup() {
+        let m = DgemmModel {
+            nodes: vec![NodeCoef::naive(1.0e-11), NodeCoef::naive(2.0e-11)],
+        };
+        assert!(m.mu(1, 100, 100, 100) > m.mu(0, 100, 100, 100));
+    }
+
+    #[test]
+    fn f32_lane_conversion() {
+        let c = NodeCoef { mu: [1.0, 2.0, 3.0, 4.0, 5.0], sigma: [0.1; 5] };
+        let (mu, sg) = c.to_f32_lanes();
+        assert_eq!(mu[..5], [1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(mu[5..], [0.0, 0.0, 0.0]);
+        assert_eq!(sg[0], 0.1f32);
+    }
+
+    #[test]
+    fn linear_model_clamps() {
+        let l = LinearModel { slope: -1.0, intercept: 0.5 };
+        assert_eq!(l.of(10.0), 0.0);
+        let l2 = LinearModel { slope: 2e-10, intercept: 1e-7 };
+        assert!((l2.of(1e6) - 2.001e-4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,270 @@
+//! Duration sources for the dgemm model.
+//!
+//! HPL's control flow is data-independent: the exact sequence of dgemm
+//! shapes issued by each rank is a pure function of the configuration.
+//! Production simulations therefore run **two passes**:
+//!
+//! 1. a *recording* pass with [`Recorder`] (cheap mean-only durations)
+//!    that captures every `(m, n, k)` per rank in program order,
+//! 2. a batched evaluation of all durations through the XLA artifact
+//!    (`runtime::Artifacts::dgemm_durations`) producing per-rank pools,
+//! 3. a *replay* pass with [`PoolSource`] that pops pooled durations in
+//!    the same program order (shapes are asserted to match).
+//!
+//! [`DirectSource`] samples in pure Rust — used by unit tests and as a
+//! cross-check of the artifact path.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::model::DgemmModel;
+use crate::stats::Rng;
+
+/// Anything that can produce the duration of the next dgemm call of a
+/// given rank.
+///
+/// `epoch` identifies the HPL iteration issuing the call: the half-normal
+/// noise is drawn **once per (rank, epoch)** — temporal variability is
+/// episodic (OS noise, frequency excursions), so every kernel of an
+/// iteration is slowed by the same factor instead of averaging out over
+/// the per-NB update chunks. This is also what lets the noise propagate
+/// through the communication pattern (late sends), the paper's §3.4
+/// observation.
+pub trait DgemmSource {
+    /// Duration (seconds) of the next dgemm `(m, n, k)` issued by
+    /// `rank`, which runs on `node`, during iteration `epoch`.
+    fn next(&self, rank: usize, node: usize, epoch: usize, m: usize, n: usize, k: usize) -> f64;
+}
+
+/// The per-(rank, epoch) standard-normal draw shared by every kernel of
+/// that rank's iteration. Counter-based: reproducible and random-access.
+pub fn epoch_z(seed: u64, rank: usize, epoch: usize) -> f64 {
+    Rng::new(seed).derive(rank as u64).derive(epoch as u64).normal()
+}
+
+/// Pure-Rust sampling straight from the model.
+pub struct DirectSource {
+    model: DgemmModel,
+    seed: u64,
+    stochastic: bool,
+}
+
+impl DirectSource {
+    pub fn new(model: DgemmModel, _nranks: usize, seed: u64) -> Rc<Self> {
+        Rc::new(DirectSource { model, seed, stochastic: true })
+    }
+
+    /// Mean-only variant (deterministic).
+    pub fn deterministic(model: DgemmModel, _nranks: usize) -> Rc<Self> {
+        Rc::new(DirectSource { model, seed: 0, stochastic: false })
+    }
+}
+
+impl DgemmSource for DirectSource {
+    fn next(&self, rank: usize, node: usize, epoch: usize, m: usize, n: usize, k: usize) -> f64 {
+        if self.stochastic {
+            let z = epoch_z(self.seed, rank, epoch).abs();
+            let c = self.model.coef(node);
+            let (mf, nf, kf) = (m as f64, n as f64, k as f64);
+            (c.mu_of(mf, nf, kf) + z * c.sigma_of(mf, nf, kf)).max(0.0)
+        } else {
+            self.model.mu(node, m, n, k)
+        }
+    }
+}
+
+/// Recording pass: returns cheap mean durations and logs every shape.
+pub struct Recorder {
+    model: DgemmModel,
+    /// Per rank: `(node, epoch, m, n, k)` in program order.
+    pub calls: RefCell<Vec<Vec<(u32, u32, u32, u32, u32)>>>,
+}
+
+impl Recorder {
+    pub fn new(model: DgemmModel, nranks: usize) -> Rc<Self> {
+        Rc::new(Recorder {
+            model,
+            calls: RefCell::new(vec![Vec::new(); nranks]),
+        })
+    }
+
+    /// Total recorded calls.
+    pub fn total(&self) -> usize {
+        self.calls.borrow().iter().map(|v| v.len()).sum()
+    }
+
+    /// Flatten to the artifact's batched layout:
+    /// `(mnk, node_idx, per-call (rank, epoch))`.
+    pub fn flatten(&self) -> (Vec<[f32; 3]>, Vec<i32>, Vec<(u32, u32)>) {
+        let calls = self.calls.borrow();
+        let mut mnk = Vec::with_capacity(self.total());
+        let mut idx = Vec::with_capacity(self.total());
+        let mut rank_epoch = Vec::with_capacity(self.total());
+        for (rank, per_rank) in calls.iter().enumerate() {
+            for &(node, epoch, m, n, k) in per_rank {
+                mnk.push([m as f32, n as f32, k as f32]);
+                idx.push(node as i32);
+                rank_epoch.push((rank as u32, epoch));
+            }
+        }
+        (mnk, idx, rank_epoch)
+    }
+}
+
+impl DgemmSource for Recorder {
+    fn next(&self, rank: usize, node: usize, epoch: usize, m: usize, n: usize, k: usize) -> f64 {
+        self.calls.borrow_mut()[rank]
+            .push((node as u32, epoch as u32, m as u32, n as u32, k as u32));
+        self.model.mu(node, m, n, k)
+    }
+}
+
+/// Replay mismatch diagnostics.
+#[derive(Clone, Debug)]
+pub struct ReplayError {
+    pub rank: usize,
+    pub call_index: usize,
+}
+
+/// Replay pass: pops pre-evaluated durations per rank in program order.
+pub struct PoolSource {
+    /// Per rank: durations + the shapes they were evaluated for.
+    durations: RefCell<Vec<std::iter::Peekable<std::vec::IntoIter<f64>>>>,
+    shapes: Vec<Vec<(u32, u32, u32, u32, u32)>>,
+    cursor: RefCell<Vec<usize>>,
+    /// Check shapes on every pop (cheap; always on).
+    verify: bool,
+}
+
+impl PoolSource {
+    /// `durations` flattened in the same order as `Recorder::flatten`.
+    pub fn new(
+        recorder: &Recorder,
+        flat_durations: &[f32],
+    ) -> Rc<Self> {
+        let calls = recorder.calls.borrow();
+        let mut per_rank = Vec::with_capacity(calls.len());
+        let mut off = 0usize;
+        for rank_calls in calls.iter() {
+            let n = rank_calls.len();
+            let durs: Vec<f64> =
+                flat_durations[off..off + n].iter().map(|&d| d as f64).collect();
+            per_rank.push(durs.into_iter().peekable());
+            off += n;
+        }
+        assert_eq!(off, flat_durations.len(), "pool size mismatch");
+        Rc::new(PoolSource {
+            durations: RefCell::new(per_rank),
+            shapes: calls.clone(),
+            cursor: RefCell::new(vec![0; calls.len()]),
+            verify: true,
+        })
+    }
+}
+
+impl DgemmSource for PoolSource {
+    fn next(&self, rank: usize, node: usize, epoch: usize, m: usize, n: usize, k: usize) -> f64 {
+        if self.verify {
+            let mut cur = self.cursor.borrow_mut();
+            let i = cur[rank];
+            let expect = self.shapes[rank].get(i).copied().unwrap_or_else(|| {
+                panic!("rank {rank}: replay ran past recorded schedule at call {i}")
+            });
+            assert_eq!(
+                expect,
+                (node as u32, epoch as u32, m as u32, n as u32, k as u32),
+                "rank {rank} call {i}: replay shape diverged from recording"
+            );
+            cur[rank] = i + 1;
+        }
+        self.durations.borrow_mut()[rank]
+            .next()
+            .expect("duration pool exhausted")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::model::NodeCoef;
+
+    fn model() -> DgemmModel {
+        DgemmModel {
+            nodes: vec![
+                NodeCoef {
+                    mu: [1e-11, 0.0, 0.0, 0.0, 1e-6],
+                    sigma: [3e-13, 0.0, 0.0, 0.0, 0.0],
+                },
+                NodeCoef {
+                    mu: [2e-11, 0.0, 0.0, 0.0, 1e-6],
+                    sigma: [0.0; 5],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn direct_streams_are_independent_per_rank_and_epoch() {
+        let s = DirectSource::new(model(), 2, 42);
+        let a = s.next(0, 0, 0, 100, 100, 100);
+        let b = s.next(1, 0, 0, 100, 100, 100);
+        assert_ne!(a, b);
+        // Same (rank, epoch) -> same noise draw (episodic model).
+        assert_eq!(a, s.next(0, 0, 0, 100, 100, 100));
+        // Different epoch -> different draw.
+        assert_ne!(a, s.next(0, 0, 1, 100, 100, 100));
+        // Re-creating with the same seed replays identically.
+        let s2 = DirectSource::new(model(), 2, 42);
+        assert_eq!(s2.next(0, 0, 0, 100, 100, 100), a);
+    }
+
+    #[test]
+    fn epoch_noise_scales_whole_iteration() {
+        // With sigma proportional to mu, two calls of one epoch see the
+        // same slowdown factor: d1/mu1 == d2/mu2.
+        let m = model();
+        let s = DirectSource::new(m.clone(), 1, 7);
+        let d1 = s.next(0, 0, 3, 1000, 64, 64);
+        let d2 = s.next(0, 0, 3, 2000, 64, 64);
+        let r1 = d1 / m.mu(0, 1000, 64, 64);
+        let r2 = d2 / m.mu(0, 2000, 64, 64);
+        // mu has an intercept so ratios are close, not identical.
+        assert!((r1 - r2).abs() < 0.02, "{r1} vs {r2}");
+    }
+
+    #[test]
+    fn recorder_captures_program_order() {
+        let r = Recorder::new(model(), 2);
+        r.next(0, 0, 0, 10, 20, 30);
+        r.next(1, 1, 0, 5, 5, 5);
+        r.next(0, 0, 1, 11, 21, 31);
+        let (mnk, idx, rank_epoch) = r.flatten();
+        assert_eq!(mnk[0], [10.0, 20.0, 30.0]);
+        assert_eq!(mnk[1], [11.0, 21.0, 31.0]);
+        assert_eq!(mnk[2], [5.0, 5.0, 5.0]);
+        assert_eq!(idx, vec![0, 0, 1]);
+        assert_eq!(rank_epoch, vec![(0, 0), (0, 1), (1, 0)]);
+        assert_eq!(r.total(), 3);
+    }
+
+    #[test]
+    fn pool_replays_in_order_and_verifies_shapes() {
+        let r = Recorder::new(model(), 2);
+        r.next(0, 0, 0, 10, 20, 30);
+        r.next(0, 0, 1, 11, 21, 31);
+        r.next(1, 1, 0, 5, 5, 5);
+        let pool = PoolSource::new(&r, &[1.0, 2.0, 3.0]);
+        assert_eq!(pool.next(0, 0, 0, 10, 20, 30), 1.0);
+        assert_eq!(pool.next(1, 1, 0, 5, 5, 5), 3.0);
+        assert_eq!(pool.next(0, 0, 1, 11, 21, 31), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "diverged")]
+    fn pool_panics_on_shape_divergence() {
+        let r = Recorder::new(model(), 1);
+        r.next(0, 0, 0, 10, 20, 30);
+        let pool = PoolSource::new(&r, &[1.0]);
+        pool.next(0, 0, 0, 99, 20, 30);
+    }
+}

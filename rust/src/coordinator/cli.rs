@@ -1,0 +1,245 @@
+//! Hand-rolled CLI (the offline crate set has no clap).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::coordinator::experiments::{self, ExpCtx, Scale};
+use crate::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
+use crate::platform::{calibrate_network, CalProcedure, GroundTruth, Scenario};
+use crate::runtime::Artifacts;
+
+const USAGE: &str = "\
+hplsim — simulation-based optimization & sensibility analysis of MPI applications
+
+USAGE:
+  hplsim exp <id> [--full] [--seed N] [--no-artifacts] [--out DIR]
+      id ∈ {table1, fig4, fig5, fig6, fig7, fig8, table2, fig10, fig11,
+            fig12, fig13, fig14, fig15, fig16, all}
+  hplsim run [--n N] [--nb NB] [--p P] [--q Q] [--depth D]
+             [--bcast ALG] [--swap ALG] [--rfact ALG]
+             [--nodes K] [--rpn R] [--scenario normal|cooling|multimodal]
+             [--seeds S] [--seed N] [--no-artifacts]
+      Simulate one configuration: reality vs calibrated prediction.
+  hplsim configs      Show the Table-1 preset configurations.
+  hplsim help
+
+Artifacts are loaded from $HPLSIM_ARTIFACTS, ./artifacts or ../artifacts
+(run `make artifacts` first); --no-artifacts uses the pure-Rust model path.
+";
+
+/// Parse `--key value` pairs and flags.
+pub fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut positional = Vec::new();
+    let mut opts = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let flag_like = i + 1 >= args.len() || args[i + 1].starts_with("--");
+            if flag_like {
+                opts.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                opts.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    (positional, opts)
+}
+
+fn num<T: std::str::FromStr>(opts: &HashMap<String, String>, key: &str, default: T) -> T {
+    opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn load_artifacts(opts: &HashMap<String, String>) -> Option<Rc<Artifacts>> {
+    if opts.contains_key("no-artifacts") {
+        return None;
+    }
+    match Artifacts::load_default() {
+        Ok(a) => {
+            eprintln!("artifacts: loaded ({} PJRT)", a.platform());
+            Some(Rc::new(a))
+        }
+        Err(e) => {
+            eprintln!("artifacts: unavailable ({e:#}); using pure-Rust model path");
+            None
+        }
+    }
+}
+
+fn cmd_exp(positional: &[String], opts: &HashMap<String, String>) -> i32 {
+    let Some(id) = positional.first() else {
+        eprintln!("exp: missing experiment id\n{USAGE}");
+        return 2;
+    };
+    let scale = if opts.contains_key("full") { Scale::Full } else { Scale::Bench };
+    let seed = num(opts, "seed", 42u64);
+    let mut ctx = ExpCtx::new(load_artifacts(opts), scale, seed);
+    if let Some(dir) = opts.get("out") {
+        ctx.out_dir = dir.into();
+    }
+    match id.as_str() {
+        "table1" => drop(experiments::table1(&ctx)),
+        "fig4" => drop(experiments::fig4(&ctx)),
+        "fig5" => drop(experiments::fig5(&ctx)),
+        "fig6" => drop(experiments::fig6(&ctx)),
+        "fig7" => drop(experiments::fig7(&ctx)),
+        "fig8" => drop(experiments::fig8(&ctx)),
+        "table2" => drop(experiments::table2(&ctx)),
+        "fig10" => drop(experiments::fig10_11(&ctx, Scenario::Normal)),
+        "fig11" => drop(experiments::fig10_11(&ctx, Scenario::Multimodal)),
+        "fig12" => drop(experiments::fig12(&ctx)),
+        "fig13" | "fig14" => drop(experiments::fig13_15(&ctx, Scenario::Normal)),
+        "fig15" => drop(experiments::fig13_15(&ctx, Scenario::Multimodal)),
+        "fig16" => drop(experiments::fig16(&ctx)),
+        "all" => experiments::run_all(&ctx),
+        other => {
+            eprintln!("unknown experiment '{other}'\n{USAGE}");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_run(opts: &HashMap<String, String>) -> i32 {
+    let nodes = num(opts, "nodes", 8usize);
+    let rpn = num(opts, "rpn", 4usize);
+    let nranks = nodes * rpn;
+    let q_default = {
+        let mut best = (1, nranks);
+        for (a, b) in experiments::geometries(nranks) {
+            if a <= b && b - a < best.1 - best.0 {
+                best = (a, b);
+            }
+        }
+        best
+    };
+    let cfg = HplConfig {
+        n: num(opts, "n", 8192usize),
+        nb: num(opts, "nb", 64usize),
+        p: num(opts, "p", q_default.0),
+        q: num(opts, "q", q_default.1),
+        depth: num(opts, "depth", 1usize),
+        bcast: opts
+            .get("bcast")
+            .and_then(|s| Bcast::parse(s))
+            .unwrap_or(Bcast::TwoRing),
+        swap: opts
+            .get("swap")
+            .and_then(|s| SwapAlg::parse(s))
+            .unwrap_or(SwapAlg::BinExch),
+        swap_threshold: num(opts, "swap-threshold", 64usize),
+        rfact: opts
+            .get("rfact")
+            .and_then(|s| Rfact::parse(s))
+            .unwrap_or(Rfact::Crout),
+        nbmin: num(opts, "nbmin", 8usize),
+    };
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid config: {e}");
+        return 2;
+    }
+    if cfg.nranks() > nranks {
+        eprintln!("grid {}x{} needs {} ranks > {nodes} nodes x {rpn}", cfg.p, cfg.q, cfg.nranks());
+        return 2;
+    }
+    let scenario = match opts.get("scenario").map(|s| s.as_str()) {
+        Some("cooling") => Scenario::Cooling,
+        Some("multimodal") => Scenario::Multimodal,
+        _ => Scenario::Normal,
+    };
+    let seed = num(opts, "seed", 42u64);
+    let seeds = num(opts, "seeds", 3u64);
+    let ctx = ExpCtx::new(load_artifacts(opts), Scale::Bench, seed);
+
+    let gt = GroundTruth::generate(nodes, scenario, seed);
+    let topo = gt.topology();
+    let net_truth = gt.net_model();
+    let net_cal = calibrate_network(&gt, CalProcedure::Improved, seed + 1);
+    let models = crate::calibration::calibrate_models(
+        ctx.arts.as_deref(),
+        &gt,
+        0,
+        512,
+        seed + 2,
+    );
+
+    println!(
+        "config: N={} NB={} P={}x{} depth={} bcast={} swap={} rfact={} | {} ranks on {} nodes",
+        cfg.n, cfg.nb, cfg.p, cfg.q, cfg.depth, cfg.bcast.name(), cfg.swap.name(),
+        cfg.rfact.name(), cfg.nranks(), nodes
+    );
+    let mut reality = Vec::new();
+    for r in 0..seeds {
+        let res = ctx.sim(&cfg, &topo, &net_truth, &gt.day_model(r), rpn, seed + 100 + r);
+        println!(
+            "reality  seed {r}: {:>8.2} GFlop/s  ({:.3} s, {} msgs, {} events)",
+            res.gflops, res.seconds, res.comm.messages, res.events
+        );
+        reality.push(res.gflops);
+    }
+    let pred = ctx.sim(&cfg, &topo, &net_cal, &models.full, rpn, seed + 200);
+    let rm = crate::stats::mean(&reality);
+    println!(
+        "predicted        : {:>8.2} GFlop/s  (error vs mean reality: {:+.1}%)",
+        pred.gflops,
+        100.0 * (pred.gflops / rm - 1.0)
+    );
+    0
+}
+
+/// CLI entry point; returns the process exit code.
+pub fn main_with_args(args: &[String]) -> i32 {
+    let (positional, opts) = parse_args(args);
+    match positional.first().map(|s| s.as_str()) {
+        Some("exp") => cmd_exp(&positional[1..], &opts),
+        Some("run") => cmd_run(&opts),
+        Some("configs") => {
+            let ctx = ExpCtx::new(None, Scale::Bench, 0);
+            experiments::table1(&ctx);
+            0
+        }
+        Some("help") | None => {
+            println!("{USAGE}");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_flags_and_values() {
+        let args: Vec<String> =
+            ["exp", "fig5", "--full", "--seed", "7", "--no-artifacts"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let (pos, opts) = parse_args(&args);
+        assert_eq!(pos, vec!["exp", "fig5"]);
+        assert_eq!(opts.get("full").unwrap(), "true");
+        assert_eq!(opts.get("seed").unwrap(), "7");
+        assert!(opts.contains_key("no-artifacts"));
+    }
+
+    #[test]
+    fn help_returns_zero() {
+        assert_eq!(main_with_args(&["help".to_string()]), 0);
+        assert_eq!(main_with_args(&[]), 0);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(main_with_args(&["bogus".to_string()]), 2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment coordination: the CLI, the per-figure experiment
+//! registry, and result tables.
+
+pub mod cli;
+pub mod experiments;
+pub mod table;
+
+pub use experiments::{ExpCtx, Scale};
+pub use table::Table;

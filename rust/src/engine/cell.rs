@@ -1,0 +1,149 @@
+//! Synchronization cells: broadcast signals and join handles.
+
+use std::cell::RefCell;
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::task::{Context, Poll, Waker};
+
+/// One-shot broadcast flag: tasks `wait().await` until someone `set()`s.
+///
+/// Used for flow completion, rendezvous handshakes, and panel-arrival
+/// notifications. Setting twice is idempotent.
+#[derive(Clone, Default)]
+pub struct Signal {
+    inner: Rc<RefCell<SignalState>>,
+}
+
+#[derive(Default)]
+struct SignalState {
+    set: bool,
+    wakers: Vec<Waker>,
+}
+
+impl Signal {
+    pub fn new() -> Signal {
+        Signal::default()
+    }
+
+    /// Fire the signal, waking all current and future waiters.
+    pub fn set(&self) {
+        let mut s = self.inner.borrow_mut();
+        s.set = true;
+        for w in s.wakers.drain(..) {
+            w.wake();
+        }
+    }
+
+    pub fn is_set(&self) -> bool {
+        self.inner.borrow().set
+    }
+
+    /// Future resolving once the signal is set.
+    pub fn wait(&self) -> SignalWait {
+        SignalWait { inner: self.inner.clone() }
+    }
+}
+
+pub struct SignalWait {
+    inner: Rc<RefCell<SignalState>>,
+}
+
+impl Future for SignalWait {
+    type Output = ();
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        let mut s = self.inner.borrow_mut();
+        if s.set {
+            Poll::Ready(())
+        } else {
+            s.wakers.push(cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+/// State shared between a `spawn_join` task and its handle.
+pub struct JoinState<T> {
+    pub value: Option<T>,
+    pub wakers: Vec<Waker>,
+}
+
+impl<T> Default for JoinState<T> {
+    fn default() -> Self {
+        JoinState { value: None, wakers: Vec::new() }
+    }
+}
+
+/// Awaitable handle on a spawned task's result.
+pub struct JoinHandle<T> {
+    state: Rc<RefCell<JoinState<T>>>,
+}
+
+impl<T> JoinHandle<T> {
+    pub(crate) fn new(state: Rc<RefCell<JoinState<T>>>) -> Self {
+        JoinHandle { state }
+    }
+
+    /// Non-blocking check.
+    pub fn is_done(&self) -> bool {
+        self.state.borrow().value.is_some()
+    }
+}
+
+impl<T> Future for JoinHandle<T> {
+    type Output = T;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<T> {
+        let mut s = self.state.borrow_mut();
+        match s.value.take() {
+            Some(v) => Poll::Ready(v),
+            None => {
+                s.wakers.push(cx.waker().clone());
+                Poll::Pending
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Sim;
+    use std::cell::Cell;
+
+    #[test]
+    fn signal_wakes_multiple_waiters() {
+        let sim = Sim::new();
+        let sig = Signal::new();
+        let count = Rc::new(Cell::new(0));
+        for _ in 0..5 {
+            let sg = sig.clone();
+            let c = count.clone();
+            let s = sim.clone();
+            sim.spawn(async move {
+                sg.wait().await;
+                assert_eq!(s.now(), 2.0);
+                c.set(c.get() + 1);
+            });
+        }
+        let s = sim.clone();
+        sim.spawn(async move {
+            s.sleep(2.0).await;
+            sig.set();
+        });
+        sim.run();
+        assert_eq!(count.get(), 5);
+    }
+
+    #[test]
+    fn wait_after_set_is_immediate() {
+        let sim = Sim::new();
+        let sig = Signal::new();
+        sig.set();
+        let s = sim.clone();
+        sim.spawn(async move {
+            sig.wait().await;
+            assert_eq!(s.now(), 0.0);
+        });
+        sim.run();
+    }
+}

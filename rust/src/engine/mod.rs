@@ -1,0 +1,19 @@
+//! Deterministic virtual-time discrete-event engine.
+//!
+//! Every simulated MPI rank is an `async` task driven by a
+//! single-threaded executor whose clock is *simulated time*: awaiting
+//! [`Sim::sleep`] advances nothing in real time, it merely schedules the
+//! task's waker on the event heap. This is the same execution model as
+//! SimGrid/SMPI's mutual-exclusion threads, with Rust futures instead of
+//! contexts: exactly one task runs at a time, and time only advances
+//! when every runnable task has yielded.
+//!
+//! The engine is deterministic: ties on the event heap are broken by a
+//! monotonically increasing sequence number, so a simulation with the
+//! same seed replays the exact same schedule.
+
+mod cell;
+mod sim;
+
+pub use cell::{JoinHandle, Signal};
+pub use sim::{Sim, SimStats};

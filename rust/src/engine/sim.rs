@@ -1,0 +1,430 @@
+//! The executor: task storage, event heap, virtual clock.
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Wake, Waker};
+
+use super::cell::{JoinHandle, JoinState};
+
+type BoxFuture = Pin<Box<dyn Future<Output = ()>>>;
+
+/// A timer entry: wake `waker` at simulated time `at`.
+struct Timer {
+    at: f64,
+    seq: u64,
+    waker: Waker,
+}
+
+impl PartialEq for Timer {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Timer {}
+impl PartialOrd for Timer {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Timer {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Total order: by time then sequence (f64 times are finite by
+        // construction — asserted on push).
+        self.at
+            .partial_cmp(&other.at)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+struct Kernel {
+    now: f64,
+    seq: u64,
+    timers: BinaryHeap<Reverse<Timer>>,
+    tasks: Vec<Option<BoxFuture>>,
+    /// Cached waker per task (one Arc allocation per task, not per poll).
+    wakers: Vec<Option<Waker>>,
+    live: usize,
+    events_fired: u64,
+}
+
+/// Cross-task wake queue (single-threaded in practice; the Mutex exists
+/// because `std::task::Wake` demands `Send + Sync`).
+type WakeQueue = Arc<Mutex<Vec<usize>>>;
+
+struct TaskWaker {
+    id: usize,
+    queue: WakeQueue,
+}
+
+impl Wake for TaskWaker {
+    fn wake(self: Arc<Self>) {
+        self.queue.lock().unwrap().push(self.id);
+    }
+    fn wake_by_ref(self: &Arc<Self>) {
+        self.queue.lock().unwrap().push(self.id);
+    }
+}
+
+/// Counters exposed after a run (used by the perf harness).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    /// Number of timer events fired.
+    pub events: u64,
+    /// Number of task polls performed.
+    pub polls: u64,
+    /// Tasks spawned over the lifetime of the simulation.
+    pub tasks: usize,
+}
+
+/// Handle on a simulation: clonable, cheap, single-threaded.
+#[derive(Clone)]
+pub struct Sim {
+    k: Rc<RefCell<Kernel>>,
+    queue: WakeQueue,
+    polls: Rc<RefCell<u64>>,
+}
+
+impl Default for Sim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sim {
+    pub fn new() -> Sim {
+        Sim {
+            k: Rc::new(RefCell::new(Kernel {
+                now: 0.0,
+                seq: 0,
+                timers: BinaryHeap::new(),
+                tasks: Vec::new(),
+                wakers: Vec::new(),
+                live: 0,
+                events_fired: 0,
+            })),
+            queue: Arc::new(Mutex::new(Vec::new())),
+            polls: Rc::new(RefCell::new(0)),
+        }
+    }
+
+    /// Current simulated time in seconds.
+    pub fn now(&self) -> f64 {
+        self.k.borrow().now
+    }
+
+    /// Spawn a task; it becomes runnable immediately.
+    pub fn spawn<F>(&self, fut: F)
+    where
+        F: Future<Output = ()> + 'static,
+    {
+        let id = {
+            let mut k = self.k.borrow_mut();
+            k.tasks.push(Some(Box::pin(fut)));
+            k.wakers.push(None);
+            k.live += 1;
+            k.tasks.len() - 1
+        };
+        self.queue.lock().unwrap().push(id);
+    }
+
+    /// Spawn a task returning a value, with a joinable handle.
+    pub fn spawn_join<F, T>(&self, fut: F) -> JoinHandle<T>
+    where
+        F: Future<Output = T> + 'static,
+        T: 'static,
+    {
+        let state = Rc::new(RefCell::new(JoinState::default()));
+        let state2 = state.clone();
+        self.spawn(async move {
+            let v = fut.await;
+            let mut s = state2.borrow_mut();
+            s.value = Some(v);
+            for w in s.wakers.drain(..) {
+                w.wake();
+            }
+        });
+        JoinHandle::new(state)
+    }
+
+    /// Sleep until simulated time `now + dur`.
+    pub fn sleep(&self, dur: f64) -> Delay {
+        debug_assert!(dur >= 0.0 && dur.is_finite(), "bad delay {dur}");
+        let at = self.k.borrow().now + dur;
+        Delay { k: self.k.clone(), at }
+    }
+
+    /// Sleep until an absolute simulated time.
+    pub fn sleep_until(&self, at: f64) -> Delay {
+        Delay { k: self.k.clone(), at }
+    }
+
+    /// Register a waker to fire at absolute time `at` (used by the
+    /// network model to (re)schedule flow completions).
+    pub fn wake_at(&self, at: f64, waker: Waker) {
+        let mut k = self.k.borrow_mut();
+        assert!(at.is_finite(), "non-finite timer {at}");
+        let seq = k.seq;
+        k.seq += 1;
+        k.timers.push(Reverse(Timer { at, seq, waker }));
+    }
+
+    /// Run until all tasks complete (or the simulation deadlocks).
+    ///
+    /// Returns the final simulated time. Panics on deadlock — a
+    /// deadlock is always a bug in a protocol implementation.
+    pub fn run(&self) -> f64 {
+        self.run_with_stats().0
+    }
+
+    /// Run to completion and also return engine counters.
+    pub fn run_with_stats(&self) -> (f64, SimStats) {
+        loop {
+            // Poll runnable tasks to quiescence.
+            loop {
+                let woken: Vec<usize> = {
+                    let mut q = self.queue.lock().unwrap();
+                    std::mem::take(&mut *q)
+                };
+                if woken.is_empty() {
+                    break;
+                }
+                for id in woken {
+                    self.poll_task(id);
+                }
+            }
+            // Advance virtual time to the next timer.
+            let fired = {
+                let mut k = self.k.borrow_mut();
+                match k.timers.pop() {
+                    Some(Reverse(t)) => {
+                        debug_assert!(t.at >= k.now, "time went backwards");
+                        k.now = t.at.max(k.now);
+                        k.events_fired += 1;
+                        Some(t.waker)
+                    }
+                    None => None,
+                }
+            };
+            match fired {
+                Some(w) => w.wake(),
+                None => break,
+            }
+        }
+        let k = self.k.borrow();
+        if k.live != 0 {
+            panic!(
+                "simulation deadlock at t={}: {} task(s) blocked with no pending event",
+                k.now, k.live
+            );
+        }
+        let stats = SimStats {
+            events: k.events_fired,
+            polls: *self.polls.borrow(),
+            tasks: k.tasks.len(),
+        };
+        (k.now, stats)
+    }
+
+    fn poll_task(&self, id: usize) {
+        // Take the future out so polling can re-borrow the kernel.
+        let (fut, waker) = {
+            let mut k = self.k.borrow_mut();
+            let fut = match k.tasks.get_mut(id) {
+                Some(slot) => slot.take(),
+                None => None,
+            };
+            let waker = fut.as_ref().map(|_| {
+                k.wakers[id]
+                    .get_or_insert_with(|| {
+                        Waker::from(Arc::new(TaskWaker {
+                            id,
+                            queue: self.queue.clone(),
+                        }))
+                    })
+                    .clone()
+            });
+            (fut, waker)
+        };
+        let Some(mut fut) = fut else { return };
+        let waker = waker.unwrap();
+        *self.polls.borrow_mut() += 1;
+        let mut cx = Context::from_waker(&waker);
+        match fut.as_mut().poll(&mut cx) {
+            Poll::Ready(()) => {
+                let mut k = self.k.borrow_mut();
+                k.live -= 1;
+                // Slot stays None: task is finished. Drop its waker too.
+                k.wakers[id] = None;
+            }
+            Poll::Pending => {
+                let mut k = self.k.borrow_mut();
+                k.tasks[id] = Some(fut);
+            }
+        }
+    }
+}
+
+/// Future that completes at a fixed simulated time.
+pub struct Delay {
+    k: Rc<RefCell<Kernel>>,
+    at: f64,
+}
+
+impl Future for Delay {
+    type Output = ();
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        let mut k = self.k.borrow_mut();
+        if k.now >= self.at {
+            Poll::Ready(())
+        } else {
+            let seq = k.seq;
+            k.seq += 1;
+            k.timers.push(Reverse(Timer {
+                at: self.at,
+                seq,
+                waker: cx.waker().clone(),
+            }));
+            Poll::Pending
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    #[test]
+    fn time_advances_only_by_sleep() {
+        let sim = Sim::new();
+        let s = sim.clone();
+        let out = Rc::new(Cell::new(0.0));
+        let o = out.clone();
+        sim.spawn(async move {
+            s.sleep(1.5).await;
+            s.sleep(2.5).await;
+            o.set(s.now());
+        });
+        let end = sim.run();
+        assert_eq!(end, 4.0);
+        assert_eq!(out.get(), 4.0);
+    }
+
+    #[test]
+    fn tasks_interleave_deterministically() {
+        let sim = Sim::new();
+        let log: Rc<RefCell<Vec<(f64, u32)>>> = Default::default();
+        for id in 0..3u32 {
+            let s = sim.clone();
+            let l = log.clone();
+            sim.spawn(async move {
+                for step in 0..3 {
+                    s.sleep(1.0 + id as f64 * 0.1).await;
+                    l.borrow_mut().push((s.now(), id * 10 + step));
+                }
+            });
+        }
+        sim.run();
+        let got = log.borrow().clone();
+        // Replay must give the identical schedule.
+        let sim2 = Sim::new();
+        let log2: Rc<RefCell<Vec<(f64, u32)>>> = Default::default();
+        for id in 0..3u32 {
+            let s = sim2.clone();
+            let l = log2.clone();
+            sim2.spawn(async move {
+                for step in 0..3 {
+                    s.sleep(1.0 + id as f64 * 0.1).await;
+                    l.borrow_mut().push((s.now(), id * 10 + step));
+                }
+            });
+        }
+        sim2.run();
+        assert_eq!(got, *log2.borrow());
+        // And events must be time-ordered.
+        for w in got.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    fn spawn_join_returns_value() {
+        let sim = Sim::new();
+        let s = sim.clone();
+        let h = sim.spawn_join(async move {
+            s.sleep(3.0).await;
+            42u64
+        });
+        let s2 = sim.clone();
+        let got = Rc::new(Cell::new(0u64));
+        let g = got.clone();
+        sim.spawn(async move {
+            let v = h.await;
+            assert_eq!(s2.now(), 3.0);
+            g.set(v);
+        });
+        sim.run();
+        assert_eq!(got.get(), 42);
+    }
+
+    #[test]
+    fn zero_delay_is_fine() {
+        let sim = Sim::new();
+        let s = sim.clone();
+        sim.spawn(async move {
+            s.sleep(0.0).await;
+            assert_eq!(s.now(), 0.0);
+        });
+        assert_eq!(sim.run(), 0.0);
+    }
+
+    #[test]
+    fn nested_spawn_runs() {
+        let sim = Sim::new();
+        let s = sim.clone();
+        let done = Rc::new(Cell::new(false));
+        let d = done.clone();
+        sim.spawn(async move {
+            s.sleep(1.0).await;
+            let s2 = s.clone();
+            s.spawn(async move {
+                s2.sleep(1.0).await;
+                d.set(true);
+            });
+        });
+        assert_eq!(sim.run(), 2.0);
+        assert!(done.get());
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn deadlock_panics() {
+        let sim = Sim::new();
+        let sig = crate::engine::Signal::new();
+        let s2 = sig.clone();
+        sim.spawn(async move {
+            s2.wait().await; // never set
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn many_tasks_scale() {
+        let sim = Sim::new();
+        for i in 0..1000 {
+            let s = sim.clone();
+            sim.spawn(async move {
+                s.sleep(i as f64 * 1e-3).await;
+            });
+        }
+        let (end, stats) = sim.run_with_stats();
+        assert!((end - 0.999).abs() < 1e-12);
+        assert_eq!(stats.tasks, 1000);
+    }
+}

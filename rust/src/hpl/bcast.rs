@@ -1,0 +1,374 @@
+//! The six HPL panel-broadcast algorithms along a process row.
+//!
+//! Ring variants make progress through `MPI_Iprobe` polled from inside
+//! the trailing update (partial communication/computation overlap); the
+//! long (spread-and-roll) variants are blocking, as in HPL 2.1/2.2 where
+//! their Iprobe capability is disabled (§2 of the paper).
+
+use super::config::Bcast;
+use crate::engine::JoinHandle;
+use crate::mpi::Ctx;
+
+/// Tag layout: see [`super::driver::tag`].
+fn fwd_tag(base: u64) -> u64 {
+    base
+}
+
+/// Communication plan of a ring-family broadcast, in root-relative
+/// positions `d in 1..q` (d=0 is the root).
+///
+/// Returns, for a non-root `d`: `(source d, forward targets)`.
+pub fn ring_plan(alg: Bcast, q: usize, d: usize) -> (usize, Vec<usize>) {
+    debug_assert!(d >= 1 && d < q);
+    match alg {
+        Bcast::Ring => {
+            let src = d - 1;
+            let fwd = if d + 1 < q { vec![d + 1] } else { vec![] };
+            (src, fwd)
+        }
+        Bcast::RingM => {
+            if q <= 2 {
+                return ring_plan(Bcast::Ring, q, d);
+            }
+            // d=1: served directly by root, never forwards (it becomes
+            // the next root). The chain is root -> 2 -> 3 -> ... -> q-1.
+            match d {
+                1 => (0, vec![]),
+                2 => (0, if d + 1 < q { vec![d + 1] } else { vec![] }),
+                _ => (d - 1, if d + 1 < q { vec![d + 1] } else { vec![] }),
+            }
+        }
+        Bcast::TwoRing => {
+            // Two chains: root -> 1 -> 2 -> ... -> h and
+            //             root -> h+1 -> ... -> q-1.
+            let h = (q - 1).div_ceil(2);
+            if d <= h {
+                let src = d - 1; // d=1 gets it from the root
+                let fwd = if d + 1 <= h { vec![d + 1] } else { vec![] };
+                (src, fwd)
+            } else {
+                let src = if d == h + 1 { 0 } else { d - 1 };
+                let fwd = if d + 1 < q { vec![d + 1] } else { vec![] };
+                (src, fwd)
+            }
+        }
+        Bcast::TwoRingM => {
+            if q <= 3 {
+                return ring_plan(Bcast::TwoRing, q, d);
+            }
+            // d=1 direct from root, no forward; two chains over 2..q-1.
+            if d == 1 {
+                return (0, vec![]);
+            }
+            let rest = q - 2; // members 2..q-1
+            let h = 1 + rest.div_ceil(2); // last d of chain 1
+            if d <= h {
+                let src = if d == 2 { 0 } else { d - 1 };
+                let fwd = if d + 1 <= h { vec![d + 1] } else { vec![] };
+                (src, fwd)
+            } else {
+                let src = if d == h + 1 { 0 } else { d - 1 };
+                let fwd = if d + 1 < q { vec![d + 1] } else { vec![] };
+                (src, fwd)
+            }
+        }
+        Bcast::Long | Bcast::LongM => unreachable!("long variants use spread-roll"),
+    }
+}
+
+/// Root's direct targets for the ring-family algorithms.
+pub fn root_plan(alg: Bcast, q: usize) -> Vec<usize> {
+    if q <= 1 {
+        return vec![];
+    }
+    match alg {
+        Bcast::Ring => vec![1],
+        Bcast::RingM => {
+            if q <= 2 {
+                vec![1]
+            } else {
+                vec![1, 2]
+            }
+        }
+        Bcast::TwoRing => {
+            let h = (q - 1).div_ceil(2);
+            if h + 1 < q {
+                vec![1, h + 1]
+            } else {
+                vec![1]
+            }
+        }
+        Bcast::TwoRingM => {
+            if q <= 3 {
+                return root_plan(Bcast::TwoRing, q);
+            }
+            let rest = q - 2;
+            let h = 1 + rest.div_ceil(2);
+            if h + 1 < q {
+                vec![1, 2, h + 1]
+            } else {
+                vec![1, 2]
+            }
+        }
+        Bcast::Long | Bcast::LongM => vec![],
+    }
+}
+
+/// One panel broadcast in flight on one rank.
+pub struct BcastOp {
+    pub alg: Bcast,
+    /// Row group (ranks of my process row, by column).
+    group: Vec<usize>,
+    me_pos: usize,
+    root_pos: usize,
+    bytes: f64,
+    tag: u64,
+    done: bool,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl BcastOp {
+    pub fn new(
+        alg: Bcast,
+        group: Vec<usize>,
+        me_pos: usize,
+        root_pos: usize,
+        bytes: f64,
+        tag: u64,
+    ) -> BcastOp {
+        BcastOp { alg, group, me_pos, root_pos, bytes, tag, done: false, handles: vec![] }
+    }
+
+    fn q(&self) -> usize {
+        self.group.len()
+    }
+
+    fn d(&self) -> usize {
+        (self.me_pos + self.q() - self.root_pos) % self.q()
+    }
+
+    fn abs(&self, d: usize) -> usize {
+        self.group[(d + self.root_pos) % self.q()]
+    }
+
+    /// Kick off the broadcast. Roots of ring variants launch their
+    /// sends in the background; everything else is lazy.
+    pub fn start(&mut self, ctx: &Ctx) {
+        if self.q() <= 1 {
+            self.done = true;
+            return;
+        }
+        if self.alg.overlaps() && self.d() == 0 {
+            for dst_d in root_plan(self.alg, self.q()) {
+                let dst = self.abs(dst_d);
+                self.handles.push(ctx.isend(dst, fwd_tag(self.tag), self.bytes));
+            }
+            self.done = true; // root has the panel by definition
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// One polling step (called between update chunks). Returns whether
+    /// the panel has arrived locally. Long variants make no progress
+    /// here (no Iprobe in HPL 2.1/2.2).
+    pub async fn poll(&mut self, ctx: &Ctx) -> bool {
+        if self.done {
+            return true;
+        }
+        if !self.alg.overlaps() {
+            return false;
+        }
+        let (src_d, fwd) = ring_plan(self.alg, self.q(), self.d());
+        let src = self.abs(src_d);
+        if ctx.iprobe(Some(src), fwd_tag(self.tag)).await {
+            ctx.recv(Some(src), fwd_tag(self.tag)).await;
+            for f in fwd {
+                let dst = self.abs(f);
+                self.handles.push(ctx.isend(dst, fwd_tag(self.tag), self.bytes));
+            }
+            self.done = true;
+        }
+        self.done
+    }
+
+    /// Block until the panel has arrived (and, for the root, until its
+    /// sends have been pushed). With nothing left to overlap, HPL's
+    /// Iprobe busy-wait is equivalent to a blocking receive (the rank
+    /// burns cycles that affect nothing else), so ring variants recv
+    /// directly here; long variants run the whole spread-and-roll.
+    pub async fn finish(&mut self, ctx: &Ctx) {
+        if self.q() <= 1 {
+            self.done = true;
+            return;
+        }
+        if !self.done {
+            if self.alg.overlaps() {
+                let (src_d, fwd) = ring_plan(self.alg, self.q(), self.d());
+                let src = self.abs(src_d);
+                ctx.recv(Some(src), fwd_tag(self.tag)).await;
+                for f in fwd {
+                    let dst = self.abs(f);
+                    self.handles.push(ctx.isend(dst, fwd_tag(self.tag), self.bytes));
+                }
+                self.done = true;
+            } else {
+                self.run_long(ctx).await;
+                self.done = true;
+            }
+        }
+        for h in self.handles.drain(..) {
+            h.await;
+        }
+    }
+
+    /// Spread-and-roll (long / longM).
+    async fn run_long(&mut self, ctx: &Ctx) {
+        let q = self.q();
+        let d = self.d();
+        let modified = self.alg == Bcast::LongM && q > 2;
+        if modified {
+            // The next root receives the full panel directly and does
+            // not take part in the roll.
+            if d == 0 {
+                ctx.send(self.abs(1), self.tag, self.bytes).await;
+            } else if d == 1 {
+                ctx.recv(Some(self.abs(0)), self.tag).await;
+                return;
+            }
+        }
+        // Participants (root-relative positions).
+        let first = if modified { 2 } else { 1 };
+        let mut parts = vec![0usize];
+        parts.extend(first..q);
+        let np = parts.len();
+        if np <= 1 {
+            return;
+        }
+        let my_i = parts.iter().position(|&x| x == d).expect("participant");
+        let piece = self.bytes / np as f64;
+        // Spread: the root scatters distinct pieces.
+        if my_i == 0 {
+            let mut hs = Vec::new();
+            for &pd in &parts[1..] {
+                hs.push(ctx.isend(self.abs(pd), self.tag + 1, piece));
+            }
+            for h in hs {
+                h.await;
+            }
+        } else {
+            ctx.recv(Some(self.abs(0)), self.tag + 1).await;
+        }
+        // Roll: np-1 ring rounds, everyone forwarding concurrently.
+        for r in 0..np - 1 {
+            let next = self.abs(parts[(my_i + 1) % np]);
+            let prev = self.abs(parts[(my_i + np - 1) % np]);
+            let t = self.tag + 2 + r as u64;
+            let h = ctx.isend(next, t, piece);
+            ctx.recv(Some(prev), t).await;
+            h.await;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every rank must receive the panel exactly once, and forwards must
+    /// be consistent (if a sends to b, then b's source is a).
+    fn check_plan(alg: Bcast, q: usize) {
+        let mut received = vec![0usize; q]; // times each d receives
+        // From the root.
+        for dst in root_plan(alg, q) {
+            assert!(dst >= 1 && dst < q);
+            received[dst] += 1;
+        }
+        // From forwards.
+        for d in 1..q {
+            let (_, fwd) = ring_plan(alg, q, d);
+            for f in fwd {
+                assert!(f >= 1 && f < q, "{alg:?} q={q} d={d} fwd={f}");
+                received[f] += 1;
+            }
+        }
+        for d in 1..q {
+            assert_eq!(received[d], 1, "{alg:?} q={q}: d={d} received {}", received[d]);
+        }
+        // Source consistency.
+        let mut senders: Vec<Vec<usize>> = vec![vec![]; q];
+        for dst in root_plan(alg, q) {
+            senders[dst].push(0);
+        }
+        for d in 1..q {
+            let (_, fwd) = ring_plan(alg, q, d);
+            for f in fwd {
+                senders[f].push(d);
+            }
+        }
+        for d in 1..q {
+            let (src, _) = ring_plan(alg, q, d);
+            assert_eq!(senders[d], vec![src], "{alg:?} q={q} d={d}");
+        }
+    }
+
+    #[test]
+    fn ring_plans_cover_everyone() {
+        for alg in [Bcast::Ring, Bcast::RingM, Bcast::TwoRing, Bcast::TwoRingM] {
+            for q in 2..40 {
+                check_plan(alg, q);
+            }
+        }
+    }
+
+    #[test]
+    fn modified_next_root_does_not_forward() {
+        for q in 3..20 {
+            let (src, fwd) = ring_plan(Bcast::RingM, q, 1);
+            assert_eq!(src, 0);
+            assert!(fwd.is_empty());
+            if q > 3 {
+                let (src, fwd) = ring_plan(Bcast::TwoRingM, q, 1);
+                assert_eq!(src, 0);
+                assert!(fwd.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn two_ring_has_two_chains() {
+        let roots = root_plan(Bcast::TwoRing, 9);
+        assert_eq!(roots.len(), 2);
+        // Chain heads: 1 and h+1 = 5.
+        assert_eq!(roots, vec![1, 5]);
+    }
+
+    #[test]
+    fn chain_depth_two_ring_shorter_than_ring() {
+        // Longest forwarding chain: ring = q-1 hops; 2ring ≈ half.
+        fn depth(alg: Bcast, q: usize) -> usize {
+            let mut dist = vec![usize::MAX; q];
+            dist[0] = 0;
+            for dst in root_plan(alg, q) {
+                dist[dst] = 1;
+            }
+            // Relax in topological order (chains are increasing).
+            for _ in 0..q {
+                for d in 1..q {
+                    if dist[d] < usize::MAX {
+                        let (_, fwd) = ring_plan(alg, q, d);
+                        for f in fwd {
+                            dist[f] = dist[f].min(dist[d] + 1);
+                        }
+                    }
+                }
+            }
+            (1..q).map(|d| dist[d]).max().unwrap_or(0)
+        }
+        for q in [8, 16, 31] {
+            assert!(depth(Bcast::TwoRing, q) < depth(Bcast::Ring, q));
+        }
+    }
+}

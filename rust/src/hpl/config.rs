@@ -1,0 +1,268 @@
+//! HPL configuration: the full parameter space of the paper's §2.
+
+/// Panel broadcast algorithm (HPL's six variants, §2 BCAST).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Bcast {
+    /// Increasing ring.
+    Ring,
+    /// Increasing ring, modified: the next root receives first and does
+    /// not relay.
+    RingM,
+    /// Increasing 2-ring: two chains of half length.
+    TwoRing,
+    /// Increasing 2-ring, modified.
+    TwoRingM,
+    /// Spread-and-roll (bandwidth optimal); no Iprobe overlap in
+    /// HPL 2.1/2.2.
+    Long,
+    /// Spread-and-roll, modified.
+    LongM,
+}
+
+impl Bcast {
+    pub const ALL: [Bcast; 6] =
+        [Bcast::Ring, Bcast::RingM, Bcast::TwoRing, Bcast::TwoRingM, Bcast::Long, Bcast::LongM];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bcast::Ring => "1ring",
+            Bcast::RingM => "1ringM",
+            Bcast::TwoRing => "2ring",
+            Bcast::TwoRingM => "2ringM",
+            Bcast::Long => "long",
+            Bcast::LongM => "longM",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Bcast> {
+        Bcast::ALL.iter().copied().find(|b| b.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Ring variants poll MPI_Iprobe and overlap with the update; the
+    /// long variants do not (disabled in HPL 2.1/2.2, see §2).
+    pub fn overlaps(&self) -> bool {
+        !matches!(self, Bcast::Long | Bcast::LongM)
+    }
+}
+
+/// Row-swap (pivoting) algorithm, §2 SWAP.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SwapAlg {
+    /// Binary exchange along a virtual tree.
+    BinExch,
+    /// Spread-and-roll ("long" swap; more parallel communications).
+    SpreadRoll,
+    /// Threshold mix of the two.
+    Mix,
+}
+
+impl SwapAlg {
+    pub const ALL: [SwapAlg; 3] = [SwapAlg::BinExch, SwapAlg::SpreadRoll, SwapAlg::Mix];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SwapAlg::BinExch => "binary-exch",
+            SwapAlg::SpreadRoll => "spread-roll",
+            SwapAlg::Mix => "mix",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SwapAlg> {
+        match s.to_ascii_lowercase().as_str() {
+            "binary-exch" | "binexch" | "bin" => Some(SwapAlg::BinExch),
+            "spread-roll" | "long" | "spreadroll" => Some(SwapAlg::SpreadRoll),
+            "mix" => Some(SwapAlg::Mix),
+            _ => None,
+        }
+    }
+}
+
+/// Panel factorization recursion variant (RFACT; PFACT is analogous and
+/// folded into the same enum — the paper found neither matters much).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Rfact {
+    Left,
+    Crout,
+    Right,
+}
+
+impl Rfact {
+    pub const ALL: [Rfact; 3] = [Rfact::Left, Rfact::Crout, Rfact::Right];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rfact::Left => "left",
+            Rfact::Crout => "crout",
+            Rfact::Right => "right",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rfact> {
+        Rfact::ALL.iter().copied().find(|r| r.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// A full HPL run configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HplConfig {
+    /// Matrix order.
+    pub n: usize,
+    /// Blocking factor.
+    pub nb: usize,
+    /// Process rows.
+    pub p: usize,
+    /// Process columns.
+    pub q: usize,
+    /// Look-ahead depth (0 or 1 supported, as in the paper's runs).
+    pub depth: usize,
+    pub bcast: Bcast,
+    pub swap: SwapAlg,
+    /// Mix swap: panels with `jb <= swap_threshold` use binary-exchange.
+    pub swap_threshold: usize,
+    pub rfact: Rfact,
+    /// Recursion stopping criterion (HPL's NBMIN).
+    pub nbmin: usize,
+}
+
+impl HplConfig {
+    /// The defaults the paper uses on Dahu (§3.3): NB=128, depth 1,
+    /// increasing-2-ring, Crout, binary-exchange.
+    pub fn dahu_default(n: usize, p: usize, q: usize) -> HplConfig {
+        HplConfig {
+            n,
+            nb: 128,
+            p,
+            q,
+            depth: 1,
+            bcast: Bcast::TwoRing,
+            swap: SwapAlg::BinExch,
+            swap_threshold: 64,
+            rfact: Rfact::Crout,
+            nbmin: 8,
+        }
+    }
+
+    /// Table 1: the Stampede@TACC TOP500 run (June 2013).
+    pub fn stampede() -> HplConfig {
+        HplConfig {
+            n: 3_875_000,
+            nb: 1024,
+            p: 77,
+            q: 78,
+            depth: 0,
+            bcast: Bcast::LongM,
+            swap: SwapAlg::BinExch,
+            swap_threshold: 64,
+            rfact: Rfact::Crout,
+            nbmin: 8,
+        }
+    }
+
+    /// Table 1: the Theta@ANL TOP500 run (Nov 2017).
+    pub fn theta() -> HplConfig {
+        HplConfig {
+            n: 8_360_352,
+            nb: 336,
+            p: 32,
+            q: 101,
+            depth: 0,
+            bcast: Bcast::TwoRingM,
+            swap: SwapAlg::BinExch,
+            swap_threshold: 64,
+            rfact: Rfact::Left,
+            nbmin: 8,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 || self.nb == 0 || self.p == 0 || self.q == 0 {
+            return Err("n, nb, p, q must be positive".into());
+        }
+        if self.depth > 1 {
+            return Err("only look-ahead depth 0 and 1 are supported".into());
+        }
+        if self.nbmin == 0 || self.nbmin > self.nb {
+            return Err("nbmin must be in [1, nb]".into());
+        }
+        Ok(())
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.p * self.q
+    }
+
+    /// Number of panel iterations.
+    pub fn nblocks(&self) -> usize {
+        self.n.div_ceil(self.nb)
+    }
+
+    /// Width of panel `j`.
+    pub fn jb(&self, j: usize) -> usize {
+        self.nb.min(self.n - j * self.nb)
+    }
+
+    /// LU flop count used for the GFlop/s metric: 2/3 N^3 + 2 N^2.
+    pub fn flops(&self) -> f64 {
+        let n = self.n as f64;
+        2.0 / 3.0 * n * n * n + 2.0 * n * n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for b in Bcast::ALL {
+            assert_eq!(Bcast::parse(b.name()), Some(b));
+        }
+        for s in SwapAlg::ALL {
+            assert_eq!(SwapAlg::parse(s.name()), Some(s));
+        }
+        for r in Rfact::ALL {
+            assert_eq!(Rfact::parse(r.name()), Some(r));
+        }
+        assert_eq!(Bcast::parse("nope"), None);
+    }
+
+    #[test]
+    fn overlap_capability() {
+        assert!(Bcast::TwoRing.overlaps());
+        assert!(!Bcast::Long.overlaps());
+        assert!(!Bcast::LongM.overlaps());
+    }
+
+    #[test]
+    fn block_math() {
+        let c = HplConfig::dahu_default(1000, 2, 2);
+        assert_eq!(c.nblocks(), 8); // ceil(1000/128)
+        assert_eq!(c.jb(0), 128);
+        assert_eq!(c.jb(7), 1000 - 7 * 128);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn flops_formula() {
+        let c = HplConfig::dahu_default(1000, 1, 1);
+        let n = 1000f64;
+        assert_eq!(c.flops(), 2.0 / 3.0 * n.powi(3) + 2.0 * n * n);
+    }
+
+    #[test]
+    fn table1_presets() {
+        assert_eq!(HplConfig::stampede().nranks(), 6006);
+        assert_eq!(HplConfig::theta().nranks(), 3232);
+        assert!(HplConfig::stampede().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let mut c = HplConfig::dahu_default(1000, 2, 2);
+        c.depth = 3;
+        assert!(c.validate().is_err());
+        c.depth = 0;
+        c.nbmin = 0;
+        assert!(c.validate().is_err());
+    }
+}

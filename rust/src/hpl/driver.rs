@@ -1,0 +1,463 @@
+//! The HPL emulation driver: the per-rank main loop with look-ahead,
+//! plus entry points to run a whole simulation (single pass or the
+//! record→evaluate→replay production pipeline through the XLA runtime).
+
+use std::rc::Rc;
+
+use super::bcast::BcastOp;
+use super::config::HplConfig;
+use super::grid::{local_count, Grid};
+use super::panel::PanelFact;
+use super::swap::swap_bcast;
+use crate::blas::{DgemmModel, DgemmSource, KernelModels, PoolSource, Recorder};
+use crate::engine::Sim;
+use crate::mpi::{CommStats, Ctx, World};
+use crate::network::{NetModel, Network, Topology};
+use crate::runtime::Artifacts;
+
+/// Message-tag layout: `j << 24 | kind << 16 | seq`.
+pub(crate) fn tag(j: usize, kind: u64, seq: u64) -> u64 {
+    debug_assert!(seq < 1 << 16);
+    ((j as u64) << 24) | (kind << 16) | seq
+}
+
+const K_BCAST: u64 = 1;
+const K_FACT: u64 = 2;
+const K_PRESWAP: u64 = 3;
+const K_SWAP: u64 = 4;
+
+/// Outcome of one simulated HPL run.
+#[derive(Clone, Copy, Debug)]
+pub struct HplResult {
+    /// Simulated wall-clock of the factorization.
+    pub seconds: f64,
+    /// (2/3 N^3 + 2 N^2) / seconds / 1e9.
+    pub gflops: f64,
+    pub comm: CommStats,
+    /// Engine events fired (perf diagnostics).
+    pub events: u64,
+    /// Total dgemm-model invocations.
+    pub dgemm_calls: usize,
+}
+
+/// Panel broadcast bytes for row `row` at iteration `j`: the row-local
+/// panel slice plus pivot bookkeeping.
+fn bcast_bytes(cfg: &HplConfig, j: usize, row: usize) -> f64 {
+    let jb = cfg.jb(j);
+    let mp = local_count(cfg.n, cfg.nb, j, row, cfg.p);
+    ((mp * jb + 2 * jb) * 8) as f64
+}
+
+fn make_bcast(cfg: &HplConfig, j: usize, row_group: &[usize], my_col: usize, my_row: usize) -> BcastOp {
+    let root = j % cfg.q;
+    BcastOp::new(
+        cfg.bcast,
+        row_group.to_vec(),
+        my_col,
+        root,
+        bcast_bytes(cfg, j, my_row),
+        tag(j, K_BCAST, 0),
+    )
+}
+
+/// Trailing update of `nq` local columns with panel `j` (swap + dtrsm +
+/// chunked dgemm, polling `bcast_next` between chunks).
+#[allow(clippy::too_many_arguments)]
+async fn update(
+    ctx: &Ctx,
+    models: &KernelModels,
+    cfg: &HplConfig,
+    node: usize,
+    j: usize,
+    col_group: &[usize],
+    my_row: usize,
+    mp: usize,
+    nq: usize,
+    mut bcast_next: Option<&mut BcastOp>,
+) {
+    let jb = cfg.jb(j);
+    if nq > 0 {
+        swap_bcast(
+            ctx,
+            cfg.swap,
+            jb,
+            cfg.swap_threshold,
+            col_group,
+            my_row,
+            tag(j, K_SWAP, 0),
+            (jb * nq * 8) as f64,
+        )
+        .await;
+        ctx.compute(models.dtrsm.of((jb * jb * nq) as f64)).await;
+    }
+    let mut done_cols = 0usize;
+    while done_cols < nq {
+        let c = cfg.nb.min(nq - done_cols);
+        if mp > 0 {
+            let d = models.dgemm.next(ctx.rank, node, j, mp, c, jb);
+            ctx.compute(d).await;
+        }
+        done_cols += c;
+        if let Some(b) = bcast_next.as_deref_mut() {
+            b.poll(ctx).await;
+        }
+    }
+    if nq == 0 {
+        if let Some(b) = bcast_next.as_deref_mut() {
+            b.poll(ctx).await;
+        }
+    }
+}
+
+/// One rank's HPL program (pdgesv with look-ahead depth 0 or 1).
+async fn rank_main(ctx: Ctx, cfg: Rc<HplConfig>, models: KernelModels) {
+    let grid = Grid::new(cfg.p, cfg.q);
+    let my_row = grid.row_of(ctx.rank);
+    let my_col = grid.col_of(ctx.rank);
+    let row_group = grid.row_group(my_row);
+    let col_group = grid.col_group(my_col);
+    let node = ctx.world.node_of(ctx.rank);
+    let nblocks = cfg.nblocks();
+    let mut pending: Option<BcastOp> = None;
+
+    for j in 0..nblocks {
+        let jb = cfg.jb(j);
+        let panel_col = j % cfg.q;
+
+        // ---- acquire panel j ----
+        match pending.take() {
+            Some(mut b) => b.finish(&ctx).await,
+            None => {
+                if my_col == panel_col {
+                    let mp = local_count(cfg.n, cfg.nb, j, my_row, cfg.p);
+                    let mut pf = PanelFact::new(
+                        &ctx,
+                        &models,
+                        &col_group,
+                        my_row,
+                        node,
+                        cfg.nbmin,
+                        cfg.rfact,
+                        tag(j, K_FACT, 0),
+                        jb,
+                        j,
+                    );
+                    pf.run(mp, jb).await;
+                }
+                let mut b = make_bcast(&cfg, j, &row_group, my_col, my_row);
+                b.start(&ctx);
+                b.finish(&ctx).await;
+            }
+        }
+
+        // ---- trailing sizes ----
+        let mp = local_count(cfg.n, cfg.nb, j + 1, my_row, cfg.p);
+        let nq = local_count(cfg.n, cfg.nb, j + 1, my_col, cfg.q);
+
+        let next = j + 1;
+        let lookahead = cfg.depth >= 1 && next < nblocks;
+        if lookahead {
+            let next_col = next % cfg.q;
+            let jb_next = cfg.jb(next);
+            if my_col == next_col {
+                // Pre-update only the next panel's columns...
+                if jb_next > 0 {
+                    swap_bcast(
+                        &ctx,
+                        cfg.swap,
+                        jb,
+                        cfg.swap_threshold,
+                        &col_group,
+                        my_row,
+                        tag(j, K_PRESWAP, 0),
+                        (jb * jb_next * 8) as f64,
+                    )
+                    .await;
+                    ctx.compute(models.dtrsm.of((jb * jb * jb_next) as f64)).await;
+                    if mp > 0 {
+                        let d = models.dgemm.next(ctx.rank, node, j, mp, jb_next, jb);
+                        ctx.compute(d).await;
+                    }
+                }
+                // ...then factor panel j+1 immediately.
+                let mut pf = PanelFact::new(
+                    &ctx,
+                    &models,
+                    &col_group,
+                    my_row,
+                    node,
+                    cfg.nbmin,
+                    cfg.rfact,
+                    tag(next, K_FACT, 0),
+                    jb_next,
+                    next,
+                );
+                pf.run(mp, jb_next).await;
+            }
+            let mut b2 = make_bcast(&cfg, next, &row_group, my_col, my_row);
+            b2.start(&ctx);
+            let nq_rest = if my_col == next_col { nq - jb_next.min(nq) } else { nq };
+            update(
+                &ctx, &models, &cfg, node, j, &col_group, my_row, mp, nq_rest,
+                Some(&mut b2),
+            )
+            .await;
+            pending = Some(b2);
+        } else {
+            update(&ctx, &models, &cfg, node, j, &col_group, my_row, mp, nq, None)
+                .await;
+        }
+    }
+    // Drain a possibly pending broadcast (the last iteration never
+    // leaves one, but keep the invariant explicit).
+    if let Some(mut b) = pending.take() {
+        b.finish(&ctx).await;
+    }
+}
+
+/// Run a single simulation pass with the given dgemm duration source.
+pub fn run_once(
+    cfg: &HplConfig,
+    topo: Topology,
+    model: NetModel,
+    source: Rc<dyn DgemmSource>,
+    ranks_per_node: usize,
+) -> HplResult {
+    cfg.validate().expect("invalid HPL config");
+    let sim = Sim::new();
+    let net = Network::new(sim.clone(), topo, model);
+    let world = World::new(sim.clone(), net, cfg.nranks(), ranks_per_node);
+    let cfg_rc = Rc::new(cfg.clone());
+    let models = KernelModels::default_aux(source);
+    for r in 0..cfg.nranks() {
+        sim.spawn(rank_main(world.ctx(r), cfg_rc.clone(), models.clone()));
+    }
+    let (seconds, stats) = sim.run_with_stats();
+    HplResult {
+        seconds,
+        gflops: cfg.flops() / seconds / 1e9,
+        comm: world.stats(),
+        events: stats.events,
+        dgemm_calls: 0,
+    }
+}
+
+/// Production pipeline: record the (data-independent) dgemm schedule,
+/// evaluate every duration in batch through the XLA artifact, then
+/// replay. `seed` drives the half-normal draws.
+pub fn simulate_with_artifacts(
+    cfg: &HplConfig,
+    topo: &Topology,
+    model: &NetModel,
+    dgemm: &DgemmModel,
+    arts: &Artifacts,
+    ranks_per_node: usize,
+    seed: u64,
+) -> anyhow::Result<HplResult> {
+    // Pass 1: record shapes (mean-only timings; the schedule is
+    // data-independent so any timing works).
+    let recorder = Recorder::new(dgemm.clone(), cfg.nranks());
+    run_once(cfg, topo.clone(), model.clone(), recorder.clone(), ranks_per_node);
+    let (mnk, idx, rank_epoch) = recorder.flatten();
+    let total = mnk.len();
+
+    // Batched stochastic evaluation through PJRT.
+    let mut mu_tab = Vec::with_capacity(dgemm.nodes.len());
+    let mut sg_tab = Vec::with_capacity(dgemm.nodes.len());
+    for c in &dgemm.nodes {
+        let (mu, sg) = c.to_f32_lanes();
+        mu_tab.push(mu);
+        sg_tab.push(sg);
+    }
+    // Node indices recorded are physical node ids; a homogeneous model
+    // (single entry) maps them all to 0.
+    let idx: Vec<i32> = if dgemm.nodes.len() == 1 {
+        vec![0; idx.len()]
+    } else {
+        idx
+    };
+    // One noise draw per (rank, epoch), shared by every call of that
+    // rank's iteration (episodic temporal variability — see provider.rs).
+    let mut z = vec![0f32; total];
+    let mut cache: std::collections::HashMap<(u32, u32), f32> = Default::default();
+    for (zi, &(r, e)) in z.iter_mut().zip(&rank_epoch) {
+        *zi = *cache.entry((r, e)).or_insert_with(|| {
+            crate::blas::provider::epoch_z(seed, r as usize, e as usize) as f32
+        });
+    }
+    let durations = arts.dgemm_durations(&mnk, &idx, &mu_tab, &sg_tab, &z)?;
+
+    // Pass 2: replay with pooled durations.
+    let pool = PoolSource::new(&recorder, &durations);
+    let mut res = run_once(cfg, topo.clone(), model.clone(), pool, ranks_per_node);
+    res.dgemm_calls = total;
+    Ok(res)
+}
+
+/// Pure-Rust convenience used by tests and quick sweeps: sample the
+/// model directly (no artifacts required).
+pub fn simulate_direct(
+    cfg: &HplConfig,
+    topo: &Topology,
+    model: &NetModel,
+    dgemm: &DgemmModel,
+    ranks_per_node: usize,
+    seed: u64,
+) -> HplResult {
+    let source = crate::blas::DirectSource::new(dgemm.clone(), cfg.nranks(), seed);
+    run_once(cfg, topo.clone(), model.clone(), source, ranks_per_node)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{DirectSource, NodeCoef};
+    use crate::hpl::config::{Bcast, Rfact, SwapAlg};
+
+    fn small_cfg(n: usize, p: usize, q: usize) -> HplConfig {
+        HplConfig {
+            n,
+            nb: 32,
+            p,
+            q,
+            depth: 0,
+            bcast: Bcast::Ring,
+            swap: SwapAlg::BinExch,
+            swap_threshold: 64,
+            rfact: Rfact::Crout,
+            nbmin: 8,
+        }
+    }
+
+    fn dgemm_model() -> DgemmModel {
+        DgemmModel::homogeneous(NodeCoef {
+            mu: [1e-11, 0.0, 0.0, 0.0, 5e-7],
+            sigma: [0.0; 5],
+        })
+    }
+
+    fn run(cfg: &HplConfig) -> HplResult {
+        let topo = Topology::star(cfg.nranks(), 12.5e9, 50e9);
+        let src = DirectSource::deterministic(dgemm_model(), cfg.nranks());
+        run_once(cfg, topo, NetModel::ideal(), src, 1)
+    }
+
+    #[test]
+    fn tiny_run_completes_and_times_are_sane() {
+        let cfg = small_cfg(256, 2, 2);
+        let r = run(&cfg);
+        assert!(r.seconds > 0.0 && r.seconds < 10.0, "{}", r.seconds);
+        assert!(r.gflops > 0.0);
+        assert!(r.comm.messages > 0);
+    }
+
+    #[test]
+    fn all_bcasts_complete() {
+        for bcast in Bcast::ALL {
+            let mut cfg = small_cfg(192, 2, 3);
+            cfg.bcast = bcast;
+            let r = run(&cfg);
+            assert!(r.seconds > 0.0, "{bcast:?}");
+        }
+    }
+
+    #[test]
+    fn all_swaps_and_rfacts_complete() {
+        for swap in SwapAlg::ALL {
+            for rfact in Rfact::ALL {
+                let mut cfg = small_cfg(160, 2, 2);
+                cfg.swap = swap;
+                cfg.rfact = rfact;
+                let r = run(&cfg);
+                assert!(r.seconds > 0.0, "{swap:?} {rfact:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn depth1_completes_and_is_not_slower_for_larger_n() {
+        for &(p, q) in &[(2, 2), (2, 3), (1, 4)] {
+            let mut c0 = small_cfg(512, p, q);
+            let mut c1 = c0.clone();
+            c1.depth = 1;
+            let r0 = run(&c0);
+            let r1 = run(&c1);
+            assert!(r1.seconds > 0.0);
+            // Look-ahead should never be catastrophically worse.
+            assert!(
+                r1.seconds < 1.5 * r0.seconds,
+                "depth1 {} vs depth0 {} at {p}x{q}",
+                r1.seconds,
+                r0.seconds
+            );
+            c0.n = 0; // silence unused-mut lints via reuse
+            let _ = c0;
+        }
+    }
+
+    #[test]
+    fn deterministic_replay_same_seed() {
+        let cfg = small_cfg(256, 2, 2);
+        let topo = Topology::star(4, 12.5e9, 50e9);
+        let m = dgemm_model();
+        let a = simulate_direct(&cfg, &topo, &NetModel::ideal(), &m, 1, 7);
+        let b = simulate_direct(&cfg, &topo, &NetModel::ideal(), &m, 1, 7);
+        assert_eq!(a.seconds, b.seconds);
+    }
+
+    #[test]
+    fn stochastic_model_slower_than_deterministic_mean() {
+        // Half-normal noise only adds time on the critical path.
+        let mut cfg = small_cfg(384, 2, 2);
+        cfg.depth = 0;
+        let topo = Topology::star(4, 12.5e9, 50e9);
+        let det = dgemm_model();
+        let mut sto = det.clone();
+        for c in sto.nodes.iter_mut() {
+            c.sigma = [3e-13, 0.0, 0.0, 0.0, 0.0];
+        }
+        let r_det = simulate_direct(&cfg, &topo, &NetModel::ideal(), &det, 1, 1);
+        let r_sto = simulate_direct(&cfg, &topo, &NetModel::ideal(), &sto, 1, 1);
+        assert!(
+            r_sto.seconds > r_det.seconds,
+            "stochastic {} should exceed deterministic {}",
+            r_sto.seconds,
+            r_det.seconds
+        );
+    }
+
+    #[test]
+    fn elongated_geometries_move_more_data() {
+        // Total communication volume ∝ (P+Q)·N²: 1x8 ≫ 2x4. (The *time*
+        // contrast needs a calibrated network and larger N; that is
+        // exercised by the Fig. 7 experiment.)
+        let r_square = run(&small_cfg(512, 2, 4));
+        let r_flat = run(&small_cfg(512, 1, 8));
+        assert!(
+            r_flat.comm.bytes > r_square.comm.bytes,
+            "1x8 {} bytes vs 2x4 {} bytes",
+            r_flat.comm.bytes,
+            r_square.comm.bytes
+        );
+    }
+
+    #[test]
+    fn record_replay_roundtrip_with_direct_pool() {
+        // Record, evaluate durations in Rust (no artifacts), replay:
+        // the replay must complete and visit the same schedule.
+        let cfg = small_cfg(256, 2, 2);
+        let topo = Topology::star(4, 12.5e9, 50e9);
+        let rec = Recorder::new(dgemm_model(), cfg.nranks());
+        run_once(&cfg, topo.clone(), NetModel::ideal(), rec.clone(), 1);
+        let total = rec.total();
+        assert!(total > 0);
+        let (mnk, _idx, _) = rec.flatten();
+        let durs: Vec<f32> = mnk
+            .iter()
+            .map(|p| (1e-11 * p[0] as f64 * p[1] as f64 * p[2] as f64 + 5e-7) as f32)
+            .collect();
+        let pool = PoolSource::new(&rec, &durs);
+        let r = run_once(&cfg, topo, NetModel::ideal(), pool, 1);
+        assert!(r.seconds > 0.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Process grid and two-dimensional block-cyclic distribution math.
+//!
+//! HPL distributes the N x N matrix over a P x Q grid in NB x NB blocks:
+//! block (I, J) lives on process (I mod P, J mod Q). Ranks are laid out
+//! row-major: `rank = row * Q + col` (HPL's default ordering).
+
+/// A P x Q process grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grid {
+    pub p: usize,
+    pub q: usize,
+}
+
+impl Grid {
+    pub fn new(p: usize, q: usize) -> Grid {
+        assert!(p >= 1 && q >= 1);
+        Grid { p, q }
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.p * self.q
+    }
+
+    pub fn rank(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.p && col < self.q);
+        row * self.q + col
+    }
+
+    pub fn row_of(&self, rank: usize) -> usize {
+        rank / self.q
+    }
+
+    pub fn col_of(&self, rank: usize) -> usize {
+        rank % self.q
+    }
+
+    /// Ranks of one process row (Q entries, by column).
+    pub fn row_group(&self, row: usize) -> Vec<usize> {
+        (0..self.q).map(|c| self.rank(row, c)).collect()
+    }
+
+    /// Ranks of one process column (P entries, by row).
+    pub fn col_group(&self, col: usize) -> Vec<usize> {
+        (0..self.p).map(|r| self.rank(r, col)).collect()
+    }
+}
+
+/// Number of blocks `b` in `[first, last)` with `b % nprocs == proc`.
+pub fn count_blocks(first: usize, last: usize, proc: usize, nprocs: usize) -> usize {
+    debug_assert!(proc < nprocs);
+    if last <= first {
+        return 0;
+    }
+    let offset = (proc + nprocs - first % nprocs) % nprocs;
+    let b0 = first + offset;
+    if b0 >= last {
+        0
+    } else {
+        (last - 1 - b0) / nprocs + 1
+    }
+}
+
+/// Number of matrix rows (or columns) owned by `proc` among the global
+/// index range `[first_block * nb, n)` of an N-row matrix distributed in
+/// NB-row blocks over `nprocs` processes.
+pub fn local_count(n: usize, nb: usize, first_block: usize, proc: usize, nprocs: usize) -> usize {
+    let total = n.div_ceil(nb);
+    if first_block >= total {
+        return 0;
+    }
+    let blocks = count_blocks(first_block, total, proc, nprocs);
+    let mut rows = blocks * nb;
+    // The final block may be partial.
+    let last = total - 1;
+    if last >= first_block && last % nprocs == proc {
+        rows = rows - nb + (n - last * nb);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_layout_row_major() {
+        let g = Grid::new(2, 3);
+        assert_eq!(g.rank(0, 0), 0);
+        assert_eq!(g.rank(0, 2), 2);
+        assert_eq!(g.rank(1, 0), 3);
+        assert_eq!(g.row_of(4), 1);
+        assert_eq!(g.col_of(4), 1);
+        assert_eq!(g.row_group(1), vec![3, 4, 5]);
+        assert_eq!(g.col_group(2), vec![2, 5]);
+    }
+
+    #[test]
+    fn count_blocks_basic() {
+        // Blocks 0..10 over 3 procs: proc 0 owns 0,3,6,9.
+        assert_eq!(count_blocks(0, 10, 0, 3), 4);
+        assert_eq!(count_blocks(0, 10, 1, 3), 3);
+        assert_eq!(count_blocks(0, 10, 2, 3), 3);
+        // Starting mid-way.
+        assert_eq!(count_blocks(4, 10, 0, 3), 2); // 6, 9
+        assert_eq!(count_blocks(4, 10, 1, 3), 2); // 4, 7
+        assert_eq!(count_blocks(10, 10, 0, 3), 0);
+        assert_eq!(count_blocks(9, 10, 0, 3), 1);
+    }
+
+    #[test]
+    fn count_blocks_exhaustive_small() {
+        for nprocs in 1..6 {
+            for first in 0..8 {
+                for last in first..12 {
+                    for proc in 0..nprocs {
+                        let brute =
+                            (first..last).filter(|b| b % nprocs == proc).count();
+                        assert_eq!(
+                            count_blocks(first, last, proc, nprocs),
+                            brute,
+                            "f={first} l={last} p={proc}/{nprocs}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_count_partitions_exactly() {
+        // Property: sum over procs == remaining rows, for many shapes.
+        for &(n, nb, nprocs) in &[
+            (1000usize, 128usize, 4usize),
+            (999, 100, 3),
+            (50, 64, 4),
+            (1, 1, 1),
+            (12345, 97, 7),
+        ] {
+            let total = n.div_ceil(nb);
+            for first in 0..total.min(6) {
+                let sum: usize =
+                    (0..nprocs).map(|p| local_count(n, nb, first, p, nprocs)).sum();
+                assert_eq!(sum, n - first * nb, "n={n} nb={nb} first={first}");
+            }
+        }
+    }
+
+    #[test]
+    fn local_count_handles_partial_last_block() {
+        // n=250, nb=100: blocks 0(100), 1(100), 2(50) over 2 procs.
+        assert_eq!(local_count(250, 100, 0, 0, 2), 150); // blocks 0, 2
+        assert_eq!(local_count(250, 100, 0, 1, 2), 100); // block 1
+        assert_eq!(local_count(250, 100, 2, 0, 2), 50);
+        assert_eq!(local_count(250, 100, 2, 1, 2), 0);
+        assert_eq!(local_count(250, 100, 3, 0, 2), 0);
+    }
+
+    #[test]
+    fn local_count_randomized_against_brute_force() {
+        let mut rng = crate::stats::Rng::new(7);
+        for _ in 0..200 {
+            let n = 1 + rng.below(5000);
+            let nb = 1 + rng.below(300);
+            let nprocs = 1 + rng.below(9);
+            let total = n.div_ceil(nb);
+            let first = rng.below(total + 1);
+            let proc = rng.below(nprocs);
+            let mut brute = 0usize;
+            for b in first..total {
+                if b % nprocs == proc {
+                    brute += if b == total - 1 { n - b * nb } else { nb };
+                }
+            }
+            assert_eq!(local_count(n, nb, first, proc, nprocs), brute);
+        }
+    }
+}

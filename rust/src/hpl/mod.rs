@@ -1,0 +1,20 @@
+//! The HPL (High-Performance Linpack) emulation.
+//!
+//! A faithful skeleton of HPL 2.2's `pdgesv`: right-looking LU with row
+//! partial pivoting on a P x Q block-cyclic grid, recursive panel
+//! factorization, six panel-broadcast algorithms, three row-swap
+//! algorithms and look-ahead — with every BLAS call replaced by the
+//! paper's statistical performance models (the `blas` module), exactly
+//! like the paper's macro-substituted HPL running over SMPI (§3.2).
+
+pub mod bcast;
+pub mod config;
+pub mod driver;
+pub mod grid;
+pub mod panel;
+pub mod swap;
+
+pub use bcast::BcastOp;
+pub use config::{Bcast, HplConfig, Rfact, SwapAlg};
+pub use driver::{run_once, simulate_direct, simulate_with_artifacts, HplResult};
+pub use grid::{local_count, Grid};

@@ -1,0 +1,139 @@
+//! Row-swap + U broadcast along a process column (HPL's pdlaswp).
+//!
+//! During the trailing update, the pivot rows must be swapped into place
+//! and the U stripe (jb x nq_local) replicated across the P process rows
+//! of each column. HPL offers binary-exchange (log2 P rounds of full-size
+//! exchanges) and spread-roll (scatter + ring roll: more messages, less
+//! volume per link), plus a threshold mix.
+
+use super::config::SwapAlg;
+use crate::mpi::Ctx;
+
+/// Effective algorithm after threshold resolution.
+pub fn resolve(alg: SwapAlg, jb: usize, threshold: usize) -> SwapAlg {
+    match alg {
+        SwapAlg::Mix => {
+            if jb <= threshold {
+                SwapAlg::BinExch
+            } else {
+                SwapAlg::SpreadRoll
+            }
+        }
+        other => other,
+    }
+}
+
+/// Perform the swap-broadcast for `bytes = jb * nq_local * 8` within the
+/// column group. `group` is the P ranks of my process column, `me_pos`
+/// my row index.
+pub async fn swap_bcast(
+    ctx: &Ctx,
+    alg: SwapAlg,
+    jb: usize,
+    threshold: usize,
+    group: &[usize],
+    me_pos: usize,
+    tag: u64,
+    bytes: f64,
+) {
+    let p = group.len();
+    if p <= 1 || bytes <= 0.0 {
+        return;
+    }
+    match resolve(alg, jb, threshold) {
+        SwapAlg::BinExch => {
+            // ceil(log2 P) rounds of pairwise exchanges of the full
+            // stripe (binary-exchange tree).
+            let rounds = usize::BITS as usize - (p - 1).leading_zeros() as usize;
+            for r in 0..rounds {
+                let partner = me_pos ^ (1 << r);
+                if partner >= p {
+                    continue;
+                }
+                let t = tag + r as u64;
+                let h = ctx.isend(group[partner], t, bytes);
+                ctx.recv(Some(group[partner]), t).await;
+                h.await;
+            }
+        }
+        SwapAlg::SpreadRoll => {
+            // Scatter + ring roll: P-1 rounds of bytes/P, all ranks
+            // sending concurrently (higher parallelism, §2 SWAP).
+            let piece = bytes / p as f64;
+            for r in 0..p - 1 {
+                let next = group[(me_pos + 1) % p];
+                let prev = group[(me_pos + p - 1) % p];
+                let t = tag + r as u64;
+                let h = ctx.isend(next, t, piece);
+                ctx.recv(Some(prev), t).await;
+                h.await;
+            }
+        }
+        SwapAlg::Mix => unreachable!("resolved above"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Sim;
+    use crate::mpi::World;
+    use crate::network::{NetModel, Network, Topology};
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    #[test]
+    fn mix_threshold_resolution() {
+        assert_eq!(resolve(SwapAlg::Mix, 64, 64), SwapAlg::BinExch);
+        assert_eq!(resolve(SwapAlg::Mix, 128, 64), SwapAlg::SpreadRoll);
+        assert_eq!(resolve(SwapAlg::BinExch, 999, 64), SwapAlg::BinExch);
+        assert_eq!(resolve(SwapAlg::SpreadRoll, 1, 64), SwapAlg::SpreadRoll);
+    }
+
+    fn run_swap(p: usize, alg: SwapAlg) -> f64 {
+        let sim = Sim::new();
+        let topo = Topology::star(p, 1e9, 4e9);
+        let net = Network::new(sim.clone(), topo, NetModel::ideal());
+        let w = World::new(sim.clone(), net, p, 1);
+        let group: Vec<usize> = (0..p).collect();
+        let done = Rc::new(Cell::new(0usize));
+        for me in 0..p {
+            let ctx = w.ctx(me);
+            let g = group.clone();
+            let d = done.clone();
+            sim.spawn(async move {
+                swap_bcast(&ctx, alg, 128, 64, &g, me, 1000, 1e7).await;
+                d.set(d.get() + 1);
+            });
+        }
+        let t = sim.run();
+        assert_eq!(done.get(), p);
+        t
+    }
+
+    #[test]
+    fn both_algorithms_complete_for_various_p() {
+        for p in [2, 3, 4, 5, 8, 11] {
+            run_swap(p, SwapAlg::BinExch);
+            run_swap(p, SwapAlg::SpreadRoll);
+        }
+    }
+
+    #[test]
+    fn spread_roll_moves_less_volume_per_rank_for_large_p() {
+        // For P=8 with equal per-message sizes, binexch sends 3 full
+        // stripes per rank vs spread-roll's 7 * (1/8): spread-roll
+        // should finish faster on a contention-free star.
+        let t_bin = run_swap(8, SwapAlg::BinExch);
+        let t_roll = run_swap(8, SwapAlg::SpreadRoll);
+        assert!(
+            t_roll < t_bin,
+            "spread-roll {t_roll} should beat binexch {t_bin} at P=8"
+        );
+    }
+
+    #[test]
+    fn single_rank_is_noop() {
+        run_swap(1, SwapAlg::BinExch);
+    }
+}

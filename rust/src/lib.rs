@@ -1,0 +1,45 @@
+//! # hplsim — simulation-based optimization & sensibility analysis of MPI applications
+//!
+//! Rust reimplementation of the system of Cornebize & Legrand,
+//! *"Simulation-based Optimization and Sensibility Analysis of MPI
+//! Applications: Variability Matters"* (2021): an SMPI-style online
+//! simulator of MPI applications with statistical, variability-aware
+//! models of compute kernels and of the network, an HPL
+//! (High-Performance Linpack) emulation covering the full HPL parameter
+//! space, a hierarchical generative model of node performance, and the
+//! paper's complete validation / sensibility-analysis campaign.
+//!
+//! ## Layering
+//!
+//! * [`engine`] — deterministic virtual-time async executor (the
+//!   discrete-event core).
+//! * [`network`] — flow-level network model: links, routes, max-min fair
+//!   bandwidth sharing, piecewise-linear calibration segments, topologies
+//!   (single switch, 2-level fat-tree, intra-node tier).
+//! * [`mpi`] — simulated MPI: ranks, communicators, point-to-point,
+//!   `Iprobe`, tag matching, eager/rendezvous protocols.
+//! * [`blas`] — statistical compute-kernel models (Eq. 1/2 of the paper)
+//!   and duration pools pre-evaluated through the AOT-compiled XLA
+//!   artifacts.
+//! * [`hpl`] — the HPL emulation: panel factorization, the six panel
+//!   broadcast algorithms, the three row-swap algorithms, look-ahead.
+//! * [`platform`] — cluster specifications, the hidden ground-truth
+//!   testbed ("reality"), the hierarchical generative model, network
+//!   calibration procedures.
+//! * [`calibration`] — synthetic benchmarking campaigns + model fitting.
+//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — experiment registry (one module per paper
+//!   figure/table), thread-pool sweeps, CLI.
+//! * [`stats`] — in-tree RNG, OLS, ANOVA, summaries, JSON (the offline
+//!   crate set has no rand/serde/criterion).
+
+pub mod blas;
+pub mod calibration;
+pub mod coordinator;
+pub mod engine;
+pub mod hpl;
+pub mod mpi;
+pub mod network;
+pub mod platform;
+pub mod runtime;
+pub mod stats;

@@ -1,0 +1,6 @@
+//! `hplsim` binary: CLI front-end over the library (see `coordinator`).
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(hplsim::coordinator::cli::main_with_args(&args));
+}

@@ -1,0 +1,175 @@
+//! Small tree collectives over explicit rank groups.
+//!
+//! HPL implements its own panel broadcasts (see `hpl::bcast`), but panel
+//! factorization needs a pivot all-reduce along the process *column* and
+//! the driver needs a barrier; these are the classic binomial-tree
+//! algorithms every MPI ships.
+//!
+//! All functions are SPMD: every rank of `group` must call the same
+//! function with the same arguments; `me_pos` is the caller's index in
+//! `group`.
+
+use super::Ctx;
+
+/// Binomial-tree broadcast of `bytes` from `group[root_pos]`.
+pub async fn bcast_binomial(
+    ctx: &Ctx,
+    group: &[usize],
+    me_pos: usize,
+    root_pos: usize,
+    tag: u64,
+    bytes: f64,
+) {
+    let n = group.len();
+    debug_assert!(me_pos < n && root_pos < n);
+    if n <= 1 {
+        return;
+    }
+    // Virtual rank relative to the root (MPICH-style formulation).
+    let vr = (me_pos + n - root_pos) % n;
+    let mut mask = 1usize;
+    while mask < n {
+        if vr & mask != 0 {
+            // Receive from my parent (clear my lowest set bit).
+            let parent_vr = vr - mask;
+            let parent = group[(parent_vr + root_pos) % n];
+            ctx.recv(Some(parent), tag).await;
+            break;
+        }
+        mask <<= 1;
+    }
+    // Send to children, larger strides first.
+    mask >>= 1;
+    while mask > 0 {
+        if vr + mask < n {
+            let child = group[(vr + mask + root_pos) % n];
+            ctx.send(child, tag, bytes).await;
+        }
+        mask >>= 1;
+    }
+}
+
+/// Binomial reduce to `group[0]` followed by a binomial broadcast:
+/// an all-reduce of a small payload (HPL's pivot max-loc).
+pub async fn allreduce_tree(ctx: &Ctx, group: &[usize], me_pos: usize, tag: u64, bytes: f64) {
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    // Reduce: mirror image of the binomial broadcast.
+    let vr = me_pos;
+    let mut mask = 1usize;
+    while mask < n {
+        if vr & mask != 0 {
+            let parent = group[vr - mask];
+            ctx.send(parent, tag, bytes).await;
+            break;
+        } else if (vr | mask) < n {
+            let child = group[vr | mask];
+            ctx.recv(Some(child), tag).await;
+        }
+        mask <<= 1;
+    }
+    bcast_binomial(ctx, group, me_pos, 0, tag + 1, bytes).await;
+}
+
+/// Dissemination barrier (log2(n) rounds).
+pub async fn barrier(ctx: &Ctx, group: &[usize], me_pos: usize, tag: u64) {
+    let n = group.len();
+    if n <= 1 {
+        return;
+    }
+    let mut round = 0u64;
+    let mut dist = 1usize;
+    while dist < n {
+        let to = group[(me_pos + dist) % n];
+        let from = group[(me_pos + n - dist % n) % n];
+        let h = ctx.isend(to, tag + round, 1.0);
+        ctx.recv(Some(from), tag + round).await;
+        h.await;
+        dist <<= 1;
+        round += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Sim;
+    use crate::mpi::World;
+    use crate::network::{NetModel, Topology};
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    fn run_group<Fut>(n: usize, f: impl Fn(Ctx, Vec<usize>, usize) -> Fut)
+    where
+        Fut: std::future::Future<Output = ()> + 'static,
+    {
+        let sim = Sim::new();
+        let topo = Topology::star(n, 1e9, 4e9);
+        let net = crate::network::Network::new(sim.clone(), topo, NetModel::ideal());
+        let w = World::new(sim.clone(), net, n, 1);
+        let group: Vec<usize> = (0..n).collect();
+        for r in 0..n {
+            sim.spawn(f(w.ctx(r), group.clone(), r));
+        }
+        sim.run();
+    }
+
+    #[test]
+    fn bcast_reaches_everyone_any_root_any_size() {
+        for n in [1, 2, 3, 5, 8, 13] {
+            for root in [0, n / 2, n - 1] {
+                let count = Rc::new(Cell::new(0usize));
+                let c2 = count.clone();
+                run_group(n, move |ctx, group, me| {
+                    let c = c2.clone();
+                    async move {
+                        bcast_binomial(&ctx, &group, me, root, 77, 1e5).await;
+                        c.set(c.get() + 1);
+                    }
+                });
+                assert_eq!(count.get(), n, "n={n} root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_completes_for_odd_sizes() {
+        for n in [2, 3, 6, 7, 9] {
+            let count = Rc::new(Cell::new(0usize));
+            let c2 = count.clone();
+            run_group(n, move |ctx, group, me| {
+                let c = c2.clone();
+                async move {
+                    allreduce_tree(&ctx, &group, me, 100, 64.0).await;
+                    c.set(c.get() + 1);
+                }
+            });
+            assert_eq!(count.get(), n);
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        // Rank i sleeps i*10ms before the barrier; all must exit at
+        // >= the latest arrival.
+        let times: Rc<std::cell::RefCell<Vec<f64>>> = Default::default();
+        let t2 = times.clone();
+        let n = 6;
+        run_group(n, move |ctx, group, me| {
+            let t = t2.clone();
+            async move {
+                ctx.compute(me as f64 * 0.01).await;
+                barrier(&ctx, &group, me, 500).await;
+                t.borrow_mut().push(ctx.now());
+            }
+        });
+        let ts = times.borrow();
+        assert_eq!(ts.len(), n);
+        let max_arrival = 0.01 * (n - 1) as f64;
+        for &t in ts.iter() {
+            assert!(t >= max_arrival - 1e-9, "exited barrier early: {t}");
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Per-rank mailbox: envelope queue + posted-receive matching.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::task::{Context, Poll, Waker};
+
+use crate::engine::Signal;
+
+/// An arrived (or arriving) message as seen by the receiver.
+#[derive(Clone)]
+pub struct Envelope {
+    pub src: usize,
+    pub tag: u64,
+    pub bytes: f64,
+    /// Set once the payload has fully arrived.
+    pub payload_done: Signal,
+    /// Rendezvous only: the receiver sets this to release the sender.
+    pub rndv_ack: Option<Signal>,
+}
+
+impl std::fmt::Debug for Envelope {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Envelope")
+            .field("src", &self.src)
+            .field("tag", &self.tag)
+            .field("bytes", &self.bytes)
+            .finish()
+    }
+}
+
+struct PendingRecv {
+    src: Option<usize>,
+    tag: u64,
+    slot: Rc<RefCell<RecvSlot>>,
+}
+
+#[derive(Default)]
+struct RecvSlot {
+    env: Option<Envelope>,
+    waker: Option<Waker>,
+}
+
+/// Mailbox for one rank.
+#[derive(Default)]
+pub struct Inbox {
+    /// Envelopes that arrived with no matching posted receive
+    /// ("unexpected messages" in MPI terms), FIFO.
+    arrived: VecDeque<Envelope>,
+    /// Posted receives not yet matched, FIFO.
+    pending: VecDeque<PendingRecv>,
+}
+
+fn matches(src_filter: Option<usize>, tag_filter: u64, env: &Envelope) -> bool {
+    env.tag == tag_filter && src_filter.map_or(true, |s| s == env.src)
+}
+
+impl Inbox {
+    /// Is there a matching arrived envelope? (MPI_Iprobe)
+    pub fn probe(&self, src: Option<usize>, tag: u64) -> bool {
+        self.arrived.iter().any(|e| matches(src, tag, e))
+    }
+
+    /// Envelope delivery: match against a posted receive or queue it.
+    pub fn deliver(&mut self, env: Envelope) {
+        if let Some(pos) = self
+            .pending
+            .iter()
+            .position(|p| matches(p.src, p.tag, &env))
+        {
+            let p = self.pending.remove(pos).unwrap();
+            let mut slot = p.slot.borrow_mut();
+            slot.env = Some(env);
+            if let Some(w) = slot.waker.take() {
+                w.wake();
+            }
+        } else {
+            self.arrived.push_back(env);
+        }
+    }
+
+    /// Post a receive; returns a future resolving to the matched envelope.
+    pub fn post_recv(&mut self, src: Option<usize>, tag: u64) -> RecvFuture {
+        // Fast path: already arrived.
+        if let Some(pos) = self.arrived.iter().position(|e| matches(src, tag, e)) {
+            let env = self.arrived.remove(pos).unwrap();
+            let slot = Rc::new(RefCell::new(RecvSlot { env: Some(env), waker: None }));
+            return RecvFuture { slot };
+        }
+        let slot = Rc::new(RefCell::new(RecvSlot::default()));
+        self.pending.push_back(PendingRecv { src, tag, slot: slot.clone() });
+        RecvFuture { slot }
+    }
+}
+
+/// Future for a posted receive.
+pub struct RecvFuture {
+    slot: Rc<RefCell<RecvSlot>>,
+}
+
+impl Future for RecvFuture {
+    type Output = Envelope;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Envelope> {
+        let mut slot = self.slot.borrow_mut();
+        match slot.env.take() {
+            Some(e) => Poll::Ready(e),
+            None => {
+                slot.waker = Some(cx.waker().clone());
+                Poll::Pending
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(src: usize, tag: u64, bytes: f64) -> Envelope {
+        Envelope {
+            src,
+            tag,
+            bytes,
+            payload_done: Signal::new(),
+            rndv_ack: None,
+        }
+    }
+
+    #[test]
+    fn probe_and_match() {
+        let mut ib = Inbox::default();
+        assert!(!ib.probe(None, 1));
+        ib.deliver(env(3, 1, 10.0));
+        assert!(ib.probe(None, 1));
+        assert!(ib.probe(Some(3), 1));
+        assert!(!ib.probe(Some(2), 1));
+        assert!(!ib.probe(None, 2));
+    }
+
+    #[test]
+    fn unexpected_messages_match_fifo() {
+        let mut ib = Inbox::default();
+        ib.deliver(env(0, 7, 1.0));
+        ib.deliver(env(0, 7, 2.0));
+        let f1 = ib.post_recv(Some(0), 7);
+        let f2 = ib.post_recv(Some(0), 7);
+        // Both resolved immediately, in arrival order.
+        assert_eq!(f1.slot.borrow().env.as_ref().unwrap().bytes, 1.0);
+        assert_eq!(f2.slot.borrow().env.as_ref().unwrap().bytes, 2.0);
+    }
+
+    #[test]
+    fn pending_recvs_matched_in_post_order() {
+        let mut ib = Inbox::default();
+        let f1 = ib.post_recv(None, 5);
+        let f2 = ib.post_recv(None, 5);
+        ib.deliver(env(1, 5, 11.0));
+        assert_eq!(f1.slot.borrow().env.as_ref().unwrap().bytes, 11.0);
+        assert!(f2.slot.borrow().env.is_none());
+    }
+
+    #[test]
+    fn source_filter_respected_for_pending() {
+        let mut ib = Inbox::default();
+        let f_from2 = ib.post_recv(Some(2), 9);
+        ib.deliver(env(1, 9, 1.0)); // must not match the src=2 recv
+        assert!(f_from2.slot.borrow().env.is_none());
+        assert!(ib.probe(Some(1), 9));
+        ib.deliver(env(2, 9, 2.0));
+        assert_eq!(f_from2.slot.borrow().env.as_ref().unwrap().bytes, 2.0);
+    }
+}

@@ -1,0 +1,460 @@
+//! Simulated MPI: ranks, point-to-point with eager/rendezvous
+//! protocols, `Iprobe`, tag matching, and small tree collectives.
+//!
+//! Semantics follow SMPI's modeling of real MPI implementations:
+//!
+//! * **async** (`bytes <= async_threshold`): the send is buffered; the
+//!   sender returns immediately and the payload flows in the background.
+//! * **eager** (`bytes <= rendezvous_threshold`): the sender pushes the
+//!   payload without waiting for the receiver but blocks until the
+//!   transfer completes.
+//! * **rendezvous** (large): the sender announces (RTS envelope), blocks
+//!   until the matching receive is posted, then transfers.
+//!
+//! `Iprobe` sees a message as soon as its *envelope* has arrived
+//! (latency after the send), which is what lets HPL's ring broadcasts
+//! make progress from inside the update loop.
+
+pub mod collectives;
+mod inbox;
+
+pub use inbox::Envelope;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::engine::{JoinHandle, Sim};
+use crate::network::Network;
+use inbox::Inbox;
+
+/// Match-any source marker.
+pub const ANY_SOURCE: Option<usize> = None;
+
+/// Aggregate communication counters (per world).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommStats {
+    pub messages: u64,
+    pub bytes: f64,
+    pub iprobes: u64,
+}
+
+/// A simulated MPI world: rank -> node placement plus mailboxes.
+pub struct World {
+    pub sim: Sim,
+    pub net: Network,
+    nranks: usize,
+    rank_node: Vec<usize>,
+    inboxes: Vec<RefCell<Inbox>>,
+    stats: RefCell<CommStats>,
+    /// Simulated CPU cost of one MPI_Iprobe call.
+    pub iprobe_cost: f64,
+    /// Simulated per-call overhead of send/recv bookkeeping.
+    pub call_overhead: f64,
+}
+
+impl World {
+    /// Build a world placing `ranks_per_node` consecutive ranks on each
+    /// node of the topology.
+    pub fn new(sim: Sim, net: Network, nranks: usize, ranks_per_node: usize) -> Rc<World> {
+        assert!(ranks_per_node >= 1);
+        let nodes = net.topology().nodes();
+        assert!(
+            nranks <= nodes * ranks_per_node,
+            "{nranks} ranks need more than {nodes} x {ranks_per_node} slots"
+        );
+        let rank_node: Vec<usize> = (0..nranks).map(|r| r / ranks_per_node).collect();
+        Rc::new(World {
+            sim,
+            net,
+            nranks,
+            rank_node,
+            inboxes: (0..nranks).map(|_| RefCell::new(Inbox::default())).collect(),
+            stats: RefCell::new(CommStats::default()),
+            iprobe_cost: 1.0e-7,
+            call_overhead: 2.5e-7,
+        })
+    }
+
+    /// Same but with an explicit rank -> node map.
+    pub fn with_placement(sim: Sim, net: Network, rank_node: Vec<usize>) -> Rc<World> {
+        let nranks = rank_node.len();
+        Rc::new(World {
+            sim,
+            net,
+            nranks,
+            rank_node,
+            inboxes: (0..nranks).map(|_| RefCell::new(Inbox::default())).collect(),
+            stats: RefCell::new(CommStats::default()),
+            iprobe_cost: 1.0e-7,
+            call_overhead: 2.5e-7,
+        })
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.rank_node[rank]
+    }
+
+    pub fn stats(&self) -> CommStats {
+        *self.stats.borrow()
+    }
+
+    /// Context for one rank.
+    pub fn ctx(self: &Rc<Self>, rank: usize) -> Ctx {
+        assert!(rank < self.nranks);
+        Ctx { rank, world: self.clone() }
+    }
+}
+
+/// Per-rank handle used by application code (the HPL emulation).
+#[derive(Clone)]
+pub struct Ctx {
+    pub rank: usize,
+    pub world: Rc<World>,
+}
+
+impl Ctx {
+    pub fn nranks(&self) -> usize {
+        self.world.nranks()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.world.sim.now()
+    }
+
+    /// Advance this rank's clock by a compute duration.
+    pub async fn compute(&self, seconds: f64) {
+        if seconds > 0.0 {
+            self.world.sim.sleep(seconds).await;
+        }
+    }
+
+    /// Blocking (in simulated time) send.
+    pub async fn send(&self, dst: usize, tag: u64, bytes: f64) {
+        let w = &self.world;
+        {
+            let mut st = w.stats.borrow_mut();
+            st.messages += 1;
+            st.bytes += bytes;
+        }
+        if w.call_overhead > 0.0 {
+            w.sim.sleep(w.call_overhead).await;
+        }
+        let src_node = w.node_of(self.rank);
+        let dst_node = w.node_of(dst);
+        let class = w.net.class_of(src_node, dst_node);
+        let seg = w.net.model().segment(class, bytes);
+        let model = w.net.model();
+
+        if bytes <= model.async_threshold {
+            // Buffered: fire and forget.
+            let w2 = w.clone();
+            let src = self.rank;
+            w.sim.spawn(async move {
+                deliver(&w2, src, dst, tag, bytes, seg.latency, false).await;
+            });
+        } else if bytes <= model.rendezvous_threshold {
+            // Eager: blocks until the payload has been pushed.
+            deliver(w, self.rank, dst, tag, bytes, seg.latency, false).await;
+        } else {
+            // Rendezvous: RTS envelope, wait for the receiver, transfer.
+            deliver(w, self.rank, dst, tag, bytes, seg.latency, true).await;
+        }
+    }
+
+    /// Non-blocking send.
+    pub fn isend(&self, dst: usize, tag: u64, bytes: f64) -> JoinHandle<()> {
+        let this = self.clone();
+        self.world.sim.spawn_join(async move {
+            this.send(dst, tag, bytes).await;
+        })
+    }
+
+    /// Blocking receive. `src = None` matches any source.
+    pub async fn recv(&self, src: Option<usize>, tag: u64) -> Envelope {
+        let w = &self.world;
+        if w.call_overhead > 0.0 {
+            w.sim.sleep(w.call_overhead).await;
+        }
+        let env = {
+            let fut = {
+                let mut inbox = w.inboxes[self.rank].borrow_mut();
+                inbox.post_recv(src, tag)
+            };
+            fut.await
+        };
+        // Rendezvous: unblock the sender, then wait for the payload.
+        if let Some(ack) = &env.rndv_ack {
+            ack.set();
+        }
+        env.payload_done.wait().await;
+        env
+    }
+
+    /// Non-blocking receive.
+    pub fn irecv(&self, src: Option<usize>, tag: u64) -> JoinHandle<Envelope> {
+        let this = self.clone();
+        self.world.sim.spawn_join(async move { this.recv(src, tag).await })
+    }
+
+    /// Non-blocking probe: true iff a matching envelope has arrived.
+    /// Costs `iprobe_cost` simulated seconds (HPL busy-waits on this).
+    pub async fn iprobe(&self, src: Option<usize>, tag: u64) -> bool {
+        let w = &self.world;
+        w.stats.borrow_mut().iprobes += 1;
+        if w.iprobe_cost > 0.0 {
+            w.sim.sleep(w.iprobe_cost).await;
+        }
+        w.inboxes[self.rank].borrow().probe(src, tag)
+    }
+
+    /// Probe that never consumes time (used internally by collectives).
+    pub fn probe_now(&self, src: Option<usize>, tag: u64) -> bool {
+        self.world.inboxes[self.rank].borrow().probe(src, tag)
+    }
+}
+
+/// Envelope delivery + payload transfer, shared by the three protocols.
+async fn deliver(
+    w: &Rc<World>,
+    src: usize,
+    dst: usize,
+    tag: u64,
+    bytes: f64,
+    env_latency: f64,
+    rendezvous: bool,
+) {
+    let sim = &w.sim;
+    // Envelope travels one latency ahead of the payload.
+    if env_latency > 0.0 {
+        sim.sleep(env_latency).await;
+    }
+    let payload_done = crate::engine::Signal::new();
+    let rndv_ack = rendezvous.then(crate::engine::Signal::new);
+    let env = Envelope {
+        src,
+        tag,
+        bytes,
+        payload_done: payload_done.clone(),
+        rndv_ack: rndv_ack.clone(),
+    };
+    w.inboxes[dst].borrow_mut().deliver(env);
+    if let Some(ack) = rndv_ack {
+        ack.wait().await;
+    }
+    let src_node = w.node_of(src);
+    let dst_node = w.node_of(dst);
+    w.net.transfer(src_node, dst_node, bytes).await;
+    payload_done.set();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{NetModel, Segment, Topology};
+    use std::cell::Cell;
+
+    fn world(nranks: usize, ranks_per_node: usize) -> (Sim, Rc<World>) {
+        let sim = Sim::new();
+        let nodes = nranks.div_ceil(ranks_per_node);
+        let topo = Topology::star(nodes, 1e9, 4e9);
+        let net = Network::new(sim.clone(), topo, NetModel::ideal());
+        let w = World::new(sim.clone(), net, nranks, ranks_per_node);
+        (sim, w)
+    }
+
+    fn world_protocols(nranks: usize) -> (Sim, Rc<World>) {
+        let sim = Sim::new();
+        let topo = Topology::star(nranks, 1e9, 4e9);
+        let seg = |lat| Segment { max_bytes: f64::INFINITY, latency: lat, bw_factor: 1.0 };
+        let model = NetModel::from_segments(vec![seg(1e-7)], vec![seg(1e-6)], 1e4, 1e6);
+        let net = Network::new(sim.clone(), topo, model);
+        let w = World::new(sim.clone(), net, nranks, 1);
+        (sim, w)
+    }
+
+    #[test]
+    fn pingpong_roundtrip() {
+        let (sim, w) = world(2, 1);
+        let c0 = w.ctx(0);
+        let c1 = w.ctx(1);
+        sim.spawn(async move {
+            c0.send(1, 7, 1e6).await;
+            let m = c0.recv(Some(1), 8).await;
+            assert_eq!(m.bytes, 2e6);
+        });
+        sim.spawn(async move {
+            let m = c1.recv(Some(0), 7).await;
+            assert_eq!(m.src, 0);
+            assert_eq!(m.bytes, 1e6);
+            c1.send(0, 8, 2e6).await;
+        });
+        let end = sim.run();
+        // 1e6 B + 2e6 B at 1e9 B/s ≈ 3 ms (+ tiny call overheads).
+        assert!((end - 3e-3).abs() < 1e-4, "end={end}");
+    }
+
+    #[test]
+    fn recv_blocks_until_send() {
+        let (sim, w) = world(2, 1);
+        let c0 = w.ctx(0);
+        let c1 = w.ctx(1);
+        let t_recv = Rc::new(Cell::new(0.0));
+        let t = t_recv.clone();
+        sim.spawn(async move {
+            let _ = c1.recv(Some(0), 1).await;
+            t.set(c1.now());
+        });
+        sim.spawn(async move {
+            c0.compute(0.5).await;
+            c0.send(1, 1, 8.0).await;
+        });
+        sim.run();
+        assert!(t_recv.get() >= 0.5);
+    }
+
+    #[test]
+    fn async_send_does_not_block_sender() {
+        let (sim, w) = world_protocols(2);
+        let c0 = w.ctx(0);
+        let c1 = w.ctx(1);
+        sim.spawn(async move {
+            c0.send(1, 1, 100.0).await; // 100 B <= async threshold
+            // Sender returns at ~call_overhead, far before delivery.
+            assert!(c0.now() < 1e-5, "sender blocked: {}", c0.now());
+        });
+        sim.spawn(async move {
+            c1.compute(0.1).await;
+            let m = c1.recv(Some(0), 1).await;
+            assert_eq!(m.bytes, 100.0);
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn rendezvous_blocks_sender_until_recv_posted() {
+        let (sim, w) = world_protocols(2);
+        let c0 = w.ctx(0);
+        let c1 = w.ctx(1);
+        sim.spawn(async move {
+            c0.send(1, 1, 1e7).await; // > rendezvous threshold
+            // Receiver posts at t=0.25; transfer 1e7/1e9 = 10 ms.
+            assert!(c0.now() >= 0.25 + 0.01 - 1e-6, "t={}", c0.now());
+        });
+        sim.spawn(async move {
+            c1.compute(0.25).await;
+            let m = c1.recv(Some(0), 1).await;
+            assert_eq!(m.bytes, 1e7);
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn iprobe_sees_envelope_before_recv() {
+        let (sim, w) = world_protocols(2);
+        let c0 = w.ctx(0);
+        let c1 = w.ctx(1);
+        sim.spawn(async move {
+            c0.compute(0.1).await;
+            c0.send(1, 42, 5e5).await; // eager
+        });
+        sim.spawn(async move {
+            assert!(!c1.iprobe(Some(0), 42).await);
+            let mut polls = 0u32;
+            while !c1.iprobe(Some(0), 42).await {
+                c1.compute(1e-3).await;
+                polls += 1;
+                assert!(polls < 10_000);
+            }
+            assert!(c1.now() >= 0.1);
+            let m = c1.recv(Some(0), 42).await;
+            assert_eq!(m.bytes, 5e5);
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn tag_and_source_matching() {
+        let (sim, w) = world(3, 1);
+        let c0 = w.ctx(0);
+        let c1 = w.ctx(1);
+        let c2 = w.ctx(2);
+        sim.spawn(async move {
+            c0.send(2, 5, 10.0).await;
+        });
+        sim.spawn(async move {
+            c1.compute(0.01).await;
+            c1.send(2, 6, 20.0).await;
+        });
+        sim.spawn(async move {
+            // Wait for tag 6 first even though tag 5 arrives earlier.
+            let m6 = c2.recv(ANY_SOURCE, 6).await;
+            assert_eq!((m6.src, m6.bytes), (1, 20.0));
+            let m5 = c2.recv(Some(0), 5).await;
+            assert_eq!(m5.bytes, 10.0);
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn messages_match_in_fifo_order_per_tag() {
+        let (sim, w) = world(2, 1);
+        let c0 = w.ctx(0);
+        let c1 = w.ctx(1);
+        sim.spawn(async move {
+            c0.send(1, 9, 1.0).await;
+            c0.send(1, 9, 2.0).await;
+            c0.send(1, 9, 3.0).await;
+        });
+        sim.spawn(async move {
+            for want in [1.0, 2.0, 3.0] {
+                let m = c1.recv(Some(0), 9).await;
+                assert_eq!(m.bytes, want);
+            }
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn intra_node_ranks_share_loopback() {
+        let (sim, w) = world(4, 2); // ranks 0,1 on node 0; 2,3 on node 1
+        assert_eq!(w.node_of(0), 0);
+        assert_eq!(w.node_of(1), 0);
+        assert_eq!(w.node_of(2), 1);
+        let c0 = w.ctx(0);
+        sim.spawn(async move {
+            c0.send(1, 1, 4e9).await;
+            // Loopback at 4e9 B/s -> ~1 s.
+            assert!((c0.now() - 1.0).abs() < 1e-3, "t={}", c0.now());
+        });
+        let c1 = w.ctx(1);
+        sim.spawn(async move {
+            let _ = c1.recv(Some(0), 1).await;
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn stats_count_messages() {
+        let (sim, w) = world(2, 1);
+        let c0 = w.ctx(0);
+        let c1 = w.ctx(1);
+        sim.spawn(async move {
+            for _ in 0..5 {
+                c0.send(1, 1, 100.0).await;
+            }
+        });
+        sim.spawn(async move {
+            for _ in 0..5 {
+                let _ = c1.recv(Some(0), 1).await;
+            }
+        });
+        sim.run();
+        let st = w.stats();
+        assert_eq!(st.messages, 5);
+        assert_eq!(st.bytes, 500.0);
+    }
+}

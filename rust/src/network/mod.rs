@@ -1,0 +1,375 @@
+//! Flow-level network model (SimGrid-style).
+//!
+//! Each ongoing point-to-point transfer is a *flow* crossing a route of
+//! links; contention is resolved by max-min fair bandwidth sharing
+//! (progressive filling), re-solved whenever a flow starts or finishes —
+//! the steady-state fluid model SimGrid validates in [Velho et al. 2013].
+//!
+//! On top of the fluid layer sits a piecewise-linear *protocol model*
+//! ([`pwl::NetModel`]): per message-size segment and per communication
+//! class (intra-node vs inter-node), an added latency and a bandwidth
+//! factor. This is how both the ground-truth platform (which includes
+//! the > 160 MB bandwidth drop of §4.1) and the calibrated models
+//! (optimistic vs improved) are expressed.
+
+pub mod pwl;
+pub mod sharing;
+pub mod topology;
+
+pub use pwl::{NetClass, NetModel, Segment};
+pub use topology::{LinkId, Topology};
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::engine::{Signal, Sim};
+
+/// A flow in progress.
+struct Flow {
+    route: Vec<LinkId>,
+    /// Remaining *effective* bytes (already divided by the bandwidth factor).
+    remaining: f64,
+    /// Current max-min rate in bytes/s.
+    rate: f64,
+    done: Signal,
+}
+
+struct NetState {
+    /// Link capacities in bytes/s (index = LinkId).
+    caps: Vec<f64>,
+    flows: Vec<Option<Flow>>,
+    free: Vec<usize>,
+    /// Last simulated time at which `remaining` was advanced.
+    last: f64,
+    /// Bumped on every reshare; stale completion watchers exit.
+    epoch: u64,
+    active: usize,
+}
+
+/// The network: topology + fluid flows + protocol model.
+#[derive(Clone)]
+pub struct Network {
+    sim: Sim,
+    topo: Rc<Topology>,
+    model: Rc<NetModel>,
+    state: Rc<RefCell<NetState>>,
+}
+
+impl Network {
+    pub fn new(sim: Sim, topo: Topology, model: NetModel) -> Network {
+        let caps = topo.link_capacities().to_vec();
+        Network {
+            sim,
+            topo: Rc::new(topo),
+            model: Rc::new(model),
+            state: Rc::new(RefCell::new(NetState {
+                caps,
+                flows: Vec::new(),
+                free: Vec::new(),
+                last: 0.0,
+                epoch: 0,
+                active: 0,
+            })),
+        }
+    }
+
+    pub fn model(&self) -> &NetModel {
+        &self.model
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Number of flows currently in the fluid system.
+    pub fn active_flows(&self) -> usize {
+        self.state.borrow().active
+    }
+
+    /// Classify a (src, dst) node pair.
+    pub fn class_of(&self, src_node: usize, dst_node: usize) -> NetClass {
+        if src_node == dst_node {
+            NetClass::Local
+        } else {
+            NetClass::Remote
+        }
+    }
+
+    /// Time a transfer of `bytes` would take on an *empty* network
+    /// (used by calibration procedures to build piecewise models).
+    pub fn unloaded_time(&self, src_node: usize, dst_node: usize, bytes: f64) -> f64 {
+        let class = self.class_of(src_node, dst_node);
+        let seg = self.model.segment(class, bytes);
+        let route = self.topo.route(src_node, dst_node);
+        let bw = route
+            .iter()
+            .map(|&l| self.topo.link_capacities()[l as usize])
+            .fold(f64::INFINITY, f64::min);
+        seg.latency + bytes / (bw * seg.bw_factor)
+    }
+
+    /// Perform a transfer; completes (in simulated time) when the last
+    /// byte arrives. The payload crosses the fluid layer, so concurrent
+    /// transfers contend on shared links.
+    pub async fn transfer(&self, src_node: usize, dst_node: usize, bytes: f64) {
+        debug_assert!(bytes >= 0.0);
+        let class = self.class_of(src_node, dst_node);
+        let seg = self.model.segment(class, bytes);
+        if seg.latency > 0.0 {
+            self.sim.sleep(seg.latency).await;
+        }
+        if bytes <= 0.0 {
+            return;
+        }
+        let effective = bytes / seg.bw_factor.max(1e-12);
+        let done = self.start_flow(src_node, dst_node, effective);
+        done.wait().await;
+    }
+
+    /// Insert a flow and return its completion signal.
+    fn start_flow(&self, src_node: usize, dst_node: usize, effective_bytes: f64) -> Signal {
+        let route = self.topo.route(src_node, dst_node);
+        let done = Signal::new();
+        {
+            let mut st = self.state.borrow_mut();
+            let now = self.sim.now();
+            Self::advance(&mut st, now);
+            let flow = Flow {
+                route,
+                remaining: effective_bytes.max(1.0),
+                rate: 0.0,
+                done: done.clone(),
+            };
+            let id = match st.free.pop() {
+                Some(i) => {
+                    st.flows[i] = Some(flow);
+                    i
+                }
+                None => {
+                    st.flows.push(Some(flow));
+                    st.flows.len() - 1
+                }
+            };
+            let _ = id;
+            st.active += 1;
+            Self::reshare(&mut st);
+        }
+        self.schedule_watcher();
+        done
+    }
+
+    /// Advance all flows' remaining bytes to time `now`.
+    fn advance(st: &mut NetState, now: f64) {
+        let dt = now - st.last;
+        if dt > 0.0 {
+            for f in st.flows.iter_mut().flatten() {
+                f.remaining = (f.remaining - f.rate * dt).max(0.0);
+            }
+        }
+        st.last = now;
+    }
+
+    /// Recompute max-min rates; bumps the epoch.
+    fn reshare(st: &mut NetState) {
+        st.epoch += 1;
+        let flows: Vec<usize> = (0..st.flows.len())
+            .filter(|&i| st.flows[i].is_some())
+            .collect();
+        let rates = sharing::max_min_rates(
+            &st.caps,
+            &flows
+                .iter()
+                .map(|&i| st.flows[i].as_ref().unwrap().route.as_slice())
+                .collect::<Vec<_>>(),
+        );
+        for (&i, r) in flows.iter().zip(rates) {
+            st.flows[i].as_mut().unwrap().rate = r;
+        }
+    }
+
+    /// Earliest completion among active flows.
+    fn next_completion(st: &NetState) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for f in st.flows.iter().flatten() {
+            if f.rate > 0.0 {
+                let t = st.last + f.remaining / f.rate;
+                best = Some(match best {
+                    Some(b) => b.min(t),
+                    None => t,
+                });
+            }
+        }
+        best
+    }
+
+    /// Spawn a watcher for the current earliest completion.
+    fn schedule_watcher(&self) {
+        let (epoch, at) = {
+            let st = self.state.borrow();
+            match Self::next_completion(&st) {
+                Some(t) => (st.epoch, t),
+                None => return,
+            }
+        };
+        let net = self.clone();
+        let sim = self.sim.clone();
+        self.sim.spawn(async move {
+            sim.sleep_until(at).await;
+            net.on_tick(epoch);
+        });
+    }
+
+    /// Completion tick: if the epoch is still current, retire finished
+    /// flows and reshare.
+    fn on_tick(&self, epoch: u64) {
+        let mut finished: Vec<Signal> = Vec::new();
+        {
+            let mut st = self.state.borrow_mut();
+            if st.epoch != epoch {
+                return; // stale watcher
+            }
+            let now = self.sim.now();
+            Self::advance(&mut st, now);
+            // Retire flows that are done (tolerance: < 1e-3 effective
+            // bytes, i.e. sub-picosecond at any realistic rate).
+            for i in 0..st.flows.len() {
+                let done = match &st.flows[i] {
+                    Some(f) => f.remaining <= 1e-3,
+                    None => false,
+                };
+                if done {
+                    let f = st.flows[i].take().unwrap();
+                    st.free.push(i);
+                    st.active -= 1;
+                    finished.push(f.done);
+                }
+            }
+            if !finished.is_empty() {
+                Self::reshare(&mut st);
+            }
+        }
+        for s in finished {
+            s.set();
+        }
+        self.schedule_watcher();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn star(nodes: usize, bw: f64) -> Network {
+        let sim = Sim::new();
+        let topo = Topology::star(nodes, bw, 4.0 * bw);
+        Network::new(sim, topo, NetModel::ideal())
+    }
+
+    #[test]
+    fn single_flow_full_bandwidth() {
+        let sim = Sim::new();
+        let topo = Topology::star(4, 1e9, 4e9);
+        let net = Network::new(sim.clone(), topo, NetModel::ideal());
+        let n = net.clone();
+        let h = sim.spawn_join(async move {
+            n.transfer(0, 1, 1e9).await;
+        });
+        let s = sim.clone();
+        sim.spawn(async move {
+            h.await;
+            // 1e9 bytes over 1e9 B/s = 1s.
+            assert!((s.now() - 1.0).abs() < 1e-9, "t={}", s.now());
+        });
+        sim.run();
+    }
+
+    #[test]
+    fn two_flows_share_receiver_link() {
+        let sim = Sim::new();
+        let topo = Topology::star(4, 1e9, 4e9);
+        let net = Network::new(sim.clone(), topo, NetModel::ideal());
+        // Both flows target node 2: its down-link is the bottleneck.
+        for src in [0, 1] {
+            let n = net.clone();
+            let s = sim.clone();
+            sim.spawn(async move {
+                n.transfer(src, 2, 1e9).await;
+                assert!((s.now() - 2.0).abs() < 1e-6, "t={}", s.now());
+            });
+        }
+        sim.run();
+    }
+
+    #[test]
+    fn disjoint_flows_do_not_contend() {
+        let sim = Sim::new();
+        let topo = Topology::star(4, 1e9, 4e9);
+        let net = Network::new(sim.clone(), topo, NetModel::ideal());
+        for (src, dst) in [(0, 1), (2, 3)] {
+            let n = net.clone();
+            let s = sim.clone();
+            sim.spawn(async move {
+                n.transfer(src, dst, 1e9).await;
+                assert!((s.now() - 1.0).abs() < 1e-6, "t={}", s.now());
+            });
+        }
+        sim.run();
+    }
+
+    #[test]
+    fn late_flow_slows_down_early_flow() {
+        let sim = Sim::new();
+        let topo = Topology::star(4, 1e9, 4e9);
+        let net = Network::new(sim.clone(), topo, NetModel::ideal());
+        {
+            let n = net.clone();
+            let s = sim.clone();
+            sim.spawn(async move {
+                n.transfer(0, 2, 1e9).await;
+                // 0.5 s alone (0.5e9 done), 0.5 s at half rate (0.25e9),
+                // then the contender leaves: 0.25e9 at full rate.
+                assert!((s.now() - 1.25).abs() < 1e-6, "t={}", s.now());
+            });
+        }
+        {
+            let n = net.clone();
+            let s = sim.clone();
+            sim.spawn(async move {
+                s.sleep(0.5).await;
+                n.transfer(1, 2, 0.25e9).await;
+                // Shares at 0.5e9 B/s: 0.25e9 bytes -> 0.5s -> ends at 1.0s.
+                assert!((s.now() - 1.0).abs() < 1e-6, "t={}", s.now());
+            });
+        }
+        sim.run();
+    }
+
+    #[test]
+    fn intra_node_uses_loopback() {
+        let net = star(2, 1e9);
+        assert_eq!(net.class_of(0, 0), NetClass::Local);
+        assert_eq!(net.class_of(0, 1), NetClass::Remote);
+        // Loopback at 4x bandwidth.
+        let t_local = net.unloaded_time(0, 0, 1e9);
+        let t_remote = net.unloaded_time(0, 1, 1e9);
+        assert!(t_local < t_remote);
+    }
+
+    #[test]
+    fn zero_byte_transfer_costs_latency_only() {
+        let sim = Sim::new();
+        let topo = Topology::star(2, 1e9, 4e9);
+        let mut model = NetModel::ideal();
+        model.classes.insert(
+            NetClass::Remote,
+            vec![Segment { max_bytes: f64::INFINITY, latency: 1e-5, bw_factor: 1.0 }],
+        );
+        let net = Network::new(sim.clone(), topo, model);
+        let s = sim.clone();
+        sim.spawn(async move {
+            net.transfer(0, 1, 0.0).await;
+            assert!((s.now() - 1e-5).abs() < 1e-12);
+        });
+        sim.run();
+    }
+}

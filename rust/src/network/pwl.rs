@@ -1,0 +1,124 @@
+//! Piecewise-linear protocol model (SMPI-style "smpi/bw-factor" and
+//! "smpi/lat-factor" generalization).
+//!
+//! A [`NetModel`] maps a communication class (intra-node vs inter-node)
+//! and a message size to a [`Segment`]: an additive latency and a
+//! multiplicative bandwidth factor. Protocol thresholds (async, eager,
+//! rendezvous) live here too, because they are part of what a network
+//! calibration estimates.
+
+use std::collections::BTreeMap;
+
+/// Communication class.
+#[derive(Clone, Copy, Debug, Eq, Hash, Ord, PartialEq, PartialOrd)]
+pub enum NetClass {
+    /// Same node (shared memory).
+    Local,
+    /// Different nodes (through the interconnect).
+    Remote,
+}
+
+/// One piece of the piecewise model: applies to messages of size
+/// `<= max_bytes` (pieces are sorted; the first matching piece wins).
+#[derive(Clone, Copy, Debug)]
+pub struct Segment {
+    pub max_bytes: f64,
+    /// Additive per-message latency in seconds.
+    pub latency: f64,
+    /// Multiplicative factor on link bandwidth (1.0 = nominal; the
+    /// > 160 MB Infiniband DMA-locking drop of §4.1 is a factor < 1).
+    pub bw_factor: f64,
+}
+
+/// Piecewise-linear protocol model per class + protocol thresholds.
+#[derive(Clone, Debug)]
+pub struct NetModel {
+    pub classes: BTreeMap<NetClass, Vec<Segment>>,
+    /// Below this size the send is buffered: the sender does not block.
+    pub async_threshold: f64,
+    /// Above this size the transfer uses the rendezvous protocol: the
+    /// sender blocks until the receiver posts the matching receive.
+    pub rendezvous_threshold: f64,
+}
+
+impl NetModel {
+    /// No latency, nominal bandwidth — used by unit tests.
+    pub fn ideal() -> NetModel {
+        let seg = vec![Segment { max_bytes: f64::INFINITY, latency: 0.0, bw_factor: 1.0 }];
+        let mut classes = BTreeMap::new();
+        classes.insert(NetClass::Local, seg.clone());
+        classes.insert(NetClass::Remote, seg);
+        NetModel {
+            classes,
+            async_threshold: 0.0,
+            rendezvous_threshold: f64::INFINITY,
+        }
+    }
+
+    /// Look up the applicable segment for a message.
+    pub fn segment(&self, class: NetClass, bytes: f64) -> Segment {
+        let segs = self
+            .classes
+            .get(&class)
+            .unwrap_or_else(|| &self.classes[&NetClass::Remote]);
+        for s in segs {
+            if bytes <= s.max_bytes {
+                return *s;
+            }
+        }
+        *segs.last().expect("model has at least one segment")
+    }
+
+    /// Build a model from (size, latency, bw_factor) breakpoints.
+    pub fn from_segments(
+        local: Vec<Segment>,
+        remote: Vec<Segment>,
+        async_threshold: f64,
+        rendezvous_threshold: f64,
+    ) -> NetModel {
+        assert!(!local.is_empty() && !remote.is_empty());
+        let mut classes = BTreeMap::new();
+        classes.insert(NetClass::Local, local);
+        classes.insert(NetClass::Remote, remote);
+        NetModel { classes, async_threshold, rendezvous_threshold }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_lookup_picks_first_match() {
+        let m = NetModel::from_segments(
+            vec![Segment { max_bytes: f64::INFINITY, latency: 1e-7, bw_factor: 1.0 }],
+            vec![
+                Segment { max_bytes: 1e3, latency: 1e-6, bw_factor: 0.5 },
+                Segment { max_bytes: 1e6, latency: 2e-6, bw_factor: 0.9 },
+                Segment { max_bytes: f64::INFINITY, latency: 4e-6, bw_factor: 1.0 },
+            ],
+            64.0,
+            65536.0,
+        );
+        assert_eq!(m.segment(NetClass::Remote, 500.0).bw_factor, 0.5);
+        assert_eq!(m.segment(NetClass::Remote, 5e5).bw_factor, 0.9);
+        assert_eq!(m.segment(NetClass::Remote, 5e8).bw_factor, 1.0);
+        assert_eq!(m.segment(NetClass::Local, 5e8).latency, 1e-7);
+    }
+
+    #[test]
+    fn boundary_is_inclusive() {
+        let m = NetModel::from_segments(
+            vec![Segment { max_bytes: f64::INFINITY, latency: 0.0, bw_factor: 1.0 }],
+            vec![
+                Segment { max_bytes: 1e3, latency: 1e-6, bw_factor: 0.5 },
+                Segment { max_bytes: f64::INFINITY, latency: 0.0, bw_factor: 1.0 },
+            ],
+            0.0,
+            f64::INFINITY,
+        );
+        assert_eq!(m.segment(NetClass::Remote, 1e3).bw_factor, 0.5);
+        assert_eq!(m.segment(NetClass::Remote, 1e3 + 1.0).bw_factor, 1.0);
+    }
+}

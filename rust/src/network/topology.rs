@@ -1,0 +1,201 @@
+//! Physical topologies: single-switch star (the Dahu cluster) and a
+//! parametric two-level fat-tree (the §5.4 tapering study), both with a
+//! per-node loopback tier for intra-node communication.
+
+/// Link identifier (index into the capacity vector).
+pub type LinkId = u32;
+
+/// A physical topology: a set of links plus a routing function.
+#[derive(Clone, Debug)]
+pub enum Topology {
+    /// All nodes attached to one non-blocking switch.
+    /// Links: per node `i`: up = 3i, down = 3i+1, loopback = 3i+2.
+    Star {
+        nodes: usize,
+        caps: Vec<f64>,
+    },
+    /// Two-level fat-tree `(2; down_leaf, leaves; 1, tops; 1, para)`:
+    /// `leaves` leaf switches each serving `down_leaf` nodes, `tops` top
+    /// switches, `para` parallel up-links per (leaf, top) pair.
+    ///
+    /// Link layout:
+    ///   per node i: up = 3i, down = 3i+1, loopback = 3i+2   (node tier)
+    ///   then per (leaf l, top t, k < para): two links (up, down).
+    FatTree {
+        nodes: usize,
+        down_leaf: usize,
+        leaves: usize,
+        tops: usize,
+        para: usize,
+        caps: Vec<f64>,
+    },
+}
+
+impl Topology {
+    /// Star topology: `node_bw` on every up/down link, `loop_bw` on the
+    /// intra-node loopback.
+    pub fn star(nodes: usize, node_bw: f64, loop_bw: f64) -> Topology {
+        let mut caps = Vec::with_capacity(3 * nodes);
+        for _ in 0..nodes {
+            caps.push(node_bw); // up
+            caps.push(node_bw); // down
+            caps.push(loop_bw); // loopback
+        }
+        Topology::Star { nodes, caps }
+    }
+
+    /// Two-level fat-tree. `tops` is the number of active top-level
+    /// switches (the §5.4 experiment deactivates them one by one).
+    pub fn fat_tree(
+        down_leaf: usize,
+        leaves: usize,
+        tops: usize,
+        para: usize,
+        node_bw: f64,
+        trunk_bw: f64,
+        loop_bw: f64,
+    ) -> Topology {
+        assert!(tops >= 1 && para >= 1);
+        let nodes = down_leaf * leaves;
+        let mut caps = Vec::new();
+        for _ in 0..nodes {
+            caps.push(node_bw);
+            caps.push(node_bw);
+            caps.push(loop_bw);
+        }
+        // Trunk links: for each leaf, top, parallel k: up and down.
+        for _ in 0..leaves * tops * para {
+            caps.push(trunk_bw); // up
+            caps.push(trunk_bw); // down
+        }
+        Topology::FatTree { nodes, down_leaf, leaves, tops, para, caps }
+    }
+
+    pub fn nodes(&self) -> usize {
+        match self {
+            Topology::Star { nodes, .. } => *nodes,
+            Topology::FatTree { nodes, .. } => *nodes,
+        }
+    }
+
+    /// Capacities indexed by `LinkId`.
+    pub fn link_capacities(&self) -> &[f64] {
+        match self {
+            Topology::Star { caps, .. } => caps,
+            Topology::FatTree { caps, .. } => caps,
+        }
+    }
+
+    /// Route between two nodes (list of links crossed, in order).
+    pub fn route(&self, src: usize, dst: usize) -> Vec<LinkId> {
+        if src == dst {
+            // Intra-node: loopback only.
+            return vec![(3 * src + 2) as LinkId];
+        }
+        match self {
+            Topology::Star { .. } => {
+                vec![(3 * src) as LinkId, (3 * dst + 1) as LinkId]
+            }
+            Topology::FatTree { down_leaf, leaves: _, tops, para, .. } => {
+                let src_leaf = src / down_leaf;
+                let dst_leaf = dst / down_leaf;
+                if src_leaf == dst_leaf {
+                    // Stays under one leaf switch (non-blocking).
+                    return vec![(3 * src) as LinkId, (3 * dst + 1) as LinkId];
+                }
+                // Deterministic per-pair lane choice (ECMP-style hash).
+                // A strong mix avoids harmonic collisions between HPL's
+                // highly structured communication patterns and
+                // power-of-two lane counts.
+                let lanes = tops * para;
+                let mut h = (src as u64) << 32 | dst as u64;
+                h = h.wrapping_add(0x9e37_79b9_7f4a_7c15);
+                h = (h ^ (h >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+                h = (h ^ (h >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+                h ^= h >> 31;
+                let lane = (h % lanes as u64) as usize;
+                let top = lane / para;
+                let k = lane % para;
+                let trunk_base = 3 * self.nodes();
+                let up_idx = trunk_base + 2 * ((src_leaf * tops + top) * para + k);
+                let down_idx = trunk_base + 2 * ((dst_leaf * tops + top) * para + k) + 1;
+                vec![
+                    (3 * src) as LinkId,
+                    up_idx as LinkId,
+                    down_idx as LinkId,
+                    (3 * dst + 1) as LinkId,
+                ]
+            }
+        }
+    }
+
+    /// Number of distinct trunk lanes (for tests / diagnostics).
+    pub fn trunk_lanes(&self) -> usize {
+        match self {
+            Topology::Star { .. } => 0,
+            Topology::FatTree { tops, para, .. } => tops * para,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn star_routes() {
+        let t = Topology::star(4, 1e9, 4e9);
+        assert_eq!(t.route(1, 3), vec![3, 10]);
+        assert_eq!(t.route(2, 2), vec![8]);
+        assert_eq!(t.link_capacities().len(), 12);
+    }
+
+    #[test]
+    fn fat_tree_shape() {
+        // Paper's (2; 32, 8; 1, N; 1, 8) with N = 2: 256 nodes.
+        let t = Topology::fat_tree(32, 8, 2, 8, 1e9, 1e9, 4e9);
+        assert_eq!(t.nodes(), 256);
+        assert_eq!(t.trunk_lanes(), 16);
+        // 3 links per node + 2 per (leaf, top, parallel).
+        assert_eq!(t.link_capacities().len(), 3 * 256 + 2 * 8 * 2 * 8);
+    }
+
+    #[test]
+    fn fat_tree_same_leaf_avoids_trunk() {
+        let t = Topology::fat_tree(32, 8, 2, 8, 1e9, 1e9, 4e9);
+        let r = t.route(0, 31); // same leaf
+        assert_eq!(r.len(), 2);
+        let r = t.route(0, 32); // different leaves
+        assert_eq!(r.len(), 4);
+        let trunk_base = 3 * 256;
+        assert!(r[1] as usize >= trunk_base && r[2] as usize >= trunk_base);
+    }
+
+    #[test]
+    fn fat_tree_routes_valid_and_spread() {
+        let t = Topology::fat_tree(32, 8, 4, 8, 1e9, 1e9, 4e9);
+        let ncaps = t.link_capacities().len();
+        let mut used = std::collections::HashSet::new();
+        for src in (0..256).step_by(7) {
+            for dst in (0..256).step_by(11) {
+                let r = t.route(src, dst);
+                for &l in &r {
+                    assert!((l as usize) < ncaps, "link out of range");
+                }
+                if src / 32 != dst / 32 {
+                    used.insert(r[1]);
+                }
+            }
+        }
+        // D-mod-k routing should spread across many distinct up-links.
+        assert!(used.len() > 8, "only {} trunk lanes used", used.len());
+    }
+
+    #[test]
+    fn fewer_tops_fewer_lanes() {
+        let t1 = Topology::fat_tree(32, 8, 1, 8, 1e9, 1e9, 4e9);
+        let t4 = Topology::fat_tree(32, 8, 4, 8, 1e9, 1e9, 4e9);
+        assert_eq!(t1.trunk_lanes(), 8);
+        assert_eq!(t4.trunk_lanes(), 32);
+    }
+}

@@ -1,0 +1,325 @@
+//! The hierarchical generative model of node performance (§5.1, Fig. 9):
+//!
+//! ```text
+//! mu_p     ~ N(mu, Sigma_S)        (spatial variability)
+//! mu_{p,d} ~ N(mu_p, Sigma_T)      (day-to-day variability)
+//! dgemm    ~ H(alpha MNK + beta, gamma MNK)   (short-term, Eq. 2)
+//! ```
+//!
+//! Fitting is by moment matching (the paper's choice given plentiful
+//! measurements); a two-component mixture handles the multimodal
+//! populations of Fig. 11.
+
+use crate::blas::{DgemmModel, NodeCoef};
+use crate::stats::{Matrix, Rng};
+
+/// Fitted hierarchical model over (alpha, beta, gamma) vectors.
+#[derive(Clone, Debug)]
+pub struct Hierarchical {
+    /// Grand mean `mu`.
+    pub mu: [f64; 3],
+    /// Between-node covariance `Sigma_S`.
+    pub sigma_s: Matrix,
+    /// Within-node (day-to-day) covariance `Sigma_T` (pooled).
+    pub sigma_t: Matrix,
+    /// Per observed node: fitted long-run means `mu_p`.
+    pub node_mu: Vec<[f64; 3]>,
+}
+
+fn mean3(xs: &[[f64; 3]]) -> [f64; 3] {
+    let n = xs.len().max(1) as f64;
+    let mut m = [0.0; 3];
+    for x in xs {
+        for i in 0..3 {
+            m[i] += x[i] / n;
+        }
+    }
+    m
+}
+
+fn cov3(xs: &[[f64; 3]], mean: &[f64; 3]) -> Matrix {
+    let mut c = Matrix::zeros(3, 3);
+    if xs.len() < 2 {
+        return c;
+    }
+    let denom = (xs.len() - 1) as f64;
+    for x in xs {
+        for i in 0..3 {
+            for j in 0..3 {
+                c[(i, j)] += (x[i] - mean[i]) * (x[j] - mean[j]) / denom;
+            }
+        }
+    }
+    c
+}
+
+/// Sample `N(mean, cov)`.
+///
+/// The three components live on wildly different scales (alpha ~1e-11,
+/// beta ~1e-7, gamma ~1e-12), so the Cholesky is taken on the
+/// *correlation* matrix — a scale-free ridge there cannot distort any
+/// component — and the draws are rescaled by the per-component sds.
+fn sample_mvn(mean: &[f64; 3], cov: &Matrix, rng: &mut Rng) -> [f64; 3] {
+    let mut d = [0.0f64; 3];
+    for (i, di) in d.iter_mut().enumerate() {
+        *di = cov[(i, i)].max(0.0).sqrt();
+    }
+    let mut corr = Matrix::eye(3);
+    for i in 0..3 {
+        for j in 0..3 {
+            if i != j && d[i] > 0.0 && d[j] > 0.0 {
+                corr[(i, j)] = (cov[(i, j)] / (d[i] * d[j])).clamp(-0.999, 0.999);
+            }
+        }
+        corr[(i, i)] = 1.0 + 1e-6;
+    }
+    let l = corr.cholesky().expect("correlation matrix SPD after ridge");
+    let z = [rng.normal(), rng.normal(), rng.normal()];
+    let mut out = *mean;
+    for i in 0..3 {
+        let mut y = 0.0;
+        for j in 0..=i {
+            y += l[(i, j)] * z[j];
+        }
+        out[i] += d[i] * y;
+    }
+    out
+}
+
+impl Hierarchical {
+    /// Moment-matching fit from per-(node, day) linear-model coefficients
+    /// (`data[node][day] = (alpha, beta, gamma)`).
+    pub fn fit(data: &[Vec<[f64; 3]>]) -> Hierarchical {
+        assert!(!data.is_empty());
+        let node_mu: Vec<[f64; 3]> = data.iter().map(|d| mean3(d)).collect();
+        // Pooled within-node covariance.
+        let mut sigma_t = Matrix::zeros(3, 3);
+        let mut dof = 0usize;
+        for (p, days) in data.iter().enumerate() {
+            if days.len() < 2 {
+                continue;
+            }
+            let c = cov3(days, &node_mu[p]);
+            let w = days.len() - 1;
+            dof += w;
+            for i in 0..3 {
+                for j in 0..3 {
+                    sigma_t[(i, j)] += c[(i, j)] * w as f64;
+                }
+            }
+        }
+        if dof > 0 {
+            for v in sigma_t.data.iter_mut() {
+                *v /= dof as f64;
+            }
+        }
+        let mu = mean3(&node_mu);
+        let sigma_s = cov3(&node_mu, &mu);
+        Hierarchical { mu, sigma_s, sigma_t, node_mu }
+    }
+
+    /// Sample a hypothetical cluster of `nodes` nodes: `mu_p` draws.
+    pub fn sample_cluster(&self, nodes: usize, rng: &mut Rng) -> Vec<[f64; 3]> {
+        (0..nodes)
+            .map(|_| {
+                let mut c = sample_mvn(&self.mu, &self.sigma_s, rng);
+                c[0] = c[0].max(0.1 * self.mu[0]);
+                c[1] = c[1].max(0.0);
+                c[2] = c[2].max(0.0);
+                c
+            })
+            .collect()
+    }
+
+    /// Sample the day realization for a sampled cluster.
+    pub fn sample_day(&self, cluster: &[[f64; 3]], rng: &mut Rng) -> Vec<[f64; 3]> {
+        cluster
+            .iter()
+            .map(|mu_p| {
+                let mut c = sample_mvn(mu_p, &self.sigma_t, rng);
+                c[0] = c[0].max(0.1 * self.mu[0]);
+                c[1] = c[1].max(0.0);
+                c[2] = c[2].max(0.0);
+                c
+            })
+            .collect()
+    }
+}
+
+/// Convert (alpha, beta, gamma) vectors to the dgemm model.
+/// `gamma_override`: when set, forces `gamma = cv * alpha` — the §5.2
+/// knob controlling temporal variability.
+pub fn model_from_linear(coeffs: &[[f64; 3]], gamma_cv: Option<f64>) -> DgemmModel {
+    DgemmModel {
+        nodes: coeffs
+            .iter()
+            .map(|c| {
+                let gamma = match gamma_cv {
+                    Some(cv) => cv * c[0],
+                    None => c[2],
+                };
+                NodeCoef {
+                    mu: [c[0], 0.0, 0.0, 0.0, c[1]],
+                    sigma: [gamma, 0.0, 0.0, 0.0, 0.0],
+                }
+            })
+            .collect(),
+    }
+}
+
+/// Two-component Gaussian mixture over node means (Fig. 11's bimodal
+/// population), fit by a small k-means-style split on alpha followed by
+/// per-component moment matching.
+#[derive(Clone, Debug)]
+pub struct Mixture {
+    pub weights: [f64; 2],
+    pub means: [[f64; 3]; 2],
+    pub covs: [Matrix; 2],
+    /// Shared day-to-day covariance.
+    pub sigma_t: Matrix,
+}
+
+impl Mixture {
+    pub fn fit(h: &Hierarchical) -> Mixture {
+        let xs = &h.node_mu;
+        assert!(xs.len() >= 2);
+        // 1-D 2-means on alpha.
+        let mut c0 = xs.iter().map(|x| x[0]).fold(f64::INFINITY, f64::min);
+        let mut c1 = xs.iter().map(|x| x[0]).fold(f64::NEG_INFINITY, f64::max);
+        let mut assign = vec![0usize; xs.len()];
+        for _ in 0..32 {
+            for (i, x) in xs.iter().enumerate() {
+                assign[i] = usize::from((x[0] - c0).abs() > (x[0] - c1).abs());
+            }
+            let (mut s0, mut n0, mut s1, mut n1) = (0.0, 0usize, 0.0, 0usize);
+            for (i, x) in xs.iter().enumerate() {
+                if assign[i] == 0 {
+                    s0 += x[0];
+                    n0 += 1;
+                } else {
+                    s1 += x[0];
+                    n1 += 1;
+                }
+            }
+            if n0 == 0 || n1 == 0 {
+                break;
+            }
+            c0 = s0 / n0 as f64;
+            c1 = s1 / n1 as f64;
+        }
+        let group = |g: usize| -> Vec<[f64; 3]> {
+            xs.iter()
+                .zip(&assign)
+                .filter(|(_, &a)| a == g)
+                .map(|(x, _)| *x)
+                .collect()
+        };
+        let (g0, g1) = (group(0), group(1));
+        let (m0, m1) = (mean3(&g0), mean3(&g1));
+        Mixture {
+            weights: [
+                g0.len() as f64 / xs.len() as f64,
+                g1.len() as f64 / xs.len() as f64,
+            ],
+            means: [m0, m1],
+            covs: [cov3(&g0, &m0), cov3(&g1, &m1)],
+            sigma_t: h.sigma_t.clone(),
+        }
+    }
+
+    /// Sample a hypothetical multimodal cluster.
+    pub fn sample_cluster(&self, nodes: usize, rng: &mut Rng) -> Vec<[f64; 3]> {
+        (0..nodes)
+            .map(|_| {
+                let g = usize::from(rng.uniform() > self.weights[0]);
+                let mut c = sample_mvn(&self.means[g], &self.covs[g], rng);
+                c[0] = c[0].max(0.1 * self.means[0][0].min(self.means[1][0]));
+                c[1] = c[1].max(0.0);
+                c[2] = c[2].max(0.0);
+                c
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::groundtruth::{GroundTruth, Scenario, ALPHA0};
+
+    fn observed(gt: &GroundTruth, days: u64) -> Vec<Vec<[f64; 3]>> {
+        (0..gt.nodes)
+            .map(|p| (0..days).map(|d| gt.day_coeffs(d)[p]).collect())
+            .collect()
+    }
+
+    #[test]
+    fn fit_recovers_grand_mean() {
+        let gt = GroundTruth::generate(32, Scenario::Normal, 11);
+        let h = Hierarchical::fit(&observed(&gt, 40));
+        assert!((h.mu[0] / ALPHA0 - 1.0).abs() < 0.05, "{}", h.mu[0]);
+        // Spatial sd of alpha ~1.5%.
+        let sd = h.sigma_s[(0, 0)].sqrt() / h.mu[0];
+        assert!(sd > 0.005 && sd < 0.04, "spatial sd {sd}");
+    }
+
+    #[test]
+    fn fit_separates_spatial_from_temporal() {
+        let gt = GroundTruth::generate(32, Scenario::Normal, 13);
+        let h = Hierarchical::fit(&observed(&gt, 40));
+        // Temporal sd on alpha was generated at 0.8% of ALPHA0.
+        let sd_t = h.sigma_t[(0, 0)].sqrt() / ALPHA0;
+        assert!((sd_t - 0.008).abs() < 0.004, "temporal sd {sd_t}");
+        // And spatial variability must exceed temporal (1.5% vs 0.8%).
+        assert!(h.sigma_s[(0, 0)] > h.sigma_t[(0, 0)]);
+    }
+
+    #[test]
+    fn synthetic_cluster_matches_observed_spread() {
+        let gt = GroundTruth::generate(32, Scenario::Normal, 17);
+        let h = Hierarchical::fit(&observed(&gt, 30));
+        let mut rng = Rng::new(5);
+        let synth = h.sample_cluster(512, &mut rng);
+        let m = mean3(&synth);
+        assert!((m[0] / h.mu[0] - 1.0).abs() < 0.02);
+        let sd: f64 = (synth.iter().map(|x| (x[0] - m[0]) * (x[0] - m[0])).sum::<f64>()
+            / 511.0)
+            .sqrt();
+        let want = h.sigma_s[(0, 0)].sqrt();
+        assert!((sd / want - 1.0).abs() < 0.25, "sd {sd} want {want}");
+    }
+
+    #[test]
+    fn mixture_finds_the_slow_mode() {
+        let gt = GroundTruth::generate(32, Scenario::Cooling, 19);
+        let h = Hierarchical::fit(&observed(&gt, 20));
+        let mix = Mixture::fit(&h);
+        // One component around ALPHA0, the other ~10% above.
+        let mut alphas = [mix.means[0][0], mix.means[1][0]];
+        alphas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(alphas[1] / alphas[0] > 1.03, "{alphas:?}");
+        // The slow component is the minority (the cooled nodes plus
+        // whatever slow tail of the healthy population 2-means grabs).
+        let wmin = mix.weights[0].min(mix.weights[1]);
+        assert!(wmin >= 4.0 / 32.0 - 1e-9 && wmin < 0.5, "{:?}", mix.weights);
+        // All four cooled nodes must land in the slow component.
+        let slow = if mix.means[0][0] > mix.means[1][0] { 0 } else { 1 };
+        let thr = (mix.means[0][0] + mix.means[1][0]) / 2.0;
+        for p in 1..=4 {
+            let a = h.node_mu[p][0];
+            let in_slow = if slow == 0 { a > thr } else { a > thr };
+            assert!(in_slow, "cooled node {p} not in slow mode");
+        }
+    }
+
+    #[test]
+    fn model_from_linear_gamma_override() {
+        let coeffs = vec![[1e-11, 1e-6, 5e-13]];
+        let m0 = model_from_linear(&coeffs, Some(0.0));
+        assert_eq!(m0.nodes[0].sigma[0], 0.0);
+        let m5 = model_from_linear(&coeffs, Some(0.05));
+        assert!((m5.nodes[0].sigma[0] - 5e-13).abs() < 1e-20);
+        let mn = model_from_linear(&coeffs, None);
+        assert_eq!(mn.nodes[0].sigma[0], 5e-13);
+    }
+}

@@ -1,0 +1,20 @@
+//! Platform layer: the hidden ground-truth testbed ("reality"), the
+//! hierarchical generative model of node performance (§5.1), and the
+//! network calibration procedures (§4.1).
+//!
+//! The paper's evaluation ran on Grid'5000's Dahu cluster; with no real
+//! cluster available, `hplsim` substitutes a *ground-truth simulator*
+//! (see DESIGN.md §Substitutions): a hidden parameterization of every
+//! node's dgemm behaviour (spatial + day-to-day + short-term
+//! variability, Fig. 9's hierarchy) and of the network (piecewise
+//! segments including the > 160 MB bandwidth drop). "Real runs" execute
+//! the emulation against the hidden truth; calibrations only ever see
+//! noisy benchmark observations of it.
+
+pub mod generative;
+pub mod groundtruth;
+pub mod netcal;
+
+pub use generative::{Hierarchical, Mixture};
+pub use groundtruth::{GroundTruth, Scenario};
+pub use netcal::{calibrate_network, CalProcedure};

@@ -1,0 +1,268 @@
+//! Typed wrappers around the PJRT CPU client and the HLO-text artifacts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::stats::json::Json;
+
+/// Feature lanes of the polynomial model (must match `python/compile`).
+pub const FEATS: usize = 8;
+
+/// Loaded executables + manifest metadata.
+pub struct Artifacts {
+    client: xla::PjRtClient,
+    /// `(batch, executable)` for each dgemm_model variant, ascending batch.
+    dgemm: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    calibrate: xla::PjRtLoadedExecutable,
+    /// Max nodes addressable by one coefficient table.
+    pub nodes_cap: usize,
+    /// Calibration chunk: nodes per call.
+    pub cal_p: usize,
+    /// Calibration chunk: samples per node per call.
+    pub cal_s: usize,
+    /// Executions performed (perf accounting).
+    pub calls: std::cell::Cell<u64>,
+}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("artifact path not utf-8")?,
+    )
+    .with_context(|| format!("parsing {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+impl Artifacts {
+    /// Locate the artifacts directory: `$HPLSIM_ARTIFACTS`, `artifacts/`,
+    /// or `../artifacts/` relative to the current directory.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("HPLSIM_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        for cand in ["artifacts", "../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Load every artifact listed in `manifest.json`.
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.json — run `make artifacts` first",
+                    dir.display()
+                )
+            })?;
+        let manifest =
+            Json::parse(&manifest_text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let feats = manifest
+            .get("feats")
+            .and_then(|v| v.as_f64())
+            .context("manifest.feats")? as usize;
+        if feats != FEATS {
+            bail!("manifest feats {feats} != compiled-in {FEATS}");
+        }
+        let nodes_cap = manifest
+            .get("nodes")
+            .and_then(|v| v.as_f64())
+            .context("manifest.nodes")? as usize;
+        let cal_p = manifest.get("cal_p").and_then(|v| v.as_f64()).context("cal_p")? as usize;
+        let cal_s = manifest.get("cal_s").and_then(|v| v.as_f64()).context("cal_s")? as usize;
+
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut dgemm = Vec::new();
+        if let Some(obj) = manifest.as_obj() {
+            for key in obj.keys() {
+                if let Some(b) = key.strip_prefix("dgemm_model_") {
+                    let batch: usize = b.parse().context("batch suffix")?;
+                    let exe = load_exe(&client, &dir.join(format!("{key}.hlo.txt")))?;
+                    dgemm.push((batch, exe));
+                }
+            }
+        }
+        if dgemm.is_empty() {
+            bail!("no dgemm_model_* artifacts in {}", dir.display());
+        }
+        dgemm.sort_by_key(|(b, _)| *b);
+        let calibrate = load_exe(&client, &dir.join("calibrate.hlo.txt"))?;
+        Ok(Artifacts {
+            client,
+            dgemm,
+            calibrate,
+            nodes_cap,
+            cal_p,
+            cal_s,
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Convenience: load from the default directory.
+    pub fn load_default() -> Result<Artifacts> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Batched stochastic dgemm durations.
+    ///
+    /// * `mnk`: `[B][(m, n, k)]` design points,
+    /// * `idx`: node index per point (must be `< nodes_cap`),
+    /// * `mu_tab` / `sg_tab`: per-node coefficient tables `[nodes][FEATS]`
+    ///   (padded internally to `nodes_cap`),
+    /// * `z`: standard-normal draws, one per point.
+    ///
+    /// Chunks the batch over the compiled variants (largest first) and
+    /// zero-pads the tail.
+    pub fn dgemm_durations(
+        &self,
+        mnk: &[[f32; 3]],
+        idx: &[i32],
+        mu_tab: &[[f32; FEATS]],
+        sg_tab: &[[f32; FEATS]],
+        z: &[f32],
+    ) -> Result<Vec<f32>> {
+        let b = mnk.len();
+        assert_eq!(idx.len(), b);
+        assert_eq!(z.len(), b);
+        assert!(mu_tab.len() <= self.nodes_cap, "too many nodes");
+        assert_eq!(mu_tab.len(), sg_tab.len());
+
+        // Coefficient tables are shared by all chunks.
+        let mut mu_flat = vec![0f32; self.nodes_cap * FEATS];
+        let mut sg_flat = vec![0f32; self.nodes_cap * FEATS];
+        for (i, row) in mu_tab.iter().enumerate() {
+            mu_flat[i * FEATS..(i + 1) * FEATS].copy_from_slice(row);
+        }
+        for (i, row) in sg_tab.iter().enumerate() {
+            sg_flat[i * FEATS..(i + 1) * FEATS].copy_from_slice(row);
+        }
+        let mu_lit = xla::Literal::vec1(&mu_flat)
+            .reshape(&[self.nodes_cap as i64, FEATS as i64])?;
+        let sg_lit = xla::Literal::vec1(&sg_flat)
+            .reshape(&[self.nodes_cap as i64, FEATS as i64])?;
+
+        let mut out = Vec::with_capacity(b);
+        let mut off = 0usize;
+        while off < b {
+            let left = b - off;
+            // Pick the largest compiled batch that is <= left, or the
+            // smallest one (padding) for the tail.
+            let (batch, exe) = self
+                .dgemm
+                .iter()
+                .rev()
+                .find(|(bb, _)| *bb <= left)
+                .unwrap_or(&self.dgemm[0]);
+            let n = (*batch).min(left);
+
+            let mut mnk_flat = vec![0f32; batch * 4];
+            let mut idx_v = vec![0i32; *batch];
+            let mut z_v = vec![0f32; *batch];
+            for i in 0..n {
+                let p = &mnk[off + i];
+                mnk_flat[i * 4] = p[0];
+                mnk_flat[i * 4 + 1] = p[1];
+                mnk_flat[i * 4 + 2] = p[2];
+                idx_v[i] = idx[off + i];
+                z_v[i] = z[off + i];
+            }
+            let mnk_lit = xla::Literal::vec1(&mnk_flat).reshape(&[*batch as i64, 4])?;
+            let idx_lit = xla::Literal::vec1(&idx_v);
+            let z_lit = xla::Literal::vec1(&z_v);
+
+            let result = exe.execute::<xla::Literal>(&[
+                mnk_lit, idx_lit, mu_lit.clone(), sg_lit.clone(), z_lit,
+            ])?[0][0]
+                .to_literal_sync()?;
+            self.calls.set(self.calls.get() + 1);
+            let durs = result.to_tuple1()?.to_vec::<f32>()?;
+            out.extend_from_slice(&durs[..n]);
+            off += n;
+        }
+        Ok(out)
+    }
+
+    /// Per-node OLS calibration fit through the XLA artifact.
+    ///
+    /// `samples[node] = [(m, n, k, duration_seconds)]` — every node must
+    /// supply exactly `cal_s` samples (the calibration campaign handles
+    /// re-sampling). Returns `(mu_coef, sg_coef)` per node.
+    pub fn calibrate(
+        &self,
+        samples: &[Vec<(f32, f32, f32, f32)>],
+    ) -> Result<(Vec<[f32; FEATS]>, Vec<[f32; FEATS]>)> {
+        let p_total = samples.len();
+        for (i, s) in samples.iter().enumerate() {
+            assert_eq!(
+                s.len(),
+                self.cal_s,
+                "node {i}: need exactly {} calibration samples",
+                self.cal_s
+            );
+        }
+        let mut mu_out = Vec::with_capacity(p_total);
+        let mut sg_out = Vec::with_capacity(p_total);
+        let mut off = 0usize;
+        while off < p_total {
+            let n = self.cal_p.min(p_total - off);
+            let mut mnk_flat = vec![0f32; self.cal_p * self.cal_s * 4];
+            let mut y_flat = vec![0f32; self.cal_p * self.cal_s];
+            for p in 0..n {
+                for (s, &(m, nn, k, d)) in samples[off + p].iter().enumerate() {
+                    let base = (p * self.cal_s + s) * 4;
+                    mnk_flat[base] = m;
+                    mnk_flat[base + 1] = nn;
+                    mnk_flat[base + 2] = k;
+                    y_flat[p * self.cal_s + s] = d;
+                }
+            }
+            // Pad unused node slots with a benign identity-ish design so
+            // the solve stays well-posed (constant y, ridge handles it).
+            for p in n..self.cal_p {
+                for s in 0..self.cal_s {
+                    let base = (p * self.cal_s + s) * 4;
+                    mnk_flat[base] = (s % 37 + 1) as f32;
+                    mnk_flat[base + 1] = (s % 11 + 1) as f32;
+                    mnk_flat[base + 2] = (s % 7 + 1) as f32;
+                    y_flat[p * self.cal_s + s] = 1.0;
+                }
+            }
+            let mnk_lit = xla::Literal::vec1(&mnk_flat).reshape(&[
+                self.cal_p as i64,
+                self.cal_s as i64,
+                4,
+            ])?;
+            let y_lit = xla::Literal::vec1(&y_flat)
+                .reshape(&[self.cal_p as i64, self.cal_s as i64])?;
+            let result = self.calibrate.execute::<xla::Literal>(&[mnk_lit, y_lit])?[0][0]
+                .to_literal_sync()?;
+            self.calls.set(self.calls.get() + 1);
+            let (mu_lit, sg_lit) = result.to_tuple2()?;
+            let mu = mu_lit.to_vec::<f32>()?;
+            let sg = sg_lit.to_vec::<f32>()?;
+            for p in 0..n {
+                let mut mrow = [0f32; FEATS];
+                let mut srow = [0f32; FEATS];
+                mrow.copy_from_slice(&mu[p * FEATS..(p + 1) * FEATS]);
+                srow.copy_from_slice(&sg[p * FEATS..(p + 1) * FEATS]);
+                mu_out.push(mrow);
+                sg_out.push(srow);
+            }
+            off += n;
+        }
+        Ok((mu_out, sg_out))
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! The Python side (`python/compile/aot.py`) lowers the Layer-2 JAX
+//! model — whose hot loops are the Layer-1 Pallas kernels — to HLO
+//! *text* under `artifacts/`. This module loads those artifacts once
+//! per process with the `xla` crate's PJRT CPU client and exposes typed,
+//! chunked entry points. Python is never on this path.
+
+mod client;
+
+pub use client::{Artifacts, FEATS};
+
+/// Number of polynomial feature lanes (matches `python/compile`).
+pub const COEFFS: usize = FEATS;

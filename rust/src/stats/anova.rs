@@ -1,0 +1,106 @@
+//! One-way ANOVA per factor, as used by the paper's §4.2 factorial
+//! experiment to rank HPL parameters (NB, DEPTH, BCAST, SWAP) by their
+//! effect on performance.
+
+/// One row of an ANOVA table (one factor).
+#[derive(Clone, Debug)]
+pub struct AnovaRow {
+    pub factor: String,
+    /// Between-groups sum of squares.
+    pub ss_between: f64,
+    /// Within-groups sum of squares.
+    pub ss_within: f64,
+    pub df_between: usize,
+    pub df_within: usize,
+    /// F statistic (mean square ratio).
+    pub f_stat: f64,
+    /// Fraction of total variance explained (eta squared).
+    pub eta_sq: f64,
+}
+
+/// One-way ANOVA of `y` grouped by the level labels in `groups`.
+pub fn anova_one_way(factor: &str, groups: &[String], y: &[f64]) -> AnovaRow {
+    assert_eq!(groups.len(), y.len());
+    assert!(!y.is_empty());
+    let grand = y.iter().sum::<f64>() / y.len() as f64;
+
+    // Group sums.
+    let mut sums: std::collections::BTreeMap<&str, (f64, usize)> = Default::default();
+    for (g, &v) in groups.iter().zip(y) {
+        let e = sums.entry(g.as_str()).or_insert((0.0, 0));
+        e.0 += v;
+        e.1 += 1;
+    }
+    let k = sums.len();
+    let mut ss_between = 0.0;
+    for (_, &(s, n)) in sums.iter() {
+        let gm = s / n as f64;
+        ss_between += n as f64 * (gm - grand) * (gm - grand);
+    }
+    let mut ss_within = 0.0;
+    for (g, &v) in groups.iter().zip(y) {
+        let (s, n) = sums[g.as_str()];
+        let gm = s / n as f64;
+        ss_within += (v - gm) * (v - gm);
+    }
+    let df_between = k.saturating_sub(1);
+    let df_within = y.len().saturating_sub(k);
+    let msb = if df_between > 0 { ss_between / df_between as f64 } else { 0.0 };
+    let msw = if df_within > 0 { ss_within / df_within as f64 } else { 0.0 };
+    let f_stat = if msw > 0.0 { msb / msw } else { f64::INFINITY };
+    let ss_tot = ss_between + ss_within;
+    let eta_sq = if ss_tot > 0.0 { ss_between / ss_tot } else { 0.0 };
+    AnovaRow {
+        factor: factor.to_string(),
+        ss_between,
+        ss_within,
+        df_between,
+        df_within,
+        f_stat,
+        eta_sq,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+
+    #[test]
+    fn strong_factor_dominates() {
+        let mut rng = Rng::new(1);
+        let mut groups = Vec::new();
+        let mut weak = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..200 {
+            let g = i % 2;
+            groups.push(format!("g{g}"));
+            // i % 3 is (nearly) independent of i % 2 over the sample.
+            weak.push(format!("w{}", i % 3));
+            y.push(g as f64 * 10.0 + rng.normal() * 0.5);
+        }
+        let strong = anova_one_way("strong", &groups, &y);
+        let weak_row = anova_one_way("weak", &weak, &y);
+        assert!(strong.eta_sq > 0.9, "{}", strong.eta_sq);
+        assert!(strong.f_stat > weak_row.f_stat * 10.0);
+    }
+
+    #[test]
+    fn null_factor_small_eta() {
+        let mut rng = Rng::new(2);
+        let groups: Vec<String> = (0..300).map(|i| format!("g{}", i % 3)).collect();
+        let y: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+        let row = anova_one_way("null", &groups, &y);
+        assert!(row.eta_sq < 0.05, "{}", row.eta_sq);
+    }
+
+    #[test]
+    fn eta_between_zero_and_one() {
+        let groups: Vec<String> =
+            ["a", "a", "b", "b"].iter().map(|s| s.to_string()).collect();
+        let row = anova_one_way("f", &groups, &[1.0, 2.0, 3.0, 4.0]);
+        assert!(row.eta_sq > 0.0 && row.eta_sq < 1.0);
+        assert_eq!(row.df_between, 1);
+        assert_eq!(row.df_within, 2);
+    }
+}

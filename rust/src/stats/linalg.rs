@@ -1,0 +1,213 @@
+//! Small dense linear algebra: row-major matrices, Cholesky solve.
+//!
+//! Sized for the simulator's needs (normal equations with ≤ 8 features,
+//! 3x3 covariance sampling for the generative model) — not a BLAS.
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from nested slices (test convenience).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows[0].len();
+        let mut m = Matrix::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    /// `self * v` for a vector `v`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| {
+                let row = &self.data[i * self.cols..(i + 1) * self.cols];
+                row.iter().zip(v).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    /// `self * other`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Lower Cholesky factor of an SPD matrix. Returns `None` if the
+    /// matrix is not (numerically) positive definite.
+    pub fn cholesky(&self) -> Option<Matrix> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Some(l)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Solve `a x = b` for SPD `a` via Cholesky. Adds `ridge` to the diagonal.
+pub fn cholesky_solve(a: &Matrix, b: &[f64], ridge: f64) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, b.len());
+    let n = a.rows;
+    let mut ar = a.clone();
+    for i in 0..n {
+        ar[(i, i)] += ridge;
+    }
+    let l = ar.cholesky()?;
+    // Forward: L w = b.
+    let mut w = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * w[k];
+        }
+        w[i] = s / l[(i, i)];
+    }
+    // Backward: L^T x = w.
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = w[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+
+    #[test]
+    fn matvec_matmul_transpose() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        let id = Matrix::eye(2);
+        assert_eq!(a.matmul(&id), a);
+        assert_eq!(a.transpose()[(0, 1)], 3.0);
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let n = 1 + rng.below(6);
+            // Random SPD: A = B B^T + n*I.
+            let mut b = Matrix::zeros(n, n);
+            for v in b.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let mut a = b.matmul(&b.transpose());
+            for i in 0..n {
+                a[(i, i)] += n as f64;
+            }
+            let l = a.cholesky().expect("SPD");
+            let back = l.matmul(&l.transpose());
+            for (x, y) in a.data.iter().zip(&back.data) {
+                assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_recovers_known_solution() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let n = 1 + rng.below(6);
+            let mut b = Matrix::zeros(n, n);
+            for v in b.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let mut a = b.matmul(&b.transpose());
+            for i in 0..n {
+                a[(i, i)] += n as f64;
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let rhs = a.matvec(&x_true);
+            let x = cholesky_solve(&a, &rhs, 0.0).unwrap();
+            for (u, v) in x.iter().zip(&x_true) {
+                assert!((u - v).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eig -1, 3
+        assert!(a.cholesky().is_none());
+    }
+}

@@ -1,0 +1,21 @@
+//! In-tree statistics toolbox.
+//!
+//! The offline crate set has no `rand`, `serde`, or stats crates, so this
+//! module provides everything the simulator and the experiment campaign
+//! need: a counter-based RNG with normal / half-normal variates, small
+//! dense linear algebra (OLS, Cholesky), one-way ANOVA, summary
+//! statistics with confidence intervals, and a minimal JSON
+//! reader/writer used for calibration files and experiment outputs.
+
+pub mod anova;
+pub mod json;
+pub mod linalg;
+pub mod ols;
+pub mod rng;
+pub mod summary;
+
+pub use anova::{anova_one_way, AnovaRow};
+pub use linalg::{cholesky_solve, Matrix};
+pub use ols::{ols_fit, ols_rel_fit, OlsFit};
+pub use rng::Rng;
+pub use summary::{mean, mean_ci95, quantile, std_dev, Summary};

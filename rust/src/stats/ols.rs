@@ -1,0 +1,237 @@
+//! Ordinary least squares with column standardization.
+//!
+//! This is the pure-Rust reference path for the calibration fit; the
+//! production fit goes through the AOT-compiled XLA `calibrate` artifact
+//! (see `runtime::artifacts`), and the integration tests check both
+//! paths agree.
+
+use super::linalg::{cholesky_solve, Matrix};
+
+/// Result of an OLS fit.
+#[derive(Clone, Debug)]
+pub struct OlsFit {
+    /// Coefficients in the original (un-standardized) feature space.
+    pub coef: Vec<f64>,
+    /// Coefficient of determination.
+    pub r2: f64,
+    /// Residuals (y - prediction).
+    pub residuals: Vec<f64>,
+}
+
+/// Fit `y ~ X coef` by OLS on per-column standardized features.
+///
+/// `x` is row-major `[n_samples][n_features]`. Degenerate (constant)
+/// columns are left unscaled so an explicit intercept column keeps its
+/// meaning.
+pub fn ols_fit(x: &[Vec<f64>], y: &[f64]) -> OlsFit {
+    let n = x.len();
+    assert_eq!(n, y.len());
+    assert!(n > 0);
+    let f = x[0].len();
+
+    // Column means / stds.
+    let mut mean = vec![0.0; f];
+    for row in x {
+        for (m, v) in mean.iter_mut().zip(row) {
+            *m += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut std = vec![0.0; f];
+    for row in x {
+        for j in 0..f {
+            let d = row[j] - mean[j];
+            std[j] += d * d;
+        }
+    }
+    let mut degenerate = vec![false; f];
+    for j in 0..f {
+        std[j] = (std[j] / n as f64).sqrt();
+        if std[j] < 1e-12 {
+            degenerate[j] = true;
+            std[j] = 1.0;
+            mean[j] = 0.0;
+        }
+    }
+    let y_mean = y.iter().sum::<f64>() / n as f64;
+
+    // Normal equations on standardized, centred data.
+    let mut g = Matrix::zeros(f, f);
+    let mut v = vec![0.0; f];
+    let mut fs = vec![0.0; f];
+    for (row, &yi) in x.iter().zip(y) {
+        for j in 0..f {
+            fs[j] = (row[j] - mean[j]) / std[j];
+        }
+        let yc = yi - y_mean;
+        for i in 0..f {
+            v[i] += fs[i] * yc;
+            for j in 0..=i {
+                g[(i, j)] += fs[i] * fs[j];
+            }
+        }
+    }
+    for i in 0..f {
+        for j in i + 1..f {
+            g[(i, j)] = g[(j, i)];
+        }
+    }
+    let w = cholesky_solve(&g, &v, 1e-9 * n as f64)
+        .expect("ridge-regularized Gram must be SPD");
+
+    // Back-transform.
+    let mut coef: Vec<f64> = (0..f).map(|j| w[j] / std[j]).collect();
+    let shift: f64 = (0..f).map(|j| coef[j] * mean[j]).sum();
+    let intercept = y_mean - shift;
+    // Fold the intercept into the first degenerate (constant) column if
+    // one exists; otherwise leave predictions centred.
+    if let Some(j) = degenerate.iter().position(|&d| d) {
+        coef[j] += intercept;
+    }
+
+    // R^2 and residuals.
+    let mut ss_res = 0.0;
+    let mut ss_tot = 0.0;
+    let mut residuals = Vec::with_capacity(n);
+    for (row, &yi) in x.iter().zip(y) {
+        let pred: f64 = row.iter().zip(&coef).map(|(a, b)| a * b).sum::<f64>()
+            + if degenerate.iter().any(|&d| d) { 0.0 } else { intercept };
+        let r = yi - pred;
+        residuals.push(r);
+        ss_res += r * r;
+        ss_tot += (yi - y_mean) * (yi - y_mean);
+    }
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    OlsFit { coef, r2, residuals }
+}
+
+/// Relative weighted least squares: minimize `sum_i (1 - <x_i, c>/y_i)^2`
+/// — i.e. OLS of 1 on `x_i / y_i`. Gives uniform *relative* accuracy
+/// across heteroscedastic data spanning several decades (kernel
+/// durations), which is what the simulator needs. No intercept is added
+/// (include a constant feature column if desired).
+pub fn ols_rel_fit(x: &[Vec<f64>], y: &[f64]) -> OlsFit {
+    let n = x.len();
+    assert_eq!(n, y.len());
+    assert!(n > 0);
+    let f = x[0].len();
+    // Column RMS of x/y for Jacobi scaling.
+    let mut rms = vec![0.0; f];
+    for (row, &yi) in x.iter().zip(y) {
+        let w = 1.0 / yi.max(1e-30);
+        for j in 0..f {
+            let v = row[j] * w;
+            rms[j] += v * v;
+        }
+    }
+    for r in rms.iter_mut() {
+        *r = (*r / n as f64).sqrt();
+        if *r < 1e-300 {
+            *r = 1.0;
+        }
+    }
+    let mut g = Matrix::zeros(f, f);
+    let mut v = vec![0.0; f];
+    let mut fs = vec![0.0; f];
+    for (row, &yi) in x.iter().zip(y) {
+        let w = 1.0 / yi.max(1e-30);
+        for j in 0..f {
+            fs[j] = row[j] * w / rms[j];
+        }
+        for i in 0..f {
+            v[i] += fs[i];
+            for j in 0..=i {
+                g[(i, j)] += fs[i] * fs[j];
+            }
+        }
+    }
+    for i in 0..f {
+        for j in i + 1..f {
+            g[(i, j)] = g[(j, i)];
+        }
+    }
+    let w = cholesky_solve(&g, &v, 1e-5 * n as f64)
+        .expect("ridge-regularized Gram must be SPD");
+    let coef: Vec<f64> = (0..f).map(|j| w[j] / rms[j]).collect();
+
+    let mut ss_res = 0.0;
+    let mut ss_tot = 0.0;
+    let y_mean = y.iter().sum::<f64>() / n as f64;
+    let mut residuals = Vec::with_capacity(n);
+    for (row, &yi) in x.iter().zip(y) {
+        let pred: f64 = row.iter().zip(&coef).map(|(a, b)| a * b).sum();
+        let r = yi - pred;
+        residuals.push(r);
+        ss_res += r * r;
+        ss_tot += (yi - y_mean) * (yi - y_mean);
+    }
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    OlsFit { coef, r2, residuals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+
+    fn design(rng: &mut Rng, n: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|_| {
+                let m = rng.uniform_in(64.0, 4096.0);
+                let nn = rng.uniform_in(64.0, 4096.0);
+                let k = rng.uniform_in(64.0, 512.0);
+                vec![m * nn * k, m * nn, m * k, nn * k, 1.0]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exact_recovery_noiseless() {
+        let mut rng = Rng::new(1);
+        let x = design(&mut rng, 400);
+        let truth = [1.1e-11, 2.0e-10, 0.0, 5.0e-10, 3.0e-5];
+        let y: Vec<f64> = x
+            .iter()
+            .map(|r| r.iter().zip(&truth).map(|(a, b)| a * b).sum())
+            .collect();
+        let fit = ols_fit(&x, &y);
+        assert!(fit.r2 > 0.999999, "r2 {}", fit.r2);
+        // Predictions must match to high accuracy.
+        for (row, &yi) in x.iter().zip(&y) {
+            let p: f64 = row.iter().zip(&fit.coef).map(|(a, b)| a * b).sum();
+            assert!((p - yi).abs() <= 1e-6 * yi.abs().max(1e-9));
+        }
+    }
+
+    #[test]
+    fn noisy_fit_r2_reasonable() {
+        let mut rng = Rng::new(2);
+        let x = design(&mut rng, 1000);
+        let truth = [1.1e-11, 0.0, 0.0, 0.0, 1.0e-4];
+        let y: Vec<f64> = x
+            .iter()
+            .map(|r| {
+                let mu: f64 = r.iter().zip(&truth).map(|(a, b)| a * b).sum();
+                rng.half_normal(mu, 0.03 * mu)
+            })
+            .collect();
+        let fit = ols_fit(&x, &y);
+        assert!(fit.r2 > 0.99, "r2 {}", fit.r2);
+        // Dominant coefficient recovered within ~2%: note OLS estimates
+        // mu + sqrt(2/pi)*sigma here, i.e. (1 + 0.0239) * alpha.
+        let expect = truth[0] * (1.0 + 0.03 * (2.0f64 / std::f64::consts::PI).sqrt());
+        assert!((fit.coef[0] - expect).abs() < 0.02 * expect);
+    }
+
+    #[test]
+    fn residuals_sum_to_zero_with_intercept() {
+        let mut rng = Rng::new(3);
+        let x = design(&mut rng, 300);
+        let y: Vec<f64> = x.iter().map(|r| r[0] * 1e-11 + rng.normal() * 1e-4).collect();
+        let fit = ols_fit(&x, &y);
+        let s: f64 = fit.residuals.iter().sum();
+        assert!(s.abs() < 1e-6, "{s}");
+    }
+}

@@ -1,0 +1,252 @@
+//! Integration tests across the three layers.
+//!
+//! The artifact-dependent tests skip (with a message) when
+//! `artifacts/` has not been built — `make artifacts` first for full
+//! coverage; CI runs `make test` which guarantees it.
+
+use std::rc::Rc;
+
+use hplsim::blas::{DgemmModel, DirectSource, NodeCoef};
+use hplsim::calibration::{self, bench_node};
+use hplsim::hpl::{
+    simulate_direct, simulate_with_artifacts, Bcast, HplConfig, Rfact, SwapAlg,
+};
+use hplsim::network::{NetModel, Topology};
+use hplsim::platform::{calibrate_network, CalProcedure, GroundTruth, Scenario};
+use hplsim::runtime::Artifacts;
+use hplsim::stats::{mean, Rng};
+
+fn artifacts() -> Option<Rc<Artifacts>> {
+    match Artifacts::load_default() {
+        Ok(a) => Some(Rc::new(a)),
+        Err(e) => {
+            eprintln!("SKIP (artifacts not built: run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+/// The dgemm_model artifact must reproduce the Rust closed form exactly
+/// (sigma = 0 -> deterministic polynomial).
+#[test]
+fn artifact_dgemm_matches_closed_form_deterministic() {
+    let Some(arts) = artifacts() else { return };
+    let mut rng = Rng::new(3);
+    let b = 1000;
+    let mut mnk = Vec::new();
+    let mut idx = Vec::new();
+    for _ in 0..b {
+        mnk.push([
+            (64 + rng.below(4096)) as f32,
+            (4 + rng.below(1024)) as f32,
+            (4 + rng.below(512)) as f32,
+        ]);
+        idx.push(rng.below(16) as i32);
+    }
+    let coef: Vec<NodeCoef> = (0..16)
+        .map(|i| NodeCoef {
+            mu: [
+                5.0e-11 * (1.0 + 0.01 * i as f64),
+                2.0e-10,
+                0.0,
+                1.0e-10,
+                8.0e-7,
+            ],
+            sigma: [0.0; 5],
+        })
+        .collect();
+    let mu_tab: Vec<[f32; 8]> = coef.iter().map(|c| c.to_f32_lanes().0).collect();
+    let sg_tab: Vec<[f32; 8]> = coef.iter().map(|c| c.to_f32_lanes().1).collect();
+    let z = vec![1.7f32; b]; // must be ignored when sigma = 0
+    let got = arts.dgemm_durations(&mnk, &idx, &mu_tab, &sg_tab, &z).unwrap();
+    for i in 0..b {
+        let c = &coef[idx[i] as usize];
+        let want = c.mu_of(mnk[i][0] as f64, mnk[i][1] as f64, mnk[i][2] as f64);
+        let rel = (got[i] as f64 - want).abs() / want;
+        assert!(rel < 1e-4, "i={i}: got {} want {want}", got[i]);
+    }
+}
+
+/// Stochastic path: the artifact must agree with mu + |z| sigma.
+#[test]
+fn artifact_dgemm_matches_half_normal_formula() {
+    let Some(arts) = artifacts() else { return };
+    let b = 512;
+    let mnk = vec![[2048f32, 64.0, 64.0]; b];
+    let idx = vec![0i32; b];
+    let c = NodeCoef {
+        mu: [5.6e-11, 0.0, 0.0, 0.0, 8e-7],
+        sigma: [1.7e-12, 0.0, 0.0, 0.0, 0.0],
+    };
+    let (mu8, sg8) = c.to_f32_lanes();
+    let mut z = vec![0f32; b];
+    Rng::new(9).fill_normal(&mut z);
+    let got = arts.dgemm_durations(&mnk, &idx, &[mu8], &[sg8], &z).unwrap();
+    for i in 0..b {
+        let want = c.mu_of(2048.0, 64.0, 64.0)
+            + (z[i].abs() as f64) * c.sigma_of(2048.0, 64.0, 64.0);
+        let rel = (got[i] as f64 - want).abs() / want;
+        assert!(rel < 1e-4, "i={i}");
+    }
+}
+
+/// Chunking: a batch spanning several compiled variants and a padded
+/// tail must be handled transparently.
+#[test]
+fn artifact_dgemm_chunks_and_pads() {
+    let Some(arts) = artifacts() else { return };
+    let b = 8192 + 512 + 100; // forces large batch + small batch + pad
+    let mnk = vec![[512f32, 32.0, 32.0]; b];
+    let idx = vec![0i32; b];
+    let c = NodeCoef::naive(1e-11);
+    let (mu8, sg8) = c.to_f32_lanes();
+    let z = vec![0f32; b];
+    let got = arts.dgemm_durations(&mnk, &idx, &[mu8], &[sg8], &z).unwrap();
+    assert_eq!(got.len(), b);
+    let want = 1e-11 * 512.0 * 32.0 * 32.0;
+    for (i, g) in got.iter().enumerate() {
+        assert!((*g as f64 - want).abs() / want < 1e-5, "i={i}");
+    }
+}
+
+/// The calibrate artifact and the Rust fallback fit must agree on the
+/// model they produce (same maths, different backends).
+#[test]
+fn artifact_calibrate_agrees_with_rust_fit() {
+    let Some(arts) = artifacts() else { return };
+    let gt = GroundTruth::generate(4, Scenario::Normal, 77);
+    let truth = gt.day_model(0);
+    let mut rng = Rng::new(78);
+    let samples: Vec<_> =
+        (0..4).map(|p| bench_node(&gt, &truth, p, arts.cal_s, &mut rng)).collect();
+    let from_arts = calibration::fit_cluster(Some(&arts), &samples);
+    let from_rust = calibration::fit_cluster(None, &samples);
+    for p in 0..4 {
+        for (m, n, k) in [(2048usize, 64usize, 64usize), (4096, 256, 128), (512, 8, 8)] {
+            let a = from_arts.mu(p, m, n, k);
+            let b = from_rust.mu(p, m, n, k);
+            let rel = (a - b).abs() / b;
+            assert!(rel < 0.02, "node {p} shape {m}x{n}x{k}: {a} vs {b}");
+        }
+    }
+}
+
+/// With a deterministic model, the artifact replay pipeline and the
+/// direct Rust path must produce near-identical simulated times (only
+/// f32 rounding differs).
+#[test]
+fn artifact_pipeline_matches_direct_simulation() {
+    let Some(arts) = artifacts() else { return };
+    let cfg = HplConfig::dahu_default(2048, 2, 4);
+    let topo = Topology::star(4, 12.5e9, 40e9);
+    let net = NetModel::ideal();
+    let model = DgemmModel::homogeneous(NodeCoef {
+        mu: [5.6e-11, 2e-10, 0.0, 1e-10, 8e-7],
+        sigma: [0.0; 5],
+    });
+    let via_arts = simulate_with_artifacts(&cfg, &topo, &net, &model, &arts, 2, 5).unwrap();
+    let direct = {
+        let src = DirectSource::deterministic(model.clone(), cfg.nranks());
+        hplsim::hpl::run_once(&cfg, topo.clone(), net.clone(), src, 2)
+    };
+    let rel = (via_arts.seconds - direct.seconds).abs() / direct.seconds;
+    assert!(rel < 1e-3, "artifact {} vs direct {}", via_arts.seconds, direct.seconds);
+    assert!(via_arts.dgemm_calls > 0);
+}
+
+/// The headline claim, end to end: calibrated full-model predictions
+/// stay within a few percent of (synthetic) reality across bcast and
+/// swap algorithms.
+#[test]
+fn prediction_error_within_five_percent_across_algorithms() {
+    let gt = GroundTruth::generate(4, Scenario::Normal, 21);
+    let topo = gt.topology();
+    let net_truth = gt.net_model();
+    let net_cal = calibrate_network(&gt, CalProcedure::Improved, 22);
+    let models = calibration::calibrate_models(None, &gt, 0, 512, 23);
+    for bcast in [Bcast::Ring, Bcast::TwoRingM, Bcast::Long] {
+        for swap in [SwapAlg::BinExch, SwapAlg::SpreadRoll] {
+            let cfg = HplConfig {
+                n: 4096,
+                nb: 64,
+                p: 4,
+                q: 4,
+                depth: 1,
+                bcast,
+                swap,
+                swap_threshold: 64,
+                rfact: Rfact::Crout,
+                nbmin: 8,
+            };
+            let reality: Vec<f64> = (0..2u64)
+                .map(|d| {
+                    simulate_direct(&cfg, &topo, &net_truth, &gt.day_model(d), 4, 50 + d)
+                        .gflops
+                })
+                .collect();
+            let pred =
+                simulate_direct(&cfg, &topo, &net_cal, &models.full, 4, 99).gflops;
+            let err = (pred / mean(&reality) - 1.0).abs();
+            assert!(
+                err < 0.05,
+                "{bcast:?}/{swap:?}: prediction error {:.1}%",
+                100.0 * err
+            );
+        }
+    }
+}
+
+/// Depth-1 look-ahead helps (or at least never catastrophically hurts)
+/// for a compute-heavy configuration — the paper's HPL-doc claim.
+#[test]
+fn lookahead_improves_large_runs() {
+    let gt = GroundTruth::generate(4, Scenario::Normal, 31);
+    let topo = gt.topology();
+    let net = gt.net_model();
+    let model = gt.day_model(0);
+    let mut c0 = HplConfig::dahu_default(6144, 4, 4);
+    c0.nb = 64;
+    c0.depth = 0;
+    let mut c1 = c0.clone();
+    c1.depth = 1;
+    let t0 = simulate_direct(&c0, &topo, &net, &model, 4, 1).seconds;
+    let t1 = simulate_direct(&c1, &topo, &net, &model, 4, 1).seconds;
+    assert!(t1 < t0 * 1.02, "depth1 {t1} vs depth0 {t0}");
+}
+
+/// Geometry extremes: a 1xQ grid must beat Px1 on a star network (the
+/// Fig. 7(b) asymmetry: small P is better) at equal rank count.
+#[test]
+fn geometry_asymmetry_small_p_wins() {
+    let gt = GroundTruth::generate(8, Scenario::Normal, 41);
+    let topo = gt.topology();
+    let net = gt.net_model();
+    let model = gt.day_model(0);
+    let mut flat = HplConfig::dahu_default(8192, 1, 32);
+    flat.nb = 64;
+    let mut tall = HplConfig::dahu_default(8192, 32, 1);
+    tall.nb = 64;
+    let g_flat = simulate_direct(&flat, &topo, &net, &model, 4, 2).gflops;
+    let g_tall = simulate_direct(&tall, &topo, &net, &model, 4, 2).gflops;
+    assert!(
+        g_flat > g_tall,
+        "1x32 ({g_flat}) should beat 32x1 ({g_tall})"
+    );
+}
+
+/// Cross-layer determinism: the full artifact pipeline must be exactly
+/// reproducible for a fixed seed.
+#[test]
+fn artifact_pipeline_deterministic() {
+    let Some(arts) = artifacts() else { return };
+    let gt = GroundTruth::generate(4, Scenario::Normal, 51);
+    let cfg = HplConfig::dahu_default(2048, 2, 4);
+    let topo = gt.topology();
+    let net = gt.net_model();
+    let model = gt.day_model(0);
+    let a = simulate_with_artifacts(&cfg, &topo, &net, &model, &arts, 2, 9).unwrap();
+    let b = simulate_with_artifacts(&cfg, &topo, &net, &model, &arts, 2, 9).unwrap();
+    assert_eq!(a.seconds, b.seconds);
+    let c = simulate_with_artifacts(&cfg, &topo, &net, &model, &arts, 2, 10).unwrap();
+    assert_ne!(a.seconds, c.seconds);
+}
