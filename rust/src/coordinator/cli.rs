@@ -4,6 +4,8 @@ use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::coordinator::experiments::{self, ExpCtx, Scale};
+use crate::coordinator::sweep::{self, run_campaign, SimPoint, SweepOptions};
+use crate::coordinator::table::{fnum, Table};
 use crate::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
 use crate::platform::{calibrate_network, CalProcedure, GroundTruth, Scenario};
 use crate::runtime::Artifacts;
@@ -13,8 +15,19 @@ hplsim — simulation-based optimization & sensibility analysis of MPI applicati
 
 USAGE:
   hplsim exp <id> [--full] [--seed N] [--no-artifacts] [--out DIR]
+             [--threads T] [--cache DIR]
       id ∈ {table1, fig4, fig5, fig6, fig7, fig8, table2, fig10, fig11,
             fig12, fig13, fig14, fig15, fig16, all}
+      Reproduce a paper figure/table. Simulation points fan out over the
+      campaign runtime (T worker threads; 0 = auto); --cache makes the
+      campaign resumable.
+  hplsim sweep [--points K] [--threads T] [--seed N] [--nodes K] [--rpn R]
+               [--n N] [--scenario normal|cooling|multimodal]
+               [--out DIR] [--cache DIR] [--no-cache]
+      Random HPL parameter-space campaign (NB, depth, bcast, swap, rfact,
+      geometry) on the calibrated surrogate: K points (default 100) with
+      per-point seeds derived from the campaign seed, executed by the
+      work-stealing sweep runtime with a resumable on-disk cache.
   hplsim run [--n N] [--nb NB] [--p P] [--q Q] [--depth D]
              [--bcast ALG] [--swap ALG] [--rfact ALG]
              [--nodes K] [--rpn R] [--scenario normal|cooling|multimodal]
@@ -25,6 +38,7 @@ USAGE:
 
 Artifacts are loaded from $HPLSIM_ARTIFACTS, ./artifacts or ../artifacts
 (run `make artifacts` first); --no-artifacts uses the pure-Rust model path.
+Campaign parallelism defaults to $HPLSIM_THREADS or the available cores.
 ";
 
 /// Parse `--key value` pairs and flags.
@@ -79,6 +93,10 @@ fn cmd_exp(positional: &[String], opts: &HashMap<String, String>) -> i32 {
     let scale = if opts.contains_key("full") { Scale::Full } else { Scale::Bench };
     let seed = num(opts, "seed", 42u64);
     let mut ctx = ExpCtx::new(load_artifacts(opts), scale, seed);
+    ctx.threads = num(opts, "threads", 0usize);
+    if let Some(dir) = opts.get("cache") {
+        ctx.cache_dir = Some(dir.into());
+    }
     if let Some(dir) = opts.get("out") {
         ctx.out_dir = dir.into();
     }
@@ -102,6 +120,136 @@ fn cmd_exp(positional: &[String], opts: &HashMap<String, String>) -> i32 {
             return 2;
         }
     }
+    0
+}
+
+/// Random campaign over the HPL parameter space on the calibrated
+/// surrogate — the paper's §4.2/§5 "explore thousands of scenarios on
+/// one server" use case, through the parallel sweep runtime.
+fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
+    let npoints = num(opts, "points", 100usize);
+    let nodes = num(opts, "nodes", 8usize);
+    let rpn = num(opts, "rpn", 4usize);
+    let n = num(opts, "n", 4096usize);
+    let seed = num(opts, "seed", 42u64);
+    let scenario = match opts.get("scenario").map(|s| s.as_str()) {
+        Some("cooling") => Scenario::Cooling,
+        Some("multimodal") => Scenario::Multimodal,
+        _ => Scenario::Normal,
+    };
+    let out: std::path::PathBuf =
+        opts.get("out").map(|s| s.into()).unwrap_or_else(|| "results".into());
+    let cache_dir = if opts.contains_key("no-cache") {
+        None
+    } else {
+        Some(
+            opts.get("cache")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(|| out.join("sweep-cache")),
+        )
+    };
+
+    // Calibrate once (sequential), then fan the campaign out.
+    let gt = GroundTruth::generate(nodes, scenario, seed);
+    let topo = gt.topology();
+    let net_cal = calibrate_network(&gt, CalProcedure::Improved, seed + 1);
+    let models =
+        crate::calibration::calibrate_models(None, &gt, 0, 512, seed + 2);
+
+    let nranks = nodes * rpn;
+    let geos: Vec<(usize, usize)> = experiments::geometries(nranks)
+        .into_iter()
+        .filter(|&(p, q)| p <= q)
+        .collect();
+    let nbs = [32usize, 64, 96, 128, 192, 256];
+
+    // Sample the parameter space; every per-point seed is derived from
+    // the campaign seed and the point index, so the campaign is
+    // bit-reproducible at any thread count.
+    let mut cfg_rng = crate::stats::Rng::new(seed ^ 0x7377_6565_70);
+    let mut points = Vec::with_capacity(npoints);
+    for i in 0..npoints {
+        let (p, q) = geos[cfg_rng.below(geos.len())];
+        let nb = nbs[cfg_rng.below(nbs.len())];
+        let cfg = HplConfig {
+            n,
+            nb,
+            p,
+            q,
+            depth: cfg_rng.below(2),
+            bcast: Bcast::ALL[cfg_rng.below(Bcast::ALL.len())],
+            swap: SwapAlg::ALL[cfg_rng.below(SwapAlg::ALL.len())],
+            swap_threshold: 64,
+            rfact: Rfact::ALL[cfg_rng.below(Rfact::ALL.len())],
+            nbmin: 8,
+        };
+        points.push(SimPoint {
+            label: format!(
+                "sweep/{i}/nb{nb}-d{}-{}-{}-{}-{p}x{q}",
+                cfg.depth,
+                cfg.bcast.name(),
+                cfg.swap.name(),
+                cfg.rfact.name()
+            ),
+            cfg,
+            topo: topo.clone(),
+            net: net_cal.clone(),
+            dgemm: models.full.clone(),
+            rpn,
+            seed: sweep::point_seed(seed, i as u64),
+        });
+    }
+
+    let sweep_opts = SweepOptions {
+        threads: num(opts, "threads", 0usize),
+        cache_dir,
+        progress: true,
+    };
+    let report = run_campaign(&points, &sweep_opts);
+
+    // Full campaign CSV + a top-10 console table.
+    let mut full = Table::new(
+        &format!("sweep — {npoints} points, N={n}, {nodes} nodes x {rpn} ranks"),
+        &["point", "nb", "depth", "bcast", "swap", "rfact", "PxQ", "gflops", "seconds"],
+    );
+    let mut ranked: Vec<(usize, f64)> =
+        report.results.iter().map(|r| r.gflops).enumerate().collect();
+    for (i, p) in points.iter().enumerate() {
+        let r = &report.results[i];
+        full.row(vec![
+            i.to_string(),
+            p.cfg.nb.to_string(),
+            p.cfg.depth.to_string(),
+            p.cfg.bcast.name().into(),
+            p.cfg.swap.name().into(),
+            p.cfg.rfact.name().into(),
+            format!("{}x{}", p.cfg.p, p.cfg.q),
+            fnum(r.gflops),
+            fnum(r.seconds),
+        ]);
+    }
+    if let Err(e) = full.write_csv(&out, "sweep") {
+        eprintln!("warning: could not write sweep.csv: {e}");
+    }
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut top = Table::new(
+        "sweep — top 10 configurations (GFlop/s)",
+        &["point", "nb", "depth", "bcast", "swap", "rfact", "PxQ", "gflops", "seconds"],
+    );
+    for &(i, _) in ranked.iter().take(10) {
+        top.row(full.rows[i].clone());
+    }
+    top.print();
+    println!(
+        "\nsweep: {} points | {} computed, {} cached | {} threads | {:.2} s wall \
+         ({:.2} points/s)",
+        points.len(),
+        report.computed,
+        report.cached,
+        report.threads,
+        report.wall_seconds,
+        points.len() as f64 / report.wall_seconds.max(1e-9),
+    );
     0
 }
 
@@ -197,6 +345,7 @@ pub fn main_with_args(args: &[String]) -> i32 {
     let (positional, opts) = parse_args(args);
     match positional.first().map(|s| s.as_str()) {
         Some("exp") => cmd_exp(&positional[1..], &opts),
+        Some("sweep") => cmd_sweep(&opts),
         Some("run") => cmd_run(&opts),
         Some("configs") => {
             let ctx = ExpCtx::new(None, Scale::Bench, 0);

@@ -12,8 +12,11 @@ use std::rc::Rc;
 
 use crate::blas::DgemmModel;
 use crate::calibration::{self, CalibratedModels};
+use crate::coordinator::sweep::{run_campaign, SimPoint, SweepOptions};
 use crate::coordinator::table::{fnum, fpct, Table};
-use crate::hpl::{simulate_direct, simulate_with_artifacts, Bcast, HplConfig, Rfact, SwapAlg};
+use crate::hpl::{
+    simulate_direct, simulate_with_artifacts, Bcast, HplConfig, HplResult, Rfact, SwapAlg,
+};
 use crate::network::{NetModel, Topology};
 use crate::platform::{
     calibrate_network, generative, CalProcedure, GroundTruth, Hierarchical, Mixture,
@@ -37,11 +40,69 @@ pub struct ExpCtx {
     pub scale: Scale,
     pub seed: u64,
     pub out_dir: PathBuf,
+    /// Worker threads for campaign sweeps (0 = `$HPLSIM_THREADS` or the
+    /// machine's available parallelism).
+    pub threads: usize,
+    /// Optional on-disk result cache: interrupted experiments resume.
+    pub cache_dir: Option<PathBuf>,
+}
+
+/// In-order consumer of campaign results. Experiments *plan* a
+/// declarative point list, hand it to the sweep runtime, then *consume*
+/// the results by replaying the same loop structure.
+pub struct PointResults {
+    it: std::vec::IntoIter<HplResult>,
+}
+
+impl PointResults {
+    fn new(results: Vec<HplResult>) -> PointResults {
+        PointResults { it: results.into_iter() }
+    }
+
+    /// Pop the next result (panics if the consume loop requests more
+    /// points than were planned — always a bug in the experiment).
+    pub fn pop(&mut self) -> HplResult {
+        self.it.next().expect("experiment consumed more points than planned")
+    }
+
+    pub fn gflops(&mut self) -> f64 {
+        self.pop().gflops
+    }
+
+    pub fn seconds(&mut self) -> f64 {
+        self.pop().seconds
+    }
+
+    pub fn take_gflops(&mut self, k: usize) -> Vec<f64> {
+        (0..k).map(|_| self.gflops()).collect()
+    }
+
+    pub fn take_seconds(&mut self, k: usize) -> Vec<f64> {
+        (0..k).map(|_| self.seconds()).collect()
+    }
+
+    /// Assert every planned point was consumed. Experiments duplicate
+    /// their loop nest (plan, then consume); calling this at the end
+    /// turns plan/consume drift into a loud failure instead of silently
+    /// misattributed results.
+    pub fn finish(mut self) {
+        assert!(
+            self.it.next().is_none(),
+            "experiment planned more points than it consumed"
+        );
+    }
 }
 
 impl ExpCtx {
     pub fn new(arts: Option<Rc<Artifacts>>, scale: Scale, seed: u64) -> ExpCtx {
-        ExpCtx { arts, scale, seed, out_dir: PathBuf::from("results") }
+        ExpCtx {
+            arts,
+            scale,
+            seed,
+            out_dir: PathBuf::from("results"),
+            threads: 0,
+            cache_dir: None,
+        }
     }
 
     fn is_full(&self) -> bool {
@@ -76,6 +137,65 @@ impl ExpCtx {
                 .expect("artifact simulation"),
             None => simulate_direct(cfg, topo, net, dgemm, rpn, seed),
         }
+    }
+
+    /// Build one self-contained simulation point for a campaign.
+    #[allow(clippy::too_many_arguments)]
+    pub fn point(
+        &self,
+        label: String,
+        cfg: &HplConfig,
+        topo: &Topology,
+        net: &NetModel,
+        dgemm: &DgemmModel,
+        rpn: usize,
+        seed: u64,
+    ) -> SimPoint {
+        SimPoint {
+            label,
+            cfg: cfg.clone(),
+            topo: topo.clone(),
+            net: net.clone(),
+            dgemm: dgemm.clone(),
+            rpn,
+            seed,
+        }
+    }
+
+    /// Execute a declarative point list and return its results in point
+    /// order. Without artifacts the points fan out over the
+    /// work-stealing campaign runtime; artifact-backed contexts run
+    /// sequentially through the XLA pipeline (the PJRT client holds
+    /// process-wide state and is not `Send`).
+    pub fn run_points(&self, points: Vec<SimPoint>) -> PointResults {
+        let results = match &self.arts {
+            Some(a) => {
+                if self.threads != 0 || self.cache_dir.is_some() {
+                    eprintln!(
+                        "warning: --threads/--cache are ignored on the artifact path \
+                         (the PJRT client is single-threaded and uncached)"
+                    );
+                }
+                points
+                    .iter()
+                    .map(|p| {
+                        simulate_with_artifacts(
+                            &p.cfg, &p.topo, &p.net, &p.dgemm, a, p.rpn, p.seed,
+                        )
+                        .expect("artifact simulation")
+                    })
+                    .collect()
+            }
+            None => {
+                let opts = SweepOptions {
+                    threads: self.threads,
+                    cache_dir: self.cache_dir.clone(),
+                    progress: false,
+                };
+                run_campaign(&points, &opts).results
+            }
+        };
+        PointResults::new(results)
     }
 
     fn save(&self, t: &Table, name: &str) {
@@ -139,6 +259,35 @@ pub fn fig5(ctx: &ExpCtx) -> Table {
     let net_cal = calibrate_network(&gt, CalProcedure::Improved, ctx.seed + 1);
     let models = cal_models(ctx, &gt, s.cal_samples);
 
+    // Plan: every (N, fidelity, repetition) is one independent point.
+    let mut pts = Vec::new();
+    for &n in &s.n_list {
+        let mut cfg = HplConfig::dahu_default(n, s.p, s.q);
+        cfg.nb = s.nb;
+        for r in 0..s.reality_reps {
+            let day_model = gt.day_model(r);
+            pts.push(ctx.point(
+                format!("fig5/N{n}/reality{r}"),
+                &cfg, &topo, &net_truth, &day_model, s.rpn, ctx.seed + 100 + r,
+            ));
+        }
+        pts.push(ctx.point(
+            format!("fig5/N{n}/naive"),
+            &cfg, &topo, &net_cal, &models.naive, s.rpn, ctx.seed + 201,
+        ));
+        pts.push(ctx.point(
+            format!("fig5/N{n}/hetero"),
+            &cfg, &topo, &net_cal, &models.hetero, s.rpn, ctx.seed + 202,
+        ));
+        for r in 0..3u64 {
+            pts.push(ctx.point(
+                format!("fig5/N{n}/full{r}"),
+                &cfg, &topo, &net_cal, &models.full, s.rpn, ctx.seed + 300 + r,
+            ));
+        }
+    }
+    let mut res = ctx.run_points(pts);
+
     let mut t = Table::new(
         "Fig. 5 — HPL performance: predictions vs reality (GFlop/s)",
         &[
@@ -147,25 +296,11 @@ pub fn fig5(ctx: &ExpCtx) -> Table {
         ],
     );
     for &n in &s.n_list {
-        let mut cfg = HplConfig::dahu_default(n, s.p, s.q);
-        cfg.nb = s.nb;
-        let reality: Vec<f64> = (0..s.reality_reps)
-            .map(|r| {
-                let day_model = gt.day_model(r);
-                ctx.sim(&cfg, &topo, &net_truth, &day_model, s.rpn, ctx.seed + 100 + r)
-                    .gflops
-            })
-            .collect();
+        let reality = res.take_gflops(s.reality_reps as usize);
         let rm = mean(&reality);
-        let a = ctx.sim(&cfg, &topo, &net_cal, &models.naive, s.rpn, ctx.seed + 201).gflops;
-        let b = ctx.sim(&cfg, &topo, &net_cal, &models.hetero, s.rpn, ctx.seed + 202).gflops;
-        let c_runs: Vec<f64> = (0..3)
-            .map(|r| {
-                ctx.sim(&cfg, &topo, &net_cal, &models.full, s.rpn, ctx.seed + 300 + r)
-                    .gflops
-            })
-            .collect();
-        let c = mean(&c_runs);
+        let a = res.gflops();
+        let b = res.gflops();
+        let c = mean(&res.take_gflops(3));
         t.row(vec![
             n.to_string(),
             fnum(rm),
@@ -178,6 +313,7 @@ pub fn fig5(ctx: &ExpCtx) -> Table {
             fpct(c / rm - 1.0),
         ]);
     }
+    res.finish();
     ctx.save(&t, "fig5");
     t
 }
@@ -195,25 +331,36 @@ pub fn fig6(ctx: &ExpCtx) -> Table {
     // Fresh: re-calibrated after the cooling malfunction.
     let fresh = cal_models(ctx, &gt_cool, s.cal_samples);
 
+    let mut pts = Vec::new();
+    for &n in &s.n_list {
+        let mut cfg = HplConfig::dahu_default(n, s.p, s.q);
+        cfg.nb = s.nb;
+        for r in 0..s.reality_reps {
+            pts.push(ctx.point(
+                format!("fig6/N{n}/reality{r}"),
+                &cfg, &topo, &net_truth, &gt_cool.day_model(r), s.rpn, ctx.seed + 400 + r,
+            ));
+        }
+        pts.push(ctx.point(
+            format!("fig6/N{n}/stale"),
+            &cfg, &topo, &net_cal, &stale.full, s.rpn, ctx.seed + 501,
+        ));
+        pts.push(ctx.point(
+            format!("fig6/N{n}/recal"),
+            &cfg, &topo, &net_cal, &fresh.full, s.rpn, ctx.seed + 502,
+        ));
+    }
+    let mut res = ctx.run_points(pts);
+
     let mut t = Table::new(
         "Fig. 6 — cooling issue on 4 nodes: stale vs recalibrated model (GFlop/s)",
         &["N", "reality", "stale-pred", "err-stale", "recal-pred", "err-recal"],
     );
     for &n in &s.n_list {
-        let mut cfg = HplConfig::dahu_default(n, s.p, s.q);
-        cfg.nb = s.nb;
-        let reality: Vec<f64> = (0..s.reality_reps)
-            .map(|r| {
-                ctx.sim(&cfg, &topo, &net_truth, &gt_cool.day_model(r), s.rpn,
-                    ctx.seed + 400 + r)
-                    .gflops
-            })
-            .collect();
+        let reality = res.take_gflops(s.reality_reps as usize);
         let rm = mean(&reality);
-        let p_stale =
-            ctx.sim(&cfg, &topo, &net_cal, &stale.full, s.rpn, ctx.seed + 501).gflops;
-        let p_fresh =
-            ctx.sim(&cfg, &topo, &net_cal, &fresh.full, s.rpn, ctx.seed + 502).gflops;
+        let p_stale = res.gflops();
+        let p_fresh = res.gflops();
         t.row(vec![
             n.to_string(),
             fnum(rm),
@@ -223,6 +370,7 @@ pub fn fig6(ctx: &ExpCtx) -> Table {
             fpct(p_fresh / rm - 1.0),
         ]);
     }
+    res.finish();
     ctx.save(&t, "fig6");
     t
 }
@@ -259,22 +407,36 @@ pub fn fig7(ctx: &ExpCtx) -> Table {
     let models = cal_models(ctx, &gt, 512);
 
     let nranks = nodes * rpn;
+    let mut pts = Vec::new();
+    for (p, q) in geometries(nranks) {
+        let mut cfg = HplConfig::dahu_default(n, p, q);
+        cfg.nb = nb;
+        for r in 0..reps {
+            pts.push(ctx.point(
+                format!("fig7/{p}x{q}/reality{r}"),
+                &cfg, &topo, &net_truth, &gt.day_model(r), rpn, ctx.seed + 600 + r,
+            ));
+        }
+        pts.push(ctx.point(
+            format!("fig7/{p}x{q}/optimistic"),
+            &cfg, &topo, &net_opt, &models.full, rpn, ctx.seed + 701,
+        ));
+        pts.push(ctx.point(
+            format!("fig7/{p}x{q}/improved"),
+            &cfg, &topo, &net_imp, &models.full, rpn, ctx.seed + 702,
+        ));
+    }
+    let mut res = ctx.run_points(pts);
+
     let mut t = Table::new(
         "Fig. 7 — geometry sweep: optimistic vs improved network calibration (GFlop/s)",
         &["PxQ", "reality", "opt-pred", "err-opt", "impr-pred", "err-impr"],
     );
     for (p, q) in geometries(nranks) {
-        let mut cfg = HplConfig::dahu_default(n, p, q);
-        cfg.nb = nb;
-        let reality: Vec<f64> = (0..reps)
-            .map(|r| {
-                ctx.sim(&cfg, &topo, &net_truth, &gt.day_model(r), rpn, ctx.seed + 600 + r)
-                    .gflops
-            })
-            .collect();
+        let reality = res.take_gflops(reps as usize);
         let rm = mean(&reality);
-        let po = ctx.sim(&cfg, &topo, &net_opt, &models.full, rpn, ctx.seed + 701).gflops;
-        let pi = ctx.sim(&cfg, &topo, &net_imp, &models.full, rpn, ctx.seed + 702).gflops;
+        let po = res.gflops();
+        let pi = res.gflops();
         t.row(vec![
             format!("{p}x{q}"),
             fnum(rm),
@@ -284,6 +446,7 @@ pub fn fig7(ctx: &ExpCtx) -> Table {
             fpct(pi / rm - 1.0),
         ]);
     }
+    res.finish();
     ctx.save(&t, "fig7");
     t
 }
@@ -313,15 +476,9 @@ pub fn fig8(ctx: &ExpCtx) -> (Table, Table) {
         best
     };
 
-    let mut t = Table::new(
-        "Fig. 8 — factorial experiment (GFlop/s)",
-        &["nb", "depth", "bcast", "swap", "reality", "pred", "err"],
-    );
-    let mut factors: Vec<(String, String, String, String)> = Vec::new();
-    let mut y_real = Vec::new();
-    let mut y_pred = Vec::new();
-    let mut within5 = 0usize;
-    let mut total = 0usize;
+    // Plan: the full factorial, two points (reality, prediction) each.
+    let day0 = gt.day_model(0);
+    let mut pts = Vec::new();
     for &nb in &nbs {
         for depth in [0usize, 1] {
             for bcast in Bcast::ALL {
@@ -338,12 +495,36 @@ pub fn fig8(ctx: &ExpCtx) -> (Table, Table) {
                         rfact: Rfact::Right,
                         nbmin: 8,
                     };
-                    let real = ctx
-                        .sim(&cfg, &topo, &net_truth, &gt.day_model(0), rpn, ctx.seed + 800)
-                        .gflops;
-                    let pred = ctx
-                        .sim(&cfg, &topo, &net_cal, &models.full, rpn, ctx.seed + 900)
-                        .gflops;
+                    let id = format!("fig8/nb{nb}-d{depth}-{}-{}", bcast.name(), swap.name());
+                    pts.push(ctx.point(
+                        format!("{id}/reality"),
+                        &cfg, &topo, &net_truth, &day0, rpn, ctx.seed + 800,
+                    ));
+                    pts.push(ctx.point(
+                        format!("{id}/pred"),
+                        &cfg, &topo, &net_cal, &models.full, rpn, ctx.seed + 900,
+                    ));
+                }
+            }
+        }
+    }
+    let mut res = ctx.run_points(pts);
+
+    let mut t = Table::new(
+        "Fig. 8 — factorial experiment (GFlop/s)",
+        &["nb", "depth", "bcast", "swap", "reality", "pred", "err"],
+    );
+    let mut factors: Vec<(String, String, String, String)> = Vec::new();
+    let mut y_real = Vec::new();
+    let mut y_pred = Vec::new();
+    let mut within5 = 0usize;
+    let mut total = 0usize;
+    for &nb in &nbs {
+        for depth in [0usize, 1] {
+            for bcast in Bcast::ALL {
+                for swap in SwapAlg::ALL {
+                    let real = res.gflops();
+                    let pred = res.gflops();
                     let err = pred / real - 1.0;
                     total += 1;
                     if err.abs() < 0.05 {
@@ -405,6 +586,7 @@ pub fn fig8(ctx: &ExpCtx) -> (Table, Table) {
         "fig8: best by reality = nb{} d{} {} {} | best by prediction = nb{} d{} {} {}",
         br.0, br.1, br.2, br.3, bp.0, bp.1, bp.2, bp.3
     );
+    res.finish();
     ctx.save(&t, "fig8");
     ctx.save(&at, "fig8_anova");
     (t, at)
@@ -548,20 +730,19 @@ pub fn fig12(ctx: &ExpCtx) -> Table {
     let net = gt.net_model();
     let gammas = [0.0, 0.02, 0.05, 0.10];
 
-    let mut t = Table::new(
-        "Fig. 12 — overhead of dgemm temporal variability (E[T]/T0 - 1)",
-        &["N", "gamma-cv", "overhead", "ci95"],
-    );
     let mut rng = Rng::new(ctx.seed + 42);
     let cluster_draws: Vec<Vec<[f64; 3]>> =
         (0..clusters).map(|_| h.sample_cluster(nodes, &mut rng)).collect();
+
+    // Plan: per (N, gamma-cv, cluster): one deterministic baseline run
+    // plus `reps` stochastic runs. One multi-threaded rank per node
+    // (§5.2): alpha is scaled by the per-node parallelism the paper's
+    // multithreaded BLAS achieves.
+    let mut pts = Vec::new();
     for &n in &n_list {
         let mut cfg = HplConfig::dahu_default(n, p, q);
         cfg.nb = nb;
-        // One multi-threaded rank per node (§5.2): scale alpha by the
-        // per-node parallelism the paper's multithreaded BLAS achieves.
         for &cv in &gammas {
-            let mut overheads = Vec::new();
             for (ci, cluster) in cluster_draws.iter().enumerate() {
                 // Node-level model: 16-way threaded dgemm.
                 let th = ctx.node_threads();
@@ -570,23 +751,40 @@ pub fn fig12(ctx: &ExpCtx) -> Table {
                     .map(|c| [c[0] / th, c[1], c[2] / th])
                     .collect();
                 let base_model = generative::model_from_linear(&scaled, Some(0.0));
-                let t0 = ctx
-                    .sim(&cfg, &topo, &net, &base_model, 1, ctx.seed + 4300)
-                    .seconds;
+                pts.push(ctx.point(
+                    format!("fig12/N{n}/cv{cv}/c{ci}/base"),
+                    &cfg, &topo, &net, &base_model, 1, ctx.seed + 4300,
+                ));
                 let model = generative::model_from_linear(&scaled, Some(cv));
-                let ts: Vec<f64> = (0..reps)
-                    .map(|r| {
-                        ctx.sim(&cfg, &topo, &net, &model, 1,
-                            ctx.seed + 4400 + (ci as u64) * 37 + r)
-                            .seconds
-                    })
-                    .collect();
+                for r in 0..reps {
+                    pts.push(ctx.point(
+                        format!("fig12/N{n}/cv{cv}/c{ci}/rep{r}"),
+                        &cfg, &topo, &net, &model, 1,
+                        ctx.seed + 4400 + (ci as u64) * 37 + r,
+                    ));
+                }
+            }
+        }
+    }
+    let mut res = ctx.run_points(pts);
+
+    let mut t = Table::new(
+        "Fig. 12 — overhead of dgemm temporal variability (E[T]/T0 - 1)",
+        &["N", "gamma-cv", "overhead", "ci95"],
+    );
+    for &n in &n_list {
+        for &cv in &gammas {
+            let mut overheads = Vec::new();
+            for _ci in 0..clusters {
+                let t0 = res.seconds();
+                let ts = res.take_seconds(reps as usize);
                 overheads.push(mean(&ts) / t0 - 1.0);
             }
             let (m, ci95) = mean_ci95(&overheads);
             t.row(vec![n.to_string(), format!("{cv}"), fpct(m), fpct(ci95)]);
         }
     }
+    res.finish();
     ctx.save(&t, "fig12");
     t
 }
@@ -612,19 +810,13 @@ pub fn fig13_15(ctx: &ExpCtx, scenario: Scenario) -> Table {
     let net = gt.net_model();
 
     let name = if scenario == Scenario::Normal { "fig13_14" } else { "fig15" };
-    let mut t = Table::new(
-        &format!(
-            "Figs. 13-15 ({}) — node eviction: overhead vs best full-cluster config",
-            if scenario == Scenario::Normal { "mild" } else { "strong heterogeneity" }
-        ),
-        &["evicted", "kept", "best-geom", "overhead", "ci95"],
-    );
-    // For each cluster: baseline = best geometry on all nodes.
-    let mut best_full_t = vec![f64::INFINITY; clusters];
+    // Plan: every (evict-count, cluster, candidate geometry) is one
+    // independent point; picking the best geometry per cluster is pure
+    // post-processing over the campaign results.
+    let mut pts = Vec::new();
+    let mut meta: Vec<(usize, usize, usize, usize)> = Vec::new(); // (k, ci, p, q)
     for k in 0..=max_evict {
         let kept = nodes - k;
-        let mut best_geo = String::new();
-        let mut overheads = Vec::new();
         for (ci, cluster) in clusters_draws.iter().enumerate() {
             // Evict the k slowest (largest alpha).
             let mut order: Vec<usize> = (0..nodes).collect();
@@ -648,17 +840,42 @@ pub fn fig13_15(ctx: &ExpCtx, scenario: Scenario) -> Table {
             if cand.is_empty() {
                 cand.push((1, kept));
             }
-            let mut best_time = f64::INFINITY;
             for (p, q) in cand {
                 let mut cfg = HplConfig::dahu_default(n_ref, p, q);
                 cfg.nb = nb;
-                let tt = ctx
-                    .sim(&cfg, &topo, &net, &model, 1, ctx.seed + 5300 + ci as u64)
-                    .seconds;
+                meta.push((k, ci, p, q));
+                pts.push(ctx.point(
+                    format!("{name}/evict{k}/c{ci}/{p}x{q}"),
+                    &cfg, &topo, &net, &model, 1, ctx.seed + 5300 + ci as u64,
+                ));
+            }
+        }
+    }
+    let mut res = ctx.run_points(pts);
+
+    let mut t = Table::new(
+        &format!(
+            "Figs. 13-15 ({}) — node eviction: overhead vs best full-cluster config",
+            if scenario == Scenario::Normal { "mild" } else { "strong heterogeneity" }
+        ),
+        &["evicted", "kept", "best-geom", "overhead", "ci95"],
+    );
+    // For each cluster: baseline = best geometry on all nodes.
+    let mut best_full_t = vec![f64::INFINITY; clusters];
+    let mut i = 0usize;
+    for k in 0..=max_evict {
+        let kept = nodes - k;
+        let mut best_geo = String::new();
+        let mut overheads = Vec::new();
+        for ci in 0..clusters {
+            let mut best_time = f64::INFINITY;
+            while i < meta.len() && meta[i].0 == k && meta[i].1 == ci {
+                let tt = res.seconds();
                 if tt < best_time {
                     best_time = tt;
-                    best_geo = format!("{p}x{q}");
+                    best_geo = format!("{}x{}", meta[i].2, meta[i].3);
                 }
+                i += 1;
             }
             if k == 0 {
                 best_full_t[ci] = best_time;
@@ -674,6 +891,7 @@ pub fn fig13_15(ctx: &ExpCtx, scenario: Scenario) -> Table {
             fpct(ci95),
         ]);
     }
+    res.finish();
     ctx.save(&t, name);
     t
 }
@@ -707,22 +925,34 @@ pub fn fig16(ctx: &ExpCtx) -> Table {
         best
     };
 
+    // Plan: per (N, active top switches): `reps` runs on the tapered
+    // fat-tree.
+    let mut pts = Vec::new();
+    for &n in &n_list {
+        let mut cfg = HplConfig::dahu_default(n, p, q);
+        cfg.nb = nb;
+        for tops in (1..=4).rev() {
+            let topo = Topology::fat_tree(
+                down, leaves, tops, para, gt.node_bw, gt.node_bw, gt.loop_bw,
+            );
+            for r in 0..reps {
+                pts.push(ctx.point(
+                    format!("fig16/N{n}/tops{tops}/rep{r}"),
+                    &cfg, &topo, &net, &model, 1, ctx.seed + 6300 + r,
+                ));
+            }
+        }
+    }
+    let mut res = ctx.run_points(pts);
+
     let mut t = Table::new(
         "Fig. 16 — fat-tree tapering: performance vs active top switches",
         &["N", "tops", "gflops", "degradation"],
     );
     for &n in &n_list {
-        let mut cfg = HplConfig::dahu_default(n, p, q);
-        cfg.nb = nb;
         let mut base = 0.0;
         for tops in (1..=4).rev() {
-            let topo = Topology::fat_tree(
-                down, leaves, tops, para, gt.node_bw, gt.node_bw, gt.loop_bw,
-            );
-            let gf: Vec<f64> = (0..reps)
-                .map(|r| ctx.sim(&cfg, &topo, &net, &model, 1, ctx.seed + 6300 + r).gflops)
-                .collect();
-            let g = mean(&gf);
+            let g = mean(&res.take_gflops(reps as usize));
             if tops == 4 {
                 base = g;
             }
@@ -734,6 +964,7 @@ pub fn fig16(ctx: &ExpCtx) -> Table {
             ]);
         }
     }
+    res.finish();
     ctx.save(&t, "fig16");
     t
 }

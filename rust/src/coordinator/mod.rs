@@ -1,9 +1,11 @@
 //! Experiment coordination: the CLI, the per-figure experiment
-//! registry, and result tables.
+//! registry, the parallel campaign runtime, and result tables.
 
 pub mod cli;
 pub mod experiments;
+pub mod sweep;
 pub mod table;
 
-pub use experiments::{ExpCtx, Scale};
+pub use experiments::{ExpCtx, PointResults, Scale};
+pub use sweep::{run_campaign, CampaignReport, SimPoint, SweepOptions};
 pub use table::Table;

@@ -1,0 +1,560 @@
+//! The parallel campaign runtime.
+//!
+//! The paper's value proposition is running *cheap, massive* simulation
+//! campaigns — validation sweeps, sensibility analyses, HPL parameter
+//! optimization under uncertainty — on one commodity server. This module
+//! turns a campaign into data: a list of self-contained [`SimPoint`]s
+//! executed by a work-stealing thread pool, with
+//!
+//! * **deterministic seeding** — every point carries its own seed,
+//!   derived from the campaign seed and the point index
+//!   ([`point_seed`]), so results are bit-identical regardless of the
+//!   number of worker threads or the order points happen to execute in;
+//! * **a resumable on-disk cache** — each point has a 64-bit
+//!   [`SimPoint::fingerprint`] over its configuration, seed and the
+//!   simulation-model version; finished results are persisted as one
+//!   JSON file per fingerprint, so an interrupted campaign restarts
+//!   exactly where it left off and only recomputes uncached points;
+//! * **structured progress/ETA reporting** on stderr.
+//!
+//! Every worker constructs its own engine / network / platform instances
+//! per point (`simulate_direct` builds a fresh single-threaded `Sim`),
+//! so no `Rc` state ever crosses a thread boundary. This campaign
+//! abstraction is also the seam where sharding across machines and
+//! alternative execution backends attach later.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::blas::DgemmModel;
+use crate::hpl::{simulate_direct, HplConfig, HplResult};
+use crate::mpi::CommStats;
+use crate::network::{NetModel, Topology};
+use crate::stats::derive_seed;
+use crate::stats::json::Json;
+
+/// Version of the simulation model baked into cache fingerprints.
+/// Bump whenever a change alters simulated results, so stale cache
+/// entries are never reused.
+pub const MODEL_VERSION: u64 = 1;
+
+/// Derive the seed of campaign point `index` from the campaign seed:
+/// `hash(campaign_seed, point_index)` through the in-tree RNG, so the
+/// seed depends only on the point's identity, never on which worker
+/// thread runs it or when.
+pub fn point_seed(campaign_seed: u64, index: u64) -> u64 {
+    derive_seed(campaign_seed, index)
+}
+
+/// One self-contained simulation point: everything a worker needs to
+/// run one HPL simulation, with no shared state. All fields are plain
+/// data (`Send`), so points can move freely across threads.
+#[derive(Clone, Debug)]
+pub struct SimPoint {
+    /// Human-readable label (experiment/row id); not part of the
+    /// fingerprint.
+    pub label: String,
+    pub cfg: HplConfig,
+    pub topo: Topology,
+    pub net: NetModel,
+    pub dgemm: DgemmModel,
+    /// MPI ranks per node.
+    pub rpn: usize,
+    /// Per-point seed (see [`point_seed`]).
+    pub seed: u64,
+}
+
+/// FNV-1a over a canonical encoding of a point's inputs.
+struct Fp(u64);
+
+impl Fp {
+    fn new() -> Fp {
+        Fp(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn push_byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+
+    fn push_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.push_byte(b);
+        }
+    }
+
+    fn push_usize(&mut self, v: usize) {
+        self.push_u64(v as u64);
+    }
+
+    fn push_f64(&mut self, v: f64) {
+        self.push_u64(v.to_bits());
+    }
+
+    fn push_str(&mut self, s: &str) {
+        self.push_u64(s.len() as u64);
+        for b in s.bytes() {
+            self.push_byte(b);
+        }
+    }
+}
+
+impl SimPoint {
+    /// 64-bit fingerprint of (config, seed, model inputs, model
+    /// version): the cache key. Two points with equal fingerprints
+    /// simulate identically.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fp::new();
+        h.push_u64(MODEL_VERSION);
+        // HPL configuration.
+        h.push_usize(self.cfg.n);
+        h.push_usize(self.cfg.nb);
+        h.push_usize(self.cfg.p);
+        h.push_usize(self.cfg.q);
+        h.push_usize(self.cfg.depth);
+        h.push_str(self.cfg.bcast.name());
+        h.push_str(self.cfg.swap.name());
+        h.push_usize(self.cfg.swap_threshold);
+        h.push_str(self.cfg.rfact.name());
+        h.push_usize(self.cfg.nbmin);
+        h.push_usize(self.rpn);
+        h.push_u64(self.seed);
+        // Topology.
+        match &self.topo {
+            Topology::Star { nodes, caps } => {
+                h.push_str("star");
+                h.push_usize(*nodes);
+                for c in caps {
+                    h.push_f64(*c);
+                }
+            }
+            Topology::FatTree { nodes, down_leaf, leaves, tops, para, caps } => {
+                h.push_str("fat-tree");
+                h.push_usize(*nodes);
+                h.push_usize(*down_leaf);
+                h.push_usize(*leaves);
+                h.push_usize(*tops);
+                h.push_usize(*para);
+                for c in caps {
+                    h.push_f64(*c);
+                }
+            }
+        }
+        // Protocol model (BTreeMap iteration order is deterministic).
+        h.push_f64(self.net.async_threshold);
+        h.push_f64(self.net.rendezvous_threshold);
+        for (class, segs) in &self.net.classes {
+            h.push_str(&format!("{class:?}"));
+            h.push_usize(segs.len());
+            for s in segs {
+                h.push_f64(s.max_bytes);
+                h.push_f64(s.latency);
+                h.push_f64(s.bw_factor);
+            }
+        }
+        // dgemm model coefficients.
+        h.push_usize(self.dgemm.nodes.len());
+        for c in &self.dgemm.nodes {
+            for v in c.mu {
+                h.push_f64(v);
+            }
+            for v in c.sigma {
+                h.push_f64(v);
+            }
+        }
+        h.0
+    }
+}
+
+/// Options of a campaign run.
+#[derive(Clone, Debug, Default)]
+pub struct SweepOptions {
+    /// Worker threads; 0 = `$HPLSIM_THREADS` or the machine's available
+    /// parallelism.
+    pub threads: usize,
+    /// On-disk result cache directory (None = no cache).
+    pub cache_dir: Option<PathBuf>,
+    /// Emit progress/ETA lines on stderr.
+    pub progress: bool,
+}
+
+/// Outcome of a campaign: per-point results in point order plus
+/// execution accounting.
+#[derive(Clone, Debug)]
+pub struct CampaignReport {
+    /// One result per input point, in input order (independent of
+    /// execution order).
+    pub results: Vec<HplResult>,
+    /// Whether each result was served from the on-disk cache.
+    pub from_cache: Vec<bool>,
+    /// Simulations actually executed in this run (one per distinct
+    /// uncached fingerprint; equal-fingerprint duplicates are served
+    /// from the first computation and counted in neither tally).
+    pub computed: usize,
+    /// Points served from the on-disk cache.
+    pub cached: usize,
+    /// Wall-clock of the whole campaign (seconds).
+    pub wall_seconds: f64,
+    /// Worker threads actually used.
+    pub threads: usize,
+}
+
+/// Resolve a thread-count request: explicit > `$HPLSIM_THREADS` >
+/// available parallelism.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Some(n) = std::env::var("HPLSIM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+    {
+        return n;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Serialize one result for the on-disk cache.
+pub fn result_to_json(r: &HplResult) -> Json {
+    Json::obj(vec![
+        ("seconds", Json::Num(r.seconds)),
+        ("gflops", Json::Num(r.gflops)),
+        ("messages", Json::Num(r.comm.messages as f64)),
+        ("bytes", Json::Num(r.comm.bytes)),
+        ("iprobes", Json::Num(r.comm.iprobes as f64)),
+        ("events", Json::Num(r.events as f64)),
+        ("dgemm_calls", Json::Num(r.dgemm_calls as f64)),
+    ])
+}
+
+/// Deserialize a cached result.
+pub fn result_from_json(v: &Json) -> Option<HplResult> {
+    Some(HplResult {
+        seconds: v.get("seconds")?.as_f64()?,
+        gflops: v.get("gflops")?.as_f64()?,
+        comm: CommStats {
+            messages: v.get("messages")?.as_f64()? as u64,
+            bytes: v.get("bytes")?.as_f64()?,
+            iprobes: v.get("iprobes")?.as_f64()? as u64,
+        },
+        events: v.get("events")?.as_f64()? as u64,
+        dgemm_calls: v.get("dgemm_calls")?.as_f64()? as usize,
+    })
+}
+
+fn path_for(dir: &Path, fp: u64) -> PathBuf {
+    dir.join(format!("{fp:016x}.json"))
+}
+
+/// Cache file of a point: one JSON file per fingerprint.
+pub fn cache_path_for(dir: &Path, point: &SimPoint) -> PathBuf {
+    path_for(dir, point.fingerprint())
+}
+
+/// Look a point up in the cache; misses on absence, corruption, a
+/// fingerprint mismatch, or a different model version.
+pub fn cache_lookup(dir: &Path, point: &SimPoint) -> Option<HplResult> {
+    lookup_fp(dir, point.fingerprint())
+}
+
+fn lookup_fp(dir: &Path, fp: u64) -> Option<HplResult> {
+    let text = std::fs::read_to_string(path_for(dir, fp)).ok()?;
+    let v = Json::parse(&text).ok()?;
+    if v.get("fingerprint")?.as_str()? != format!("{fp:016x}") {
+        return None;
+    }
+    if v.get("model_version")?.as_f64()? as u64 != MODEL_VERSION {
+        return None;
+    }
+    result_from_json(v.get("result")?)
+}
+
+/// Persist a finished point (atomic: write then rename). Failures are
+/// reported but never abort the campaign — the cache is an optimization.
+pub fn cache_store(dir: &Path, point: &SimPoint, r: &HplResult) {
+    store_fp(dir, &point.label, point.fingerprint(), r)
+}
+
+fn store_fp(dir: &Path, label: &str, fp: u64, r: &HplResult) {
+    let v = Json::obj(vec![
+        ("fingerprint", Json::Str(format!("{fp:016x}"))),
+        ("model_version", Json::Num(MODEL_VERSION as f64)),
+        ("label", Json::Str(label.to_string())),
+        ("result", result_to_json(r)),
+    ]);
+    static TMP_SEQ: AtomicUsize = AtomicUsize::new(0);
+    let final_path = path_for(dir, fp);
+    let tmp_path = dir.join(format!(
+        "{fp:016x}.tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let res = std::fs::write(&tmp_path, v.to_string())
+        .and_then(|()| std::fs::rename(&tmp_path, &final_path));
+    if let Err(e) = res {
+        eprintln!("sweep: warning: could not cache {}: {e}", final_path.display());
+    }
+}
+
+/// Progress/ETA reporter shared by all workers.
+struct Progress {
+    total: usize,
+    enabled: bool,
+    start: Instant,
+    done: AtomicUsize,
+    last: Mutex<Instant>,
+}
+
+impl Progress {
+    fn new(total: usize, enabled: bool) -> Progress {
+        let now = Instant::now();
+        Progress {
+            total,
+            enabled,
+            start: now,
+            done: AtomicUsize::new(0),
+            last: Mutex::new(now),
+        }
+    }
+
+    fn tick(&self) {
+        let done = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.enabled {
+            return;
+        }
+        let now = Instant::now();
+        let mut last = self.last.lock().unwrap();
+        if done < self.total && now.duration_since(*last).as_secs_f64() < 1.0 {
+            return;
+        }
+        *last = now;
+        drop(last);
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let rate = done as f64 / elapsed.max(1e-9);
+        let eta = (self.total - done) as f64 / rate.max(1e-9);
+        eprintln!(
+            "sweep: {done}/{} points ({:.0}%) | {:.1}s elapsed | {:.2} pts/s | eta {:.1}s",
+            self.total,
+            100.0 * done as f64 / self.total.max(1) as f64,
+            elapsed,
+            rate,
+            eta,
+        );
+    }
+}
+
+/// Pop the next point index: own deque front first, then steal from the
+/// back of the busiest-looking victim (round-robin scan).
+fn next_task(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
+    if let Some(i) = deques[me].lock().unwrap().pop_front() {
+        return Some(i);
+    }
+    let n = deques.len();
+    for off in 1..n {
+        let victim = (me + off) % n;
+        if let Some(i) = deques[victim].lock().unwrap().pop_back() {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Execute a campaign: serve cached points, fan the rest out over the
+/// work-stealing pool, and return results in point order.
+pub fn run_campaign(points: &[SimPoint], opts: &SweepOptions) -> CampaignReport {
+    let t0 = Instant::now();
+    let threads = resolve_threads(opts.threads);
+    if let Some(dir) = &opts.cache_dir {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("sweep: warning: cannot create cache dir {}: {e}", dir.display());
+        }
+    }
+
+    // Hash every point exactly once; lookups, stores, and the
+    // duplicate fan-out below all reuse these fingerprints.
+    let fps: Vec<u64> = points.iter().map(|p| p.fingerprint()).collect();
+    let mut slots: Vec<Option<HplResult>> = fps
+        .iter()
+        .map(|&fp| opts.cache_dir.as_deref().and_then(|d| lookup_fp(d, fp)))
+        .collect();
+    let from_cache: Vec<bool> = slots.iter().map(|s| s.is_some()).collect();
+    let cached = from_cache.iter().filter(|&&c| c).count();
+    // Simulate each distinct fingerprint once; equal-fingerprint
+    // duplicates (e.g. a baseline point repeated across sweep axes) are
+    // fanned out from the first computation afterwards.
+    let mut first_of: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+    let mut todo: Vec<usize> = Vec::new();
+    for (i, slot) in slots.iter().enumerate() {
+        if slot.is_some() {
+            continue;
+        }
+        if let std::collections::hash_map::Entry::Vacant(e) = first_of.entry(fps[i]) {
+            e.insert(i);
+            todo.push(i);
+        }
+    }
+
+    let workers = threads.min(todo.len()).max(1);
+    let deques: Vec<Mutex<VecDeque<usize>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for (i, &idx) in todo.iter().enumerate() {
+        deques[i % workers].lock().unwrap().push_back(idx);
+    }
+
+    let progress = Progress::new(todo.len(), opts.progress);
+    let finished: Mutex<Vec<(usize, HplResult)>> = Mutex::new(Vec::with_capacity(todo.len()));
+    let cache_dir = opts.cache_dir.as_deref();
+
+    std::thread::scope(|s| {
+        let deques = &deques;
+        let finished = &finished;
+        let progress = &progress;
+        let fps = &fps;
+        for me in 0..workers {
+            s.spawn(move || {
+                while let Some(idx) = next_task(deques, me) {
+                    let p = &points[idx];
+                    let r = simulate_direct(&p.cfg, &p.topo, &p.net, &p.dgemm, p.rpn, p.seed);
+                    if let Some(dir) = cache_dir {
+                        store_fp(dir, &p.label, fps[idx], &r);
+                    }
+                    finished.lock().unwrap().push((idx, r));
+                    progress.tick();
+                }
+            });
+        }
+    });
+
+    let computed_list = finished.into_inner().unwrap();
+    let computed = computed_list.len();
+    for (idx, r) in computed_list {
+        slots[idx] = Some(r);
+    }
+    // Fan computed results out to equal-fingerprint duplicates.
+    for i in 0..slots.len() {
+        if slots[i].is_none() {
+            let first = slots[first_of[&fps[i]]];
+            slots[i] = first;
+        }
+    }
+    let results: Vec<HplResult> =
+        slots.into_iter().map(|s| s.expect("campaign point never executed")).collect();
+    CampaignReport {
+        results,
+        from_cache,
+        computed,
+        cached,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        threads: workers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::NodeCoef;
+    use crate::hpl::{Bcast, Rfact, SwapAlg};
+
+    fn tiny_point(seed: u64) -> SimPoint {
+        SimPoint {
+            label: "tiny".into(),
+            cfg: HplConfig {
+                n: 128,
+                nb: 32,
+                p: 2,
+                q: 2,
+                depth: 0,
+                bcast: Bcast::Ring,
+                swap: SwapAlg::BinExch,
+                swap_threshold: 64,
+                rfact: Rfact::Crout,
+                nbmin: 8,
+            },
+            topo: Topology::star(4, 12.5e9, 40e9),
+            net: NetModel::ideal(),
+            dgemm: DgemmModel::homogeneous(NodeCoef {
+                mu: [1e-11, 0.0, 0.0, 0.0, 5e-7],
+                sigma: [3e-13, 0.0, 0.0, 0.0, 0.0],
+            }),
+            rpn: 1,
+            seed,
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let a = tiny_point(7);
+        assert_eq!(a.fingerprint(), tiny_point(7).fingerprint());
+        // Seed, config, and model all feed the fingerprint.
+        assert_ne!(a.fingerprint(), tiny_point(8).fingerprint());
+        let mut b = tiny_point(7);
+        b.cfg.nb = 64;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = tiny_point(7);
+        c.dgemm.nodes[0].mu[0] *= 2.0;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // The label is presentation only.
+        let mut d = tiny_point(7);
+        d.label = "renamed".into();
+        assert_eq!(a.fingerprint(), d.fingerprint());
+    }
+
+    #[test]
+    fn result_json_roundtrip() {
+        let r = HplResult {
+            seconds: 1.25,
+            gflops: 321.5,
+            comm: CommStats { messages: 1234, bytes: 5.5e9, iprobes: 99 },
+            events: 1_000_001,
+            dgemm_calls: 4242,
+        };
+        let back = result_from_json(&Json::parse(&result_to_json(&r).to_string()).unwrap())
+            .unwrap();
+        assert_eq!(r.seconds, back.seconds);
+        assert_eq!(r.gflops, back.gflops);
+        assert_eq!(r.comm.messages, back.comm.messages);
+        assert_eq!(r.comm.bytes, back.comm.bytes);
+        assert_eq!(r.events, back.events);
+        assert_eq!(r.dgemm_calls, back.dgemm_calls);
+    }
+
+    #[test]
+    fn point_seed_depends_only_on_index() {
+        assert_eq!(point_seed(42, 3), point_seed(42, 3));
+        assert_ne!(point_seed(42, 3), point_seed(42, 4));
+        assert_ne!(point_seed(42, 3), point_seed(43, 3));
+    }
+
+    #[test]
+    fn empty_campaign_is_fine() {
+        let rep = run_campaign(&[], &SweepOptions::default());
+        assert!(rep.results.is_empty());
+        assert_eq!(rep.computed + rep.cached, 0);
+    }
+
+    #[test]
+    fn equal_fingerprint_points_simulated_once() {
+        // Same config + seed three times, plus one distinct point.
+        let pts = vec![tiny_point(5), tiny_point(5), tiny_point(6), tiny_point(5)];
+        let rep = run_campaign(&pts, &SweepOptions { threads: 2, ..Default::default() });
+        assert_eq!(rep.computed, 2, "duplicates must not be re-simulated");
+        assert_eq!(rep.results[0].seconds, rep.results[1].seconds);
+        assert_eq!(rep.results[0].seconds, rep.results[3].seconds);
+        assert_ne!(rep.results[0].seconds, rep.results[2].seconds);
+    }
+
+    #[test]
+    fn campaign_results_in_point_order() {
+        let pts: Vec<SimPoint> = (0..6).map(|i| tiny_point(100 + i)).collect();
+        let seq = run_campaign(&pts, &SweepOptions { threads: 1, ..Default::default() });
+        let par = run_campaign(&pts, &SweepOptions { threads: 3, ..Default::default() });
+        for (a, b) in seq.results.iter().zip(&par.results) {
+            assert_eq!(a.seconds, b.seconds);
+            assert_eq!(a.comm.messages, b.comm.messages);
+        }
+        assert_eq!(seq.computed, 6);
+    }
+}

@@ -98,17 +98,25 @@ impl Default for Sim {
 
 impl Sim {
     pub fn new() -> Sim {
+        Sim::with_capacity(0)
+    }
+
+    /// Build a simulation with task storage pre-allocated for `tasks`
+    /// tasks (e.g. one per MPI rank). Campaign sweeps construct one
+    /// engine per point, so avoiding the repeated grow-reallocations of
+    /// the task and waker vectors matters at scale.
+    pub fn with_capacity(tasks: usize) -> Sim {
         Sim {
             k: Rc::new(RefCell::new(Kernel {
                 now: 0.0,
                 seq: 0,
-                timers: BinaryHeap::new(),
-                tasks: Vec::new(),
-                wakers: Vec::new(),
+                timers: BinaryHeap::with_capacity(tasks),
+                tasks: Vec::with_capacity(tasks),
+                wakers: Vec::with_capacity(tasks),
                 live: 0,
                 events_fired: 0,
             })),
-            queue: Arc::new(Mutex::new(Vec::new())),
+            queue: Arc::new(Mutex::new(Vec::with_capacity(tasks))),
             polls: Rc::new(RefCell::new(0)),
         }
     }

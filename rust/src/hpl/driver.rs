@@ -48,7 +48,13 @@ fn bcast_bytes(cfg: &HplConfig, j: usize, row: usize) -> f64 {
     ((mp * jb + 2 * jb) * 8) as f64
 }
 
-fn make_bcast(cfg: &HplConfig, j: usize, row_group: &[usize], my_col: usize, my_row: usize) -> BcastOp {
+fn make_bcast(
+    cfg: &HplConfig,
+    j: usize,
+    row_group: &[usize],
+    my_col: usize,
+    my_row: usize,
+) -> BcastOp {
     let root = j % cfg.q;
     BcastOp::new(
         cfg.bcast,
@@ -224,7 +230,7 @@ pub fn run_once(
     ranks_per_node: usize,
 ) -> HplResult {
     cfg.validate().expect("invalid HPL config");
-    let sim = Sim::new();
+    let sim = Sim::with_capacity(cfg.nranks());
     let net = Network::new(sim.clone(), topo, model);
     let world = World::new(sim.clone(), net, cfg.nranks(), ranks_per_node);
     let cfg_rc = Rc::new(cfg.clone());
@@ -253,7 +259,7 @@ pub fn simulate_with_artifacts(
     arts: &Artifacts,
     ranks_per_node: usize,
     seed: u64,
-) -> anyhow::Result<HplResult> {
+) -> crate::runtime::Result<HplResult> {
     // Pass 1: record shapes (mean-only timings; the schedule is
     // data-independent so any timing works).
     let recorder = Recorder::new(dgemm.clone(), cfg.nranks());

@@ -29,7 +29,9 @@
 //! * [`calibration`] — synthetic benchmarking campaigns + model fitting.
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
 //! * [`coordinator`] — experiment registry (one module per paper
-//!   figure/table), thread-pool sweeps, CLI.
+//!   figure/table), the parallel campaign runtime (work-stealing
+//!   thread-pool sweeps with deterministic per-point seeding and a
+//!   resumable on-disk result cache), CLI.
 //! * [`stats`] — in-tree RNG, OLS, ANOVA, summaries, JSON (the offline
 //!   crate set has no rand/serde/criterion).
 

@@ -2,12 +2,13 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use super::{Error, Result, FEATS};
 use crate::stats::json::Json;
 
-/// Feature lanes of the polynomial model (must match `python/compile`).
-pub const FEATS: usize = 8;
+/// Convert any displayable error (e.g. the `xla` crate's) into ours.
+fn xe(e: impl std::fmt::Display) -> Error {
+    e.to_string().into()
+}
 
 /// Loaded executables + manifest metadata.
 pub struct Artifacts {
@@ -30,69 +31,58 @@ fn load_exe(
     path: &Path,
 ) -> Result<xla::PjRtLoadedExecutable> {
     let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().context("artifact path not utf-8")?,
+        path.to_str().ok_or("artifact path not utf-8")?,
     )
-    .with_context(|| format!("parsing {}", path.display()))?;
+    .map_err(|e| format!("parsing {}: {e}", path.display()))?;
     let comp = xla::XlaComputation::from_proto(&proto);
     client
         .compile(&comp)
-        .with_context(|| format!("compiling {}", path.display()))
+        .map_err(|e| format!("compiling {}: {e}", path.display()).into())
 }
 
 impl Artifacts {
-    /// Locate the artifacts directory: `$HPLSIM_ARTIFACTS`, `artifacts/`,
-    /// or `../artifacts/` relative to the current directory.
+    /// Locate the artifacts directory (see [`super::default_artifacts_dir`]).
     pub fn default_dir() -> PathBuf {
-        if let Ok(d) = std::env::var("HPLSIM_ARTIFACTS") {
-            return PathBuf::from(d);
-        }
-        for cand in ["artifacts", "../artifacts"] {
-            let p = PathBuf::from(cand);
-            if p.join("manifest.json").exists() {
-                return p;
-            }
-        }
-        PathBuf::from("artifacts")
+        super::default_artifacts_dir()
     }
 
     /// Load every artifact listed in `manifest.json`.
     pub fn load(dir: &Path) -> Result<Artifacts> {
         let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| {
+            .map_err(|e| {
                 format!(
-                    "reading {}/manifest.json — run `make artifacts` first",
+                    "reading {}/manifest.json — run `make artifacts` first: {e}",
                     dir.display()
                 )
             })?;
-        let manifest =
-            Json::parse(&manifest_text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let manifest = Json::parse(&manifest_text).map_err(|e| format!("manifest: {e}"))?;
         let feats = manifest
             .get("feats")
             .and_then(|v| v.as_f64())
-            .context("manifest.feats")? as usize;
+            .ok_or("manifest.feats")? as usize;
         if feats != FEATS {
-            bail!("manifest feats {feats} != compiled-in {FEATS}");
+            return Err(format!("manifest feats {feats} != compiled-in {FEATS}").into());
         }
         let nodes_cap = manifest
             .get("nodes")
             .and_then(|v| v.as_f64())
-            .context("manifest.nodes")? as usize;
-        let cal_p = manifest.get("cal_p").and_then(|v| v.as_f64()).context("cal_p")? as usize;
-        let cal_s = manifest.get("cal_s").and_then(|v| v.as_f64()).context("cal_s")? as usize;
+            .ok_or("manifest.nodes")? as usize;
+        let cal_p = manifest.get("cal_p").and_then(|v| v.as_f64()).ok_or("cal_p")? as usize;
+        let cal_s = manifest.get("cal_s").and_then(|v| v.as_f64()).ok_or("cal_s")? as usize;
 
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT CPU client: {e}"))?;
         let mut dgemm = Vec::new();
         if let Some(obj) = manifest.as_obj() {
             for key in obj.keys() {
                 if let Some(b) = key.strip_prefix("dgemm_model_") {
-                    let batch: usize = b.parse().context("batch suffix")?;
+                    let batch: usize = b.parse().map_err(|e| format!("batch suffix: {e}"))?;
                     let exe = load_exe(&client, &dir.join(format!("{key}.hlo.txt")))?;
                     dgemm.push((batch, exe));
                 }
             }
         }
         if dgemm.is_empty() {
-            bail!("no dgemm_model_* artifacts in {}", dir.display());
+            return Err(format!("no dgemm_model_* artifacts in {}", dir.display()).into());
         }
         dgemm.sort_by_key(|(b, _)| *b);
         let calibrate = load_exe(&client, &dir.join("calibrate.hlo.txt"))?;
@@ -150,9 +140,9 @@ impl Artifacts {
             sg_flat[i * FEATS..(i + 1) * FEATS].copy_from_slice(row);
         }
         let mu_lit = xla::Literal::vec1(&mu_flat)
-            .reshape(&[self.nodes_cap as i64, FEATS as i64])?;
+            .reshape(&[self.nodes_cap as i64, FEATS as i64]).map_err(xe)?;
         let sg_lit = xla::Literal::vec1(&sg_flat)
-            .reshape(&[self.nodes_cap as i64, FEATS as i64])?;
+            .reshape(&[self.nodes_cap as i64, FEATS as i64]).map_err(xe)?;
 
         let mut out = Vec::with_capacity(b);
         let mut off = 0usize;
@@ -179,16 +169,19 @@ impl Artifacts {
                 idx_v[i] = idx[off + i];
                 z_v[i] = z[off + i];
             }
-            let mnk_lit = xla::Literal::vec1(&mnk_flat).reshape(&[*batch as i64, 4])?;
+            let mnk_lit = xla::Literal::vec1(&mnk_flat).reshape(&[*batch as i64, 4]).map_err(xe)?;
             let idx_lit = xla::Literal::vec1(&idx_v);
             let z_lit = xla::Literal::vec1(&z_v);
 
-            let result = exe.execute::<xla::Literal>(&[
-                mnk_lit, idx_lit, mu_lit.clone(), sg_lit.clone(), z_lit,
-            ])?[0][0]
-                .to_literal_sync()?;
+            let result = exe
+                .execute::<xla::Literal>(&[
+                    mnk_lit, idx_lit, mu_lit.clone(), sg_lit.clone(), z_lit,
+                ])
+                .map_err(xe)?[0][0]
+                .to_literal_sync()
+                .map_err(xe)?;
             self.calls.set(self.calls.get() + 1);
-            let durs = result.to_tuple1()?.to_vec::<f32>()?;
+            let durs = result.to_tuple1().map_err(xe)?.to_vec::<f32>().map_err(xe)?;
             out.extend_from_slice(&durs[..n]);
             off += n;
         }
@@ -240,19 +233,22 @@ impl Artifacts {
                     y_flat[p * self.cal_s + s] = 1.0;
                 }
             }
-            let mnk_lit = xla::Literal::vec1(&mnk_flat).reshape(&[
-                self.cal_p as i64,
-                self.cal_s as i64,
-                4,
-            ])?;
+            let mnk_lit = xla::Literal::vec1(&mnk_flat)
+                .reshape(&[self.cal_p as i64, self.cal_s as i64, 4])
+                .map_err(xe)?;
             let y_lit = xla::Literal::vec1(&y_flat)
-                .reshape(&[self.cal_p as i64, self.cal_s as i64])?;
-            let result = self.calibrate.execute::<xla::Literal>(&[mnk_lit, y_lit])?[0][0]
-                .to_literal_sync()?;
+                .reshape(&[self.cal_p as i64, self.cal_s as i64])
+                .map_err(xe)?;
+            let result = self
+                .calibrate
+                .execute::<xla::Literal>(&[mnk_lit, y_lit])
+                .map_err(xe)?[0][0]
+                .to_literal_sync()
+                .map_err(xe)?;
             self.calls.set(self.calls.get() + 1);
-            let (mu_lit, sg_lit) = result.to_tuple2()?;
-            let mu = mu_lit.to_vec::<f32>()?;
-            let sg = sg_lit.to_vec::<f32>()?;
+            let (mu_lit, sg_lit) = result.to_tuple2().map_err(xe)?;
+            let mu = mu_lit.to_vec::<f32>().map_err(xe)?;
+            let sg = sg_lit.to_vec::<f32>().map_err(xe)?;
             for p in 0..n {
                 let mut mrow = [0f32; FEATS];
                 let mut srow = [0f32; FEATS];

@@ -2,13 +2,48 @@
 //!
 //! The Python side (`python/compile/aot.py`) lowers the Layer-2 JAX
 //! model — whose hot loops are the Layer-1 Pallas kernels — to HLO
-//! *text* under `artifacts/`. This module loads those artifacts once
-//! per process with the `xla` crate's PJRT CPU client and exposes typed,
-//! chunked entry points. Python is never on this path.
+//! *text* under `artifacts/`. With the `pjrt` cargo feature enabled
+//! (requires a vendored `xla` crate; see `Cargo.toml`), this module
+//! loads those artifacts once per process with the PJRT CPU client and
+//! exposes typed, chunked entry points. The default build carries a
+//! stub whose `load` fails cleanly, so every caller transparently falls
+//! back to the bit-equivalent pure-Rust model path.
 
-mod client;
+use std::path::PathBuf;
 
-pub use client::{Artifacts, FEATS};
+/// Boxed error type of the runtime layer (the offline crate set has no
+/// `anyhow`).
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Result alias used by the artifact pipeline.
+pub type Result<T> = std::result::Result<T, Error>;
 
 /// Number of polynomial feature lanes (matches `python/compile`).
-pub const COEFFS: usize = FEATS;
+/// Shared by the real client and the stub so the two build
+/// configurations cannot drift apart.
+pub const FEATS: usize = 8;
+
+/// Locate the artifacts directory: `$HPLSIM_ARTIFACTS`, `artifacts/`,
+/// or `../artifacts/` relative to the current directory.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("HPLSIM_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    for cand in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(feature = "pjrt")]
+mod client;
+#[cfg(feature = "pjrt")]
+pub use client::Artifacts;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Artifacts;

@@ -1,0 +1,80 @@
+//! Stub PJRT runtime used when the `pjrt` feature is disabled.
+//!
+//! Keeps the full `Artifacts` API surface so callers compile unchanged,
+//! but `load` always fails — which every call site already handles by
+//! falling back to the pure-Rust model path (the two are bit-equivalent
+//! up to f32 rounding; see `rust/tests/integration.rs`).
+
+use std::path::{Path, PathBuf};
+
+use super::{Result, FEATS};
+
+const UNAVAILABLE: &str = "hplsim was built without the `pjrt` feature; \
+     the XLA artifact path is unavailable (the pure-Rust model path is \
+     bit-equivalent — rebuild with `--features pjrt` and a vendored \
+     xla crate to enable PJRT)";
+
+/// Unconstructable stand-in for the PJRT artifact set.
+pub struct Artifacts {
+    /// Max nodes addressable by one coefficient table.
+    pub nodes_cap: usize,
+    /// Calibration chunk: nodes per call.
+    pub cal_p: usize,
+    /// Calibration chunk: samples per node per call.
+    pub cal_s: usize,
+    /// Executions performed (perf accounting).
+    pub calls: std::cell::Cell<u64>,
+    _unconstructable: (),
+}
+
+impl Artifacts {
+    /// Locate the artifacts directory (see [`super::default_artifacts_dir`]).
+    pub fn default_dir() -> PathBuf {
+        super::default_artifacts_dir()
+    }
+
+    /// Always fails in the stub build.
+    pub fn load(_dir: &Path) -> Result<Artifacts> {
+        Err(UNAVAILABLE.into())
+    }
+
+    /// Always fails in the stub build.
+    pub fn load_default() -> Result<Artifacts> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    /// Unreachable (no `Artifacts` value can exist in the stub build).
+    pub fn dgemm_durations(
+        &self,
+        _mnk: &[[f32; 3]],
+        _idx: &[i32],
+        _mu_tab: &[[f32; FEATS]],
+        _sg_tab: &[[f32; FEATS]],
+        _z: &[f32],
+    ) -> Result<Vec<f32>> {
+        Err(UNAVAILABLE.into())
+    }
+
+    /// Unreachable (no `Artifacts` value can exist in the stub build).
+    pub fn calibrate(
+        &self,
+        _samples: &[Vec<(f32, f32, f32, f32)>],
+    ) -> Result<(Vec<[f32; FEATS]>, Vec<[f32; FEATS]>)> {
+        Err(UNAVAILABLE.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_fails_cleanly_without_pjrt() {
+        let err = Artifacts::load_default().err().expect("stub must not load");
+        assert!(err.to_string().contains("pjrt"));
+    }
+}

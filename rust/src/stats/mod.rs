@@ -17,5 +17,5 @@ pub mod summary;
 pub use anova::{anova_one_way, AnovaRow};
 pub use linalg::{cholesky_solve, Matrix};
 pub use ols::{ols_fit, ols_rel_fit, OlsFit};
-pub use rng::Rng;
+pub use rng::{derive_seed, Rng};
 pub use summary::{mean, mean_ci95, quantile, std_dev, Summary};

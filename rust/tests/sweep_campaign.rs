@@ -1,0 +1,181 @@
+//! Campaign-runtime guarantees: bit-identical results at any worker
+//! thread count, and resume-from-cache recomputing only uncached points.
+
+use std::path::PathBuf;
+
+use hplsim::blas::{DgemmModel, NodeCoef};
+use hplsim::coordinator::sweep::{
+    cache_path_for, point_seed, result_to_json, run_campaign, SimPoint, SweepOptions,
+};
+use hplsim::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
+use hplsim::network::{NetModel, Topology};
+
+/// A campaign of small, heterogeneous points: geometry, NB, depth,
+/// bcast, swap and N all vary with the point index; each point's seed
+/// is derived from (campaign seed, index) only.
+fn campaign(npoints: usize, campaign_seed: u64) -> Vec<SimPoint> {
+    let dgemm = DgemmModel {
+        nodes: (0..4)
+            .map(|i| NodeCoef {
+                mu: [1e-11 * (1.0 + 0.02 * i as f64), 0.0, 0.0, 0.0, 5e-7],
+                sigma: [3e-13, 0.0, 0.0, 0.0, 0.0],
+            })
+            .collect(),
+    };
+    (0..npoints)
+        .map(|i| {
+            let (p, q) = [(1, 2), (2, 2), (1, 4), (2, 3)][i % 4];
+            SimPoint {
+                label: format!("pt{i}"),
+                cfg: HplConfig {
+                    n: 96 + 32 * (i % 5),
+                    nb: [16, 32][i % 2],
+                    p,
+                    q,
+                    depth: i % 2,
+                    bcast: Bcast::ALL[i % Bcast::ALL.len()],
+                    swap: SwapAlg::ALL[i % SwapAlg::ALL.len()],
+                    swap_threshold: 64,
+                    rfact: Rfact::ALL[i % Rfact::ALL.len()],
+                    nbmin: 8,
+                },
+                topo: Topology::star(4, 12.5e9, 40e9),
+                net: NetModel::ideal(),
+                dgemm: dgemm.clone(),
+                rpn: 2,
+                seed: point_seed(campaign_seed, i as u64),
+            }
+        })
+        .collect()
+}
+
+/// Canonical serialization of a whole campaign's results (the same
+/// encoding the on-disk cache uses).
+fn serialize(results: &[hplsim::hpl::HplResult]) -> String {
+    results
+        .iter()
+        .map(|r| result_to_json(r).to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("hplsim_sweep_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The tentpole guarantee: a 32-point campaign produces identical JSON
+/// results with 1, 2, and 8 worker threads — execution order and
+/// parallelism must never leak into the physics.
+#[test]
+fn campaign_is_bit_identical_across_thread_counts() {
+    let points = campaign(32, 42);
+    let baseline = run_campaign(
+        &points,
+        &SweepOptions { threads: 1, cache_dir: None, progress: false },
+    );
+    let expected = serialize(&baseline.results);
+    assert_eq!(baseline.computed, 32);
+    for threads in [2usize, 8] {
+        let rep = run_campaign(
+            &points,
+            &SweepOptions { threads, cache_dir: None, progress: false },
+        );
+        assert_eq!(
+            serialize(&rep.results),
+            expected,
+            "results diverged at {threads} worker threads"
+        );
+    }
+}
+
+/// Interrupt-and-resume: a restarted campaign must recompute only the
+/// points whose cache entries are missing, and reproduce the original
+/// results exactly.
+#[test]
+fn resume_recomputes_only_uncached_points() {
+    let dir = fresh_dir("resume");
+    let points = campaign(12, 7);
+    let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false };
+
+    let first = run_campaign(&points, &opts);
+    assert_eq!(first.computed, 12);
+    assert_eq!(first.cached, 0);
+    assert!(first.from_cache.iter().all(|&c| !c));
+
+    // A clean restart is a pure cache replay.
+    let replay = run_campaign(&points, &opts);
+    assert_eq!(replay.computed, 0);
+    assert_eq!(replay.cached, 12);
+    assert!(replay.from_cache.iter().all(|&c| c));
+    assert_eq!(serialize(&replay.results), serialize(&first.results));
+
+    // Simulate a campaign killed mid-flight: three results never made
+    // it to disk. The restart recomputes exactly those three.
+    for &i in &[1usize, 4, 7] {
+        std::fs::remove_file(cache_path_for(&dir, &points[i])).unwrap();
+    }
+    let resumed = run_campaign(&points, &opts);
+    assert_eq!(resumed.computed, 3);
+    assert_eq!(resumed.cached, 9);
+    for (i, &cached) in resumed.from_cache.iter().enumerate() {
+        assert_eq!(cached, ![1usize, 4, 7].contains(&i), "point {i}");
+    }
+    assert_eq!(serialize(&resumed.results), serialize(&first.results));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A model-version or fingerprint change must invalidate the cache
+/// entry (stale caches never poison new results).
+#[test]
+fn cache_misses_on_fingerprint_change() {
+    let dir = fresh_dir("fpmiss");
+    let points = campaign(4, 3);
+    let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false };
+    run_campaign(&points, &opts);
+
+    // Same campaign with different per-point seeds: all fingerprints
+    // change, nothing may be served from cache.
+    let reseeded = campaign(4, 4);
+    let rep = run_campaign(&reseeded, &opts);
+    assert_eq!(rep.cached, 0);
+    assert_eq!(rep.computed, 4);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Wall-clock speedup of a ≥100-point sweep at 4 worker threads vs 1.
+/// Timing-sensitive, so not part of the default suite:
+/// `cargo test --release --test sweep_campaign -- --ignored`
+#[test]
+#[ignore = "wall-clock benchmark; run manually with -- --ignored"]
+fn sweep_speedup_at_4_threads() {
+    let points: Vec<SimPoint> = campaign(100, 11)
+        .into_iter()
+        .map(|mut p| {
+            p.cfg.n = 1024; // heavy enough that the pool dominates setup
+            p.cfg.nb = 32;
+            p
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let seq = run_campaign(
+        &points,
+        &SweepOptions { threads: 1, cache_dir: None, progress: false },
+    );
+    let t_seq = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let par = run_campaign(
+        &points,
+        &SweepOptions { threads: 4, cache_dir: None, progress: false },
+    );
+    let t_par = t1.elapsed().as_secs_f64();
+    assert_eq!(serialize(&seq.results), serialize(&par.results));
+    assert!(
+        t_seq >= 2.0 * t_par,
+        "expected >= 2x speedup at 4 threads: sequential {t_seq:.2}s vs parallel {t_par:.2}s"
+    );
+}
