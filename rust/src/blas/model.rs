@@ -1,6 +1,8 @@
 //! Coefficient containers for the polynomial dgemm model and the linear
 //! auxiliary-kernel models.
 
+use crate::stats::json::Json;
+
 /// Number of polynomial coefficients: `[MNK, MN, MK, NK, 1]`.
 pub const N_COEF: usize = 5;
 
@@ -33,6 +35,23 @@ impl NodeCoef {
     pub fn deterministic(mut self) -> NodeCoef {
         self.sigma = [0.0; N_COEF];
         self
+    }
+
+    /// Serialize for campaign manifests (see `coordinator::manifest`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mu", Json::arr_f64(&self.mu)),
+            ("sigma", Json::arr_f64(&self.sigma)),
+        ])
+    }
+
+    /// Inverse of [`NodeCoef::to_json`]; `None` unless both polynomials
+    /// have exactly [`N_COEF`] coefficients.
+    pub fn from_json(v: &Json) -> Option<NodeCoef> {
+        Some(NodeCoef {
+            mu: v.get("mu")?.f64_vec()?.try_into().ok()?,
+            sigma: v.get("sigma")?.f64_vec()?.try_into().ok()?,
+        })
     }
 
     /// Convert to the f32 feature-lane layout of the XLA artifacts
@@ -109,6 +128,26 @@ impl DgemmModel {
             }
         }
         DgemmModel::homogeneous(NodeCoef { mu, sigma })
+    }
+
+    /// Serialize for campaign manifests (see `coordinator::manifest`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "nodes",
+            Json::Arr(self.nodes.iter().map(NodeCoef::to_json).collect()),
+        )])
+    }
+
+    /// Inverse of [`DgemmModel::to_json`]; `None` on an empty node list
+    /// (a model with no coefficients cannot be evaluated).
+    pub fn from_json(v: &Json) -> Option<DgemmModel> {
+        let nodes: Option<Vec<NodeCoef>> =
+            v.get("nodes")?.as_arr()?.iter().map(NodeCoef::from_json).collect();
+        let nodes = nodes?;
+        if nodes.is_empty() {
+            return None;
+        }
+        Some(DgemmModel { nodes })
     }
 }
 
@@ -190,6 +229,29 @@ mod tests {
         assert_eq!(mu[..5], [1.0, 2.0, 3.0, 4.0, 5.0]);
         assert_eq!(mu[5..], [0.0, 0.0, 0.0]);
         assert_eq!(sg[0], 0.1f32);
+    }
+
+    #[test]
+    fn json_roundtrip_exact_coefficients() {
+        let m = DgemmModel {
+            nodes: vec![
+                NodeCoef {
+                    mu: [1.0293e-11, 2e-9, -3e-10, 0.0, 5.7e-7],
+                    sigma: [3.1e-13, 0.0, 0.0, 1e-12, 0.0],
+                },
+                NodeCoef::naive(2.5e-11),
+            ],
+        };
+        let back =
+            DgemmModel::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(m.nodes, back.nodes);
+    }
+
+    #[test]
+    fn json_rejects_bad_shapes() {
+        assert!(DgemmModel::from_json(&Json::parse("{\"nodes\":[]}").unwrap()).is_none());
+        let short = r#"{"nodes":[{"mu":[1,2,3],"sigma":[0,0,0,0,0]}]}"#;
+        assert!(DgemmModel::from_json(&Json::parse(short).unwrap()).is_none());
     }
 
     #[test]

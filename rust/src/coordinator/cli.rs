@@ -1,12 +1,14 @@
 //! Hand-rolled CLI (the offline crate set has no clap).
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use crate::coordinator::experiments::{self, ExpCtx, Scale};
+use crate::coordinator::manifest::Manifest;
 use crate::coordinator::sweep::{self, run_campaign, SimPoint, SweepOptions};
 use crate::coordinator::table::{fnum, Table};
-use crate::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
+use crate::hpl::{Bcast, HplConfig, HplResult, Rfact, SwapAlg};
 use crate::platform::{calibrate_network, CalProcedure, GroundTruth, Scenario};
 use crate::runtime::Artifacts;
 
@@ -15,19 +17,38 @@ hplsim — simulation-based optimization & sensibility analysis of MPI applicati
 
 USAGE:
   hplsim exp <id> [--full] [--seed N] [--no-artifacts] [--out DIR]
-             [--threads T] [--cache DIR]
+             [--threads T] [--cache DIR] [--export-manifest FILE]
       id ∈ {table1, fig4, fig5, fig6, fig7, fig8, table2, fig10, fig11,
             fig12, fig13, fig14, fig15, fig16, all}
       Reproduce a paper figure/table. Simulation points fan out over the
       campaign runtime (T worker threads; 0 = auto); --cache makes the
-      campaign resumable.
+      campaign resumable. --export-manifest skips the simulations and
+      writes the experiment's point list as a campaign manifest instead
+      (execute it with shard/merge, then re-run the experiment with
+      --cache pointing at the merged cache).
   hplsim sweep [--points K] [--threads T] [--seed N] [--nodes K] [--rpn R]
                [--n N] [--scenario normal|cooling|multimodal]
                [--out DIR] [--cache DIR] [--no-cache]
+               [--manifest FILE] [--export-manifest FILE] [--plan-only]
       Random HPL parameter-space campaign (NB, depth, bcast, swap, rfact,
       geometry) on the calibrated surrogate: K points (default 100) with
       per-point seeds derived from the campaign seed, executed by the
       work-stealing sweep runtime with a resumable on-disk cache.
+      --manifest executes a previously exported campaign manifest instead
+      of sampling; --export-manifest writes the campaign as a manifest
+      (with --plan-only: write it and exit without simulating).
+  hplsim shard --manifest FILE --shards S --shard-index I --cache DIR
+               [--threads T]
+      Execute one deterministic partition of a campaign manifest — the
+      points with fingerprint % S == I — writing results into the
+      fingerprint-keyed cache DIR. Run one shard per machine, then
+      combine the caches with `hplsim merge`.
+  hplsim merge --manifest FILE [--out DIR] [--out-cache DIR] CACHE...
+      Combine shard caches: look every manifest point up in the CACHE
+      directories and emit the same campaign report (campaign.csv) a
+      single-machine `hplsim sweep --manifest` would, bit-for-bit.
+      --out-cache additionally copies all entries into one merged cache
+      directory (usable with `exp --cache` / `sweep --cache`).
   hplsim run [--n N] [--nb NB] [--p P] [--q Q] [--depth D]
              [--bcast ALG] [--swap ALG] [--rfact ALG]
              [--nodes K] [--rpn R] [--scenario normal|cooling|multimodal]
@@ -69,6 +90,24 @@ fn num<T: std::str::FromStr>(opts: &HashMap<String, String>, key: &str, default:
     opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Path-valued option. `parse_args` maps a valueless trailing flag to
+/// the sentinel "true", which for a path flag is always a forgotten
+/// argument — report it (exit code 2) instead of treating "true" as a
+/// file name.
+fn path_opt<'a>(
+    opts: &'a HashMap<String, String>,
+    key: &str,
+    cmd: &str,
+) -> Result<Option<&'a str>, i32> {
+    match opts.get(key).map(String::as_str) {
+        Some("true") => {
+            eprintln!("{cmd}: --{key} needs a path argument");
+            Err(2)
+        }
+        other => Ok(other),
+    }
+}
+
 fn load_artifacts(opts: &HashMap<String, String>) -> Option<Rc<Artifacts>> {
     if opts.contains_key("no-artifacts") {
         return None;
@@ -92,13 +131,27 @@ fn cmd_exp(positional: &[String], opts: &HashMap<String, String>) -> i32 {
     };
     let scale = if opts.contains_key("full") { Scale::Full } else { Scale::Bench };
     let seed = num(opts, "seed", 42u64);
-    let mut ctx = ExpCtx::new(load_artifacts(opts), scale, seed);
+    let export = match path_opt(opts, "export-manifest", "exp") {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    // Plan-only mode never simulates, so loading the PJRT artifacts
+    // would be pure startup waste.
+    let arts = if export.is_some() { None } else { load_artifacts(opts) };
+    let mut ctx = ExpCtx::new(arts, scale, seed);
     ctx.threads = num(opts, "threads", 0usize);
     if let Some(dir) = opts.get("cache") {
         ctx.cache_dir = Some(dir.into());
     }
     if let Some(dir) = opts.get("out") {
         ctx.out_dir = dir.into();
+    }
+    if export.is_some() {
+        ctx.plan_only = Some(std::cell::RefCell::new(Vec::new()));
+        eprintln!(
+            "exp: plan-only — campaign points are recorded instead of simulated \
+             (calibration still runs); campaign table values are placeholder zeros"
+        );
     }
     match id.as_str() {
         "table1" => drop(experiments::table1(&ctx)),
@@ -120,13 +173,34 @@ fn cmd_exp(positional: &[String], opts: &HashMap<String, String>) -> i32 {
             return 2;
         }
     }
+    if let Some(path) = export {
+        let points = ctx.plan_only.take().expect("plan mode set above").into_inner();
+        let manifest = Manifest::new(points);
+        if let Err(e) = manifest.save(Path::new(path)) {
+            eprintln!("exp: cannot write manifest {path}: {e}");
+            return 1;
+        }
+        if manifest.points.is_empty() {
+            eprintln!(
+                "exp: warning: '{id}' plans no campaign points (only the sim-heavy \
+                 experiments — fig5/6/7/8/12/13-15/16 — fan out through the campaign \
+                 runtime); wrote an empty manifest to {path}"
+            );
+        } else {
+            println!(
+                "exp: wrote manifest with {} points to {path} (execute with `hplsim \
+                 shard`, merge with `hplsim merge --out-cache`, then re-run this \
+                 experiment with --no-artifacts --cache <merged cache>)",
+                manifest.points.len()
+            );
+        }
+    }
     0
 }
 
-/// Random campaign over the HPL parameter space on the calibrated
-/// surrogate — the paper's §4.2/§5 "explore thousands of scenarios on
-/// one server" use case, through the parallel sweep runtime.
-fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
+/// Sample the sweep's random HPL parameter-space points (NB, depth,
+/// bcast, swap, rfact, geometry) on a freshly calibrated surrogate.
+fn sample_sweep_points(opts: &HashMap<String, String>) -> Vec<SimPoint> {
     let npoints = num(opts, "points", 100usize);
     let nodes = num(opts, "nodes", 8usize);
     let rpn = num(opts, "rpn", 4usize);
@@ -136,17 +210,6 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
         Some("cooling") => Scenario::Cooling,
         Some("multimodal") => Scenario::Multimodal,
         _ => Scenario::Normal,
-    };
-    let out: std::path::PathBuf =
-        opts.get("out").map(|s| s.into()).unwrap_or_else(|| "results".into());
-    let cache_dir = if opts.contains_key("no-cache") {
-        None
-    } else {
-        Some(
-            opts.get("cache")
-                .map(std::path::PathBuf::from)
-                .unwrap_or_else(|| out.join("sweep-cache")),
-        )
     };
 
     // Calibrate once (sequential), then fan the campaign out.
@@ -199,25 +262,22 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
             seed: sweep::point_seed(seed, i as u64),
         });
     }
+    points
+}
 
-    let sweep_opts = SweepOptions {
-        threads: num(opts, "threads", 0usize),
-        cache_dir,
-        progress: true,
-    };
-    let report = run_campaign(&points, &sweep_opts);
-
-    // Full campaign CSV + a top-10 console table.
-    let mut full = Table::new(
-        &format!("sweep — {npoints} points, N={n}, {nodes} nodes x {rpn} ranks"),
-        &["point", "nb", "depth", "bcast", "swap", "rfact", "PxQ", "gflops", "seconds"],
+/// Per-point campaign table. Shared by `sweep` and `merge` so that a
+/// sharded-and-merged campaign emits a `campaign.csv` byte-identical to
+/// the one of a single-machine run over the same manifest.
+fn campaign_table(points: &[SimPoint], results: &[HplResult]) -> Table {
+    let mut t = Table::new(
+        &format!("campaign — {} points", points.len()),
+        &["point", "label", "nb", "depth", "bcast", "swap", "rfact", "PxQ", "gflops",
+          "seconds"],
     );
-    let mut ranked: Vec<(usize, f64)> =
-        report.results.iter().map(|r| r.gflops).enumerate().collect();
-    for (i, p) in points.iter().enumerate() {
-        let r = &report.results[i];
-        full.row(vec![
+    for (i, (p, r)) in points.iter().zip(results).enumerate() {
+        t.row(vec![
             i.to_string(),
+            p.label.clone(),
             p.cfg.nb.to_string(),
             p.cfg.depth.to_string(),
             p.cfg.bcast.name().into(),
@@ -228,18 +288,100 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
             fnum(r.seconds),
         ]);
     }
-    if let Err(e) = full.write_csv(&out, "sweep") {
-        eprintln!("warning: could not write sweep.csv: {e}");
-    }
-    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    t
+}
+
+/// Write `campaign.csv` under `out` and print the top-10 table. Returns
+/// whether the CSV — the primary machine-readable output — was written;
+/// callers fold a failure into their exit code.
+fn report_campaign(points: &[SimPoint], results: &[HplResult], out: &Path) -> bool {
+    let full = campaign_table(points, results);
+    let wrote_csv = match full.write_csv(out, "campaign") {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("error: could not write campaign.csv under {}: {e}", out.display());
+            false
+        }
+    };
+    let mut ranked: Vec<(usize, f64)> =
+        results.iter().map(|r| r.gflops).enumerate().collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
     let mut top = Table::new(
-        "sweep — top 10 configurations (GFlop/s)",
-        &["point", "nb", "depth", "bcast", "swap", "rfact", "PxQ", "gflops", "seconds"],
+        "campaign — top 10 configurations (GFlop/s)",
+        &["point", "label", "nb", "depth", "bcast", "swap", "rfact", "PxQ", "gflops",
+          "seconds"],
     );
     for &(i, _) in ranked.iter().take(10) {
         top.row(full.rows[i].clone());
     }
     top.print();
+    wrote_csv
+}
+
+/// Random campaign over the HPL parameter space on the calibrated
+/// surrogate — the paper's §4.2/§5 "explore thousands of scenarios on
+/// one server" use case, through the parallel sweep runtime. With
+/// `--manifest` the points come from a campaign manifest instead.
+fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
+    let (manifest_p, export_p, out_p, cache_p) = match (
+        path_opt(opts, "manifest", "sweep"),
+        path_opt(opts, "export-manifest", "sweep"),
+        path_opt(opts, "out", "sweep"),
+        path_opt(opts, "cache", "sweep"),
+    ) {
+        (Ok(m), Ok(e), Ok(o), Ok(c)) => (m, e, o, c),
+        _ => return 2,
+    };
+    if opts.contains_key("plan-only") && export_p.is_none() {
+        eprintln!("sweep: --plan-only requires --export-manifest FILE");
+        return 2;
+    }
+    let out: PathBuf = out_p.map(PathBuf::from).unwrap_or_else(|| "results".into());
+    let cache_dir = if opts.contains_key("no-cache") {
+        None
+    } else {
+        Some(cache_p.map(PathBuf::from).unwrap_or_else(|| out.join("sweep-cache")))
+    };
+
+    let points: Vec<SimPoint> = match manifest_p {
+        Some(path) => match Manifest::load(Path::new(path)) {
+            Ok(m) => {
+                if ["points", "nodes", "rpn", "n", "scenario", "seed"]
+                    .iter()
+                    .any(|k| opts.contains_key(*k))
+                {
+                    eprintln!("sweep: note: --manifest given; sampling options are ignored");
+                }
+                eprintln!("sweep: loaded {} points from {path}", m.points.len());
+                m.points
+            }
+            Err(e) => {
+                eprintln!("sweep: cannot load manifest: {e}");
+                return 1;
+            }
+        },
+        None => sample_sweep_points(opts),
+    };
+
+    if let Some(path) = export_p {
+        let manifest = Manifest::new(points.clone());
+        if let Err(e) = manifest.save(Path::new(path)) {
+            eprintln!("sweep: cannot write manifest {path}: {e}");
+            return 1;
+        }
+        println!("sweep: wrote manifest with {} points to {path}", manifest.points.len());
+        if opts.contains_key("plan-only") {
+            return 0;
+        }
+    }
+
+    let sweep_opts = SweepOptions {
+        threads: num(opts, "threads", 0usize),
+        cache_dir,
+        progress: true,
+    };
+    let report = run_campaign(&points, &sweep_opts);
+    let wrote_csv = report_campaign(&points, &report.results, &out);
     println!(
         "\nsweep: {} points | {} computed, {} cached | {} threads | {:.2} s wall \
          ({:.2} points/s)",
@@ -250,7 +392,184 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
         report.wall_seconds,
         points.len() as f64 / report.wall_seconds.max(1e-9),
     );
+    if wrote_csv {
+        0
+    } else {
+        1
+    }
+}
+
+/// Execute one deterministic shard of a campaign manifest: the points
+/// with `fingerprint % shards == shard_index`, written into the
+/// ordinary fingerprint-keyed result cache for a later `hplsim merge`.
+fn cmd_shard(opts: &HashMap<String, String>) -> i32 {
+    let (manifest_p, cache_p) = match (
+        path_opt(opts, "manifest", "shard"),
+        path_opt(opts, "cache", "shard"),
+    ) {
+        (Ok(m), Ok(c)) => (m, c),
+        _ => return 2,
+    };
+    let Some(mpath) = manifest_p else {
+        eprintln!("shard: --manifest FILE is required\n{USAGE}");
+        return 2;
+    };
+    let shards = num(opts, "shards", 0u64);
+    if shards == 0 {
+        eprintln!("shard: --shards must be >= 1");
+        return 2;
+    }
+    let index = match opts.get("shard-index").and_then(|v| v.parse::<u64>().ok()) {
+        Some(i) if i < shards => i,
+        _ => {
+            eprintln!("shard: --shard-index must be an integer in [0, {shards})");
+            return 2;
+        }
+    };
+    let Some(cache) = cache_p else {
+        eprintln!("shard: --cache DIR is required (shard results live in the cache)");
+        return 2;
+    };
+    let manifest = match Manifest::load(Path::new(mpath)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("shard: {e}");
+            return 1;
+        }
+    };
+    let mine = manifest.shard_points(shards, index);
+    println!(
+        "shard {index}/{shards}: {} of {} manifest points",
+        mine.len(),
+        manifest.points.len()
+    );
+    let sweep_opts = SweepOptions {
+        threads: num(opts, "threads", 0usize),
+        cache_dir: Some(cache.into()),
+        progress: true,
+    };
+    let report = run_campaign(&mine, &sweep_opts);
+    println!(
+        "shard {index}/{shards}: {} computed, {} cached | {} threads | {:.2} s wall",
+        report.computed, report.cached, report.threads, report.wall_seconds
+    );
+    // The cache *is* this command's output: a cache-store failure (bad
+    // path, full disk) only warns inside run_campaign, so verify every
+    // shard point actually persisted before claiming success.
+    let cache_path = Path::new(cache);
+    let unpersisted = mine
+        .iter()
+        .filter(|p| sweep::cache_lookup_fp(cache_path, p.fingerprint()).is_none())
+        .count();
+    if unpersisted > 0 {
+        eprintln!(
+            "shard {index}/{shards}: {unpersisted} of {} results are not on disk in \
+             {cache} — re-run this shard",
+            mine.len()
+        );
+        return 1;
+    }
     0
+}
+
+/// Combine shard caches back into the full campaign report (and,
+/// optionally, into one merged cache directory).
+fn cmd_merge(caches: &[String], opts: &HashMap<String, String>) -> i32 {
+    let (manifest_p, out_p, out_cache_p) = match (
+        path_opt(opts, "manifest", "merge"),
+        path_opt(opts, "out", "merge"),
+        path_opt(opts, "out-cache", "merge"),
+    ) {
+        (Ok(m), Ok(o), Ok(oc)) => (m, o, oc),
+        _ => return 2,
+    };
+    let Some(mpath) = manifest_p else {
+        eprintln!("merge: --manifest FILE is required\n{USAGE}");
+        return 2;
+    };
+    if caches.is_empty() {
+        eprintln!("merge: at least one shard cache directory is required\n{USAGE}");
+        return 2;
+    }
+    let manifest = match Manifest::load(Path::new(mpath)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("merge: {e}");
+            return 1;
+        }
+    };
+    let dirs: Vec<PathBuf> = caches.iter().map(PathBuf::from).collect();
+    let out: PathBuf = out_p.map(PathBuf::from).unwrap_or_else(|| "results".into());
+
+    // Look each distinct fingerprint up once across the shard caches
+    // (first hit wins), then fan results out to duplicates.
+    let fps: Vec<u64> = manifest.points.iter().map(|p| p.fingerprint()).collect();
+    let mut found: HashMap<u64, Option<(usize, HplResult)>> =
+        HashMap::with_capacity(fps.len());
+    for &fp in &fps {
+        found.entry(fp).or_insert_with(|| {
+            dirs.iter()
+                .enumerate()
+                .find_map(|(di, d)| sweep::cache_lookup_fp(d, fp).map(|r| (di, r)))
+        });
+    }
+    let missing: Vec<usize> = (0..fps.len()).filter(|&i| found[&fps[i]].is_none()).collect();
+    if !missing.is_empty() {
+        eprintln!(
+            "merge: {} of {} points missing from the shard caches (first missing: point {} \
+             fp {:016x}) — did every shard run to completion?",
+            missing.len(),
+            fps.len(),
+            missing[0],
+            fps[missing[0]]
+        );
+        return 1;
+    }
+    let results: Vec<HplResult> =
+        fps.iter().map(|fp| found[fp].expect("missing checked above").1).collect();
+
+    let mut copy_failures = 0usize;
+    if let Some(oc) = out_cache_p {
+        let ocp = Path::new(oc);
+        if let Err(e) = std::fs::create_dir_all(ocp) {
+            eprintln!("merge: cannot create {oc}: {e}");
+            return 1;
+        }
+        let mut copied = 0usize;
+        for (&fp, src) in &found {
+            if let Some((di, _)) = src {
+                let from = sweep::cache_path_fp(&dirs[*di], fp);
+                match std::fs::copy(&from, sweep::cache_path_fp(ocp, fp)) {
+                    Ok(_) => copied += 1,
+                    Err(e) => {
+                        copy_failures += 1;
+                        eprintln!("merge: error: could not copy {}: {e}", from.display());
+                    }
+                }
+            }
+        }
+        println!("merge: copied {copied} cache entries into {oc}");
+    }
+
+    let wrote_csv = report_campaign(&manifest.points, &results, &out);
+    println!(
+        "\nmerge: {} points assembled from {} shard cache(s) | report in {}",
+        manifest.points.len(),
+        dirs.len(),
+        out.display()
+    );
+    if copy_failures > 0 {
+        eprintln!(
+            "merge: {copy_failures} cache entries could not be copied — the --out-cache \
+             directory is incomplete and will recompute those points if used"
+        );
+        return 1;
+    }
+    if wrote_csv {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_run(opts: &HashMap<String, String>) -> i32 {
@@ -346,6 +665,8 @@ pub fn main_with_args(args: &[String]) -> i32 {
     match positional.first().map(|s| s.as_str()) {
         Some("exp") => cmd_exp(&positional[1..], &opts),
         Some("sweep") => cmd_sweep(&opts),
+        Some("shard") => cmd_shard(&opts),
+        Some("merge") => cmd_merge(&positional[1..], &opts),
         Some("run") => cmd_run(&opts),
         Some("configs") => {
             let ctx = ExpCtx::new(None, Scale::Bench, 0);
@@ -390,5 +711,36 @@ mod tests {
     #[test]
     fn unknown_command_fails() {
         assert_eq!(main_with_args(&["bogus".to_string()]), 2);
+    }
+
+    #[test]
+    fn shard_and_merge_validate_arguments() {
+        let run = |args: &[&str]| {
+            let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            main_with_args(&v)
+        };
+        assert_eq!(run(&["shard"]), 2); // missing --manifest
+        assert_eq!(run(&["shard", "--manifest", "m.json"]), 2); // missing --shards
+        assert_eq!(
+            run(&[
+                "shard", "--manifest", "m.json", "--shards", "2", "--shard-index", "5",
+                "--cache", "c",
+            ]),
+            2, // index out of range
+        );
+        assert_eq!(
+            run(&[
+                "shard", "--manifest", "/nonexistent/m.json", "--shards", "2",
+                "--shard-index", "0", "--cache", "c",
+            ]),
+            1, // manifest unreadable
+        );
+        assert_eq!(run(&["merge"]), 2); // missing --manifest
+        assert_eq!(run(&["merge", "--manifest", "m.json"]), 2); // no cache dirs
+        assert_eq!(run(&["merge", "--manifest", "/nonexistent/m.json", "cache-dir"]), 1);
+        // --plan-only without --export-manifest must refuse to simulate.
+        assert_eq!(run(&["sweep", "--points", "5", "--plan-only"]), 2);
+        // A valueless --export-manifest (parsed as "true") is a missing path.
+        assert_eq!(run(&["sweep", "--points", "5", "--export-manifest"]), 2);
     }
 }

@@ -45,6 +45,12 @@ pub struct ExpCtx {
     pub threads: usize,
     /// Optional on-disk result cache: interrupted experiments resume.
     pub cache_dir: Option<PathBuf>,
+    /// Plan-only mode (manifest export): when set, [`ExpCtx::run_points`]
+    /// records every planned point here instead of simulating, and
+    /// returns all-zero placeholder results so the experiment's consume
+    /// phase still runs. The collected points are what
+    /// `hplsim exp --export-manifest` writes to disk.
+    pub plan_only: Option<std::cell::RefCell<Vec<SimPoint>>>,
 }
 
 /// In-order consumer of campaign results. Experiments *plan* a
@@ -102,6 +108,7 @@ impl ExpCtx {
             out_dir: PathBuf::from("results"),
             threads: 0,
             cache_dir: None,
+            plan_only: None,
         }
     }
 
@@ -166,8 +173,15 @@ impl ExpCtx {
     /// order. Without artifacts the points fan out over the
     /// work-stealing campaign runtime; artifact-backed contexts run
     /// sequentially through the XLA pipeline (the PJRT client holds
-    /// process-wide state and is not `Send`).
+    /// process-wide state and is not `Send`). In plan-only mode (see
+    /// [`ExpCtx::plan_only`]) nothing is simulated: the points are
+    /// recorded for manifest export and zero placeholders returned.
     pub fn run_points(&self, points: Vec<SimPoint>) -> PointResults {
+        if let Some(plan) = &self.plan_only {
+            let placeholders = vec![HplResult::default(); points.len()];
+            plan.borrow_mut().extend(points);
+            return PointResults::new(placeholders);
+        }
         let results = match &self.arts {
             Some(a) => {
                 if self.threads != 0 || self.cache_dir.is_some() {
@@ -200,6 +214,12 @@ impl ExpCtx {
 
     fn save(&self, t: &Table, name: &str) {
         t.print();
+        if self.plan_only.is_some() {
+            // Plan-only tables hold placeholder zeros; never overwrite a
+            // real result CSV from an earlier run with them.
+            eprintln!("exp: plan-only — not writing {name}.csv");
+            return;
+        }
         if let Err(e) = t.write_csv(&self.out_dir, name) {
             eprintln!("warning: could not write {name}.csv: {e}");
         }
@@ -1059,6 +1079,18 @@ mod tests {
     fn table1_builds() {
         let t = table1(&tiny_ctx());
         assert_eq!(t.rows.len(), 8);
+    }
+
+    #[test]
+    fn plan_only_collects_points_without_simulating() {
+        let mut ctx = tiny_ctx();
+        ctx.plan_only = Some(std::cell::RefCell::new(Vec::new()));
+        fig5(&ctx);
+        let planned = ctx.plan_only.take().unwrap().into_inner();
+        // Bench-scale fig5 plans, per N in {4096, 8192, 16384}:
+        // 3 reality reps + naive + hetero + 3 full-model reps.
+        assert_eq!(planned.len(), 3 * 8);
+        assert!(planned.iter().all(|p| p.label.starts_with("fig5/")));
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! On-disk campaign manifests: a whole campaign as data.
+//!
+//! A manifest is the serialized form of a [`SimPoint`] list — everything
+//! a machine needs to execute (part of) a campaign, with no shared
+//! state. This is what makes campaigns *distributable*:
+//!
+//! 1. plan a campaign and [`Manifest::save`] it
+//!    (`hplsim sweep --export-manifest`, `hplsim exp --export-manifest`);
+//! 2. ship the manifest to `K` machines; each runs its deterministic
+//!    partition (`hplsim shard --shards K --shard-index i`), writing into
+//!    the ordinary fingerprint-keyed result cache;
+//! 3. collect the shard caches and `hplsim merge` them back into the
+//!    exact [`CampaignReport`](crate::coordinator::sweep::CampaignReport)
+//!    a single-machine `hplsim sweep` of the same manifest would emit.
+//!
+//! Partitioning is by `fingerprint % num_shards`, so the split is a pure
+//! function of the points themselves: no coordination, no assignment
+//! state, and equal-fingerprint duplicates always land in the same shard
+//! (each is still simulated exactly once cluster-wide).
+
+use std::path::Path;
+
+use crate::coordinator::sweep::{SimPoint, MODEL_VERSION};
+use crate::stats::json::Json;
+
+/// Format marker written into every manifest file.
+pub const FORMAT: &str = "hplsim-manifest-v1";
+
+/// A serializable campaign: an ordered list of self-contained points.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub points: Vec<SimPoint>,
+}
+
+impl Manifest {
+    pub fn new(points: Vec<SimPoint>) -> Manifest {
+        Manifest { points }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str(FORMAT.into())),
+            ("model_version", Json::Num(MODEL_VERSION as f64)),
+            ("points", Json::Arr(self.points.iter().map(SimPoint::to_json).collect())),
+        ])
+    }
+
+    /// Inverse of [`Manifest::to_json`]. Rejects foreign formats and
+    /// manifests written by a build with a different simulation-model
+    /// version (their cached results would not be comparable).
+    pub fn from_json(v: &Json) -> Result<Manifest, String> {
+        if v.get("format").and_then(Json::as_str) != Some(FORMAT) {
+            return Err(format!("not a campaign manifest (expected format \"{FORMAT}\")"));
+        }
+        let mv = v.get("model_version").and_then(Json::as_u64);
+        if mv != Some(MODEL_VERSION) {
+            return Err(format!(
+                "manifest model version {} does not match this build (model version \
+                 {MODEL_VERSION})",
+                mv.map_or_else(|| "<missing>".to_string(), |x| x.to_string()),
+            ));
+        }
+        let arr = v
+            .get("points")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "manifest has no points array".to_string())?;
+        let mut points = Vec::with_capacity(arr.len());
+        for (i, pv) in arr.iter().enumerate() {
+            points.push(
+                SimPoint::from_json(pv)
+                    .ok_or_else(|| format!("manifest point {i} is malformed"))?,
+            );
+        }
+        Ok(Manifest { points })
+    }
+
+    /// Atomic write (temp + rename), mirroring the cache's `store_fp`
+    /// discipline: an interrupted save never leaves a truncated manifest
+    /// where a good one used to be. The temp name appends to the full
+    /// file name (no extension-replacement collisions) and carries the
+    /// pid, so concurrent savers cannot interleave.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut tmp_name = path.file_name().unwrap_or_default().to_os_string();
+        tmp_name.push(format!(".tmp.{}", std::process::id()));
+        let tmp = path.with_file_name(tmp_name);
+        let res = std::fs::write(&tmp, self.to_json().to_string())
+            .and_then(|()| std::fs::rename(&tmp, path));
+        if res.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        res
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        Manifest::from_json(&v)
+    }
+
+    /// The deterministic shard partition: the points whose
+    /// `fingerprint % shards == index`. Every point of the manifest
+    /// belongs to exactly one shard.
+    pub fn shard_points(&self, shards: u64, index: u64) -> Vec<SimPoint> {
+        assert!(shards >= 1 && index < shards, "need index < shards, shards >= 1");
+        self.points
+            .iter()
+            .filter(|p| p.fingerprint() % shards == index)
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{DgemmModel, NodeCoef};
+    use crate::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
+    use crate::network::{NetModel, Topology};
+
+    fn pts(n: usize) -> Vec<SimPoint> {
+        (0..n)
+            .map(|i| SimPoint {
+                label: format!("m{i}"),
+                cfg: HplConfig {
+                    n: 128 + 32 * i,
+                    nb: 32,
+                    p: 2,
+                    q: 2,
+                    depth: i % 2,
+                    bcast: Bcast::Ring,
+                    swap: SwapAlg::BinExch,
+                    swap_threshold: 64,
+                    rfact: Rfact::Crout,
+                    nbmin: 8,
+                },
+                topo: Topology::star(4, 12.5e9, 40e9),
+                net: NetModel::ideal(),
+                dgemm: DgemmModel::homogeneous(NodeCoef::naive(1e-11)),
+                rpn: 1,
+                seed: crate::coordinator::sweep::point_seed(9, i as u64),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_preserves_fingerprints() {
+        let m = Manifest::new(pts(5));
+        let back = Manifest::from_json(&Json::parse(&m.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(m.points.len(), back.points.len());
+        for (a, b) in m.points.iter().zip(&back.points) {
+            assert_eq!(a.fingerprint(), b.fingerprint());
+            assert_eq!(a.label, b.label);
+        }
+    }
+
+    #[test]
+    fn rejects_foreign_and_stale_manifests() {
+        assert!(Manifest::from_json(&Json::parse("{}").unwrap()).is_err());
+        let wrong_format = r#"{"format":"other","model_version":1,"points":[]}"#;
+        assert!(Manifest::from_json(&Json::parse(wrong_format).unwrap()).is_err());
+        let wrong_version = format!(
+            r#"{{"format":"{FORMAT}","model_version":{},"points":[]}}"#,
+            MODEL_VERSION + 1
+        );
+        assert!(Manifest::from_json(&Json::parse(&wrong_version).unwrap()).is_err());
+        let bad_point =
+            format!(r#"{{"format":"{FORMAT}","model_version":{MODEL_VERSION},"points":[7]}}"#);
+        assert!(Manifest::from_json(&Json::parse(&bad_point).unwrap()).is_err());
+    }
+
+    #[test]
+    fn shards_partition_the_points() {
+        let m = Manifest::new(pts(17));
+        for shards in [1u64, 2, 3, 5] {
+            let mut total = 0;
+            for index in 0..shards {
+                let part = m.shard_points(shards, index);
+                for p in &part {
+                    assert_eq!(p.fingerprint() % shards, index);
+                }
+                total += part.len();
+            }
+            assert_eq!(total, m.points.len(), "{shards}-way split must be exhaustive");
+        }
+    }
+}

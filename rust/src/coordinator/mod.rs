@@ -1,11 +1,14 @@
 //! Experiment coordination: the CLI, the per-figure experiment
-//! registry, the parallel campaign runtime, and result tables.
+//! registry, the parallel campaign runtime, serializable campaign
+//! manifests (shard/merge), and result tables.
 
 pub mod cli;
 pub mod experiments;
+pub mod manifest;
 pub mod sweep;
 pub mod table;
 
 pub use experiments::{ExpCtx, PointResults, Scale};
+pub use manifest::Manifest;
 pub use sweep::{run_campaign, CampaignReport, SimPoint, SweepOptions};
 pub use table::Table;

@@ -166,6 +166,35 @@ impl SimPoint {
         }
         h.0
     }
+
+    /// Serialize a self-contained point for an on-disk campaign manifest
+    /// (see `coordinator::manifest`). The encoding is exact: every f64
+    /// round-trips bit-for-bit and the seed travels as a decimal string
+    /// (full u64 range), so the fingerprint is preserved.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("cfg", self.cfg.to_json()),
+            ("topo", self.topo.to_json()),
+            ("net", self.net.to_json()),
+            ("dgemm", self.dgemm.to_json()),
+            ("rpn", Json::Num(self.rpn as f64)),
+            ("seed", Json::u64_str(self.seed)),
+        ])
+    }
+
+    /// Inverse of [`SimPoint::to_json`].
+    pub fn from_json(v: &Json) -> Option<SimPoint> {
+        Some(SimPoint {
+            label: v.get("label")?.as_str()?.to_string(),
+            cfg: HplConfig::from_json(v.get("cfg")?)?,
+            topo: Topology::from_json(v.get("topo")?)?,
+            net: NetModel::from_json(v.get("net")?)?,
+            dgemm: DgemmModel::from_json(v.get("dgemm")?)?,
+            rpn: v.get("rpn")?.as_usize()?,
+            seed: v.get("seed")?.as_u64()?,
+        })
+    }
 }
 
 /// Options of a campaign run.
@@ -245,23 +274,26 @@ pub fn result_from_json(v: &Json) -> Option<HplResult> {
     })
 }
 
-fn path_for(dir: &Path, fp: u64) -> PathBuf {
+/// Cache file of a raw fingerprint (`<fp as 16 hex digits>.json`).
+/// Shard merging addresses cache entries by fingerprint directly.
+pub fn cache_path_fp(dir: &Path, fp: u64) -> PathBuf {
     dir.join(format!("{fp:016x}.json"))
 }
 
 /// Cache file of a point: one JSON file per fingerprint.
 pub fn cache_path_for(dir: &Path, point: &SimPoint) -> PathBuf {
-    path_for(dir, point.fingerprint())
+    cache_path_fp(dir, point.fingerprint())
 }
 
 /// Look a point up in the cache; misses on absence, corruption, a
 /// fingerprint mismatch, or a different model version.
 pub fn cache_lookup(dir: &Path, point: &SimPoint) -> Option<HplResult> {
-    lookup_fp(dir, point.fingerprint())
+    cache_lookup_fp(dir, point.fingerprint())
 }
 
-fn lookup_fp(dir: &Path, fp: u64) -> Option<HplResult> {
-    let text = std::fs::read_to_string(path_for(dir, fp)).ok()?;
+/// Fingerprint-keyed variant of [`cache_lookup`].
+pub fn cache_lookup_fp(dir: &Path, fp: u64) -> Option<HplResult> {
+    let text = std::fs::read_to_string(cache_path_fp(dir, fp)).ok()?;
     let v = Json::parse(&text).ok()?;
     if v.get("fingerprint")?.as_str()? != format!("{fp:016x}") {
         return None;
@@ -286,7 +318,7 @@ fn store_fp(dir: &Path, label: &str, fp: u64, r: &HplResult) {
         ("result", result_to_json(r)),
     ]);
     static TMP_SEQ: AtomicUsize = AtomicUsize::new(0);
-    let final_path = path_for(dir, fp);
+    let final_path = cache_path_fp(dir, fp);
     let tmp_path = dir.join(format!(
         "{fp:016x}.tmp.{}.{}",
         std::process::id(),
@@ -295,7 +327,37 @@ fn store_fp(dir: &Path, label: &str, fp: u64, r: &HplResult) {
     let res = std::fs::write(&tmp_path, v.to_string())
         .and_then(|()| std::fs::rename(&tmp_path, &final_path));
     if let Err(e) = res {
+        // Never leave a partial temp file behind: it would otherwise
+        // accumulate in the cache directory across failed runs.
+        let _ = std::fs::remove_file(&tmp_path);
         eprintln!("sweep: warning: could not cache {}: {e}", final_path.display());
+    }
+}
+
+/// Remove orphaned `*.tmp.*` files left behind by a crashed campaign
+/// (the atomic write-then-rename in `store_fp` can be interrupted
+/// between the two steps). Only files matching the temp-name pattern
+/// *and* older than [`TMP_REAP_AGE`] are touched: another live campaign
+/// may share this cache directory, and its in-flight temp files (which
+/// exist for milliseconds) must not be reaped from under it. Real
+/// `<fp>.json` entries are never removed.
+const TMP_REAP_AGE: std::time::Duration = std::time::Duration::from_secs(60);
+
+fn clean_stale_tmp(dir: &Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        if !entry.file_name().to_string_lossy().contains(".tmp.") {
+            continue;
+        }
+        let old_enough = entry
+            .metadata()
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .is_some_and(|age| age >= TMP_REAP_AGE);
+        if old_enough {
+            let _ = std::fs::remove_file(entry.path());
+        }
     }
 }
 
@@ -371,15 +433,24 @@ pub fn run_campaign(points: &[SimPoint], opts: &SweepOptions) -> CampaignReport 
         if let Err(e) = std::fs::create_dir_all(dir) {
             eprintln!("sweep: warning: cannot create cache dir {}: {e}", dir.display());
         }
+        clean_stale_tmp(dir);
     }
 
     // Hash every point exactly once; lookups, stores, and the
     // duplicate fan-out below all reuse these fingerprints.
     let fps: Vec<u64> = points.iter().map(|p| p.fingerprint()).collect();
-    let mut slots: Vec<Option<HplResult>> = fps
-        .iter()
-        .map(|&fp| opts.cache_dir.as_deref().and_then(|d| lookup_fp(d, fp)))
-        .collect();
+    // Prefetch each *distinct* fingerprint once: equal-fingerprint
+    // duplicates share the parsed result instead of re-reading and
+    // re-parsing the same cache file.
+    let mut prefetched: std::collections::HashMap<u64, Option<HplResult>> =
+        std::collections::HashMap::with_capacity(fps.len());
+    if let Some(dir) = opts.cache_dir.as_deref() {
+        for &fp in &fps {
+            prefetched.entry(fp).or_insert_with(|| cache_lookup_fp(dir, fp));
+        }
+    }
+    let mut slots: Vec<Option<HplResult>> =
+        fps.iter().map(|fp| prefetched.get(fp).copied().flatten()).collect();
     let from_cache: Vec<bool> = slots.iter().map(|s| s.is_some()).collect();
     let cached = from_cache.iter().filter(|&&c| c).count();
     // Simulate each distinct fingerprint once; equal-fingerprint
@@ -519,6 +590,35 @@ mod tests {
         assert_eq!(r.comm.bytes, back.comm.bytes);
         assert_eq!(r.events, back.events);
         assert_eq!(r.dgemm_calls, back.dgemm_calls);
+    }
+
+    #[test]
+    fn simpoint_json_roundtrip_preserves_fingerprint() {
+        let p = tiny_point(0xdead_beef_cafe_f00d); // full-width u64 seed
+        let back =
+            SimPoint::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(p.fingerprint(), back.fingerprint());
+        assert_eq!(p.label, back.label);
+        assert_eq!(p.seed, back.seed);
+        assert_eq!(p.rpn, back.rpn);
+        assert_eq!(p.cfg, back.cfg);
+    }
+
+    #[test]
+    fn cached_duplicates_served_from_one_lookup() {
+        // Prefetch dedup: duplicates of a cached fingerprint are all
+        // served from a single read+parse, and nothing is recomputed.
+        let dir =
+            std::env::temp_dir().join(format!("hplsim_dupcache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = SweepOptions { threads: 1, cache_dir: Some(dir.clone()), progress: false };
+        run_campaign(&[tiny_point(5)], &opts);
+        let pts = vec![tiny_point(5), tiny_point(5), tiny_point(5)];
+        let rep = run_campaign(&pts, &opts);
+        assert_eq!(rep.computed, 0);
+        assert_eq!(rep.cached, 3);
+        assert_eq!(rep.results[0].seconds, rep.results[2].seconds);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

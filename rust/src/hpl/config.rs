@@ -1,5 +1,7 @@
 //! HPL configuration: the full parameter space of the paper's §2.
 
+use crate::stats::json::Json;
+
 /// Panel broadcast algorithm (HPL's six variants, §2 BCAST).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Bcast {
@@ -206,6 +208,41 @@ impl HplConfig {
         let n = self.n as f64;
         2.0 / 3.0 * n * n * n + 2.0 * n * n
     }
+
+    /// Serialize for campaign manifests (see `coordinator::manifest`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("nb", Json::Num(self.nb as f64)),
+            ("p", Json::Num(self.p as f64)),
+            ("q", Json::Num(self.q as f64)),
+            ("depth", Json::Num(self.depth as f64)),
+            ("bcast", Json::Str(self.bcast.name().into())),
+            ("swap", Json::Str(self.swap.name().into())),
+            ("swap_threshold", Json::Num(self.swap_threshold as f64)),
+            ("rfact", Json::Str(self.rfact.name().into())),
+            ("nbmin", Json::Num(self.nbmin as f64)),
+        ])
+    }
+
+    /// Inverse of [`HplConfig::to_json`]; `None` on missing fields,
+    /// unknown algorithm names, or a config [`Self::validate`] rejects.
+    pub fn from_json(v: &Json) -> Option<HplConfig> {
+        let cfg = HplConfig {
+            n: v.get("n")?.as_usize()?,
+            nb: v.get("nb")?.as_usize()?,
+            p: v.get("p")?.as_usize()?,
+            q: v.get("q")?.as_usize()?,
+            depth: v.get("depth")?.as_usize()?,
+            bcast: Bcast::parse(v.get("bcast")?.as_str()?)?,
+            swap: SwapAlg::parse(v.get("swap")?.as_str()?)?,
+            swap_threshold: v.get("swap_threshold")?.as_usize()?,
+            rfact: Rfact::parse(v.get("rfact")?.as_str()?)?,
+            nbmin: v.get("nbmin")?.as_usize()?,
+        };
+        cfg.validate().ok()?;
+        Some(cfg)
+    }
 }
 
 #[cfg(test)]
@@ -254,6 +291,38 @@ mod tests {
         assert_eq!(HplConfig::stampede().nranks(), 6006);
         assert_eq!(HplConfig::theta().nranks(), 3232);
         assert!(HplConfig::stampede().validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_all_algorithms() {
+        for bcast in Bcast::ALL {
+            for swap in SwapAlg::ALL {
+                let mut c = HplConfig::dahu_default(4096, 4, 8);
+                c.bcast = bcast;
+                c.swap = swap;
+                c.rfact = Rfact::Left;
+                let back =
+                    HplConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap())
+                        .unwrap();
+                assert_eq!(c, back);
+            }
+        }
+    }
+
+    #[test]
+    fn json_rejects_malformed() {
+        assert!(HplConfig::from_json(&Json::parse("{}").unwrap()).is_none());
+        let mut v = HplConfig::dahu_default(4096, 4, 8).to_json();
+        if let Json::Obj(m) = &mut v {
+            m.insert("bcast".into(), Json::Str("no-such-alg".into()));
+        }
+        assert!(HplConfig::from_json(&v).is_none());
+        // An invalid config (depth > 1) must not deserialize either.
+        let mut v = HplConfig::dahu_default(4096, 4, 8).to_json();
+        if let Json::Obj(m) = &mut v {
+            m.insert("depth".into(), Json::Num(3.0));
+        }
+        assert!(HplConfig::from_json(&v).is_none());
     }
 
     #[test]

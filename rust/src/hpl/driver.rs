@@ -26,8 +26,10 @@ const K_FACT: u64 = 2;
 const K_PRESWAP: u64 = 3;
 const K_SWAP: u64 = 4;
 
-/// Outcome of one simulated HPL run.
-#[derive(Clone, Copy, Debug)]
+/// Outcome of one simulated HPL run. The all-zero `Default` is the
+/// placeholder used when a campaign is *planned* (manifest export, see
+/// `coordinator::manifest`) rather than executed.
+#[derive(Clone, Copy, Debug, Default)]
 pub struct HplResult {
     /// Simulated wall-clock of the factorization.
     pub seconds: f64,

@@ -73,6 +73,18 @@ pub async fn allreduce_tree(ctx: &Ctx, group: &[usize], me_pos: usize, tag: u64,
     bcast_binomial(ctx, group, me_pos, 0, tag + 1, bytes).await;
 }
 
+/// Send/recv partner positions of `me_pos` in the dissemination-barrier
+/// round of distance `dist` (`dist < n`): send to `me + dist`, receive
+/// from `me - dist`, both mod `n`. Factored out so the pairing can be
+/// tested directly — an earlier version computed the receive partner as
+/// `(me_pos + n - dist % n) % n`, which precedence parses as
+/// `dist % n` first; that is benign only because `dist < n` always
+/// holds, and it silently breaks if the loop bound ever changes.
+pub fn dissemination_partners(me_pos: usize, n: usize, dist: usize) -> (usize, usize) {
+    debug_assert!(dist < n);
+    ((me_pos + dist) % n, (me_pos + n - dist) % n)
+}
+
 /// Dissemination barrier (log2(n) rounds).
 pub async fn barrier(ctx: &Ctx, group: &[usize], me_pos: usize, tag: u64) {
     let n = group.len();
@@ -82,8 +94,9 @@ pub async fn barrier(ctx: &Ctx, group: &[usize], me_pos: usize, tag: u64) {
     let mut round = 0u64;
     let mut dist = 1usize;
     while dist < n {
-        let to = group[(me_pos + dist) % n];
-        let from = group[(me_pos + n - dist % n) % n];
+        let (to_pos, from_pos) = dissemination_partners(me_pos, n, dist);
+        let to = group[to_pos];
+        let from = group[from_pos];
         let h = ctx.isend(to, tag + round, 1.0);
         ctx.recv(Some(from), tag + round).await;
         h.await;
@@ -147,6 +160,47 @@ mod tests {
                 }
             });
             assert_eq!(count.get(), n);
+        }
+    }
+
+    /// Regression for the operator-precedence bug in the receive-partner
+    /// computation: in every round and for every group size — power of
+    /// two or not — rank pairs must be consistent: if `a` sends to `b`,
+    /// then `b` must expect its message from `a`, and vice versa.
+    #[test]
+    fn dissemination_partners_pair_up_every_round() {
+        for n in [2usize, 3, 5, 6, 7, 9, 12, 13] {
+            let mut dist = 1usize;
+            while dist < n {
+                for me in 0..n {
+                    let (to, from) = dissemination_partners(me, n, dist);
+                    assert!(to < n && from < n);
+                    let (_, from_of_to) = dissemination_partners(to, n, dist);
+                    assert_eq!(from_of_to, me, "n={n} dist={dist} me={me}: send unpaired");
+                    let (to_of_from, _) = dissemination_partners(from, n, dist);
+                    assert_eq!(to_of_from, me, "n={n} dist={dist} me={me}: recv unpaired");
+                }
+                dist <<= 1;
+            }
+        }
+    }
+
+    /// The barrier must complete (no deadlock, everyone exits) at
+    /// non-power-of-two group sizes, where the last round's distance
+    /// does not evenly divide the group.
+    #[test]
+    fn barrier_completes_non_power_of_two_groups() {
+        for n in [3usize, 5, 6, 7, 12] {
+            let count = Rc::new(Cell::new(0usize));
+            let c2 = count.clone();
+            run_group(n, move |ctx, group, me| {
+                let c = c2.clone();
+                async move {
+                    barrier(&ctx, &group, me, 900).await;
+                    c.set(c.get() + 1);
+                }
+            });
+            assert_eq!(count.get(), n, "n={n}");
         }
     }
 

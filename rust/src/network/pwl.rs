@@ -9,6 +9,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::stats::json::Json;
+
 /// Communication class.
 #[derive(Clone, Copy, Debug, Eq, Hash, Ord, PartialEq, PartialOrd)]
 pub enum NetClass {
@@ -16,6 +18,23 @@ pub enum NetClass {
     Local,
     /// Different nodes (through the interconnect).
     Remote,
+}
+
+impl NetClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetClass::Local => "local",
+            NetClass::Remote => "remote",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NetClass> {
+        match s {
+            "local" => Some(NetClass::Local),
+            "remote" => Some(NetClass::Remote),
+            _ => None,
+        }
+    }
 }
 
 /// One piece of the piecewise model: applies to messages of size
@@ -28,6 +47,27 @@ pub struct Segment {
     /// Multiplicative factor on link bandwidth (1.0 = nominal; the
     /// > 160 MB Infiniband DMA-locking drop of §4.1 is a factor < 1).
     pub bw_factor: f64,
+}
+
+impl Segment {
+    // Possibly-infinite values (`max_bytes` of the last piece, the
+    // rendezvous threshold) use `Json::num_exact`, whose string encoding
+    // survives the minimal JSON grammar's lack of an `inf` literal.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_bytes", Json::num_exact(self.max_bytes)),
+            ("latency", Json::num_exact(self.latency)),
+            ("bw_factor", Json::num_exact(self.bw_factor)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Segment> {
+        Some(Segment {
+            max_bytes: v.get("max_bytes")?.as_f64_exact()?,
+            latency: v.get("latency")?.as_f64_exact()?,
+            bw_factor: v.get("bw_factor")?.as_f64_exact()?,
+        })
+    }
 }
 
 /// Piecewise-linear protocol model per class + protocol thresholds.
@@ -56,17 +96,42 @@ impl NetModel {
     }
 
     /// Look up the applicable segment for a message.
+    ///
+    /// Every constructor ([`NetModel::from_segments`],
+    /// [`NetModel::from_json`]) guarantees both classes are present and
+    /// non-empty (see [`NetModel::validate`]), so the fallbacks here are
+    /// defensive only — the lookup never panics, even on a hand-built
+    /// model that skipped validation.
     pub fn segment(&self, class: NetClass, bytes: f64) -> Segment {
-        let segs = self
-            .classes
-            .get(&class)
-            .unwrap_or_else(|| &self.classes[&NetClass::Remote]);
+        // First *non-empty* class along the fallback chain, so a
+        // present-but-empty entry still falls through to a usable one.
+        let segs = [class, NetClass::Remote, NetClass::Local]
+            .iter()
+            .find_map(|c| self.classes.get(c).filter(|s| !s.is_empty()));
+        let Some(segs) = segs else {
+            return Segment { max_bytes: f64::INFINITY, latency: 0.0, bw_factor: 1.0 };
+        };
         for s in segs {
             if bytes <= s.max_bytes {
                 return *s;
             }
         }
-        *segs.last().expect("model has at least one segment")
+        *segs.last().expect("filtered non-empty above")
+    }
+
+    /// The invariant [`NetModel::segment`] relies on: both communication
+    /// classes present, each with at least one piece.
+    pub fn validate(&self) -> Result<(), String> {
+        for class in [NetClass::Local, NetClass::Remote] {
+            match self.classes.get(&class) {
+                None => return Err(format!("net model: missing '{}' class", class.name())),
+                Some(segs) if segs.is_empty() => {
+                    return Err(format!("net model: '{}' class has no segments", class.name()))
+                }
+                Some(_) => {}
+            }
+        }
+        Ok(())
     }
 
     /// Build a model from (size, latency, bw_factor) breakpoints.
@@ -76,13 +141,49 @@ impl NetModel {
         async_threshold: f64,
         rendezvous_threshold: f64,
     ) -> NetModel {
-        assert!(!local.is_empty() && !remote.is_empty());
         let mut classes = BTreeMap::new();
         classes.insert(NetClass::Local, local);
         classes.insert(NetClass::Remote, remote);
-        NetModel { classes, async_threshold, rendezvous_threshold }
+        let m = NetModel { classes, async_threshold, rendezvous_threshold };
+        if let Err(e) = m.validate() {
+            panic!("NetModel::from_segments: {e}");
+        }
+        m
     }
 
+    /// Serialize for campaign manifests (see `coordinator::manifest`).
+    pub fn to_json(&self) -> Json {
+        let classes: Vec<(&str, Json)> = self
+            .classes
+            .iter()
+            .map(|(c, segs)| {
+                (c.name(), Json::Arr(segs.iter().map(Segment::to_json).collect()))
+            })
+            .collect();
+        Json::obj(vec![
+            ("async_threshold", Json::num_exact(self.async_threshold)),
+            ("rendezvous_threshold", Json::num_exact(self.rendezvous_threshold)),
+            ("classes", Json::obj(classes)),
+        ])
+    }
+
+    /// Inverse of [`NetModel::to_json`]. Enforces [`NetModel::validate`]
+    /// so a deserialized model can never hit the `segment` fallbacks.
+    pub fn from_json(v: &Json) -> Option<NetModel> {
+        let mut classes = BTreeMap::new();
+        for (name, segs_v) in v.get("classes")?.as_obj()? {
+            let segs: Option<Vec<Segment>> =
+                segs_v.as_arr()?.iter().map(Segment::from_json).collect();
+            classes.insert(NetClass::parse(name)?, segs?);
+        }
+        let m = NetModel {
+            classes,
+            async_threshold: v.get("async_threshold")?.as_f64_exact()?,
+            rendezvous_threshold: v.get("rendezvous_threshold")?.as_f64_exact()?,
+        };
+        m.validate().ok()?;
+        Some(m)
+    }
 }
 
 #[cfg(test)]
@@ -105,6 +206,70 @@ mod tests {
         assert_eq!(m.segment(NetClass::Remote, 5e5).bw_factor, 0.9);
         assert_eq!(m.segment(NetClass::Remote, 5e8).bw_factor, 1.0);
         assert_eq!(m.segment(NetClass::Local, 5e8).latency, 1e-7);
+    }
+
+    #[test]
+    fn json_roundtrip_with_infinities() {
+        let m = NetModel::from_segments(
+            vec![Segment { max_bytes: f64::INFINITY, latency: 1e-7, bw_factor: 1.0 }],
+            vec![
+                Segment { max_bytes: 65536.0, latency: 1.2e-6, bw_factor: 0.9 },
+                Segment { max_bytes: f64::INFINITY, latency: 2.5e-6, bw_factor: 1.0 },
+            ],
+            8192.0,
+            f64::INFINITY,
+        );
+        let back = NetModel::from_json(&Json::parse(&m.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.async_threshold, 8192.0);
+        assert_eq!(back.rendezvous_threshold, f64::INFINITY);
+        for class in [NetClass::Local, NetClass::Remote] {
+            let (a, b) = (&m.classes[&class], &back.classes[&class]);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.max_bytes, y.max_bytes);
+                assert_eq!(x.latency, y.latency);
+                assert_eq!(x.bw_factor, y.bw_factor);
+            }
+        }
+    }
+
+    #[test]
+    fn json_rejects_incomplete_models() {
+        // A model without the remote class must fail at deserialization,
+        // not panic later inside segment().
+        let text = r#"{"async_threshold":0,"rendezvous_threshold":"inf",
+                       "classes":{"local":[{"max_bytes":"inf","latency":0,"bw_factor":1}]}}"#;
+        assert!(NetModel::from_json(&Json::parse(text).unwrap()).is_none());
+        // Present but empty is rejected too.
+        let text = r#"{"async_threshold":0,"rendezvous_threshold":"inf",
+                       "classes":{"local":[{"max_bytes":"inf","latency":0,"bw_factor":1}],
+                                  "remote":[]}}"#;
+        assert!(NetModel::from_json(&Json::parse(text).unwrap()).is_none());
+    }
+
+    #[test]
+    fn segment_never_panics_on_hand_built_models() {
+        // A hand-built model that skipped validation (only Local
+        // present): the lookup degrades gracefully instead of indexing
+        // the absent Remote class.
+        let mut classes = BTreeMap::new();
+        classes.insert(
+            NetClass::Local,
+            vec![Segment { max_bytes: f64::INFINITY, latency: 3e-7, bw_factor: 0.8 }],
+        );
+        let m = NetModel { classes, async_threshold: 0.0, rendezvous_threshold: 1e9 };
+        assert!(m.validate().is_err());
+        assert_eq!(m.segment(NetClass::Remote, 1e6).latency, 3e-7);
+        // A present-but-empty class falls through to a non-empty one
+        // instead of masking it.
+        let mut both = m.clone();
+        both.classes.insert(NetClass::Remote, Vec::new());
+        assert_eq!(both.segment(NetClass::Remote, 1e6).latency, 3e-7);
+        // Fully empty: the nominal segment.
+        let empty =
+            NetModel { classes: BTreeMap::new(), async_threshold: 0.0, rendezvous_threshold: 0.0 };
+        assert_eq!(empty.segment(NetClass::Remote, 1e6).bw_factor, 1.0);
     }
 
     #[test]

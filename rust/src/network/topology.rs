@@ -2,6 +2,8 @@
 //! parametric two-level fat-tree (the §5.4 tapering study), both with a
 //! per-node loopback tier for intra-node communication.
 
+use crate::stats::json::Json;
+
 /// Link identifier (index into the capacity vector).
 pub type LinkId = u32;
 
@@ -136,6 +138,60 @@ impl Topology {
             Topology::FatTree { tops, para, .. } => tops * para,
         }
     }
+
+    /// Serialize for campaign manifests (see `coordinator::manifest`).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Topology::Star { nodes, caps } => Json::obj(vec![
+                ("kind", Json::Str("star".into())),
+                ("nodes", Json::Num(*nodes as f64)),
+                ("caps", Json::arr_f64(caps)),
+            ]),
+            Topology::FatTree { nodes, down_leaf, leaves, tops, para, caps } => {
+                Json::obj(vec![
+                    ("kind", Json::Str("fat-tree".into())),
+                    ("nodes", Json::Num(*nodes as f64)),
+                    ("down_leaf", Json::Num(*down_leaf as f64)),
+                    ("leaves", Json::Num(*leaves as f64)),
+                    ("tops", Json::Num(*tops as f64)),
+                    ("para", Json::Num(*para as f64)),
+                    ("caps", Json::arr_f64(caps)),
+                ])
+            }
+        }
+    }
+
+    /// Inverse of [`Topology::to_json`], checking the link-count
+    /// invariants the router relies on.
+    pub fn from_json(v: &Json) -> Option<Topology> {
+        let caps = v.get("caps")?.f64_vec()?;
+        match v.get("kind")?.as_str()? {
+            "star" => {
+                let nodes = v.get("nodes")?.as_usize()?;
+                (caps.len() == 3 * nodes).then_some(Topology::Star { nodes, caps })
+            }
+            "fat-tree" => {
+                let nodes = v.get("nodes")?.as_usize()?;
+                let down_leaf = v.get("down_leaf")?.as_usize()?;
+                let leaves = v.get("leaves")?.as_usize()?;
+                let tops = v.get("tops")?.as_usize()?;
+                let para = v.get("para")?.as_usize()?;
+                (nodes == down_leaf * leaves
+                    && tops >= 1
+                    && para >= 1
+                    && caps.len() == 3 * nodes + 2 * leaves * tops * para)
+                    .then_some(Topology::FatTree {
+                        nodes,
+                        down_leaf,
+                        leaves,
+                        tops,
+                        para,
+                        caps,
+                    })
+            }
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +245,31 @@ mod tests {
         }
         // D-mod-k routing should spread across many distinct up-links.
         assert!(used.len() > 8, "only {} trunk lanes used", used.len());
+    }
+
+    #[test]
+    fn json_roundtrip_both_kinds() {
+        let star = Topology::star(4, 12.5e9, 40e9);
+        let tree = Topology::fat_tree(32, 8, 2, 8, 1e9, 0.5e9, 4e9);
+        for t in [star, tree] {
+            let back =
+                Topology::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+            // Topology has no PartialEq; the Debug form covers every field.
+            assert_eq!(format!("{t:?}"), format!("{back:?}"));
+            // Routing must be unaffected by the round-trip.
+            assert_eq!(t.route(0, 1), back.route(0, 1));
+            assert_eq!(t.route(2, 2), back.route(2, 2));
+        }
+    }
+
+    #[test]
+    fn json_rejects_inconsistent_link_counts() {
+        let mut v = Topology::star(4, 1e9, 4e9).to_json();
+        if let Json::Obj(m) = &mut v {
+            m.insert("nodes".into(), Json::Num(5.0)); // caps no longer match
+        }
+        assert!(Topology::from_json(&v).is_none());
+        assert!(Topology::from_json(&Json::parse("{\"kind\":\"ring\"}").unwrap()).is_none());
     }
 
     #[test]

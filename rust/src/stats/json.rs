@@ -25,7 +25,34 @@ impl Json {
     }
 
     pub fn arr_f64(xs: &[f64]) -> Json {
-        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+        Json::Arr(xs.iter().map(|&x| Json::num_exact(x)).collect())
+    }
+
+    /// Encode an f64 exactly, including non-finite values: the minimal
+    /// JSON grammar has no `inf`/`nan` literal, so those travel as the
+    /// strings `"inf"`, `"-inf"`, `"nan"` (plain `Json::Num` would emit
+    /// an unparseable bare token for them).
+    pub fn num_exact(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else if x == f64::INFINITY {
+            Json::Str("inf".into())
+        } else if x == f64::NEG_INFINITY {
+            Json::Str("-inf".into())
+        } else {
+            Json::Str("nan".into())
+        }
+    }
+
+    /// Decode an f64 written by [`Json::num_exact`].
+    pub fn as_f64_exact(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Str(s) if s == "inf" => Some(f64::INFINITY),
+            Json::Str(s) if s == "-inf" => Some(f64::NEG_INFINITY),
+            Json::Str(s) if s == "nan" => Some(f64::NAN),
+            _ => None,
+        }
     }
 
     pub fn as_f64(&self) -> Option<f64> {
@@ -60,9 +87,41 @@ impl Json {
         self.as_obj().and_then(|m| m.get(key))
     }
 
-    /// `[f64]` extraction helper.
+    /// Non-negative whole-number extraction (counts, sizes). Fails on
+    /// fractional values and on values too large for f64 to represent
+    /// exactly (>= 2^53).
+    pub fn as_usize(&self) -> Option<usize> {
+        let x = self.as_f64()?;
+        if x >= 0.0 && x.fract() == 0.0 && x < 9_007_199_254_740_992.0 {
+            Some(x as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Encode a full-width `u64` (seeds, fingerprints). These do not
+    /// survive the f64 `Num` representation above 2^53, so they travel
+    /// as decimal strings.
+    pub fn u64_str(v: u64) -> Json {
+        Json::Str(v.to_string())
+    }
+
+    /// Decode a `u64` written by [`Json::u64_str`] (a small integral
+    /// `Num` is accepted too, for hand-written files).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Str(s) => s.parse().ok(),
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < 9_007_199_254_740_992.0 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// `[f64]` extraction helper (accepts the [`Json::num_exact`]
+    /// string encoding of non-finite values).
     pub fn f64_vec(&self) -> Option<Vec<f64>> {
-        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+        self.as_arr()?.iter().map(|v| v.as_f64_exact()).collect()
     }
 
     /// Serialize to a compact string.
@@ -77,7 +136,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // -0.0 must keep its sign bit (`as i64` would drop it and
+                // break bit-exact f64 round-trips, e.g. fingerprints over
+                // serialized model coefficients); `{:e}` emits "-0e0".
+                if x.fract() == 0.0 && x.abs() < 1e15 && !(*x == 0.0 && x.is_sign_negative())
+                {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{:e}", x);
@@ -339,6 +402,55 @@ mod tests {
         for (a, b) in xs.iter().zip(&back) {
             assert_eq!(a, b, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn non_finite_f64s_roundtrip_via_num_exact() {
+        for x in [f64::INFINITY, f64::NEG_INFINITY, 1.5, -2e300, 0.0] {
+            let s = Json::num_exact(x).to_string();
+            let back = Json::parse(&s).unwrap().as_f64_exact().unwrap();
+            assert_eq!(x.to_bits(), back.to_bits(), "{x} mangled (wrote {s})");
+        }
+        let s = Json::num_exact(f64::NAN).to_string();
+        assert!(Json::parse(&s).unwrap().as_f64_exact().unwrap().is_nan());
+        // Arrays (model coefficients, link capacities) go through the
+        // same encoding.
+        let xs = [1.0, f64::INFINITY, -3.5];
+        let back = Json::parse(&Json::arr_f64(&xs).to_string()).unwrap().f64_vec().unwrap();
+        assert_eq!(back, xs);
+    }
+
+    #[test]
+    fn negative_zero_roundtrips_bit_exactly() {
+        let s = Json::Num(-0.0).to_string();
+        let back = Json::parse(&s).unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits(), "sign of -0.0 lost ({s})");
+        // Positive zero still takes the compact integer path.
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+    }
+
+    #[test]
+    fn u64_full_width_roundtrip() {
+        // Full-width values (e.g. derived seeds, fingerprints) would be
+        // mangled by the f64 Num path; the string encoding is exact.
+        for v in [0u64, 1, u64::MAX, 0xdead_beef_cafe_f00d] {
+            let s = Json::u64_str(v).to_string();
+            assert_eq!(Json::parse(&s).unwrap().as_u64(), Some(v));
+        }
+        // Small integral Nums are accepted for convenience.
+        assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(0.5).as_u64(), None);
+        assert_eq!(Json::Num(1e17).as_u64(), None);
+    }
+
+    #[test]
+    fn usize_extraction_checks_integrality() {
+        assert_eq!(Json::Num(128.0).as_usize(), Some(128));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(-2.0).as_usize(), None);
+        assert_eq!(Json::Num(2.5).as_usize(), None);
+        assert_eq!(Json::Str("3".into()).as_usize(), None);
     }
 
     #[test]

@@ -128,6 +128,78 @@ fn resume_recomputes_only_uncached_points() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Corrupted or truncated cache entries are recomputed, never trusted:
+/// a campaign killed mid-write (or a bit-rotted cache file) must not
+/// poison the resumed run.
+#[test]
+fn resume_survives_corrupted_and_truncated_cache_files() {
+    let dir = fresh_dir("corrupt");
+    let points = campaign(8, 21);
+    let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false };
+    let first = run_campaign(&points, &opts);
+    assert_eq!(first.computed, 8);
+
+    // Truncate one entry mid-JSON and replace another with garbage.
+    let truncated = cache_path_for(&dir, &points[2]);
+    let text = std::fs::read_to_string(&truncated).unwrap();
+    std::fs::write(&truncated, &text[..text.len() / 2]).unwrap();
+    let garbled = cache_path_for(&dir, &points[5]);
+    std::fs::write(&garbled, "not json at all").unwrap();
+
+    let resumed = run_campaign(&points, &opts);
+    assert_eq!(resumed.computed, 2, "exactly the two damaged points are recomputed");
+    assert_eq!(resumed.cached, 6);
+    assert_eq!(serialize(&resumed.results), serialize(&first.results));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Orphaned `*.tmp.*` files (from a campaign killed between the
+/// temp-write and the rename) are swept on campaign start and never
+/// accumulate — but only *old* ones: a fresh temp file may belong to a
+/// live campaign sharing the cache directory and must survive. Real
+/// cache entries are untouched either way.
+#[test]
+fn stale_tmp_files_cleaned_on_campaign_start() {
+    let dir = fresh_dir("tmpclean");
+    std::fs::create_dir_all(&dir).unwrap();
+    // An orphan from a long-dead run: backdate its mtime past the reap
+    // threshold.
+    let stale = dir.join("deadbeefdeadbeef.tmp.12345.0");
+    std::fs::write(&stale, "partial write").unwrap();
+    let past = std::time::SystemTime::now() - std::time::Duration::from_secs(24 * 3600);
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&stale)
+        .unwrap()
+        .set_times(std::fs::FileTimes::new().set_modified(past))
+        .unwrap();
+    // An in-flight temp file of a (simulated) concurrent campaign.
+    let fresh = dir.join("feedfacefeedface.tmp.99999.0");
+    std::fs::write(&fresh, "in flight").unwrap();
+
+    let points = campaign(3, 13);
+    let opts = SweepOptions { threads: 1, cache_dir: Some(dir.clone()), progress: false };
+    run_campaign(&points, &opts);
+    assert!(!stale.exists(), "old orphaned tmp file survived campaign start");
+    assert!(fresh.exists(), "fresh (possibly in-flight) tmp file was reaped");
+
+    // Apart from the simulated in-flight file, only real
+    // fingerprint-keyed entries remain...
+    std::fs::remove_file(&fresh).unwrap();
+    for entry in std::fs::read_dir(&dir).unwrap().flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        assert!(
+            name.ends_with(".json") && !name.contains(".tmp."),
+            "unexpected cache-dir file {name}"
+        );
+    }
+    // ...and they replay cleanly.
+    let replay = run_campaign(&points, &opts);
+    assert_eq!(replay.computed, 0);
+    assert_eq!(replay.cached, 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// A model-version or fingerprint change must invalidate the cache
 /// entry (stale caches never poison new results).
 #[test]
