@@ -83,11 +83,26 @@ impl DgemmModel {
         DgemmModel { nodes: vec![c] }
     }
 
+    /// Coefficients of `node` (a single-entry model is homogeneous and
+    /// valid for any node id).
+    ///
+    /// Node-count agreement between the model, the topology and the
+    /// rank placement is checked up front by `SimPoint::validate` in
+    /// the campaign layer; this accessor still guards the raw index so
+    /// a mismatched hand-built model fails with a diagnosis instead of
+    /// a bare out-of-bounds panic deep inside the driver.
     pub fn coef(&self, node: usize) -> &NodeCoef {
         if self.nodes.len() == 1 {
             &self.nodes[0]
         } else {
-            &self.nodes[node]
+            self.nodes.get(node).unwrap_or_else(|| {
+                panic!(
+                    "heterogeneous dgemm model covers {} node(s) but node {node} was \
+                     requested — topology/rpn and model node counts disagree (run \
+                     SimPoint::validate before simulating)",
+                    self.nodes.len()
+                )
+            })
         }
     }
 

@@ -6,10 +6,12 @@ use std::rc::Rc;
 
 use crate::coordinator::experiments::{self, ExpCtx, Scale};
 use crate::coordinator::manifest::Manifest;
-use crate::coordinator::sweep::{self, run_campaign, SimPoint, SweepOptions};
+use crate::coordinator::sweep::{self, run_campaign, Platform, SimPoint, SweepOptions};
 use crate::coordinator::table::{fnum, Table};
 use crate::hpl::{Bcast, HplConfig, HplResult, Rfact, SwapAlg};
-use crate::platform::{calibrate_network, CalProcedure, GroundTruth, Scenario};
+use crate::platform::{
+    calibrate_network, CalProcedure, GroundTruth, PlatformScenario, Scenario,
+};
 use crate::runtime::Artifacts;
 
 const USAGE: &str = "\
@@ -28,15 +30,20 @@ USAGE:
       --cache pointing at the merged cache).
   hplsim sweep [--points K] [--threads T] [--seed N] [--nodes K] [--rpn R]
                [--n N] [--scenario normal|cooling|multimodal]
-               [--out DIR] [--cache DIR] [--no-cache]
+               [--platform FILE] [--out DIR] [--cache DIR] [--no-cache]
                [--manifest FILE] [--export-manifest FILE] [--plan-only]
       Random HPL parameter-space campaign (NB, depth, bcast, swap, rfact,
       geometry) on the calibrated surrogate: K points (default 100) with
       per-point seeds derived from the campaign seed, executed by the
       work-stealing sweep runtime with a resumable on-disk cache.
-      --manifest executes a previously exported campaign manifest instead
-      of sampling; --export-manifest writes the campaign as a manifest
-      (with --plan-only: write it and exit without simulating).
+      --platform runs the campaign on a declarative platform-scenario
+      JSON (generative node variability, degraded links, ...; see
+      README "Platform scenarios") instead of the calibrated surrogate —
+      every point then carries the O(1) scenario, materialized in the
+      worker from the point seed. --manifest executes a previously
+      exported campaign manifest instead of sampling; --export-manifest
+      writes the campaign as a manifest (with --plan-only: write it and
+      exit without simulating).
   hplsim shard --manifest FILE --shards S --shard-index I --cache DIR
                [--threads T]
       Execute one deterministic partition of a campaign manifest — the
@@ -88,6 +95,20 @@ pub fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
 
 fn num<T: std::str::FromStr>(opts: &HashMap<String, String>, key: &str, default: T) -> T {
     opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Validate every point before exporting a manifest: an invalid
+/// campaign (e.g. an authored scenario whose node counts disagree with
+/// the sampled HPL grids) must fail at planning time with exit 2, not
+/// exit 0 here and then at `Manifest::load` on every shard machine.
+fn reject_invalid_points(cmd: &str, points: &[SimPoint]) -> bool {
+    for (i, p) in points.iter().enumerate() {
+        if let Err(e) = p.validate() {
+            eprintln!("{cmd}: invalid campaign point {i} ({}): {e}", p.label);
+            return false;
+        }
+    }
+    true
 }
 
 /// Path-valued option. `parse_args` maps a valueless trailing flag to
@@ -175,6 +196,9 @@ fn cmd_exp(positional: &[String], opts: &HashMap<String, String>) -> i32 {
     }
     if let Some(path) = export {
         let points = ctx.plan_only.take().expect("plan mode set above").into_inner();
+        if !reject_invalid_points("exp", &points) {
+            return 2;
+        }
         let manifest = Manifest::new(points);
         if let Err(e) = manifest.save(Path::new(path)) {
             eprintln!("exp: cannot write manifest {path}: {e}");
@@ -199,25 +223,36 @@ fn cmd_exp(positional: &[String], opts: &HashMap<String, String>) -> i32 {
 }
 
 /// Sample the sweep's random HPL parameter-space points (NB, depth,
-/// bcast, swap, rfact, geometry) on a freshly calibrated surrogate.
-fn sample_sweep_points(opts: &HashMap<String, String>) -> Vec<SimPoint> {
+/// bcast, swap, rfact, geometry). The platform is either a declarative
+/// scenario (`--platform FILE`: each point carries the O(1) scenario,
+/// materialized in-worker) or a freshly calibrated surrogate of the
+/// synthetic ground truth (the original path).
+fn sample_sweep_points(
+    opts: &HashMap<String, String>,
+    scenario_platform: Option<PlatformScenario>,
+) -> Vec<SimPoint> {
     let npoints = num(opts, "points", 100usize);
-    let nodes = num(opts, "nodes", 8usize);
     let rpn = num(opts, "rpn", 4usize);
     let n = num(opts, "n", 4096usize);
     let seed = num(opts, "seed", 42u64);
-    let scenario = match opts.get("scenario").map(|s| s.as_str()) {
-        Some("cooling") => Scenario::Cooling,
-        Some("multimodal") => Scenario::Multimodal,
-        _ => Scenario::Normal,
-    };
 
-    // Calibrate once (sequential), then fan the campaign out.
-    let gt = GroundTruth::generate(nodes, scenario, seed);
-    let topo = gt.topology();
-    let net_cal = calibrate_network(&gt, CalProcedure::Improved, seed + 1);
-    let models =
-        crate::calibration::calibrate_models(None, &gt, 0, 512, seed + 2);
+    let (nodes, platform) = match scenario_platform {
+        Some(s) => (s.nodes(), Platform::Scenario(Box::new(s))),
+        None => {
+            let nodes = num(opts, "nodes", 8usize);
+            let scenario = match opts.get("scenario").map(|s| s.as_str()) {
+                Some("cooling") => Scenario::Cooling,
+                Some("multimodal") => Scenario::Multimodal,
+                _ => Scenario::Normal,
+            };
+            // Calibrate once (sequential), then fan the campaign out.
+            let gt = GroundTruth::generate(nodes, scenario, seed);
+            let topo = gt.topology();
+            let net_cal = calibrate_network(&gt, CalProcedure::Improved, seed + 1);
+            let models = crate::calibration::calibrate_models(None, &gt, 0, 512, seed + 2);
+            (nodes, Platform::Explicit { topo, net: net_cal, dgemm: models.full })
+        }
+    };
 
     let nranks = nodes * rpn;
     let geos: Vec<(usize, usize)> = experiments::geometries(nranks)
@@ -255,9 +290,7 @@ fn sample_sweep_points(opts: &HashMap<String, String>) -> Vec<SimPoint> {
                 cfg.rfact.name()
             ),
             cfg,
-            topo: topo.clone(),
-            net: net_cal.clone(),
-            dgemm: models.full.clone(),
+            platform: platform.clone(),
             rpn,
             seed: sweep::point_seed(seed, i as u64),
         });
@@ -323,13 +356,14 @@ fn report_campaign(points: &[SimPoint], results: &[HplResult], out: &Path) -> bo
 /// one server" use case, through the parallel sweep runtime. With
 /// `--manifest` the points come from a campaign manifest instead.
 fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
-    let (manifest_p, export_p, out_p, cache_p) = match (
+    let (manifest_p, export_p, out_p, cache_p, platform_p) = match (
         path_opt(opts, "manifest", "sweep"),
         path_opt(opts, "export-manifest", "sweep"),
         path_opt(opts, "out", "sweep"),
         path_opt(opts, "cache", "sweep"),
+        path_opt(opts, "platform", "sweep"),
     ) {
-        (Ok(m), Ok(e), Ok(o), Ok(c)) => (m, e, o, c),
+        (Ok(m), Ok(e), Ok(o), Ok(c), Ok(p)) => (m, e, o, c, p),
         _ => return 2,
     };
     if opts.contains_key("plan-only") && export_p.is_none() {
@@ -346,7 +380,7 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
     let points: Vec<SimPoint> = match manifest_p {
         Some(path) => match Manifest::load(Path::new(path)) {
             Ok(m) => {
-                if ["points", "nodes", "rpn", "n", "scenario", "seed"]
+                if ["points", "nodes", "rpn", "n", "scenario", "seed", "platform"]
                     .iter()
                     .any(|k| opts.contains_key(*k))
                 {
@@ -360,10 +394,37 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
                 return 1;
             }
         },
-        None => sample_sweep_points(opts),
+        None => {
+            let scen = match platform_p {
+                Some(path) => match PlatformScenario::load(Path::new(path)) {
+                    Ok(s) => {
+                        if ["nodes", "scenario"].iter().any(|k| opts.contains_key(*k)) {
+                            eprintln!(
+                                "sweep: note: --platform given; --nodes/--scenario are \
+                                 ignored (the scenario file defines the platform)"
+                            );
+                        }
+                        eprintln!(
+                            "sweep: platform scenario loaded from {path} ({} nodes)",
+                            s.nodes()
+                        );
+                        Some(s)
+                    }
+                    Err(e) => {
+                        eprintln!("sweep: cannot load platform scenario: {e}");
+                        return 1;
+                    }
+                },
+                None => None,
+            };
+            sample_sweep_points(opts, scen)
+        }
     };
 
     if let Some(path) = export_p {
+        if !reject_invalid_points("sweep", &points) {
+            return 2;
+        }
         let manifest = Manifest::new(points.clone());
         if let Err(e) = manifest.save(Path::new(path)) {
             eprintln!("sweep: cannot write manifest {path}: {e}");
@@ -380,7 +441,13 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
         cache_dir,
         progress: true,
     };
-    let report = run_campaign(&points, &sweep_opts);
+    let report = match run_campaign(&points, &sweep_opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("sweep: invalid campaign point — {e}");
+            return 2;
+        }
+    };
     let wrote_csv = report_campaign(&points, &report.results, &out);
     println!(
         "\nsweep: {} points | {} computed, {} cached | {} threads | {:.2} s wall \
@@ -448,7 +515,13 @@ fn cmd_shard(opts: &HashMap<String, String>) -> i32 {
         cache_dir: Some(cache.into()),
         progress: true,
     };
-    let report = run_campaign(&mine, &sweep_opts);
+    let report = match run_campaign(&mine, &sweep_opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("shard: invalid campaign point — {e}");
+            return 2;
+        }
+    };
     println!(
         "shard {index}/{shards}: {} computed, {} cached | {} threads | {:.2} s wall",
         report.computed, report.cached, report.threads, report.wall_seconds

@@ -11,7 +11,7 @@ use std::path::PathBuf;
 use std::rc::Rc;
 
 use crate::blas::DgemmModel;
-use crate::calibration::{self, CalibratedModels};
+use crate::calibration;
 use crate::coordinator::sweep::{run_campaign, SimPoint, SweepOptions};
 use crate::coordinator::table::{fnum, fpct, Table};
 use crate::hpl::{
@@ -19,11 +19,12 @@ use crate::hpl::{
 };
 use crate::network::{NetModel, Topology};
 use crate::platform::{
-    calibrate_network, generative, CalProcedure, GroundTruth, Hierarchical, Mixture,
-    Scenario,
+    CalProcedure, ComputeSpec, DayDraw, Fidelity, GroundTruth, GtRef, Hierarchical,
+    HierSpec, LinkVariability, MixSpec, Mixture, NetSpec, PlatformScenario, SampleOpts,
+    Scenario, TopoSpec,
 };
 use crate::runtime::Artifacts;
-use crate::stats::{anova_one_way, mean, mean_ci95, std_dev, Rng};
+use crate::stats::{anova_one_way, derive_seed, mean, mean_ci95, std_dev, Rng};
 
 /// Experiment scale.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -146,7 +147,9 @@ impl ExpCtx {
         }
     }
 
-    /// Build one self-contained simulation point for a campaign.
+    /// Build one self-contained simulation point over materialized
+    /// models (used where the models only exist concretely, e.g. the
+    /// ad-hoc `run` command).
     #[allow(clippy::too_many_arguments)]
     pub fn point(
         &self,
@@ -158,15 +161,28 @@ impl ExpCtx {
         rpn: usize,
         seed: u64,
     ) -> SimPoint {
-        SimPoint {
+        SimPoint::explicit(
             label,
-            cfg: cfg.clone(),
-            topo: topo.clone(),
-            net: net.clone(),
-            dgemm: dgemm.clone(),
+            cfg.clone(),
+            topo.clone(),
+            net.clone(),
+            dgemm.clone(),
             rpn,
             seed,
-        }
+        )
+    }
+
+    /// Build one campaign point over a generative scenario: the O(1)
+    /// payload, materialized inside the worker from the point seed.
+    pub fn scenario_point(
+        &self,
+        label: String,
+        cfg: &HplConfig,
+        scenario: PlatformScenario,
+        rpn: usize,
+        seed: u64,
+    ) -> SimPoint {
+        SimPoint::scenario(label, cfg.clone(), scenario, rpn, seed)
     }
 
     /// Execute a declarative point list and return its results in point
@@ -185,16 +201,28 @@ impl ExpCtx {
         let results = match &self.arts {
             Some(a) => {
                 if self.threads != 0 || self.cache_dir.is_some() {
-                    eprintln!(
-                        "warning: --threads/--cache are ignored on the artifact path \
-                         (the PJRT client is single-threaded and uncached)"
-                    );
+                    // Once per process, not once per experiment: `exp
+                    // all` runs many campaigns through this path.
+                    static WARNED: std::sync::Once = std::sync::Once::new();
+                    WARNED.call_once(|| {
+                        eprintln!(
+                            "warning: --threads and --cache are ignored while PJRT \
+                             artifacts are loaded — the artifact path is \
+                             single-threaded and uncached until the batched-artifact \
+                             backend lands; pass --no-artifacts to use the parallel \
+                             campaign runtime"
+                        );
+                    });
                 }
                 points
                     .iter()
                     .map(|p| {
+                        let (topo, net, dgemm) = p
+                            .platform
+                            .realize(p.seed)
+                            .unwrap_or_else(|e| panic!("point '{}': {e}", p.label));
                         simulate_with_artifacts(
-                            &p.cfg, &p.topo, &p.net, &p.dgemm, a, p.rpn, p.seed,
+                            &p.cfg, &topo, &net, &dgemm, a, p.rpn, p.seed,
                         )
                         .expect("artifact simulation")
                     })
@@ -206,7 +234,9 @@ impl ExpCtx {
                     cache_dir: self.cache_dir.clone(),
                     progress: false,
                 };
-                run_campaign(&points, &opts).results
+                run_campaign(&points, &opts)
+                    .unwrap_or_else(|e| panic!("invalid campaign point — {e}"))
+                    .results
             }
         };
         PointResults::new(results)
@@ -266,43 +296,82 @@ impl ValScale {
     }
 }
 
-fn cal_models(ctx: &ExpCtx, gt: &GroundTruth, samples: usize) -> CalibratedModels {
-    calibration::calibrate_models(ctx.arts.as_deref(), gt, 0, samples, ctx.seed + 11)
+/// Scenario-building helpers shared by the validation experiments: the
+/// concrete models (ground truth, calibrations) are *described*, not
+/// materialized — workers rebuild them from the O(1) spec.
+fn gt_ref(ctx: &ExpCtx, nodes: usize, scenario: Scenario) -> GtRef {
+    GtRef { nodes, scenario, seed: ctx.seed, drop_bytes: None }
+}
+
+fn scen(topo: &TopoSpec, net: &NetSpec, compute: ComputeSpec) -> PlatformScenario {
+    PlatformScenario {
+        topo: topo.clone(),
+        net: net.clone(),
+        compute,
+        links: LinkVariability::None,
+    }
+}
+
+/// The calibrated dgemm model of `gt` at the experiment's standard
+/// calibration seed — as a spec.
+fn calibrated(ctx: &ExpCtx, gt: &GtRef, samples: usize, fidelity: Fidelity) -> ComputeSpec {
+    ComputeSpec::Calibrated {
+        gt: gt.clone(),
+        day: 0,
+        samples,
+        cal_seed: ctx.seed + 11,
+        fidelity,
+    }
 }
 
 /// Fig. 5 — validation vs matrix size at three model fidelities.
 pub fn fig5(ctx: &ExpCtx) -> Table {
     let s = ValScale::get(ctx);
-    let gt = GroundTruth::generate(s.nodes, Scenario::Normal, ctx.seed);
-    let topo = gt.topology();
-    let net_truth = gt.net_model();
-    let net_cal = calibrate_network(&gt, CalProcedure::Improved, ctx.seed + 1);
-    let models = cal_models(ctx, &gt, s.cal_samples);
+    let gt = gt_ref(ctx, s.nodes, Scenario::Normal);
+    let topo = gt.star_topo().expect("valid ground-truth ref");
+    let net_truth = NetSpec::GroundTruth(gt.clone());
+    let net_cal = NetSpec::Calibrated {
+        gt: gt.clone(),
+        procedure: CalProcedure::Improved,
+        cal_seed: ctx.seed + 1,
+    };
 
-    // Plan: every (N, fidelity, repetition) is one independent point.
+    // Plan: every (N, fidelity, repetition) is one independent point;
+    // each carries the O(1) scenario, not the materialized models.
     let mut pts = Vec::new();
     for &n in &s.n_list {
         let mut cfg = HplConfig::dahu_default(n, s.p, s.q);
         cfg.nb = s.nb;
         for r in 0..s.reality_reps {
-            let day_model = gt.day_model(r);
-            pts.push(ctx.point(
+            pts.push(ctx.scenario_point(
                 format!("fig5/N{n}/reality{r}"),
-                &cfg, &topo, &net_truth, &day_model, s.rpn, ctx.seed + 100 + r,
+                &cfg,
+                scen(&topo, &net_truth, ComputeSpec::GroundTruthDay { gt: gt.clone(), day: r }),
+                s.rpn,
+                ctx.seed + 100 + r,
             ));
         }
-        pts.push(ctx.point(
+        pts.push(ctx.scenario_point(
             format!("fig5/N{n}/naive"),
-            &cfg, &topo, &net_cal, &models.naive, s.rpn, ctx.seed + 201,
+            &cfg,
+            scen(&topo, &net_cal, calibrated(ctx, &gt, s.cal_samples, Fidelity::Naive)),
+            s.rpn,
+            ctx.seed + 201,
         ));
-        pts.push(ctx.point(
+        pts.push(ctx.scenario_point(
             format!("fig5/N{n}/hetero"),
-            &cfg, &topo, &net_cal, &models.hetero, s.rpn, ctx.seed + 202,
+            &cfg,
+            scen(&topo, &net_cal, calibrated(ctx, &gt, s.cal_samples, Fidelity::Hetero)),
+            s.rpn,
+            ctx.seed + 202,
         ));
         for r in 0..3u64 {
-            pts.push(ctx.point(
+            pts.push(ctx.scenario_point(
                 format!("fig5/N{n}/full{r}"),
-                &cfg, &topo, &net_cal, &models.full, s.rpn, ctx.seed + 300 + r,
+                &cfg,
+                scen(&topo, &net_cal, calibrated(ctx, &gt, s.cal_samples, Fidelity::Full)),
+                s.rpn,
+                ctx.seed + 300 + r,
             ));
         }
     }
@@ -341,33 +410,50 @@ pub fn fig5(ctx: &ExpCtx) -> Table {
 /// Fig. 6 — the cooling issue: stale vs re-calibrated predictions.
 pub fn fig6(ctx: &ExpCtx) -> Table {
     let s = ValScale::get(ctx);
-    let gt_cool = GroundTruth::generate(s.nodes, Scenario::Cooling, ctx.seed);
-    let gt_normal = GroundTruth::generate(s.nodes, Scenario::Normal, ctx.seed);
-    let topo = gt_cool.topology();
-    let net_truth = gt_cool.net_model();
-    let net_cal = calibrate_network(&gt_cool, CalProcedure::Improved, ctx.seed + 1);
+    let gt_cool = gt_ref(ctx, s.nodes, Scenario::Cooling);
+    let gt_normal = gt_ref(ctx, s.nodes, Scenario::Normal);
+    let topo = gt_cool.star_topo().expect("valid ground-truth ref");
+    let net_truth = NetSpec::GroundTruth(gt_cool.clone());
+    let net_cal = NetSpec::Calibrated {
+        gt: gt_cool.clone(),
+        procedure: CalProcedure::Improved,
+        cal_seed: ctx.seed + 1,
+    };
     // Stale: calibrated when the platform was healthy.
-    let stale = cal_models(ctx, &gt_normal, s.cal_samples);
+    let stale = calibrated(ctx, &gt_normal, s.cal_samples, Fidelity::Full);
     // Fresh: re-calibrated after the cooling malfunction.
-    let fresh = cal_models(ctx, &gt_cool, s.cal_samples);
+    let fresh = calibrated(ctx, &gt_cool, s.cal_samples, Fidelity::Full);
 
     let mut pts = Vec::new();
     for &n in &s.n_list {
         let mut cfg = HplConfig::dahu_default(n, s.p, s.q);
         cfg.nb = s.nb;
         for r in 0..s.reality_reps {
-            pts.push(ctx.point(
+            pts.push(ctx.scenario_point(
                 format!("fig6/N{n}/reality{r}"),
-                &cfg, &topo, &net_truth, &gt_cool.day_model(r), s.rpn, ctx.seed + 400 + r,
+                &cfg,
+                scen(
+                    &topo,
+                    &net_truth,
+                    ComputeSpec::GroundTruthDay { gt: gt_cool.clone(), day: r },
+                ),
+                s.rpn,
+                ctx.seed + 400 + r,
             ));
         }
-        pts.push(ctx.point(
+        pts.push(ctx.scenario_point(
             format!("fig6/N{n}/stale"),
-            &cfg, &topo, &net_cal, &stale.full, s.rpn, ctx.seed + 501,
+            &cfg,
+            scen(&topo, &net_cal, stale.clone()),
+            s.rpn,
+            ctx.seed + 501,
         ));
-        pts.push(ctx.point(
+        pts.push(ctx.scenario_point(
             format!("fig6/N{n}/recal"),
-            &cfg, &topo, &net_cal, &fresh.full, s.rpn, ctx.seed + 502,
+            &cfg,
+            scen(&topo, &net_cal, fresh.clone()),
+            s.rpn,
+            ctx.seed + 502,
         ));
     }
     let mut res = ctx.run_points(pts);
@@ -414,17 +500,25 @@ pub fn fig7(ctx: &ExpCtx) -> Table {
     } else {
         (8, 4, 8_192, 64, 2)
     };
-    let mut gt = GroundTruth::generate(nodes, Scenario::Normal, ctx.seed);
+    let mut gt = gt_ref(ctx, nodes, Scenario::Normal);
     if !ctx.is_full() {
         // Scale the DMA-locking drop threshold down with the problem so
         // elongated geometries cross it exactly as in §4.1.
-        gt.drop_bytes = 2.0e6;
+        gt.drop_bytes = Some(2.0e6);
     }
-    let topo = gt.topology();
-    let net_truth = gt.net_model();
-    let net_opt = calibrate_network(&gt, CalProcedure::Optimistic, ctx.seed + 1);
-    let net_imp = calibrate_network(&gt, CalProcedure::Improved, ctx.seed + 1);
-    let models = cal_models(ctx, &gt, 512);
+    let topo = gt.star_topo().expect("valid ground-truth ref");
+    let net_truth = NetSpec::GroundTruth(gt.clone());
+    let net_opt = NetSpec::Calibrated {
+        gt: gt.clone(),
+        procedure: CalProcedure::Optimistic,
+        cal_seed: ctx.seed + 1,
+    };
+    let net_imp = NetSpec::Calibrated {
+        gt: gt.clone(),
+        procedure: CalProcedure::Improved,
+        cal_seed: ctx.seed + 1,
+    };
+    let full = calibrated(ctx, &gt, 512, Fidelity::Full);
 
     let nranks = nodes * rpn;
     let mut pts = Vec::new();
@@ -432,18 +526,27 @@ pub fn fig7(ctx: &ExpCtx) -> Table {
         let mut cfg = HplConfig::dahu_default(n, p, q);
         cfg.nb = nb;
         for r in 0..reps {
-            pts.push(ctx.point(
+            pts.push(ctx.scenario_point(
                 format!("fig7/{p}x{q}/reality{r}"),
-                &cfg, &topo, &net_truth, &gt.day_model(r), rpn, ctx.seed + 600 + r,
+                &cfg,
+                scen(&topo, &net_truth, ComputeSpec::GroundTruthDay { gt: gt.clone(), day: r }),
+                rpn,
+                ctx.seed + 600 + r,
             ));
         }
-        pts.push(ctx.point(
+        pts.push(ctx.scenario_point(
             format!("fig7/{p}x{q}/optimistic"),
-            &cfg, &topo, &net_opt, &models.full, rpn, ctx.seed + 701,
+            &cfg,
+            scen(&topo, &net_opt, full.clone()),
+            rpn,
+            ctx.seed + 701,
         ));
-        pts.push(ctx.point(
+        pts.push(ctx.scenario_point(
             format!("fig7/{p}x{q}/improved"),
-            &cfg, &topo, &net_imp, &models.full, rpn, ctx.seed + 702,
+            &cfg,
+            scen(&topo, &net_imp, full.clone()),
+            rpn,
+            ctx.seed + 702,
         ));
     }
     let mut res = ctx.run_points(pts);
@@ -479,11 +582,15 @@ pub fn fig8(ctx: &ExpCtx) -> (Table, Table) {
     } else {
         (4, 4, 4_096, vec![32usize, 64])
     };
-    let gt = GroundTruth::generate(nodes, Scenario::Normal, ctx.seed);
-    let topo = gt.topology();
-    let net_truth = gt.net_model();
-    let net_cal = calibrate_network(&gt, CalProcedure::Improved, ctx.seed + 1);
-    let models = cal_models(ctx, &gt, 512);
+    let gt = gt_ref(ctx, nodes, Scenario::Normal);
+    let topo = gt.star_topo().expect("valid ground-truth ref");
+    let net_truth = NetSpec::GroundTruth(gt.clone());
+    let net_cal = NetSpec::Calibrated {
+        gt: gt.clone(),
+        procedure: CalProcedure::Improved,
+        cal_seed: ctx.seed + 1,
+    };
+    let full = calibrated(ctx, &gt, 512, Fidelity::Full);
     let nranks = nodes * rpn;
     let (p, q) = {
         // Most square grid.
@@ -497,7 +604,7 @@ pub fn fig8(ctx: &ExpCtx) -> (Table, Table) {
     };
 
     // Plan: the full factorial, two points (reality, prediction) each.
-    let day0 = gt.day_model(0);
+    let day0 = ComputeSpec::GroundTruthDay { gt: gt.clone(), day: 0 };
     let mut pts = Vec::new();
     for &nb in &nbs {
         for depth in [0usize, 1] {
@@ -516,13 +623,19 @@ pub fn fig8(ctx: &ExpCtx) -> (Table, Table) {
                         nbmin: 8,
                     };
                     let id = format!("fig8/nb{nb}-d{depth}-{}-{}", bcast.name(), swap.name());
-                    pts.push(ctx.point(
+                    pts.push(ctx.scenario_point(
                         format!("{id}/reality"),
-                        &cfg, &topo, &net_truth, &day0, rpn, ctx.seed + 800,
+                        &cfg,
+                        scen(&topo, &net_truth, day0.clone()),
+                        rpn,
+                        ctx.seed + 800,
                     ));
-                    pts.push(ctx.point(
+                    pts.push(ctx.scenario_point(
                         format!("{id}/pred"),
-                        &cfg, &topo, &net_cal, &models.full, rpn, ctx.seed + 900,
+                        &cfg,
+                        scen(&topo, &net_cal, full.clone()),
+                        rpn,
+                        ctx.seed + 900,
                     ));
                 }
             }
@@ -734,9 +847,12 @@ pub fn fig12(ctx: &ExpCtx) -> Table {
     } else {
         (64, 3, vec![8_192usize, 16_384, 32_768], 256, 2)
     };
-    // Fit the hierarchy once on an observed testbed, then extrapolate.
+    // Fit the hierarchy once on an observed testbed; the campaign
+    // points carry only the fitted spec (O(1)) — workers sample the
+    // extrapolated clusters themselves from pinned cluster seeds.
+    let gt_obs = gt_ref(ctx, 32, Scenario::Normal);
     let gt = GroundTruth::generate(32, Scenario::Normal, ctx.seed);
-    let h = Hierarchical::fit(&observe_linear(&gt, 10, 250, ctx.seed + 41));
+    let h = HierSpec::of(&Hierarchical::fit(&observe_linear(&gt, 10, 250, ctx.seed + 41)));
     let (p, q) = {
         let mut best = (1, nodes);
         for (a, b) in geometries(nodes) {
@@ -746,40 +862,46 @@ pub fn fig12(ctx: &ExpCtx) -> Table {
         }
         best
     };
-    let topo = Topology::star(nodes, gt.node_bw, gt.loop_bw);
-    let net = gt.net_model();
+    let topo = TopoSpec::Star { nodes, node_bw: gt.node_bw, loop_bw: gt.loop_bw };
+    let net = NetSpec::GroundTruth(gt_obs);
     let gammas = [0.0, 0.02, 0.05, 0.10];
 
-    let mut rng = Rng::new(ctx.seed + 42);
-    let cluster_draws: Vec<Vec<[f64; 3]>> =
-        (0..clusters).map(|_| h.sample_cluster(nodes, &mut rng)).collect();
+    // One multi-threaded rank per node (§5.2): alpha is scaled by the
+    // per-node parallelism the paper's multithreaded BLAS achieves.
+    let th = ctx.node_threads();
+    let sampled = |cv: f64, ci: usize| ComputeSpec::Hierarchical {
+        model: h.clone(),
+        opts: SampleOpts {
+            nodes,
+            cluster_seed: Some(derive_seed(ctx.seed + 42, ci as u64)),
+            day: DayDraw::None,
+            gamma_cv: Some(cv),
+            alpha_scale: th,
+            evict_slowest: 0,
+        },
+    };
 
     // Plan: per (N, gamma-cv, cluster): one deterministic baseline run
-    // plus `reps` stochastic runs. One multi-threaded rank per node
-    // (§5.2): alpha is scaled by the per-node parallelism the paper's
-    // multithreaded BLAS achieves.
+    // (cv = 0) plus `reps` stochastic runs over the same cluster draw.
     let mut pts = Vec::new();
     for &n in &n_list {
         let mut cfg = HplConfig::dahu_default(n, p, q);
         cfg.nb = nb;
         for &cv in &gammas {
-            for (ci, cluster) in cluster_draws.iter().enumerate() {
-                // Node-level model: 16-way threaded dgemm.
-                let th = ctx.node_threads();
-                let scaled: Vec<[f64; 3]> = cluster
-                    .iter()
-                    .map(|c| [c[0] / th, c[1], c[2] / th])
-                    .collect();
-                let base_model = generative::model_from_linear(&scaled, Some(0.0));
-                pts.push(ctx.point(
+            for ci in 0..clusters {
+                pts.push(ctx.scenario_point(
                     format!("fig12/N{n}/cv{cv}/c{ci}/base"),
-                    &cfg, &topo, &net, &base_model, 1, ctx.seed + 4300,
+                    &cfg,
+                    scen(&topo, &net, sampled(0.0, ci)),
+                    1,
+                    ctx.seed + 4300,
                 ));
-                let model = generative::model_from_linear(&scaled, Some(cv));
                 for r in 0..reps {
-                    pts.push(ctx.point(
+                    pts.push(ctx.scenario_point(
                         format!("fig12/N{n}/cv{cv}/c{ci}/rep{r}"),
-                        &cfg, &topo, &net, &model, 1,
+                        &cfg,
+                        scen(&topo, &net, sampled(cv, ci)),
+                        1,
                         ctx.seed + 4400 + (ci as u64) * 37 + r,
                     ));
                 }
@@ -820,14 +942,31 @@ pub fn fig13_15(ctx: &ExpCtx, scenario: Scenario) -> Table {
     };
     let gt = GroundTruth::generate(32, scenario, ctx.seed);
     let h = Hierarchical::fit(&observe_linear(&gt, 10, 250, ctx.seed + 51));
-    let mut rng = Rng::new(ctx.seed + 52);
-    let clusters_draws: Vec<Vec<[f64; 3]>> = (0..clusters)
-        .map(|_| match scenario {
-            Scenario::Normal => h.sample_cluster(nodes, &mut rng),
-            _ => Mixture::fit(&h).sample_cluster(nodes, &mut rng),
-        })
-        .collect();
-    let net = gt.net_model();
+    let hspec = HierSpec::of(&h);
+    // Multimodal populations sample from the fitted mixture instead.
+    let mixspec = match scenario {
+        Scenario::Normal => None,
+        _ => Some(MixSpec::of(&Mixture::fit(&h))),
+    };
+    let net = NetSpec::GroundTruth(gt_ref(ctx, 32, scenario));
+    let th = ctx.node_threads();
+    // Eviction is part of the scenario: the worker samples the pinned
+    // cluster draw and drops the k largest-alpha nodes itself — the
+    // planner never touches (or ships) the per-node coefficients.
+    let sampled = |ci: usize, k: usize| {
+        let opts = SampleOpts {
+            nodes,
+            cluster_seed: Some(derive_seed(ctx.seed + 52, ci as u64)),
+            day: DayDraw::None,
+            gamma_cv: None,
+            alpha_scale: th,
+            evict_slowest: k,
+        };
+        match &mixspec {
+            None => ComputeSpec::Hierarchical { model: hspec.clone(), opts },
+            Some(m) => ComputeSpec::Mixture { model: m.clone(), opts },
+        }
+    };
 
     let name = if scenario == Scenario::Normal { "fig13_14" } else { "fig15" };
     // Plan: every (evict-count, cluster, candidate geometry) is one
@@ -837,19 +976,9 @@ pub fn fig13_15(ctx: &ExpCtx, scenario: Scenario) -> Table {
     let mut meta: Vec<(usize, usize, usize, usize)> = Vec::new(); // (k, ci, p, q)
     for k in 0..=max_evict {
         let kept = nodes - k;
-        for (ci, cluster) in clusters_draws.iter().enumerate() {
-            // Evict the k slowest (largest alpha).
-            let mut order: Vec<usize> = (0..nodes).collect();
-            order.sort_by(|&a, &b| cluster[a][0].partial_cmp(&cluster[b][0]).unwrap());
-            let kept_nodes: Vec<[f64; 3]> =
-                order[..kept].iter().map(|&i| cluster[i]).collect();
-            let th = ctx.node_threads();
-            let scaled: Vec<[f64; 3]> = kept_nodes
-                .iter()
-                .map(|c| [c[0] / th, c[1], c[2] / th])
-                .collect();
-            let model = generative::model_from_linear(&scaled, None);
-            let topo = Topology::star(kept, gt.node_bw, gt.loop_bw);
+        for ci in 0..clusters {
+            let topo =
+                TopoSpec::Star { nodes: kept, node_bw: gt.node_bw, loop_bw: gt.loop_bw };
             // Try the plausible geometries of `kept` (small P is better,
             // §4.1; wildly elongated grids only when nothing else
             // divides, e.g. prime node counts).
@@ -864,9 +993,12 @@ pub fn fig13_15(ctx: &ExpCtx, scenario: Scenario) -> Table {
                 let mut cfg = HplConfig::dahu_default(n_ref, p, q);
                 cfg.nb = nb;
                 meta.push((k, ci, p, q));
-                pts.push(ctx.point(
+                pts.push(ctx.scenario_point(
                     format!("{name}/evict{k}/c{ci}/{p}x{q}"),
-                    &cfg, &topo, &net, &model, 1, ctx.seed + 5300 + ci as u64,
+                    &cfg,
+                    scen(&topo, &net, sampled(ci, k)),
+                    1,
+                    ctx.seed + 5300 + ci as u64,
                 ));
             }
         }
@@ -925,16 +1057,22 @@ pub fn fig16(ctx: &ExpCtx) -> Table {
     };
     let nodes = down * leaves;
     let gt = GroundTruth::generate(32, Scenario::Normal, ctx.seed);
-    let h = Hierarchical::fit(&observe_linear(&gt, 10, 250, ctx.seed + 61));
-    let mut rng = Rng::new(ctx.seed + 62);
-    let cluster = h.sample_cluster(nodes, &mut rng);
+    let h = HierSpec::of(&Hierarchical::fit(&observe_linear(&gt, 10, 250, ctx.seed + 61)));
     // Fast (16-thread) nodes: the tapering study probes the *network*,
-    // so keep the runs communication-sensitive at every scale.
-    let th = 16.0;
-    let scaled: Vec<[f64; 3]> =
-        cluster.iter().map(|c| [c[0] / th, c[1], c[2] / th]).collect();
-    let model = generative::model_from_linear(&scaled, None);
-    let net = gt.net_model();
+    // so keep the runs communication-sensitive at every scale. One
+    // pinned cluster draw shared by every point.
+    let model = ComputeSpec::Hierarchical {
+        model: h,
+        opts: SampleOpts {
+            nodes,
+            cluster_seed: Some(derive_seed(ctx.seed + 62, 0)),
+            day: DayDraw::None,
+            gamma_cv: None,
+            alpha_scale: 16.0,
+            evict_slowest: 0,
+        },
+    };
+    let net = NetSpec::GroundTruth(gt_ref(ctx, 32, Scenario::Normal));
     let (p, q) = {
         let mut best = (1, nodes);
         for (a, b) in geometries(nodes) {
@@ -952,13 +1090,22 @@ pub fn fig16(ctx: &ExpCtx) -> Table {
         let mut cfg = HplConfig::dahu_default(n, p, q);
         cfg.nb = nb;
         for tops in (1..=4).rev() {
-            let topo = Topology::fat_tree(
-                down, leaves, tops, para, gt.node_bw, gt.node_bw, gt.loop_bw,
-            );
+            let topo = TopoSpec::FatTree {
+                down_leaf: down,
+                leaves,
+                tops,
+                para,
+                node_bw: gt.node_bw,
+                trunk_bw: gt.node_bw,
+                loop_bw: gt.loop_bw,
+            };
             for r in 0..reps {
-                pts.push(ctx.point(
+                pts.push(ctx.scenario_point(
                     format!("fig16/N{n}/tops{tops}/rep{r}"),
-                    &cfg, &topo, &net, &model, 1, ctx.seed + 6300 + r,
+                    &cfg,
+                    scen(&topo, &net, model.clone()),
+                    1,
+                    ctx.seed + 6300 + r,
                 ));
             }
         }
@@ -1104,6 +1251,7 @@ mod tests {
 mod diag_tests {
     use super::*;
     use crate::calibration;
+    use crate::platform::calibrate_network;
 
     #[test]
     fn diag_prediction_components() {

@@ -23,8 +23,10 @@ use std::path::Path;
 use crate::coordinator::sweep::{SimPoint, MODEL_VERSION};
 use crate::stats::json::Json;
 
-/// Format marker written into every manifest file.
-pub const FORMAT: &str = "hplsim-manifest-v1";
+/// Format marker written into every manifest file. (v2: points may
+/// carry a generative `scenario` platform payload instead of the
+/// materialized `topo`/`net`/`dgemm` triple.)
+pub const FORMAT: &str = "hplsim-manifest-v2";
 
 /// A serializable campaign: an ordered list of self-contained points.
 #[derive(Clone, Debug)]
@@ -66,10 +68,14 @@ impl Manifest {
             .ok_or_else(|| "manifest has no points array".to_string())?;
         let mut points = Vec::with_capacity(arr.len());
         for (i, pv) in arr.iter().enumerate() {
-            points.push(
-                SimPoint::from_json(pv)
-                    .ok_or_else(|| format!("manifest point {i} is malformed"))?,
-            );
+            let p = SimPoint::from_json(pv)
+                .ok_or_else(|| format!("manifest point {i} is malformed"))?;
+            // Surface unsimulable points (node-count disagreement,
+            // unmaterializable scenarios) at load time with a pointed
+            // message, not as a panic mid-campaign.
+            p.validate()
+                .map_err(|e| format!("manifest point {i} ({}): {e}", p.label))?;
+            points.push(p);
         }
         Ok(Manifest { points })
     }
@@ -120,25 +126,27 @@ mod tests {
 
     fn pts(n: usize) -> Vec<SimPoint> {
         (0..n)
-            .map(|i| SimPoint {
-                label: format!("m{i}"),
-                cfg: HplConfig {
-                    n: 128 + 32 * i,
-                    nb: 32,
-                    p: 2,
-                    q: 2,
-                    depth: i % 2,
-                    bcast: Bcast::Ring,
-                    swap: SwapAlg::BinExch,
-                    swap_threshold: 64,
-                    rfact: Rfact::Crout,
-                    nbmin: 8,
-                },
-                topo: Topology::star(4, 12.5e9, 40e9),
-                net: NetModel::ideal(),
-                dgemm: DgemmModel::homogeneous(NodeCoef::naive(1e-11)),
-                rpn: 1,
-                seed: crate::coordinator::sweep::point_seed(9, i as u64),
+            .map(|i| {
+                SimPoint::explicit(
+                    format!("m{i}"),
+                    HplConfig {
+                        n: 128 + 32 * i,
+                        nb: 32,
+                        p: 2,
+                        q: 2,
+                        depth: i % 2,
+                        bcast: Bcast::Ring,
+                        swap: SwapAlg::BinExch,
+                        swap_threshold: 64,
+                        rfact: Rfact::Crout,
+                        nbmin: 8,
+                    },
+                    Topology::star(4, 12.5e9, 40e9),
+                    NetModel::ideal(),
+                    DgemmModel::homogeneous(NodeCoef::naive(1e-11)),
+                    1,
+                    crate::coordinator::sweep::point_seed(9, i as u64),
+                )
             })
             .collect()
     }
@@ -168,6 +176,20 @@ mod tests {
         let bad_point =
             format!(r#"{{"format":"{FORMAT}","model_version":{MODEL_VERSION},"points":[7]}}"#);
         assert!(Manifest::from_json(&Json::parse(&bad_point).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_unsimulable_points_at_load() {
+        use crate::coordinator::sweep::Platform;
+        // Parseable but invalid: a 2-node heterogeneous dgemm model
+        // under a 2x2 grid at 1 rank per node (needs 4 nodes).
+        let mut p = pts(1).remove(0);
+        if let Platform::Explicit { dgemm, .. } = &mut p.platform {
+            dgemm.nodes = vec![NodeCoef::naive(1e-11), NodeCoef::naive(2e-11)];
+        }
+        let text = Manifest::new(vec![p]).to_json().to_string();
+        let e = Manifest::from_json(&Json::parse(&text).unwrap()).unwrap_err();
+        assert!(e.contains("point 0") && e.contains("m0"), "{e}");
     }
 
     #[test]

@@ -10,5 +10,5 @@ pub mod table;
 
 pub use experiments::{ExpCtx, PointResults, Scale};
 pub use manifest::Manifest;
-pub use sweep::{run_campaign, CampaignReport, SimPoint, SweepOptions};
+pub use sweep::{run_campaign, CampaignReport, Platform, PointError, SimPoint, SweepOptions};
 pub use table::Table;

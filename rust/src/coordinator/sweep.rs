@@ -23,6 +23,7 @@
 //! abstraction is also the seam where sharding across machines and
 //! alternative execution backends attach later.
 
+use std::borrow::Cow;
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -33,13 +34,15 @@ use crate::blas::DgemmModel;
 use crate::hpl::{simulate_direct, HplConfig, HplResult};
 use crate::mpi::CommStats;
 use crate::network::{NetModel, Topology};
+use crate::platform::{PlatformScenario, ScenarioError};
 use crate::stats::derive_seed;
 use crate::stats::json::Json;
 
 /// Version of the simulation model baked into cache fingerprints.
 /// Bump whenever a change alters simulated results, so stale cache
-/// entries are never reused.
-pub const MODEL_VERSION: u64 = 1;
+/// entries are never reused. (2: scenario payloads — fingerprints now
+/// cover the canonical platform encoding.)
+pub const MODEL_VERSION: u64 = 2;
 
 /// Derive the seed of campaign point `index` from the campaign seed:
 /// `hash(campaign_seed, point_index)` through the in-tree RNG, so the
@@ -48,6 +51,87 @@ pub const MODEL_VERSION: u64 = 1;
 pub fn point_seed(campaign_seed: u64, index: u64) -> u64 {
     derive_seed(campaign_seed, index)
 }
+
+/// The platform payload of a [`SimPoint`]: either fully materialized
+/// models (the original encoding — O(nodes) per point) or a generative
+/// [`PlatformScenario`] materialized in-worker from the point seed
+/// (O(1) per point — the preferred payload for variability campaigns).
+#[derive(Clone, Debug)]
+pub enum Platform {
+    Explicit { topo: Topology, net: NetModel, dgemm: DgemmModel },
+    /// Boxed: a scenario is a deep description and would otherwise
+    /// dominate the enum size every explicit point pays for.
+    Scenario(Box<PlatformScenario>),
+}
+
+/// A realized platform: the concrete models a simulation runs on —
+/// borrowed straight from an explicit payload, owned when a scenario
+/// materialized them.
+pub type RealizedPlatform<'a> =
+    (Cow<'a, Topology>, Cow<'a, NetModel>, Cow<'a, DgemmModel>);
+
+impl Platform {
+    /// Produce the concrete `(topology, network, dgemm)` triple for one
+    /// simulation. Explicit payloads borrow; scenarios materialize
+    /// (deterministically in `(scenario, seed)`).
+    pub fn realize(&self, seed: u64) -> Result<RealizedPlatform<'_>, ScenarioError> {
+        match self {
+            Platform::Explicit { topo, net, dgemm } => {
+                Ok((Cow::Borrowed(topo), Cow::Borrowed(net), Cow::Borrowed(dgemm)))
+            }
+            Platform::Scenario(s) => {
+                let (t, n, d) = s.materialize(seed)?;
+                Ok((Cow::Owned(t), Cow::Owned(n), Cow::Owned(d)))
+            }
+        }
+    }
+
+    /// Canonical JSON encoding — the manifest payload *and* the
+    /// fingerprint domain: every field of every variant feeds the hash
+    /// through this encoding (f64s are emitted bit-exactly).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Platform::Explicit { topo, net, dgemm } => Json::obj(vec![
+                ("topo", topo.to_json()),
+                ("net", net.to_json()),
+                ("dgemm", dgemm.to_json()),
+            ]),
+            Platform::Scenario(s) => Json::obj(vec![("scenario", s.to_json())]),
+        }
+    }
+
+    /// Inverse of [`Platform::to_json`] (also accepts the flattened
+    /// form used by [`SimPoint::to_json`], where the platform keys sit
+    /// next to the point's own).
+    pub fn from_json(v: &Json) -> Option<Platform> {
+        if let Some(s) = v.get("scenario") {
+            return Some(Platform::Scenario(Box::new(PlatformScenario::from_json(s)?)));
+        }
+        Some(Platform::Explicit {
+            topo: Topology::from_json(v.get("topo")?)?,
+            net: NetModel::from_json(v.get("net")?)?,
+            dgemm: DgemmModel::from_json(v.get("dgemm")?)?,
+        })
+    }
+}
+
+/// A malformed campaign point: the structured error [`run_campaign`]
+/// (and manifest loading) reports instead of panicking deep inside the
+/// HPL driver.
+#[derive(Clone, Debug)]
+pub struct PointError {
+    pub index: usize,
+    pub label: String,
+    pub reason: String,
+}
+
+impl std::fmt::Display for PointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "point {} ({}): {}", self.index, self.label, self.reason)
+    }
+}
+
+impl std::error::Error for PointError {}
 
 /// One self-contained simulation point: everything a worker needs to
 /// run one HPL simulation, with no shared state. All fields are plain
@@ -58,9 +142,8 @@ pub struct SimPoint {
     /// fingerprint.
     pub label: String,
     pub cfg: HplConfig,
-    pub topo: Topology,
-    pub net: NetModel,
-    pub dgemm: DgemmModel,
+    /// The platform: materialized models or a generative scenario.
+    pub platform: Platform,
     /// MPI ranks per node.
     pub rpn: usize,
     /// Per-point seed (see [`point_seed`]).
@@ -102,9 +185,100 @@ impl Fp {
 }
 
 impl SimPoint {
-    /// 64-bit fingerprint of (config, seed, model inputs, model
-    /// version): the cache key. Two points with equal fingerprints
-    /// simulate identically.
+    /// Build a point over materialized models (the original payload).
+    pub fn explicit(
+        label: impl Into<String>,
+        cfg: HplConfig,
+        topo: Topology,
+        net: NetModel,
+        dgemm: DgemmModel,
+        rpn: usize,
+        seed: u64,
+    ) -> SimPoint {
+        SimPoint {
+            label: label.into(),
+            cfg,
+            platform: Platform::Explicit { topo, net, dgemm },
+            rpn,
+            seed,
+        }
+    }
+
+    /// Build a point over a generative scenario (O(1) payload).
+    pub fn scenario(
+        label: impl Into<String>,
+        cfg: HplConfig,
+        scenario: PlatformScenario,
+        rpn: usize,
+        seed: u64,
+    ) -> SimPoint {
+        SimPoint {
+            label: label.into(),
+            cfg,
+            platform: Platform::Scenario(Box::new(scenario)),
+            rpn,
+            seed,
+        }
+    }
+
+    /// Check the point is simulable: valid HPL configuration, a
+    /// materializable platform, and node-count agreement between the
+    /// dgemm model, the topology and the rank placement. This is the
+    /// structured front door for errors that used to surface as
+    /// out-of-bounds panics deep inside the driver
+    /// (`DgemmModel::coef`).
+    ///
+    /// O(1): scenarios are checked statically
+    /// ([`PlatformScenario::check`]) without sampling or calibrating —
+    /// manifest loading and campaign start validate every point, so
+    /// this must not cost a materialization.
+    pub fn validate(&self) -> Result<(), String> {
+        self.cfg.validate()?;
+        if self.rpn == 0 {
+            return Err("rpn must be >= 1".into());
+        }
+        // (topology nodes, heterogeneous dgemm nodes — None when the
+        // model is homogeneous and fits any node count).
+        let (nodes, dgemm_nodes) = match &self.platform {
+            Platform::Explicit { topo, dgemm, .. } => {
+                if dgemm.nodes.is_empty() {
+                    return Err("dgemm model has no nodes".into());
+                }
+                let d = dgemm.nodes.len();
+                (topo.nodes(), (d != 1).then_some(d))
+            }
+            Platform::Scenario(s) => {
+                s.check().map_err(|e| e.to_string())?;
+                (s.nodes(), s.compute.nodes())
+            }
+        };
+        let nranks = self.cfg.nranks();
+        let nodes_used = nranks.div_ceil(self.rpn);
+        if nodes_used > nodes {
+            return Err(format!(
+                "{nranks} ranks at {} per node need {nodes_used} nodes but the \
+                 topology has {nodes}",
+                self.rpn
+            ));
+        }
+        if let Some(d) = dgemm_nodes {
+            if d < nodes_used {
+                return Err(format!(
+                    "heterogeneous dgemm model covers {d} node(s) but ranks run on \
+                     {nodes_used}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// 64-bit fingerprint of (config, seed, platform, model version):
+    /// the cache key. Two points with equal fingerprints simulate
+    /// identically. The platform part hashes the canonical JSON
+    /// encoding ([`Platform::to_json`], bit-exact f64s, sorted keys),
+    /// so *every* field of an explicit model or a scenario feeds the
+    /// hash — a scenario is fingerprinted by its O(1) description, not
+    /// by the O(nodes) models it materializes into.
     pub fn fingerprint(&self) -> u64 {
         let mut h = Fp::new();
         h.push_u64(MODEL_VERSION);
@@ -121,66 +295,25 @@ impl SimPoint {
         h.push_usize(self.cfg.nbmin);
         h.push_usize(self.rpn);
         h.push_u64(self.seed);
-        // Topology.
-        match &self.topo {
-            Topology::Star { nodes, caps } => {
-                h.push_str("star");
-                h.push_usize(*nodes);
-                for c in caps {
-                    h.push_f64(*c);
-                }
-            }
-            Topology::FatTree { nodes, down_leaf, leaves, tops, para, caps } => {
-                h.push_str("fat-tree");
-                h.push_usize(*nodes);
-                h.push_usize(*down_leaf);
-                h.push_usize(*leaves);
-                h.push_usize(*tops);
-                h.push_usize(*para);
-                for c in caps {
-                    h.push_f64(*c);
-                }
-            }
-        }
-        // Protocol model (BTreeMap iteration order is deterministic).
-        h.push_f64(self.net.async_threshold);
-        h.push_f64(self.net.rendezvous_threshold);
-        for (class, segs) in &self.net.classes {
-            h.push_str(&format!("{class:?}"));
-            h.push_usize(segs.len());
-            for s in segs {
-                h.push_f64(s.max_bytes);
-                h.push_f64(s.latency);
-                h.push_f64(s.bw_factor);
-            }
-        }
-        // dgemm model coefficients.
-        h.push_usize(self.dgemm.nodes.len());
-        for c in &self.dgemm.nodes {
-            for v in c.mu {
-                h.push_f64(v);
-            }
-            for v in c.sigma {
-                h.push_f64(v);
-            }
-        }
+        // Platform (explicit models or scenario), canonically encoded.
+        h.push_str(&self.platform.to_json().to_string());
         h.0
     }
 
     /// Serialize a self-contained point for an on-disk campaign manifest
     /// (see `coordinator::manifest`). The encoding is exact: every f64
-    /// round-trips bit-for-bit and the seed travels as a decimal string
-    /// (full u64 range), so the fingerprint is preserved.
+    /// round-trips bit-for-bit and u64s (seeds) travel as decimal
+    /// strings, so the fingerprint is preserved.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("label", Json::Str(self.label.clone())),
-            ("cfg", self.cfg.to_json()),
-            ("topo", self.topo.to_json()),
-            ("net", self.net.to_json()),
-            ("dgemm", self.dgemm.to_json()),
-            ("rpn", Json::Num(self.rpn as f64)),
-            ("seed", Json::u64_str(self.seed)),
-        ])
+        let mut m = match self.platform.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("Platform::to_json always returns an object"),
+        };
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("cfg".into(), self.cfg.to_json());
+        m.insert("rpn".into(), Json::Num(self.rpn as f64));
+        m.insert("seed".into(), Json::u64_str(self.seed));
+        Json::Obj(m)
     }
 
     /// Inverse of [`SimPoint::to_json`].
@@ -188,9 +321,7 @@ impl SimPoint {
         Some(SimPoint {
             label: v.get("label")?.as_str()?.to_string(),
             cfg: HplConfig::from_json(v.get("cfg")?)?,
-            topo: Topology::from_json(v.get("topo")?)?,
-            net: NetModel::from_json(v.get("net")?)?,
-            dgemm: DgemmModel::from_json(v.get("dgemm")?)?,
+            platform: Platform::from_json(v)?,
             rpn: v.get("rpn")?.as_usize()?,
             seed: v.get("seed")?.as_u64()?,
         })
@@ -425,9 +556,22 @@ fn next_task(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
 }
 
 /// Execute a campaign: serve cached points, fan the rest out over the
-/// work-stealing pool, and return results in point order.
-pub fn run_campaign(points: &[SimPoint], opts: &SweepOptions) -> CampaignReport {
+/// work-stealing pool, and return results in point order. Every point
+/// is validated up front ([`SimPoint::validate`]); a malformed point —
+/// node-count disagreement, an unmaterializable scenario — is reported
+/// as a structured [`PointError`] before anything simulates.
+pub fn run_campaign(
+    points: &[SimPoint],
+    opts: &SweepOptions,
+) -> Result<CampaignReport, PointError> {
     let t0 = Instant::now();
+    for (index, p) in points.iter().enumerate() {
+        p.validate().map_err(|reason| PointError {
+            index,
+            label: p.label.clone(),
+            reason,
+        })?;
+    }
     let threads = resolve_threads(opts.threads);
     if let Some(dir) = &opts.cache_dir {
         if let Err(e) = std::fs::create_dir_all(dir) {
@@ -488,7 +632,12 @@ pub fn run_campaign(points: &[SimPoint], opts: &SweepOptions) -> CampaignReport 
             s.spawn(move || {
                 while let Some(idx) = next_task(deques, me) {
                     let p = &points[idx];
-                    let r = simulate_direct(&p.cfg, &p.topo, &p.net, &p.dgemm, p.rpn, p.seed);
+                    // Scenario payloads materialize here, in the
+                    // worker, from the point's own data — validated
+                    // above, so this cannot fail mid-campaign.
+                    let (topo, net, dgemm) =
+                        p.platform.realize(p.seed).expect("validated before dispatch");
+                    let r = simulate_direct(&p.cfg, &topo, &net, &dgemm, p.rpn, p.seed);
                     if let Some(dir) = cache_dir {
                         store_fp(dir, &p.label, fps[idx], &r);
                     }
@@ -513,14 +662,14 @@ pub fn run_campaign(points: &[SimPoint], opts: &SweepOptions) -> CampaignReport 
     }
     let results: Vec<HplResult> =
         slots.into_iter().map(|s| s.expect("campaign point never executed")).collect();
-    CampaignReport {
+    Ok(CampaignReport {
         results,
         from_cache,
         computed,
         cached,
         wall_seconds: t0.elapsed().as_secs_f64(),
         threads: workers,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -530,9 +679,9 @@ mod tests {
     use crate::hpl::{Bcast, Rfact, SwapAlg};
 
     fn tiny_point(seed: u64) -> SimPoint {
-        SimPoint {
-            label: "tiny".into(),
-            cfg: HplConfig {
+        SimPoint::explicit(
+            "tiny",
+            HplConfig {
                 n: 128,
                 nb: 32,
                 p: 2,
@@ -544,15 +693,15 @@ mod tests {
                 rfact: Rfact::Crout,
                 nbmin: 8,
             },
-            topo: Topology::star(4, 12.5e9, 40e9),
-            net: NetModel::ideal(),
-            dgemm: DgemmModel::homogeneous(NodeCoef {
+            Topology::star(4, 12.5e9, 40e9),
+            NetModel::ideal(),
+            DgemmModel::homogeneous(NodeCoef {
                 mu: [1e-11, 0.0, 0.0, 0.0, 5e-7],
                 sigma: [3e-13, 0.0, 0.0, 0.0, 0.0],
             }),
-            rpn: 1,
+            1,
             seed,
-        }
+        )
     }
 
     #[test]
@@ -565,12 +714,45 @@ mod tests {
         b.cfg.nb = 64;
         assert_ne!(a.fingerprint(), b.fingerprint());
         let mut c = tiny_point(7);
-        c.dgemm.nodes[0].mu[0] *= 2.0;
+        if let Platform::Explicit { dgemm, .. } = &mut c.platform {
+            dgemm.nodes[0].mu[0] *= 2.0;
+        }
         assert_ne!(a.fingerprint(), c.fingerprint());
         // The label is presentation only.
         let mut d = tiny_point(7);
         d.label = "renamed".into();
         assert_eq!(a.fingerprint(), d.fingerprint());
+    }
+
+    #[test]
+    fn malformed_points_are_structured_errors() {
+        // A heterogeneous dgemm model covering fewer nodes than the
+        // ranks use: previously an out-of-bounds panic deep in the
+        // driver, now a PointError before anything runs.
+        let mut p = tiny_point(1);
+        if let Platform::Explicit { dgemm, .. } = &mut p.platform {
+            dgemm.nodes = vec![NodeCoef::naive(1e-11), NodeCoef::naive(2e-11)];
+        }
+        let err = run_campaign(
+            &[tiny_point(0), p],
+            &SweepOptions { threads: 1, ..Default::default() },
+        )
+        .unwrap_err();
+        assert_eq!(err.index, 1);
+        assert_eq!(err.label, "tiny");
+        assert!(err.reason.contains("2 node(s)"), "{}", err.reason);
+
+        // rpn = 0 is rejected too.
+        let mut z = tiny_point(2);
+        z.rpn = 0;
+        assert!(z.validate().is_err());
+
+        // Too few topology nodes for the rank count.
+        let mut t = tiny_point(3);
+        if let Platform::Explicit { topo, .. } = &mut t.platform {
+            *topo = Topology::star(2, 12.5e9, 40e9);
+        }
+        assert!(t.validate().unwrap_err().contains("topology has 2"));
     }
 
     #[test]
@@ -612,9 +794,9 @@ mod tests {
             std::env::temp_dir().join(format!("hplsim_dupcache_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let opts = SweepOptions { threads: 1, cache_dir: Some(dir.clone()), progress: false };
-        run_campaign(&[tiny_point(5)], &opts);
+        run_campaign(&[tiny_point(5)], &opts).unwrap();
         let pts = vec![tiny_point(5), tiny_point(5), tiny_point(5)];
-        let rep = run_campaign(&pts, &opts);
+        let rep = run_campaign(&pts, &opts).unwrap();
         assert_eq!(rep.computed, 0);
         assert_eq!(rep.cached, 3);
         assert_eq!(rep.results[0].seconds, rep.results[2].seconds);
@@ -630,7 +812,7 @@ mod tests {
 
     #[test]
     fn empty_campaign_is_fine() {
-        let rep = run_campaign(&[], &SweepOptions::default());
+        let rep = run_campaign(&[], &SweepOptions::default()).unwrap();
         assert!(rep.results.is_empty());
         assert_eq!(rep.computed + rep.cached, 0);
     }
@@ -639,7 +821,8 @@ mod tests {
     fn equal_fingerprint_points_simulated_once() {
         // Same config + seed three times, plus one distinct point.
         let pts = vec![tiny_point(5), tiny_point(5), tiny_point(6), tiny_point(5)];
-        let rep = run_campaign(&pts, &SweepOptions { threads: 2, ..Default::default() });
+        let rep =
+            run_campaign(&pts, &SweepOptions { threads: 2, ..Default::default() }).unwrap();
         assert_eq!(rep.computed, 2, "duplicates must not be re-simulated");
         assert_eq!(rep.results[0].seconds, rep.results[1].seconds);
         assert_eq!(rep.results[0].seconds, rep.results[3].seconds);
@@ -649,8 +832,10 @@ mod tests {
     #[test]
     fn campaign_results_in_point_order() {
         let pts: Vec<SimPoint> = (0..6).map(|i| tiny_point(100 + i)).collect();
-        let seq = run_campaign(&pts, &SweepOptions { threads: 1, ..Default::default() });
-        let par = run_campaign(&pts, &SweepOptions { threads: 3, ..Default::default() });
+        let seq =
+            run_campaign(&pts, &SweepOptions { threads: 1, ..Default::default() }).unwrap();
+        let par =
+            run_campaign(&pts, &SweepOptions { threads: 3, ..Default::default() }).unwrap();
         for (a, b) in seq.results.iter().zip(&par.results) {
             assert_eq!(a.seconds, b.seconds);
             assert_eq!(a.comm.messages, b.comm.messages);

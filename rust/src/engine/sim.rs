@@ -192,17 +192,25 @@ impl Sim {
 
     /// Run to completion and also return engine counters.
     pub fn run_with_stats(&self) -> (f64, SimStats) {
+        // Double-buffered wake queue: `scratch` swaps with the shared
+        // queue under the lock, is drained without it, and swaps back
+        // on the next round. Both buffers keep their capacity, so
+        // steady-state polling allocates nothing — the old
+        // `mem::take(&mut *q)` left a fresh zero-capacity Vec behind
+        // and thus re-allocated the queue on every quiescence round
+        // (millions of times in a large HPL run).
+        let mut scratch: Vec<usize> = Vec::new();
         loop {
             // Poll runnable tasks to quiescence.
             loop {
-                let woken: Vec<usize> = {
+                {
                     let mut q = self.queue.lock().unwrap();
-                    std::mem::take(&mut *q)
-                };
-                if woken.is_empty() {
+                    std::mem::swap(&mut *q, &mut scratch);
+                }
+                if scratch.is_empty() {
                     break;
                 }
-                for id in woken {
+                for id in scratch.drain(..) {
                     self.poll_task(id);
                 }
             }

@@ -53,13 +53,12 @@ fn cov3(xs: &[[f64; 3]], mean: &[f64; 3]) -> Matrix {
     c
 }
 
-/// Sample `N(mean, cov)`.
-///
-/// The three components live on wildly different scales (alpha ~1e-11,
-/// beta ~1e-7, gamma ~1e-12), so the Cholesky is taken on the
-/// *correlation* matrix — a scale-free ridge there cannot distort any
-/// component — and the draws are rescaled by the per-component sds.
-fn sample_mvn(mean: &[f64; 3], cov: &Matrix, rng: &mut Rng) -> [f64; 3] {
+/// The per-component standard deviations and the clamped + ridged
+/// correlation matrix [`sample_mvn`] factors. Exposed (crate-wide) so
+/// scenario validation can prove the factorization will succeed —
+/// user-authored covariances reach the sampler through scenario JSON —
+/// without duplicating this construction.
+pub(crate) fn sds_and_ridged_correlation(cov: &Matrix) -> ([f64; 3], Matrix) {
     let mut d = [0.0f64; 3];
     for (i, di) in d.iter_mut().enumerate() {
         *di = cov[(i, i)].max(0.0).sqrt();
@@ -73,6 +72,17 @@ fn sample_mvn(mean: &[f64; 3], cov: &Matrix, rng: &mut Rng) -> [f64; 3] {
         }
         corr[(i, i)] = 1.0 + 1e-6;
     }
+    (d, corr)
+}
+
+/// Sample `N(mean, cov)`.
+///
+/// The three components live on wildly different scales (alpha ~1e-11,
+/// beta ~1e-7, gamma ~1e-12), so the Cholesky is taken on the
+/// *correlation* matrix — a scale-free ridge there cannot distort any
+/// component — and the draws are rescaled by the per-component sds.
+fn sample_mvn(mean: &[f64; 3], cov: &Matrix, rng: &mut Rng) -> [f64; 3] {
+    let (d, corr) = sds_and_ridged_correlation(cov);
     let l = corr.cholesky().expect("correlation matrix SPD after ridge");
     let z = [rng.normal(), rng.normal(), rng.normal()];
     let mut out = *mean;

@@ -14,7 +14,12 @@
 pub mod generative;
 pub mod groundtruth;
 pub mod netcal;
+pub mod scenario;
 
 pub use generative::{Hierarchical, Mixture};
 pub use groundtruth::{GroundTruth, Scenario};
 pub use netcal::{calibrate_network, CalProcedure};
+pub use scenario::{
+    ComputeSpec, DayDraw, Fidelity, Generation, GtRef, HierSpec, LinkVariability, MixSpec,
+    NetSpec, PlatformScenario, SampleOpts, ScenarioError, TopoSpec,
+};

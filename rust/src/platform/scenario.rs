@@ -1,0 +1,1485 @@
+//! Declarative platform scenarios: a *generative*, O(1)-size description
+//! of the simulated platform, materialized deterministically inside the
+//! campaign worker from the point seed.
+//!
+//! The campaign seam (coordinator::sweep / manifest) originally shipped
+//! fully materialized models in every `SimPoint`: a 1024-node
+//! heterogeneous campaign serialized 1024 `NodeCoef` vectors *per
+//! point*. A [`PlatformScenario`] replaces that with the recipe instead
+//! of the ingredients — "64 nodes sampled from this fitted hierarchical
+//! model, day realization drawn per point, 10% of the links degraded to
+//! half capacity" — so manifests stay O(1) per point and whole
+//! variability studies (§5, "Variability Matters") become declarative
+//! data.
+//!
+//! Materialization is a pure function of `(scenario, point_seed)`:
+//! every sampling stage uses either a seed pinned in the scenario
+//! (shared across points — e.g. one cluster draw reused by many
+//! configurations) or a stream derived from the point seed (a fresh
+//! draw per point — e.g. day-to-day drift campaigns). Either way the
+//! result is bit-identical regardless of worker-thread count or
+//! execution order.
+
+use crate::blas::{DgemmModel, NodeCoef};
+use crate::calibration;
+use crate::network::{NetModel, Topology};
+use crate::platform::generative::{model_from_linear, Hierarchical, Mixture};
+use crate::platform::groundtruth::{GroundTruth, Scenario};
+use crate::platform::netcal::{calibrate_network, CalProcedure};
+use crate::stats::json::Json;
+use crate::stats::{derive_seed, Matrix, Rng};
+
+/// Stream ids for point-seed derivation, one per sampling stage, so the
+/// stages stay independent of each other and of the simulation noise
+/// (which consumes the point seed itself).
+const STREAM_CLUSTER: u64 = 0x636c_7573; // "clus"
+const STREAM_DAY: u64 = 0x6461_79; // "day"
+const STREAM_LINKS: u64 = 0x6c6e_6b73; // "lnks"
+
+/// Structured materialization / validation failure. Carries enough to
+/// point at the offending scenario field from a CLI error message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScenarioError(pub String);
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, ScenarioError> {
+    Err(ScenarioError(msg.into()))
+}
+
+/// A generative topology: the *parameters* of [`Topology::star`] /
+/// [`Topology::fat_tree`], not the O(nodes) capacity vector.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TopoSpec {
+    Star { nodes: usize, node_bw: f64, loop_bw: f64 },
+    FatTree {
+        down_leaf: usize,
+        leaves: usize,
+        tops: usize,
+        para: usize,
+        node_bw: f64,
+        trunk_bw: f64,
+        loop_bw: f64,
+    },
+}
+
+impl TopoSpec {
+    pub fn nodes(&self) -> usize {
+        match self {
+            TopoSpec::Star { nodes, .. } => *nodes,
+            TopoSpec::FatTree { down_leaf, leaves, .. } => down_leaf * leaves,
+        }
+    }
+
+    /// Static (O(1)) parameter validation — everything
+    /// [`TopoSpec::materialize`] could fail on.
+    fn check(&self) -> Result<(), ScenarioError> {
+        match *self {
+            TopoSpec::Star { nodes, node_bw, loop_bw } => {
+                if nodes == 0 {
+                    return err("topo: star with 0 nodes");
+                }
+                if !(node_bw > 0.0 && loop_bw > 0.0) {
+                    return err("topo: bandwidths must be positive");
+                }
+                Ok(())
+            }
+            TopoSpec::FatTree { down_leaf, leaves, tops, para, node_bw, trunk_bw, loop_bw } => {
+                if down_leaf == 0 || leaves == 0 || tops == 0 || para == 0 {
+                    return err("topo: fat-tree dimensions must all be >= 1");
+                }
+                if !(node_bw > 0.0 && trunk_bw > 0.0 && loop_bw > 0.0) {
+                    return err("topo: bandwidths must be positive");
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn materialize(&self) -> Result<Topology, ScenarioError> {
+        self.check()?;
+        match *self {
+            TopoSpec::Star { nodes, node_bw, loop_bw } => {
+                Ok(Topology::star(nodes, node_bw, loop_bw))
+            }
+            TopoSpec::FatTree { down_leaf, leaves, tops, para, node_bw, trunk_bw, loop_bw } => {
+                Ok(Topology::fat_tree(down_leaf, leaves, tops, para, node_bw, trunk_bw, loop_bw))
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            TopoSpec::Star { nodes, node_bw, loop_bw } => Json::obj(vec![
+                ("kind", Json::Str("star".into())),
+                ("nodes", Json::Num(nodes as f64)),
+                ("node_bw", Json::num_exact(node_bw)),
+                ("loop_bw", Json::num_exact(loop_bw)),
+            ]),
+            TopoSpec::FatTree { down_leaf, leaves, tops, para, node_bw, trunk_bw, loop_bw } => {
+                Json::obj(vec![
+                    ("kind", Json::Str("fat-tree".into())),
+                    ("down_leaf", Json::Num(down_leaf as f64)),
+                    ("leaves", Json::Num(leaves as f64)),
+                    ("tops", Json::Num(tops as f64)),
+                    ("para", Json::Num(para as f64)),
+                    ("node_bw", Json::num_exact(node_bw)),
+                    ("trunk_bw", Json::num_exact(trunk_bw)),
+                    ("loop_bw", Json::num_exact(loop_bw)),
+                ])
+            }
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<TopoSpec> {
+        match v.get("kind")?.as_str()? {
+            "star" => Some(TopoSpec::Star {
+                nodes: v.get("nodes")?.as_usize()?,
+                node_bw: v.get("node_bw")?.as_f64_exact()?,
+                loop_bw: v.get("loop_bw")?.as_f64_exact()?,
+            }),
+            "fat-tree" => Some(TopoSpec::FatTree {
+                down_leaf: v.get("down_leaf")?.as_usize()?,
+                leaves: v.get("leaves")?.as_usize()?,
+                tops: v.get("tops")?.as_usize()?,
+                para: v.get("para")?.as_usize()?,
+                node_bw: v.get("node_bw")?.as_f64_exact()?,
+                trunk_bw: v.get("trunk_bw")?.as_f64_exact()?,
+                loop_bw: v.get("loop_bw")?.as_f64_exact()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Reference to a deterministic hidden ground truth — the scenario-level
+/// stand-in for "the cluster we benchmarked". `GroundTruth::generate`
+/// is a pure function of these fields, so a worker can rebuild the
+/// exact platform (and anything calibrated against it) from O(1) data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GtRef {
+    pub nodes: usize,
+    pub scenario: Scenario,
+    pub seed: u64,
+    /// Override of the DMA-locking drop threshold (Fig. 7's bench-scale
+    /// rescaling); `None` keeps the generated default.
+    pub drop_bytes: Option<f64>,
+}
+
+impl GtRef {
+    /// Static (O(1)) parameter validation — everything [`GtRef::build`]
+    /// could fail on.
+    fn check(&self) -> Result<(), ScenarioError> {
+        if self.nodes == 0 {
+            return err("gt: 0 nodes");
+        }
+        if let Some(d) = self.drop_bytes {
+            if !(d.is_finite() && d > 0.0) {
+                return err("gt: drop_bytes must be positive");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn build(&self) -> Result<GroundTruth, ScenarioError> {
+        self.check()?;
+        let mut gt = GroundTruth::generate(self.nodes, self.scenario, self.seed);
+        if let Some(d) = self.drop_bytes {
+            gt.drop_bytes = d;
+        }
+        Ok(gt)
+    }
+
+    /// The star topology of this ground-truth cluster (its generated
+    /// interconnect bandwidths), as a spec.
+    pub fn star_topo(&self) -> Result<TopoSpec, ScenarioError> {
+        let gt = self.build()?;
+        Ok(TopoSpec::Star { nodes: gt.nodes, node_bw: gt.node_bw, loop_bw: gt.loop_bw })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("scenario", Json::Str(scenario_name(self.scenario).into())),
+            ("seed", Json::u64_str(self.seed)),
+        ];
+        if let Some(d) = self.drop_bytes {
+            pairs.push(("drop_bytes", Json::num_exact(d)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Option<GtRef> {
+        Some(GtRef {
+            nodes: v.get("nodes")?.as_usize()?,
+            scenario: scenario_parse(v.get("scenario")?.as_str()?)?,
+            seed: v.get("seed")?.as_u64()?,
+            drop_bytes: match v.get("drop_bytes") {
+                Some(d) => Some(d.as_f64_exact()?),
+                None => None,
+            },
+        })
+    }
+}
+
+pub fn scenario_name(s: Scenario) -> &'static str {
+    match s {
+        Scenario::Normal => "normal",
+        Scenario::Cooling => "cooling",
+        Scenario::Multimodal => "multimodal",
+    }
+}
+
+pub fn scenario_parse(s: &str) -> Option<Scenario> {
+    match s {
+        "normal" => Some(Scenario::Normal),
+        "cooling" => Some(Scenario::Cooling),
+        "multimodal" => Some(Scenario::Multimodal),
+        _ => None,
+    }
+}
+
+/// The network part of a scenario.
+#[derive(Clone, Debug)]
+pub enum NetSpec {
+    /// Zero latency, nominal bandwidth (unit tests, idealized studies).
+    Ideal,
+    /// An explicit piecewise protocol model (already O(#segments)).
+    Explicit(NetModel),
+    /// The hidden true network of a ground truth (reality runs).
+    GroundTruth(GtRef),
+    /// A network calibrated against a ground truth with one of the
+    /// §4.1 procedures — rebuilt in-worker from the calibration seed.
+    Calibrated { gt: GtRef, procedure: CalProcedure, cal_seed: u64 },
+}
+
+impl NetSpec {
+    /// Static (O(1)) validation — everything [`NetSpec::materialize`]
+    /// could fail on, without running any calibration.
+    fn check(&self) -> Result<(), ScenarioError> {
+        match self {
+            NetSpec::Ideal => Ok(()),
+            NetSpec::Explicit(m) => m.validate().map_err(ScenarioError),
+            NetSpec::GroundTruth(gt) | NetSpec::Calibrated { gt, .. } => gt.check(),
+        }
+    }
+
+    fn materialize(&self) -> Result<NetModel, ScenarioError> {
+        match self {
+            NetSpec::Ideal => Ok(NetModel::ideal()),
+            NetSpec::Explicit(m) => {
+                m.validate().map_err(ScenarioError)?;
+                Ok(m.clone())
+            }
+            NetSpec::GroundTruth(gt) => Ok(gt.build()?.net_model()),
+            NetSpec::Calibrated { gt, procedure, cal_seed } => {
+                Ok(calibrate_network(&gt.build()?, *procedure, *cal_seed))
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            NetSpec::Ideal => Json::obj(vec![("kind", Json::Str("ideal".into()))]),
+            NetSpec::Explicit(m) => Json::obj(vec![
+                ("kind", Json::Str("explicit".into())),
+                ("model", m.to_json()),
+            ]),
+            NetSpec::GroundTruth(gt) => Json::obj(vec![
+                ("kind", Json::Str("ground-truth".into())),
+                ("gt", gt.to_json()),
+            ]),
+            NetSpec::Calibrated { gt, procedure, cal_seed } => Json::obj(vec![
+                ("kind", Json::Str("calibrated".into())),
+                ("gt", gt.to_json()),
+                (
+                    "procedure",
+                    Json::Str(
+                        match procedure {
+                            CalProcedure::Optimistic => "optimistic",
+                            CalProcedure::Improved => "improved",
+                        }
+                        .into(),
+                    ),
+                ),
+                ("cal_seed", Json::u64_str(*cal_seed)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<NetSpec> {
+        match v.get("kind")?.as_str()? {
+            "ideal" => Some(NetSpec::Ideal),
+            "explicit" => Some(NetSpec::Explicit(NetModel::from_json(v.get("model")?)?)),
+            "ground-truth" => Some(NetSpec::GroundTruth(GtRef::from_json(v.get("gt")?)?)),
+            "calibrated" => Some(NetSpec::Calibrated {
+                gt: GtRef::from_json(v.get("gt")?)?,
+                procedure: match v.get("procedure")?.as_str()? {
+                    "optimistic" => CalProcedure::Optimistic,
+                    "improved" => CalProcedure::Improved,
+                    _ => return None,
+                },
+                cal_seed: v.get("cal_seed")?.as_u64()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// How the day-to-day layer of a hierarchical draw is realized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DayDraw {
+    /// No day layer: run on the long-run means `mu_p`.
+    None,
+    /// A pinned day index: the same realization for every point that
+    /// names it (temporal-drift studies enumerate these).
+    Day(u64),
+    /// A fresh realization derived from the point seed: every campaign
+    /// point is a different day.
+    PerPoint,
+}
+
+impl DayDraw {
+    fn to_json(self) -> Json {
+        match self {
+            DayDraw::None => Json::Str("none".into()),
+            DayDraw::Day(d) => Json::u64_str(d),
+            DayDraw::PerPoint => Json::Str("per-point".into()),
+        }
+    }
+
+    fn from_json(v: &Json) -> Option<DayDraw> {
+        match v {
+            Json::Str(s) if s == "none" => Some(DayDraw::None),
+            Json::Str(s) if s == "per-point" => Some(DayDraw::PerPoint),
+            other => Some(DayDraw::Day(other.as_u64()?)),
+        }
+    }
+}
+
+/// Serializable form of a fitted [`Hierarchical`] model: the generative
+/// part only (grand mean + the two covariances) — O(1), no per-node
+/// vectors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HierSpec {
+    pub mu: [f64; 3],
+    pub sigma_s: Matrix,
+    pub sigma_t: Matrix,
+}
+
+/// Check a (mean, covariance) pair is usable by the generative
+/// sampler: finite entries, non-negative diagonal, and a covariance
+/// whose clamped + ridged correlation matrix — exactly what
+/// `sample_mvn` will factor — admits a Cholesky factor. These matrices
+/// come verbatim from user-authored scenario JSON, so this is what
+/// keeps a bad `sigma_s`/`sigma_t`/`cov` a structured load-time error
+/// instead of a worker-thread panic mid-campaign.
+fn check_mvn(mean: &[f64; 3], cov: &Matrix, what: &str) -> Result<(), ScenarioError> {
+    if mean.iter().any(|v| !v.is_finite()) {
+        return err(format!("{what}: non-finite mean entry"));
+    }
+    if cov.rows != 3 || cov.cols != 3 || cov.data.iter().any(|v| !v.is_finite()) {
+        return err(format!("{what}: covariance must be 3x3 with finite entries"));
+    }
+    for i in 0..3 {
+        if cov[(i, i)] < 0.0 {
+            return err(format!("{what}: negative covariance diagonal"));
+        }
+    }
+    let (_sds, corr) = crate::platform::generative::sds_and_ridged_correlation(cov);
+    if corr.cholesky().is_none() {
+        return err(format!("{what}: covariance is not positive semi-definite"));
+    }
+    Ok(())
+}
+
+/// Finiteness of an authored coefficient payload. (Signs are not
+/// constrained: fitted polynomials legitimately carry negative cross
+/// terms, and the driver clamps evaluated durations at zero — but a
+/// NaN/inf, which `Json::as_f64_exact` deliberately parses from the
+/// "nan"/"inf" string encodings, would silently poison every cached
+/// result computed from it.)
+fn check_coef(c: &NodeCoef, what: &str) -> Result<(), ScenarioError> {
+    if c.mu.iter().chain(c.sigma.iter()).any(|v| !v.is_finite()) {
+        return err(format!("{what}: non-finite coefficient"));
+    }
+    Ok(())
+}
+
+/// An (alpha, beta, gamma) population mean must describe a physical
+/// node: positive time-per-flop, non-negative overhead and variability.
+fn check_abg_mean(mu: &[f64; 3], what: &str) -> Result<(), ScenarioError> {
+    if !(mu[0].is_finite() && mu[0] > 0.0) {
+        return err(format!("{what}: alpha (mu[0]) must be positive"));
+    }
+    if !(mu[1] >= 0.0 && mu[2] >= 0.0) {
+        return err(format!("{what}: beta/gamma means must be >= 0"));
+    }
+    Ok(())
+}
+
+fn matrix3_to_json(m: &Matrix) -> Json {
+    Json::arr_f64(&m.data)
+}
+
+fn matrix3_from_json(v: &Json) -> Option<Matrix> {
+    let data = v.f64_vec()?;
+    if data.len() != 9 {
+        return None;
+    }
+    Some(Matrix { rows: 3, cols: 3, data })
+}
+
+fn arr3(v: &Json) -> Option<[f64; 3]> {
+    v.f64_vec()?.try_into().ok()
+}
+
+impl HierSpec {
+    /// Extract the generative part of a fitted model.
+    pub fn of(h: &Hierarchical) -> HierSpec {
+        HierSpec { mu: h.mu, sigma_s: h.sigma_s.clone(), sigma_t: h.sigma_t.clone() }
+    }
+
+    /// Rebuild a sampling-capable [`Hierarchical`] (the per-node fit
+    /// data is not needed for sampling).
+    fn to_model(&self) -> Hierarchical {
+        Hierarchical {
+            mu: self.mu,
+            sigma_s: self.sigma_s.clone(),
+            sigma_t: self.sigma_t.clone(),
+            node_mu: Vec::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mu", Json::arr_f64(&self.mu)),
+            ("sigma_s", matrix3_to_json(&self.sigma_s)),
+            ("sigma_t", matrix3_to_json(&self.sigma_t)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<HierSpec> {
+        Some(HierSpec {
+            mu: arr3(v.get("mu")?)?,
+            sigma_s: matrix3_from_json(v.get("sigma_s")?)?,
+            sigma_t: matrix3_from_json(v.get("sigma_t")?)?,
+        })
+    }
+}
+
+/// Serializable form of a fitted two-component [`Mixture`] (Fig. 11's
+/// multimodal populations).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixSpec {
+    pub weights: [f64; 2],
+    pub means: [[f64; 3]; 2],
+    pub covs: [Matrix; 2],
+    pub sigma_t: Matrix,
+}
+
+impl MixSpec {
+    pub fn of(m: &Mixture) -> MixSpec {
+        MixSpec {
+            weights: m.weights,
+            means: m.means,
+            covs: [m.covs[0].clone(), m.covs[1].clone()],
+            sigma_t: m.sigma_t.clone(),
+        }
+    }
+
+    fn to_model(&self) -> Mixture {
+        Mixture {
+            weights: self.weights,
+            means: self.means,
+            covs: [self.covs[0].clone(), self.covs[1].clone()],
+            sigma_t: self.sigma_t.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("weights", Json::arr_f64(&self.weights)),
+            ("mean0", Json::arr_f64(&self.means[0])),
+            ("mean1", Json::arr_f64(&self.means[1])),
+            ("cov0", matrix3_to_json(&self.covs[0])),
+            ("cov1", matrix3_to_json(&self.covs[1])),
+            ("sigma_t", matrix3_to_json(&self.sigma_t)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<MixSpec> {
+        Some(MixSpec {
+            weights: v.get("weights")?.f64_vec()?.try_into().ok()?,
+            means: [arr3(v.get("mean0")?)?, arr3(v.get("mean1")?)?],
+            covs: [matrix3_from_json(v.get("cov0")?)?, matrix3_from_json(v.get("cov1")?)?],
+            sigma_t: matrix3_from_json(v.get("sigma_t")?)?,
+        })
+    }
+}
+
+/// One generation in a mixed-generation population: `count` nodes with
+/// identical coefficients (e.g. "48 old Xeons + 16 new EPYCs").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Generation {
+    pub count: usize,
+    pub coef: NodeCoef,
+}
+
+/// Knobs shared by the sampled (hierarchical / mixture) populations.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleOpts {
+    /// Nodes to sample (before eviction).
+    pub nodes: usize,
+    /// Pinned cluster seed; `None` draws a fresh cluster per point.
+    pub cluster_seed: Option<u64>,
+    /// Day-to-day realization policy.
+    pub day: DayDraw,
+    /// Force `gamma = cv * alpha` (the §5.2 temporal-variability knob);
+    /// `None` keeps the sampled gamma.
+    pub gamma_cv: Option<f64>,
+    /// Divide alpha and gamma by this factor (per-node BLAS threads).
+    pub alpha_scale: f64,
+    /// Drop the k slowest (largest-alpha) sampled nodes — the §5.3
+    /// eviction studies. The materialized platform has `nodes - k`
+    /// nodes.
+    pub evict_slowest: usize,
+}
+
+impl SampleOpts {
+    pub fn plain(nodes: usize, cluster_seed: Option<u64>) -> SampleOpts {
+        SampleOpts {
+            nodes,
+            cluster_seed,
+            day: DayDraw::None,
+            gamma_cv: None,
+            alpha_scale: 1.0,
+            evict_slowest: 0,
+        }
+    }
+
+    /// Nodes after eviction: the size of the materialized model.
+    pub fn kept(&self) -> usize {
+        self.nodes.saturating_sub(self.evict_slowest)
+    }
+
+    fn validate(&self) -> Result<(), ScenarioError> {
+        if self.nodes == 0 {
+            return err("compute: 0 nodes to sample");
+        }
+        if self.evict_slowest >= self.nodes {
+            return err(format!(
+                "compute: evicting {} of {} sampled nodes leaves an empty cluster",
+                self.evict_slowest, self.nodes
+            ));
+        }
+        if !(self.alpha_scale > 0.0 && self.alpha_scale.is_finite()) {
+            return err("compute: alpha_scale must be positive and finite");
+        }
+        if let Some(cv) = self.gamma_cv {
+            if !(cv >= 0.0 && cv.is_finite()) {
+                return err("compute: gamma_cv must be >= 0");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("day", self.day.to_json()),
+            ("alpha_scale", Json::num_exact(self.alpha_scale)),
+            ("evict_slowest", Json::Num(self.evict_slowest as f64)),
+        ];
+        if let Some(s) = self.cluster_seed {
+            pairs.push(("cluster_seed", Json::u64_str(s)));
+        }
+        if let Some(cv) = self.gamma_cv {
+            pairs.push(("gamma_cv", Json::num_exact(cv)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Option<SampleOpts> {
+        Some(SampleOpts {
+            nodes: v.get("nodes")?.as_usize()?,
+            cluster_seed: match v.get("cluster_seed") {
+                Some(s) => Some(s.as_u64()?),
+                None => None,
+            },
+            day: DayDraw::from_json(v.get("day")?)?,
+            gamma_cv: match v.get("gamma_cv") {
+                Some(cv) => Some(cv.as_f64_exact()?),
+                None => None,
+            },
+            alpha_scale: v.get("alpha_scale")?.as_f64_exact()?,
+            evict_slowest: v.get("evict_slowest")?.as_usize()?,
+        })
+    }
+}
+
+/// Which of the Fig. 5 model fidelities a calibrated compute spec
+/// materializes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fidelity {
+    /// (c) stochastic + heterogeneous + polynomial.
+    Full,
+    /// (b) heterogeneous polynomial, deterministic.
+    Hetero,
+    /// (a) global linear deterministic.
+    Naive,
+}
+
+impl Fidelity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Fidelity::Full => "full",
+            Fidelity::Hetero => "hetero",
+            Fidelity::Naive => "naive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Fidelity> {
+        match s {
+            "full" => Some(Fidelity::Full),
+            "hetero" => Some(Fidelity::Hetero),
+            "naive" => Some(Fidelity::Naive),
+            _ => None,
+        }
+    }
+}
+
+/// The compute (dgemm-model) part of a scenario.
+#[derive(Clone, Debug)]
+pub enum ComputeSpec {
+    /// One coefficient set for every node.
+    Homogeneous(NodeCoef),
+    /// Mixed-generation population: explicit groups of identical nodes.
+    MixedGeneration(Vec<Generation>),
+    /// Nodes sampled from a fitted hierarchical model (Fig. 9).
+    Hierarchical { model: HierSpec, opts: SampleOpts },
+    /// Nodes sampled from a fitted two-component mixture (Fig. 11).
+    Mixture { model: MixSpec, opts: SampleOpts },
+    /// The hidden truth of a ground-truth cluster on a given day
+    /// ("reality" runs).
+    GroundTruthDay { gt: GtRef, day: u64 },
+    /// A model calibrated from synthetic benchmarks of a ground truth —
+    /// rebuilt in-worker from the seeds. Always the pure-Rust OLS fit
+    /// (workers cannot hold the non-`Send` PJRT client); the XLA
+    /// `calibrate` artifact computes the same fit with the same maths,
+    /// so artifact-backed experiment runs see the Rust fit here too.
+    Calibrated { gt: GtRef, day: u64, samples: usize, cal_seed: u64, fidelity: Fidelity },
+}
+
+impl ComputeSpec {
+    /// Number of nodes the materialized [`DgemmModel`] covers
+    /// (`None` = homogeneous, valid for any node count).
+    pub fn nodes(&self) -> Option<usize> {
+        match self {
+            ComputeSpec::Homogeneous(_) => None,
+            ComputeSpec::MixedGeneration(groups) => {
+                Some(groups.iter().map(|g| g.count).sum())
+            }
+            ComputeSpec::Hierarchical { opts, .. } | ComputeSpec::Mixture { opts, .. } => {
+                Some(opts.kept())
+            }
+            ComputeSpec::GroundTruthDay { gt, .. } => Some(gt.nodes),
+            ComputeSpec::Calibrated { gt, fidelity, .. } => match fidelity {
+                Fidelity::Naive => None,
+                _ => Some(gt.nodes),
+            },
+        }
+    }
+
+    /// Static (O(1)) validation — everything
+    /// [`ComputeSpec::materialize`] could fail on, without sampling or
+    /// calibrating anything.
+    fn check(&self) -> Result<(), ScenarioError> {
+        match self {
+            ComputeSpec::Homogeneous(c) => check_coef(c, "compute: homogeneous coef"),
+            ComputeSpec::MixedGeneration(groups) => {
+                if groups.is_empty() || groups.iter().all(|g| g.count == 0) {
+                    return err("compute: mixed-generation population is empty");
+                }
+                for (i, g) in groups.iter().enumerate() {
+                    check_coef(&g.coef, &format!("compute: generation {i}"))?;
+                }
+                Ok(())
+            }
+            ComputeSpec::Hierarchical { model, opts } => {
+                opts.validate()?;
+                check_abg_mean(&model.mu, "hierarchical mu")?;
+                check_mvn(&model.mu, &model.sigma_s, "hierarchical sigma_s")?;
+                check_mvn(&model.mu, &model.sigma_t, "hierarchical sigma_t")
+            }
+            ComputeSpec::Mixture { model, opts } => {
+                opts.validate()?;
+                let w = model.weights;
+                if !(w[0] >= 0.0 && w[1] >= 0.0 && (w[0] + w[1] - 1.0).abs() < 1e-6) {
+                    return err("compute: mixture weights must be >= 0 and sum to 1");
+                }
+                check_abg_mean(&model.means[0], "mixture mean0")?;
+                check_abg_mean(&model.means[1], "mixture mean1")?;
+                check_mvn(&model.means[0], &model.covs[0], "mixture cov0")?;
+                check_mvn(&model.means[1], &model.covs[1], "mixture cov1")?;
+                check_mvn(&model.means[0], &model.sigma_t, "mixture sigma_t")
+            }
+            ComputeSpec::GroundTruthDay { gt, .. } => gt.check(),
+            ComputeSpec::Calibrated { gt, samples, .. } => {
+                if *samples == 0 {
+                    return err("compute: calibration needs samples >= 1");
+                }
+                gt.check()
+            }
+        }
+    }
+
+    /// Never fails after a successful [`ComputeSpec::check`] — every
+    /// predicate lives in `check`, which runs first (once per call; the
+    /// O(1) cost is noise next to sampling or calibrating).
+    fn materialize(&self, point_seed: u64) -> Result<DgemmModel, ScenarioError> {
+        self.check()?;
+        match self {
+            ComputeSpec::Homogeneous(c) => Ok(DgemmModel::homogeneous(*c)),
+            ComputeSpec::MixedGeneration(groups) => {
+                let mut nodes = Vec::with_capacity(groups.iter().map(|g| g.count).sum());
+                for g in groups {
+                    nodes.extend(std::iter::repeat(g.coef).take(g.count));
+                }
+                Ok(DgemmModel { nodes })
+            }
+            ComputeSpec::Hierarchical { model, opts } => {
+                let h = model.to_model();
+                let cseed = opts.cluster_seed.unwrap_or_else(|| {
+                    derive_seed(point_seed, STREAM_CLUSTER)
+                });
+                let mut rng = Rng::new(cseed ^ 0x6869_6572); // "hier"
+                let cluster = h.sample_cluster(opts.nodes, &mut rng);
+                let coeffs = sample_day_layer(&h, &cluster, opts, cseed, point_seed);
+                Ok(finish_sampled(coeffs, opts))
+            }
+            ComputeSpec::Mixture { model, opts } => {
+                let w = model.weights;
+                let m = model.to_model();
+                let cseed = opts.cluster_seed.unwrap_or_else(|| {
+                    derive_seed(point_seed, STREAM_CLUSTER)
+                });
+                let mut rng = Rng::new(cseed ^ 0x6d69_78); // "mix"
+                let cluster = m.sample_cluster(opts.nodes, &mut rng);
+                // The day layer reuses the hierarchical sampler with the
+                // mixture's pooled day-to-day covariance; clamps are
+                // anchored at the weighted population mean.
+                let mut mu = [0.0; 3];
+                for i in 0..3 {
+                    mu[i] = w[0] * model.means[0][i] + w[1] * model.means[1][i];
+                }
+                let h = Hierarchical {
+                    mu,
+                    sigma_s: Matrix::zeros(3, 3),
+                    sigma_t: model.sigma_t.clone(),
+                    node_mu: Vec::new(),
+                };
+                let coeffs = sample_day_layer(&h, &cluster, opts, cseed, point_seed);
+                Ok(finish_sampled(coeffs, opts))
+            }
+            ComputeSpec::GroundTruthDay { gt, day } => Ok(gt.build()?.day_model(*day)),
+            ComputeSpec::Calibrated { gt, day, samples, cal_seed, fidelity } => {
+                let gt = gt.build()?;
+                let models =
+                    calibration::calibrate_models(None, &gt, *day, *samples, *cal_seed);
+                Ok(match fidelity {
+                    Fidelity::Full => models.full,
+                    Fidelity::Hetero => models.hetero,
+                    Fidelity::Naive => models.naive,
+                })
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ComputeSpec::Homogeneous(c) => Json::obj(vec![
+                ("kind", Json::Str("homogeneous".into())),
+                ("coef", c.to_json()),
+            ]),
+            ComputeSpec::MixedGeneration(groups) => Json::obj(vec![
+                ("kind", Json::Str("mixed-generation".into())),
+                (
+                    "groups",
+                    Json::Arr(
+                        groups
+                            .iter()
+                            .map(|g| {
+                                Json::obj(vec![
+                                    ("count", Json::Num(g.count as f64)),
+                                    ("coef", g.coef.to_json()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            ComputeSpec::Hierarchical { model, opts } => Json::obj(vec![
+                ("kind", Json::Str("hierarchical".into())),
+                ("model", model.to_json()),
+                ("opts", opts.to_json()),
+            ]),
+            ComputeSpec::Mixture { model, opts } => Json::obj(vec![
+                ("kind", Json::Str("mixture".into())),
+                ("model", model.to_json()),
+                ("opts", opts.to_json()),
+            ]),
+            ComputeSpec::GroundTruthDay { gt, day } => Json::obj(vec![
+                ("kind", Json::Str("ground-truth-day".into())),
+                ("gt", gt.to_json()),
+                ("day", Json::u64_str(*day)),
+            ]),
+            ComputeSpec::Calibrated { gt, day, samples, cal_seed, fidelity } => {
+                Json::obj(vec![
+                    ("kind", Json::Str("calibrated".into())),
+                    ("gt", gt.to_json()),
+                    ("day", Json::u64_str(*day)),
+                    ("samples", Json::Num(*samples as f64)),
+                    ("cal_seed", Json::u64_str(*cal_seed)),
+                    ("fidelity", Json::Str(fidelity.name().into())),
+                ])
+            }
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<ComputeSpec> {
+        match v.get("kind")?.as_str()? {
+            "homogeneous" => {
+                Some(ComputeSpec::Homogeneous(NodeCoef::from_json(v.get("coef")?)?))
+            }
+            "mixed-generation" => {
+                let groups: Option<Vec<Generation>> = v
+                    .get("groups")?
+                    .as_arr()?
+                    .iter()
+                    .map(|g| {
+                        Some(Generation {
+                            count: g.get("count")?.as_usize()?,
+                            coef: NodeCoef::from_json(g.get("coef")?)?,
+                        })
+                    })
+                    .collect();
+                Some(ComputeSpec::MixedGeneration(groups?))
+            }
+            "hierarchical" => Some(ComputeSpec::Hierarchical {
+                model: HierSpec::from_json(v.get("model")?)?,
+                opts: SampleOpts::from_json(v.get("opts")?)?,
+            }),
+            "mixture" => Some(ComputeSpec::Mixture {
+                model: MixSpec::from_json(v.get("model")?)?,
+                opts: SampleOpts::from_json(v.get("opts")?)?,
+            }),
+            "ground-truth-day" => Some(ComputeSpec::GroundTruthDay {
+                gt: GtRef::from_json(v.get("gt")?)?,
+                day: v.get("day")?.as_u64()?,
+            }),
+            "calibrated" => Some(ComputeSpec::Calibrated {
+                gt: GtRef::from_json(v.get("gt")?)?,
+                day: v.get("day")?.as_u64()?,
+                samples: v.get("samples")?.as_usize()?,
+                cal_seed: v.get("cal_seed")?.as_u64()?,
+                fidelity: Fidelity::parse(v.get("fidelity")?.as_str()?)?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Apply the optional day layer to a sampled cluster.
+fn sample_day_layer(
+    h: &Hierarchical,
+    cluster: &[[f64; 3]],
+    opts: &SampleOpts,
+    cluster_seed: u64,
+    point_seed: u64,
+) -> Vec<[f64; 3]> {
+    let day_seed = match opts.day {
+        DayDraw::None => return cluster.to_vec(),
+        DayDraw::Day(d) => derive_seed(cluster_seed, d ^ STREAM_DAY),
+        DayDraw::PerPoint => derive_seed(point_seed, STREAM_DAY),
+    };
+    let mut rng = Rng::new(day_seed);
+    h.sample_day(cluster, &mut rng)
+}
+
+/// Evict the slowest nodes, apply the thread scaling, and build the
+/// model (shared tail of the hierarchical / mixture paths).
+fn finish_sampled(mut coeffs: Vec<[f64; 3]>, opts: &SampleOpts) -> DgemmModel {
+    if opts.evict_slowest > 0 {
+        coeffs.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap_or(std::cmp::Ordering::Equal));
+        coeffs.truncate(opts.kept());
+    }
+    let th = opts.alpha_scale;
+    let scaled: Vec<[f64; 3]> = coeffs.iter().map(|c| [c[0] / th, c[1], c[2] / th]).collect();
+    model_from_linear(&scaled, opts.gamma_cv)
+}
+
+/// Per-link capacity perturbations applied to the materialized topology
+/// — network heterogeneity and degraded-link what-ifs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkVariability {
+    /// Nominal capacities.
+    None,
+    /// Multiplicative jitter on every link: `cap *= max(0.05, 1 + cv z)`.
+    Jitter { cv: f64, seed: Option<u64> },
+    /// Degrade `fraction` of the *nodes* (both their up and down links)
+    /// to `factor` of nominal capacity.
+    Degraded { fraction: f64, factor: f64, seed: Option<u64> },
+}
+
+impl LinkVariability {
+    fn validate(&self) -> Result<(), ScenarioError> {
+        match *self {
+            LinkVariability::None => Ok(()),
+            LinkVariability::Jitter { cv, .. } => {
+                if cv >= 0.0 && cv.is_finite() {
+                    Ok(())
+                } else {
+                    err("links: jitter cv must be >= 0")
+                }
+            }
+            LinkVariability::Degraded { fraction, factor, .. } => {
+                if !(0.0..=1.0).contains(&fraction) {
+                    return err("links: degraded fraction must be in [0, 1]");
+                }
+                if !(factor > 0.0 && factor <= 1.0) {
+                    return err("links: degraded factor must be in (0, 1]");
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Apply to a materialized topology (in place on its caps vector).
+    fn apply(&self, topo: &mut Topology, point_seed: u64) {
+        let (nodes, caps) = match topo {
+            Topology::Star { nodes, caps } => (*nodes, caps),
+            Topology::FatTree { nodes, caps, .. } => (*nodes, caps),
+        };
+        match *self {
+            LinkVariability::None => {}
+            LinkVariability::Jitter { cv, seed } => {
+                if cv == 0.0 {
+                    return;
+                }
+                let s = seed.unwrap_or_else(|| derive_seed(point_seed, STREAM_LINKS));
+                let mut rng = Rng::new(s ^ 0x6a69_74); // "jit"
+                for c in caps.iter_mut() {
+                    *c *= (1.0 + cv * rng.normal()).max(0.05);
+                }
+            }
+            LinkVariability::Degraded { fraction, factor, seed } => {
+                let k = (fraction * nodes as f64).round() as usize;
+                if k == 0 {
+                    return;
+                }
+                let s = seed.unwrap_or_else(|| derive_seed(point_seed, STREAM_LINKS));
+                let mut rng = Rng::new(s ^ 0x6465_67); // "deg"
+                // Partial Fisher-Yates: pick k distinct nodes.
+                let mut ids: Vec<usize> = (0..nodes).collect();
+                for i in 0..k.min(nodes) {
+                    let j = i + rng.below(nodes - i);
+                    ids.swap(i, j);
+                }
+                for &p in &ids[..k.min(nodes)] {
+                    caps[3 * p] *= factor; // up
+                    caps[3 * p + 1] *= factor; // down
+                }
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            LinkVariability::None => Json::obj(vec![("kind", Json::Str("none".into()))]),
+            LinkVariability::Jitter { cv, seed } => {
+                let mut pairs = vec![
+                    ("kind", Json::Str("jitter".into())),
+                    ("cv", Json::num_exact(cv)),
+                ];
+                if let Some(s) = seed {
+                    pairs.push(("seed", Json::u64_str(s)));
+                }
+                Json::obj(pairs)
+            }
+            LinkVariability::Degraded { fraction, factor, seed } => {
+                let mut pairs = vec![
+                    ("kind", Json::Str("degraded".into())),
+                    ("fraction", Json::num_exact(fraction)),
+                    ("factor", Json::num_exact(factor)),
+                ];
+                if let Some(s) = seed {
+                    pairs.push(("seed", Json::u64_str(s)));
+                }
+                Json::obj(pairs)
+            }
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<LinkVariability> {
+        let seed = |v: &Json| -> Option<Option<u64>> {
+            match v.get("seed") {
+                Some(s) => Some(Some(s.as_u64()?)),
+                None => Some(None),
+            }
+        };
+        match v.get("kind")?.as_str()? {
+            "none" => Some(LinkVariability::None),
+            "jitter" => Some(LinkVariability::Jitter {
+                cv: v.get("cv")?.as_f64_exact()?,
+                seed: seed(v)?,
+            }),
+            "degraded" => Some(LinkVariability::Degraded {
+                fraction: v.get("fraction")?.as_f64_exact()?,
+                factor: v.get("factor")?.as_f64_exact()?,
+                seed: seed(v)?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// A complete generative platform description — the O(1) campaign
+/// payload that replaces the materialized `(Topology, NetModel,
+/// DgemmModel)` triple.
+#[derive(Clone, Debug)]
+pub struct PlatformScenario {
+    pub topo: TopoSpec,
+    pub net: NetSpec,
+    pub compute: ComputeSpec,
+    pub links: LinkVariability,
+}
+
+impl PlatformScenario {
+    /// Final platform size (nodes) — what the coordinator needs for
+    /// geometry planning without materializing anything.
+    pub fn nodes(&self) -> usize {
+        self.topo.nodes()
+    }
+
+    /// Static (O(1)) validation of the whole description: every way
+    /// [`PlatformScenario::materialize`] could fail, checked *without*
+    /// sampling, calibrating, or allocating the platform. This is what
+    /// `SimPoint::validate` and manifest loading call — a manifest of
+    /// expensive calibrated scenarios must load in O(points), not
+    /// O(points x calibration).
+    pub fn check(&self) -> Result<(), ScenarioError> {
+        self.links.validate()?;
+        self.topo.check()?;
+        self.net.check()?;
+        self.compute.check()?;
+        if let Some(n) = self.compute.nodes() {
+            if n != self.topo.nodes() {
+                return err(format!(
+                    "scenario: compute model covers {n} node(s) but the topology has {}",
+                    self.topo.nodes()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the concrete platform for one campaign point.
+    /// Deterministic in `(self, point_seed)`; bit-identical across
+    /// worker-thread counts and execution orders. Never fails after a
+    /// successful [`PlatformScenario::check`].
+    pub fn materialize(
+        &self,
+        point_seed: u64,
+    ) -> Result<(Topology, NetModel, DgemmModel), ScenarioError> {
+        self.check()?;
+        let mut topo = self.topo.materialize()?;
+        let net = self.net.materialize()?;
+        let dgemm = self.compute.materialize(point_seed)?;
+        if dgemm.nodes.is_empty() {
+            return err("scenario: materialized dgemm model has no nodes");
+        }
+        self.links.apply(&mut topo, point_seed);
+        Ok((topo, net, dgemm))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("topo", self.topo.to_json()),
+            ("net", self.net.to_json()),
+            ("compute", self.compute.to_json()),
+            ("links", self.links.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<PlatformScenario> {
+        Some(PlatformScenario {
+            topo: TopoSpec::from_json(v.get("topo")?)?,
+            net: NetSpec::from_json(v.get("net")?)?,
+            compute: ComputeSpec::from_json(v.get("compute")?)?,
+            links: LinkVariability::from_json(v.get("links")?)?,
+        })
+    }
+
+    /// Load a scenario from a standalone JSON file (`hplsim sweep
+    /// --platform FILE`). Checked on load: an invalid authored scenario
+    /// fails here, at the author's terminal, not later on a shard
+    /// machine.
+    pub fn load(path: &std::path::Path) -> Result<PlatformScenario, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let s = PlatformScenario::from_json(&v)
+            .ok_or_else(|| format!("{}: not a platform scenario", path.display()))?;
+        s.check().map_err(|e| format!("{}: invalid scenario: {e}", path.display()))?;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::generative;
+
+    fn hier_spec() -> HierSpec {
+        let mut sigma_s = Matrix::zeros(3, 3);
+        sigma_s[(0, 0)] = (0.015f64 * 5.6e-11).powi(2);
+        sigma_s[(1, 1)] = (0.1f64 * 8.0e-7).powi(2);
+        sigma_s[(2, 2)] = (0.2f64 * 1.7e-12).powi(2);
+        let mut sigma_t = Matrix::zeros(3, 3);
+        sigma_t[(0, 0)] = (0.008f64 * 5.6e-11).powi(2);
+        sigma_t[(1, 1)] = (0.05f64 * 8.0e-7).powi(2);
+        sigma_t[(2, 2)] = (0.1f64 * 1.7e-12).powi(2);
+        HierSpec { mu: [5.6e-11, 8.0e-7, 1.7e-12], sigma_s, sigma_t }
+    }
+
+    fn hier_scenario(nodes: usize, cluster_seed: Option<u64>) -> PlatformScenario {
+        PlatformScenario {
+            topo: TopoSpec::Star { nodes, node_bw: 12.5e9, loop_bw: 40e9 },
+            net: NetSpec::Ideal,
+            compute: ComputeSpec::Hierarchical {
+                model: hier_spec(),
+                opts: SampleOpts::plain(nodes, cluster_seed),
+            },
+            links: LinkVariability::None,
+        }
+    }
+
+    #[test]
+    fn materialization_is_deterministic_in_scenario_and_seed() {
+        let s = hier_scenario(16, None);
+        let (t1, n1, d1) = s.materialize(7).unwrap();
+        let (t2, n2, d2) = s.materialize(7).unwrap();
+        assert_eq!(format!("{t1:?}"), format!("{t2:?}"));
+        assert_eq!(format!("{n1:?}"), format!("{n2:?}"));
+        assert_eq!(d1.nodes, d2.nodes);
+        // A different point seed draws a different cluster.
+        let (_, _, d3) = s.materialize(8).unwrap();
+        assert_ne!(d1.nodes, d3.nodes);
+    }
+
+    #[test]
+    fn pinned_cluster_seed_shared_across_points() {
+        let s = hier_scenario(16, Some(1234));
+        let (_, _, a) = s.materialize(1).unwrap();
+        let (_, _, b) = s.materialize(2).unwrap();
+        assert_eq!(a.nodes, b.nodes, "pinned cluster must not vary with the point seed");
+    }
+
+    #[test]
+    fn day_layer_policies() {
+        let mut s = hier_scenario(8, Some(99));
+        let base = s.materialize(5).unwrap().2;
+        // Pinned day: same realization for any point seed, different
+        // from the long-run means.
+        if let ComputeSpec::Hierarchical { opts, .. } = &mut s.compute {
+            opts.day = DayDraw::Day(3);
+        }
+        let d3a = s.materialize(5).unwrap().2;
+        let d3b = s.materialize(6).unwrap().2;
+        assert_eq!(d3a.nodes, d3b.nodes);
+        assert_ne!(base.nodes, d3a.nodes);
+        if let ComputeSpec::Hierarchical { opts, .. } = &mut s.compute {
+            opts.day = DayDraw::Day(4);
+        }
+        let d4 = s.materialize(5).unwrap().2;
+        assert_ne!(d3a.nodes, d4.nodes, "different day, different realization");
+        // Per-point day: varies with the point seed.
+        if let ComputeSpec::Hierarchical { opts, .. } = &mut s.compute {
+            opts.day = DayDraw::PerPoint;
+        }
+        let pa = s.materialize(5).unwrap().2;
+        let pb = s.materialize(6).unwrap().2;
+        assert_ne!(pa.nodes, pb.nodes);
+    }
+
+    #[test]
+    fn eviction_drops_the_slowest() {
+        let mut s = hier_scenario(16, Some(7));
+        let full = s.materialize(0).unwrap().2;
+        let max_alpha_full =
+            full.nodes.iter().map(|c| c.mu[0]).fold(f64::NEG_INFINITY, f64::max);
+        if let ComputeSpec::Hierarchical { opts, .. } = &mut s.compute {
+            opts.evict_slowest = 4;
+        }
+        s.topo = TopoSpec::Star { nodes: 12, node_bw: 12.5e9, loop_bw: 40e9 };
+        let kept = s.materialize(0).unwrap().2;
+        assert_eq!(kept.nodes.len(), 12);
+        let max_alpha_kept =
+            kept.nodes.iter().map(|c| c.mu[0]).fold(f64::NEG_INFINITY, f64::max);
+        assert!(max_alpha_kept < max_alpha_full, "slowest nodes must be gone");
+    }
+
+    #[test]
+    fn node_count_mismatch_is_a_structured_error() {
+        let mut s = hier_scenario(16, None);
+        s.topo = TopoSpec::Star { nodes: 8, node_bw: 12.5e9, loop_bw: 40e9 };
+        let e = s.materialize(0).unwrap_err();
+        assert!(e.0.contains("16") && e.0.contains("8"), "{e}");
+    }
+
+    #[test]
+    fn gamma_cv_and_alpha_scale() {
+        let mut s = hier_scenario(4, Some(1));
+        if let ComputeSpec::Hierarchical { opts, .. } = &mut s.compute {
+            opts.gamma_cv = Some(0.0);
+            opts.alpha_scale = 2.0;
+        }
+        let d = s.materialize(0).unwrap().2;
+        for c in &d.nodes {
+            assert_eq!(c.sigma[0], 0.0, "gamma_cv=0 must kill the variability");
+            assert!(c.mu[0] < 5.6e-11, "alpha must be scaled down by the thread count");
+        }
+    }
+
+    #[test]
+    fn link_jitter_and_degradation() {
+        let mut s = hier_scenario(16, Some(3));
+        let nominal = s.materialize(0).unwrap().0.link_capacities().to_vec();
+        s.links = LinkVariability::Jitter { cv: 0.2, seed: Some(11) };
+        let jittered = s.materialize(0).unwrap().0.link_capacities().to_vec();
+        assert_eq!(nominal.len(), jittered.len());
+        assert!(nominal.iter().zip(&jittered).any(|(a, b)| a != b));
+        // Pinned seed: reproducible.
+        assert_eq!(jittered, s.materialize(99).unwrap().0.link_capacities().to_vec());
+
+        s.links = LinkVariability::Degraded { fraction: 0.25, factor: 0.5, seed: Some(5) };
+        let degraded = s.materialize(0).unwrap().0.link_capacities().to_vec();
+        let slowed: Vec<usize> = (0..16)
+            .filter(|&p| degraded[3 * p] < nominal[3 * p])
+            .collect();
+        assert_eq!(slowed.len(), 4, "25% of 16 nodes");
+        for &p in &slowed {
+            assert!((degraded[3 * p] - 0.5 * nominal[3 * p]).abs() < 1e-3);
+            assert!((degraded[3 * p + 1] - 0.5 * nominal[3 * p + 1]).abs() < 1e-3);
+            // Loopback untouched.
+            assert_eq!(degraded[3 * p + 2], nominal[3 * p + 2]);
+        }
+    }
+
+    #[test]
+    fn ground_truth_specs_match_direct_construction() {
+        let gt_ref = GtRef { nodes: 8, scenario: Scenario::Cooling, seed: 42, drop_bytes: None };
+        let s = PlatformScenario {
+            topo: TopoSpec::Star { nodes: 8, node_bw: 12.5e9, loop_bw: 40e9 },
+            net: NetSpec::GroundTruth(gt_ref.clone()),
+            compute: ComputeSpec::GroundTruthDay { gt: gt_ref.clone(), day: 2 },
+            links: LinkVariability::None,
+        };
+        let (topo, net, dgemm) = s.materialize(0).unwrap();
+        let gt = GroundTruth::generate(8, Scenario::Cooling, 42);
+        assert_eq!(format!("{topo:?}"), format!("{:?}", gt.topology()));
+        assert_eq!(format!("{net:?}"), format!("{:?}", gt.net_model()));
+        assert_eq!(dgemm.nodes, gt.day_model(2).nodes);
+    }
+
+    #[test]
+    fn calibrated_spec_matches_direct_calibration() {
+        let gt_ref = GtRef { nodes: 4, scenario: Scenario::Normal, seed: 9, drop_bytes: None };
+        let spec = ComputeSpec::Calibrated {
+            gt: gt_ref.clone(),
+            day: 0,
+            samples: 64,
+            cal_seed: 77,
+            fidelity: Fidelity::Full,
+        };
+        let got = spec.materialize(123).unwrap();
+        let gt = GroundTruth::generate(4, Scenario::Normal, 9);
+        let want = calibration::calibrate_models(None, &gt, 0, 64, 77).full;
+        assert_eq!(got.nodes, want.nodes);
+        // And the naive fidelity is homogeneous.
+        let naive = ComputeSpec::Calibrated {
+            gt: gt_ref,
+            day: 0,
+            samples: 64,
+            cal_seed: 77,
+            fidelity: Fidelity::Naive,
+        };
+        assert_eq!(naive.materialize(0).unwrap().nodes.len(), 1);
+    }
+
+    #[test]
+    fn mixture_scenario_samples_two_modes() {
+        let gt = GroundTruth::generate(32, Scenario::Multimodal, 19);
+        let h = generative::Hierarchical::fit(
+            &(0..32)
+                .map(|p| (0..10).map(|d| gt.day_coeffs(d)[p]).collect())
+                .collect::<Vec<_>>(),
+        );
+        let mix = generative::Mixture::fit(&h);
+        let s = PlatformScenario {
+            topo: TopoSpec::Star { nodes: 64, node_bw: 12.5e9, loop_bw: 40e9 },
+            net: NetSpec::Ideal,
+            compute: ComputeSpec::Mixture {
+                model: MixSpec::of(&mix),
+                opts: SampleOpts::plain(64, Some(4)),
+            },
+            links: LinkVariability::None,
+        };
+        let d = s.materialize(0).unwrap().2;
+        assert_eq!(d.nodes.len(), 64);
+        let alphas: Vec<f64> = d.nodes.iter().map(|c| c.mu[0]).collect();
+        let lo = alphas.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = alphas.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(hi / lo > 1.05, "multimodal spread missing: {lo} .. {hi}");
+    }
+
+    #[test]
+    fn json_roundtrip_every_variant() {
+        let gt_ref = GtRef {
+            nodes: 8,
+            scenario: Scenario::Multimodal,
+            seed: u64::MAX,
+            drop_bytes: Some(2.0e6),
+        };
+        let scenarios = vec![
+            hier_scenario(16, Some(0xdead_beef_cafe_f00d)),
+            PlatformScenario {
+                topo: TopoSpec::FatTree {
+                    down_leaf: 4,
+                    leaves: 4,
+                    tops: 2,
+                    para: 2,
+                    node_bw: 12.5e9,
+                    trunk_bw: 10e9,
+                    loop_bw: 40e9,
+                },
+                net: NetSpec::Calibrated {
+                    gt: gt_ref.clone(),
+                    procedure: CalProcedure::Optimistic,
+                    cal_seed: 3,
+                },
+                compute: ComputeSpec::MixedGeneration(vec![
+                    Generation { count: 12, coef: NodeCoef::naive(1e-11) },
+                    Generation { count: 4, coef: NodeCoef::naive(2e-11) },
+                ]),
+                links: LinkVariability::Jitter { cv: 0.1, seed: None },
+            },
+            PlatformScenario {
+                topo: TopoSpec::Star { nodes: 8, node_bw: 12.5e9, loop_bw: 40e9 },
+                net: NetSpec::GroundTruth(gt_ref.clone()),
+                compute: ComputeSpec::Calibrated {
+                    gt: gt_ref.clone(),
+                    day: 1,
+                    samples: 512,
+                    cal_seed: 11,
+                    fidelity: Fidelity::Hetero,
+                },
+                links: LinkVariability::Degraded {
+                    fraction: 0.25,
+                    factor: 0.5,
+                    seed: Some(9),
+                },
+            },
+            PlatformScenario {
+                topo: TopoSpec::Star { nodes: 8, node_bw: 12.5e9, loop_bw: 40e9 },
+                net: NetSpec::Explicit(GroundTruth::generate(4, Scenario::Normal, 1).net_model()),
+                compute: ComputeSpec::GroundTruthDay { gt: gt_ref, day: 7 },
+                links: LinkVariability::None,
+            },
+        ];
+        for s in scenarios {
+            let text = s.to_json().to_string();
+            let back = PlatformScenario::from_json(&Json::parse(&text).unwrap())
+                .unwrap_or_else(|| panic!("failed to parse back: {text}"));
+            assert_eq!(
+                text,
+                back.to_json().to_string(),
+                "round-trip must be byte-stable"
+            );
+        }
+    }
+
+    #[test]
+    fn day_draw_json_forms() {
+        for d in [DayDraw::None, DayDraw::Day(7), DayDraw::PerPoint] {
+            let back = DayDraw::from_json(&Json::parse(&d.to_json().to_string()).unwrap());
+            assert_eq!(back, Some(d));
+        }
+    }
+
+    #[test]
+    fn non_psd_covariance_is_a_structured_error() {
+        // User-authored matrices reach the sampler verbatim via JSON;
+        // an indefinite one must fail at check() — the load-time path —
+        // not as a Cholesky panic inside a campaign worker.
+        let mut s = hier_scenario(4, Some(1));
+        if let ComputeSpec::Hierarchical { model, .. } = &mut s.compute {
+            // Implied correlations +0.999, +0.999, -0.999: indefinite
+            // even after the sampler's clamp + ridge.
+            let mut m = Matrix::zeros(3, 3);
+            for i in 0..3 {
+                m[(i, i)] = 1e-24;
+            }
+            m[(0, 1)] = 1e-24;
+            m[(1, 0)] = 1e-24;
+            m[(0, 2)] = 1e-24;
+            m[(2, 0)] = 1e-24;
+            m[(1, 2)] = -1e-24;
+            m[(2, 1)] = -1e-24;
+            model.sigma_s = m;
+        }
+        let e = s.check().unwrap_err();
+        assert!(e.0.contains("positive semi-definite"), "{e}");
+        assert!(s.materialize(0).is_err());
+        // Non-finite entries are rejected before any factorization.
+        let mut s = hier_scenario(4, Some(1));
+        if let ComputeSpec::Hierarchical { model, .. } = &mut s.compute {
+            model.sigma_t[(0, 0)] = f64::NAN;
+        }
+        assert!(s.check().is_err());
+        let mut s = hier_scenario(4, Some(1));
+        if let ComputeSpec::Hierarchical { model, .. } = &mut s.compute {
+            model.mu[1] = f64::INFINITY;
+        }
+        assert!(s.check().is_err());
+    }
+
+    #[test]
+    fn invalid_scenarios_are_rejected() {
+        // Empty mixed generation.
+        let s = PlatformScenario {
+            topo: TopoSpec::Star { nodes: 0, node_bw: 1.0, loop_bw: 1.0 },
+            net: NetSpec::Ideal,
+            compute: ComputeSpec::MixedGeneration(vec![]),
+            links: LinkVariability::None,
+        };
+        assert!(s.materialize(0).is_err());
+        // Degraded fraction out of range.
+        let mut s = hier_scenario(4, Some(1));
+        s.links = LinkVariability::Degraded { fraction: 1.5, factor: 0.5, seed: None };
+        assert!(s.materialize(0).is_err());
+        // Eviction leaving nothing.
+        let mut s = hier_scenario(4, Some(1));
+        if let ComputeSpec::Hierarchical { opts, .. } = &mut s.compute {
+            opts.evict_slowest = 4;
+        }
+        assert!(s.materialize(0).is_err());
+    }
+}

@@ -63,9 +63,9 @@ fn campaign(npoints: usize, campaign_seed: u64) -> Vec<SimPoint> {
             } else {
                 per_node.clone()
             };
-            SimPoint {
-                label: format!("ms{i}"),
-                cfg: HplConfig {
+            SimPoint::explicit(
+                format!("ms{i}"),
+                HplConfig {
                     n: 96 + 32 * (i % 5),
                     nb: [16, 32][i % 2],
                     p,
@@ -80,9 +80,73 @@ fn campaign(npoints: usize, campaign_seed: u64) -> Vec<SimPoint> {
                 topo,
                 net,
                 dgemm,
-                rpn: 2,
-                seed: point_seed(campaign_seed, i as u64),
-            }
+                2,
+                point_seed(campaign_seed, i as u64),
+            )
+        })
+        .collect()
+}
+
+/// A variability campaign over *scenario* payloads: `nodes` nodes
+/// sampled per point from a hierarchical spec (fresh cluster per
+/// point), heterogeneous links — the O(1)-per-point manifest encoding.
+fn scenario_campaign(npoints: usize, nodes: usize, campaign_seed: u64) -> Vec<SimPoint> {
+    use hplsim::platform::{
+        ComputeSpec, DayDraw, LinkVariability, NetSpec, PlatformScenario, SampleOpts,
+        TopoSpec,
+    };
+    use hplsim::stats::Matrix;
+
+    let mut sigma_s = Matrix::zeros(3, 3);
+    sigma_s[(0, 0)] = (0.03f64 * 5.6e-11).powi(2);
+    sigma_s[(1, 1)] = (0.10f64 * 8.0e-7).powi(2);
+    let mut sigma_t = Matrix::zeros(3, 3);
+    sigma_t[(0, 0)] = (0.008f64 * 5.6e-11).powi(2);
+    let model = hplsim::platform::HierSpec {
+        mu: [5.6e-11, 8.0e-7, 1.7e-12],
+        sigma_s,
+        sigma_t,
+    };
+    (0..npoints)
+        .map(|i| {
+            let scenario = PlatformScenario {
+                topo: TopoSpec::Star { nodes, node_bw: 12.5e9, loop_bw: 40e9 },
+                net: NetSpec::Ideal,
+                compute: ComputeSpec::Hierarchical {
+                    model: model.clone(),
+                    opts: SampleOpts {
+                        nodes,
+                        cluster_seed: None, // fresh platform draw per point
+                        day: DayDraw::PerPoint,
+                        gamma_cv: Some(0.03),
+                        alpha_scale: 16.0,
+                        evict_slowest: 0,
+                    },
+                },
+                links: LinkVariability::Degraded {
+                    fraction: 0.1,
+                    factor: 0.5,
+                    seed: None,
+                },
+            };
+            SimPoint::scenario(
+                format!("vc{i}"),
+                HplConfig {
+                    n: 256,
+                    nb: 64,
+                    p: 2,
+                    q: [2, 4][i % 2],
+                    depth: i % 2,
+                    bcast: Bcast::ALL[i % Bcast::ALL.len()],
+                    swap: SwapAlg::ALL[i % SwapAlg::ALL.len()],
+                    swap_threshold: 64,
+                    rfact: Rfact::ALL[i % Rfact::ALL.len()],
+                    nbmin: 8,
+                },
+                scenario,
+                1,
+                point_seed(campaign_seed, i as u64),
+            )
         })
         .collect()
 }
@@ -130,8 +194,8 @@ fn loaded_manifest_simulates_identically() {
     Manifest::new(points.clone()).save(&path).unwrap();
     let loaded = Manifest::load(&path).unwrap();
     let opts = SweepOptions { threads: 2, cache_dir: None, progress: false };
-    let a = run_campaign(&points, &opts);
-    let b = run_campaign(&loaded.points, &opts);
+    let a = run_campaign(&points, &opts).unwrap();
+    let b = run_campaign(&loaded.points, &opts).unwrap();
     assert_eq!(serialize(&a.results), serialize(&b.results));
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -147,7 +211,8 @@ fn sharded_execution_merges_bit_identical() {
     let single = run_campaign(
         &points,
         &SweepOptions { threads: 2, cache_dir: None, progress: false },
-    );
+    )
+    .unwrap();
 
     // Ship the manifest through disk, as a remote worker would see it.
     let mpath = base.join("campaign.json");
@@ -162,7 +227,8 @@ fn sharded_execution_merges_bit_identical() {
         run_campaign(
             &part,
             &SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false },
-        );
+        )
+        .unwrap();
         dirs.push(dir);
     }
 
@@ -273,4 +339,197 @@ fn cli_shard_merge_matches_cli_sweep() {
         );
     }
     let _ = std::fs::remove_dir_all(&base);
+}
+
+/// The scenario-payload acceptance criteria: a 64-node
+/// hierarchical-variability campaign (1) serializes O(1) per point — no
+/// per-node coefficient arrays, size independent of the node count —
+/// and (2) shards + merges bit-identical to the single-machine run.
+#[test]
+fn scenario_campaign_manifest_is_o1_per_point() {
+    let npoints = 6;
+    let small = Manifest::new(scenario_campaign(npoints, 64, 5)).to_json().to_string();
+    let big = Manifest::new(scenario_campaign(npoints, 1024, 5)).to_json().to_string();
+    // 16x the nodes must not grow the manifest beyond the two extra
+    // digits of the node count itself ("64" -> "1024" in two fields).
+    let digits = 2 * 2 * npoints;
+    assert!(
+        big.len() <= small.len() + digits,
+        "manifest grew with the node count: {} bytes at 64 nodes, {} at 1024",
+        small.len(),
+        big.len()
+    );
+    // And the per-point cost stays far below one NodeCoef vector: an
+    // explicit 64-node model alone is > 64 * 10 f64s ≈ several KB.
+    let per_point = small.len() / npoints;
+    assert!(
+        per_point < 2048,
+        "scenario points must stay O(1): {per_point} bytes per point"
+    );
+    // Sanity: the equivalent explicit encoding of one 64-node day draw
+    // really is an order of magnitude bigger.
+    let gt = hplsim::platform::GroundTruth::generate(
+        64,
+        hplsim::platform::Scenario::Normal,
+        5,
+    );
+    let explicit_model = gt.day_model(0).to_json().to_string();
+    assert!(
+        explicit_model.len() > 4 * per_point,
+        "explicit 64-node model ({} bytes) should dwarf a scenario point \
+         ({per_point} bytes)",
+        explicit_model.len()
+    );
+}
+
+/// Scenario campaigns are bit-identical across worker-thread counts
+/// (in-worker materialization must not depend on scheduling), and a
+/// sharded + merged scenario campaign reproduces the single-machine
+/// results exactly.
+#[test]
+fn scenario_campaign_shards_merge_bit_identical() {
+    let base = fresh_dir("scenario_shards");
+    std::fs::create_dir_all(&base).unwrap();
+    let points = scenario_campaign(10, 64, 31);
+
+    // Thread-count determinism of seed-materialization.
+    let single = run_campaign(
+        &points,
+        &SweepOptions { threads: 1, cache_dir: None, progress: false },
+    )
+    .unwrap();
+    for threads in [2usize, 8] {
+        let rep = run_campaign(
+            &points,
+            &SweepOptions { threads, cache_dir: None, progress: false },
+        )
+        .unwrap();
+        assert_eq!(
+            serialize(&rep.results),
+            serialize(&single.results),
+            "scenario materialization diverged at {threads} threads"
+        );
+    }
+
+    // Ship through disk, shard 2 ways, merge by fingerprint.
+    let mpath = base.join("campaign.json");
+    Manifest::new(points.clone()).save(&mpath).unwrap();
+    let loaded = Manifest::load(&mpath).unwrap();
+    let shards = 2u64;
+    let mut dirs = Vec::new();
+    for index in 0..shards {
+        let dir = base.join(format!("shard{index}"));
+        let part = loaded.shard_points(shards, index);
+        run_campaign(
+            &part,
+            &SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false },
+        )
+        .unwrap();
+        dirs.push(dir);
+    }
+    let merged: Vec<HplResult> = points
+        .iter()
+        .map(|p| {
+            let fp = p.fingerprint();
+            dirs.iter()
+                .find_map(|d| cache_lookup_fp(d, fp))
+                .unwrap_or_else(|| panic!("point {} missing from all shards", p.label))
+        })
+        .collect();
+    assert_eq!(
+        serialize(&merged),
+        serialize(&single.results),
+        "sharded + merged scenario campaign diverged from the single-machine run"
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Fingerprints must be sensitive to every scenario field: flipping any
+/// knob of the generative description changes the cache identity.
+#[test]
+fn scenario_fingerprint_sensitive_to_every_field() {
+    use hplsim::coordinator::sweep::Platform;
+    use hplsim::platform::{ComputeSpec, DayDraw, LinkVariability, NetSpec, TopoSpec};
+
+    let base = scenario_campaign(1, 64, 7).remove(0);
+    let fp0 = base.fingerprint();
+    let mutate = |f: &mut dyn FnMut(&mut hplsim::platform::PlatformScenario)| {
+        let mut p = base.clone();
+        if let Platform::Scenario(s) = &mut p.platform {
+            f(s);
+        }
+        p.fingerprint()
+    };
+
+    let fps = [
+        mutate(&mut |s| {
+            s.topo = TopoSpec::Star { nodes: 64, node_bw: 12.6e9, loop_bw: 40e9 }
+        }),
+        mutate(&mut |s| s.net = NetSpec::GroundTruth(hplsim::platform::GtRef {
+            nodes: 64,
+            scenario: hplsim::platform::Scenario::Normal,
+            seed: 1,
+            drop_bytes: None,
+        })),
+        mutate(&mut |s| {
+            if let ComputeSpec::Hierarchical { model, .. } = &mut s.compute {
+                model.mu[0] *= 1.0 + 1e-12;
+            }
+        }),
+        mutate(&mut |s| {
+            if let ComputeSpec::Hierarchical { opts, .. } = &mut s.compute {
+                opts.cluster_seed = Some(99);
+            }
+        }),
+        mutate(&mut |s| {
+            if let ComputeSpec::Hierarchical { opts, .. } = &mut s.compute {
+                opts.day = DayDraw::Day(3);
+            }
+        }),
+        mutate(&mut |s| {
+            if let ComputeSpec::Hierarchical { opts, .. } = &mut s.compute {
+                opts.gamma_cv = Some(0.05);
+            }
+        }),
+        mutate(&mut |s| {
+            if let ComputeSpec::Hierarchical { opts, .. } = &mut s.compute {
+                opts.alpha_scale = 8.0;
+            }
+        }),
+        mutate(&mut |s| {
+            if let ComputeSpec::Hierarchical { opts, .. } = &mut s.compute {
+                opts.evict_slowest = 1;
+            }
+        }),
+        mutate(&mut |s| {
+            s.links = LinkVariability::Degraded { fraction: 0.2, factor: 0.5, seed: None }
+        }),
+        mutate(&mut |s| {
+            s.links = LinkVariability::Degraded { fraction: 0.1, factor: 0.4, seed: None }
+        }),
+        mutate(&mut |s| {
+            s.links = LinkVariability::Degraded { fraction: 0.1, factor: 0.5, seed: Some(1) }
+        }),
+    ];
+    for (i, fp) in fps.iter().enumerate() {
+        assert_ne!(*fp, fp0, "scenario mutation {i} did not change the fingerprint");
+    }
+    // And an untouched clone hashes identically.
+    assert_eq!(base.clone().fingerprint(), fp0);
+}
+
+/// Scenario JSON round-trips through a real manifest file preserve
+/// fingerprints (the O(1) encoding is exact).
+#[test]
+fn scenario_manifest_roundtrip_preserves_fingerprints() {
+    let dir = fresh_dir("scenario_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let points = scenario_campaign(8, 64, 23);
+    let path = dir.join("campaign.json");
+    Manifest::new(points.clone()).save(&path).unwrap();
+    let loaded = Manifest::load(&path).unwrap();
+    for (a, b) in points.iter().zip(&loaded.points) {
+        assert_eq!(a.fingerprint(), b.fingerprint(), "fingerprint drift for {}", a.label);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,181 @@
+//! Property tests for the declarative platform-scenario layer: randomly
+//! generated scenarios must survive JSON round-trips byte-stably (the
+//! fingerprint domain), and materialization must be a pure function of
+//! (scenario, seed).
+
+use hplsim::blas::NodeCoef;
+use hplsim::platform::{
+    CalProcedure, ComputeSpec, DayDraw, Fidelity, Generation, GtRef, HierSpec,
+    LinkVariability, MixSpec, NetSpec, PlatformScenario, SampleOpts, Scenario, TopoSpec,
+};
+use hplsim::stats::json::Json;
+use hplsim::stats::{Matrix, Rng};
+
+fn random_matrix3(rng: &mut Rng, scale: f64) -> Matrix {
+    // Diagonal-dominant symmetric PSD-ish matrix on the given scale.
+    let mut m = Matrix::zeros(3, 3);
+    for i in 0..3 {
+        m[(i, i)] = (scale * (0.5 + rng.uniform())).powi(2);
+    }
+    let off = 0.1 * m[(0, 0)].sqrt() * m[(2, 2)].sqrt();
+    m[(0, 2)] = off;
+    m[(2, 0)] = off;
+    m
+}
+
+fn random_gt(rng: &mut Rng) -> GtRef {
+    GtRef {
+        nodes: 2 + rng.below(30),
+        scenario: [Scenario::Normal, Scenario::Cooling, Scenario::Multimodal]
+            [rng.below(3)],
+        seed: rng.next_u64(),
+        drop_bytes: if rng.uniform() < 0.5 { Some(1.0e6 + rng.uniform() * 1e8) } else { None },
+    }
+}
+
+fn random_opts(rng: &mut Rng, nodes: usize) -> SampleOpts {
+    SampleOpts {
+        nodes,
+        cluster_seed: if rng.uniform() < 0.5 { Some(rng.next_u64()) } else { None },
+        day: match rng.below(3) {
+            0 => DayDraw::None,
+            1 => DayDraw::Day(rng.next_u64() % 40),
+            _ => DayDraw::PerPoint,
+        },
+        gamma_cv: if rng.uniform() < 0.5 { Some(0.1 * rng.uniform()) } else { None },
+        alpha_scale: [1.0, 2.0, 16.0][rng.below(3)],
+        evict_slowest: rng.below(nodes.min(4)),
+    }
+}
+
+fn random_scenario(rng: &mut Rng) -> PlatformScenario {
+    let nodes = 4 + rng.below(61);
+    let hier = HierSpec {
+        mu: [5.6e-11 * (0.9 + 0.2 * rng.uniform()), 8.0e-7, 1.7e-12],
+        sigma_s: random_matrix3(rng, 1.7e-12),
+        sigma_t: random_matrix3(rng, 4.5e-13),
+    };
+    let opts = random_opts(rng, nodes);
+    let kept = opts.kept();
+    let compute = match rng.below(6) {
+        0 => ComputeSpec::Homogeneous(NodeCoef::naive(1e-11 * (1.0 + rng.uniform()))),
+        1 => ComputeSpec::MixedGeneration(vec![
+            Generation { count: kept / 2, coef: NodeCoef::naive(1e-11) },
+            Generation { count: kept - kept / 2, coef: NodeCoef::naive(2.2e-11) },
+        ]),
+        2 => ComputeSpec::Hierarchical { model: hier.clone(), opts },
+        3 => ComputeSpec::Mixture {
+            model: MixSpec {
+                weights: [0.75, 0.25],
+                means: [hier.mu, [1.25 * hier.mu[0], hier.mu[1], 2.0 * hier.mu[2]]],
+                covs: [random_matrix3(rng, 1.7e-12), random_matrix3(rng, 1.7e-12)],
+                sigma_t: random_matrix3(rng, 4.5e-13),
+            },
+            opts,
+        },
+        4 => {
+            let gt = random_gt(rng);
+            ComputeSpec::GroundTruthDay { day: rng.next_u64() % 40, gt }
+        }
+        _ => {
+            let gt = random_gt(rng);
+            ComputeSpec::Calibrated {
+                gt,
+                day: 0,
+                samples: 32 + rng.below(64),
+                cal_seed: rng.next_u64(),
+                fidelity: [Fidelity::Full, Fidelity::Hetero, Fidelity::Naive]
+                    [rng.below(3)],
+            }
+        }
+    };
+    // Keep topology consistent with the compute spec's node count when
+    // it has one (materialization checks the agreement).
+    let topo_nodes = compute.nodes().unwrap_or(nodes);
+    let topo = if rng.uniform() < 0.7 || topo_nodes % 4 != 0 {
+        TopoSpec::Star { nodes: topo_nodes, node_bw: 12.5e9, loop_bw: 40e9 }
+    } else {
+        TopoSpec::FatTree {
+            down_leaf: topo_nodes / 4,
+            leaves: 4,
+            tops: 1 + rng.below(4),
+            para: 1 + rng.below(2),
+            node_bw: 12.5e9,
+            trunk_bw: 10e9,
+            loop_bw: 40e9,
+        }
+    };
+    let net = match rng.below(3) {
+        0 => NetSpec::Ideal,
+        1 => NetSpec::GroundTruth(random_gt(rng)),
+        _ => NetSpec::Calibrated {
+            gt: random_gt(rng),
+            procedure: [CalProcedure::Optimistic, CalProcedure::Improved][rng.below(2)],
+            cal_seed: rng.next_u64(),
+        },
+    };
+    let links = match rng.below(3) {
+        0 => LinkVariability::None,
+        1 => LinkVariability::Jitter {
+            cv: 0.2 * rng.uniform(),
+            seed: if rng.uniform() < 0.5 { Some(rng.next_u64()) } else { None },
+        },
+        _ => LinkVariability::Degraded {
+            fraction: rng.uniform(),
+            factor: 0.1 + 0.9 * rng.uniform(),
+            seed: if rng.uniform() < 0.5 { Some(rng.next_u64()) } else { None },
+        },
+    };
+    PlatformScenario { topo, net, compute, links }
+}
+
+/// 200 random scenarios: serialize → parse → serialize must be
+/// byte-stable (this is the fingerprint domain, so stability here is
+/// cache-correctness), and parsing must invert serialization.
+#[test]
+fn random_scenarios_roundtrip_byte_stably() {
+    let mut rng = Rng::new(0x5ce0_a21f);
+    for case in 0..200 {
+        let s = random_scenario(&mut rng);
+        let text = s.to_json().to_string();
+        let parsed = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: emitted invalid JSON ({e}): {text}"));
+        let back = PlatformScenario::from_json(&parsed)
+            .unwrap_or_else(|| panic!("case {case}: failed to parse back: {text}"));
+        assert_eq!(text, back.to_json().to_string(), "case {case} not byte-stable");
+    }
+}
+
+/// Random scenarios materialize deterministically: same (scenario,
+/// seed) twice gives bit-identical models; and materialization either
+/// succeeds or fails identically after a JSON round-trip.
+#[test]
+fn random_scenarios_materialize_deterministically() {
+    let mut rng = Rng::new(0xfeed_5eed);
+    let mut ok = 0usize;
+    for case in 0..60 {
+        let s = random_scenario(&mut rng);
+        let seed = rng.next_u64();
+        let a = s.materialize(seed);
+        let b = s.materialize(seed);
+        let text = s.to_json().to_string();
+        let back = PlatformScenario::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let c = back.materialize(seed);
+        match (a, b, c) {
+            (Ok((t1, n1, d1)), Ok((t2, _, d2)), Ok((t3, n3, d3))) => {
+                ok += 1;
+                assert_eq!(format!("{t1:?}"), format!("{t2:?}"), "case {case}");
+                assert_eq!(format!("{t1:?}"), format!("{t3:?}"), "case {case}");
+                assert_eq!(format!("{n1:?}"), format!("{n3:?}"), "case {case}");
+                assert_eq!(d1.nodes, d2.nodes, "case {case}");
+                assert_eq!(d1.nodes, d3.nodes, "case {case}");
+            }
+            (Err(e1), Err(e2), Err(e3)) => {
+                assert_eq!(e1, e2, "case {case}");
+                assert_eq!(e1, e3, "case {case}");
+            }
+            other => panic!("case {case}: inconsistent materialization {other:?}"),
+        }
+    }
+    assert!(ok > 30, "too few materializable scenarios ({ok}/60) — generator too strict");
+}

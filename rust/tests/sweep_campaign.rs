@@ -25,9 +25,9 @@ fn campaign(npoints: usize, campaign_seed: u64) -> Vec<SimPoint> {
     (0..npoints)
         .map(|i| {
             let (p, q) = [(1, 2), (2, 2), (1, 4), (2, 3)][i % 4];
-            SimPoint {
-                label: format!("pt{i}"),
-                cfg: HplConfig {
+            SimPoint::explicit(
+                format!("pt{i}"),
+                HplConfig {
                     n: 96 + 32 * (i % 5),
                     nb: [16, 32][i % 2],
                     p,
@@ -39,12 +39,12 @@ fn campaign(npoints: usize, campaign_seed: u64) -> Vec<SimPoint> {
                     rfact: Rfact::ALL[i % Rfact::ALL.len()],
                     nbmin: 8,
                 },
-                topo: Topology::star(4, 12.5e9, 40e9),
-                net: NetModel::ideal(),
-                dgemm: dgemm.clone(),
-                rpn: 2,
-                seed: point_seed(campaign_seed, i as u64),
-            }
+                Topology::star(4, 12.5e9, 40e9),
+                NetModel::ideal(),
+                dgemm.clone(),
+                2,
+                point_seed(campaign_seed, i as u64),
+            )
         })
         .collect()
 }
@@ -75,14 +75,16 @@ fn campaign_is_bit_identical_across_thread_counts() {
     let baseline = run_campaign(
         &points,
         &SweepOptions { threads: 1, cache_dir: None, progress: false },
-    );
+    )
+    .unwrap();
     let expected = serialize(&baseline.results);
     assert_eq!(baseline.computed, 32);
     for threads in [2usize, 8] {
         let rep = run_campaign(
             &points,
             &SweepOptions { threads, cache_dir: None, progress: false },
-        );
+        )
+        .unwrap();
         assert_eq!(
             serialize(&rep.results),
             expected,
@@ -100,13 +102,13 @@ fn resume_recomputes_only_uncached_points() {
     let points = campaign(12, 7);
     let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false };
 
-    let first = run_campaign(&points, &opts);
+    let first = run_campaign(&points, &opts).unwrap();
     assert_eq!(first.computed, 12);
     assert_eq!(first.cached, 0);
     assert!(first.from_cache.iter().all(|&c| !c));
 
     // A clean restart is a pure cache replay.
-    let replay = run_campaign(&points, &opts);
+    let replay = run_campaign(&points, &opts).unwrap();
     assert_eq!(replay.computed, 0);
     assert_eq!(replay.cached, 12);
     assert!(replay.from_cache.iter().all(|&c| c));
@@ -117,7 +119,7 @@ fn resume_recomputes_only_uncached_points() {
     for &i in &[1usize, 4, 7] {
         std::fs::remove_file(cache_path_for(&dir, &points[i])).unwrap();
     }
-    let resumed = run_campaign(&points, &opts);
+    let resumed = run_campaign(&points, &opts).unwrap();
     assert_eq!(resumed.computed, 3);
     assert_eq!(resumed.cached, 9);
     for (i, &cached) in resumed.from_cache.iter().enumerate() {
@@ -136,7 +138,7 @@ fn resume_survives_corrupted_and_truncated_cache_files() {
     let dir = fresh_dir("corrupt");
     let points = campaign(8, 21);
     let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false };
-    let first = run_campaign(&points, &opts);
+    let first = run_campaign(&points, &opts).unwrap();
     assert_eq!(first.computed, 8);
 
     // Truncate one entry mid-JSON and replace another with garbage.
@@ -146,7 +148,7 @@ fn resume_survives_corrupted_and_truncated_cache_files() {
     let garbled = cache_path_for(&dir, &points[5]);
     std::fs::write(&garbled, "not json at all").unwrap();
 
-    let resumed = run_campaign(&points, &opts);
+    let resumed = run_campaign(&points, &opts).unwrap();
     assert_eq!(resumed.computed, 2, "exactly the two damaged points are recomputed");
     assert_eq!(resumed.cached, 6);
     assert_eq!(serialize(&resumed.results), serialize(&first.results));
@@ -179,7 +181,7 @@ fn stale_tmp_files_cleaned_on_campaign_start() {
 
     let points = campaign(3, 13);
     let opts = SweepOptions { threads: 1, cache_dir: Some(dir.clone()), progress: false };
-    run_campaign(&points, &opts);
+    run_campaign(&points, &opts).unwrap();
     assert!(!stale.exists(), "old orphaned tmp file survived campaign start");
     assert!(fresh.exists(), "fresh (possibly in-flight) tmp file was reaped");
 
@@ -194,7 +196,7 @@ fn stale_tmp_files_cleaned_on_campaign_start() {
         );
     }
     // ...and they replay cleanly.
-    let replay = run_campaign(&points, &opts);
+    let replay = run_campaign(&points, &opts).unwrap();
     assert_eq!(replay.computed, 0);
     assert_eq!(replay.cached, 3);
     let _ = std::fs::remove_dir_all(&dir);
@@ -207,12 +209,12 @@ fn cache_misses_on_fingerprint_change() {
     let dir = fresh_dir("fpmiss");
     let points = campaign(4, 3);
     let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false };
-    run_campaign(&points, &opts);
+    run_campaign(&points, &opts).unwrap();
 
     // Same campaign with different per-point seeds: all fingerprints
     // change, nothing may be served from cache.
     let reseeded = campaign(4, 4);
-    let rep = run_campaign(&reseeded, &opts);
+    let rep = run_campaign(&reseeded, &opts).unwrap();
     assert_eq!(rep.cached, 0);
     assert_eq!(rep.computed, 4);
 
@@ -237,13 +239,15 @@ fn sweep_speedup_at_4_threads() {
     let seq = run_campaign(
         &points,
         &SweepOptions { threads: 1, cache_dir: None, progress: false },
-    );
+    )
+    .unwrap();
     let t_seq = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
     let par = run_campaign(
         &points,
         &SweepOptions { threads: 4, cache_dir: None, progress: false },
-    );
+    )
+    .unwrap();
     let t_par = t1.elapsed().as_secs_f64();
     assert_eq!(serialize(&seq.results), serialize(&par.results));
     assert!(
