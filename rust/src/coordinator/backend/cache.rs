@@ -1,0 +1,163 @@
+//! The fingerprint-keyed on-disk result cache.
+//!
+//! One JSON file per fingerprint (`<fp as 16 hex digits>.json`), written
+//! atomically (temp + rename). The cache is the shared currency of every
+//! execution backend: the in-process pool persists into it, subprocess
+//! shards and file-queue workers *communicate results through it*, and
+//! `hplsim merge` assembles reports from it. A lookup misses — and the
+//! point is recomputed — on absence, corruption, a fingerprint mismatch,
+//! or a different model version, so damaged or stale caches can never
+//! poison results.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::hpl::HplResult;
+use crate::mpi::CommStats;
+use crate::stats::json::Json;
+
+use super::point::{SimPoint, MODEL_VERSION};
+
+/// Serialize one result for the on-disk cache.
+pub fn result_to_json(r: &HplResult) -> Json {
+    Json::obj(vec![
+        ("seconds", Json::Num(r.seconds)),
+        ("gflops", Json::Num(r.gflops)),
+        ("messages", Json::Num(r.comm.messages as f64)),
+        ("bytes", Json::Num(r.comm.bytes)),
+        ("iprobes", Json::Num(r.comm.iprobes as f64)),
+        ("events", Json::Num(r.events as f64)),
+        ("dgemm_calls", Json::Num(r.dgemm_calls as f64)),
+    ])
+}
+
+/// Deserialize a cached result.
+pub fn result_from_json(v: &Json) -> Option<HplResult> {
+    Some(HplResult {
+        seconds: v.get("seconds")?.as_f64()?,
+        gflops: v.get("gflops")?.as_f64()?,
+        comm: CommStats {
+            messages: v.get("messages")?.as_f64()? as u64,
+            bytes: v.get("bytes")?.as_f64()?,
+            iprobes: v.get("iprobes")?.as_f64()? as u64,
+        },
+        events: v.get("events")?.as_f64()? as u64,
+        dgemm_calls: v.get("dgemm_calls")?.as_f64()? as usize,
+    })
+}
+
+/// Cache file of a raw fingerprint (`<fp as 16 hex digits>.json`).
+/// Shard merging addresses cache entries by fingerprint directly.
+pub fn cache_path_fp(dir: &Path, fp: u64) -> PathBuf {
+    dir.join(format!("{fp:016x}.json"))
+}
+
+/// Cache file of a point: one JSON file per fingerprint.
+pub fn cache_path_for(dir: &Path, point: &SimPoint) -> PathBuf {
+    cache_path_fp(dir, point.fingerprint())
+}
+
+/// Look a point up in the cache; misses on absence, corruption, a
+/// fingerprint mismatch, or a different model version.
+pub fn cache_lookup(dir: &Path, point: &SimPoint) -> Option<HplResult> {
+    cache_lookup_fp(dir, point.fingerprint())
+}
+
+/// Fingerprint-keyed variant of [`cache_lookup`].
+pub fn cache_lookup_fp(dir: &Path, fp: u64) -> Option<HplResult> {
+    let text = std::fs::read_to_string(cache_path_fp(dir, fp)).ok()?;
+    let v = Json::parse(&text).ok()?;
+    if v.get("fingerprint")?.as_str()? != format!("{fp:016x}") {
+        return None;
+    }
+    if v.get("model_version")?.as_f64()? as u64 != MODEL_VERSION {
+        return None;
+    }
+    result_from_json(v.get("result")?)
+}
+
+/// Persist a finished point (atomic: write then rename). Failures are
+/// reported but never abort the campaign — the cache is an optimization.
+pub fn cache_store(dir: &Path, point: &SimPoint, r: &HplResult) {
+    store_fp(dir, &point.label, point.fingerprint(), r)
+}
+
+pub(crate) fn store_fp(dir: &Path, label: &str, fp: u64, r: &HplResult) {
+    let v = Json::obj(vec![
+        ("fingerprint", Json::Str(format!("{fp:016x}"))),
+        ("model_version", Json::Num(MODEL_VERSION as f64)),
+        ("label", Json::Str(label.to_string())),
+        ("result", result_to_json(r)),
+    ]);
+    static TMP_SEQ: AtomicUsize = AtomicUsize::new(0);
+    let final_path = cache_path_fp(dir, fp);
+    let tmp_path = dir.join(format!(
+        "{fp:016x}.tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let res = std::fs::write(&tmp_path, v.to_string())
+        .and_then(|()| std::fs::rename(&tmp_path, &final_path));
+    if let Err(e) = res {
+        // Never leave a partial temp file behind: it would otherwise
+        // accumulate in the cache directory across failed runs.
+        let _ = std::fs::remove_file(&tmp_path);
+        eprintln!("sweep: warning: could not cache {}: {e}", final_path.display());
+    }
+}
+
+/// Copy one cache entry between directories (used to seed a queue cache
+/// from a campaign cache and to collect queue results back). Misses are
+/// fine — the entry is simply recomputed. The copy lands via the same
+/// temp+rename discipline as [`cache_store`]: the destination may be a
+/// live cache another campaign is reading, and a direct copy to the
+/// final `<fp>.json` path would expose torn half-written entries
+/// (crashed copies leave only a `*.tmp.*` file, which the stale-temp
+/// sweep reaps).
+pub(crate) fn copy_entry(from: &Path, to: &Path, fp: u64) {
+    if from == to {
+        return;
+    }
+    let src = cache_path_fp(from, fp);
+    if !src.exists() {
+        return;
+    }
+    static COPY_SEQ: AtomicUsize = AtomicUsize::new(0);
+    let tmp = to.join(format!(
+        "{fp:016x}.tmp.{}.{}",
+        std::process::id(),
+        COPY_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let res = std::fs::copy(&src, &tmp)
+        .and_then(|_| std::fs::rename(&tmp, cache_path_fp(to, fp)));
+    if res.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+}
+
+/// Remove orphaned `*.tmp.*` files left behind by a crashed campaign
+/// (the atomic write-then-rename in `store_fp` can be interrupted
+/// between the two steps). Only files matching the temp-name pattern
+/// *and* older than [`TMP_REAP_AGE`] are touched: another live campaign
+/// may share this cache directory, and its in-flight temp files (which
+/// exist for milliseconds) must not be reaped from under it. Real
+/// `<fp>.json` entries are never removed.
+const TMP_REAP_AGE: std::time::Duration = std::time::Duration::from_secs(60);
+
+pub(crate) fn clean_stale_tmp(dir: &Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        if !entry.file_name().to_string_lossy().contains(".tmp.") {
+            continue;
+        }
+        let old_enough = entry
+            .metadata()
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .is_some_and(|age| age >= TMP_REAP_AGE);
+        if old_enough {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! The in-process execution backend: a work-stealing thread pool.
+//!
+//! This is the substrate `run_campaign` always used, extracted behind
+//! [`ExecBackend`]: every worker simulates with thread-private state
+//! (`simulate_direct` builds a fresh single-threaded `Sim` per point),
+//! platforms are realized through a per-campaign [`MaterializeMemo`]
+//! (equal platforms calibrate once), finished points are persisted to
+//! the campaign cache, and progress flows through the campaign's
+//! callback — never straight to stderr.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::hpl::{simulate_direct, HplResult};
+
+use super::cache::store_fp;
+use super::memo::MaterializeMemo;
+use super::point::Platform;
+use super::{Campaign, ExecBackend, ExecError, ProgressEvent, WorkPlan};
+
+/// Throttled progress/ETA reporter shared by all pool workers: at most
+/// one [`ProgressEvent::PointDone`] per second, plus the final point.
+struct Progress<'c, 'a> {
+    campaign: &'c Campaign<'a>,
+    total: usize,
+    start: Instant,
+    done: AtomicUsize,
+    last: Mutex<Instant>,
+}
+
+impl<'c, 'a> Progress<'c, 'a> {
+    fn new(campaign: &'c Campaign<'a>, total: usize) -> Progress<'c, 'a> {
+        let now = Instant::now();
+        Progress {
+            campaign,
+            total,
+            start: now,
+            done: AtomicUsize::new(0),
+            last: Mutex::new(now),
+        }
+    }
+
+    fn tick(&self) {
+        let done = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.campaign.has_progress() {
+            return;
+        }
+        let now = Instant::now();
+        let mut last = self.last.lock().unwrap();
+        if done < self.total && now.duration_since(*last).as_secs_f64() < 1.0 {
+            return;
+        }
+        *last = now;
+        drop(last);
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let rate = done as f64 / elapsed.max(1e-9);
+        let eta = (self.total - done) as f64 / rate.max(1e-9);
+        self.campaign.emit(&ProgressEvent::PointDone {
+            done,
+            total: self.total,
+            elapsed,
+            rate,
+            eta,
+        });
+    }
+}
+
+/// Pop the next point index: own deque front first, then steal from the
+/// back of the busiest-looking victim (round-robin scan).
+fn next_task(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
+    if let Some(i) = deques[me].lock().unwrap().pop_front() {
+        return Some(i);
+    }
+    let n = deques.len();
+    for off in 1..n {
+        let victim = (me + off) % n;
+        if let Some(i) = deques[victim].lock().unwrap().pop_back() {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// The work-stealing thread-pool backend. One instance serves one
+/// [`Campaign::run`]: `execute` accumulates results in memory and
+/// `collect` drains them.
+#[derive(Default)]
+pub struct InProcess {
+    finished: Mutex<Vec<(usize, HplResult)>>,
+}
+
+impl InProcess {
+    pub fn new() -> InProcess {
+        InProcess::default()
+    }
+}
+
+impl ExecBackend for InProcess {
+    fn name(&self) -> &str {
+        "inproc"
+    }
+
+    fn prepare(&self, _campaign: &Campaign<'_>, _plan: &WorkPlan) -> Result<(), ExecError> {
+        Ok(())
+    }
+
+    fn execute(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
+        let todo = &plan.todo;
+        if todo.is_empty() {
+            return Ok(());
+        }
+        let points = campaign.points();
+        let workers = plan.threads.min(todo.len()).max(1);
+        let deques: Vec<Mutex<VecDeque<usize>>> =
+            (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+        for (i, &idx) in todo.iter().enumerate() {
+            deques[i % workers].lock().unwrap().push_back(idx);
+        }
+
+        let progress = Progress::new(campaign, todo.len());
+        let memo = MaterializeMemo::new();
+        let finished = &self.finished;
+        let cache_dir = campaign.cache_dir();
+
+        std::thread::scope(|s| {
+            let deques = &deques;
+            let progress = &progress;
+            let memo = &memo;
+            let fps = &plan.fps;
+            for me in 0..workers {
+                s.spawn(move || {
+                    while let Some(idx) = next_task(deques, me) {
+                        let p = &points[idx];
+                        // Scenario payloads materialize here, in the
+                        // worker, from the point's own data — validated
+                        // up front, so this cannot fail mid-campaign.
+                        // Equal scenarios share one materialization
+                        // through the memo; explicit payloads already
+                        // carry their models and borrow them for free
+                        // (keying them would serialize O(nodes) JSON
+                        // per point for nothing).
+                        let r = match &p.platform {
+                            Platform::Explicit { topo, net, dgemm } => {
+                                simulate_direct(&p.cfg, topo, net, dgemm, p.rpn, p.seed)
+                            }
+                            Platform::Scenario(_) => {
+                                let plat =
+                                    memo.realize(p).expect("validated before dispatch");
+                                let (topo, net, dgemm) = &*plat;
+                                simulate_direct(&p.cfg, topo, net, dgemm, p.rpn, p.seed)
+                            }
+                        };
+                        if let Some(dir) = cache_dir {
+                            store_fp(dir, &p.label, fps[idx], &r);
+                        }
+                        finished.lock().unwrap().push((idx, r));
+                        progress.tick();
+                    }
+                });
+            }
+        });
+        Ok(())
+    }
+
+    fn collect(
+        &self,
+        _campaign: &Campaign<'_>,
+        _plan: &WorkPlan,
+    ) -> Result<Vec<(usize, HplResult)>, ExecError> {
+        Ok(std::mem::take(&mut *self.finished.lock().unwrap()))
+    }
+}

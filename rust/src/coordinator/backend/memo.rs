@@ -1,0 +1,258 @@
+//! Worker-side platform materialization memo.
+//!
+//! Realizing a point's platform can be the expensive part of a campaign
+//! point: a `ComputeSpec::Calibrated` scenario rebuilds a ground truth,
+//! benchmarks it and fits an OLS model — per point, even when hundreds
+//! of points (fig 5: every N, every repetition) carry the *same*
+//! calibrated scenario. The memo shares materializations within one
+//! campaign run, keyed by
+//!
+//! * the FNV-1a hash of the canonical platform JSON (the same encoding
+//!   the point fingerprint hashes — every field feeds the key), and
+//! * the point seed **iff** the platform consumes it
+//!   ([`Platform::seed_sensitive`]): a pinned-seed scenario or a
+//!   `Calibrated`/`GroundTruthDay` spec materializes identically for
+//!   every seed, so all its points share one entry, while fresh-draw
+//!   scenarios keep one entry per (platform, seed) — never mixing
+//!   draws.
+//!
+//! Results are shared as `Arc`s. The memo accepts any platform kind,
+//! but the in-process pool routes only *scenario* payloads through it:
+//! explicit payloads already carry their materialized models and
+//! borrow them for free — keying them here would serialize O(nodes)
+//! JSON per point to save nothing. Correctness relies only on
+//! `materialize` being deterministic in `(platform, seed)`, which the
+//! thread-count determinism tests already pin down.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::blas::DgemmModel;
+use crate::network::{NetModel, Topology};
+use crate::platform::ScenarioError;
+
+use super::point::{fnv1a_str, SimPoint};
+
+/// A shared, realized platform triple.
+pub type SharedPlatform = Arc<(Topology, NetModel, DgemmModel)>;
+
+/// One entry: a slot that is filled exactly once. Workers racing for
+/// the same key serialize on the slot (not on the whole memo), so an
+/// expensive calibration runs once while unrelated keys proceed.
+type Slot = Arc<Mutex<Option<SharedPlatform>>>;
+
+/// Retained entries are bounded: a fresh-draw campaign (unpinned
+/// cluster/day seeds) gives every point a distinct key, and keeping
+/// each realized O(nodes) platform alive for the whole run would be an
+/// unbounded memory regression over the old realize-and-drop worker
+/// loop. When inserting a new key would exceed the cap, the map is
+/// cleared (generation-style): hot keys reused consecutively — a
+/// calibrated spec across every N, one pinned draw across candidate
+/// geometries — re-enter immediately and keep hitting, while one-shot
+/// draws stop accumulating. Eviction never affects results: holders
+/// keep their `Arc`s, and a re-miss just rematerializes
+/// deterministically.
+const MAX_ENTRIES: usize = 64;
+
+/// Per-campaign materialization memo (see module docs).
+#[derive(Default)]
+pub struct MaterializeMemo {
+    map: Mutex<HashMap<(u64, u64), Slot>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl MaterializeMemo {
+    pub fn new() -> MaterializeMemo {
+        MaterializeMemo::default()
+    }
+
+    /// Materializations served from the memo.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Materializations actually performed.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries currently retained (bounded by the eviction cap).
+    pub fn retained(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// Realize `point`'s platform, sharing the result with every other
+    /// point whose platform (and, when consumed, seed) agrees.
+    pub fn realize(&self, point: &SimPoint) -> Result<SharedPlatform, ScenarioError> {
+        let json = point.platform.to_json().to_string();
+        let seed_key = if point.platform.seed_sensitive() { point.seed } else { 0 };
+        let key = (fnv1a_str(&json), seed_key);
+
+        let slot: Slot = {
+            let mut map = self.map.lock().unwrap();
+            if !map.contains_key(&key) && map.len() >= MAX_ENTRIES {
+                map.clear();
+            }
+            map.entry(key).or_default().clone()
+        };
+        let mut filled = slot.lock().unwrap();
+        if let Some(shared) = &*filled {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(shared.clone());
+        }
+        // First worker to reach this key materializes while holding
+        // only the slot lock: same-platform workers wait for the one
+        // calibration, everyone else proceeds.
+        let (topo, net, dgemm) = point.platform.realize(point.seed)?;
+        let shared: SharedPlatform =
+            Arc::new((topo.into_owned(), net.into_owned(), dgemm.into_owned()));
+        *filled = Some(shared.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(shared)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::NodeCoef;
+    use crate::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
+    use crate::platform::{
+        ComputeSpec, DayDraw, Fidelity, GtRef, LinkVariability, NetSpec,
+        PlatformScenario, SampleOpts, Scenario, TopoSpec,
+    };
+
+    fn cfg() -> HplConfig {
+        HplConfig {
+            n: 128,
+            nb: 32,
+            p: 2,
+            q: 2,
+            depth: 0,
+            bcast: Bcast::Ring,
+            swap: SwapAlg::BinExch,
+            swap_threshold: 64,
+            rfact: Rfact::Crout,
+            nbmin: 8,
+        }
+    }
+
+    fn calibrated_scenario() -> PlatformScenario {
+        let gt = GtRef { nodes: 4, scenario: Scenario::Normal, seed: 3, drop_bytes: None };
+        PlatformScenario {
+            topo: TopoSpec::Star { nodes: 4, node_bw: 12.5e9, loop_bw: 40e9 },
+            net: NetSpec::Ideal,
+            compute: ComputeSpec::Calibrated {
+                gt,
+                day: 0,
+                samples: 64,
+                cal_seed: 9,
+                fidelity: Fidelity::Full,
+            },
+            links: LinkVariability::None,
+        }
+    }
+
+    fn fresh_draw_scenario() -> PlatformScenario {
+        let mut s = calibrated_scenario();
+        s.compute = ComputeSpec::Hierarchical {
+            model: crate::platform::HierSpec {
+                mu: [5.6e-11, 8.0e-7, 1.7e-12],
+                sigma_s: crate::stats::Matrix::zeros(3, 3),
+                sigma_t: crate::stats::Matrix::zeros(3, 3),
+            },
+            opts: SampleOpts {
+                nodes: 4,
+                cluster_seed: None, // fresh cluster per point
+                day: DayDraw::PerPoint,
+                gamma_cv: None,
+                alpha_scale: 1.0,
+                evict_slowest: 0,
+            },
+        };
+        s
+    }
+
+    #[test]
+    fn seed_insensitive_scenarios_materialize_once() {
+        let memo = MaterializeMemo::new();
+        let a = SimPoint::scenario("a", cfg(), calibrated_scenario(), 1, 10);
+        let b = SimPoint::scenario("b", cfg(), calibrated_scenario(), 1, 77);
+        assert!(!a.platform.seed_sensitive());
+        let ra = memo.realize(&a).unwrap();
+        let rb = memo.realize(&b).unwrap();
+        // Different seeds, same calibrated platform: one calibration.
+        assert!(Arc::ptr_eq(&ra, &rb));
+        assert_eq!(memo.misses(), 1);
+        assert_eq!(memo.hits(), 1);
+        // And the shared triple is exactly what a direct realize yields.
+        let (t, n, d) = a.platform.realize(a.seed).unwrap();
+        assert_eq!(ra.0.to_json().to_string(), t.to_json().to_string());
+        assert_eq!(ra.1.to_json().to_string(), n.to_json().to_string());
+        assert_eq!(ra.2.to_json().to_string(), d.to_json().to_string());
+    }
+
+    #[test]
+    fn seed_sensitive_scenarios_keep_per_seed_entries() {
+        let memo = MaterializeMemo::new();
+        let a = SimPoint::scenario("a", cfg(), fresh_draw_scenario(), 1, 10);
+        let b = SimPoint::scenario("b", cfg(), fresh_draw_scenario(), 1, 77);
+        assert!(a.platform.seed_sensitive());
+        let ra = memo.realize(&a).unwrap();
+        let rb = memo.realize(&b).unwrap();
+        assert!(!Arc::ptr_eq(&ra, &rb), "distinct seeds must not share a draw");
+        assert_eq!(memo.misses(), 2);
+        // Equal (platform, seed) still shares.
+        let ra2 = memo.realize(&a).unwrap();
+        assert!(Arc::ptr_eq(&ra, &ra2));
+        assert_eq!(memo.hits(), 1);
+        // The memoized draw matches the direct materialization.
+        let (_, _, d) = a.platform.realize(a.seed).unwrap();
+        assert_eq!(ra.2.to_json().to_string(), d.to_json().to_string());
+    }
+
+    #[test]
+    fn explicit_platforms_share_one_clone() {
+        let memo = MaterializeMemo::new();
+        let mk = |seed| {
+            SimPoint::explicit(
+                "e",
+                cfg(),
+                Topology::star(4, 12.5e9, 40e9),
+                NetModel::ideal(),
+                DgemmModel::homogeneous(NodeCoef::naive(1e-11)),
+                1,
+                seed,
+            )
+        };
+        let ra = memo.realize(&mk(1)).unwrap();
+        let rb = memo.realize(&mk(2)).unwrap();
+        assert!(Arc::ptr_eq(&ra, &rb));
+        assert_eq!((memo.misses(), memo.hits()), (1, 1));
+    }
+
+    #[test]
+    fn retention_is_bounded_for_fresh_draw_campaigns() {
+        // Every point of a fresh-draw scenario has a distinct key; the
+        // memo must not retain one realized platform per point.
+        let memo = MaterializeMemo::new();
+        for seed in 0..(3 * MAX_ENTRIES as u64) {
+            let p = SimPoint::scenario("fd", cfg(), fresh_draw_scenario(), 1, seed);
+            let direct = p.platform.realize(seed).unwrap();
+            let shared = memo.realize(&p).unwrap();
+            // Eviction never changes what a key materializes to.
+            assert_eq!(
+                shared.2.to_json().to_string(),
+                direct.2.to_json().to_string()
+            );
+        }
+        assert!(
+            memo.retained() <= MAX_ENTRIES,
+            "memo retained {} entries (cap {MAX_ENTRIES})",
+            memo.retained()
+        );
+        assert_eq!(memo.misses(), 3 * MAX_ENTRIES);
+    }
+}

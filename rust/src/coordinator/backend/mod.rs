@@ -1,0 +1,485 @@
+//! Pluggable campaign execution backends.
+//!
+//! A campaign — a list of self-contained [`SimPoint`]s — is *what* to
+//! compute; an [`ExecBackend`] is *where*. The [`Campaign`] builder
+//! owns everything substrate-independent (validation, cache prefetch,
+//! duplicate dedup, result assembly, progress reporting policy) and
+//! drives a backend through three phases:
+//!
+//! 1. [`ExecBackend::prepare`] — feasibility checks and setup (export a
+//!    manifest, initialize a queue directory, ...);
+//! 2. [`ExecBackend::execute`] — run every planned point, reporting
+//!    progress through the campaign's callback (never straight to
+//!    stderr);
+//! 3. [`ExecBackend::collect`] — hand the computed results back (from
+//!    memory, or read back out of the shared fingerprint-keyed cache).
+//!
+//! Three backends ship:
+//!
+//! * [`InProcess`] — the work-stealing thread pool, with a per-campaign
+//!   [`MaterializeMemo`] so equal platforms calibrate once;
+//! * [`Subprocess`] — `hplsim shard` child processes over an exported
+//!   manifest, merged through the shared cache;
+//! * [`FileQueue`] — a directory work queue any number of independent
+//!   `hplsim worker --queue DIR` processes pull shard leases from, with
+//!   heartbeats and crash recovery via lease expiry.
+//!
+//! Every backend produces bit-identical results (and therefore
+//! byte-identical `campaign.csv` reports) for the same point list —
+//! asserted by `rust/tests/backend_equiv.rs` and CI.
+//! `coordinator::sweep::run_campaign` remains as a thin compatibility
+//! wrapper over `Campaign` + `InProcess`.
+
+pub mod cache;
+pub mod inprocess;
+pub mod memo;
+pub mod point;
+pub mod queue;
+pub mod subprocess;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::hpl::HplResult;
+use crate::coordinator::table::{fnum, Table};
+
+pub use cache::{
+    cache_lookup, cache_lookup_fp, cache_path_for, cache_path_fp, cache_store,
+    result_from_json, result_to_json,
+};
+pub use inprocess::InProcess;
+pub use memo::MaterializeMemo;
+pub use point::{
+    point_seed, Platform, PointError, RealizedPlatform, SimPoint, MODEL_VERSION,
+};
+pub use queue::{run_worker, FileQueue, WorkerOptions, WorkerSummary};
+pub use subprocess::Subprocess;
+
+/// Options of a campaign run (the original `run_campaign` surface; the
+/// [`Campaign`] builder supersedes it but the compatibility wrapper
+/// still speaks it).
+#[derive(Clone, Debug, Default)]
+pub struct SweepOptions {
+    /// Worker threads; 0 = `$HPLSIM_THREADS` or the machine's available
+    /// parallelism.
+    pub threads: usize,
+    /// On-disk result cache directory (None = no cache).
+    pub cache_dir: Option<PathBuf>,
+    /// Emit progress/ETA lines on stderr.
+    pub progress: bool,
+}
+
+/// Outcome of a campaign: per-point results in point order plus
+/// execution accounting.
+#[derive(Clone, Debug)]
+pub struct CampaignReport {
+    /// One result per input point, in input order (independent of
+    /// execution order).
+    pub results: Vec<HplResult>,
+    /// Whether each result was served from the on-disk cache.
+    pub from_cache: Vec<bool>,
+    /// Points resolved by the backend in this run (one per distinct
+    /// uncached fingerprint; equal-fingerprint duplicates are served
+    /// from the first computation and counted in neither tally).
+    pub computed: usize,
+    /// Points served from the on-disk cache.
+    pub cached: usize,
+    /// Wall-clock of the whole campaign (seconds).
+    pub wall_seconds: f64,
+    /// Effective worker parallelism: the resolved thread budget,
+    /// clamped to the number of points there was to compute (a fully
+    /// cached campaign reports 1, like the pool it would have run on).
+    pub threads: usize,
+}
+
+/// Resolve a thread-count request: explicit > `$HPLSIM_THREADS` >
+/// available parallelism. The env override is what lets CI and queue
+/// workers pin parallelism without threading a flag through every verb.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Some(n) = std::env::var("HPLSIM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+    {
+        return n;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Why a campaign could not run to completion.
+#[derive(Clone, Debug)]
+pub enum ExecError {
+    /// A malformed campaign point, caught by up-front validation.
+    Point(PointError),
+    /// The execution substrate itself failed (child process died, queue
+    /// workers disappeared, a result never reached the cache, ...).
+    Backend { backend: String, reason: String },
+}
+
+impl ExecError {
+    pub(crate) fn backend(name: &str, reason: impl Into<String>) -> ExecError {
+        ExecError::Backend { backend: name.to_string(), reason: reason.into() }
+    }
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Point(e) => e.fmt(f),
+            ExecError::Backend { backend, reason } => {
+                write!(f, "{backend} backend: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+impl From<PointError> for ExecError {
+    fn from(e: PointError) -> ExecError {
+        ExecError::Point(e)
+    }
+}
+
+/// A progress notification from a running campaign. Backends never
+/// print — they emit these through [`Campaign::emit`], and the
+/// campaign's owner decides whether they reach stderr
+/// ([`stderr_reporter`]), a log, or nowhere (the default: tests and
+/// plan-only runs are silent).
+#[derive(Debug)]
+pub enum ProgressEvent<'e> {
+    /// Execution is about to start.
+    Started { backend: &'e str, total: usize, cached: usize, threads: usize },
+    /// One point finished (emitted by in-process pools, throttled to
+    /// roughly one per second plus the final point).
+    PointDone { done: usize, total: usize, elapsed: f64, rate: f64, eta: f64 },
+    /// Backend lifecycle chatter (child spawned, lease reclaimed, ...).
+    Message { backend: &'e str, text: String },
+}
+
+/// The standard stderr progress printer ([`Campaign::stderr_progress`]).
+pub fn stderr_reporter(e: &ProgressEvent<'_>) {
+    match e {
+        ProgressEvent::Started { backend, total, cached, threads } => {
+            eprintln!(
+                "sweep: {total} point(s) to compute ({cached} cached) | backend \
+                 {backend} | {threads} threads"
+            );
+        }
+        ProgressEvent::PointDone { done, total, elapsed, rate, eta } => {
+            eprintln!(
+                "sweep: {done}/{total} points ({:.0}%) | {elapsed:.1}s elapsed | \
+                 {rate:.2} pts/s | eta {eta:.1}s",
+                100.0 * *done as f64 / (*total).max(1) as f64,
+            );
+        }
+        ProgressEvent::Message { backend, text } => {
+            eprintln!("sweep[{backend}]: {text}");
+        }
+    }
+}
+
+/// The substrate-independent execution plan [`Campaign::run`] hands to
+/// the backend: per-point fingerprints plus the indices that actually
+/// need computing (first occurrence of each distinct uncached
+/// fingerprint, in point order).
+#[derive(Clone, Debug)]
+pub struct WorkPlan {
+    /// Fingerprint of every campaign point, in point order.
+    pub fps: Vec<u64>,
+    /// Indices of the points to compute.
+    pub todo: Vec<usize>,
+    /// Resolved worker parallelism for the whole campaign.
+    pub threads: usize,
+}
+
+/// An execution substrate for campaigns. Implementations must resolve
+/// every `plan.todo` index by [`ExecBackend::collect`] time and must be
+/// deterministic: the same plan yields bit-identical results on every
+/// backend (the equivalence contract `rust/tests/backend_equiv.rs`
+/// asserts).
+pub trait ExecBackend {
+    /// Short stable name (`"inproc"`, `"subprocess"`, `"queue"`) used
+    /// in progress events and errors.
+    fn name(&self) -> &str;
+
+    /// Feasibility checks and setup before anything executes. Called
+    /// once per run, before [`ProgressEvent::Started`] is emitted.
+    fn prepare(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError>;
+
+    /// Execute every `plan.todo` point, reporting progress through
+    /// `campaign.emit`. On return, each computed result must be
+    /// retrievable by [`ExecBackend::collect`].
+    fn execute(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError>;
+
+    /// Hand back the computed results as `(point_index, result)` pairs,
+    /// one per `plan.todo` entry.
+    fn collect(
+        &self,
+        campaign: &Campaign<'_>,
+        plan: &WorkPlan,
+    ) -> Result<Vec<(usize, HplResult)>, ExecError>;
+}
+
+/// A campaign ready to execute: the points plus every
+/// substrate-independent policy (parallelism, cache, progress
+/// reporting). Build one, then [`Campaign::run`] it on any backend.
+pub struct Campaign<'a> {
+    points: &'a [SimPoint],
+    threads: usize,
+    cache_dir: Option<PathBuf>,
+    progress: Option<Box<dyn Fn(&ProgressEvent<'_>) + Sync + 'a>>,
+}
+
+impl<'a> Campaign<'a> {
+    pub fn new(points: &'a [SimPoint]) -> Campaign<'a> {
+        Campaign { points, threads: 0, cache_dir: None, progress: None }
+    }
+
+    /// Worker threads (0 = `$HPLSIM_THREADS` or available cores).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// On-disk result cache directory.
+    pub fn cache(mut self, dir: Option<PathBuf>) -> Self {
+        self.cache_dir = dir;
+        self
+    }
+
+    /// Install a progress callback. Without one the campaign is silent —
+    /// no execution path writes progress to stderr on its own.
+    pub fn on_progress(
+        mut self,
+        cb: impl Fn(&ProgressEvent<'_>) + Sync + 'a,
+    ) -> Self {
+        self.progress = Some(Box::new(cb));
+        self
+    }
+
+    /// Report progress on stderr in the classic `sweep:` format.
+    pub fn stderr_progress(self) -> Self {
+        self.on_progress(stderr_reporter)
+    }
+
+    pub fn points(&self) -> &'a [SimPoint] {
+        self.points
+    }
+
+    pub fn cache_dir(&self) -> Option<&Path> {
+        self.cache_dir.as_deref()
+    }
+
+    /// Whether anyone is listening (lets hot paths skip formatting).
+    pub fn has_progress(&self) -> bool {
+        self.progress.is_some()
+    }
+
+    /// Deliver a progress event to the campaign's callback, if any.
+    pub fn emit(&self, ev: &ProgressEvent<'_>) {
+        if let Some(cb) = &self.progress {
+            cb(ev);
+        }
+    }
+
+    /// Convenience: emit a [`ProgressEvent::Message`].
+    pub fn message(&self, backend: &str, text: impl Into<String>) {
+        if self.progress.is_some() {
+            self.emit(&ProgressEvent::Message { backend, text: text.into() });
+        }
+    }
+
+    /// Execute the campaign on `backend`: validate every point, serve
+    /// cached ones, run the rest through the backend's three phases,
+    /// and assemble results in point order. A malformed point — node
+    /// count disagreement, an unmaterializable scenario — is reported
+    /// as a structured [`PointError`] before anything simulates.
+    pub fn run(&self, backend: &dyn ExecBackend) -> Result<CampaignReport, ExecError> {
+        let t0 = Instant::now();
+        for (index, p) in self.points.iter().enumerate() {
+            p.validate().map_err(|reason| PointError {
+                index,
+                label: p.label.clone(),
+                reason,
+            })?;
+        }
+        let threads = resolve_threads(self.threads);
+        if let Some(dir) = &self.cache_dir {
+            if let Err(e) = std::fs::create_dir_all(dir) {
+                eprintln!(
+                    "sweep: warning: cannot create cache dir {}: {e}",
+                    dir.display()
+                );
+            }
+            cache::clean_stale_tmp(dir);
+        }
+
+        // Hash every point exactly once; lookups, stores, and the
+        // duplicate fan-out below all reuse these fingerprints.
+        let fps: Vec<u64> = self.points.iter().map(|p| p.fingerprint()).collect();
+        // Prefetch each *distinct* fingerprint once: equal-fingerprint
+        // duplicates share the parsed result instead of re-reading and
+        // re-parsing the same cache file.
+        let mut prefetched: HashMap<u64, Option<HplResult>> =
+            HashMap::with_capacity(fps.len());
+        if let Some(dir) = self.cache_dir.as_deref() {
+            for &fp in &fps {
+                prefetched.entry(fp).or_insert_with(|| cache_lookup_fp(dir, fp));
+            }
+        }
+        let mut slots: Vec<Option<HplResult>> =
+            fps.iter().map(|fp| prefetched.get(fp).copied().flatten()).collect();
+        let from_cache: Vec<bool> = slots.iter().map(|s| s.is_some()).collect();
+        let cached = from_cache.iter().filter(|&&c| c).count();
+        // Compute each distinct fingerprint once; equal-fingerprint
+        // duplicates (e.g. a baseline point repeated across sweep axes)
+        // are fanned out from the first computation afterwards.
+        let mut first_of: HashMap<u64, usize> = HashMap::new();
+        let mut todo: Vec<usize> = Vec::new();
+        for (i, slot) in slots.iter().enumerate() {
+            if slot.is_some() {
+                continue;
+            }
+            if let std::collections::hash_map::Entry::Vacant(e) = first_of.entry(fps[i]) {
+                e.insert(i);
+                todo.push(i);
+            }
+        }
+
+        let plan = WorkPlan { fps, todo, threads };
+        // What the report (and progress) calls "threads": the budget
+        // clamped to the available work, matching the pool size
+        // InProcess actually runs (the unclamped budget stays in the
+        // plan — out-of-process backends split it among children that
+        // may also serve replays).
+        let threads_used = threads.min(plan.todo.len()).max(1);
+        backend.prepare(self, &plan)?;
+        self.emit(&ProgressEvent::Started {
+            backend: backend.name(),
+            total: plan.todo.len(),
+            cached,
+            threads: threads_used,
+        });
+        backend.execute(self, &plan)?;
+        let computed_list = backend.collect(self, &plan)?;
+        let computed = computed_list.len();
+        for (idx, r) in computed_list {
+            slots[idx] = Some(r);
+        }
+        // Fan computed results out to equal-fingerprint duplicates.
+        for i in 0..slots.len() {
+            if slots[i].is_none() {
+                let first = slots[first_of[&plan.fps[i]]];
+                slots[i] = first;
+            }
+        }
+        let mut results = Vec::with_capacity(slots.len());
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(r) => results.push(r),
+                None => {
+                    return Err(ExecError::backend(
+                        backend.name(),
+                        format!(
+                            "point {i} ({}) was never executed",
+                            self.points[i].label
+                        ),
+                    ))
+                }
+            }
+        }
+        Ok(CampaignReport {
+            results,
+            from_cache,
+            computed,
+            cached,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            threads: threads_used,
+        })
+    }
+}
+
+/// Locate the `hplsim` binary an out-of-process backend should spawn:
+/// an explicit override, or the current executable (correct for CLI
+/// use; tests point the override at the built binary).
+pub(crate) fn resolve_exe(
+    backend: &str,
+    exe: &Option<PathBuf>,
+) -> Result<PathBuf, ExecError> {
+    match exe {
+        Some(p) => Ok(p.clone()),
+        None => std::env::current_exe().map_err(|e| {
+            ExecError::backend(backend, format!("cannot locate hplsim binary: {e}"))
+        }),
+    }
+}
+
+/// Kill one child process and reap it. Dropping a `Child` does not
+/// kill it, and an unreaped child blocked on a full (captured,
+/// undrained) pipe never exits — every out-of-process backend must go
+/// through this on its abort paths.
+pub(crate) fn kill_and_reap(child: &mut std::process::Child) {
+    let _ = child.kill();
+    let _ = child.wait();
+}
+
+/// Collect every `plan.todo` result out of a fingerprint-keyed cache —
+/// the shared tail of the out-of-process backends, whose children hand
+/// results back through the cache.
+pub(crate) fn collect_from_cache(
+    backend: &str,
+    cache: &Path,
+    campaign: &Campaign<'_>,
+    plan: &WorkPlan,
+) -> Result<Vec<(usize, HplResult)>, ExecError> {
+    let mut out = Vec::with_capacity(plan.todo.len());
+    for &idx in &plan.todo {
+        match cache_lookup_fp(cache, plan.fps[idx]) {
+            Some(r) => out.push((idx, r)),
+            None => {
+                return Err(ExecError::backend(
+                    backend,
+                    format!(
+                        "point {idx} ({}) missing from the result cache {} — was it \
+                         never persisted?",
+                        campaign.points()[idx].label,
+                        cache.display()
+                    ),
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The canonical per-point campaign table — the `campaign.csv` payload.
+/// Shared by `sweep`, `merge` and the backend-equivalence tests so that
+/// every execution path emits byte-identical reports for the same
+/// (points, results).
+pub fn campaign_table(points: &[SimPoint], results: &[HplResult]) -> Table {
+    let mut t = Table::new(
+        &format!("campaign — {} points", points.len()),
+        &["point", "label", "nb", "depth", "bcast", "swap", "rfact", "PxQ", "gflops",
+          "seconds"],
+    );
+    for (i, (p, r)) in points.iter().zip(results).enumerate() {
+        t.row(vec![
+            i.to_string(),
+            p.label.clone(),
+            p.cfg.nb.to_string(),
+            p.cfg.depth.to_string(),
+            p.cfg.bcast.name().into(),
+            p.cfg.swap.name().into(),
+            p.cfg.rfact.name().into(),
+            format!("{}x{}", p.cfg.p, p.cfg.q),
+            fnum(r.gflops),
+            fnum(r.seconds),
+        ]);
+    }
+    t
+}

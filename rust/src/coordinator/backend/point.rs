@@ -1,0 +1,325 @@
+//! The campaign data model: self-contained simulation points.
+//!
+//! A [`SimPoint`] is everything one worker needs to run one HPL
+//! simulation — configuration, platform payload, rank placement, seed —
+//! with no shared state. Points are plain data (`Send`), serialize
+//! exactly (see `coordinator::manifest`), and carry a 64-bit
+//! [`SimPoint::fingerprint`] that is their cache identity across every
+//! execution backend.
+
+use std::borrow::Cow;
+
+use crate::blas::DgemmModel;
+use crate::hpl::HplConfig;
+use crate::network::{NetModel, Topology};
+use crate::platform::{PlatformScenario, ScenarioError};
+use crate::stats::derive_seed;
+use crate::stats::json::Json;
+
+/// Version of the simulation model baked into cache fingerprints.
+/// Bump whenever a change alters simulated results, so stale cache
+/// entries are never reused. (2: scenario payloads — fingerprints now
+/// cover the canonical platform encoding.)
+pub const MODEL_VERSION: u64 = 2;
+
+/// Derive the seed of campaign point `index` from the campaign seed:
+/// `hash(campaign_seed, point_index)` through the in-tree RNG, so the
+/// seed depends only on the point's identity, never on which worker
+/// thread runs it or when.
+pub fn point_seed(campaign_seed: u64, index: u64) -> u64 {
+    derive_seed(campaign_seed, index)
+}
+
+/// The platform payload of a [`SimPoint`]: either fully materialized
+/// models (the original encoding — O(nodes) per point) or a generative
+/// [`PlatformScenario`] materialized in-worker from the point seed
+/// (O(1) per point — the preferred payload for variability campaigns).
+#[derive(Clone, Debug)]
+pub enum Platform {
+    Explicit { topo: Topology, net: NetModel, dgemm: DgemmModel },
+    /// Boxed: a scenario is a deep description and would otherwise
+    /// dominate the enum size every explicit point pays for.
+    Scenario(Box<PlatformScenario>),
+}
+
+/// A realized platform: the concrete models a simulation runs on —
+/// borrowed straight from an explicit payload, owned when a scenario
+/// materialized them.
+pub type RealizedPlatform<'a> =
+    (Cow<'a, Topology>, Cow<'a, NetModel>, Cow<'a, DgemmModel>);
+
+impl Platform {
+    /// Produce the concrete `(topology, network, dgemm)` triple for one
+    /// simulation. Explicit payloads borrow; scenarios materialize
+    /// (deterministically in `(scenario, seed)`).
+    pub fn realize(&self, seed: u64) -> Result<RealizedPlatform<'_>, ScenarioError> {
+        match self {
+            Platform::Explicit { topo, net, dgemm } => {
+                Ok((Cow::Borrowed(topo), Cow::Borrowed(net), Cow::Borrowed(dgemm)))
+            }
+            Platform::Scenario(s) => {
+                let (t, n, d) = s.materialize(seed)?;
+                Ok((Cow::Owned(t), Cow::Owned(n), Cow::Owned(d)))
+            }
+        }
+    }
+
+    /// Whether [`Platform::realize`] depends on the seed: explicit
+    /// payloads never do, scenarios do exactly when one of their
+    /// sampling stages is unpinned
+    /// ([`PlatformScenario::seed_sensitive`]). Seed-insensitive
+    /// platforms realize identically for every point, so the campaign
+    /// runtime shares one materialization across them.
+    pub fn seed_sensitive(&self) -> bool {
+        match self {
+            Platform::Explicit { .. } => false,
+            Platform::Scenario(s) => s.seed_sensitive(),
+        }
+    }
+
+    /// Canonical JSON encoding — the manifest payload *and* the
+    /// fingerprint domain: every field of every variant feeds the hash
+    /// through this encoding (f64s are emitted bit-exactly).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Platform::Explicit { topo, net, dgemm } => Json::obj(vec![
+                ("topo", topo.to_json()),
+                ("net", net.to_json()),
+                ("dgemm", dgemm.to_json()),
+            ]),
+            Platform::Scenario(s) => Json::obj(vec![("scenario", s.to_json())]),
+        }
+    }
+
+    /// Inverse of [`Platform::to_json`] (also accepts the flattened
+    /// form used by [`SimPoint::to_json`], where the platform keys sit
+    /// next to the point's own).
+    pub fn from_json(v: &Json) -> Option<Platform> {
+        if let Some(s) = v.get("scenario") {
+            return Some(Platform::Scenario(Box::new(PlatformScenario::from_json(s)?)));
+        }
+        Some(Platform::Explicit {
+            topo: Topology::from_json(v.get("topo")?)?,
+            net: NetModel::from_json(v.get("net")?)?,
+            dgemm: DgemmModel::from_json(v.get("dgemm")?)?,
+        })
+    }
+}
+
+/// A malformed campaign point: the structured error campaign execution
+/// (and manifest loading) reports instead of panicking deep inside the
+/// HPL driver.
+#[derive(Clone, Debug)]
+pub struct PointError {
+    pub index: usize,
+    pub label: String,
+    pub reason: String,
+}
+
+impl std::fmt::Display for PointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "point {} ({}): {}", self.index, self.label, self.reason)
+    }
+}
+
+impl std::error::Error for PointError {}
+
+/// One self-contained simulation point: everything a worker needs to
+/// run one HPL simulation, with no shared state. All fields are plain
+/// data (`Send`), so points can move freely across threads.
+#[derive(Clone, Debug)]
+pub struct SimPoint {
+    /// Human-readable label (experiment/row id); not part of the
+    /// fingerprint.
+    pub label: String,
+    pub cfg: HplConfig,
+    /// The platform: materialized models or a generative scenario.
+    pub platform: Platform,
+    /// MPI ranks per node.
+    pub rpn: usize,
+    /// Per-point seed (see [`point_seed`]).
+    pub seed: u64,
+}
+
+/// FNV-1a over a canonical encoding of a point's inputs.
+struct Fp(u64);
+
+impl Fp {
+    fn new() -> Fp {
+        Fp(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn push_byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+
+    fn push_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.push_byte(b);
+        }
+    }
+
+    fn push_usize(&mut self, v: usize) {
+        self.push_u64(v as u64);
+    }
+
+    fn push_str(&mut self, s: &str) {
+        self.push_u64(s.len() as u64);
+        for b in s.bytes() {
+            self.push_byte(b);
+        }
+    }
+}
+
+/// FNV-1a of a string — the hash the materialization memo keys
+/// canonical platform encodings by (same family as the point
+/// fingerprint).
+pub(crate) fn fnv1a_str(s: &str) -> u64 {
+    let mut h = Fp::new();
+    h.push_str(s);
+    h.0
+}
+
+impl SimPoint {
+    /// Build a point over materialized models (the original payload).
+    pub fn explicit(
+        label: impl Into<String>,
+        cfg: HplConfig,
+        topo: Topology,
+        net: NetModel,
+        dgemm: DgemmModel,
+        rpn: usize,
+        seed: u64,
+    ) -> SimPoint {
+        SimPoint {
+            label: label.into(),
+            cfg,
+            platform: Platform::Explicit { topo, net, dgemm },
+            rpn,
+            seed,
+        }
+    }
+
+    /// Build a point over a generative scenario (O(1) payload).
+    pub fn scenario(
+        label: impl Into<String>,
+        cfg: HplConfig,
+        scenario: PlatformScenario,
+        rpn: usize,
+        seed: u64,
+    ) -> SimPoint {
+        SimPoint {
+            label: label.into(),
+            cfg,
+            platform: Platform::Scenario(Box::new(scenario)),
+            rpn,
+            seed,
+        }
+    }
+
+    /// Check the point is simulable: valid HPL configuration, a
+    /// materializable platform, and node-count agreement between the
+    /// dgemm model, the topology and the rank placement. This is the
+    /// structured front door for errors that used to surface as
+    /// out-of-bounds panics deep inside the driver
+    /// (`DgemmModel::coef`).
+    ///
+    /// O(1): scenarios are checked statically
+    /// ([`PlatformScenario::check`]) without sampling or calibrating —
+    /// manifest loading and campaign start validate every point, so
+    /// this must not cost a materialization.
+    pub fn validate(&self) -> Result<(), String> {
+        self.cfg.validate()?;
+        if self.rpn == 0 {
+            return Err("rpn must be >= 1".into());
+        }
+        // (topology nodes, heterogeneous dgemm nodes — None when the
+        // model is homogeneous and fits any node count).
+        let (nodes, dgemm_nodes) = match &self.platform {
+            Platform::Explicit { topo, dgemm, .. } => {
+                if dgemm.nodes.is_empty() {
+                    return Err("dgemm model has no nodes".into());
+                }
+                let d = dgemm.nodes.len();
+                (topo.nodes(), (d != 1).then_some(d))
+            }
+            Platform::Scenario(s) => {
+                s.check().map_err(|e| e.to_string())?;
+                (s.nodes(), s.compute.nodes())
+            }
+        };
+        let nranks = self.cfg.nranks();
+        let nodes_used = nranks.div_ceil(self.rpn);
+        if nodes_used > nodes {
+            return Err(format!(
+                "{nranks} ranks at {} per node need {nodes_used} nodes but the \
+                 topology has {nodes}",
+                self.rpn
+            ));
+        }
+        if let Some(d) = dgemm_nodes {
+            if d < nodes_used {
+                return Err(format!(
+                    "heterogeneous dgemm model covers {d} node(s) but ranks run on \
+                     {nodes_used}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// 64-bit fingerprint of (config, seed, platform, model version):
+    /// the cache key. Two points with equal fingerprints simulate
+    /// identically. The platform part hashes the canonical JSON
+    /// encoding ([`Platform::to_json`], bit-exact f64s, sorted keys),
+    /// so *every* field of an explicit model or a scenario feeds the
+    /// hash — a scenario is fingerprinted by its O(1) description, not
+    /// by the O(nodes) models it materializes into.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fp::new();
+        h.push_u64(MODEL_VERSION);
+        // HPL configuration.
+        h.push_usize(self.cfg.n);
+        h.push_usize(self.cfg.nb);
+        h.push_usize(self.cfg.p);
+        h.push_usize(self.cfg.q);
+        h.push_usize(self.cfg.depth);
+        h.push_str(self.cfg.bcast.name());
+        h.push_str(self.cfg.swap.name());
+        h.push_usize(self.cfg.swap_threshold);
+        h.push_str(self.cfg.rfact.name());
+        h.push_usize(self.cfg.nbmin);
+        h.push_usize(self.rpn);
+        h.push_u64(self.seed);
+        // Platform (explicit models or scenario), canonically encoded.
+        h.push_str(&self.platform.to_json().to_string());
+        h.0
+    }
+
+    /// Serialize a self-contained point for an on-disk campaign manifest
+    /// (see `coordinator::manifest`). The encoding is exact: every f64
+    /// round-trips bit-for-bit and u64s (seeds) travel as decimal
+    /// strings, so the fingerprint is preserved.
+    pub fn to_json(&self) -> Json {
+        let mut m = match self.platform.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("Platform::to_json always returns an object"),
+        };
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("cfg".into(), self.cfg.to_json());
+        m.insert("rpn".into(), Json::Num(self.rpn as f64));
+        m.insert("seed".into(), Json::u64_str(self.seed));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`SimPoint::to_json`].
+    pub fn from_json(v: &Json) -> Option<SimPoint> {
+        Some(SimPoint {
+            label: v.get("label")?.as_str()?.to_string(),
+            cfg: HplConfig::from_json(v.get("cfg")?)?,
+            platform: Platform::from_json(v)?,
+            rpn: v.get("rpn")?.as_usize()?,
+            seed: v.get("seed")?.as_u64()?,
+        })
+    }
+}

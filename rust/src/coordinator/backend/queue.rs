@@ -1,0 +1,716 @@
+//! The file-queue execution backend: a directory work queue.
+//!
+//! The "server pulling shards off a queue" deployment from the roadmap,
+//! with nothing but a shared filesystem as the coordination substrate.
+//! A queue directory holds
+//!
+//! ```text
+//! queue/
+//!   queue.json      format, task count, lease duration (written last —
+//!                   its presence means the queue is fully initialized)
+//!   manifest.json   the whole campaign (the ordinary manifest format)
+//!   cache/          shared fingerprint-keyed result cache
+//!   todo/task-NNNN  unclaimed task markers
+//!   leases/task-NNNN   claimed tasks (mtime = owner's last heartbeat)
+//!   done/task-NNNN  completed tasks
+//! ```
+//!
+//! A *task* is one deterministic manifest partition
+//! (`fingerprint % tasks == index`, exactly like `hplsim shard`). Any
+//! number of independent `hplsim worker --queue DIR` processes — local
+//! or on other machines sharing the directory — claim tasks by the
+//! atomic rename `todo/x -> leases/x`, heartbeat the lease file while
+//! simulating, write results into `cache/`, and complete with
+//! `leases/x -> done/x`.
+//!
+//! **Crash recovery:** a worker that dies stops heartbeating; once its
+//! lease file's mtime is older than the queue's `lease_secs`, any
+//! worker (or the coordinating campaign) renames it back to `todo/`,
+//! and the task is re-executed. Because results are persisted under
+//! deterministic fingerprints, a *stale* worker that was merely slow —
+//! not dead — can finish concurrently without harm: both executions
+//! write byte-identical cache entries, and a lease holder that lost its
+//! lease simply skips completion.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::manifest::Manifest;
+use crate::hpl::HplResult;
+use crate::stats::json::Json;
+
+use super::cache::{cache_lookup_fp, copy_entry};
+use super::inprocess::InProcess;
+use super::{
+    collect_from_cache, kill_and_reap, resolve_exe, Campaign, ExecBackend, ExecError,
+    WorkPlan,
+};
+
+/// Format marker in `queue.json`.
+pub const QUEUE_FORMAT: &str = "hplsim-queue-v1";
+
+const POLL: Duration = Duration::from_millis(100);
+
+/// The shared cache of a queue directory (where workers persist
+/// results and [`FileQueue::collect`] reads them back).
+pub fn queue_cache_dir(dir: &Path) -> PathBuf {
+    dir.join("cache")
+}
+
+fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("manifest.json")
+}
+
+fn meta_path(dir: &Path) -> PathBuf {
+    dir.join("queue.json")
+}
+
+fn task_name(t: u64) -> String {
+    format!("task-{t:04}")
+}
+
+fn parse_task(name: &str) -> Option<u64> {
+    name.strip_prefix("task-")?.parse().ok()
+}
+
+#[derive(Clone, Copy, Debug)]
+struct QueueMeta {
+    tasks: u64,
+    lease_secs: f64,
+}
+
+fn read_meta(dir: &Path) -> Result<QueueMeta, String> {
+    let path = meta_path(dir);
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let v = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    if v.get("format").and_then(Json::as_str) != Some(QUEUE_FORMAT) {
+        return Err(format!(
+            "{}: not a work queue (expected format \"{QUEUE_FORMAT}\")",
+            path.display()
+        ));
+    }
+    let tasks = v
+        .get("tasks")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| format!("{}: missing task count", path.display()))?;
+    let lease_secs = v
+        .get("lease_secs")
+        .and_then(Json::as_f64)
+        .filter(|s| *s > 0.0)
+        .ok_or_else(|| format!("{}: missing lease_secs", path.display()))?;
+    Ok(QueueMeta { tasks, lease_secs })
+}
+
+/// Names currently present in one of the marker directories.
+fn list_markers(dir: &Path) -> Vec<String> {
+    let mut names: Vec<String> = std::fs::read_dir(dir)
+        .map(|entries| {
+            entries
+                .flatten()
+                .filter_map(|e| {
+                    let n = e.file_name().to_string_lossy().into_owned();
+                    parse_task(&n).map(|_| n)
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    names.sort();
+    names
+}
+
+fn clear_markers(dir: &Path) {
+    for name in list_markers(dir) {
+        let _ = std::fs::remove_file(dir.join(name));
+    }
+}
+
+/// Initialize (or re-initialize) a queue directory for a campaign:
+/// write the manifest, reset every task to `todo/`, and publish the
+/// queue metadata. The shared `cache/` survives re-initialization, so a
+/// re-run of the same campaign replays instead of recomputing.
+/// `queue.json` is removed first and written (atomically) last — a
+/// worker never observes a half-built queue.
+pub fn init_queue(
+    dir: &Path,
+    points: &[super::SimPoint],
+    tasks: u64,
+    lease_secs: f64,
+) -> Result<(), String> {
+    if tasks == 0 {
+        return Err("queue needs tasks >= 1".into());
+    }
+    if !(lease_secs > 0.0 && lease_secs.is_finite()) {
+        return Err("queue needs lease_secs > 0".into());
+    }
+    let _ = std::fs::remove_file(meta_path(dir));
+    for sub in ["cache", "todo", "leases", "done"] {
+        std::fs::create_dir_all(dir.join(sub))
+            .map_err(|e| format!("cannot create {}/{sub}: {e}", dir.display()))?;
+    }
+    for sub in ["todo", "leases", "done"] {
+        clear_markers(&dir.join(sub));
+    }
+    Manifest::new(points.to_vec())
+        .save(&manifest_path(dir))
+        .map_err(|e| format!("cannot write {}: {e}", manifest_path(dir).display()))?;
+    for t in 0..tasks {
+        let path = dir.join("todo").join(task_name(t));
+        std::fs::write(&path, format!("{t}"))
+            .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+    }
+    let meta = Json::obj(vec![
+        ("format", Json::Str(QUEUE_FORMAT.into())),
+        ("tasks", Json::Num(tasks as f64)),
+        ("lease_secs", Json::Num(lease_secs)),
+    ]);
+    let tmp = dir.join(format!("queue.json.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, meta.to_string())
+        .and_then(|()| std::fs::rename(&tmp, meta_path(dir)))
+        .map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            format!("cannot write {}: {e}", meta_path(dir).display())
+        })
+}
+
+/// "Now" as the *queue's filesystem* sees it: write a scratch probe
+/// file and read back the mtime the file server stamped on it. Lease
+/// mtimes are stamped by that same server on every heartbeat, so
+/// comparing against the probe is immune to clock skew between the
+/// machines sharing the queue (a reclaimer's local clock running ahead
+/// of the file server must never make live leases look expired).
+fn fs_now(dir: &Path) -> Option<std::time::SystemTime> {
+    use std::hash::{BuildHasher, Hasher};
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::OnceLock;
+    // Pid alone is not unique across the *machines* sharing the queue
+    // directory: colliding probes would race each other's remove and
+    // fall back to the skew-unsafe local clock. A per-process random
+    // token (plus a sequence number) makes the probe private.
+    static TOKEN: OnceLock<u64> = OnceLock::new();
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let token = TOKEN.get_or_init(|| {
+        std::collections::hash_map::RandomState::new().build_hasher().finish()
+    });
+    let probe = dir.join(format!(
+        ".now.{}.{token:016x}.{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::write(&probe, b"t").ok()?;
+    let now = std::fs::metadata(&probe).and_then(|m| m.modified()).ok();
+    let _ = std::fs::remove_file(&probe);
+    now
+}
+
+/// Move every expired lease (mtime older than `lease_secs`) back to
+/// `todo/`. Safe to run from anywhere — concurrent reclaimers race on
+/// the rename and exactly one wins. Returns the reclaimed task names.
+fn reclaim_expired(dir: &Path, lease_secs: f64) -> Vec<String> {
+    let leases = dir.join("leases");
+    let names = list_markers(&leases);
+    if names.is_empty() {
+        return Vec::new();
+    }
+    // Probe only when there is something to judge (one tiny write per
+    // poll with outstanding leases). If the probe fails, fall back to
+    // the local clock — correct on a single machine, best-effort
+    // otherwise.
+    let now = fs_now(dir).unwrap_or_else(std::time::SystemTime::now);
+    let mut reclaimed = Vec::new();
+    for name in names {
+        let path = leases.join(&name);
+        let expired = std::fs::metadata(&path)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| now.duration_since(t).ok())
+            .is_some_and(|age| age.as_secs_f64() > lease_secs);
+        if expired && std::fs::rename(&path, dir.join("todo").join(&name)).is_ok() {
+            reclaimed.push(name);
+        }
+    }
+    reclaimed
+}
+
+/// Try to claim one task: atomic rename `todo/x -> leases/x`. Claim
+/// order is rotated per process so concurrent workers spread out.
+///
+/// The marker's mtime is freshened *before* the rename: rename
+/// preserves mtime, and a todo marker can be arbitrarily old (from
+/// `init_queue`, or requeued with its expired stamp), so claiming it
+/// as-is would create a lease that is already "expired" and instantly
+/// reclaimable. The stamp opens the existing file only — creating it
+/// would resurrect a marker another worker just claimed away.
+fn try_claim(dir: &Path, rotation: usize) -> Option<u64> {
+    use std::io::Write;
+    let todo = list_markers(&dir.join("todo"));
+    if todo.is_empty() {
+        return None;
+    }
+    let n = todo.len();
+    for off in 0..n {
+        let name = &todo[(rotation + off) % n];
+        let todo_path = dir.join("todo").join(name);
+        let freshened = std::fs::OpenOptions::new()
+            .write(true)
+            .truncate(false)
+            .open(&todo_path)
+            .and_then(|mut f| f.write_all(b"c"));
+        if freshened.is_err() {
+            continue; // already claimed by a sibling
+        }
+        let lease = dir.join("leases").join(name);
+        if std::fs::rename(&todo_path, &lease).is_ok() {
+            let t = parse_task(name).expect("listed markers parse");
+            // Claim record (content is diagnostic; the mtime is the
+            // first heartbeat).
+            let _ = std::fs::write(
+                &lease,
+                format!("{{\"task\":{t},\"pid\":{}}}", std::process::id()),
+            );
+            return Some(t);
+        }
+    }
+    None
+}
+
+/// Keep a claimed lease alive from a background thread: rewrite the
+/// lease file (bumping its mtime) every `lease_secs / 3`. The write
+/// opens the *existing* file only — if the lease was reclaimed from
+/// under us (we were presumed dead), the open fails, `lost` is raised,
+/// and the owner skips completion instead of fighting the new holder.
+fn spawn_heartbeat(
+    lease: PathBuf,
+    lease_secs: f64,
+    stop: Arc<AtomicBool>,
+    lost: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        use std::io::Write;
+        let interval = Duration::from_secs_f64((lease_secs / 3.0).max(0.05));
+        let slice = Duration::from_millis(20);
+        loop {
+            let mut waited = Duration::ZERO;
+            while waited < interval {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(slice);
+                waited += slice;
+            }
+            match std::fs::OpenOptions::new().write(true).truncate(false).open(&lease) {
+                Ok(mut f) => {
+                    // Any write bumps mtime; content is only diagnostic.
+                    let _ = f.write_all(b" ");
+                }
+                Err(_) => {
+                    lost.store(true, Ordering::Relaxed);
+                    return;
+                }
+            }
+        }
+    })
+}
+
+/// Options of [`run_worker`].
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// Pool threads per task (0 = `$HPLSIM_THREADS` or available
+    /// cores — the standard resolution, so deployments pin worker
+    /// parallelism with the environment variable alone).
+    pub threads: usize,
+    /// How long to wait for the queue to be initialized before giving
+    /// up (lets workers start before the coordinating campaign).
+    pub wait_secs: f64,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> WorkerOptions {
+        WorkerOptions { threads: 0, wait_secs: 30.0 }
+    }
+}
+
+/// What one worker process did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerSummary {
+    /// Tasks this worker completed (claimed, executed, moved to done).
+    pub tasks: usize,
+    /// Campaign points across those tasks.
+    pub points: usize,
+    /// Points actually simulated (the rest replayed from the cache).
+    pub computed: usize,
+}
+
+/// Drain a work queue: claim tasks, execute each through the in-process
+/// pool into the shared cache, reclaim expired leases of crashed
+/// siblings, and return once every task is done. This is the body of
+/// `hplsim worker --queue DIR`.
+pub fn run_worker(dir: &Path, opts: &WorkerOptions) -> Result<WorkerSummary, String> {
+    // Wait for the queue to exist (the coordinator may still be
+    // initializing it).
+    let deadline = Instant::now() + Duration::from_secs_f64(opts.wait_secs.max(0.0));
+    let meta = loop {
+        match read_meta(dir) {
+            Ok(m) if manifest_path(dir).exists() => break m,
+            _ if Instant::now() >= deadline => {
+                return Err(format!(
+                    "no initialized queue at {} after {:.0}s",
+                    dir.display(),
+                    opts.wait_secs
+                ));
+            }
+            _ => std::thread::sleep(POLL),
+        }
+    };
+    let manifest = Manifest::load(&manifest_path(dir))?;
+    let rotation = std::process::id() as usize;
+    let cache = queue_cache_dir(dir);
+    let mut summary = WorkerSummary::default();
+    // Consecutive observations of "nothing anywhere but not all done".
+    // A single one is routinely a benign race: a sibling's claim
+    // (todo -> leases) or requeue (leases -> todo) between our two
+    // directory listings hides the moving marker from both. Only a
+    // *persistent* hole means the queue really lost a task.
+    let mut inconsistent = 0u32;
+
+    loop {
+        if let Some(t) = try_claim(dir, rotation) {
+            let (points, computed) =
+                execute_task(dir, &manifest, &meta, t, opts.threads, &cache)?;
+            if let Some(points) = points {
+                summary.tasks += 1;
+                summary.points += points;
+                summary.computed += computed;
+            }
+            inconsistent = 0;
+            continue;
+        }
+        if !reclaim_expired(dir, meta.lease_secs).is_empty() {
+            inconsistent = 0;
+            continue; // a crashed sibling's task is claimable again
+        }
+        let todo_n = list_markers(&dir.join("todo")).len();
+        let lease_n = list_markers(&dir.join("leases")).len();
+        if todo_n == 0 && lease_n == 0 {
+            let done_n = list_markers(&dir.join("done")).len();
+            if done_n as u64 >= meta.tasks {
+                return Ok(summary);
+            }
+            inconsistent += 1;
+            if inconsistent >= 10 {
+                return Err(format!(
+                    "queue {} is inconsistent: no todo/leased tasks but only \
+                     {done_n}/{} done",
+                    dir.display(),
+                    meta.tasks
+                ));
+            }
+        } else {
+            inconsistent = 0;
+        }
+        // Unexpired leases are owned by live siblings — wait for them
+        // (we may still need to reclaim if one dies).
+        std::thread::sleep(POLL);
+    }
+}
+
+/// Execute one claimed task. Returns `(Some(points), computed)` when
+/// this worker completed the task, `(None, 0)` when the lease was lost
+/// to a reclaimer mid-run (the results are in the cache either way).
+fn execute_task(
+    dir: &Path,
+    manifest: &Manifest,
+    meta: &QueueMeta,
+    t: u64,
+    threads: usize,
+    cache: &Path,
+) -> Result<(Option<usize>, usize), String> {
+    let lease = dir.join("leases").join(task_name(t));
+    let stop = Arc::new(AtomicBool::new(false));
+    let lost = Arc::new(AtomicBool::new(false));
+    let hb = spawn_heartbeat(lease.clone(), meta.lease_secs, stop.clone(), lost.clone());
+
+    let points = manifest.shard_points(meta.tasks, t);
+    // Hash once up front: the persistence check below reuses these
+    // instead of re-serializing every platform a second time.
+    let fps: Vec<u64> = points.iter().map(|p| p.fingerprint()).collect();
+    let result = Campaign::new(&points)
+        .threads(threads)
+        .cache(Some(cache.to_path_buf()))
+        .run(&InProcess::new());
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+
+    let report = match result {
+        Ok(r) => r,
+        Err(e) => {
+            // Give the task back before dying: a transient failure on
+            // this box must not strand the lease until expiry.
+            let _ = std::fs::rename(&lease, dir.join("todo").join(task_name(t)));
+            return Err(format!("task {t}: {e}"));
+        }
+    };
+    // The cache *is* the output channel: verify every task point
+    // actually persisted before declaring the task done.
+    for (p, &fp) in points.iter().zip(&fps) {
+        if cache_lookup_fp(cache, fp).is_none() {
+            let _ = std::fs::rename(&lease, dir.join("todo").join(task_name(t)));
+            return Err(format!(
+                "task {t}: result of point '{}' did not persist in {}",
+                p.label,
+                cache.display()
+            ));
+        }
+    }
+    if lost.load(Ordering::Relaxed) {
+        // We were presumed dead and the task reassigned; the new holder
+        // owns completion. Our cache writes make its run a replay.
+        return Ok((None, 0));
+    }
+    // Complete: lease -> done. A failed rename means the lease was
+    // stolen between the last heartbeat and now — same story as above.
+    if std::fs::rename(&lease, dir.join("done").join(task_name(t))).is_err() {
+        return Ok((None, 0));
+    }
+    Ok((Some(points.len()), report.computed))
+}
+
+/// The file-queue campaign backend: initializes the queue from the
+/// campaign, optionally spawns local `hplsim worker` processes, waits
+/// for every task to complete (reclaiming expired leases all along),
+/// and collects the results from the shared cache.
+pub struct FileQueue {
+    /// The queue directory (shared filesystem for multi-machine use).
+    pub dir: PathBuf,
+    /// Task count — the lease granularity. More tasks = finer-grained
+    /// recovery and better balance across heterogeneous workers.
+    pub tasks: u64,
+    /// Local worker processes to spawn (0 = rely entirely on external
+    /// `hplsim worker --queue DIR` processes).
+    pub workers: usize,
+    /// Lease duration: a worker silent for longer is presumed dead and
+    /// its task is requeued.
+    pub lease_secs: f64,
+    /// Give up after this many seconds without completion (0 = wait
+    /// forever — the external-worker deployment mode).
+    pub timeout_secs: f64,
+    /// The `hplsim` binary for spawned workers; `None` = current
+    /// executable.
+    pub exe: Option<PathBuf>,
+}
+
+impl FileQueue {
+    pub fn new(dir: impl Into<PathBuf>, tasks: u64, workers: usize) -> FileQueue {
+        FileQueue {
+            dir: dir.into(),
+            tasks,
+            workers,
+            lease_secs: 30.0,
+            timeout_secs: 0.0,
+            exe: None,
+        }
+    }
+
+    fn spawn_worker(&self, threads: usize) -> Result<Child, ExecError> {
+        let exe = resolve_exe("queue", &self.exe)?;
+        Command::new(&exe)
+            .arg("worker")
+            .arg("--queue")
+            .arg(&self.dir)
+            .arg("--threads")
+            .arg(threads.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .map_err(|e| {
+                ExecError::backend(
+                    "queue",
+                    format!("cannot spawn worker {}: {e}", exe.display()),
+                )
+            })
+    }
+}
+
+impl ExecBackend for FileQueue {
+    fn name(&self) -> &str {
+        "queue"
+    }
+
+    fn prepare(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
+        if plan.todo.is_empty() {
+            return Ok(()); // pure cache replay — no queue needed
+        }
+        if campaign.cache_dir().is_none() {
+            // Uncached campaign: the queue cache is only this run's
+            // result channel. A leftover one from a previous run would
+            // silently turn the campaign into a cache replay.
+            let _ = std::fs::remove_dir_all(queue_cache_dir(&self.dir));
+        }
+        // Seed the queue cache with what the campaign cache already has
+        // *before* the queue is published: workers may be polling the
+        // directory already (the start-workers-first deployment), and
+        // the instant `queue.json` lands they claim tasks — cached
+        // points must be replays by then, not recomputations.
+        if let Some(camp_cache) = campaign.cache_dir() {
+            let qcache = queue_cache_dir(&self.dir);
+            std::fs::create_dir_all(&qcache).map_err(|e| {
+                ExecError::backend(
+                    "queue",
+                    format!("cannot create {}: {e}", qcache.display()),
+                )
+            })?;
+            let todo: std::collections::HashSet<u64> =
+                plan.todo.iter().map(|&i| plan.fps[i]).collect();
+            let mut seeded = std::collections::HashSet::new();
+            for &fp in &plan.fps {
+                if !todo.contains(&fp) && seeded.insert(fp) {
+                    copy_entry(camp_cache, &qcache, fp);
+                }
+            }
+        }
+        init_queue(&self.dir, campaign.points(), self.tasks, self.lease_secs)
+            .map_err(|e| ExecError::backend("queue", e))
+    }
+
+    fn execute(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
+        if plan.todo.is_empty() {
+            return Ok(());
+        }
+        let mut children: Vec<(u32, Option<Child>)> = Vec::new();
+        // Split the campaign's resolved thread budget among the local
+        // workers, exactly like the subprocess backend does across its
+        // shard children; external workers pin their own parallelism
+        // (flag or $HPLSIM_THREADS).
+        let per_worker = (plan.threads / self.workers.max(1)).max(1);
+        for _ in 0..self.workers {
+            let child = self.spawn_worker(per_worker)?;
+            campaign.message(
+                "queue",
+                format!(
+                    "spawned local worker (pid {}, {per_worker} threads)",
+                    child.id()
+                ),
+            );
+            children.push((child.id(), Some(child)));
+        }
+        if self.workers == 0 {
+            campaign.message(
+                "queue",
+                format!(
+                    "waiting for external workers — run `hplsim worker --queue {}`",
+                    self.dir.display()
+                ),
+            );
+        }
+        let kill_all = |children: &mut Vec<(u32, Option<Child>)>| {
+            for (_, c) in children.iter_mut() {
+                if let Some(c) = c.as_mut() {
+                    kill_and_reap(c);
+                }
+            }
+        };
+
+        let t0 = Instant::now();
+        let mut last_done = 0usize;
+        // Failure output of every local worker that has died, kept for
+        // the whole run: a worker that fails early must still be named
+        // in the final error (or at least in a progress message) even
+        // when its siblings keep the campaign going for a while.
+        let mut failures: Vec<String> = Vec::new();
+        loop {
+            for name in reclaim_expired(&self.dir, self.lease_secs) {
+                campaign.message("queue", format!("lease of {name} expired — requeued"));
+            }
+            let done = list_markers(&self.dir.join("done")).len();
+            if done != last_done {
+                campaign.message("queue", format!("{done}/{} tasks done", self.tasks));
+                last_done = done;
+            }
+            if done as u64 >= self.tasks {
+                break;
+            }
+            // Liveness of the locally spawned workers.
+            let mut alive = self.workers == 0;
+            for (pid, slot) in children.iter_mut() {
+                let Some(child) = slot.as_mut() else { continue };
+                match child.try_wait() {
+                    Ok(None) => alive = true,
+                    Ok(Some(status)) => {
+                        let out = slot.take().unwrap().wait_with_output().ok();
+                        if !status.success() {
+                            let tail = out
+                                .map(|o| String::from_utf8_lossy(&o.stderr).trim().to_string())
+                                .unwrap_or_default();
+                            let what = format!("worker {pid}: {status} — {tail}");
+                            campaign.message("queue", format!("local {what}"));
+                            failures.push(what);
+                        }
+                    }
+                    Err(_) => {}
+                }
+            }
+            if !alive && list_markers(&self.dir.join("done")).len() < self.tasks as usize {
+                kill_all(&mut children);
+                return Err(ExecError::backend(
+                    "queue",
+                    format!(
+                        "all {} local worker(s) exited with tasks remaining: {}",
+                        self.workers,
+                        if failures.is_empty() {
+                            "no failure output".to_string()
+                        } else {
+                            failures.join(" ; ")
+                        }
+                    ),
+                ));
+            }
+            if self.timeout_secs > 0.0 && t0.elapsed().as_secs_f64() > self.timeout_secs {
+                kill_all(&mut children);
+                return Err(ExecError::backend(
+                    "queue",
+                    format!(
+                        "queue not drained after {:.0}s ({last_done}/{} tasks done)",
+                        self.timeout_secs, self.tasks
+                    ),
+                ));
+            }
+            std::thread::sleep(POLL);
+        }
+        // Every task is done — the spawned workers observe the drained
+        // queue and exit on their own.
+        for (pid, slot) in children.iter_mut() {
+            if let Some(mut child) = slot.take() {
+                if let Ok(out) = child.wait_with_output() {
+                    if !out.status.success() {
+                        campaign.message(
+                            "queue",
+                            format!("worker {pid} exited with {} after completion", out.status),
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn collect(
+        &self,
+        campaign: &Campaign<'_>,
+        plan: &WorkPlan,
+    ) -> Result<Vec<(usize, HplResult)>, ExecError> {
+        let qcache = queue_cache_dir(&self.dir);
+        let out = collect_from_cache("queue", &qcache, campaign, plan)?;
+        // Results flow back into the campaign's own cache, so a queue
+        // run leaves the same artifacts behind as any other backend.
+        if let Some(camp_cache) = campaign.cache_dir() {
+            for &(idx, _) in &out {
+                copy_entry(&qcache, camp_cache, plan.fps[idx]);
+            }
+        }
+        Ok(out)
+    }
+}

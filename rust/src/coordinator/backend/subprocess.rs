@@ -1,0 +1,218 @@
+//! The subprocess execution backend: `hplsim shard` children.
+//!
+//! The PR 2 shard/merge machinery as a library path: `prepare` exports
+//! the campaign as an on-disk manifest, `execute` spawns one
+//! `hplsim shard --shards K --shard-index i` child per shard — all
+//! writing into one shared fingerprint-keyed cache — and `collect`
+//! reads the results back out of that cache. Process isolation means a
+//! crashing simulation cannot take the coordinator down, and the
+//! children are exactly the binaries a multi-machine deployment runs,
+//! so this backend doubles as an end-to-end rehearsal of distributed
+//! execution on one box.
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use crate::coordinator::manifest::Manifest;
+use crate::hpl::HplResult;
+
+use super::{
+    collect_from_cache, kill_and_reap, resolve_exe, Campaign, ExecBackend, ExecError,
+    WorkPlan,
+};
+
+/// Execution via `hplsim shard` child processes over an exported
+/// manifest (see module docs).
+pub struct Subprocess {
+    /// Child processes; the manifest is partitioned
+    /// `fingerprint % shards` exactly as a multi-machine run would be.
+    pub shards: u64,
+    /// Worker threads per child; 0 = split the campaign's resolved
+    /// thread budget evenly (at least 1 each).
+    pub child_threads: usize,
+    /// Scratch directory: holds the exported manifest, and the shared
+    /// cache when the campaign has none of its own.
+    pub workdir: PathBuf,
+    /// The `hplsim` binary to spawn; `None` = the current executable
+    /// (correct for CLI use; tests point it at the built binary).
+    pub exe: Option<PathBuf>,
+}
+
+impl Subprocess {
+    pub fn new(shards: u64, workdir: impl Into<PathBuf>) -> Subprocess {
+        Subprocess { shards, child_threads: 0, workdir: workdir.into(), exe: None }
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.workdir.join("manifest.json")
+    }
+
+    /// The cache the children write into and `collect` reads from: the
+    /// campaign's own cache when it has one (results then persist like
+    /// any cached campaign), otherwise a scratch cache in the workdir.
+    fn effective_cache(&self, campaign: &Campaign<'_>) -> PathBuf {
+        campaign
+            .cache_dir()
+            .map(|d| d.to_path_buf())
+            .unwrap_or_else(|| self.workdir.join("cache"))
+    }
+}
+
+/// Last portion of a child's stderr, for error reports.
+fn stderr_tail(raw: &[u8], max_lines: usize) -> String {
+    let text = String::from_utf8_lossy(raw);
+    let lines: Vec<&str> = text.lines().collect();
+    let start = lines.len().saturating_sub(max_lines);
+    lines[start..].join(" | ")
+}
+
+impl ExecBackend for Subprocess {
+    fn name(&self) -> &str {
+        "subprocess"
+    }
+
+    fn prepare(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
+        if self.shards == 0 {
+            return Err(ExecError::backend("subprocess", "shards must be >= 1"));
+        }
+        if plan.todo.is_empty() {
+            return Ok(()); // pure cache replay — nothing to spawn
+        }
+        let cache = self.effective_cache(campaign);
+        if campaign.cache_dir().is_none() {
+            // The campaign runs uncached: the workdir scratch cache is
+            // only the children's result channel for *this* run, and a
+            // leftover one from a previous run would silently turn the
+            // whole campaign into a cache replay.
+            let _ = std::fs::remove_dir_all(&cache);
+        }
+        std::fs::create_dir_all(&self.workdir)
+            .and_then(|()| std::fs::create_dir_all(&cache))
+            .map_err(|e| {
+                ExecError::backend(
+                    "subprocess",
+                    format!("cannot create workdir {}: {e}", self.workdir.display()),
+                )
+            })?;
+        // The children re-derive everything from the manifest: points,
+        // fingerprints, the shard partition. Cached points replay from
+        // the shared cache inside the child, so exporting the full
+        // campaign keeps the file identical to what a multi-machine
+        // deployment ships.
+        let manifest = Manifest::new(campaign.points().to_vec());
+        manifest.save(&self.manifest_path()).map_err(|e| {
+            ExecError::backend(
+                "subprocess",
+                format!("cannot write manifest {}: {e}", self.manifest_path().display()),
+            )
+        })?;
+        Ok(())
+    }
+
+    fn execute(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
+        if plan.todo.is_empty() {
+            return Ok(());
+        }
+        let exe = resolve_exe("subprocess", &self.exe)?;
+        let cache = self.effective_cache(campaign);
+        let per_child = if self.child_threads > 0 {
+            self.child_threads
+        } else {
+            (plan.threads / self.shards.max(1) as usize).max(1)
+        };
+        let mut children: Vec<(u64, std::process::Child)> = Vec::new();
+        // A failed spawn or a failed shard must not orphan the rest
+        // (see `kill_and_reap`).
+        let kill_remaining = |children: &mut Vec<(u64, std::process::Child)>| {
+            for (_, c) in children.iter_mut() {
+                kill_and_reap(c);
+            }
+        };
+        for index in 0..self.shards {
+            let spawned = Command::new(&exe)
+                .arg("shard")
+                .arg("--manifest")
+                .arg(self.manifest_path())
+                .arg("--shards")
+                .arg(self.shards.to_string())
+                .arg("--shard-index")
+                .arg(index.to_string())
+                .arg("--threads")
+                .arg(per_child.to_string())
+                .arg("--cache")
+                .arg(&cache)
+                // Captured pipes are drained only at wait time; steady
+                // per-point progress would fill them and stall the
+                // shard, so children run quiet.
+                .arg("--quiet")
+                .stdin(Stdio::null())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped())
+                .spawn();
+            let child = match spawned {
+                Ok(c) => c,
+                Err(e) => {
+                    kill_remaining(&mut children);
+                    return Err(ExecError::backend(
+                        "subprocess",
+                        format!("cannot spawn {} shard {index}: {e}", exe.display()),
+                    ));
+                }
+            };
+            campaign.message(
+                "subprocess",
+                format!(
+                    "spawned shard {index}/{} (pid {}, {per_child} threads)",
+                    self.shards,
+                    child.id()
+                ),
+            );
+            children.push((index, child));
+        }
+        let mut first_failure: Option<ExecError> = None;
+        while let Some((index, child)) = children.pop() {
+            if first_failure.is_some() {
+                // A shard already failed — the campaign is lost either
+                // way, so stop the rest instead of letting them run on.
+                let mut rest = vec![(index, child)];
+                kill_remaining(&mut rest);
+                continue;
+            }
+            match child.wait_with_output() {
+                Ok(out) if out.status.success() => {
+                    campaign
+                        .message("subprocess", format!("shard {index}/{} done", self.shards));
+                }
+                Ok(out) => {
+                    first_failure = Some(ExecError::backend(
+                        "subprocess",
+                        format!(
+                            "shard {index}/{} exited with {} — {}",
+                            self.shards,
+                            out.status,
+                            stderr_tail(&out.stderr, 4)
+                        ),
+                    ));
+                }
+                Err(e) => {
+                    first_failure = Some(ExecError::backend(
+                        "subprocess",
+                        format!("shard {index} wait failed: {e}"),
+                    ));
+                }
+            }
+        }
+        match first_failure {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn collect(
+        &self,
+        campaign: &Campaign<'_>,
+        plan: &WorkPlan,
+    ) -> Result<Vec<(usize, HplResult)>, ExecError> {
+        collect_from_cache("subprocess", &self.effective_cache(campaign), campaign, plan)
+    }
+}

@@ -4,10 +4,14 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
+use crate::coordinator::backend::{
+    campaign_table, run_worker, Campaign, ExecError, FileQueue, InProcess, Platform,
+    SimPoint, Subprocess, WorkerOptions,
+};
 use crate::coordinator::experiments::{self, ExpCtx, Scale};
 use crate::coordinator::manifest::Manifest;
-use crate::coordinator::sweep::{self, run_campaign, Platform, SimPoint, SweepOptions};
-use crate::coordinator::table::{fnum, Table};
+use crate::coordinator::sweep::{self, run_campaign, SweepOptions};
+use crate::coordinator::table::Table;
 use crate::hpl::{Bcast, HplConfig, HplResult, Rfact, SwapAlg};
 use crate::platform::{
     calibrate_network, CalProcedure, GroundTruth, PlatformScenario, Scenario,
@@ -32,10 +36,13 @@ USAGE:
                [--n N] [--scenario normal|cooling|multimodal]
                [--platform FILE] [--out DIR] [--cache DIR] [--no-cache]
                [--manifest FILE] [--export-manifest FILE] [--plan-only]
+               [--backend inproc|subprocess|queue] [--shards S]
+               [--queue-dir DIR] [--queue-workers W] [--queue-tasks K]
+               [--lease-secs S]
       Random HPL parameter-space campaign (NB, depth, bcast, swap, rfact,
       geometry) on the calibrated surrogate: K points (default 100) with
-      per-point seeds derived from the campaign seed, executed by the
-      work-stealing sweep runtime with a resumable on-disk cache.
+      per-point seeds derived from the campaign seed, executed by a
+      pluggable campaign backend with a resumable on-disk cache.
       --platform runs the campaign on a declarative platform-scenario
       JSON (generative node variability, degraded links, ...; see
       README "Platform scenarios") instead of the calibrated surrogate —
@@ -43,13 +50,28 @@ USAGE:
       worker from the point seed. --manifest executes a previously
       exported campaign manifest instead of sampling; --export-manifest
       writes the campaign as a manifest (with --plan-only: write it and
-      exit without simulating).
+      exit without simulating). --backend picks the execution substrate
+      (identical results on all three; see README "Execution backends"):
+        inproc      in-process work-stealing pool (default)
+        subprocess  --shards S `hplsim shard` child processes (default 2)
+        queue       a file work queue under --queue-dir, drained by
+                    --queue-workers local workers (default 2; 0 = only
+                    external `hplsim worker` processes) with --queue-tasks
+                    leases expiring after --lease-secs
+  hplsim worker --queue DIR [--threads T] [--wait-secs S]
+      Pull shard leases off a file work queue (created by
+      `sweep --backend queue`) until it is drained: claim a task,
+      simulate its points into the shared queue cache, heartbeat the
+      lease, requeue expired leases of crashed workers. Run any number,
+      on any machines sharing DIR.
   hplsim shard --manifest FILE --shards S --shard-index I --cache DIR
-               [--threads T]
+               [--threads T] [--quiet]
       Execute one deterministic partition of a campaign manifest — the
       points with fingerprint % S == I — writing results into the
       fingerprint-keyed cache DIR. Run one shard per machine, then
-      combine the caches with `hplsim merge`.
+      combine the caches with `hplsim merge`. --quiet suppresses the
+      per-point progress lines (used by `sweep --backend subprocess`,
+      whose children write into captured pipes).
   hplsim merge --manifest FILE [--out DIR] [--out-cache DIR] CACHE...
       Combine shard caches: look every manifest point up in the CACHE
       directories and emit the same campaign report (campaign.csv) a
@@ -160,6 +182,10 @@ fn cmd_exp(positional: &[String], opts: &HashMap<String, String>) -> i32 {
     // would be pure startup waste.
     let arts = if export.is_some() { None } else { load_artifacts(opts) };
     let mut ctx = ExpCtx::new(arts, scale, seed);
+    // Interactive runs report campaign progress on stderr; plan-only
+    // runs (and library/test use, where the flag is never set) stay
+    // silent.
+    ctx.progress = export.is_none();
     ctx.threads = num(opts, "threads", 0usize);
     if let Some(dir) = opts.get("cache") {
         ctx.cache_dir = Some(dir.into());
@@ -298,33 +324,10 @@ fn sample_sweep_points(
     points
 }
 
-/// Per-point campaign table. Shared by `sweep` and `merge` so that a
-/// sharded-and-merged campaign emits a `campaign.csv` byte-identical to
-/// the one of a single-machine run over the same manifest.
-fn campaign_table(points: &[SimPoint], results: &[HplResult]) -> Table {
-    let mut t = Table::new(
-        &format!("campaign — {} points", points.len()),
-        &["point", "label", "nb", "depth", "bcast", "swap", "rfact", "PxQ", "gflops",
-          "seconds"],
-    );
-    for (i, (p, r)) in points.iter().zip(results).enumerate() {
-        t.row(vec![
-            i.to_string(),
-            p.label.clone(),
-            p.cfg.nb.to_string(),
-            p.cfg.depth.to_string(),
-            p.cfg.bcast.name().into(),
-            p.cfg.swap.name().into(),
-            p.cfg.rfact.name().into(),
-            format!("{}x{}", p.cfg.p, p.cfg.q),
-            fnum(r.gflops),
-            fnum(r.seconds),
-        ]);
-    }
-    t
-}
-
-/// Write `campaign.csv` under `out` and print the top-10 table. Returns
+/// Write `campaign.csv` under `out` and print the top-10 table. The
+/// per-point table itself is `backend::campaign_table`, shared by
+/// `sweep`, `merge` and every execution backend so that all paths emit
+/// byte-identical reports for the same results. Returns
 /// whether the CSV — the primary machine-readable output — was written;
 /// callers fold a failure into their exit code.
 fn report_campaign(points: &[SimPoint], results: &[HplResult], out: &Path) -> bool {
@@ -368,6 +371,15 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
     };
     if opts.contains_key("plan-only") && export_p.is_none() {
         eprintln!("sweep: --plan-only requires --export-manifest FILE");
+        return 2;
+    }
+    let backend_name =
+        opts.get("backend").map(String::as_str).unwrap_or("inproc").to_string();
+    if !matches!(backend_name.as_str(), "inproc" | "in-process" | "subprocess" | "queue") {
+        eprintln!(
+            "sweep: unknown backend '{backend_name}' (expected inproc, subprocess or \
+             queue)"
+        );
         return 2;
     }
     let out: PathBuf = out_p.map(PathBuf::from).unwrap_or_else(|| "results".into());
@@ -436,22 +448,51 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
         }
     }
 
-    let sweep_opts = SweepOptions {
-        threads: num(opts, "threads", 0usize),
-        cache_dir,
-        progress: true,
+    let campaign = Campaign::new(&points)
+        .threads(num(opts, "threads", 0usize))
+        .cache(cache_dir)
+        .stderr_progress();
+    let outcome = match backend_name.as_str() {
+        "subprocess" => {
+            let shards = num(opts, "shards", 2u64);
+            let workdir = out.join("backend-subprocess");
+            campaign.run(&Subprocess::new(shards, workdir))
+        }
+        "queue" => {
+            let qdir = match path_opt(opts, "queue-dir", "sweep") {
+                Ok(d) => d.map(PathBuf::from).unwrap_or_else(|| out.join("queue")),
+                Err(code) => return code,
+            };
+            let workers = num(opts, "queue-workers", 2usize);
+            let tasks = {
+                let t = num(opts, "queue-tasks", 0u64);
+                if t > 0 {
+                    t
+                } else {
+                    4 * workers.max(1) as u64
+                }
+            };
+            let mut q = FileQueue::new(qdir, tasks, workers);
+            q.lease_secs = num(opts, "lease-secs", 30.0f64);
+            campaign.run(&q)
+        }
+        _ => campaign.run(&InProcess::new()),
     };
-    let report = match run_campaign(&points, &sweep_opts) {
+    let report = match outcome {
         Ok(r) => r,
-        Err(e) => {
+        Err(ExecError::Point(e)) => {
             eprintln!("sweep: invalid campaign point — {e}");
             return 2;
+        }
+        Err(e) => {
+            eprintln!("sweep: {e}");
+            return 1;
         }
     };
     let wrote_csv = report_campaign(&points, &report.results, &out);
     println!(
         "\nsweep: {} points | {} computed, {} cached | {} threads | {:.2} s wall \
-         ({:.2} points/s)",
+         ({:.2} points/s) | backend {backend_name}",
         points.len(),
         report.computed,
         report.cached,
@@ -463,6 +504,36 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
         0
     } else {
         1
+    }
+}
+
+/// Drain a file work queue as one worker process (see the `queue`
+/// backend and `backend::run_worker`).
+fn cmd_worker(opts: &HashMap<String, String>) -> i32 {
+    let qdir = match path_opt(opts, "queue", "worker") {
+        Ok(Some(d)) => PathBuf::from(d),
+        Ok(None) => {
+            eprintln!("worker: --queue DIR is required\n{USAGE}");
+            return 2;
+        }
+        Err(code) => return code,
+    };
+    let wopts = WorkerOptions {
+        threads: num(opts, "threads", 0usize),
+        wait_secs: num(opts, "wait-secs", 30.0f64),
+    };
+    match run_worker(&qdir, &wopts) {
+        Ok(s) => {
+            println!(
+                "worker: {} task(s), {} point(s), {} computed",
+                s.tasks, s.points, s.computed
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("worker: {e}");
+            1
+        }
     }
 }
 
@@ -513,7 +584,10 @@ fn cmd_shard(opts: &HashMap<String, String>) -> i32 {
     let sweep_opts = SweepOptions {
         threads: num(opts, "threads", 0usize),
         cache_dir: Some(cache.into()),
-        progress: true,
+        // --quiet: shard children of the subprocess backend write into
+        // captured pipes nobody drains until exit — steady progress
+        // chatter there would fill the pipe and stall the workers.
+        progress: !opts.contains_key("quiet"),
     };
     let report = match run_campaign(&mine, &sweep_opts) {
         Ok(r) => r,
@@ -739,6 +813,7 @@ pub fn main_with_args(args: &[String]) -> i32 {
         Some("exp") => cmd_exp(&positional[1..], &opts),
         Some("sweep") => cmd_sweep(&opts),
         Some("shard") => cmd_shard(&opts),
+        Some("worker") => cmd_worker(&opts),
         Some("merge") => cmd_merge(&positional[1..], &opts),
         Some("run") => cmd_run(&opts),
         Some("configs") => {
@@ -815,5 +890,23 @@ mod tests {
         assert_eq!(run(&["sweep", "--points", "5", "--plan-only"]), 2);
         // A valueless --export-manifest (parsed as "true") is a missing path.
         assert_eq!(run(&["sweep", "--points", "5", "--export-manifest"]), 2);
+    }
+
+    #[test]
+    fn worker_and_backend_validate_arguments() {
+        let run = |args: &[&str]| {
+            let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            main_with_args(&v)
+        };
+        assert_eq!(run(&["worker"]), 2); // missing --queue
+        assert_eq!(run(&["worker", "--queue"]), 2); // valueless --queue
+        // Unknown backend is a usage error before anything simulates.
+        assert_eq!(run(&["sweep", "--points", "5", "--backend", "carrier-pigeon"]), 2);
+        // A worker pointed at a directory that never becomes a queue
+        // gives up after --wait-secs.
+        let dir = std::env::temp_dir().join(format!("hplsim_noqueue_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        assert_eq!(run(&["worker", "--queue", dir.to_str().unwrap(), "--wait-secs", "0"]), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

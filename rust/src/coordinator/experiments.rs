@@ -12,7 +12,7 @@ use std::rc::Rc;
 
 use crate::blas::DgemmModel;
 use crate::calibration;
-use crate::coordinator::sweep::{run_campaign, SimPoint, SweepOptions};
+use crate::coordinator::backend::{Campaign, InProcess, SimPoint};
 use crate::coordinator::table::{fnum, fpct, Table};
 use crate::hpl::{
     simulate_direct, simulate_with_artifacts, Bcast, HplConfig, HplResult, Rfact, SwapAlg,
@@ -46,6 +46,10 @@ pub struct ExpCtx {
     pub threads: usize,
     /// Optional on-disk result cache: interrupted experiments resume.
     pub cache_dir: Option<PathBuf>,
+    /// Report campaign progress/ETA on stderr. Off by default, so
+    /// library callers and tests are silent; the CLI turns it on for
+    /// interactive `exp` runs.
+    pub progress: bool,
     /// Plan-only mode (manifest export): when set, [`ExpCtx::run_points`]
     /// records every planned point here instead of simulating, and
     /// returns all-zero placeholder results so the experiment's consume
@@ -109,6 +113,7 @@ impl ExpCtx {
             out_dir: PathBuf::from("results"),
             threads: 0,
             cache_dir: None,
+            progress: false,
             plan_only: None,
         }
     }
@@ -186,8 +191,8 @@ impl ExpCtx {
     }
 
     /// Execute a declarative point list and return its results in point
-    /// order. Without artifacts the points fan out over the
-    /// work-stealing campaign runtime; artifact-backed contexts run
+    /// order. Without artifacts the points go through the [`Campaign`]
+    /// API on the in-process backend; artifact-backed contexts run
     /// sequentially through the XLA pipeline (the PJRT client holds
     /// process-wide state and is not `Send`). In plan-only mode (see
     /// [`ExpCtx::plan_only`]) nothing is simulated: the points are
@@ -229,12 +234,14 @@ impl ExpCtx {
                     .collect()
             }
             None => {
-                let opts = SweepOptions {
-                    threads: self.threads,
-                    cache_dir: self.cache_dir.clone(),
-                    progress: false,
-                };
-                run_campaign(&points, &opts)
+                let mut campaign = Campaign::new(&points)
+                    .threads(self.threads)
+                    .cache(self.cache_dir.clone());
+                if self.progress {
+                    campaign = campaign.stderr_progress();
+                }
+                campaign
+                    .run(&InProcess::new())
                     .unwrap_or_else(|e| panic!("invalid campaign point — {e}"))
                     .results
             }

@@ -17,10 +17,16 @@
 //! function of the points themselves: no coordination, no assignment
 //! state, and equal-fingerprint duplicates always land in the same shard
 //! (each is still simulated exactly once cluster-wide).
+//!
+//! The manifest is also the boundary every execution backend
+//! (`coordinator::backend`) speaks: the `Subprocess` backend exports
+//! one for its `hplsim shard` children, and the `FileQueue` backend
+//! publishes one in the queue directory for `hplsim worker` processes
+//! to partition into lease-guarded tasks.
 
 use std::path::Path;
 
-use crate::coordinator::sweep::{SimPoint, MODEL_VERSION};
+use crate::coordinator::backend::{SimPoint, MODEL_VERSION};
 use crate::stats::json::Json;
 
 /// Format marker written into every manifest file. (v2: points may

@@ -1,14 +1,21 @@
 //! Experiment coordination: the CLI, the per-figure experiment
-//! registry, the parallel campaign runtime, serializable campaign
+//! registry, the pluggable campaign execution backends (in-process
+//! pool, subprocess shards, file-queue workers), serializable campaign
 //! manifests (shard/merge), and result tables.
 
+pub mod backend;
 pub mod cli;
 pub mod experiments;
 pub mod manifest;
 pub mod sweep;
 pub mod table;
 
+pub use backend::{
+    Campaign, CampaignReport, ExecBackend, ExecError, FileQueue, InProcess,
+    MaterializeMemo, Platform, PointError, ProgressEvent, SimPoint, Subprocess,
+    SweepOptions, WorkPlan,
+};
 pub use experiments::{ExpCtx, PointResults, Scale};
 pub use manifest::Manifest;
-pub use sweep::{run_campaign, CampaignReport, Platform, PointError, SimPoint, SweepOptions};
+pub use sweep::run_campaign;
 pub use table::Table;

@@ -1,682 +1,55 @@
-//! The parallel campaign runtime.
+//! Compatibility shim over the campaign execution backends.
 //!
-//! The paper's value proposition is running *cheap, massive* simulation
-//! campaigns — validation sweeps, sensibility analyses, HPL parameter
-//! optimization under uncertainty — on one commodity server. This module
-//! turns a campaign into data: a list of self-contained [`SimPoint`]s
-//! executed by a work-stealing thread pool, with
-//!
-//! * **deterministic seeding** — every point carries its own seed,
-//!   derived from the campaign seed and the point index
-//!   ([`point_seed`]), so results are bit-identical regardless of the
-//!   number of worker threads or the order points happen to execute in;
-//! * **a resumable on-disk cache** — each point has a 64-bit
-//!   [`SimPoint::fingerprint`] over its configuration, seed and the
-//!   simulation-model version; finished results are persisted as one
-//!   JSON file per fingerprint, so an interrupted campaign restarts
-//!   exactly where it left off and only recomputes uncached points;
-//! * **structured progress/ETA reporting** on stderr.
-//!
-//! Every worker constructs its own engine / network / platform instances
-//! per point (`simulate_direct` builds a fresh single-threaded `Sim`),
-//! so no `Rc` state ever crosses a thread boundary. This campaign
-//! abstraction is also the seam where sharding across machines and
-//! alternative execution backends attach later.
+//! The campaign runtime used to live here as one monolithic module with
+//! a single hard-wired substrate (the in-process work-stealing pool).
+//! It is now `coordinator::backend`: the [`Campaign`] builder, the
+//! [`ExecBackend`] trait, and the `InProcess` / `Subprocess` /
+//! `FileQueue` backends. This module re-exports the whole historical
+//! surface — `SimPoint`, fingerprints, the on-disk cache, options and
+//! report types — and keeps [`run_campaign`] as a thin wrapper over
+//! `Campaign` + `InProcess`, so existing callers compile unchanged.
 
-use std::borrow::Cow;
-use std::collections::VecDeque;
-use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+pub use crate::coordinator::backend::{
+    cache_lookup, cache_lookup_fp, cache_path_for, cache_path_fp, cache_store,
+    campaign_table, point_seed, resolve_threads, result_from_json, result_to_json,
+    Campaign, CampaignReport, ExecBackend, ExecError, InProcess, Platform, PointError,
+    ProgressEvent, RealizedPlatform, SimPoint, SweepOptions, WorkPlan, MODEL_VERSION,
+};
 
-use crate::blas::DgemmModel;
-use crate::hpl::{simulate_direct, HplConfig, HplResult};
-use crate::mpi::CommStats;
-use crate::network::{NetModel, Topology};
-use crate::platform::{PlatformScenario, ScenarioError};
-use crate::stats::derive_seed;
-use crate::stats::json::Json;
-
-/// Version of the simulation model baked into cache fingerprints.
-/// Bump whenever a change alters simulated results, so stale cache
-/// entries are never reused. (2: scenario payloads — fingerprints now
-/// cover the canonical platform encoding.)
-pub const MODEL_VERSION: u64 = 2;
-
-/// Derive the seed of campaign point `index` from the campaign seed:
-/// `hash(campaign_seed, point_index)` through the in-tree RNG, so the
-/// seed depends only on the point's identity, never on which worker
-/// thread runs it or when.
-pub fn point_seed(campaign_seed: u64, index: u64) -> u64 {
-    derive_seed(campaign_seed, index)
-}
-
-/// The platform payload of a [`SimPoint`]: either fully materialized
-/// models (the original encoding — O(nodes) per point) or a generative
-/// [`PlatformScenario`] materialized in-worker from the point seed
-/// (O(1) per point — the preferred payload for variability campaigns).
-#[derive(Clone, Debug)]
-pub enum Platform {
-    Explicit { topo: Topology, net: NetModel, dgemm: DgemmModel },
-    /// Boxed: a scenario is a deep description and would otherwise
-    /// dominate the enum size every explicit point pays for.
-    Scenario(Box<PlatformScenario>),
-}
-
-/// A realized platform: the concrete models a simulation runs on —
-/// borrowed straight from an explicit payload, owned when a scenario
-/// materialized them.
-pub type RealizedPlatform<'a> =
-    (Cow<'a, Topology>, Cow<'a, NetModel>, Cow<'a, DgemmModel>);
-
-impl Platform {
-    /// Produce the concrete `(topology, network, dgemm)` triple for one
-    /// simulation. Explicit payloads borrow; scenarios materialize
-    /// (deterministically in `(scenario, seed)`).
-    pub fn realize(&self, seed: u64) -> Result<RealizedPlatform<'_>, ScenarioError> {
-        match self {
-            Platform::Explicit { topo, net, dgemm } => {
-                Ok((Cow::Borrowed(topo), Cow::Borrowed(net), Cow::Borrowed(dgemm)))
-            }
-            Platform::Scenario(s) => {
-                let (t, n, d) = s.materialize(seed)?;
-                Ok((Cow::Owned(t), Cow::Owned(n), Cow::Owned(d)))
-            }
-        }
-    }
-
-    /// Canonical JSON encoding — the manifest payload *and* the
-    /// fingerprint domain: every field of every variant feeds the hash
-    /// through this encoding (f64s are emitted bit-exactly).
-    pub fn to_json(&self) -> Json {
-        match self {
-            Platform::Explicit { topo, net, dgemm } => Json::obj(vec![
-                ("topo", topo.to_json()),
-                ("net", net.to_json()),
-                ("dgemm", dgemm.to_json()),
-            ]),
-            Platform::Scenario(s) => Json::obj(vec![("scenario", s.to_json())]),
-        }
-    }
-
-    /// Inverse of [`Platform::to_json`] (also accepts the flattened
-    /// form used by [`SimPoint::to_json`], where the platform keys sit
-    /// next to the point's own).
-    pub fn from_json(v: &Json) -> Option<Platform> {
-        if let Some(s) = v.get("scenario") {
-            return Some(Platform::Scenario(Box::new(PlatformScenario::from_json(s)?)));
-        }
-        Some(Platform::Explicit {
-            topo: Topology::from_json(v.get("topo")?)?,
-            net: NetModel::from_json(v.get("net")?)?,
-            dgemm: DgemmModel::from_json(v.get("dgemm")?)?,
-        })
-    }
-}
-
-/// A malformed campaign point: the structured error [`run_campaign`]
-/// (and manifest loading) reports instead of panicking deep inside the
-/// HPL driver.
-#[derive(Clone, Debug)]
-pub struct PointError {
-    pub index: usize,
-    pub label: String,
-    pub reason: String,
-}
-
-impl std::fmt::Display for PointError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "point {} ({}): {}", self.index, self.label, self.reason)
-    }
-}
-
-impl std::error::Error for PointError {}
-
-/// One self-contained simulation point: everything a worker needs to
-/// run one HPL simulation, with no shared state. All fields are plain
-/// data (`Send`), so points can move freely across threads.
-#[derive(Clone, Debug)]
-pub struct SimPoint {
-    /// Human-readable label (experiment/row id); not part of the
-    /// fingerprint.
-    pub label: String,
-    pub cfg: HplConfig,
-    /// The platform: materialized models or a generative scenario.
-    pub platform: Platform,
-    /// MPI ranks per node.
-    pub rpn: usize,
-    /// Per-point seed (see [`point_seed`]).
-    pub seed: u64,
-}
-
-/// FNV-1a over a canonical encoding of a point's inputs.
-struct Fp(u64);
-
-impl Fp {
-    fn new() -> Fp {
-        Fp(0xcbf2_9ce4_8422_2325)
-    }
-
-    fn push_byte(&mut self, b: u8) {
-        self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
-    }
-
-    fn push_u64(&mut self, v: u64) {
-        for b in v.to_le_bytes() {
-            self.push_byte(b);
-        }
-    }
-
-    fn push_usize(&mut self, v: usize) {
-        self.push_u64(v as u64);
-    }
-
-    fn push_f64(&mut self, v: f64) {
-        self.push_u64(v.to_bits());
-    }
-
-    fn push_str(&mut self, s: &str) {
-        self.push_u64(s.len() as u64);
-        for b in s.bytes() {
-            self.push_byte(b);
-        }
-    }
-}
-
-impl SimPoint {
-    /// Build a point over materialized models (the original payload).
-    pub fn explicit(
-        label: impl Into<String>,
-        cfg: HplConfig,
-        topo: Topology,
-        net: NetModel,
-        dgemm: DgemmModel,
-        rpn: usize,
-        seed: u64,
-    ) -> SimPoint {
-        SimPoint {
-            label: label.into(),
-            cfg,
-            platform: Platform::Explicit { topo, net, dgemm },
-            rpn,
-            seed,
-        }
-    }
-
-    /// Build a point over a generative scenario (O(1) payload).
-    pub fn scenario(
-        label: impl Into<String>,
-        cfg: HplConfig,
-        scenario: PlatformScenario,
-        rpn: usize,
-        seed: u64,
-    ) -> SimPoint {
-        SimPoint {
-            label: label.into(),
-            cfg,
-            platform: Platform::Scenario(Box::new(scenario)),
-            rpn,
-            seed,
-        }
-    }
-
-    /// Check the point is simulable: valid HPL configuration, a
-    /// materializable platform, and node-count agreement between the
-    /// dgemm model, the topology and the rank placement. This is the
-    /// structured front door for errors that used to surface as
-    /// out-of-bounds panics deep inside the driver
-    /// (`DgemmModel::coef`).
-    ///
-    /// O(1): scenarios are checked statically
-    /// ([`PlatformScenario::check`]) without sampling or calibrating —
-    /// manifest loading and campaign start validate every point, so
-    /// this must not cost a materialization.
-    pub fn validate(&self) -> Result<(), String> {
-        self.cfg.validate()?;
-        if self.rpn == 0 {
-            return Err("rpn must be >= 1".into());
-        }
-        // (topology nodes, heterogeneous dgemm nodes — None when the
-        // model is homogeneous and fits any node count).
-        let (nodes, dgemm_nodes) = match &self.platform {
-            Platform::Explicit { topo, dgemm, .. } => {
-                if dgemm.nodes.is_empty() {
-                    return Err("dgemm model has no nodes".into());
-                }
-                let d = dgemm.nodes.len();
-                (topo.nodes(), (d != 1).then_some(d))
-            }
-            Platform::Scenario(s) => {
-                s.check().map_err(|e| e.to_string())?;
-                (s.nodes(), s.compute.nodes())
-            }
-        };
-        let nranks = self.cfg.nranks();
-        let nodes_used = nranks.div_ceil(self.rpn);
-        if nodes_used > nodes {
-            return Err(format!(
-                "{nranks} ranks at {} per node need {nodes_used} nodes but the \
-                 topology has {nodes}",
-                self.rpn
-            ));
-        }
-        if let Some(d) = dgemm_nodes {
-            if d < nodes_used {
-                return Err(format!(
-                    "heterogeneous dgemm model covers {d} node(s) but ranks run on \
-                     {nodes_used}"
-                ));
-            }
-        }
-        Ok(())
-    }
-
-    /// 64-bit fingerprint of (config, seed, platform, model version):
-    /// the cache key. Two points with equal fingerprints simulate
-    /// identically. The platform part hashes the canonical JSON
-    /// encoding ([`Platform::to_json`], bit-exact f64s, sorted keys),
-    /// so *every* field of an explicit model or a scenario feeds the
-    /// hash — a scenario is fingerprinted by its O(1) description, not
-    /// by the O(nodes) models it materializes into.
-    pub fn fingerprint(&self) -> u64 {
-        let mut h = Fp::new();
-        h.push_u64(MODEL_VERSION);
-        // HPL configuration.
-        h.push_usize(self.cfg.n);
-        h.push_usize(self.cfg.nb);
-        h.push_usize(self.cfg.p);
-        h.push_usize(self.cfg.q);
-        h.push_usize(self.cfg.depth);
-        h.push_str(self.cfg.bcast.name());
-        h.push_str(self.cfg.swap.name());
-        h.push_usize(self.cfg.swap_threshold);
-        h.push_str(self.cfg.rfact.name());
-        h.push_usize(self.cfg.nbmin);
-        h.push_usize(self.rpn);
-        h.push_u64(self.seed);
-        // Platform (explicit models or scenario), canonically encoded.
-        h.push_str(&self.platform.to_json().to_string());
-        h.0
-    }
-
-    /// Serialize a self-contained point for an on-disk campaign manifest
-    /// (see `coordinator::manifest`). The encoding is exact: every f64
-    /// round-trips bit-for-bit and u64s (seeds) travel as decimal
-    /// strings, so the fingerprint is preserved.
-    pub fn to_json(&self) -> Json {
-        let mut m = match self.platform.to_json() {
-            Json::Obj(m) => m,
-            _ => unreachable!("Platform::to_json always returns an object"),
-        };
-        m.insert("label".into(), Json::Str(self.label.clone()));
-        m.insert("cfg".into(), self.cfg.to_json());
-        m.insert("rpn".into(), Json::Num(self.rpn as f64));
-        m.insert("seed".into(), Json::u64_str(self.seed));
-        Json::Obj(m)
-    }
-
-    /// Inverse of [`SimPoint::to_json`].
-    pub fn from_json(v: &Json) -> Option<SimPoint> {
-        Some(SimPoint {
-            label: v.get("label")?.as_str()?.to_string(),
-            cfg: HplConfig::from_json(v.get("cfg")?)?,
-            platform: Platform::from_json(v)?,
-            rpn: v.get("rpn")?.as_usize()?,
-            seed: v.get("seed")?.as_u64()?,
-        })
-    }
-}
-
-/// Options of a campaign run.
-#[derive(Clone, Debug, Default)]
-pub struct SweepOptions {
-    /// Worker threads; 0 = `$HPLSIM_THREADS` or the machine's available
-    /// parallelism.
-    pub threads: usize,
-    /// On-disk result cache directory (None = no cache).
-    pub cache_dir: Option<PathBuf>,
-    /// Emit progress/ETA lines on stderr.
-    pub progress: bool,
-}
-
-/// Outcome of a campaign: per-point results in point order plus
-/// execution accounting.
-#[derive(Clone, Debug)]
-pub struct CampaignReport {
-    /// One result per input point, in input order (independent of
-    /// execution order).
-    pub results: Vec<HplResult>,
-    /// Whether each result was served from the on-disk cache.
-    pub from_cache: Vec<bool>,
-    /// Simulations actually executed in this run (one per distinct
-    /// uncached fingerprint; equal-fingerprint duplicates are served
-    /// from the first computation and counted in neither tally).
-    pub computed: usize,
-    /// Points served from the on-disk cache.
-    pub cached: usize,
-    /// Wall-clock of the whole campaign (seconds).
-    pub wall_seconds: f64,
-    /// Worker threads actually used.
-    pub threads: usize,
-}
-
-/// Resolve a thread-count request: explicit > `$HPLSIM_THREADS` >
-/// available parallelism.
-pub fn resolve_threads(requested: usize) -> usize {
-    if requested > 0 {
-        return requested;
-    }
-    if let Some(n) = std::env::var("HPLSIM_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-    {
-        return n;
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-}
-
-/// Serialize one result for the on-disk cache.
-pub fn result_to_json(r: &HplResult) -> Json {
-    Json::obj(vec![
-        ("seconds", Json::Num(r.seconds)),
-        ("gflops", Json::Num(r.gflops)),
-        ("messages", Json::Num(r.comm.messages as f64)),
-        ("bytes", Json::Num(r.comm.bytes)),
-        ("iprobes", Json::Num(r.comm.iprobes as f64)),
-        ("events", Json::Num(r.events as f64)),
-        ("dgemm_calls", Json::Num(r.dgemm_calls as f64)),
-    ])
-}
-
-/// Deserialize a cached result.
-pub fn result_from_json(v: &Json) -> Option<HplResult> {
-    Some(HplResult {
-        seconds: v.get("seconds")?.as_f64()?,
-        gflops: v.get("gflops")?.as_f64()?,
-        comm: CommStats {
-            messages: v.get("messages")?.as_f64()? as u64,
-            bytes: v.get("bytes")?.as_f64()?,
-            iprobes: v.get("iprobes")?.as_f64()? as u64,
-        },
-        events: v.get("events")?.as_f64()? as u64,
-        dgemm_calls: v.get("dgemm_calls")?.as_f64()? as usize,
-    })
-}
-
-/// Cache file of a raw fingerprint (`<fp as 16 hex digits>.json`).
-/// Shard merging addresses cache entries by fingerprint directly.
-pub fn cache_path_fp(dir: &Path, fp: u64) -> PathBuf {
-    dir.join(format!("{fp:016x}.json"))
-}
-
-/// Cache file of a point: one JSON file per fingerprint.
-pub fn cache_path_for(dir: &Path, point: &SimPoint) -> PathBuf {
-    cache_path_fp(dir, point.fingerprint())
-}
-
-/// Look a point up in the cache; misses on absence, corruption, a
-/// fingerprint mismatch, or a different model version.
-pub fn cache_lookup(dir: &Path, point: &SimPoint) -> Option<HplResult> {
-    cache_lookup_fp(dir, point.fingerprint())
-}
-
-/// Fingerprint-keyed variant of [`cache_lookup`].
-pub fn cache_lookup_fp(dir: &Path, fp: u64) -> Option<HplResult> {
-    let text = std::fs::read_to_string(cache_path_fp(dir, fp)).ok()?;
-    let v = Json::parse(&text).ok()?;
-    if v.get("fingerprint")?.as_str()? != format!("{fp:016x}") {
-        return None;
-    }
-    if v.get("model_version")?.as_f64()? as u64 != MODEL_VERSION {
-        return None;
-    }
-    result_from_json(v.get("result")?)
-}
-
-/// Persist a finished point (atomic: write then rename). Failures are
-/// reported but never abort the campaign — the cache is an optimization.
-pub fn cache_store(dir: &Path, point: &SimPoint, r: &HplResult) {
-    store_fp(dir, &point.label, point.fingerprint(), r)
-}
-
-fn store_fp(dir: &Path, label: &str, fp: u64, r: &HplResult) {
-    let v = Json::obj(vec![
-        ("fingerprint", Json::Str(format!("{fp:016x}"))),
-        ("model_version", Json::Num(MODEL_VERSION as f64)),
-        ("label", Json::Str(label.to_string())),
-        ("result", result_to_json(r)),
-    ]);
-    static TMP_SEQ: AtomicUsize = AtomicUsize::new(0);
-    let final_path = cache_path_fp(dir, fp);
-    let tmp_path = dir.join(format!(
-        "{fp:016x}.tmp.{}.{}",
-        std::process::id(),
-        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
-    ));
-    let res = std::fs::write(&tmp_path, v.to_string())
-        .and_then(|()| std::fs::rename(&tmp_path, &final_path));
-    if let Err(e) = res {
-        // Never leave a partial temp file behind: it would otherwise
-        // accumulate in the cache directory across failed runs.
-        let _ = std::fs::remove_file(&tmp_path);
-        eprintln!("sweep: warning: could not cache {}: {e}", final_path.display());
-    }
-}
-
-/// Remove orphaned `*.tmp.*` files left behind by a crashed campaign
-/// (the atomic write-then-rename in `store_fp` can be interrupted
-/// between the two steps). Only files matching the temp-name pattern
-/// *and* older than [`TMP_REAP_AGE`] are touched: another live campaign
-/// may share this cache directory, and its in-flight temp files (which
-/// exist for milliseconds) must not be reaped from under it. Real
-/// `<fp>.json` entries are never removed.
-const TMP_REAP_AGE: std::time::Duration = std::time::Duration::from_secs(60);
-
-fn clean_stale_tmp(dir: &Path) {
-    let Ok(entries) = std::fs::read_dir(dir) else { return };
-    for entry in entries.flatten() {
-        if !entry.file_name().to_string_lossy().contains(".tmp.") {
-            continue;
-        }
-        let old_enough = entry
-            .metadata()
-            .and_then(|m| m.modified())
-            .ok()
-            .and_then(|t| t.elapsed().ok())
-            .is_some_and(|age| age >= TMP_REAP_AGE);
-        if old_enough {
-            let _ = std::fs::remove_file(entry.path());
-        }
-    }
-}
-
-/// Progress/ETA reporter shared by all workers.
-struct Progress {
-    total: usize,
-    enabled: bool,
-    start: Instant,
-    done: AtomicUsize,
-    last: Mutex<Instant>,
-}
-
-impl Progress {
-    fn new(total: usize, enabled: bool) -> Progress {
-        let now = Instant::now();
-        Progress {
-            total,
-            enabled,
-            start: now,
-            done: AtomicUsize::new(0),
-            last: Mutex::new(now),
-        }
-    }
-
-    fn tick(&self) {
-        let done = self.done.fetch_add(1, Ordering::Relaxed) + 1;
-        if !self.enabled {
-            return;
-        }
-        let now = Instant::now();
-        let mut last = self.last.lock().unwrap();
-        if done < self.total && now.duration_since(*last).as_secs_f64() < 1.0 {
-            return;
-        }
-        *last = now;
-        drop(last);
-        let elapsed = self.start.elapsed().as_secs_f64();
-        let rate = done as f64 / elapsed.max(1e-9);
-        let eta = (self.total - done) as f64 / rate.max(1e-9);
-        eprintln!(
-            "sweep: {done}/{} points ({:.0}%) | {:.1}s elapsed | {:.2} pts/s | eta {:.1}s",
-            self.total,
-            100.0 * done as f64 / self.total.max(1) as f64,
-            elapsed,
-            rate,
-            eta,
-        );
-    }
-}
-
-/// Pop the next point index: own deque front first, then steal from the
-/// back of the busiest-looking victim (round-robin scan).
-fn next_task(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
-    if let Some(i) = deques[me].lock().unwrap().pop_front() {
-        return Some(i);
-    }
-    let n = deques.len();
-    for off in 1..n {
-        let victim = (me + off) % n;
-        if let Some(i) = deques[victim].lock().unwrap().pop_back() {
-            return Some(i);
-        }
-    }
-    None
-}
-
-/// Execute a campaign: serve cached points, fan the rest out over the
-/// work-stealing pool, and return results in point order. Every point
-/// is validated up front ([`SimPoint::validate`]); a malformed point —
-/// node-count disagreement, an unmaterializable scenario — is reported
-/// as a structured [`PointError`] before anything simulates.
+/// Execute a campaign on the in-process work-stealing pool: serve
+/// cached points, compute the rest, and return results in point order.
+/// Thin compatibility wrapper over [`Campaign`] + [`InProcess`]; the
+/// builder API is the front door for anything beyond this (other
+/// backends, progress callbacks).
 pub fn run_campaign(
     points: &[SimPoint],
     opts: &SweepOptions,
 ) -> Result<CampaignReport, PointError> {
-    let t0 = Instant::now();
-    for (index, p) in points.iter().enumerate() {
-        p.validate().map_err(|reason| PointError {
-            index,
-            label: p.label.clone(),
-            reason,
-        })?;
+    let mut campaign = Campaign::new(points)
+        .threads(opts.threads)
+        .cache(opts.cache_dir.clone());
+    if opts.progress {
+        campaign = campaign.stderr_progress();
     }
-    let threads = resolve_threads(opts.threads);
-    if let Some(dir) = &opts.cache_dir {
-        if let Err(e) = std::fs::create_dir_all(dir) {
-            eprintln!("sweep: warning: cannot create cache dir {}: {e}", dir.display());
-        }
-        clean_stale_tmp(dir);
+    match campaign.run(&InProcess::new()) {
+        Ok(report) => Ok(report),
+        Err(ExecError::Point(e)) => Err(e),
+        // The in-process backend resolves every planned point or the
+        // pool itself panicked; reaching this arm is a runtime bug, and
+        // the historical behavior here was a panic too.
+        Err(e) => panic!("in-process campaign failed: {e}"),
     }
-
-    // Hash every point exactly once; lookups, stores, and the
-    // duplicate fan-out below all reuse these fingerprints.
-    let fps: Vec<u64> = points.iter().map(|p| p.fingerprint()).collect();
-    // Prefetch each *distinct* fingerprint once: equal-fingerprint
-    // duplicates share the parsed result instead of re-reading and
-    // re-parsing the same cache file.
-    let mut prefetched: std::collections::HashMap<u64, Option<HplResult>> =
-        std::collections::HashMap::with_capacity(fps.len());
-    if let Some(dir) = opts.cache_dir.as_deref() {
-        for &fp in &fps {
-            prefetched.entry(fp).or_insert_with(|| cache_lookup_fp(dir, fp));
-        }
-    }
-    let mut slots: Vec<Option<HplResult>> =
-        fps.iter().map(|fp| prefetched.get(fp).copied().flatten()).collect();
-    let from_cache: Vec<bool> = slots.iter().map(|s| s.is_some()).collect();
-    let cached = from_cache.iter().filter(|&&c| c).count();
-    // Simulate each distinct fingerprint once; equal-fingerprint
-    // duplicates (e.g. a baseline point repeated across sweep axes) are
-    // fanned out from the first computation afterwards.
-    let mut first_of: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
-    let mut todo: Vec<usize> = Vec::new();
-    for (i, slot) in slots.iter().enumerate() {
-        if slot.is_some() {
-            continue;
-        }
-        if let std::collections::hash_map::Entry::Vacant(e) = first_of.entry(fps[i]) {
-            e.insert(i);
-            todo.push(i);
-        }
-    }
-
-    let workers = threads.min(todo.len()).max(1);
-    let deques: Vec<Mutex<VecDeque<usize>>> =
-        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
-    for (i, &idx) in todo.iter().enumerate() {
-        deques[i % workers].lock().unwrap().push_back(idx);
-    }
-
-    let progress = Progress::new(todo.len(), opts.progress);
-    let finished: Mutex<Vec<(usize, HplResult)>> = Mutex::new(Vec::with_capacity(todo.len()));
-    let cache_dir = opts.cache_dir.as_deref();
-
-    std::thread::scope(|s| {
-        let deques = &deques;
-        let finished = &finished;
-        let progress = &progress;
-        let fps = &fps;
-        for me in 0..workers {
-            s.spawn(move || {
-                while let Some(idx) = next_task(deques, me) {
-                    let p = &points[idx];
-                    // Scenario payloads materialize here, in the
-                    // worker, from the point's own data — validated
-                    // above, so this cannot fail mid-campaign.
-                    let (topo, net, dgemm) =
-                        p.platform.realize(p.seed).expect("validated before dispatch");
-                    let r = simulate_direct(&p.cfg, &topo, &net, &dgemm, p.rpn, p.seed);
-                    if let Some(dir) = cache_dir {
-                        store_fp(dir, &p.label, fps[idx], &r);
-                    }
-                    finished.lock().unwrap().push((idx, r));
-                    progress.tick();
-                }
-            });
-        }
-    });
-
-    let computed_list = finished.into_inner().unwrap();
-    let computed = computed_list.len();
-    for (idx, r) in computed_list {
-        slots[idx] = Some(r);
-    }
-    // Fan computed results out to equal-fingerprint duplicates.
-    for i in 0..slots.len() {
-        if slots[i].is_none() {
-            let first = slots[first_of[&fps[i]]];
-            slots[i] = first;
-        }
-    }
-    let results: Vec<HplResult> =
-        slots.into_iter().map(|s| s.expect("campaign point never executed")).collect();
-    Ok(CampaignReport {
-        results,
-        from_cache,
-        computed,
-        cached,
-        wall_seconds: t0.elapsed().as_secs_f64(),
-        threads: workers,
-    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::blas::NodeCoef;
-    use crate::hpl::{Bcast, Rfact, SwapAlg};
+    use crate::blas::{DgemmModel, NodeCoef};
+    use crate::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
+    use crate::hpl::HplResult;
+    use crate::mpi::CommStats;
+    use crate::network::{NetModel, Topology};
+    use crate::stats::json::Json;
 
     fn tiny_point(seed: u64) -> SimPoint {
         SimPoint::explicit(
@@ -841,5 +214,47 @@ mod tests {
             assert_eq!(a.comm.messages, b.comm.messages);
         }
         assert_eq!(seq.computed, 6);
+    }
+
+    #[test]
+    fn progress_flows_through_the_callback_only() {
+        // The pool never prints on its own: events reach the campaign's
+        // callback (and with no callback installed, nowhere at all).
+        use std::sync::Mutex;
+        let pts: Vec<SimPoint> = (0..3).map(|i| tiny_point(900 + i)).collect();
+        let events: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let report = Campaign::new(&pts)
+            .threads(2)
+            .on_progress(|e| {
+                let tag = match e {
+                    ProgressEvent::Started { backend, total, .. } => {
+                        format!("started:{backend}:{total}")
+                    }
+                    ProgressEvent::PointDone { done, total, .. } => {
+                        format!("done:{done}/{total}")
+                    }
+                    ProgressEvent::Message { backend, .. } => format!("msg:{backend}"),
+                };
+                events.lock().unwrap().push(tag);
+            })
+            .run(&InProcess::new())
+            .unwrap();
+        assert_eq!(report.computed, 3);
+        let events = events.into_inner().unwrap();
+        assert_eq!(events[0], "started:inproc:3");
+        // The final point always reports (intermediate ones may be
+        // throttled away on a fast machine).
+        assert!(events.iter().any(|e| e == "done:3/3"), "{events:?}");
+    }
+
+    #[test]
+    fn explicit_thread_requests_win() {
+        // Explicit requests never consult the environment. The
+        // $HPLSIM_THREADS override itself is asserted in
+        // rust/tests/backend_equiv.rs by spawning the real binary with
+        // the variable set — mutating the env of this multithreaded
+        // test process would race every concurrent getenv.
+        assert_eq!(resolve_threads(5), 5);
+        assert_eq!(resolve_threads(1), 1);
     }
 }

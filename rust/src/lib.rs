@@ -29,8 +29,9 @@
 //! * [`calibration`] — synthetic benchmarking campaigns + model fitting.
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
 //! * [`coordinator`] — experiment registry (one module per paper
-//!   figure/table), the parallel campaign runtime (work-stealing
-//!   thread-pool sweeps with deterministic per-point seeding and a
+//!   figure/table), the campaign runtime with pluggable execution
+//!   backends (in-process work-stealing pool, subprocess shards, file
+//!   work queue — all with deterministic per-point seeding and a shared
 //!   resumable on-disk result cache), CLI.
 //! * [`stats`] — in-tree RNG, OLS, ANOVA, summaries, JSON (the offline
 //!   crate set has no rand/serde/criterion).

@@ -697,6 +697,23 @@ impl ComputeSpec {
         }
     }
 
+    /// Whether materialization consumes the per-point seed: a fresh
+    /// cluster draw (`cluster_seed: None`) or per-point day drift.
+    /// When `false`, every point over this spec materializes the exact
+    /// same model regardless of its seed — the campaign runtime then
+    /// shares one materialization (and one calibration) across points.
+    pub fn seed_sensitive(&self) -> bool {
+        match self {
+            ComputeSpec::Hierarchical { opts, .. } | ComputeSpec::Mixture { opts, .. } => {
+                opts.cluster_seed.is_none() || opts.day == DayDraw::PerPoint
+            }
+            ComputeSpec::Homogeneous(_)
+            | ComputeSpec::MixedGeneration(_)
+            | ComputeSpec::GroundTruthDay { .. }
+            | ComputeSpec::Calibrated { .. } => false,
+        }
+    }
+
     /// Static (O(1)) validation — everything
     /// [`ComputeSpec::materialize`] could fail on, without sampling or
     /// calibrating anything.
@@ -939,6 +956,19 @@ pub enum LinkVariability {
 }
 
 impl LinkVariability {
+    /// Whether [`LinkVariability::apply`] consumes the per-point seed
+    /// (an unpinned stochastic perturbation). Conservative: a degraded
+    /// fraction that rounds to zero nodes still reports `true`.
+    pub fn seed_sensitive(&self) -> bool {
+        match *self {
+            LinkVariability::None => false,
+            LinkVariability::Jitter { cv, seed } => cv != 0.0 && seed.is_none(),
+            LinkVariability::Degraded { fraction, seed, .. } => {
+                fraction > 0.0 && seed.is_none()
+            }
+        }
+    }
+
     fn validate(&self) -> Result<(), ScenarioError> {
         match *self {
             LinkVariability::None => Ok(()),
@@ -1088,6 +1118,16 @@ impl PlatformScenario {
             }
         }
         Ok(())
+    }
+
+    /// Whether [`PlatformScenario::materialize`] depends on the point
+    /// seed at all. Topology and network materialization are always
+    /// seed-free, so the scenario is seed-sensitive exactly when its
+    /// compute sampling or link perturbation is. When `false`,
+    /// `materialize(a) == materialize(b)` for any seeds `a`, `b` — the
+    /// contract the campaign runtime's materialization memo relies on.
+    pub fn seed_sensitive(&self) -> bool {
+        self.compute.seed_sensitive() || self.links.seed_sensitive()
     }
 
     /// Materialize the concrete platform for one campaign point.

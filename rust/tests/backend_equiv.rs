@@ -1,0 +1,400 @@
+//! Execution-backend equivalence: one campaign executed via the
+//! in-process pool (1/2/8 threads), `hplsim shard` subprocesses, and a
+//! file work queue drained by real `hplsim worker` processes yields
+//! bit-identical results and byte-identical `campaign.csv` reports —
+//! plus crash recovery: a killed queue worker's expired lease is
+//! reclaimed and the merged report is still identical.
+//!
+//! The child processes are the actual `hplsim` binary (Cargo exposes it
+//! to integration tests via `CARGO_BIN_EXE_hplsim`), so these tests
+//! exercise the same code path a multi-machine deployment runs.
+
+use std::path::{Path, PathBuf};
+
+use hplsim::blas::{DgemmModel, NodeCoef};
+use hplsim::coordinator::backend::{
+    campaign_table, point_seed, queue, Campaign, ExecError, FileQueue, InProcess,
+    SimPoint, Subprocess,
+};
+use hplsim::hpl::{Bcast, HplConfig, HplResult, Rfact, SwapAlg};
+use hplsim::network::{NetModel, Topology};
+use hplsim::platform::{
+    ComputeSpec, DayDraw, LinkVariability, NetSpec, PlatformScenario, SampleOpts,
+    TopoSpec,
+};
+
+fn hplsim_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_hplsim"))
+}
+
+/// A small heterogeneous campaign mixing explicit payloads with a
+/// seed-sensitive scenario, so every backend exercises both platform
+/// kinds (and in-worker materialization).
+fn campaign(npoints: usize, campaign_seed: u64) -> Vec<SimPoint> {
+    let dgemm = DgemmModel {
+        nodes: (0..4)
+            .map(|i| NodeCoef {
+                mu: [1e-11 * (1.0 + 0.02 * i as f64), 0.0, 0.0, 0.0, 5e-7],
+                sigma: [3e-13, 0.0, 0.0, 0.0, 0.0],
+            })
+            .collect(),
+    };
+    let scenario = PlatformScenario {
+        topo: TopoSpec::Star { nodes: 4, node_bw: 12.5e9, loop_bw: 40e9 },
+        net: NetSpec::Ideal,
+        compute: ComputeSpec::Hierarchical {
+            model: hplsim::platform::HierSpec {
+                mu: [5.6e-11, 8.0e-7, 1.7e-12],
+                sigma_s: hplsim::stats::Matrix::zeros(3, 3),
+                sigma_t: hplsim::stats::Matrix::zeros(3, 3),
+            },
+            opts: SampleOpts {
+                nodes: 4,
+                cluster_seed: None, // fresh draw per point: seed-sensitive
+                day: DayDraw::PerPoint,
+                gamma_cv: None,
+                alpha_scale: 1.0,
+                evict_slowest: 0,
+            },
+        },
+        links: LinkVariability::None,
+    };
+    (0..npoints)
+        .map(|i| {
+            let (p, q) = [(1, 2), (2, 2), (1, 4), (2, 3)][i % 4];
+            let cfg = HplConfig {
+                n: 96 + 32 * (i % 5),
+                nb: [16, 32][i % 2],
+                p,
+                q,
+                depth: i % 2,
+                bcast: Bcast::ALL[i % Bcast::ALL.len()],
+                swap: SwapAlg::ALL[i % SwapAlg::ALL.len()],
+                swap_threshold: 64,
+                rfact: Rfact::ALL[i % Rfact::ALL.len()],
+                nbmin: 8,
+            };
+            let seed = point_seed(campaign_seed, i as u64);
+            if i % 3 == 2 {
+                SimPoint::scenario(format!("be{i}"), cfg, scenario.clone(), 2, seed)
+            } else {
+                SimPoint::explicit(
+                    format!("be{i}"),
+                    cfg,
+                    Topology::star(4, 12.5e9, 40e9),
+                    NetModel::ideal(),
+                    dgemm.clone(),
+                    2,
+                    seed,
+                )
+            }
+        })
+        .collect()
+}
+
+/// The acceptance artifact: the exact bytes `campaign.csv` holds —
+/// written through the real `Table::write_csv` path (not a re-rolled
+/// serialization), so these assertions track the actual report format.
+fn csv(points: &[SimPoint], results: &[HplResult]) -> Vec<u8> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "hplsim_backend_csv_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    campaign_table(points, results).write_csv(&dir, "campaign").unwrap();
+    let bytes = std::fs::read(dir.join("campaign.csv")).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    bytes
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("hplsim_backend_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// InProcess at 1/2/8 threads, Subprocess with 2 shards, FileQueue with
+/// 2 worker processes: byte-identical reports.
+#[test]
+fn all_backends_produce_byte_identical_reports() {
+    let base = fresh_dir("equiv");
+    let points = campaign(12, 42);
+
+    let reference = Campaign::new(&points)
+        .threads(1)
+        .run(&InProcess::new())
+        .expect("in-process reference");
+    assert_eq!(reference.computed, 12);
+    let want = csv(&points, &reference.results);
+
+    for threads in [2usize, 8] {
+        let rep = Campaign::new(&points)
+            .threads(threads)
+            .run(&InProcess::new())
+            .unwrap();
+        assert_eq!(
+            csv(&points, &rep.results),
+            want,
+            "in-process report diverged at {threads} threads"
+        );
+    }
+
+    // Subprocess: two `hplsim shard` children over an exported manifest.
+    let sp_work = base.join("subprocess");
+    let mut sp = Subprocess::new(2, &sp_work);
+    sp.exe = Some(hplsim_exe());
+    sp.child_threads = 2;
+    let rep = Campaign::new(&points)
+        .threads(2)
+        .cache(Some(base.join("sp-cache")))
+        .run(&sp)
+        .expect("subprocess backend");
+    assert_eq!(rep.computed, 12, "nothing was cached beforehand");
+    assert_eq!(csv(&points, &rep.results), want, "subprocess report diverged");
+
+    // FileQueue: two real worker processes drain the queue.
+    let mut fq = FileQueue::new(base.join("queue"), 3, 2);
+    fq.exe = Some(hplsim_exe());
+    fq.lease_secs = 30.0;
+    fq.timeout_secs = 240.0;
+    let rep = Campaign::new(&points).threads(2).run(&fq).expect("queue backend");
+    assert_eq!(rep.computed, 12);
+    assert_eq!(csv(&points, &rep.results), want, "file-queue report diverged");
+
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// A campaign cache fed by one backend replays on another: results are
+/// interchangeable currency because fingerprints are.
+#[test]
+fn subprocess_results_replay_in_process() {
+    let base = fresh_dir("replay");
+    let points = campaign(6, 7);
+    let cache = base.join("cache");
+
+    let mut sp = Subprocess::new(2, base.join("work"));
+    sp.exe = Some(hplsim_exe());
+    let first = Campaign::new(&points)
+        .threads(2)
+        .cache(Some(cache.clone()))
+        .run(&sp)
+        .unwrap();
+    assert_eq!(first.computed, 6);
+
+    let replay = Campaign::new(&points)
+        .threads(2)
+        .cache(Some(cache))
+        .run(&InProcess::new())
+        .unwrap();
+    assert_eq!(replay.computed, 0, "subprocess results must replay from cache");
+    assert_eq!(replay.cached, 6);
+    assert_eq!(csv(&points, &first.results), csv(&points, &replay.results));
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Crash recovery: a task claimed by a worker that died (stale lease,
+/// no heartbeat) is reclaimed by a healthy worker after expiry, and the
+/// completed campaign is still bit-identical.
+#[test]
+fn queue_lease_expiry_reclaims_dead_workers_task() {
+    let base = fresh_dir("lease");
+    let qdir = base.join("queue");
+    let points = campaign(8, 21);
+
+    let reference =
+        Campaign::new(&points).threads(2).run(&InProcess::new()).unwrap();
+    let want = csv(&points, &reference.results);
+
+    // Build the queue directly (what FileQueue::prepare does), with a
+    // short lease so expiry is immediate in test time.
+    queue::init_queue(&qdir, &points, 4, 2.0).unwrap();
+
+    // Simulate a worker that claimed task-0000 and died: the lease
+    // exists but its heartbeat stopped an hour ago.
+    let todo = qdir.join("todo").join("task-0000");
+    let lease = qdir.join("leases").join("task-0000");
+    std::fs::rename(&todo, &lease).unwrap();
+    std::fs::write(&lease, "{\"task\":0,\"pid\":999999}").unwrap();
+    let past = std::time::SystemTime::now() - std::time::Duration::from_secs(3600);
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&lease)
+        .unwrap()
+        .set_times(std::fs::FileTimes::new().set_modified(past))
+        .unwrap();
+
+    // One healthy worker process must reclaim the expired lease and
+    // drain the whole queue.
+    let status = std::process::Command::new(hplsim_exe())
+        .arg("worker")
+        .arg("--queue")
+        .arg(&qdir)
+        .arg("--threads")
+        .arg("2")
+        .status()
+        .expect("spawn worker");
+    assert!(status.success(), "worker exited with {status}");
+
+    for t in 0..4 {
+        let name = format!("task-{t:04}");
+        assert!(qdir.join("done").join(&name).exists(), "{name} not completed");
+        assert!(!qdir.join("leases").join(&name).exists());
+        assert!(!qdir.join("todo").join(&name).exists());
+    }
+
+    // Assemble the report from the queue cache, exactly as the
+    // coordinating campaign would.
+    let qcache = queue::queue_cache_dir(&qdir);
+    let results: Vec<HplResult> = points
+        .iter()
+        .map(|p| {
+            hplsim::coordinator::backend::cache_lookup_fp(&qcache, p.fingerprint())
+                .unwrap_or_else(|| panic!("point {} missing from queue cache", p.label))
+        })
+        .collect();
+    assert_eq!(csv(&points, &results), want, "reclaimed campaign diverged");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Structured errors surface identically through every backend: a
+/// malformed point is a `PointError` before anything executes.
+#[test]
+fn malformed_points_fail_identically_on_every_backend() {
+    let base = fresh_dir("badpoint");
+    let mut points = campaign(2, 3);
+    points[1].rpn = 0;
+
+    let check = |err: ExecError| match err {
+        ExecError::Point(e) => {
+            assert_eq!(e.index, 1);
+            assert!(e.reason.contains("rpn"), "{}", e.reason);
+        }
+        other => panic!("expected a PointError, got {other}"),
+    };
+    check(Campaign::new(&points).run(&InProcess::new()).unwrap_err());
+    let mut sp = Subprocess::new(2, base.join("work"));
+    sp.exe = Some(hplsim_exe());
+    check(Campaign::new(&points).run(&sp).unwrap_err());
+    let mut fq = FileQueue::new(base.join("queue"), 2, 1);
+    fq.exe = Some(hplsim_exe());
+    check(Campaign::new(&points).run(&fq).unwrap_err());
+    // Validation failed before preparation: no queue was initialized.
+    assert!(!base.join("queue").join("queue.json").exists());
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// A fully cached campaign never touches the execution substrate: the
+/// out-of-process backends spawn nothing (their scratch dirs stay
+/// untouched) and still return the full report.
+#[test]
+fn cached_campaigns_skip_the_substrate() {
+    let base = fresh_dir("cachedskip");
+    let points = campaign(5, 11);
+    let cache = base.join("cache");
+    Campaign::new(&points)
+        .threads(2)
+        .cache(Some(cache.clone()))
+        .run(&InProcess::new())
+        .unwrap();
+
+    // exe deliberately bogus: spawning anything would fail loudly.
+    let mut sp = Subprocess::new(2, base.join("sp-work"));
+    sp.exe = Some(PathBuf::from("/nonexistent/hplsim"));
+    let rep = Campaign::new(&points).cache(Some(cache.clone())).run(&sp).unwrap();
+    assert_eq!((rep.computed, rep.cached), (0, 5));
+    assert!(!base.join("sp-work").join("manifest.json").exists());
+
+    let mut fq = FileQueue::new(base.join("q"), 2, 1);
+    fq.exe = Some(PathBuf::from("/nonexistent/hplsim"));
+    let rep = Campaign::new(&points).cache(Some(cache)).run(&fq).unwrap();
+    assert_eq!((rep.computed, rep.cached), (0, 5));
+    assert!(!base.join("q").join("queue.json").exists());
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// `$HPLSIM_THREADS` pins campaign parallelism when no --threads flag
+/// is given (how CI steps and queue workers control parallelism).
+/// Asserted on a real child process — the variable is set on the
+/// spawned binary's environment, never on this test process.
+#[test]
+fn hplsim_threads_env_override_is_honored() {
+    use hplsim::coordinator::manifest::Manifest;
+    let base = fresh_dir("envthreads");
+    let points = campaign(4, 29);
+    let mpath = base.join("campaign.json");
+    Manifest::new(points).save(&mpath).unwrap();
+    let out = std::process::Command::new(hplsim_exe())
+        .arg("sweep")
+        .arg("--manifest")
+        .arg(&mpath)
+        .arg("--no-cache")
+        .arg("--out")
+        .arg(base.join("out"))
+        .env("HPLSIM_THREADS", "3")
+        .output()
+        .expect("spawn hplsim sweep");
+    assert!(out.status.success(), "sweep exited with {}", out.status);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("| 3 threads |"),
+        "expected the env override to pin 3 threads, got: {stdout}"
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// The CLI surface end-to-end: `sweep --backend subprocess|queue` over
+/// one exported manifest emits a campaign.csv byte-identical to the
+/// default in-process backend.
+#[test]
+fn cli_backends_emit_identical_campaign_csv() {
+    use hplsim::coordinator::manifest::Manifest;
+    let base = fresh_dir("cli");
+    let points = campaign(8, 17);
+    let mpath = base.join("campaign.json");
+    Manifest::new(points).save(&mpath).unwrap();
+
+    let run = |extra: &[&str], out: &Path| {
+        let mut cmd = std::process::Command::new(hplsim_exe());
+        cmd.arg("sweep")
+            .arg("--manifest")
+            .arg(&mpath)
+            .arg("--threads")
+            .arg("2")
+            .arg("--no-cache")
+            .arg("--out")
+            .arg(out);
+        for a in extra {
+            cmd.arg(a);
+        }
+        let status = cmd
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .status()
+            .expect("spawn hplsim sweep");
+        assert!(status.success(), "sweep {extra:?} exited with {status}");
+        std::fs::read(out.join("campaign.csv")).expect("campaign.csv written")
+    };
+
+    let want = run(&[], &base.join("out-inproc"));
+    let sp = run(&["--backend", "subprocess", "--shards", "2"], &base.join("out-sp"));
+    assert_eq!(sp, want, "subprocess campaign.csv diverged");
+    let q = run(
+        &[
+            "--backend",
+            "queue",
+            "--queue-dir",
+            base.join("queue").to_str().unwrap(),
+            "--queue-workers",
+            "2",
+            "--queue-tasks",
+            "3",
+        ],
+        &base.join("out-queue"),
+    );
+    assert_eq!(q, want, "queue campaign.csv diverged");
+    let _ = std::fs::remove_dir_all(&base);
+}
