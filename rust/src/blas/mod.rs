@@ -21,7 +21,9 @@ pub mod model;
 pub mod provider;
 
 pub use model::{DgemmModel, LinearModel, NodeCoef, N_COEF};
-pub use provider::{DgemmSource, DirectSource, PoolSource, Recorder, ReplayError};
+pub use provider::{
+    DgemmSource, DirectSource, PoolSource, RecordedCalls, Recorder, ReplayError,
+};
 
 use std::rc::Rc;
 

@@ -5,19 +5,26 @@
 //! Production simulations therefore run **two passes**:
 //!
 //! 1. a *recording* pass with [`Recorder`] (cheap mean-only durations)
-//!    that captures every `(m, n, k)` per rank in program order,
+//!    that captures every `(m, n, k)` per rank in program order — and
+//!    flattens into a [`runtime::DgemmRequest`](crate::runtime::DgemmRequest)
+//!    via [`Recorder::request`],
 //! 2. a batched evaluation of all durations through the XLA artifact
-//!    (`runtime::Artifacts::dgemm_durations`) producing per-rank pools,
+//!    (`runtime::Artifacts::evaluate_batch`) producing per-rank pools —
+//!    campaigns concatenate *many points'* requests into each
+//!    invocation (see `coordinator::backend::artifact`),
 //! 3. a *replay* pass with [`PoolSource`] that pops pooled durations in
-//!    the same program order (shapes are asserted to match).
+//!    the same program order (every pop is verified against the
+//!    recording; a divergence is a structured [`ReplayError`]).
 //!
 //! [`DirectSource`] samples in pure Rust — used by unit tests and as a
 //! cross-check of the artifact path.
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::rc::Rc;
 
 use super::model::DgemmModel;
+use crate::runtime::DgemmRequest;
 use crate::stats::Rng;
 
 /// Anything that can produce the duration of the next dgemm call of a
@@ -73,11 +80,18 @@ impl DgemmSource for DirectSource {
     }
 }
 
+/// The per-rank program-order schedule a [`Recorder`] captures:
+/// `(node, epoch, m, n, k)` per call. Plain data (`Send`) — the batched
+/// campaign pipeline ships it from recording workers to the evaluation
+/// thread and back into replay workers, while `Recorder` itself stays
+/// `Rc`-based and thread-local.
+pub type RecordedCalls = Vec<Vec<(u32, u32, u32, u32, u32)>>;
+
 /// Recording pass: returns cheap mean durations and logs every shape.
 pub struct Recorder {
     model: DgemmModel,
     /// Per rank: `(node, epoch, m, n, k)` in program order.
-    pub calls: RefCell<Vec<Vec<(u32, u32, u32, u32, u32)>>>,
+    pub calls: RefCell<RecordedCalls>,
 }
 
 impl Recorder {
@@ -91,6 +105,36 @@ impl Recorder {
     /// Total recorded calls.
     pub fn total(&self) -> usize {
         self.calls.borrow().iter().map(|v| v.len()).sum()
+    }
+
+    /// Clone the recorded schedule out of the recorder.
+    pub fn calls_snapshot(&self) -> RecordedCalls {
+        self.calls.borrow().clone()
+    }
+
+    /// Flatten into one batched runtime request: the `[m, n, k]`
+    /// tensors and node indices of [`Recorder::flatten`] (homogeneous
+    /// models map every index to 0), the per-(rank, epoch) episodic
+    /// noise draw of `seed`, and the model's coefficient table — the
+    /// per-point unit `runtime::Artifacts::evaluate_batch` concatenates
+    /// across a campaign wave.
+    pub fn request(&self, seed: u64) -> DgemmRequest {
+        let (mnk, mut idx, rank_epoch) = self.flatten();
+        if self.model.nodes.len() == 1 {
+            // Physical node ids recorded; a homogeneous model (single
+            // entry) is valid for any of them.
+            for i in idx.iter_mut() {
+                *i = 0;
+            }
+        }
+        let mut z = Vec::with_capacity(rank_epoch.len());
+        let mut drawn: HashMap<(u32, u32), f64> = HashMap::new();
+        for &(r, e) in &rank_epoch {
+            z.push(*drawn.entry((r, e)).or_insert_with(|| {
+                epoch_z(seed, r as usize, e as usize)
+            }));
+        }
+        DgemmRequest { mnk, idx, z, coef: self.model.nodes.clone() }
     }
 
     /// Flatten to the artifact's batched layout:
@@ -119,67 +163,131 @@ impl DgemmSource for Recorder {
     }
 }
 
-/// Replay mismatch diagnostics.
-#[derive(Clone, Debug)]
+/// Replay divergence diagnostics: the replay pass requested a dgemm
+/// call that does not match the recorded schedule. Since HPL's control
+/// flow is data-independent this is always a determinism bug, and it
+/// means pooled durations would be misattributed — the replay must
+/// abort. [`PoolSource`] panics with this error's rendering (the
+/// per-point path), and records it for the batched campaign pipeline
+/// to surface as a structured `ExecError` after catching the unwind.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ReplayError {
+    /// The rank whose replay diverged.
     pub rank: usize,
+    /// Position in the rank's recorded program-order schedule.
     pub call_index: usize,
+    /// Recorded `(node, epoch, m, n, k)` at this position (`None`: the
+    /// replay ran past the end of the recorded schedule). The full
+    /// tuple travels so a divergence in node or epoch alone is just as
+    /// diagnosable as a shape mismatch.
+    pub expected: Option<(usize, usize, usize, usize, usize)>,
+    /// The `(node, epoch, m, n, k)` the replay actually requested.
+    pub observed: (usize, usize, usize, usize, usize),
 }
 
-/// Replay pass: pops pre-evaluated durations per rank in program order.
+impl ReplayError {
+    /// The iteration (epoch) the diverging call was issued in.
+    pub fn epoch(&self) -> usize {
+        self.observed.1
+    }
+}
+
+impl std::fmt::Display for ReplayError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (on, oe, om, onn, ok) = self.observed;
+        match self.expected {
+            Some((en, ee, em, enn, ek)) => write!(
+                f,
+                "rank {} epoch {oe} call {}: replay diverged from recording \
+                 — expected (node, epoch, m, n, k) = ({en}, {ee}, {em}, {enn}, \
+                 {ek}), observed ({on}, {oe}, {om}, {onn}, {ok})",
+                self.rank, self.call_index
+            ),
+            None => write!(
+                f,
+                "rank {} epoch {oe} call {}: replay ran past the recorded \
+                 schedule — observed (node, epoch, m, n, k) = ({on}, {oe}, \
+                 {om}, {onn}, {ok})",
+                self.rank, self.call_index
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ReplayError {}
+
+/// Replay pass: pops pre-evaluated durations per rank in program order,
+/// verifying on every pop that the replay visits exactly the recorded
+/// schedule (cheap; always on).
 pub struct PoolSource {
-    /// Per rank: durations + the shapes they were evaluated for.
-    durations: RefCell<Vec<std::iter::Peekable<std::vec::IntoIter<f64>>>>,
-    shapes: Vec<Vec<(u32, u32, u32, u32, u32)>>,
+    durations: RefCell<Vec<std::vec::IntoIter<f64>>>,
+    shapes: RecordedCalls,
     cursor: RefCell<Vec<usize>>,
-    /// Check shapes on every pop (cheap; always on).
-    verify: bool,
+    /// The structured divergence behind the last panic, if any.
+    failure: RefCell<Option<ReplayError>>,
 }
 
 impl PoolSource {
     /// `durations` flattened in the same order as `Recorder::flatten`.
-    pub fn new(
-        recorder: &Recorder,
-        flat_durations: &[f32],
-    ) -> Rc<Self> {
-        let calls = recorder.calls.borrow();
+    pub fn new(recorder: &Recorder, flat_durations: &[f32]) -> Rc<Self> {
+        let durs: Vec<f64> = flat_durations.iter().map(|&d| d as f64).collect();
+        Self::from_calls(recorder.calls_snapshot(), &durs)
+    }
+
+    /// Per-point entry of the batched campaign pipeline: a recorded
+    /// schedule plus its flattened f64 durations (same order as
+    /// `Recorder::flatten`).
+    pub fn from_calls(calls: RecordedCalls, flat_durations: &[f64]) -> Rc<Self> {
         let mut per_rank = Vec::with_capacity(calls.len());
         let mut off = 0usize;
-        for rank_calls in calls.iter() {
+        for rank_calls in &calls {
             let n = rank_calls.len();
-            let durs: Vec<f64> =
-                flat_durations[off..off + n].iter().map(|&d| d as f64).collect();
-            per_rank.push(durs.into_iter().peekable());
+            let durs: Vec<f64> = flat_durations[off..off + n].to_vec();
+            per_rank.push(durs.into_iter());
             off += n;
         }
         assert_eq!(off, flat_durations.len(), "pool size mismatch");
         Rc::new(PoolSource {
             durations: RefCell::new(per_rank),
-            shapes: calls.clone(),
             cursor: RefCell::new(vec![0; calls.len()]),
-            verify: true,
+            shapes: calls,
+            failure: RefCell::new(None),
         })
+    }
+
+    /// The structured divergence, if a [`DgemmSource::next`] call on
+    /// this pool panicked. The batched campaign pipeline catches the
+    /// unwind and reads this to report an `ExecError` instead of
+    /// crashing the whole campaign.
+    pub fn failure(&self) -> Option<ReplayError> {
+        self.failure.borrow().clone()
     }
 }
 
 impl DgemmSource for PoolSource {
     fn next(&self, rank: usize, node: usize, epoch: usize, m: usize, n: usize, k: usize) -> f64 {
-        if self.verify {
-            let mut cur = self.cursor.borrow_mut();
-            let i = cur[rank];
-            let expect = self.shapes[rank].get(i).copied().unwrap_or_else(|| {
-                panic!("rank {rank}: replay ran past recorded schedule at call {i}")
-            });
-            assert_eq!(
-                expect,
-                (node as u32, epoch as u32, m as u32, n as u32, k as u32),
-                "rank {rank} call {i}: replay shape diverged from recording"
-            );
-            cur[rank] = i + 1;
+        let mut cur = self.cursor.borrow_mut();
+        let i = cur[rank];
+        let expect = self.shapes[rank].get(i).copied();
+        let matches = expect
+            == Some((node as u32, epoch as u32, m as u32, n as u32, k as u32));
+        if !matches {
+            let err = ReplayError {
+                rank,
+                call_index: i,
+                expected: expect.map(|(en, ee, em, enn, ek)| {
+                    (en as usize, ee as usize, em as usize, enn as usize, ek as usize)
+                }),
+                observed: (node, epoch, m, n, k),
+            };
+            *self.failure.borrow_mut() = Some(err.clone());
+            panic!("{err}");
         }
+        cur[rank] = i + 1;
+        drop(cur);
         self.durations.borrow_mut()[rank]
             .next()
-            .expect("duration pool exhausted")
+            .expect("duration pool in sync with the verified schedule")
     }
 }
 
@@ -266,5 +374,89 @@ mod tests {
         r.next(0, 0, 0, 10, 20, 30);
         let pool = PoolSource::new(&r, &[1.0]);
         pool.next(0, 0, 0, 99, 20, 30);
+    }
+
+    #[test]
+    fn divergence_is_recorded_structured() {
+        let r = Recorder::new(model(), 1);
+        r.next(0, 0, 2, 10, 20, 30);
+        let pool = PoolSource::new(&r, &[1.0]);
+        let run = {
+            let pool = pool.clone();
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                pool.next(0, 0, 2, 99, 20, 30);
+            }))
+        };
+        assert!(run.is_err());
+        let err = pool.failure().expect("divergence recorded");
+        assert_eq!(err.rank, 0);
+        assert_eq!(err.epoch(), 2);
+        assert_eq!(err.call_index, 0);
+        assert_eq!(err.expected, Some((0, 2, 10, 20, 30)));
+        assert_eq!(err.observed, (0, 2, 99, 20, 30));
+        let msg = err.to_string();
+        assert!(
+            msg.contains("(0, 2, 10, 20, 30)") && msg.contains("(0, 2, 99, 20, 30)"),
+            "{msg}"
+        );
+    }
+
+    #[test]
+    fn running_past_the_schedule_is_recorded_structured() {
+        let r = Recorder::new(model(), 1);
+        r.next(0, 0, 0, 10, 20, 30);
+        let pool = PoolSource::new(&r, &[1.0]);
+        assert_eq!(pool.next(0, 0, 0, 10, 20, 30), 1.0);
+        let run = {
+            let pool = pool.clone();
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                pool.next(0, 0, 1, 10, 20, 30);
+            }))
+        };
+        assert!(run.is_err());
+        let err = pool.failure().expect("overrun recorded");
+        assert_eq!(err.expected, None);
+        assert_eq!(err.call_index, 1);
+        assert_eq!(err.epoch(), 1);
+        assert!(err.to_string().contains("ran past"), "{err}");
+    }
+
+    #[test]
+    fn pool_from_calls_replays_like_pool_from_recorder() {
+        let r = Recorder::new(model(), 2);
+        r.next(0, 0, 0, 10, 20, 30);
+        r.next(1, 1, 0, 5, 5, 5);
+        let direct = PoolSource::new(&r, &[1.5, 2.5]);
+        let rebuilt = PoolSource::from_calls(r.calls_snapshot(), &[1.5, 2.5]);
+        assert_eq!(direct.next(0, 0, 0, 10, 20, 30), 1.5);
+        assert_eq!(rebuilt.next(0, 0, 0, 10, 20, 30), 1.5);
+        assert_eq!(rebuilt.next(1, 1, 0, 5, 5, 5), 2.5);
+    }
+
+    #[test]
+    fn request_flattens_draws_and_coefficients() {
+        let r = Recorder::new(model(), 2);
+        r.next(0, 0, 0, 10, 20, 30);
+        r.next(0, 0, 0, 11, 21, 31); // same (rank, epoch): same draw
+        r.next(1, 1, 1, 5, 5, 5);
+        let req = r.request(42);
+        assert_eq!(req.calls(), 3);
+        assert_eq!(req.mnk[0], [10.0, 20.0, 30.0]);
+        assert_eq!(req.idx, vec![0, 0, 1]);
+        assert_eq!(req.coef.len(), 2, "heterogeneous table travels whole");
+        assert_eq!(req.z[0], req.z[1], "episodic draw shared within an epoch");
+        assert_eq!(req.z[0], epoch_z(42, 0, 0));
+        assert_eq!(req.z[2], epoch_z(42, 1, 1));
+    }
+
+    #[test]
+    fn request_maps_homogeneous_models_to_index_zero() {
+        let m = DgemmModel::homogeneous(crate::blas::NodeCoef::naive(1e-11));
+        let r = Recorder::new(m, 2);
+        r.next(0, 0, 0, 10, 20, 30);
+        r.next(1, 3, 0, 5, 5, 5); // physical node 3
+        let req = r.request(7);
+        assert_eq!(req.idx, vec![0, 0]);
+        assert_eq!(req.coef.len(), 1);
     }
 }

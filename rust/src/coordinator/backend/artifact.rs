@@ -1,0 +1,234 @@
+//! The batched artifact execution pipeline: record → batch → replay.
+//!
+//! The per-point XLA pipeline (`hpl::simulate_with_artifacts`) pays one
+//! runtime invocation per simulation point, which is why the artifact
+//! path used to be hard-wired serial: the PJRT client holds
+//! process-wide state and is not `Send`, so fanning points out to a
+//! pool meant giving up the artifacts. This module lifts the evaluation
+//! *across* points instead:
+//!
+//! 1. **Record** (parallel): pool workers run the cheap mean-duration
+//!    recording pass per point — thread-private sims, platforms
+//!    realized through the campaign's [`MaterializeMemo`] — and hand
+//!    the flattened request streams (`Recorder::request`) back to the
+//!    coordinator thread.
+//! 2. **Batch** (coordinator thread): the wave's requests — up to
+//!    `batch_points` of them — go through one
+//!    [`Artifacts::evaluate_batch`] invocation, which concatenates the
+//!    `[m, n, k]` tensors and chunks internally to bound device
+//!    memory. A campaign therefore costs at most
+//!    `ceil(points / batch_points)` runtime invocations.
+//! 3. **Replay** (parallel): each point replays its recorded schedule
+//!    against its duration slice ([`PoolSource::from_calls`]), and the
+//!    result is persisted under the point fingerprint into the ordinary
+//!    campaign cache — so batched results are interchangeable currency
+//!    with every other backend and `shard`/`merge` stay bit-identical.
+//!
+//! A replay divergence (the schedule check in `PoolSource`) is caught
+//! here and surfaced as a structured [`ExecError::Replay`] instead of
+//! tearing the whole campaign down with a panic.
+
+use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::blas::{DgemmModel, PoolSource, RecordedCalls, Recorder};
+use crate::hpl::{run_once, HplResult};
+use crate::network::{NetModel, Topology};
+use crate::runtime::{Artifacts, DgemmRequest};
+
+use super::cache::{eval_tag_for, store_fp};
+use super::inprocess::Progress;
+use super::memo::{MaterializeMemo, SharedPlatform};
+use super::point::{Platform, SimPoint};
+use super::{Campaign, ExecError, WorkPlan};
+
+/// How a campaign runs the PJRT artifacts: the loaded client plus the
+/// number of points whose request streams are concatenated into one
+/// batched runtime invocation.
+pub struct ArtifactMode {
+    pub arts: Rc<Artifacts>,
+    /// Points per batched evaluation (>= 1; `sweep --batch-size`).
+    pub batch_points: usize,
+}
+
+impl ArtifactMode {
+    /// Evaluation-path tag of this runtime's results: the functional
+    /// stub is bit-identical to the direct path and shares its tag; the
+    /// real PJRT client is f32-rounded and tags its entries so they
+    /// never silently mix with pure-Rust ones (see `cache::EVAL_PJRT`).
+    pub fn eval_tag(&self) -> &'static str {
+        eval_tag_for(Some(self.arts.as_ref()))
+    }
+}
+
+/// A realized platform for one pass: borrowed straight from an explicit
+/// payload, or shared out of the memo for scenario payloads (the memo
+/// makes the replay pass a hit on the record pass's materialization —
+/// one calibration per distinct platform, not two).
+enum Plat<'p> {
+    Explicit(&'p Topology, &'p NetModel, &'p DgemmModel),
+    Shared(SharedPlatform),
+}
+
+impl Plat<'_> {
+    fn parts(&self) -> (&Topology, &NetModel, &DgemmModel) {
+        match self {
+            Plat::Explicit(t, n, d) => (t, n, d),
+            Plat::Shared(p) => (&p.0, &p.1, &p.2),
+        }
+    }
+}
+
+fn realize<'p>(memo: &MaterializeMemo, p: &'p SimPoint) -> Plat<'p> {
+    match &p.platform {
+        Platform::Explicit { topo, net, dgemm } => Plat::Explicit(topo, net, dgemm),
+        Platform::Scenario(_) => {
+            Plat::Shared(memo.realize(p).expect("validated before dispatch"))
+        }
+    }
+}
+
+/// One point's recording-pass output, shipped from a pool worker to the
+/// coordinator thread.
+struct Recorded {
+    /// Index into the campaign's point list.
+    idx: usize,
+    calls: RecordedCalls,
+    request: DgemmRequest,
+}
+
+/// Run `f` over every item on up to `workers` scoped threads (shared
+/// atomic cursor; no ordering guarantees) — the pool scaffolding shared
+/// by the record and replay phases. A panicking `f` propagates when the
+/// scope joins, like the direct in-process pool.
+fn parallel_for<T: Sync>(workers: usize, items: &[T], f: impl Fn(&T) + Sync) {
+    if items.is_empty() {
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(items.len()) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(item) = items.get(i) else { break };
+                f(item);
+            });
+        }
+    });
+}
+
+/// Execute every `plan.todo` point through record → batch → replay (see
+/// module docs). Results accumulate into `finished`, exactly like the
+/// direct in-process pool.
+pub(super) fn execute_batched(
+    campaign: &Campaign<'_>,
+    plan: &WorkPlan,
+    mode: &ArtifactMode,
+    finished: &Mutex<Vec<(usize, HplResult)>>,
+) -> Result<(), ExecError> {
+    let todo = &plan.todo;
+    if todo.is_empty() {
+        return Ok(());
+    }
+    let points = campaign.points();
+    let workers = plan.threads.min(todo.len()).max(1);
+    let batch = mode.batch_points.max(1);
+    let progress = Progress::new(campaign, todo.len());
+    // One memo across both passes and every wave: equal platforms
+    // calibrate once per campaign, and the replay pass reuses the
+    // record pass's materialization.
+    let memo = MaterializeMemo::new();
+    let cache_dir = campaign.cache_dir();
+    let failure: Mutex<Option<ExecError>> = Mutex::new(None);
+
+    for wave in todo.chunks(batch) {
+        // -- Record phase (parallel) --
+        let recorded: Mutex<Vec<Recorded>> = Mutex::new(Vec::with_capacity(wave.len()));
+        parallel_for(workers, wave, |&idx| {
+            let p = &points[idx];
+            let plat = realize(&memo, p);
+            let (topo, net, dgemm) = plat.parts();
+            let rec = Recorder::new(dgemm.clone(), p.cfg.nranks());
+            run_once(&p.cfg, topo.clone(), net.clone(), rec.clone(), p.rpn);
+            let request = rec.request(p.seed);
+            // Move (not clone) the schedule out: the recorder is done,
+            // and the schedule is the dominant per-point allocation.
+            let calls = rec.calls.take();
+            recorded.lock().unwrap().push(Recorded { idx, calls, request });
+        });
+        let mut recorded = recorded.into_inner().unwrap();
+        // Deterministic wave composition (values do not depend on it —
+        // every duration is a function of its own point — but stable
+        // batches keep runtime behavior reproducible).
+        recorded.sort_by_key(|r| r.idx);
+
+        // -- Batch phase (this thread; the PJRT client is not Send) --
+        let mut requests = Vec::with_capacity(recorded.len());
+        let mut items: Vec<(usize, RecordedCalls)> = Vec::with_capacity(recorded.len());
+        for r in recorded {
+            requests.push(r.request);
+            items.push((r.idx, r.calls));
+        }
+        let durations = mode.arts.evaluate_batch(&requests).map_err(|e| {
+            ExecError::backend("inproc", format!("batched artifact evaluation: {e}"))
+        })?;
+        drop(requests);
+        // Each item is taken (moved) by exactly one replay worker: the
+        // recorded schedule is the dominant per-point allocation, and
+        // cloning it just so `PoolSource::from_calls` can own shapes
+        // would double it.
+        let work: Vec<Mutex<Option<(usize, RecordedCalls, Vec<f64>)>>> = items
+            .into_iter()
+            .zip(durations)
+            .map(|((idx, calls), durs)| Mutex::new(Some((idx, calls, durs))))
+            .collect();
+
+        // -- Replay phase (parallel) --
+        let eval = mode.eval_tag();
+        parallel_for(workers, &work, |slot| {
+            let Some((idx, calls, durs)) = slot.lock().unwrap().take() else {
+                return;
+            };
+            if failure.lock().unwrap().is_some() {
+                return; // the campaign is lost; stop burning CPU
+            }
+            let p = &points[idx];
+            let plat = realize(&memo, p);
+            let (topo, net, _) = plat.parts();
+            let total = durs.len();
+            let pool = PoolSource::from_calls(calls, &durs);
+            let run = {
+                let pool = pool.clone();
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_once(&p.cfg, topo.clone(), net.clone(), pool, p.rpn)
+                }))
+            };
+            match run {
+                Ok(mut r) => {
+                    r.dgemm_calls = total;
+                    if let Some(dir) = cache_dir {
+                        store_fp(dir, &p.label, plan.fps[idx], &r, eval);
+                    }
+                    finished.lock().unwrap().push((idx, r));
+                    progress.tick();
+                }
+                Err(payload) => match pool.failure() {
+                    Some(err) => {
+                        *failure.lock().unwrap() = Some(ExecError::Replay {
+                            label: p.label.clone(),
+                            err,
+                        });
+                    }
+                    // Not a replay divergence: a genuine bug — keep the
+                    // historical panic behavior.
+                    None => std::panic::resume_unwind(payload),
+                },
+            }
+        });
+        if let Some(e) = failure.lock().unwrap().take() {
+            return Err(e);
+        }
+    }
+    Ok(())
+}

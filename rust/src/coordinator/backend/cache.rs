@@ -46,6 +46,29 @@ pub fn result_from_json(v: &Json) -> Option<HplResult> {
     })
 }
 
+/// Evaluation-path tag of a cache entry: the pure-Rust model path, or
+/// the bit-identical functional stub runtime. Entries written before
+/// the tag existed count as this.
+pub const EVAL_DIRECT: &str = "direct";
+
+/// Evaluation-path tag of entries produced by the *real* PJRT client,
+/// whose results are bit-equivalent only up to f32 rounding. Campaign
+/// lookups filter by the expected tag ([`cache_lookup_fp_eval`]), so a
+/// shared or resumed cache can never silently mix f32-rounded artifact
+/// results with pure-Rust ones in a single report.
+pub const EVAL_PJRT: &str = "pjrt";
+
+/// The tag entries produced with these artifacts carry — the one place
+/// the stub-vs-real distinction maps to a tag (every caller must agree
+/// or entries would be mis-tagged, which is exactly the f32/f64
+/// blending the tags exist to prevent).
+pub fn eval_tag_for(arts: Option<&crate::runtime::Artifacts>) -> &'static str {
+    match arts {
+        Some(a) if !a.bit_identical_to_direct() => EVAL_PJRT,
+        _ => EVAL_DIRECT,
+    }
+}
+
 /// Cache file of a raw fingerprint (`<fp as 16 hex digits>.json`).
 /// Shard merging addresses cache entries by fingerprint directly.
 pub fn cache_path_fp(dir: &Path, fp: u64) -> PathBuf {
@@ -57,14 +80,10 @@ pub fn cache_path_for(dir: &Path, point: &SimPoint) -> PathBuf {
     cache_path_fp(dir, point.fingerprint())
 }
 
-/// Look a point up in the cache; misses on absence, corruption, a
-/// fingerprint mismatch, or a different model version.
-pub fn cache_lookup(dir: &Path, point: &SimPoint) -> Option<HplResult> {
-    cache_lookup_fp(dir, point.fingerprint())
-}
-
-/// Fingerprint-keyed variant of [`cache_lookup`].
-pub fn cache_lookup_fp(dir: &Path, fp: u64) -> Option<HplResult> {
+/// Parse one entry: the result plus its evaluation-path tag. `None` on
+/// absence, corruption, a fingerprint mismatch, or a different model
+/// version.
+fn parse_entry(dir: &Path, fp: u64) -> Option<(HplResult, String)> {
     let text = std::fs::read_to_string(cache_path_fp(dir, fp)).ok()?;
     let v = Json::parse(&text).ok()?;
     if v.get("fingerprint")?.as_str()? != format!("{fp:016x}") {
@@ -73,19 +92,53 @@ pub fn cache_lookup_fp(dir: &Path, fp: u64) -> Option<HplResult> {
     if v.get("model_version")?.as_f64()? as u64 != MODEL_VERSION {
         return None;
     }
-    result_from_json(v.get("result")?)
+    let eval = v
+        .get("eval")
+        .and_then(Json::as_str)
+        .unwrap_or(EVAL_DIRECT)
+        .to_string();
+    Some((result_from_json(v.get("result")?)?, eval))
+}
+
+/// Look a point up in the cache; misses on absence, corruption, a
+/// fingerprint mismatch, or a different model version. Accepts any
+/// evaluation path (use [`cache_lookup_fp_eval`] when serving a
+/// campaign).
+pub fn cache_lookup(dir: &Path, point: &SimPoint) -> Option<HplResult> {
+    cache_lookup_fp(dir, point.fingerprint())
+}
+
+/// Fingerprint-keyed variant of [`cache_lookup`].
+pub fn cache_lookup_fp(dir: &Path, fp: u64) -> Option<HplResult> {
+    parse_entry(dir, fp).map(|(r, _)| r)
+}
+
+/// Tag-checked lookup: additionally misses when the entry was produced
+/// by a different evaluation path than `eval` — the mismatched point is
+/// then recomputed (and re-stored under the current path) instead of
+/// silently mixing f32-rounded and f64 results in one report.
+pub fn cache_lookup_fp_eval(dir: &Path, fp: u64, eval: &str) -> Option<HplResult> {
+    parse_entry(dir, fp).filter(|(_, e)| e == eval).map(|(r, _)| r)
+}
+
+/// Lookup returning the result together with its evaluation-path tag —
+/// one read + parse. `hplsim merge` assembles reports through this so
+/// it can refuse mixed-path shard caches without re-reading entries.
+pub fn cache_lookup_fp_with_eval(dir: &Path, fp: u64) -> Option<(HplResult, String)> {
+    parse_entry(dir, fp)
 }
 
 /// Persist a finished point (atomic: write then rename). Failures are
 /// reported but never abort the campaign — the cache is an optimization.
 pub fn cache_store(dir: &Path, point: &SimPoint, r: &HplResult) {
-    store_fp(dir, &point.label, point.fingerprint(), r)
+    store_fp(dir, &point.label, point.fingerprint(), r, EVAL_DIRECT)
 }
 
-pub(crate) fn store_fp(dir: &Path, label: &str, fp: u64, r: &HplResult) {
+pub(crate) fn store_fp(dir: &Path, label: &str, fp: u64, r: &HplResult, eval: &str) {
     let v = Json::obj(vec![
         ("fingerprint", Json::Str(format!("{fp:016x}"))),
         ("model_version", Json::Num(MODEL_VERSION as f64)),
+        ("eval", Json::Str(eval.to_string())),
         ("label", Json::Str(label.to_string())),
         ("result", result_to_json(r)),
     ]);

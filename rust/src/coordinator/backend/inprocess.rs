@@ -9,20 +9,24 @@
 //! callback — never straight to stderr.
 
 use std::collections::VecDeque;
+use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::hpl::{simulate_direct, HplResult};
+use crate::runtime::Artifacts;
 
-use super::cache::store_fp;
+use super::artifact::{self, ArtifactMode};
+use super::cache::{store_fp, EVAL_DIRECT};
 use super::memo::MaterializeMemo;
 use super::point::Platform;
 use super::{Campaign, ExecBackend, ExecError, ProgressEvent, WorkPlan};
 
-/// Throttled progress/ETA reporter shared by all pool workers: at most
-/// one [`ProgressEvent::PointDone`] per second, plus the final point.
-struct Progress<'c, 'a> {
+/// Throttled progress/ETA reporter shared by all pool workers (and the
+/// batched artifact pipeline): at most one [`ProgressEvent::PointDone`]
+/// per second, plus the final point.
+pub(super) struct Progress<'c, 'a> {
     campaign: &'c Campaign<'a>,
     total: usize,
     start: Instant,
@@ -31,7 +35,7 @@ struct Progress<'c, 'a> {
 }
 
 impl<'c, 'a> Progress<'c, 'a> {
-    fn new(campaign: &'c Campaign<'a>, total: usize) -> Progress<'c, 'a> {
+    pub(super) fn new(campaign: &'c Campaign<'a>, total: usize) -> Progress<'c, 'a> {
         let now = Instant::now();
         Progress {
             campaign,
@@ -42,7 +46,7 @@ impl<'c, 'a> Progress<'c, 'a> {
         }
     }
 
-    fn tick(&self) {
+    pub(super) fn tick(&self) {
         let done = self.done.fetch_add(1, Ordering::Relaxed) + 1;
         if !self.campaign.has_progress() {
             return;
@@ -85,15 +89,31 @@ fn next_task(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
 
 /// The work-stealing thread-pool backend. One instance serves one
 /// [`Campaign::run`]: `execute` accumulates results in memory and
-/// `collect` drains them.
+/// `collect` drains them. With [`InProcess::with_artifacts`] the same
+/// backend drives the record → batch → replay artifact pipeline
+/// natively: record and replay fan out over the pool while every
+/// wave's model evaluations go through one batched runtime invocation
+/// on the coordinating thread (the PJRT client is not `Send`).
 #[derive(Default)]
 pub struct InProcess {
     finished: Mutex<Vec<(usize, HplResult)>>,
+    artifacts: Option<ArtifactMode>,
 }
 
 impl InProcess {
     pub fn new() -> InProcess {
         InProcess::default()
+    }
+
+    /// Batched-artifact mode: execute through record → batch → replay
+    /// (see [`super::artifact`]) instead of per-point direct sampling.
+    /// `batch_points` is the number of points per batched runtime
+    /// invocation (`sweep --batch-size`).
+    pub fn with_artifacts(arts: Rc<Artifacts>, batch_points: usize) -> InProcess {
+        InProcess {
+            finished: Mutex::default(),
+            artifacts: Some(ArtifactMode { arts, batch_points }),
+        }
     }
 }
 
@@ -102,11 +122,21 @@ impl ExecBackend for InProcess {
         "inproc"
     }
 
+    fn eval_tag(&self) -> &'static str {
+        match &self.artifacts {
+            Some(mode) => mode.eval_tag(),
+            None => EVAL_DIRECT,
+        }
+    }
+
     fn prepare(&self, _campaign: &Campaign<'_>, _plan: &WorkPlan) -> Result<(), ExecError> {
         Ok(())
     }
 
     fn execute(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
+        if let Some(mode) = &self.artifacts {
+            return artifact::execute_batched(campaign, plan, mode, &self.finished);
+        }
         let todo = &plan.todo;
         if todo.is_empty() {
             return Ok(());
@@ -153,7 +183,7 @@ impl ExecBackend for InProcess {
                             }
                         };
                         if let Some(dir) = cache_dir {
-                            store_fp(dir, &p.label, fps[idx], &r);
+                            store_fp(dir, &p.label, fps[idx], &r, EVAL_DIRECT);
                         }
                         finished.lock().unwrap().push((idx, r));
                         progress.tick();

@@ -234,6 +234,69 @@ mod tests {
     }
 
     #[test]
+    fn calibration_runs_exactly_once_across_many_points() {
+        // The satellite guarantee behind fig5-style campaigns: hundreds
+        // of points carrying one calibrated (seed-insensitive) scenario
+        // cost exactly one calibration, however many distinct seeds and
+        // labels they span.
+        let memo = MaterializeMemo::new();
+        let mut shared: Option<SharedPlatform> = None;
+        for seed in 0..10u64 {
+            let p = SimPoint::scenario(
+                format!("p{seed}"),
+                cfg(),
+                calibrated_scenario(),
+                1,
+                1000 + seed,
+            );
+            let r = memo.realize(&p).unwrap();
+            if let Some(first) = &shared {
+                assert!(Arc::ptr_eq(first, &r));
+            }
+            shared = Some(r);
+        }
+        assert_eq!(memo.misses(), 1, "exactly one calibration");
+        assert_eq!(memo.hits(), 9);
+    }
+
+    #[test]
+    fn eviction_rematerializes_hot_keys_correctly() {
+        // Flood the memo with distinct fresh-draw keys to force
+        // generation clears; a hot key must (a) stay bounded, (b)
+        // rematerialize bit-identically after eviction, and (c) start
+        // hitting again once re-entered.
+        let memo = MaterializeMemo::new();
+        let hot = SimPoint::scenario("hot", cfg(), calibrated_scenario(), 1, 1);
+        let first = memo.realize(&hot).unwrap();
+        assert_eq!((memo.misses(), memo.hits()), (1, 0));
+        for seed in 0..(2 * MAX_ENTRIES as u64) {
+            let p = SimPoint::scenario("fd", cfg(), fresh_draw_scenario(), 1, seed);
+            memo.realize(&p).unwrap();
+        }
+        assert!(
+            memo.retained() <= MAX_ENTRIES,
+            "retained {} > cap {MAX_ENTRIES}",
+            memo.retained()
+        );
+        // The flood evicted the hot entry; re-realizing misses once...
+        let misses_mid = memo.misses();
+        let again = memo.realize(&hot).unwrap();
+        assert_eq!(memo.misses(), misses_mid + 1, "hot key was evicted");
+        assert!(!Arc::ptr_eq(&first, &again), "a fresh materialization");
+        // ...bit-identically...
+        assert_eq!(
+            first.2.to_json().to_string(),
+            again.2.to_json().to_string(),
+            "eviction must never change what a key materializes to"
+        );
+        // ...and hits from then on.
+        let hits_mid = memo.hits();
+        let third = memo.realize(&hot).unwrap();
+        assert!(Arc::ptr_eq(&again, &third));
+        assert_eq!(memo.hits(), hits_mid + 1);
+    }
+
+    #[test]
     fn retention_is_bounded_for_fresh_draw_campaigns() {
         // Every point of a fresh-draw scenario has a distinct key; the
         // memo must not retain one realized platform per point.

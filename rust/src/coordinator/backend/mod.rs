@@ -17,7 +17,9 @@
 //! Three backends ship:
 //!
 //! * [`InProcess`] — the work-stealing thread pool, with a per-campaign
-//!   [`MaterializeMemo`] so equal platforms calibrate once;
+//!   [`MaterializeMemo`] so equal platforms calibrate once; with
+//!   [`InProcess::with_artifacts`] it natively drives the batched
+//!   record → batch → replay artifact pipeline ([`artifact`]);
 //! * [`Subprocess`] — `hplsim shard` child processes over an exported
 //!   manifest, merged through the shared cache;
 //! * [`FileQueue`] — a directory work queue any number of independent
@@ -30,6 +32,7 @@
 //! `coordinator::sweep::run_campaign` remains as a thin compatibility
 //! wrapper over `Campaign` + `InProcess`.
 
+pub mod artifact;
 pub mod cache;
 pub mod inprocess;
 pub mod memo;
@@ -44,9 +47,11 @@ use std::time::Instant;
 use crate::hpl::HplResult;
 use crate::coordinator::table::{fnum, Table};
 
+pub use artifact::ArtifactMode;
 pub use cache::{
-    cache_lookup, cache_lookup_fp, cache_path_for, cache_path_fp, cache_store,
-    result_from_json, result_to_json,
+    cache_lookup, cache_lookup_fp, cache_lookup_fp_eval, cache_lookup_fp_with_eval,
+    cache_path_for, cache_path_fp, cache_store, eval_tag_for, result_from_json,
+    result_to_json, EVAL_DIRECT, EVAL_PJRT,
 };
 pub use inprocess::InProcess;
 pub use memo::MaterializeMemo;
@@ -115,6 +120,11 @@ pub fn resolve_threads(requested: usize) -> usize {
 pub enum ExecError {
     /// A malformed campaign point, caught by up-front validation.
     Point(PointError),
+    /// The replay pass of the batched artifact pipeline visited a dgemm
+    /// schedule that diverged from its own recording — a determinism
+    /// bug, reported with the full expected/observed diagnosis instead
+    /// of a worker panic.
+    Replay { label: String, err: crate::blas::ReplayError },
     /// The execution substrate itself failed (child process died, queue
     /// workers disappeared, a result never reached the cache, ...).
     Backend { backend: String, reason: String },
@@ -130,6 +140,9 @@ impl std::fmt::Display for ExecError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ExecError::Point(e) => e.fmt(f),
+            ExecError::Replay { label, err } => {
+                write!(f, "batched replay of point '{label}': {err}")
+            }
             ExecError::Backend { backend, reason } => {
                 write!(f, "{backend} backend: {reason}")
             }
@@ -206,6 +219,16 @@ pub trait ExecBackend {
     /// Short stable name (`"inproc"`, `"subprocess"`, `"queue"`) used
     /// in progress events and errors.
     fn name(&self) -> &str;
+
+    /// Evaluation-path tag this backend's results carry in the cache
+    /// ([`cache::EVAL_DIRECT`] or [`cache::EVAL_PJRT`]). The campaign's
+    /// cache prefetch serves only entries with a matching tag, so a
+    /// resumed or shared cache can never silently mix f32-rounded real
+    /// PJRT results with pure-Rust ones in one report — a mismatched
+    /// entry is simply recomputed under the current path.
+    fn eval_tag(&self) -> &'static str {
+        cache::EVAL_DIRECT
+    }
 
     /// Feasibility checks and setup before anything executes. Called
     /// once per run, before [`ProgressEvent::Started`] is emitted.
@@ -324,12 +347,16 @@ impl<'a> Campaign<'a> {
         let fps: Vec<u64> = self.points.iter().map(|p| p.fingerprint()).collect();
         // Prefetch each *distinct* fingerprint once: equal-fingerprint
         // duplicates share the parsed result instead of re-reading and
-        // re-parsing the same cache file.
+        // re-parsing the same cache file. The lookup is tag-checked
+        // against the backend's evaluation path (see
+        // [`ExecBackend::eval_tag`]).
         let mut prefetched: HashMap<u64, Option<HplResult>> =
             HashMap::with_capacity(fps.len());
         if let Some(dir) = self.cache_dir.as_deref() {
             for &fp in &fps {
-                prefetched.entry(fp).or_insert_with(|| cache_lookup_fp(dir, fp));
+                prefetched
+                    .entry(fp)
+                    .or_insert_with(|| cache::cache_lookup_fp_eval(dir, fp, backend.eval_tag()));
             }
         }
         let mut slots: Vec<Option<HplResult>> =
@@ -430,23 +457,28 @@ pub(crate) fn kill_and_reap(child: &mut std::process::Child) {
 
 /// Collect every `plan.todo` result out of a fingerprint-keyed cache —
 /// the shared tail of the out-of-process backends, whose children hand
-/// results back through the cache.
+/// results back through the cache. Lookups are tag-checked against
+/// `eval`: a child that executed on a different evaluation path than
+/// the coordinator expected surfaces here as a loud structured error,
+/// never as a silently mixed report.
 pub(crate) fn collect_from_cache(
     backend: &str,
     cache: &Path,
+    eval: &str,
     campaign: &Campaign<'_>,
     plan: &WorkPlan,
 ) -> Result<Vec<(usize, HplResult)>, ExecError> {
     let mut out = Vec::with_capacity(plan.todo.len());
     for &idx in &plan.todo {
-        match cache_lookup_fp(cache, plan.fps[idx]) {
+        match cache::cache_lookup_fp_eval(cache, plan.fps[idx], eval) {
             Some(r) => out.push((idx, r)),
             None => {
                 return Err(ExecError::backend(
                     backend,
                     format!(
-                        "point {idx} ({}) missing from the result cache {} — was it \
-                         never persisted?",
+                        "point {idx} ({}) missing from the result cache {} (as a \
+                         \"{eval}\" entry) — was it never persisted, or executed \
+                         on a different evaluation path?",
                         campaign.points()[idx].label,
                         cache.display()
                     ),

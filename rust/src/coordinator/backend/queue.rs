@@ -6,8 +6,9 @@
 //!
 //! ```text
 //! queue/
-//!   queue.json      format, task count, lease duration (written last —
-//!                   its presence means the queue is fully initialized)
+//!   queue.json      format, task count, lease duration, artifact mode
+//!                   (written last — its presence means the queue is
+//!                   fully initialized)
 //!   manifest.json   the whole campaign (the ordinary manifest format)
 //!   cache/          shared fingerprint-keyed result cache
 //!   todo/task-NNNN  unclaimed task markers
@@ -34,23 +35,36 @@
 
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
+use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::manifest::Manifest;
 use crate::hpl::HplResult;
+use crate::runtime::Artifacts;
 use crate::stats::json::Json;
 
-use super::cache::{cache_lookup_fp, copy_entry};
+use super::cache::{cache_lookup_fp_eval, copy_entry};
 use super::inprocess::InProcess;
 use super::{
     collect_from_cache, kill_and_reap, resolve_exe, Campaign, ExecBackend, ExecError,
     WorkPlan,
 };
 
-/// Format marker in `queue.json`.
+/// Format marker in `queue.json` (pure-Rust campaigns — readable by
+/// every worker version).
 pub const QUEUE_FORMAT: &str = "hplsim-queue-v1";
+
+/// Format marker of an *artifact-backed* queue. Deliberately a new
+/// string, not a new field: a worker binary from before the batched
+/// pipeline ignores unknown JSON keys, so an `artifacts: true` flag
+/// under the v1 format would be silently skipped and the stale worker
+/// would drain the queue on the pure-Rust path — the exact
+/// evaluation-path split this marker must make fail loudly. Old
+/// workers reject this format with their existing "not a work queue"
+/// error instead.
+pub const QUEUE_FORMAT_ARTIFACT: &str = "hplsim-queue-v2-artifact";
 
 const POLL: Duration = Duration::from_millis(100);
 
@@ -80,18 +94,29 @@ fn parse_task(name: &str) -> Option<u64> {
 struct QueueMeta {
     tasks: u64,
     lease_secs: f64,
+    /// `Some(batch)`: the campaign is artifact-backed — every worker
+    /// must run the record → batch → replay pipeline with this many
+    /// points per batched runtime invocation. Recorded in `queue.json`
+    /// so external workers agree with the coordinator on the evaluation
+    /// path (a split would produce divergent reports).
+    artifact_batch: Option<u64>,
 }
 
 fn read_meta(dir: &Path) -> Result<QueueMeta, String> {
     let path = meta_path(dir);
     let text = std::fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
     let v = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
-    if v.get("format").and_then(Json::as_str) != Some(QUEUE_FORMAT) {
-        return Err(format!(
-            "{}: not a work queue (expected format \"{QUEUE_FORMAT}\")",
-            path.display()
-        ));
-    }
+    let artifact = match v.get("format").and_then(Json::as_str) {
+        Some(f) if f == QUEUE_FORMAT => false,
+        Some(f) if f == QUEUE_FORMAT_ARTIFACT => true,
+        _ => {
+            return Err(format!(
+                "{}: not a work queue (expected format \"{QUEUE_FORMAT}\" or \
+                 \"{QUEUE_FORMAT_ARTIFACT}\")",
+                path.display()
+            ))
+        }
+    };
     let tasks = v
         .get("tasks")
         .and_then(Json::as_u64)
@@ -101,7 +126,22 @@ fn read_meta(dir: &Path) -> Result<QueueMeta, String> {
         .and_then(Json::as_f64)
         .filter(|s| *s > 0.0)
         .ok_or_else(|| format!("{}: missing lease_secs", path.display()))?;
-    Ok(QueueMeta { tasks, lease_secs })
+    let artifact_batch = if artifact {
+        let b = v
+            .get("batch_points")
+            .and_then(Json::as_u64)
+            .filter(|b| *b > 0)
+            .ok_or_else(|| {
+                format!(
+                    "{}: artifact-backed queue without batch_points",
+                    path.display()
+                )
+            })?;
+        Some(b)
+    } else {
+        None
+    };
+    Ok(QueueMeta { tasks, lease_secs, artifact_batch })
 }
 
 /// Names currently present in one of the marker directories.
@@ -118,6 +158,18 @@ fn list_markers(dir: &Path) -> Vec<String> {
         })
         .unwrap_or_default();
     names.sort();
+    names
+}
+
+/// Marker names addressing a *real* task of this queue (`task-NNNN`
+/// with `NNNN < tasks`). Out-of-range names — corruption, stray files,
+/// leftovers of a differently-sized former queue — are invisible to
+/// claiming, reclaiming and completion counting: claiming one would
+/// execute a partition that does not exist and leave a bogus `done/`
+/// marker inflating the completion count past reality.
+fn list_tasks(dir: &Path, tasks: u64) -> Vec<String> {
+    let mut names = list_markers(dir);
+    names.retain(|n| parse_task(n).is_some_and(|t| t < tasks));
     names
 }
 
@@ -138,12 +190,16 @@ pub fn init_queue(
     points: &[super::SimPoint],
     tasks: u64,
     lease_secs: f64,
+    artifact_batch: Option<u64>,
 ) -> Result<(), String> {
     if tasks == 0 {
         return Err("queue needs tasks >= 1".into());
     }
     if !(lease_secs > 0.0 && lease_secs.is_finite()) {
         return Err("queue needs lease_secs > 0".into());
+    }
+    if artifact_batch == Some(0) {
+        return Err("queue needs batch_points >= 1 when artifacts are enabled".into());
     }
     let _ = std::fs::remove_file(meta_path(dir));
     for sub in ["cache", "todo", "leases", "done"] {
@@ -161,10 +217,18 @@ pub fn init_queue(
         std::fs::write(&path, format!("{t}"))
             .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
     }
+    // Artifact-backed queues publish a distinct *format* (not just a
+    // flag): workers predating the batched pipeline must refuse them,
+    // not silently drain them on the pure-Rust path.
+    let format = match artifact_batch {
+        Some(_) => QUEUE_FORMAT_ARTIFACT,
+        None => QUEUE_FORMAT,
+    };
     let meta = Json::obj(vec![
-        ("format", Json::Str(QUEUE_FORMAT.into())),
+        ("format", Json::Str(format.into())),
         ("tasks", Json::Num(tasks as f64)),
         ("lease_secs", Json::Num(lease_secs)),
+        ("batch_points", Json::Num(artifact_batch.unwrap_or(0) as f64)),
     ]);
     let tmp = dir.join(format!("queue.json.tmp.{}", std::process::id()));
     std::fs::write(&tmp, meta.to_string())
@@ -208,9 +272,9 @@ fn fs_now(dir: &Path) -> Option<std::time::SystemTime> {
 /// Move every expired lease (mtime older than `lease_secs`) back to
 /// `todo/`. Safe to run from anywhere — concurrent reclaimers race on
 /// the rename and exactly one wins. Returns the reclaimed task names.
-fn reclaim_expired(dir: &Path, lease_secs: f64) -> Vec<String> {
+fn reclaim_expired(dir: &Path, tasks: u64, lease_secs: f64) -> Vec<String> {
     let leases = dir.join("leases");
-    let names = list_markers(&leases);
+    let names = list_tasks(&leases, tasks);
     if names.is_empty() {
         return Vec::new();
     }
@@ -225,8 +289,18 @@ fn reclaim_expired(dir: &Path, lease_secs: f64) -> Vec<String> {
         let expired = std::fs::metadata(&path)
             .and_then(|m| m.modified())
             .ok()
-            .and_then(|t| now.duration_since(t).ok())
-            .is_some_and(|age| age.as_secs_f64() > lease_secs);
+            .is_some_and(|t| match now.duration_since(t) {
+                Ok(age) => age.as_secs_f64() > lease_secs,
+                // A lease stamped in the *future*: ordinary probe skew
+                // stays well under a lease, but a timestamp further
+                // ahead than a whole lease can never belong to a live
+                // heartbeat (heartbeats restamp "now" every
+                // lease_secs/3). Treating it as unexpirable would pin
+                // the task forever — a hang, where fault injection
+                // demands recovery — so reclaim it like any other dead
+                // lease.
+                Err(ahead) => ahead.duration().as_secs_f64() > lease_secs,
+            });
         if expired && std::fs::rename(&path, dir.join("todo").join(&name)).is_ok() {
             reclaimed.push(name);
         }
@@ -243,9 +317,9 @@ fn reclaim_expired(dir: &Path, lease_secs: f64) -> Vec<String> {
 /// as-is would create a lease that is already "expired" and instantly
 /// reclaimable. The stamp opens the existing file only — creating it
 /// would resurrect a marker another worker just claimed away.
-fn try_claim(dir: &Path, rotation: usize) -> Option<u64> {
+fn try_claim(dir: &Path, tasks: u64, rotation: usize) -> Option<u64> {
     use std::io::Write;
-    let todo = list_markers(&dir.join("todo"));
+    let todo = list_tasks(&dir.join("todo"), tasks);
     if todo.is_empty() {
         return None;
     }
@@ -365,6 +439,19 @@ pub fn run_worker(dir: &Path, opts: &WorkerOptions) -> Result<WorkerSummary, Str
         }
     };
     let manifest = Manifest::load(&manifest_path(dir))?;
+    // An artifact-backed queue *requires* the runtime: falling back to
+    // the pure-Rust path here would split the campaign across two
+    // evaluation paths and diverge from the coordinator's report.
+    let arts: Option<Rc<Artifacts>> = match meta.artifact_batch {
+        Some(_) => Some(Rc::new(Artifacts::load_default().map_err(|e| {
+            format!(
+                "queue {} is artifact-backed but the PJRT runtime failed to \
+                 load: {e}",
+                dir.display()
+            )
+        })?)),
+        None => None,
+    };
     let rotation = std::process::id() as usize;
     let cache = queue_cache_dir(dir);
     let mut summary = WorkerSummary::default();
@@ -376,9 +463,9 @@ pub fn run_worker(dir: &Path, opts: &WorkerOptions) -> Result<WorkerSummary, Str
     let mut inconsistent = 0u32;
 
     loop {
-        if let Some(t) = try_claim(dir, rotation) {
+        if let Some(t) = try_claim(dir, meta.tasks, rotation) {
             let (points, computed) =
-                execute_task(dir, &manifest, &meta, t, opts.threads, &cache)?;
+                execute_task(dir, &manifest, &meta, t, opts.threads, &cache, &arts)?;
             if let Some(points) = points {
                 summary.tasks += 1;
                 summary.points += points;
@@ -387,14 +474,14 @@ pub fn run_worker(dir: &Path, opts: &WorkerOptions) -> Result<WorkerSummary, Str
             inconsistent = 0;
             continue;
         }
-        if !reclaim_expired(dir, meta.lease_secs).is_empty() {
+        if !reclaim_expired(dir, meta.tasks, meta.lease_secs).is_empty() {
             inconsistent = 0;
             continue; // a crashed sibling's task is claimable again
         }
-        let todo_n = list_markers(&dir.join("todo")).len();
-        let lease_n = list_markers(&dir.join("leases")).len();
+        let todo_n = list_tasks(&dir.join("todo"), meta.tasks).len();
+        let lease_n = list_tasks(&dir.join("leases"), meta.tasks).len();
         if todo_n == 0 && lease_n == 0 {
-            let done_n = list_markers(&dir.join("done")).len();
+            let done_n = list_tasks(&dir.join("done"), meta.tasks).len();
             if done_n as u64 >= meta.tasks {
                 return Ok(summary);
             }
@@ -426,6 +513,7 @@ fn execute_task(
     t: u64,
     threads: usize,
     cache: &Path,
+    arts: &Option<Rc<Artifacts>>,
 ) -> Result<(Option<usize>, usize), String> {
     let lease = dir.join("leases").join(task_name(t));
     let stop = Arc::new(AtomicBool::new(false));
@@ -436,10 +524,16 @@ fn execute_task(
     // Hash once up front: the persistence check below reuses these
     // instead of re-serializing every platform a second time.
     let fps: Vec<u64> = points.iter().map(|p| p.fingerprint()).collect();
+    // Artifact-backed queues batch *within the worker*: each task wave
+    // goes record → batch → replay on this worker's own runtime.
+    let backend = match (arts, meta.artifact_batch) {
+        (Some(a), Some(batch)) => InProcess::with_artifacts(a.clone(), batch as usize),
+        _ => InProcess::new(),
+    };
     let result = Campaign::new(&points)
         .threads(threads)
         .cache(Some(cache.to_path_buf()))
-        .run(&InProcess::new());
+        .run(&backend);
 
     stop.store(true, Ordering::Relaxed);
     let _ = hb.join();
@@ -454,9 +548,12 @@ fn execute_task(
         }
     };
     // The cache *is* the output channel: verify every task point
-    // actually persisted before declaring the task done.
+    // actually persisted — under *this* evaluation path's tag, so a
+    // stale opposite-path entry cannot mask a failed store (the
+    // coordinator's tag-checked collection would then fail the whole
+    // campaign where requeuing here lets the task retry).
     for (p, &fp) in points.iter().zip(&fps) {
-        if cache_lookup_fp(cache, fp).is_none() {
+        if cache_lookup_fp_eval(cache, fp, backend.eval_tag()).is_none() {
             let _ = std::fs::rename(&lease, dir.join("todo").join(task_name(t)));
             return Err(format!(
                 "task {t}: result of point '{}' did not persist in {}",
@@ -500,6 +597,17 @@ pub struct FileQueue {
     /// The `hplsim` binary for spawned workers; `None` = current
     /// executable.
     pub exe: Option<PathBuf>,
+    /// Batched-artifact execution in the workers: `Some(batch)` records
+    /// the artifact requirement (and the points-per-invocation batch
+    /// size) in `queue.json`, and every worker — local or external —
+    /// must then load the PJRT runtime and batch within its own tasks.
+    /// `None` pins the queue to the pure-Rust path.
+    pub artifact_batch: Option<usize>,
+    /// Evaluation-path tag the campaign's cache entries are expected to
+    /// carry (`EVAL_DIRECT`, or `EVAL_PJRT` when `artifact_batch` is
+    /// set and the runtime is the real PJRT client). Drives the
+    /// coordinator's tag-checked prefetch and collection.
+    pub eval: &'static str,
 }
 
 impl FileQueue {
@@ -511,6 +619,8 @@ impl FileQueue {
             lease_secs: 30.0,
             timeout_secs: 0.0,
             exe: None,
+            artifact_batch: None,
+            eval: super::EVAL_DIRECT,
         }
     }
 
@@ -538,6 +648,10 @@ impl FileQueue {
 impl ExecBackend for FileQueue {
     fn name(&self) -> &str {
         "queue"
+    }
+
+    fn eval_tag(&self) -> &'static str {
+        self.eval
     }
 
     fn prepare(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
@@ -572,8 +686,14 @@ impl ExecBackend for FileQueue {
                 }
             }
         }
-        init_queue(&self.dir, campaign.points(), self.tasks, self.lease_secs)
-            .map_err(|e| ExecError::backend("queue", e))
+        init_queue(
+            &self.dir,
+            campaign.points(),
+            self.tasks,
+            self.lease_secs,
+            self.artifact_batch.map(|b| b as u64),
+        )
+        .map_err(|e| ExecError::backend("queue", e))
     }
 
     fn execute(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
@@ -622,10 +742,10 @@ impl ExecBackend for FileQueue {
         // when its siblings keep the campaign going for a while.
         let mut failures: Vec<String> = Vec::new();
         loop {
-            for name in reclaim_expired(&self.dir, self.lease_secs) {
+            for name in reclaim_expired(&self.dir, self.tasks, self.lease_secs) {
                 campaign.message("queue", format!("lease of {name} expired — requeued"));
             }
-            let done = list_markers(&self.dir.join("done")).len();
+            let done = list_tasks(&self.dir.join("done"), self.tasks).len();
             if done != last_done {
                 campaign.message("queue", format!("{done}/{} tasks done", self.tasks));
                 last_done = done;
@@ -653,7 +773,10 @@ impl ExecBackend for FileQueue {
                     Err(_) => {}
                 }
             }
-            if !alive && list_markers(&self.dir.join("done")).len() < self.tasks as usize {
+            if !alive
+                && list_tasks(&self.dir.join("done"), self.tasks).len()
+                    < self.tasks as usize
+            {
                 kill_all(&mut children);
                 return Err(ExecError::backend(
                     "queue",
@@ -703,7 +826,7 @@ impl ExecBackend for FileQueue {
         plan: &WorkPlan,
     ) -> Result<Vec<(usize, HplResult)>, ExecError> {
         let qcache = queue_cache_dir(&self.dir);
-        let out = collect_from_cache("queue", &qcache, campaign, plan)?;
+        let out = collect_from_cache("queue", &qcache, self.eval, campaign, plan)?;
         // Results flow back into the campaign's own cache, so a queue
         // run leaves the same artifacts behind as any other backend.
         if let Some(camp_cache) = campaign.cache_dir() {

@@ -36,11 +36,30 @@ pub struct Subprocess {
     /// The `hplsim` binary to spawn; `None` = the current executable
     /// (correct for CLI use; tests point it at the built binary).
     pub exe: Option<PathBuf>,
+    /// Batched-artifact execution inside the children: `Some(batch)`
+    /// passes `--artifacts --batch-size batch` to every shard child,
+    /// which then *must* load the PJRT runtime — no silent fallback,
+    /// because all shards (and the coordinator's expectations) have to
+    /// agree on one evaluation path or reports would diverge. `None`
+    /// pins the children to the pure-Rust path (`--no-artifacts`).
+    pub artifact_batch: Option<usize>,
+    /// Evaluation-path tag the campaign's cache entries are expected to
+    /// carry (`EVAL_DIRECT`, or `EVAL_PJRT` when `artifact_batch` is
+    /// set and the runtime is the real PJRT client). Drives the
+    /// coordinator's tag-checked prefetch and collection.
+    pub eval: &'static str,
 }
 
 impl Subprocess {
     pub fn new(shards: u64, workdir: impl Into<PathBuf>) -> Subprocess {
-        Subprocess { shards, child_threads: 0, workdir: workdir.into(), exe: None }
+        Subprocess {
+            shards,
+            child_threads: 0,
+            workdir: workdir.into(),
+            exe: None,
+            artifact_batch: None,
+            eval: super::EVAL_DIRECT,
+        }
     }
 
     fn manifest_path(&self) -> PathBuf {
@@ -69,6 +88,10 @@ fn stderr_tail(raw: &[u8], max_lines: usize) -> String {
 impl ExecBackend for Subprocess {
     fn name(&self) -> &str {
         "subprocess"
+    }
+
+    fn eval_tag(&self) -> &'static str {
+        self.eval
     }
 
     fn prepare(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
@@ -129,8 +152,8 @@ impl ExecBackend for Subprocess {
             }
         };
         for index in 0..self.shards {
-            let spawned = Command::new(&exe)
-                .arg("shard")
+            let mut cmd = Command::new(&exe);
+            cmd.arg("shard")
                 .arg("--manifest")
                 .arg(self.manifest_path())
                 .arg("--shards")
@@ -144,7 +167,19 @@ impl ExecBackend for Subprocess {
                 // Captured pipes are drained only at wait time; steady
                 // per-point progress would fill them and stall the
                 // shard, so children run quiet.
-                .arg("--quiet")
+                .arg("--quiet");
+            // The evaluation path is the coordinator's call, made
+            // explicit on every child so a deployment's environment
+            // cannot silently split the campaign across two paths.
+            match self.artifact_batch {
+                Some(batch) => {
+                    cmd.arg("--artifacts").arg("--batch-size").arg(batch.to_string());
+                }
+                None => {
+                    cmd.arg("--no-artifacts");
+                }
+            }
+            let spawned = cmd
                 .stdin(Stdio::null())
                 .stdout(Stdio::piped())
                 .stderr(Stdio::piped())
@@ -213,6 +248,12 @@ impl ExecBackend for Subprocess {
         campaign: &Campaign<'_>,
         plan: &WorkPlan,
     ) -> Result<Vec<(usize, HplResult)>, ExecError> {
-        collect_from_cache("subprocess", &self.effective_cache(campaign), campaign, plan)
+        collect_from_cache(
+            "subprocess",
+            &self.effective_cache(campaign),
+            self.eval,
+            campaign,
+            plan,
+        )
     }
 }

@@ -5,8 +5,8 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use crate::coordinator::backend::{
-    campaign_table, run_worker, Campaign, ExecError, FileQueue, InProcess, Platform,
-    SimPoint, Subprocess, WorkerOptions,
+    campaign_table, eval_tag_for, run_worker, Campaign, ExecError, FileQueue,
+    InProcess, Platform, SimPoint, Subprocess, WorkerOptions,
 };
 use crate::coordinator::experiments::{self, ExpCtx, Scale};
 use crate::coordinator::manifest::Manifest;
@@ -23,18 +23,23 @@ hplsim — simulation-based optimization & sensibility analysis of MPI applicati
 
 USAGE:
   hplsim exp <id> [--full] [--seed N] [--no-artifacts] [--out DIR]
-             [--threads T] [--cache DIR] [--export-manifest FILE]
+             [--threads T] [--cache DIR] [--batch-size B]
+             [--export-manifest FILE]
       id ∈ {table1, fig4, fig5, fig6, fig7, fig8, table2, fig10, fig11,
             fig12, fig13, fig14, fig15, fig16, all}
       Reproduce a paper figure/table. Simulation points fan out over the
       campaign runtime (T worker threads; 0 = auto); --cache makes the
-      campaign resumable. --export-manifest skips the simulations and
+      campaign resumable. With PJRT artifacts loaded, model evaluations
+      are batched across points (--batch-size points per runtime
+      invocation) — the artifact path parallelizes and caches like any
+      other campaign. --export-manifest skips the simulations and
       writes the experiment's point list as a campaign manifest instead
       (execute it with shard/merge, then re-run the experiment with
       --cache pointing at the merged cache).
   hplsim sweep [--points K] [--threads T] [--seed N] [--nodes K] [--rpn R]
                [--n N] [--scenario normal|cooling|multimodal]
                [--platform FILE] [--out DIR] [--cache DIR] [--no-cache]
+               [--no-artifacts] [--batch-size B]
                [--manifest FILE] [--export-manifest FILE] [--plan-only]
                [--backend inproc|subprocess|queue] [--shards S]
                [--queue-dir DIR] [--queue-workers W] [--queue-tasks K]
@@ -50,8 +55,12 @@ USAGE:
       worker from the point seed. --manifest executes a previously
       exported campaign manifest instead of sampling; --export-manifest
       writes the campaign as a manifest (with --plan-only: write it and
-      exit without simulating). --backend picks the execution substrate
-      (identical results on all three; see README "Execution backends"):
+      exit without simulating). With PJRT artifacts loaded the campaign
+      runs record -> batch -> replay: dgemm evaluations of --batch-size
+      points per batched runtime invocation, on every backend
+      (subprocess shards and queue workers batch within themselves).
+      --backend picks the execution substrate (identical results on all
+      three; see README "Execution backends"):
         inproc      in-process work-stealing pool (default)
         subprocess  --shards S `hplsim shard` child processes (default 2)
         queue       a file work queue under --queue-dir, drained by
@@ -65,13 +74,16 @@ USAGE:
       lease, requeue expired leases of crashed workers. Run any number,
       on any machines sharing DIR.
   hplsim shard --manifest FILE --shards S --shard-index I --cache DIR
-               [--threads T] [--quiet]
+               [--threads T] [--quiet] [--artifacts] [--batch-size B]
       Execute one deterministic partition of a campaign manifest — the
       points with fingerprint % S == I — writing results into the
       fingerprint-keyed cache DIR. Run one shard per machine, then
       combine the caches with `hplsim merge`. --quiet suppresses the
       per-point progress lines (used by `sweep --backend subprocess`,
-      whose children write into captured pipes).
+      whose children write into captured pipes). --artifacts runs the
+      shard through the batched PJRT pipeline (the runtime must load —
+      no silent fallback, so every shard of a campaign uses one
+      evaluation path).
   hplsim merge --manifest FILE [--out DIR] [--out-cache DIR] CACHE...
       Combine shard caches: look every manifest point up in the CACHE
       directories and emit the same campaign report (campaign.csv) a
@@ -88,6 +100,9 @@ USAGE:
 
 Artifacts are loaded from $HPLSIM_ARTIFACTS, ./artifacts or ../artifacts
 (run `make artifacts` first); --no-artifacts uses the pure-Rust model path.
+In builds without the `pjrt` feature, HPLSIM_PJRT_STUB=1 enables a
+functional stub runtime whose batched results are bit-identical to the
+pure-Rust path (the CI hook for exercising the artifact pipeline).
 Campaign parallelism defaults to $HPLSIM_THREADS or the available cores.
 ";
 
@@ -187,6 +202,8 @@ fn cmd_exp(positional: &[String], opts: &HashMap<String, String>) -> i32 {
     // silent.
     ctx.progress = export.is_none();
     ctx.threads = num(opts, "threads", 0usize);
+    ctx.batch_points =
+        num(opts, "batch-size", crate::runtime::DEFAULT_BATCH_POINTS).max(1);
     if let Some(dir) = opts.get("cache") {
         ctx.cache_dir = Some(dir.into());
     }
@@ -448,6 +465,18 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
         }
     }
 
+    // Artifact-backed sweeps run record -> batch -> replay through the
+    // campaign runtime itself, so they compose with --threads, --cache
+    // and every backend; unavailable artifacts fall back to the
+    // bit-equivalent pure-Rust path like `exp` does. (Point sampling
+    // and surrogate calibration above always use the pure-Rust fit —
+    // the artifact path accelerates execution, not planning.)
+    let arts = load_artifacts(opts);
+    let batch_points = num(opts, "batch-size", crate::runtime::DEFAULT_BATCH_POINTS).max(1);
+    // The tag cached results carry: the stub evaluates bit-identically
+    // to the pure-Rust path and shares its tag; the real client's
+    // f32-rounded entries are kept apart (see `cache::EVAL_PJRT`).
+    let eval = eval_tag_for(arts.as_deref());
     let campaign = Campaign::new(&points)
         .threads(num(opts, "threads", 0usize))
         .cache(cache_dir)
@@ -456,7 +485,10 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
         "subprocess" => {
             let shards = num(opts, "shards", 2u64);
             let workdir = out.join("backend-subprocess");
-            campaign.run(&Subprocess::new(shards, workdir))
+            let mut sp = Subprocess::new(shards, workdir);
+            sp.artifact_batch = arts.is_some().then_some(batch_points);
+            sp.eval = eval;
+            campaign.run(&sp)
         }
         "queue" => {
             let qdir = match path_opt(opts, "queue-dir", "sweep") {
@@ -474,9 +506,14 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
             };
             let mut q = FileQueue::new(qdir, tasks, workers);
             q.lease_secs = num(opts, "lease-secs", 30.0f64);
+            q.artifact_batch = arts.is_some().then_some(batch_points);
+            q.eval = eval;
             campaign.run(&q)
         }
-        _ => campaign.run(&InProcess::new()),
+        _ => match &arts {
+            Some(a) => campaign.run(&InProcess::with_artifacts(a.clone(), batch_points)),
+            None => campaign.run(&InProcess::new()),
+        },
     };
     let report = match outcome {
         Ok(r) => r,
@@ -581,19 +618,60 @@ fn cmd_shard(opts: &HashMap<String, String>) -> i32 {
         mine.len(),
         manifest.points.len()
     );
-    let sweep_opts = SweepOptions {
-        threads: num(opts, "threads", 0usize),
-        cache_dir: Some(cache.into()),
-        // --quiet: shard children of the subprocess backend write into
-        // captured pipes nobody drains until exit — steady progress
-        // chatter there would fill the pipe and stall the workers.
-        progress: !opts.contains_key("quiet"),
-    };
-    let report = match run_campaign(&mine, &sweep_opts) {
-        Ok(r) => r,
-        Err(e) => {
-            eprintln!("shard: invalid campaign point — {e}");
-            return 2;
+    let threads = num(opts, "threads", 0usize);
+    // --quiet: shard children of the subprocess backend write into
+    // captured pipes nobody drains until exit — steady progress
+    // chatter there would fill the pipe and stall the workers.
+    let progress = !opts.contains_key("quiet");
+    // Tag the persistence check below expects (the artifact branch
+    // overwrites it with the loaded runtime's actual path).
+    let mut eval = eval_tag_for(None);
+    let report = if opts.contains_key("artifacts") {
+        // Artifact-backed shard: batch within this process. The runtime
+        // *must* load — a silent pure-Rust fallback here would split
+        // the campaign across two evaluation paths and diverge from
+        // its sibling shards.
+        let arts = match Artifacts::load_default() {
+            Ok(a) => Rc::new(a),
+            Err(e) => {
+                eprintln!(
+                    "shard: --artifacts requested but the PJRT runtime failed to \
+                     load: {e}"
+                );
+                return 1;
+            }
+        };
+        let batch =
+            num(opts, "batch-size", crate::runtime::DEFAULT_BATCH_POINTS).max(1);
+        eval = eval_tag_for(Some(arts.as_ref()));
+        let mut campaign =
+            Campaign::new(&mine).threads(threads).cache(Some(cache.into()));
+        if progress {
+            campaign = campaign.stderr_progress();
+        }
+        match campaign.run(&InProcess::with_artifacts(arts, batch)) {
+            Ok(r) => r,
+            Err(ExecError::Point(e)) => {
+                eprintln!("shard: invalid campaign point — {e}");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("shard: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let sweep_opts = SweepOptions {
+            threads,
+            cache_dir: Some(cache.into()),
+            progress,
+        };
+        match run_campaign(&mine, &sweep_opts) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("shard: invalid campaign point — {e}");
+                return 2;
+            }
         }
     };
     println!(
@@ -602,11 +680,15 @@ fn cmd_shard(opts: &HashMap<String, String>) -> i32 {
     );
     // The cache *is* this command's output: a cache-store failure (bad
     // path, full disk) only warns inside run_campaign, so verify every
-    // shard point actually persisted before claiming success.
+    // shard point actually persisted — under this run's evaluation-path
+    // tag, so a stale opposite-path entry cannot mask a failed store —
+    // before claiming success.
     let cache_path = Path::new(cache);
     let unpersisted = mine
         .iter()
-        .filter(|p| sweep::cache_lookup_fp(cache_path, p.fingerprint()).is_none())
+        .filter(|p| {
+            sweep::cache_lookup_fp_eval(cache_path, p.fingerprint(), eval).is_none()
+        })
         .count();
     if unpersisted > 0 {
         eprintln!(
@@ -649,15 +731,21 @@ fn cmd_merge(caches: &[String], opts: &HashMap<String, String>) -> i32 {
     let out: PathBuf = out_p.map(PathBuf::from).unwrap_or_else(|| "results".into());
 
     // Look each distinct fingerprint up once across the shard caches
-    // (first hit wins), then fan results out to duplicates.
+    // (first hit wins), then fan results out to duplicates. The
+    // evaluation-path tag of every used entry is collected in the same
+    // single read + parse.
     let fps: Vec<u64> = manifest.points.iter().map(|p| p.fingerprint()).collect();
     let mut found: HashMap<u64, Option<(usize, HplResult)>> =
         HashMap::with_capacity(fps.len());
+    let mut evals: std::collections::BTreeSet<String> = Default::default();
     for &fp in &fps {
         found.entry(fp).or_insert_with(|| {
-            dirs.iter()
-                .enumerate()
-                .find_map(|(di, d)| sweep::cache_lookup_fp(d, fp).map(|r| (di, r)))
+            dirs.iter().enumerate().find_map(|(di, d)| {
+                sweep::cache_lookup_fp_with_eval(d, fp).map(|(r, e)| {
+                    evals.insert(e);
+                    (di, r)
+                })
+            })
         });
     }
     let missing: Vec<usize> = (0..fps.len()).filter(|&i| found[&fps[i]].is_none()).collect();
@@ -674,6 +762,18 @@ fn cmd_merge(caches: &[String], opts: &HashMap<String, String>) -> i32 {
     }
     let results: Vec<HplResult> =
         fps.iter().map(|fp| found[fp].expect("missing checked above").1).collect();
+
+    // Refuse to assemble a report from mixed evaluation paths: entries
+    // written partly by the real PJRT client and partly by the pure-Rust
+    // path differ in f32 rounding, and a silently mixed campaign.csv
+    // would defeat every bit-identity contract downstream.
+    if evals.len() > 1 {
+        eprintln!(
+            "merge: shard caches mix evaluation paths ({evals:?}) — re-run the \
+             divergent shards on one path before merging"
+        );
+        return 1;
+    }
 
     let mut copy_failures = 0usize;
     if let Some(oc) = out_cache_p {

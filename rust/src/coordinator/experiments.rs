@@ -46,6 +46,9 @@ pub struct ExpCtx {
     pub threads: usize,
     /// Optional on-disk result cache: interrupted experiments resume.
     pub cache_dir: Option<PathBuf>,
+    /// Artifact-backed campaigns: points per batched runtime invocation
+    /// (`exp --batch-size`; see `coordinator::backend::artifact`).
+    pub batch_points: usize,
     /// Report campaign progress/ETA on stderr. Off by default, so
     /// library callers and tests are silent; the CLI turns it on for
     /// interactive `exp` runs.
@@ -113,6 +116,7 @@ impl ExpCtx {
             out_dir: PathBuf::from("results"),
             threads: 0,
             cache_dir: None,
+            batch_points: crate::runtime::DEFAULT_BATCH_POINTS,
             progress: false,
             plan_only: None,
         }
@@ -191,61 +195,35 @@ impl ExpCtx {
     }
 
     /// Execute a declarative point list and return its results in point
-    /// order. Without artifacts the points go through the [`Campaign`]
-    /// API on the in-process backend; artifact-backed contexts run
-    /// sequentially through the XLA pipeline (the PJRT client holds
-    /// process-wide state and is not `Send`). In plan-only mode (see
-    /// [`ExpCtx::plan_only`]) nothing is simulated: the points are
-    /// recorded for manifest export and zero placeholders returned.
+    /// order. Every context goes through the [`Campaign`] API on the
+    /// in-process backend: pure-Rust contexts sample the model
+    /// directly, artifact-backed contexts drive the batched record →
+    /// batch → replay pipeline — parallel and cached like any other
+    /// campaign, with one runtime invocation per `batch_points` wave
+    /// (the PJRT client stays on the coordinating thread). In plan-only
+    /// mode (see [`ExpCtx::plan_only`]) nothing is simulated: the
+    /// points are recorded for manifest export and zero placeholders
+    /// returned.
     pub fn run_points(&self, points: Vec<SimPoint>) -> PointResults {
         if let Some(plan) = &self.plan_only {
             let placeholders = vec![HplResult::default(); points.len()];
             plan.borrow_mut().extend(points);
             return PointResults::new(placeholders);
         }
-        let results = match &self.arts {
-            Some(a) => {
-                if self.threads != 0 || self.cache_dir.is_some() {
-                    // Once per process, not once per experiment: `exp
-                    // all` runs many campaigns through this path.
-                    static WARNED: std::sync::Once = std::sync::Once::new();
-                    WARNED.call_once(|| {
-                        eprintln!(
-                            "warning: --threads and --cache are ignored while PJRT \
-                             artifacts are loaded — the artifact path is \
-                             single-threaded and uncached until the batched-artifact \
-                             backend lands; pass --no-artifacts to use the parallel \
-                             campaign runtime"
-                        );
-                    });
-                }
-                points
-                    .iter()
-                    .map(|p| {
-                        let (topo, net, dgemm) = p
-                            .platform
-                            .realize(p.seed)
-                            .unwrap_or_else(|e| panic!("point '{}': {e}", p.label));
-                        simulate_with_artifacts(
-                            &p.cfg, &topo, &net, &dgemm, a, p.rpn, p.seed,
-                        )
-                        .expect("artifact simulation")
-                    })
-                    .collect()
-            }
-            None => {
-                let mut campaign = Campaign::new(&points)
-                    .threads(self.threads)
-                    .cache(self.cache_dir.clone());
-                if self.progress {
-                    campaign = campaign.stderr_progress();
-                }
-                campaign
-                    .run(&InProcess::new())
-                    .unwrap_or_else(|e| panic!("invalid campaign point — {e}"))
-                    .results
-            }
+        let mut campaign = Campaign::new(&points)
+            .threads(self.threads)
+            .cache(self.cache_dir.clone());
+        if self.progress {
+            campaign = campaign.stderr_progress();
+        }
+        let backend = match &self.arts {
+            Some(a) => InProcess::with_artifacts(a.clone(), self.batch_points),
+            None => InProcess::new(),
         };
+        let results = campaign
+            .run(&backend)
+            .unwrap_or_else(|e| panic!("campaign failed — {e}"))
+            .results;
         PointResults::new(results)
     }
 

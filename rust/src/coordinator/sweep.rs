@@ -10,10 +10,12 @@
 //! `Campaign` + `InProcess`, so existing callers compile unchanged.
 
 pub use crate::coordinator::backend::{
-    cache_lookup, cache_lookup_fp, cache_path_for, cache_path_fp, cache_store,
-    campaign_table, point_seed, resolve_threads, result_from_json, result_to_json,
-    Campaign, CampaignReport, ExecBackend, ExecError, InProcess, Platform, PointError,
-    ProgressEvent, RealizedPlatform, SimPoint, SweepOptions, WorkPlan, MODEL_VERSION,
+    cache_lookup, cache_lookup_fp, cache_lookup_fp_eval, cache_lookup_fp_with_eval,
+    cache_path_for, cache_path_fp, cache_store, campaign_table, point_seed,
+    resolve_threads, result_from_json, result_to_json, Campaign, CampaignReport,
+    ExecBackend, ExecError, InProcess, Platform, PointError, ProgressEvent,
+    RealizedPlatform, SimPoint, SweepOptions, WorkPlan, EVAL_DIRECT, EVAL_PJRT,
+    MODEL_VERSION,
 };
 
 /// Execute a campaign on the in-process work-stealing pool: serve

@@ -253,6 +253,12 @@ pub fn run_once(
 /// Production pipeline: record the (data-independent) dgemm schedule,
 /// evaluate every duration in batch through the XLA artifact, then
 /// replay. `seed` drives the half-normal draws.
+///
+/// This is the single-point form of the pipeline; campaigns batch the
+/// evaluation *across* points instead (one
+/// `Artifacts::evaluate_batch` invocation per wave — see
+/// `coordinator::backend::artifact`). Both forms share the same
+/// request/replay surfaces, so they evaluate identically.
 pub fn simulate_with_artifacts(
     cfg: &HplConfig,
     topo: &Topology,
@@ -266,37 +272,17 @@ pub fn simulate_with_artifacts(
     // data-independent so any timing works).
     let recorder = Recorder::new(dgemm.clone(), cfg.nranks());
     run_once(cfg, topo.clone(), model.clone(), recorder.clone(), ranks_per_node);
-    let (mnk, idx, rank_epoch) = recorder.flatten();
-    let total = mnk.len();
+    let total = recorder.total();
 
-    // Batched stochastic evaluation through PJRT.
-    let mut mu_tab = Vec::with_capacity(dgemm.nodes.len());
-    let mut sg_tab = Vec::with_capacity(dgemm.nodes.len());
-    for c in &dgemm.nodes {
-        let (mu, sg) = c.to_f32_lanes();
-        mu_tab.push(mu);
-        sg_tab.push(sg);
-    }
-    // Node indices recorded are physical node ids; a homogeneous model
-    // (single entry) maps them all to 0.
-    let idx: Vec<i32> = if dgemm.nodes.len() == 1 {
-        vec![0; idx.len()]
-    } else {
-        idx
-    };
-    // One noise draw per (rank, epoch), shared by every call of that
-    // rank's iteration (episodic temporal variability — see provider.rs).
-    let mut z = vec![0f32; total];
-    let mut cache: std::collections::HashMap<(u32, u32), f32> = Default::default();
-    for (zi, &(r, e)) in z.iter_mut().zip(&rank_epoch) {
-        *zi = *cache.entry((r, e)).or_insert_with(|| {
-            crate::blas::provider::epoch_z(seed, r as usize, e as usize) as f32
-        });
-    }
-    let durations = arts.dgemm_durations(&mnk, &idx, &mu_tab, &sg_tab, &z)?;
+    // Batched stochastic evaluation through PJRT: the flattened shapes,
+    // the per-(rank, epoch) episodic noise draws, and the coefficient
+    // table travel as one request.
+    let request = recorder.request(seed);
+    let durations = arts.evaluate_batch(std::slice::from_ref(&request))?;
 
-    // Pass 2: replay with pooled durations.
-    let pool = PoolSource::new(&recorder, &durations);
+    // Pass 2: replay with pooled durations (the schedule moves out of
+    // the spent recorder instead of being cloned).
+    let pool = PoolSource::from_calls(recorder.calls.take(), &durations[0]);
     let mut res = run_once(cfg, topo.clone(), model.clone(), pool, ranks_per_node);
     res.dgemm_calls = total;
     Ok(res)

@@ -2,7 +2,7 @@
 
 use std::path::{Path, PathBuf};
 
-use super::{Error, Result, FEATS};
+use super::{DgemmRequest, Error, Result, FEATS};
 use crate::stats::json::Json;
 
 /// Convert any displayable error (e.g. the `xla` crate's) into ours.
@@ -106,6 +106,14 @@ impl Artifacts {
         self.client.platform_name()
     }
 
+    /// Whether this runtime's results are bit-identical to the
+    /// pure-Rust direct path. The real client evaluates in f32, so its
+    /// results differ in the low bits; the cache layer keys its
+    /// evaluation-path tags off this.
+    pub fn bit_identical_to_direct(&self) -> bool {
+        false
+    }
+
     /// Batched stochastic dgemm durations.
     ///
     /// * `mnk`: `[B][(m, n, k)]` design points,
@@ -184,6 +192,85 @@ impl Artifacts {
             let durs = result.to_tuple1().map_err(xe)?.to_vec::<f32>().map_err(xe)?;
             out.extend_from_slice(&durs[..n]);
             off += n;
+        }
+        Ok(out)
+    }
+
+    /// Batched cross-point evaluation: concatenate many points' request
+    /// streams into as few device executions as possible. Consecutive
+    /// requests are packed into chunks whose combined coefficient
+    /// tables fit `nodes_cap` (node indices are offset into the packed
+    /// table); each chunk goes through [`Artifacts::dgemm_durations`],
+    /// which further chunks the call dimension over the compiled batch
+    /// variants — so device memory stays bounded no matter how many
+    /// points one wave carries.
+    pub fn evaluate_batch(&self, reqs: &[DgemmRequest]) -> Result<Vec<Vec<f64>>> {
+        let mut out: Vec<Vec<f64>> =
+            reqs.iter().map(|r| Vec::with_capacity(r.mnk.len())).collect();
+        let mut start = 0usize;
+        while start < reqs.len() {
+            // Pack [start, end) while the combined node tables fit.
+            // *Distinct* tables only: same-platform waves — the
+            // materialization-memo common case — carry clones of one
+            // model per request, and packing each copy would exhaust
+            // nodes_cap with duplicates and shatter the wave into many
+            // device executions.
+            let mut tables: Vec<&[crate::blas::NodeCoef]> = Vec::new();
+            let mut table_off: Vec<usize> = Vec::new();
+            let mut req_off: Vec<i32> = Vec::new();
+            let mut nodes = 0usize;
+            let mut end = start;
+            while end < reqs.len() {
+                let coef = reqs[end].coef.as_slice();
+                if coef.len() > self.nodes_cap {
+                    return Err(format!(
+                        "batch entry {end} has {} nodes but the artifact \
+                         addresses at most {}",
+                        coef.len(),
+                        self.nodes_cap
+                    )
+                    .into());
+                }
+                let off = if let Some(ti) = tables.iter().position(|t| *t == coef) {
+                    table_off[ti]
+                } else {
+                    if nodes + coef.len() > self.nodes_cap && end > start {
+                        break;
+                    }
+                    tables.push(coef);
+                    table_off.push(nodes);
+                    let o = nodes;
+                    nodes += coef.len();
+                    o
+                };
+                req_off.push(off as i32);
+                end += 1;
+            }
+            let calls: usize = reqs[start..end].iter().map(|r| r.mnk.len()).sum();
+            let mut mu_tab = Vec::with_capacity(nodes);
+            let mut sg_tab = Vec::with_capacity(nodes);
+            for t in &tables {
+                for c in *t {
+                    let (mu, sg) = c.to_f32_lanes();
+                    mu_tab.push(mu);
+                    sg_tab.push(sg);
+                }
+            }
+            let mut mnk = Vec::with_capacity(calls);
+            let mut idx = Vec::with_capacity(calls);
+            let mut z = Vec::with_capacity(calls);
+            for (r, &off) in reqs[start..end].iter().zip(&req_off) {
+                mnk.extend_from_slice(&r.mnk);
+                idx.extend(r.idx.iter().map(|&i| i + off));
+                z.extend(r.z.iter().map(|&v| v as f32));
+            }
+            let durs = self.dgemm_durations(&mnk, &idx, &mu_tab, &sg_tab, &z)?;
+            let mut off = 0usize;
+            for (r, slot) in reqs[start..end].iter().zip(&mut out[start..end]) {
+                slot.extend(durs[off..off + r.mnk.len()].iter().map(|&d| d as f64));
+                off += r.mnk.len();
+            }
+            start = end;
         }
         Ok(out)
     }

@@ -7,9 +7,20 @@
 //! loads those artifacts once per process with the PJRT CPU client and
 //! exposes typed, chunked entry points. The default build carries a
 //! stub whose `load` fails cleanly, so every caller transparently falls
-//! back to the bit-equivalent pure-Rust model path.
+//! back to the bit-equivalent pure-Rust model path — unless
+//! [`STUB_ENV`] enables the *functional* stub, a pure-Rust evaluator
+//! bit-identical to the direct path that lets CI exercise (and count
+//! the invocations of) the batched campaign pipeline without XLA.
+//!
+//! Campaigns batch evaluation *across* points:
+//! `Artifacts::evaluate_batch` takes many [`DgemmRequest`]s — one per
+//! recorded simulation point — and both implementations chunk
+//! internally to bound device memory (see
+//! `coordinator::backend::artifact`).
 
 use std::path::PathBuf;
+
+use crate::blas::NodeCoef;
 
 /// Boxed error type of the runtime layer (the offline crate set has no
 /// `anyhow`).
@@ -22,6 +33,50 @@ pub type Result<T> = std::result::Result<T, Error>;
 /// Shared by the real client and the stub so the two build
 /// configurations cannot drift apart.
 pub const FEATS: usize = 8;
+
+/// Default number of campaign points whose dgemm request streams are
+/// concatenated into one batched runtime invocation (`sweep
+/// --batch-size`). Bounds host/device memory: a wave holds the
+/// flattened `[m, n, k]` tensors, node indices and noise draws of this
+/// many points at once.
+pub const DEFAULT_BATCH_POINTS: usize = 32;
+
+/// Environment variable enabling the *functional* stub runtime in the
+/// default (no-`pjrt`) build: `Artifacts::load` then succeeds and
+/// evaluates the dgemm model in pure Rust — bit-identical to the
+/// direct path — so the whole record → batch → replay pipeline can be
+/// exercised (and its invocation count asserted) without a vendored
+/// `xla` crate. Used by CI and the backend-equivalence tests; has no
+/// effect on the real client build.
+pub const STUB_ENV: &str = "HPLSIM_PJRT_STUB";
+
+/// One campaign point's recorded dgemm request stream, ready for
+/// batched evaluation: the flattened shapes and per-call noise draws of
+/// `blas::provider::Recorder::request`, plus the point's own
+/// coefficient table. `Artifacts::evaluate_batch` concatenates many of
+/// these — offsetting the node indices into one combined table — so a
+/// whole campaign wave costs one runtime invocation instead of one per
+/// point.
+#[derive(Clone, Debug)]
+pub struct DgemmRequest {
+    /// `[m, n, k]` per recorded call, in `Recorder::flatten` order.
+    pub mnk: Vec<[f32; 3]>,
+    /// Node index per call into `coef` (homogeneous models map to 0).
+    pub idx: Vec<i32>,
+    /// Signed standard-normal draw per call — the episodic
+    /// per-(rank, epoch) draw; evaluators take `|z|` (half-normal).
+    pub z: Vec<f64>,
+    /// Per-node polynomial coefficients, full f64 precision (the PJRT
+    /// client casts to the artifact's f32 lanes at call time).
+    pub coef: Vec<NodeCoef>,
+}
+
+impl DgemmRequest {
+    /// Recorded calls in this request.
+    pub fn calls(&self) -> usize {
+        self.mnk.len()
+    }
+}
 
 /// Locate the artifacts directory: `$HPLSIM_ARTIFACTS`, `artifacts/`,
 /// or `../artifacts/` relative to the current directory.

@@ -1,20 +1,41 @@
 //! Stub PJRT runtime used when the `pjrt` feature is disabled.
 //!
-//! Keeps the full `Artifacts` API surface so callers compile unchanged,
-//! but `load` always fails — which every call site already handles by
-//! falling back to the pure-Rust model path (the two are bit-equivalent
-//! up to f32 rounding; see `rust/tests/integration.rs`).
+//! Two modes:
+//!
+//! * **Inert** (the default): keeps the full `Artifacts` API surface so
+//!   callers compile unchanged, but `load` always fails — which every
+//!   call site already handles by falling back to the pure-Rust model
+//!   path (the two are bit-equivalent up to f32 rounding; see
+//!   `rust/tests/integration.rs`).
+//! * **Functional** (`$HPLSIM_PJRT_STUB=1`, or [`Artifacts::stub`] in
+//!   tests): `load` succeeds and every entry point evaluates the model
+//!   in pure Rust. [`Artifacts::evaluate_batch`] computes each duration
+//!   with the *exact* f64 arithmetic of `blas::DirectSource`, so an
+//!   artifact-backed campaign through the record → batch → replay
+//!   pipeline is bit-identical to the direct path — which is what lets
+//!   CI `cmp` an artifact-backed `campaign.csv` against the pure-Rust
+//!   report, and lets tests count batched runtime invocations through
+//!   [`Artifacts::calls`] without a vendored `xla` crate.
 
+use std::cell::Cell;
 use std::path::{Path, PathBuf};
 
-use super::{Result, FEATS};
+use super::{DgemmRequest, Result, FEATS, STUB_ENV};
 
 const UNAVAILABLE: &str = "hplsim was built without the `pjrt` feature; \
      the XLA artifact path is unavailable (the pure-Rust model path is \
      bit-equivalent — rebuild with `--features pjrt` and a vendored \
-     xla crate to enable PJRT)";
+     xla crate to enable PJRT, or set HPLSIM_PJRT_STUB=1 for the \
+     functional stub runtime)";
 
-/// Unconstructable stand-in for the PJRT artifact set.
+/// Whether the functional stub runtime is enabled by the environment.
+fn stub_enabled() -> bool {
+    std::env::var(STUB_ENV).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Stand-in for the PJRT artifact set. Unconstructable in the inert
+/// mode; a deterministic pure-Rust evaluator in the functional mode
+/// (see module docs).
 pub struct Artifacts {
     /// Max nodes addressable by one coefficient table.
     pub nodes_cap: usize,
@@ -22,9 +43,11 @@ pub struct Artifacts {
     pub cal_p: usize,
     /// Calibration chunk: samples per node per call.
     pub cal_s: usize,
-    /// Executions performed (perf accounting).
-    pub calls: std::cell::Cell<u64>,
-    _unconstructable: (),
+    /// Executions performed (perf accounting): one per
+    /// `evaluate_batch` / `dgemm_durations` / `calibrate` invocation —
+    /// the counter the batched-invocation tests assert on.
+    pub calls: Cell<u64>,
+    functional: bool,
 }
 
 impl Artifacts {
@@ -33,48 +56,222 @@ impl Artifacts {
         super::default_artifacts_dir()
     }
 
-    /// Always fails in the stub build.
+    /// Fails in the inert stub build; succeeds with the functional stub
+    /// when `$HPLSIM_PJRT_STUB` is set (no artifact files are read).
     pub fn load(_dir: &Path) -> Result<Artifacts> {
-        Err(UNAVAILABLE.into())
+        if stub_enabled() {
+            Ok(Self::stub())
+        } else {
+            Err(UNAVAILABLE.into())
+        }
     }
 
-    /// Always fails in the stub build.
+    /// Same env gate as [`Artifacts::load`], from the default directory.
     pub fn load_default() -> Result<Artifacts> {
         Self::load(&Self::default_dir())
+    }
+
+    /// The functional stub runtime: a deterministic pure-Rust evaluator
+    /// whose batched results are bit-identical to the direct model path
+    /// and whose [`Artifacts::calls`] counter counts invocations. Test
+    /// and CI hook; the capacity knobs mirror a small real artifact set.
+    pub fn stub() -> Artifacts {
+        Artifacts {
+            nodes_cap: 1024,
+            cal_p: 8,
+            cal_s: 512,
+            calls: Cell::new(0),
+            functional: true,
+        }
     }
 
     pub fn platform(&self) -> String {
         "stub".into()
     }
 
-    /// Unreachable (no `Artifacts` value can exist in the stub build).
-    pub fn dgemm_durations(
-        &self,
-        _mnk: &[[f32; 3]],
-        _idx: &[i32],
-        _mu_tab: &[[f32; FEATS]],
-        _sg_tab: &[[f32; FEATS]],
-        _z: &[f32],
-    ) -> Result<Vec<f32>> {
-        Err(UNAVAILABLE.into())
+    /// Whether this runtime's results are bit-identical to the
+    /// pure-Rust direct path. True for the stub (its `evaluate_batch`
+    /// is the direct arithmetic); the real client is f32-rounded. The
+    /// cache layer keys its evaluation-path tags off this.
+    pub fn bit_identical_to_direct(&self) -> bool {
+        true
     }
 
-    /// Unreachable (no `Artifacts` value can exist in the stub build).
+    /// Batched stochastic dgemm durations over f32 coefficient lanes
+    /// (the per-point legacy surface; the campaign pipeline uses
+    /// [`Artifacts::evaluate_batch`]). Functional mode evaluates the
+    /// polynomial in f64 from the f32 lanes, mirroring the artifact's
+    /// formula; inert mode fails like every other entry point.
+    pub fn dgemm_durations(
+        &self,
+        mnk: &[[f32; 3]],
+        idx: &[i32],
+        mu_tab: &[[f32; FEATS]],
+        sg_tab: &[[f32; FEATS]],
+        z: &[f32],
+    ) -> Result<Vec<f32>> {
+        if !self.functional {
+            return Err(UNAVAILABLE.into());
+        }
+        assert_eq!(idx.len(), mnk.len());
+        assert_eq!(z.len(), mnk.len());
+        assert_eq!(mu_tab.len(), sg_tab.len());
+        let mut out = Vec::with_capacity(mnk.len());
+        for i in 0..mnk.len() {
+            let node = idx[i] as usize;
+            let (mu_c, sg_c) = (
+                mu_tab.get(node).ok_or("node index out of range")?,
+                &sg_tab[node],
+            );
+            let (m, n, k) =
+                (mnk[i][0] as f64, mnk[i][1] as f64, mnk[i][2] as f64);
+            let feats = [m * n * k, m * n, m * k, n * k, 1.0];
+            let mut mu = 0.0f64;
+            let mut sg = 0.0f64;
+            for (l, f) in feats.iter().enumerate() {
+                mu += mu_c[l] as f64 * f;
+                sg += sg_c[l] as f64 * f;
+            }
+            out.push((mu + (z[i] as f64).abs() * sg.max(0.0)).max(0.0) as f32);
+        }
+        self.calls.set(self.calls.get() + 1);
+        Ok(out)
+    }
+
+    /// Batched cross-point evaluation: one runtime invocation for a
+    /// whole campaign wave. Functional mode computes every duration
+    /// with the exact f64 arithmetic of `blas::DirectSource`
+    /// (`(mu(m,n,k) + |z| * sigma(m,n,k)).max(0)`), so the batched
+    /// replay is bit-identical to the direct path.
+    pub fn evaluate_batch(&self, reqs: &[DgemmRequest]) -> Result<Vec<Vec<f64>>> {
+        if !self.functional {
+            return Err(UNAVAILABLE.into());
+        }
+        let mut out = Vec::with_capacity(reqs.len());
+        for (ri, r) in reqs.iter().enumerate() {
+            if r.idx.len() != r.mnk.len() || r.z.len() != r.mnk.len() {
+                return Err(format!(
+                    "batch entry {ri}: tensor lengths disagree ({} shapes, {} \
+                     indices, {} draws)",
+                    r.mnk.len(),
+                    r.idx.len(),
+                    r.z.len()
+                )
+                .into());
+            }
+            let mut durs = Vec::with_capacity(r.mnk.len());
+            for i in 0..r.mnk.len() {
+                let c = r.coef.get(r.idx[i] as usize).ok_or_else(|| {
+                    format!(
+                        "batch entry {ri} call {i}: node index {} outside the \
+                         {}-node coefficient table",
+                        r.idx[i],
+                        r.coef.len()
+                    )
+                })?;
+                let (m, n, k) =
+                    (r.mnk[i][0] as f64, r.mnk[i][1] as f64, r.mnk[i][2] as f64);
+                durs.push(
+                    (c.mu_of(m, n, k) + r.z[i].abs() * c.sigma_of(m, n, k)).max(0.0),
+                );
+            }
+            out.push(durs);
+        }
+        self.calls.set(self.calls.get() + 1);
+        Ok(out)
+    }
+
+    /// Per-node OLS calibration. Functional mode runs the pure-Rust fit
+    /// (`calibration::fit_node_rust` — the same maths the XLA calibrate
+    /// artifact implements) and casts to the artifact's f32 lanes.
     pub fn calibrate(
         &self,
-        _samples: &[Vec<(f32, f32, f32, f32)>],
+        samples: &[Vec<(f32, f32, f32, f32)>],
     ) -> Result<(Vec<[f32; FEATS]>, Vec<[f32; FEATS]>)> {
-        Err(UNAVAILABLE.into())
+        if !self.functional {
+            return Err(UNAVAILABLE.into());
+        }
+        for (i, s) in samples.iter().enumerate() {
+            assert_eq!(
+                s.len(),
+                self.cal_s,
+                "node {i}: need exactly {} calibration samples",
+                self.cal_s
+            );
+        }
+        let mut mu_out = Vec::with_capacity(samples.len());
+        let mut sg_out = Vec::with_capacity(samples.len());
+        for ns in samples {
+            let c = crate::calibration::fit_node_rust(ns);
+            let (mu, sg) = c.to_f32_lanes();
+            mu_out.push(mu);
+            sg_out.push(sg);
+        }
+        self.calls.set(self.calls.get() + 1);
+        Ok((mu_out, sg_out))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::blas::NodeCoef;
 
     #[test]
     fn load_fails_cleanly_without_pjrt() {
-        let err = Artifacts::load_default().err().expect("stub must not load");
-        assert!(err.to_string().contains("pjrt"));
+        // The CI stub steps export HPLSIM_PJRT_STUB for whole test
+        // binaries; honor either mode rather than mutating the env of
+        // this multithreaded process.
+        match Artifacts::load_default() {
+            Ok(a) => {
+                assert!(stub_enabled());
+                assert_eq!(a.platform(), "stub");
+            }
+            Err(e) => {
+                assert!(!stub_enabled());
+                assert!(e.to_string().contains("pjrt"));
+            }
+        }
+    }
+
+    #[test]
+    fn functional_stub_matches_direct_source_arithmetic() {
+        let a = Artifacts::stub();
+        let c = NodeCoef {
+            mu: [1e-11, 2e-10, 0.0, 0.0, 5e-7],
+            sigma: [3e-13, 0.0, 0.0, 0.0, 1e-8],
+        };
+        let req = DgemmRequest {
+            mnk: vec![[100.0, 200.0, 50.0], [64.0, 64.0, 64.0]],
+            idx: vec![0, 0],
+            z: vec![-1.25, 0.5],
+            coef: vec![c],
+        };
+        let out = a.evaluate_batch(std::slice::from_ref(&req)).unwrap();
+        assert_eq!(out.len(), 1);
+        for (i, d) in out[0].iter().enumerate() {
+            let (m, n, k) = (
+                req.mnk[i][0] as f64,
+                req.mnk[i][1] as f64,
+                req.mnk[i][2] as f64,
+            );
+            let want =
+                (c.mu_of(m, n, k) + req.z[i].abs() * c.sigma_of(m, n, k)).max(0.0);
+            assert_eq!(d.to_bits(), want.to_bits(), "call {i} not bit-identical");
+        }
+        assert_eq!(a.calls.get(), 1, "one invocation per evaluate_batch call");
+    }
+
+    #[test]
+    fn functional_stub_rejects_bad_node_indices() {
+        let a = Artifacts::stub();
+        let req = DgemmRequest {
+            mnk: vec![[8.0, 8.0, 8.0]],
+            idx: vec![3],
+            z: vec![0.0],
+            coef: vec![NodeCoef::naive(1e-11)],
+        };
+        let err = a.evaluate_batch(&[req]).unwrap_err();
+        assert!(err.to_string().contains("node index"), "{err}");
     }
 }

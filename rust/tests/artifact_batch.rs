@@ -1,0 +1,359 @@
+//! Batched artifact evaluation across execution backends.
+//!
+//! These tests drive the record → batch → replay pipeline through the
+//! *functional stub* runtime (`runtime::Artifacts::stub`, or
+//! `HPLSIM_PJRT_STUB=1` for spawned processes), whose batched results
+//! are bit-identical to the pure-Rust direct path by construction — so
+//! every assertion here is exact: byte-identical `campaign.csv`
+//! reports on `InProcess` (8 threads), `Subprocess` and `FileQueue`,
+//! at most `ceil(points / batch_size)` batched runtime invocations
+//! (the counting stub), and cache interchangeability with the direct
+//! path.
+//!
+//! The stub constructor only exists in the default build; with
+//! `--features pjrt` this suite is compiled out (the real client is
+//! exercised by the per-point artifact tests when artifacts exist).
+#![cfg(not(feature = "pjrt"))]
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use hplsim::blas::{DgemmModel, NodeCoef};
+use hplsim::coordinator::backend::{
+    campaign_table, point_seed, Campaign, InProcess, SimPoint,
+};
+use hplsim::coordinator::manifest::Manifest;
+use hplsim::hpl::{Bcast, HplConfig, HplResult, Rfact, SwapAlg};
+use hplsim::network::{NetModel, Topology};
+use hplsim::platform::{
+    ComputeSpec, DayDraw, LinkVariability, NetSpec, PlatformScenario, SampleOpts,
+    TopoSpec,
+};
+use hplsim::runtime::Artifacts;
+
+fn hplsim_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_hplsim"))
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("hplsim_artbatch_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A small campaign mixing explicit heterogeneous payloads with a
+/// seed-sensitive scenario, so the batched pipeline exercises both
+/// platform kinds (and the in-worker materialization memo) exactly like
+/// the backend-equivalence suite.
+fn campaign(npoints: usize, campaign_seed: u64) -> Vec<SimPoint> {
+    let dgemm = DgemmModel {
+        nodes: (0..4)
+            .map(|i| NodeCoef {
+                mu: [1e-11 * (1.0 + 0.02 * i as f64), 0.0, 0.0, 0.0, 5e-7],
+                sigma: [3e-13, 0.0, 0.0, 0.0, 0.0],
+            })
+            .collect(),
+    };
+    let scenario = PlatformScenario {
+        topo: TopoSpec::Star { nodes: 4, node_bw: 12.5e9, loop_bw: 40e9 },
+        net: NetSpec::Ideal,
+        compute: ComputeSpec::Hierarchical {
+            model: hplsim::platform::HierSpec {
+                mu: [5.6e-11, 8.0e-7, 1.7e-12],
+                sigma_s: hplsim::stats::Matrix::zeros(3, 3),
+                sigma_t: hplsim::stats::Matrix::zeros(3, 3),
+            },
+            opts: SampleOpts {
+                nodes: 4,
+                cluster_seed: None,
+                day: DayDraw::PerPoint,
+                gamma_cv: None,
+                alpha_scale: 1.0,
+                evict_slowest: 0,
+            },
+        },
+        links: LinkVariability::None,
+    };
+    (0..npoints)
+        .map(|i| {
+            let (p, q) = [(1, 2), (2, 2), (1, 4), (2, 3)][i % 4];
+            let cfg = HplConfig {
+                n: 96 + 32 * (i % 5),
+                nb: [16, 32][i % 2],
+                p,
+                q,
+                depth: i % 2,
+                bcast: Bcast::ALL[i % Bcast::ALL.len()],
+                swap: SwapAlg::ALL[i % SwapAlg::ALL.len()],
+                swap_threshold: 64,
+                rfact: Rfact::ALL[i % Rfact::ALL.len()],
+                nbmin: 8,
+            };
+            let seed = point_seed(campaign_seed, i as u64);
+            if i % 3 == 2 {
+                SimPoint::scenario(format!("ab{i}"), cfg, scenario.clone(), 2, seed)
+            } else {
+                SimPoint::explicit(
+                    format!("ab{i}"),
+                    cfg,
+                    Topology::star(4, 12.5e9, 40e9),
+                    NetModel::ideal(),
+                    dgemm.clone(),
+                    2,
+                    seed,
+                )
+            }
+        })
+        .collect()
+}
+
+/// The exact `campaign.csv` bytes for (points, results), via the real
+/// `Table::write_csv` path.
+fn csv(points: &[SimPoint], results: &[HplResult]) -> Vec<u8> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "hplsim_artbatch_csv_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    campaign_table(points, results).write_csv(&dir, "campaign").unwrap();
+    let bytes = std::fs::read(dir.join("campaign.csv")).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    bytes
+}
+
+/// The core bit-identity contract: the batched pipeline on an 8-thread
+/// pool reproduces the pure-Rust direct path exactly, at any batch
+/// size, and sets the dgemm-call accounting the direct path lacks.
+#[test]
+fn batched_pipeline_is_bit_identical_to_the_direct_path() {
+    let points = campaign(10, 5);
+    let direct = Campaign::new(&points)
+        .threads(2)
+        .run(&InProcess::new())
+        .expect("direct reference");
+    assert_eq!(direct.computed, 10);
+    let want = csv(&points, &direct.results);
+
+    for batch in [1usize, 4, 64] {
+        let arts = Rc::new(Artifacts::stub());
+        let rep = Campaign::new(&points)
+            .threads(8)
+            .run(&InProcess::with_artifacts(arts, batch))
+            .expect("batched campaign");
+        assert_eq!(rep.computed, 10);
+        for (i, (a, b)) in direct.results.iter().zip(&rep.results).enumerate() {
+            assert_eq!(
+                a.seconds.to_bits(),
+                b.seconds.to_bits(),
+                "point {i} seconds diverged at batch size {batch}"
+            );
+            assert_eq!(a.gflops.to_bits(), b.gflops.to_bits());
+            assert_eq!(a.comm.messages, b.comm.messages);
+            assert!(b.dgemm_calls > 0, "batched path accounts its dgemm calls");
+        }
+        assert_eq!(csv(&points, &rep.results), want, "csv diverged at batch {batch}");
+    }
+}
+
+/// The acceptance bound: at most `ceil(points / batch_size)` batched
+/// runtime invocations, counted by the stub.
+#[test]
+fn invocation_count_is_bounded_by_points_over_batch_size() {
+    let points = campaign(10, 7);
+    for (batch, max_calls) in [(3usize, 4u64), (5, 2), (16, 1)] {
+        let arts = Rc::new(Artifacts::stub());
+        let rep = Campaign::new(&points)
+            .threads(4)
+            .run(&InProcess::with_artifacts(arts.clone(), batch))
+            .unwrap();
+        assert_eq!(rep.computed, 10);
+        let calls = arts.calls.get();
+        assert!(
+            calls >= 1 && calls <= max_calls,
+            "batch {batch}: {calls} invocations, expected 1..={max_calls}"
+        );
+    }
+}
+
+/// Batched results land in the ordinary fingerprint-keyed cache: a
+/// later direct-path campaign replays them without recomputing — the
+/// interchangeable-currency contract shard/merge relies on.
+#[test]
+fn batched_results_replay_through_the_shared_cache() {
+    let base = fresh_dir("cache");
+    let points = campaign(6, 11);
+    let cache = base.join("cache");
+    let arts = Rc::new(Artifacts::stub());
+    let first = Campaign::new(&points)
+        .threads(4)
+        .cache(Some(cache.clone()))
+        .run(&InProcess::with_artifacts(arts, 3))
+        .unwrap();
+    assert_eq!(first.computed, 6);
+
+    let replay = Campaign::new(&points)
+        .threads(2)
+        .cache(Some(cache))
+        .run(&InProcess::new())
+        .unwrap();
+    assert_eq!(replay.computed, 0, "batched results must replay from cache");
+    assert_eq!(replay.cached, 6);
+    assert_eq!(csv(&points, &first.results), csv(&points, &replay.results));
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Evaluation-path isolation: a cache entry tagged as real-PJRT output
+/// (f32-rounded) is never replayed by a direct-path campaign — the
+/// point recomputes and the entry is re-stored under the current path,
+/// so one cache can never blend the two evaluation paths into a report.
+#[test]
+fn mismatched_eval_tag_entries_are_recomputed_not_replayed() {
+    use hplsim::coordinator::backend::{
+        cache_lookup_fp_with_eval, cache_path_fp, MODEL_VERSION,
+    };
+    let base = fresh_dir("evaltag");
+    let points = campaign(2, 31);
+    let cache = base.join("cache");
+    std::fs::create_dir_all(&cache).unwrap();
+    // Forge a plausible entry claiming to be real-client output.
+    let fp = points[0].fingerprint();
+    std::fs::write(
+        cache_path_fp(&cache, fp),
+        format!(
+            "{{\"fingerprint\":\"{fp:016x}\",\"model_version\":{MODEL_VERSION},\
+             \"eval\":\"pjrt\",\"label\":\"forged\",\"result\":{{\
+             \"seconds\":1.0,\"gflops\":2.0,\"messages\":3,\"bytes\":4.0,\
+             \"iprobes\":0,\"events\":5,\"dgemm_calls\":6}}}}"
+        ),
+    )
+    .unwrap();
+    let rep = Campaign::new(&points)
+        .threads(2)
+        .cache(Some(cache.clone()))
+        .run(&InProcess::new())
+        .unwrap();
+    assert_eq!(rep.cached, 0, "a pjrt-tagged entry must not serve a direct campaign");
+    assert_eq!(rep.computed, 2);
+    assert_ne!(rep.results[0].seconds, 1.0, "the forged result must not be used");
+    assert_eq!(
+        cache_lookup_fp_with_eval(&cache, fp).map(|(_, e)| e).as_deref(),
+        Some("direct"),
+        "recomputation re-stores the entry under the current path"
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// The full acceptance matrix at the CLI surface: an artifact-backed
+/// sweep (stub runtime via HPLSIM_PJRT_STUB on the spawned processes —
+/// children inherit it) over InProcess with 8 threads, Subprocess
+/// shards and a FileQueue with real workers emits a campaign.csv
+/// byte-identical to the pure-Rust report.
+#[test]
+fn artifact_backed_sweep_is_byte_identical_on_every_backend() {
+    let base = fresh_dir("cli");
+    let points = campaign(8, 17);
+    let mpath = base.join("campaign.json");
+    Manifest::new(points).save(&mpath).unwrap();
+
+    let run = |extra: &[&str], out: &Path, stub: bool| {
+        let mut cmd = std::process::Command::new(hplsim_exe());
+        cmd.arg("sweep")
+            .arg("--manifest")
+            .arg(&mpath)
+            .arg("--threads")
+            .arg("8")
+            .arg("--no-cache")
+            .arg("--out")
+            .arg(out);
+        for a in extra {
+            cmd.arg(a);
+        }
+        if stub {
+            cmd.env("HPLSIM_PJRT_STUB", "1");
+        }
+        let out_ = cmd
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::piped())
+            .output()
+            .expect("spawn hplsim sweep");
+        assert!(
+            out_.status.success(),
+            "sweep {extra:?} exited with {} — {}",
+            out_.status,
+            String::from_utf8_lossy(&out_.stderr)
+        );
+        (
+            std::fs::read(out.join("campaign.csv")).expect("campaign.csv written"),
+            String::from_utf8_lossy(&out_.stderr).into_owned(),
+        )
+    };
+
+    let (want, _) = run(&["--no-artifacts"], &base.join("out-pure"), false);
+
+    let (inproc, err) = run(&["--batch-size", "3"], &base.join("out-inproc"), true);
+    assert!(
+        err.contains("artifacts: loaded (stub PJRT)"),
+        "stub runtime did not engage: {err}"
+    );
+    assert!(
+        !err.contains("are ignored while PJRT"),
+        "the retired ignored-flags warning resurfaced: {err}"
+    );
+    assert_eq!(inproc, want, "batched in-process report diverged from pure Rust");
+
+    let (sp, _) = run(
+        &["--backend", "subprocess", "--shards", "2", "--batch-size", "3"],
+        &base.join("out-sp"),
+        true,
+    );
+    assert_eq!(sp, want, "subprocess artifact report diverged");
+
+    let (q, _) = run(
+        &[
+            "--backend",
+            "queue",
+            "--queue-dir",
+            base.join("queue").to_str().unwrap(),
+            "--queue-workers",
+            "2",
+            "--queue-tasks",
+            "3",
+            "--batch-size",
+            "3",
+        ],
+        &base.join("out-queue"),
+        true,
+    );
+    assert_eq!(q, want, "file-queue artifact report diverged");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// An artifact-backed queue refuses workers that cannot load the
+/// runtime (here: stub not enabled on the worker) — a split across two
+/// evaluation paths must fail loudly, not diverge silently.
+#[test]
+fn queue_worker_without_the_runtime_fails_structured() {
+    let base = fresh_dir("noart");
+    let points = campaign(4, 23);
+    hplsim::coordinator::backend::queue::init_queue(
+        &base, &points, 2, 30.0, Some(4),
+    )
+    .unwrap();
+    let out = std::process::Command::new(hplsim_exe())
+        .arg("worker")
+        .arg("--queue")
+        .arg(&base)
+        .arg("--wait-secs")
+        .arg("1")
+        .env_remove("HPLSIM_PJRT_STUB")
+        .output()
+        .expect("spawn worker");
+    assert!(!out.status.success(), "worker must refuse an artifact queue");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("artifact-backed"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&base);
+}

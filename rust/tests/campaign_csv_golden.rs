@@ -1,0 +1,106 @@
+//! Golden-file pin of the `campaign.csv` report format.
+//!
+//! Every backend-equivalence assertion in this repo (and the CI `cmp`
+//! steps) compares `campaign.csv` *bytes* — so the header layout and
+//! the float formatting of `coordinator::table::fnum` are load-bearing
+//! contracts: an innocent formatting tweak would make every
+//! shard/merge/backend report "diverge" at once, or worse, mask a real
+//! divergence behind lost precision. This test pins the exact bytes
+//! for a hand-built campaign covering every `fnum` regime (zero,
+//! >=1000, >=10, >=0.01, scientific).
+
+use hplsim::blas::{DgemmModel, NodeCoef};
+use hplsim::coordinator::backend::{campaign_table, SimPoint};
+use hplsim::coordinator::table::{fnum, fpct};
+use hplsim::hpl::{Bcast, HplConfig, HplResult, Rfact, SwapAlg};
+use hplsim::mpi::CommStats;
+use hplsim::network::{NetModel, Topology};
+
+fn point(label: &str, nb: usize, depth: usize, bcast: Bcast, swap: SwapAlg, rfact: Rfact,
+         p: usize, q: usize) -> SimPoint {
+    SimPoint::explicit(
+        label,
+        HplConfig {
+            n: 4096,
+            nb,
+            p,
+            q,
+            depth,
+            bcast,
+            swap,
+            swap_threshold: 64,
+            rfact,
+            nbmin: 8,
+        },
+        Topology::star(p * q, 12.5e9, 40e9),
+        NetModel::ideal(),
+        DgemmModel::homogeneous(NodeCoef::naive(1e-11)),
+        1,
+        7,
+    )
+}
+
+fn result(gflops: f64, seconds: f64) -> HplResult {
+    HplResult {
+        seconds,
+        gflops,
+        comm: CommStats { messages: 1, bytes: 1.0, iprobes: 0 },
+        events: 1,
+        dgemm_calls: 1,
+    }
+}
+
+#[test]
+fn campaign_csv_bytes_are_pinned() {
+    let points = vec![
+        point("placeholder", 32, 0, Bcast::Ring, SwapAlg::BinExch, Rfact::Crout, 2, 2),
+        point("big", 128, 1, Bcast::TwoRingM, SwapAlg::Mix, Rfact::Left, 2, 3),
+        point("mid", 64, 0, Bcast::Long, SwapAlg::SpreadRoll, Rfact::Right, 1, 4),
+        point("small", 96, 1, Bcast::LongM, SwapAlg::BinExch, Rfact::Crout, 4, 4),
+    ];
+    let results = vec![
+        result(0.0, 0.0),          // the plan-only placeholder rendering
+        result(1234.56, 2048.9),   // >= 1000: integral
+        result(98.76, 12.34),      // >= 10: one decimal
+        result(0.5678, 0.0678),    // >= 0.01: three decimals
+    ];
+
+    let dir = std::env::temp_dir()
+        .join(format!("hplsim_csv_golden_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    campaign_table(&points, &results).write_csv(&dir, "campaign").unwrap();
+    let got = std::fs::read_to_string(dir.join("campaign.csv")).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let want = "\
+point,label,nb,depth,bcast,swap,rfact,PxQ,gflops,seconds\n\
+0,placeholder,32,0,1ring,binary-exch,crout,2x2,0,0\n\
+1,big,128,1,2ringM,mix,left,2x3,1235,2049\n\
+2,mid,64,0,long,spread-roll,right,1x4,98.8,12.3\n\
+3,small,96,1,longM,binary-exch,crout,4x4,0.568,0.068\n";
+    assert_eq!(got, want, "campaign.csv bytes drifted from the golden pin");
+}
+
+/// The scientific-notation regime of `fnum` (sub-0.01 magnitudes:
+/// simulated seconds of very small runs) and the signed-percent
+/// formatter, pinned directly.
+#[test]
+fn float_formatting_regimes_are_pinned() {
+    // Zero is special-cased.
+    assert_eq!(fnum(0.0), "0");
+    // >= 1000: integral rounding.
+    assert_eq!(fnum(1234.56), "1235");
+    assert_eq!(fnum(-2000.4), "-2000");
+    // >= 10: one decimal.
+    assert_eq!(fnum(98.76), "98.8");
+    // >= 0.01: three decimals.
+    assert_eq!(fnum(0.5678), "0.568");
+    assert_eq!(fnum(0.0678), "0.068");
+    // Below 0.01: two-digit scientific.
+    assert_eq!(fnum(0.001234), "1.23e-3");
+    assert_eq!(fnum(5e-9), "5.00e-9");
+    // Ratios render as signed percentages at one decimal.
+    assert_eq!(fpct(0.0512), "+5.1%");
+    assert_eq!(fpct(-0.25), "-25.0%");
+    assert_eq!(fpct(0.0), "+0.0%");
+}

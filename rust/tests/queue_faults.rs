@@ -1,0 +1,195 @@
+//! Fault injection for the `FileQueue` campaign substrate: damaged
+//! queue metadata, corrupt markers, clock-skewed leases and missing
+//! cache entries must every one surface as a *structured* error (or be
+//! recovered from) — never a hang, never a panic. Workers run with
+//! bounded waits so a regression shows up as a test failure, not a CI
+//! timeout.
+
+use std::path::PathBuf;
+
+use hplsim::blas::{DgemmModel, NodeCoef};
+use hplsim::coordinator::backend::{
+    queue, run_worker, Campaign, ExecBackend, ExecError, FileQueue, SimPoint,
+    WorkPlan, WorkerOptions,
+};
+use hplsim::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
+use hplsim::network::{NetModel, Topology};
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("hplsim_qfault_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A tiny all-explicit campaign (fast to simulate).
+fn points(n: usize) -> Vec<SimPoint> {
+    (0..n)
+        .map(|i| {
+            SimPoint::explicit(
+                format!("qf{i}"),
+                HplConfig {
+                    n: 96 + 32 * (i % 2),
+                    nb: 32,
+                    p: 2,
+                    q: 2,
+                    depth: 0,
+                    bcast: Bcast::Ring,
+                    swap: SwapAlg::BinExch,
+                    swap_threshold: 64,
+                    rfact: Rfact::Crout,
+                    nbmin: 8,
+                },
+                Topology::star(4, 12.5e9, 40e9),
+                NetModel::ideal(),
+                DgemmModel::homogeneous(NodeCoef {
+                    mu: [1e-11, 0.0, 0.0, 0.0, 5e-7],
+                    sigma: [3e-13, 0.0, 0.0, 0.0, 0.0],
+                }),
+                1,
+                1000 + i as u64,
+            )
+        })
+        .collect()
+}
+
+fn worker_opts() -> WorkerOptions {
+    WorkerOptions { threads: 1, wait_secs: 0.5 }
+}
+
+#[test]
+fn truncated_queue_json_is_a_structured_error() {
+    let qdir = fresh_dir("trunc_meta");
+    queue::init_queue(&qdir, &points(2), 2, 5.0, None).unwrap();
+    // Truncate queue.json mid-token: the worker must report the damaged
+    // file once its init wait expires — no hang, no panic.
+    let meta = std::fs::read_to_string(qdir.join("queue.json")).unwrap();
+    std::fs::write(qdir.join("queue.json"), &meta[..meta.len() / 2]).unwrap();
+    let err = run_worker(&qdir, &worker_opts()).unwrap_err();
+    assert!(err.contains("no initialized queue"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&qdir);
+}
+
+#[test]
+fn wrong_format_queue_json_is_a_structured_error() {
+    let qdir = fresh_dir("format_meta");
+    queue::init_queue(&qdir, &points(2), 2, 5.0, None).unwrap();
+    // Valid JSON, wrong format marker: not a queue.
+    std::fs::write(qdir.join("queue.json"), r#"{"format":"something-else"}"#).unwrap();
+    let err = run_worker(&qdir, &worker_opts()).unwrap_err();
+    assert!(err.contains("no initialized queue"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&qdir);
+}
+
+#[test]
+fn corrupt_manifest_is_a_structured_error() {
+    let qdir = fresh_dir("bad_manifest");
+    queue::init_queue(&qdir, &points(2), 2, 5.0, None).unwrap();
+    std::fs::write(qdir.join("manifest.json"), "{\"format\": \"hplsim-man").unwrap();
+    let err = run_worker(&qdir, &worker_opts()).unwrap_err();
+    // read_meta succeeds, Manifest::load must fail loudly.
+    assert!(
+        err.to_lowercase().contains("manifest") || err.contains("parse"),
+        "unexpected error: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&qdir);
+}
+
+#[test]
+fn corrupt_task_markers_are_a_structured_error_not_a_hang() {
+    let qdir = fresh_dir("bad_markers");
+    queue::init_queue(&qdir, &points(2), 2, 5.0, None).unwrap();
+    // Replace the real todo markers with garbage names the queue cannot
+    // attribute to any task: nothing is claimable, nothing is leased,
+    // nothing is done — a persistent hole, which the worker must report
+    // after its inconsistency grace period instead of spinning forever.
+    for name in ["task-abc", "task-", "junk"] {
+        std::fs::write(qdir.join("todo").join(name), "x").unwrap();
+    }
+    for entry in std::fs::read_dir(qdir.join("todo")).unwrap().flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.starts_with("task-") && name[5..].parse::<u64>().is_ok() {
+            std::fs::remove_file(entry.path()).unwrap();
+        }
+    }
+    let err = run_worker(&qdir, &worker_opts()).unwrap_err();
+    assert!(err.contains("inconsistent"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&qdir);
+}
+
+#[test]
+fn future_mtime_lease_is_reclaimed_not_pinned_forever() {
+    let qdir = fresh_dir("future_lease");
+    let pts = points(3);
+    queue::init_queue(&qdir, &pts, 2, 2.0, None).unwrap();
+    // A lease whose heartbeat stamp is an hour in the *future* (clock
+    // skew, a corrupted filesystem, or a hostile touch). duration_since
+    // fails for future stamps, and treating that as "not expired" would
+    // pin the task until the end of time — the worker would wait
+    // forever. It must instead be reclaimed like any dead lease.
+    let todo = qdir.join("todo").join("task-0000");
+    let lease = qdir.join("leases").join("task-0000");
+    std::fs::rename(&todo, &lease).unwrap();
+    let future = std::time::SystemTime::now() + std::time::Duration::from_secs(3600);
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&lease)
+        .unwrap()
+        .set_times(std::fs::FileTimes::new().set_modified(future))
+        .unwrap();
+    let summary =
+        run_worker(&qdir, &WorkerOptions { threads: 1, wait_secs: 0.5 }).unwrap();
+    assert_eq!(summary.tasks, 2, "both tasks completed, including the reclaimed one");
+    for t in 0..2 {
+        assert!(qdir.join("done").join(format!("task-{t:04}")).exists());
+    }
+    let _ = std::fs::remove_dir_all(&qdir);
+}
+
+#[test]
+fn done_marker_without_cache_entry_is_a_structured_error() {
+    let qdir = fresh_dir("done_no_cache");
+    let pts = points(2);
+    queue::init_queue(&qdir, &pts, 2, 5.0, None).unwrap();
+    // Every task claims to be done, but no result ever reached the
+    // shared cache (e.g. a worker whose cache writes all failed on a
+    // full disk, with the completion rename racing ahead). Collection
+    // must name the missing point instead of handing back garbage.
+    for t in 0..2 {
+        let name = format!("task-{t:04}");
+        std::fs::rename(qdir.join("todo").join(&name), qdir.join("done").join(&name))
+            .unwrap();
+    }
+    let fq = FileQueue::new(&qdir, 2, 0);
+    let campaign = Campaign::new(&pts);
+    let plan = WorkPlan {
+        fps: pts.iter().map(|p| p.fingerprint()).collect(),
+        todo: (0..pts.len()).collect(),
+        threads: 1,
+    };
+    let err = fq.collect(&campaign, &plan).unwrap_err();
+    match err {
+        ExecError::Backend { backend, reason } => {
+            assert_eq!(backend, "queue");
+            assert!(reason.contains("missing from the result cache"), "{reason}");
+        }
+        other => panic!("expected a structured backend error, got {other}"),
+    }
+    let _ = std::fs::remove_dir_all(&qdir);
+}
+
+#[test]
+fn out_of_range_task_marker_cannot_complete_the_queue() {
+    let qdir = fresh_dir("oob_marker");
+    queue::init_queue(&qdir, &points(2), 2, 5.0, None).unwrap();
+    // Replace task-0001 with a marker addressing a partition that does
+    // not exist: its (empty) execution completes, but the queue can
+    // then never reach `tasks` done markers with real names — the
+    // worker must diagnose the inconsistency, not spin.
+    std::fs::remove_file(qdir.join("todo").join("task-0001")).unwrap();
+    std::fs::write(qdir.join("todo").join("task-0099"), "99").unwrap();
+    let err = run_worker(&qdir, &worker_opts()).unwrap_err();
+    assert!(err.contains("inconsistent"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&qdir);
+}
