@@ -5,18 +5,22 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use crate::coordinator::backend::{
-    campaign_table, eval_tag_for, run_worker, Campaign, ExecError, FileQueue,
-    InProcess, Platform, SimPoint, Subprocess, WorkerOptions,
+    campaign_table, eval_tag_for, run_worker, Campaign, CampaignReport, ExecError,
+    FileQueue, InProcess, Platform, SimPoint, Subprocess, WorkerOptions,
 };
+use crate::coordinator::doe::ParamSpace;
 use crate::coordinator::experiments::{self, ExpCtx, Scale};
 use crate::coordinator::manifest::Manifest;
+use crate::coordinator::sa::{self, Design};
 use crate::coordinator::sweep::{self, run_campaign, SweepOptions};
 use crate::coordinator::table::Table;
+use crate::coordinator::tune;
 use crate::hpl::{Bcast, HplConfig, HplResult, Rfact, SwapAlg};
 use crate::platform::{
     calibrate_network, CalProcedure, GroundTruth, PlatformScenario, Scenario,
 };
 use crate::runtime::Artifacts;
+use crate::stats::json::Json;
 
 const USAGE: &str = "\
 hplsim — simulation-based optimization & sensibility analysis of MPI applications
@@ -26,7 +30,7 @@ USAGE:
              [--threads T] [--cache DIR] [--batch-size B]
              [--export-manifest FILE]
       id ∈ {table1, fig4, fig5, fig6, fig7, fig8, table2, fig10, fig11,
-            fig12, fig13, fig14, fig15, fig16, all}
+            fig12, fig13, fig14, fig15, fig16, sa, all}
       Reproduce a paper figure/table. Simulation points fan out over the
       campaign runtime (T worker threads; 0 = auto); --cache makes the
       campaign resumable. With PJRT artifacts loaded, model evaluations
@@ -43,14 +47,14 @@ USAGE:
                [--manifest FILE] [--export-manifest FILE] [--plan-only]
                [--backend inproc|subprocess|queue] [--shards S]
                [--queue-dir DIR] [--queue-workers W] [--queue-tasks K]
-               [--lease-secs S]
+               [--lease-secs S] [--bench-json FILE]
       Random HPL parameter-space campaign (NB, depth, bcast, swap, rfact,
       geometry) on the calibrated surrogate: K points (default 100) with
       per-point seeds derived from the campaign seed, executed by a
       pluggable campaign backend with a resumable on-disk cache.
       --platform runs the campaign on a declarative platform-scenario
       JSON (generative node variability, degraded links, ...; see
-      README "Platform scenarios") instead of the calibrated surrogate —
+      README \"Platform scenarios\") instead of the calibrated surrogate —
       every point then carries the O(1) scenario, materialized in the
       worker from the point seed. --manifest executes a previously
       exported campaign manifest instead of sampling; --export-manifest
@@ -60,13 +64,56 @@ USAGE:
       points per batched runtime invocation, on every backend
       (subprocess shards and queue workers batch within themselves).
       --backend picks the execution substrate (identical results on all
-      three; see README "Execution backends"):
+      three; see README \"Execution backends\"):
         inproc      in-process work-stealing pool (default)
         subprocess  --shards S `hplsim shard` child processes (default 2)
         queue       a file work queue under --queue-dir, drained by
                     --queue-workers local workers (default 2; 0 = only
                     external `hplsim worker` processes) with --queue-tasks
                     leases expiring after --lease-secs
+      --bench-json writes the run's execution accounting (points/s,
+      wall-clock, computed/cached split) as a `hplsim-bench-sweep-v1`
+      JSON document — the CI perf-baseline artifact (see
+      bench/BENCH_sweep.schema.json).
+  hplsim sa --space FILE [--design saltelli|lhs|factorial] [--points N]
+            [--levels L] [--replicates R] [--seed N] [--out DIR]
+            [--cache DIR] [--no-cache] [--threads T] [--batch-size B]
+            [--no-artifacts] [--export-manifest FILE] [--plan-only]
+            [--backend inproc|subprocess|queue] [backend knobs as sweep]
+      Sensitivity-analysis campaign over a declared (HPL config x
+      platform scenario) parameter space — a JSON file naming the swept
+      dimensions (NB, broadcast variant, process grid, node count,
+      link-variability and compute-mixture knobs, ...; see README
+      \"Sensitivity analysis & tuning\"). Generates a Saltelli (Sobol),
+      latin-hypercube or full-factorial design, runs every point
+      through the same campaign runtime as `sweep` (identical backends,
+      cache and artifact batching; Saltelli hybrid rows that realize to
+      an already-planned configuration dedup through the fingerprint
+      cache for free), and writes the per-row responses (sa.csv) with
+      ANOVA (anova.csv) and OLS (ols.csv) summaries; Saltelli designs
+      also get first-order/total Sobol indices (sobol.csv). --points is
+      the Saltelli base size (the design runs N*(d+2) rows) or the LHS
+      sample count; --levels is the cells-per-continuous-dimension of
+      factorial plans; --replicates averages R common-random-number
+      replicates per design row. All design points share one
+      seed-derived simulation seed, so the response is a deterministic
+      function of the design coordinates on every backend.
+  hplsim tune --space FILE [--waves W] [--wave-size K] [--keep S]
+            [--shrink F] [--seed N] [--state FILE] [--out DIR]
+            [--cache DIR] [--no-cache] [--threads T] [--batch-size B]
+            [--no-artifacts] [--backend inproc|subprocess|queue]
+      Successive-halving auto-tune over the same parameter-space JSON:
+      wave 0 evaluates K latin-hypercube points, every later wave
+      re-samples K points around the S best configurations seen so far
+      with a perturbation radius shrinking by F per wave. The wave
+      state is saved to --state (default OUT/tune-state.json) after
+      every completed wave, and each wave's sampling is derived only
+      from (--seed, wave number, prior results) — an interrupted tune
+      resumed with the same space and seed finishes bit-identically to
+      an uninterrupted run, and a finished tune re-run with a larger
+      --waves extends it. All evaluations share one simulation seed,
+      so revisited configurations replay from the --cache. Results:
+      tune.csv (every evaluation), tune_best.csv (top --keep).
   hplsim worker --queue DIR [--threads T] [--wait-secs S]
       Pull shard leases off a file work queue (created by
       `sweep --backend queue`) until it is drained: claim a task,
@@ -182,6 +229,135 @@ fn load_artifacts(opts: &HashMap<String, String>) -> Option<Rc<Artifacts>> {
     }
 }
 
+/// The execution substrate of a campaign verb: `--backend` plus its
+/// backend-specific knobs, resolved once so `sweep`, `sa` and `tune`
+/// accept the same flags with the same defaults and semantics (and so
+/// the three verbs cannot drift apart).
+struct BackendCfg {
+    name: String,
+    arts: Option<Rc<Artifacts>>,
+    batch_points: usize,
+    shards: u64,
+    workdir: PathBuf,
+    queue_dir: PathBuf,
+    queue_workers: usize,
+    queue_tasks: u64,
+    lease_secs: f64,
+}
+
+/// Resolve and validate `--backend` (shared by every campaign verb, and
+/// callable early so a typo fails before any space/manifest loads or
+/// calibration runs).
+fn backend_name_of(cmd: &str, opts: &HashMap<String, String>) -> Result<String, i32> {
+    let name = opts.get("backend").map(String::as_str).unwrap_or("inproc").to_string();
+    if !matches!(name.as_str(), "inproc" | "in-process" | "subprocess" | "queue") {
+        eprintln!("{cmd}: unknown backend '{name}' (expected inproc, subprocess or queue)");
+        return Err(2);
+    }
+    Ok(name)
+}
+
+impl BackendCfg {
+    /// Parse the backend flags of `cmd`; `out` anchors the default
+    /// queue/workdir locations. Loads the PJRT artifacts here (honoring
+    /// `--no-artifacts`) because the choice of evaluation path is part
+    /// of how every backend executes.
+    fn from_opts(
+        cmd: &str,
+        opts: &HashMap<String, String>,
+        out: &Path,
+    ) -> Result<BackendCfg, i32> {
+        let name = backend_name_of(cmd, opts)?;
+        let queue_dir = match path_opt(opts, "queue-dir", cmd) {
+            Ok(d) => d.map(PathBuf::from).unwrap_or_else(|| out.join("queue")),
+            Err(code) => return Err(code),
+        };
+        let queue_workers = num(opts, "queue-workers", 2usize);
+        let queue_tasks = {
+            let t = num(opts, "queue-tasks", 0u64);
+            if t > 0 {
+                t
+            } else {
+                4 * queue_workers.max(1) as u64
+            }
+        };
+        Ok(BackendCfg {
+            name,
+            arts: load_artifacts(opts),
+            batch_points: num(opts, "batch-size", crate::runtime::DEFAULT_BATCH_POINTS)
+                .max(1),
+            shards: num(opts, "shards", 2u64),
+            workdir: out.join("backend-subprocess"),
+            queue_dir,
+            queue_workers,
+            queue_tasks,
+            lease_secs: num(opts, "lease-secs", 30.0f64),
+        })
+    }
+
+    /// The evaluation-path tag cached results carry: the stub evaluates
+    /// bit-identically to the pure-Rust path and shares its tag; the
+    /// real client's f32-rounded entries are kept apart (see
+    /// `cache::EVAL_PJRT`).
+    fn eval(&self) -> &'static str {
+        eval_tag_for(self.arts.as_deref())
+    }
+
+    /// Run a prepared campaign on the selected substrate, folding
+    /// execution errors into a process exit code (2 for invalid points,
+    /// 1 for everything else — both already reported on stderr).
+    fn run(&self, cmd: &str, campaign: &Campaign<'_>) -> Result<CampaignReport, i32> {
+        let outcome = match self.name.as_str() {
+            "subprocess" => {
+                let mut sp = Subprocess::new(self.shards, self.workdir.clone());
+                sp.artifact_batch = self.arts.is_some().then_some(self.batch_points);
+                sp.eval = self.eval();
+                campaign.run(&sp)
+            }
+            "queue" => {
+                let mut q = FileQueue::new(
+                    self.queue_dir.clone(),
+                    self.queue_tasks,
+                    self.queue_workers,
+                );
+                q.lease_secs = self.lease_secs;
+                q.artifact_batch = self.arts.is_some().then_some(self.batch_points);
+                q.eval = self.eval();
+                campaign.run(&q)
+            }
+            _ => match &self.arts {
+                Some(a) => {
+                    campaign.run(&InProcess::with_artifacts(a.clone(), self.batch_points))
+                }
+                None => campaign.run(&InProcess::new()),
+            },
+        };
+        match outcome {
+            Ok(r) => Ok(r),
+            Err(ExecError::Point(e)) => {
+                eprintln!("{cmd}: invalid campaign point — {e}");
+                Err(2)
+            }
+            Err(e) => {
+                eprintln!("{cmd}: {e}");
+                Err(1)
+            }
+        }
+    }
+}
+
+/// Write one result table as `NAME.csv` under `out`, folding the
+/// failure into the caller's exit code like `report_campaign` does.
+fn write_table_csv(cmd: &str, t: &Table, out: &Path, name: &str) -> bool {
+    match t.write_csv(out, name) {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("{cmd}: could not write {name}.csv under {}: {e}", out.display());
+            false
+        }
+    }
+}
+
 fn cmd_exp(positional: &[String], opts: &HashMap<String, String>) -> i32 {
     let Some(id) = positional.first() else {
         eprintln!("exp: missing experiment id\n{USAGE}");
@@ -231,6 +407,7 @@ fn cmd_exp(positional: &[String], opts: &HashMap<String, String>) -> i32 {
         "fig13" | "fig14" => drop(experiments::fig13_15(&ctx, Scenario::Normal)),
         "fig15" => drop(experiments::fig13_15(&ctx, Scenario::Multimodal)),
         "fig16" => drop(experiments::fig16(&ctx)),
+        "sa" => drop(experiments::exp_sa(&ctx)),
         "all" => experiments::run_all(&ctx),
         other => {
             eprintln!("unknown experiment '{other}'\n{USAGE}");
@@ -376,29 +553,25 @@ fn report_campaign(points: &[SimPoint], results: &[HplResult], out: &Path) -> bo
 /// one server" use case, through the parallel sweep runtime. With
 /// `--manifest` the points come from a campaign manifest instead.
 fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
-    let (manifest_p, export_p, out_p, cache_p, platform_p) = match (
+    let (manifest_p, export_p, out_p, cache_p, platform_p, bench_p) = match (
         path_opt(opts, "manifest", "sweep"),
         path_opt(opts, "export-manifest", "sweep"),
         path_opt(opts, "out", "sweep"),
         path_opt(opts, "cache", "sweep"),
         path_opt(opts, "platform", "sweep"),
+        path_opt(opts, "bench-json", "sweep"),
     ) {
-        (Ok(m), Ok(e), Ok(o), Ok(c), Ok(p)) => (m, e, o, c, p),
+        (Ok(m), Ok(e), Ok(o), Ok(c), Ok(p), Ok(b)) => (m, e, o, c, p, b),
         _ => return 2,
     };
     if opts.contains_key("plan-only") && export_p.is_none() {
         eprintln!("sweep: --plan-only requires --export-manifest FILE");
         return 2;
     }
-    let backend_name =
-        opts.get("backend").map(String::as_str).unwrap_or("inproc").to_string();
-    if !matches!(backend_name.as_str(), "inproc" | "in-process" | "subprocess" | "queue") {
-        eprintln!(
-            "sweep: unknown backend '{backend_name}' (expected inproc, subprocess or \
-             queue)"
-        );
-        return 2;
-    }
+    let backend_name = match backend_name_of("sweep", opts) {
+        Ok(n) => n,
+        Err(code) => return code,
+    };
     let out: PathBuf = out_p.map(PathBuf::from).unwrap_or_else(|| "results".into());
     let cache_dir = if opts.contains_key("no-cache") {
         None
@@ -471,60 +644,17 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
     // bit-equivalent pure-Rust path like `exp` does. (Point sampling
     // and surrogate calibration above always use the pure-Rust fit —
     // the artifact path accelerates execution, not planning.)
-    let arts = load_artifacts(opts);
-    let batch_points = num(opts, "batch-size", crate::runtime::DEFAULT_BATCH_POINTS).max(1);
-    // The tag cached results carry: the stub evaluates bit-identically
-    // to the pure-Rust path and shares its tag; the real client's
-    // f32-rounded entries are kept apart (see `cache::EVAL_PJRT`).
-    let eval = eval_tag_for(arts.as_deref());
+    let bcfg = match BackendCfg::from_opts("sweep", opts, &out) {
+        Ok(b) => b,
+        Err(code) => return code,
+    };
     let campaign = Campaign::new(&points)
         .threads(num(opts, "threads", 0usize))
         .cache(cache_dir)
         .stderr_progress();
-    let outcome = match backend_name.as_str() {
-        "subprocess" => {
-            let shards = num(opts, "shards", 2u64);
-            let workdir = out.join("backend-subprocess");
-            let mut sp = Subprocess::new(shards, workdir);
-            sp.artifact_batch = arts.is_some().then_some(batch_points);
-            sp.eval = eval;
-            campaign.run(&sp)
-        }
-        "queue" => {
-            let qdir = match path_opt(opts, "queue-dir", "sweep") {
-                Ok(d) => d.map(PathBuf::from).unwrap_or_else(|| out.join("queue")),
-                Err(code) => return code,
-            };
-            let workers = num(opts, "queue-workers", 2usize);
-            let tasks = {
-                let t = num(opts, "queue-tasks", 0u64);
-                if t > 0 {
-                    t
-                } else {
-                    4 * workers.max(1) as u64
-                }
-            };
-            let mut q = FileQueue::new(qdir, tasks, workers);
-            q.lease_secs = num(opts, "lease-secs", 30.0f64);
-            q.artifact_batch = arts.is_some().then_some(batch_points);
-            q.eval = eval;
-            campaign.run(&q)
-        }
-        _ => match &arts {
-            Some(a) => campaign.run(&InProcess::with_artifacts(a.clone(), batch_points)),
-            None => campaign.run(&InProcess::new()),
-        },
-    };
-    let report = match outcome {
+    let report = match bcfg.run("sweep", &campaign) {
         Ok(r) => r,
-        Err(ExecError::Point(e)) => {
-            eprintln!("sweep: invalid campaign point — {e}");
-            return 2;
-        }
-        Err(e) => {
-            eprintln!("sweep: {e}");
-            return 1;
-        }
+        Err(code) => return code,
     };
     let wrote_csv = report_campaign(&points, &report.results, &out);
     println!(
@@ -537,7 +667,303 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
         report.wall_seconds,
         points.len() as f64 / report.wall_seconds.max(1e-9),
     );
+    if let Some(path) = bench_p {
+        if let Err(e) = write_bench_json(Path::new(path), points.len(), &report, &bcfg.name)
+        {
+            eprintln!("sweep: cannot write bench JSON {path}: {e}");
+            return 1;
+        }
+        println!("sweep: wrote bench timings to {path}");
+    }
     if wrote_csv {
+        0
+    } else {
+        1
+    }
+}
+
+/// `--bench-json`: the committed perf-baseline artifact
+/// (`hplsim-bench-sweep-v1`, schema in bench/BENCH_sweep.schema.json)
+/// that CI trends run-over-run.
+fn write_bench_json(
+    path: &Path,
+    points: usize,
+    report: &CampaignReport,
+    backend: &str,
+) -> std::io::Result<()> {
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("hplsim-bench-sweep-v1".into())),
+        ("backend", Json::Str(backend.into())),
+        ("points", Json::Num(points as f64)),
+        ("computed", Json::Num(report.computed as f64)),
+        ("cached", Json::Num(report.cached as f64)),
+        ("threads", Json::Num(report.threads as f64)),
+        ("wall_seconds", Json::Num(report.wall_seconds)),
+        (
+            "points_per_sec",
+            Json::Num(points as f64 / report.wall_seconds.max(1e-9)),
+        ),
+    ]);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, doc.to_string() + "\n")
+}
+
+/// Sensitivity-analysis campaign over a declared parameter space:
+/// generate a design (Saltelli / LHS / full factorial), run every point
+/// through the campaign runtime on the selected backend, and emit
+/// sa.csv + ANOVA/OLS summaries (and Sobol indices on Saltelli plans).
+fn cmd_sa(opts: &HashMap<String, String>) -> i32 {
+    let (space_p, out_p, cache_p, export_p) = match (
+        path_opt(opts, "space", "sa"),
+        path_opt(opts, "out", "sa"),
+        path_opt(opts, "cache", "sa"),
+        path_opt(opts, "export-manifest", "sa"),
+    ) {
+        (Ok(s), Ok(o), Ok(c), Ok(e)) => (s, o, c, e),
+        _ => return 2,
+    };
+    let Some(space_path) = space_p else {
+        eprintln!("sa: --space FILE is required (a parameter-space JSON; see README)");
+        return 2;
+    };
+    let design = match opts.get("design").map(String::as_str) {
+        None => Design::Saltelli,
+        Some(s) => match Design::parse(s) {
+            Some(d) => d,
+            None => {
+                eprintln!("sa: unknown design '{s}' (expected saltelli, lhs or factorial)");
+                return 2;
+            }
+        },
+    };
+    if opts.contains_key("plan-only") && export_p.is_none() {
+        eprintln!("sa: --plan-only requires --export-manifest FILE");
+        return 2;
+    }
+    if let Err(code) = backend_name_of("sa", opts) {
+        return code;
+    }
+    let space = match ParamSpace::load(Path::new(space_path)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("sa: cannot load parameter space {space_path}: {e}");
+            return 1;
+        }
+    };
+    let n = num(opts, "points", 128usize);
+    let levels = num(opts, "levels", 4usize);
+    let replicates = num(opts, "replicates", 1usize);
+    let seed = num(opts, "seed", 42u64);
+    let plan = match sa::plan(&space, design, n, levels, replicates, seed) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("sa: {e}");
+            return 2;
+        }
+    };
+    eprintln!(
+        "sa: {} design over {} dimension(s) — {} row(s) x {} replicate(s) = {} points",
+        design.name(),
+        space.dim_count(),
+        plan.rows.len(),
+        plan.replicates,
+        plan.points.len()
+    );
+
+    if let Some(path) = export_p {
+        if !reject_invalid_points("sa", &plan.points) {
+            return 2;
+        }
+        let manifest = Manifest::new(plan.points.clone());
+        if let Err(e) = manifest.save(Path::new(path)) {
+            eprintln!("sa: cannot write manifest {path}: {e}");
+            return 1;
+        }
+        println!("sa: wrote manifest with {} points to {path}", manifest.points.len());
+        if opts.contains_key("plan-only") {
+            return 0;
+        }
+    }
+
+    let out: PathBuf = out_p.map(PathBuf::from).unwrap_or_else(|| "results".into());
+    let cache_dir = if opts.contains_key("no-cache") {
+        None
+    } else {
+        Some(cache_p.map(PathBuf::from).unwrap_or_else(|| out.join("sa-cache")))
+    };
+    let bcfg = match BackendCfg::from_opts("sa", opts, &out) {
+        Ok(b) => b,
+        Err(code) => return code,
+    };
+    let campaign = Campaign::new(&plan.points)
+        .threads(num(opts, "threads", 0usize))
+        .cache(cache_dir)
+        .stderr_progress();
+    let report = match bcfg.run("sa", &campaign) {
+        Ok(r) => r,
+        Err(code) => return code,
+    };
+
+    // Responses: per-design-row means across the common-random-number
+    // replicates; all analyses below are deterministic functions of the
+    // response vector, so every backend emits byte-identical CSVs.
+    let (gflops, seconds) = sa::row_means(&plan, &report.results);
+    let mut wrote = write_table_csv("sa", &sa::sa_table(&space, &plan, &gflops, &seconds), &out, "sa");
+    if design == Design::Saltelli {
+        let sobol = sa::sobol_table(&space, &gflops, plan.n_base);
+        sobol.print();
+        wrote &= write_table_csv("sa", &sobol, &out, "sobol");
+    }
+    let anova = sa::anova_table(&space, &plan, &gflops);
+    anova.print();
+    wrote &= write_table_csv("sa", &anova, &out, "anova");
+    let ols = sa::ols_table(&space, &plan, &gflops);
+    ols.print();
+    wrote &= write_table_csv("sa", &ols, &out, "ols");
+    println!(
+        "\nsa: {} points | {} computed, {} cached | {} threads | {:.2} s wall | \
+         design {} | backend {}",
+        plan.points.len(),
+        report.computed,
+        report.cached,
+        report.threads,
+        report.wall_seconds,
+        design.name(),
+        bcfg.name,
+    );
+    if wrote {
+        0
+    } else {
+        1
+    }
+}
+
+/// Successive-halving auto-tune over a declared parameter space, with
+/// the wave state persisted after every wave so an interrupted tune
+/// resumes bit-identically (see `coordinator::tune`).
+fn cmd_tune(opts: &HashMap<String, String>) -> i32 {
+    let (space_p, out_p, cache_p, state_p) = match (
+        path_opt(opts, "space", "tune"),
+        path_opt(opts, "out", "tune"),
+        path_opt(opts, "cache", "tune"),
+        path_opt(opts, "state", "tune"),
+    ) {
+        (Ok(s), Ok(o), Ok(c), Ok(st)) => (s, o, c, st),
+        _ => return 2,
+    };
+    let Some(space_path) = space_p else {
+        eprintln!("tune: --space FILE is required (a parameter-space JSON; see README)");
+        return 2;
+    };
+    let wave_size = num(opts, "wave-size", 16usize);
+    let topts = tune::TuneOptions {
+        waves: num(opts, "waves", 4usize),
+        wave_size,
+        keep: num(opts, "keep", (wave_size / 4).max(1)),
+        shrink: num(opts, "shrink", 0.5f64),
+        seed: num(opts, "seed", 42u64),
+    };
+    if let Err(e) = topts.validate() {
+        eprintln!("tune: {e}");
+        return 2;
+    }
+    if let Err(code) = backend_name_of("tune", opts) {
+        return code;
+    }
+    let space = match ParamSpace::load(Path::new(space_path)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("tune: cannot load parameter space {space_path}: {e}");
+            return 1;
+        }
+    };
+    let out: PathBuf = out_p.map(PathBuf::from).unwrap_or_else(|| "results".into());
+    let state_path: PathBuf =
+        state_p.map(PathBuf::from).unwrap_or_else(|| out.join("tune-state.json"));
+    let cache_dir = if opts.contains_key("no-cache") {
+        None
+    } else {
+        Some(cache_p.map(PathBuf::from).unwrap_or_else(|| out.join("tune-cache")))
+    };
+    let mut state = if state_path.exists() {
+        match tune::TuneState::load(&state_path) {
+            Ok(s) => {
+                eprintln!(
+                    "tune: resuming from {} ({} wave(s) done, {} evaluation(s))",
+                    state_path.display(),
+                    s.waves_done,
+                    s.entries.len()
+                );
+                s
+            }
+            Err(e) => {
+                eprintln!("tune: cannot load state {}: {e}", state_path.display());
+                return 1;
+            }
+        }
+    } else {
+        tune::TuneState::new(&space, topts.seed)
+    };
+    let bcfg = match BackendCfg::from_opts("tune", opts, &out) {
+        Ok(b) => b,
+        Err(code) => return code,
+    };
+    let threads = num(opts, "threads", 0usize);
+
+    // Backend failures are reported inside `BackendCfg::run`; remember
+    // the exit code so the `run_tune` error path doesn't double-report.
+    let exec_exit = std::cell::Cell::new(None::<i32>);
+    let save_failed = std::cell::Cell::new(false);
+    let mut eval = |points: &[SimPoint]| -> Result<Vec<HplResult>, String> {
+        let campaign = Campaign::new(points)
+            .threads(threads)
+            .cache(cache_dir.clone())
+            .stderr_progress();
+        match bcfg.run("tune", &campaign) {
+            Ok(r) => Ok(r.results),
+            Err(code) => {
+                exec_exit.set(Some(code));
+                Err("campaign execution failed".into())
+            }
+        }
+    };
+    let mut on_wave = |s: &tune::TuneState| -> Result<(), String> {
+        if let Err(e) = s.save(&state_path) {
+            save_failed.set(true);
+            return Err(format!("cannot save tune state {}: {e}", state_path.display()));
+        }
+        eprintln!(
+            "tune: wave {}/{} done ({} evaluation(s); state saved)",
+            s.waves_done,
+            topts.waves,
+            s.entries.len()
+        );
+        Ok(())
+    };
+    if let Err(e) = tune::run_tune(&space, &topts, &mut state, &mut eval, &mut on_wave) {
+        if let Some(code) = exec_exit.get() {
+            return code;
+        }
+        eprintln!("tune: {e}");
+        return if save_failed.get() { 1 } else { 2 };
+    }
+
+    let mut wrote = write_table_csv("tune", &tune::tune_table(&space, &state), &out, "tune");
+    let best = tune::best_table(&space, &state, topts.keep);
+    best.print();
+    wrote &= write_table_csv("tune", &best, &out, "tune_best");
+    println!(
+        "\ntune: {} wave(s), {} evaluation(s) | state {} | backend {}",
+        state.waves_done,
+        state.entries.len(),
+        state_path.display(),
+        bcfg.name,
+    );
+    if wrote {
         0
     } else {
         1
@@ -912,6 +1338,8 @@ pub fn main_with_args(args: &[String]) -> i32 {
     match positional.first().map(|s| s.as_str()) {
         Some("exp") => cmd_exp(&positional[1..], &opts),
         Some("sweep") => cmd_sweep(&opts),
+        Some("sa") => cmd_sa(&opts),
+        Some("tune") => cmd_tune(&opts),
         Some("shard") => cmd_shard(&opts),
         Some("worker") => cmd_worker(&opts),
         Some("merge") => cmd_merge(&positional[1..], &opts),
@@ -990,6 +1418,29 @@ mod tests {
         assert_eq!(run(&["sweep", "--points", "5", "--plan-only"]), 2);
         // A valueless --export-manifest (parsed as "true") is a missing path.
         assert_eq!(run(&["sweep", "--points", "5", "--export-manifest"]), 2);
+    }
+
+    #[test]
+    fn sa_and_tune_validate_arguments() {
+        let run = |args: &[&str]| {
+            let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            main_with_args(&v)
+        };
+        assert_eq!(run(&["sa"]), 2); // missing --space
+        assert_eq!(run(&["sa", "--space"]), 2); // valueless --space
+        // Design and plan-mode flags are validated before the space
+        // file is even opened.
+        assert_eq!(run(&["sa", "--space", "s.json", "--design", "bogus"]), 2);
+        assert_eq!(run(&["sa", "--space", "s.json", "--plan-only"]), 2);
+        assert_eq!(run(&["sa", "--space", "/nonexistent/space.json"]), 1);
+        assert_eq!(run(&["sa", "--space", "s.json", "--backend", "pigeon"]), 2);
+
+        assert_eq!(run(&["tune"]), 2); // missing --space
+        assert_eq!(run(&["tune", "--space"]), 2); // valueless --space
+        // Schedule options are validated before the space file loads.
+        assert_eq!(run(&["tune", "--space", "s.json", "--shrink", "0"]), 2);
+        assert_eq!(run(&["tune", "--space", "s.json", "--keep", "99"]), 2);
+        assert_eq!(run(&["tune", "--space", "/nonexistent/space.json"]), 1);
     }
 
     #[test]

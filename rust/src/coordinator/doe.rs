@@ -1,0 +1,640 @@
+//! Design-of-experiments parameter spaces over
+//! (HplConfig × PlatformScenario).
+//!
+//! A [`ParamSpace`] declares the swept dimensions of a sensitivity or
+//! tuning campaign — HPL knobs (NB, broadcast variant, look-ahead
+//! depth, …), the process grid, the node count, and scenario
+//! variability knobs (degraded-link fraction, compute-sampling CV, …) —
+//! each mapped from the unit interval so the sample-plan generators in
+//! `stats::sobol` stay dimension-agnostic. `realize` turns one unit
+//! point into a self-contained [`SimPoint`] that runs through the
+//! ordinary `Campaign`/`ExecBackend` machinery: SA and tuning campaigns
+//! shard, merge, cache, and cross-backend-compare exactly like any
+//! other campaign.
+//!
+//! All design points share a *common* simulation seed (common random
+//! numbers): the response is then a deterministic function of the unit
+//! coordinates, which is what variance-based SA assumes — and it lets
+//! the fingerprint cache collapse Saltelli hybrid rows that realize to
+//! an already-planned configuration.
+
+use std::path::Path;
+
+use crate::coordinator::backend::point::fnv1a_str;
+use crate::coordinator::backend::SimPoint;
+use crate::coordinator::experiments::geometries;
+use crate::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
+use crate::platform::{ComputeSpec, LinkVariability, PlatformScenario, TopoSpec};
+use crate::stats::json::Json;
+
+/// How one dimension maps the unit interval to concrete values.
+#[derive(Clone, Debug)]
+pub enum DimSpec {
+    /// A finite set of levels (numbers or strings), each an equal slice
+    /// of the unit interval.
+    Levels(Vec<Json>),
+    /// A continuous (or, with `integer`, discretized) interval.
+    Range { min: f64, max: f64, integer: bool },
+    /// The process grid P×Q, indexing the factor pairs (`p <= q`) of
+    /// the realized rank count `nodes * rpn`.
+    Grid,
+}
+
+/// One named swept dimension.
+#[derive(Clone, Debug)]
+pub struct Dim {
+    pub name: String,
+    pub spec: DimSpec,
+}
+
+/// A realized design point: the runnable [`SimPoint`] plus one
+/// human-readable value label per dimension (for `sa.csv` / ANOVA
+/// grouping).
+#[derive(Clone, Debug)]
+pub struct Realized {
+    pub point: SimPoint,
+    pub labels: Vec<String>,
+}
+
+/// A declared parameter space: the fixed base configuration (problem
+/// size, ranks per node, base platform scenario) plus the swept
+/// dimensions.
+#[derive(Clone, Debug)]
+pub struct ParamSpace {
+    /// HPL problem size (unless swept via an `"n"` dimension).
+    pub n: usize,
+    /// Ranks per node.
+    pub rpn: usize,
+    /// Base platform scenario; scenario knob dimensions mutate a copy
+    /// of it per point.
+    pub scenario: PlatformScenario,
+    pub dims: Vec<Dim>,
+}
+
+/// Map `u ∈ [0,1]` onto one of `k` equal slices (the closed upper end
+/// folds into the last slice).
+fn level_index(u: f64, k: usize) -> usize {
+    debug_assert!(k > 0);
+    ((u * k as f64) as usize).min(k - 1)
+}
+
+/// The candidate process grids for `nranks` ranks: factor pairs with
+/// `p <= q`, ascending in `p` — the last entry is the most square.
+pub fn grid_pairs(nranks: usize) -> Vec<(usize, usize)> {
+    geometries(nranks).into_iter().filter(|&(p, q)| p <= q).collect()
+}
+
+fn knob_usize(name: &str, v: &Json) -> Result<usize, String> {
+    v.as_usize().ok_or_else(|| {
+        format!("dimension {name}: expected a non-negative integer, got {}", v.to_string())
+    })
+}
+
+fn knob_f64(name: &str, v: &Json) -> Result<f64, String> {
+    v.as_f64()
+        .ok_or_else(|| format!("dimension {name}: expected a number, got {}", v.to_string()))
+}
+
+fn knob_str<'a>(name: &str, v: &'a Json) -> Result<&'a str, String> {
+    v.as_str()
+        .ok_or_else(|| format!("dimension {name}: expected a string, got {}", v.to_string()))
+}
+
+/// The names `apply_knob` understands; `grid` is handled separately.
+const KNOBS: &[&str] = &[
+    "n",
+    "nb",
+    "depth",
+    "nbmin",
+    "swap_threshold",
+    "bcast",
+    "swap",
+    "rfact",
+    "nodes",
+    "links.cv",
+    "links.fraction",
+    "links.factor",
+    "compute.gamma_cv",
+    "compute.alpha_scale",
+    "compute.evict_slowest",
+];
+
+/// Apply one non-grid knob value to the (config, scenario) pair.
+fn apply_knob(
+    cfg: &mut HplConfig,
+    scenario: &mut PlatformScenario,
+    name: &str,
+    v: &Json,
+) -> Result<(), String> {
+    match name {
+        "n" => cfg.n = knob_usize(name, v)?,
+        "nb" => cfg.nb = knob_usize(name, v)?,
+        "depth" => cfg.depth = knob_usize(name, v)?,
+        "nbmin" => cfg.nbmin = knob_usize(name, v)?,
+        "swap_threshold" => cfg.swap_threshold = knob_usize(name, v)?,
+        "bcast" => {
+            let s = knob_str(name, v)?;
+            cfg.bcast = Bcast::parse(s)
+                .ok_or_else(|| format!("dimension bcast: unknown variant {s:?}"))?;
+        }
+        "swap" => {
+            let s = knob_str(name, v)?;
+            cfg.swap = SwapAlg::parse(s)
+                .ok_or_else(|| format!("dimension swap: unknown algorithm {s:?}"))?;
+        }
+        "rfact" => {
+            let s = knob_str(name, v)?;
+            cfg.rfact = Rfact::parse(s)
+                .ok_or_else(|| format!("dimension rfact: unknown variant {s:?}"))?;
+        }
+        "nodes" => {
+            let n = knob_usize(name, v)?;
+            match &mut scenario.topo {
+                TopoSpec::Star { nodes, .. } => *nodes = n,
+                TopoSpec::FatTree { .. } => {
+                    return Err("dimension nodes: needs a star topology (a fat-tree's \
+                                node count is structural)"
+                        .into())
+                }
+            }
+            match &scenario.compute {
+                ComputeSpec::Homogeneous(_)
+                | ComputeSpec::Hierarchical { .. }
+                | ComputeSpec::Mixture { .. } => {}
+                _ => {
+                    return Err("dimension nodes: compute model must be homogeneous, \
+                                hierarchical, or mixture (fixed-population models pin \
+                                the node count)"
+                        .into())
+                }
+            }
+        }
+        "links.cv" => match &mut scenario.links {
+            LinkVariability::Jitter { cv, .. } => *cv = knob_f64(name, v)?,
+            _ => return Err("dimension links.cv: base scenario links must be jitter".into()),
+        },
+        "links.fraction" => match &mut scenario.links {
+            LinkVariability::Degraded { fraction, .. } => *fraction = knob_f64(name, v)?,
+            _ => {
+                return Err(
+                    "dimension links.fraction: base scenario links must be degraded".into()
+                )
+            }
+        },
+        "links.factor" => match &mut scenario.links {
+            LinkVariability::Degraded { factor, .. } => *factor = knob_f64(name, v)?,
+            _ => {
+                return Err("dimension links.factor: base scenario links must be degraded".into())
+            }
+        },
+        "compute.gamma_cv" => {
+            sample_opts(scenario, name)?.gamma_cv = Some(knob_f64(name, v)?);
+        }
+        "compute.alpha_scale" => {
+            sample_opts(scenario, name)?.alpha_scale = knob_f64(name, v)?;
+        }
+        "compute.evict_slowest" => {
+            sample_opts(scenario, name)?.evict_slowest = knob_usize(name, v)?;
+        }
+        other => return Err(format!("unknown dimension {other:?} (known: {KNOBS:?} + grid)")),
+    }
+    Ok(())
+}
+
+fn sample_opts<'a>(
+    scenario: &'a mut PlatformScenario,
+    name: &str,
+) -> Result<&'a mut crate::platform::SampleOpts, String> {
+    match &mut scenario.compute {
+        ComputeSpec::Hierarchical { opts, .. } | ComputeSpec::Mixture { opts, .. } => Ok(opts),
+        _ => Err(format!(
+            "dimension {name}: compute model must be hierarchical or mixture"
+        )),
+    }
+}
+
+/// Re-align a sampled compute model with the (possibly re-sized)
+/// topology: the materialized model must cover exactly `topo.nodes()`
+/// nodes after eviction. Idempotent, and a no-op on already-consistent
+/// scenarios.
+fn sync_sampled_nodes(scenario: &mut PlatformScenario) {
+    let want = scenario.topo.nodes();
+    if let ComputeSpec::Hierarchical { opts, .. } | ComputeSpec::Mixture { opts, .. } =
+        &mut scenario.compute
+    {
+        opts.nodes = want + opts.evict_slowest;
+    }
+}
+
+impl ParamSpace {
+    /// Number of swept dimensions.
+    pub fn dim_count(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Dimension names, in declaration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.dims.iter().map(|d| d.name.as_str()).collect()
+    }
+
+    /// Realize one unit point into a runnable [`SimPoint`] plus
+    /// per-dimension value labels. Non-grid knobs apply first (so a
+    /// swept node count is visible to grid planning), then the grid;
+    /// spaces without a `grid` dimension use the most square factor
+    /// pair of the realized rank count.
+    pub fn realize_full(
+        &self,
+        coords: &[f64],
+        label: impl Into<String>,
+        seed: u64,
+    ) -> Result<Realized, String> {
+        if coords.len() != self.dims.len() {
+            return Err(format!(
+                "point has {} coordinate(s) but the space has {} dimension(s)",
+                coords.len(),
+                self.dims.len()
+            ));
+        }
+        for (d, &u) in self.dims.iter().zip(coords) {
+            if !(0.0..=1.0).contains(&u) {
+                return Err(format!("dimension {}: coordinate {u} outside [0,1]", d.name));
+            }
+        }
+
+        let mut scenario = self.scenario.clone();
+        let mut cfg = HplConfig::dahu_default(self.n, 1, 1);
+        let mut labels = vec![String::new(); self.dims.len()];
+        let mut grid_dim: Option<usize> = None;
+
+        for (i, (dim, &u)) in self.dims.iter().zip(coords).enumerate() {
+            match &dim.spec {
+                DimSpec::Levels(vals) => {
+                    let v = &vals[level_index(u, vals.len())];
+                    apply_knob(&mut cfg, &mut scenario, &dim.name, v)?;
+                    labels[i] = match v {
+                        Json::Str(s) => s.clone(),
+                        other => other.to_string(),
+                    };
+                }
+                DimSpec::Range { min, max, integer } => {
+                    let v = if *integer {
+                        let span = max - min + 1.0;
+                        (min + (u * span).floor()).min(*max)
+                    } else {
+                        min + u * (max - min)
+                    };
+                    apply_knob(&mut cfg, &mut scenario, &dim.name, &Json::Num(v))?;
+                    labels[i] =
+                        if *integer { format!("{}", v as i64) } else { format!("{v:.6}") };
+                }
+                DimSpec::Grid => {
+                    if grid_dim.replace(i).is_some() {
+                        return Err("the space declares more than one grid dimension".into());
+                    }
+                }
+            }
+        }
+        sync_sampled_nodes(&mut scenario);
+
+        let nranks = scenario.nodes() * self.rpn;
+        let pairs = grid_pairs(nranks);
+        debug_assert!(!pairs.is_empty(), "1x{nranks} is always a factor pair");
+        let (p, q) = match grid_dim {
+            Some(i) => pairs[level_index(coords[i], pairs.len())],
+            None => *pairs.last().unwrap(),
+        };
+        cfg.p = p;
+        cfg.q = q;
+        if let Some(i) = grid_dim {
+            labels[i] = format!("{p}x{q}");
+        }
+
+        cfg.validate().map_err(|e| format!("realized config invalid: {e}"))?;
+        let point = SimPoint::scenario(label, cfg, scenario, self.rpn, seed);
+        point.validate().map_err(|e| format!("realized point invalid: {e}"))?;
+        Ok(Realized { point, labels })
+    }
+
+    /// [`ParamSpace::realize_full`] without the labels.
+    pub fn realize(
+        &self,
+        coords: &[f64],
+        label: impl Into<String>,
+        seed: u64,
+    ) -> Result<SimPoint, String> {
+        self.realize_full(coords, label, seed).map(|r| r.point)
+    }
+
+    /// Number of cells a full-factorial plan allots to dimension `d`
+    /// when continuous ranges get `default_levels` cells.
+    pub fn cardinality(&self, d: usize, default_levels: usize) -> usize {
+        match &self.dims[d].spec {
+            DimSpec::Levels(vals) => vals.len(),
+            DimSpec::Grid => grid_pairs(self.scenario.nodes() * self.rpn).len(),
+            DimSpec::Range { min, max, integer } => {
+                if *integer {
+                    let span = (max - min + 1.0).max(1.0) as usize;
+                    span.min(default_levels.max(1))
+                } else {
+                    default_levels.max(1)
+                }
+            }
+        }
+    }
+
+    /// The ANOVA grouping label for dimension `d`: categorical
+    /// dimensions group by realized value; continuous ranges bin into
+    /// quartiles of the unit interval (per-point values are unique, so
+    /// grouping by value would leave no within-group variance).
+    pub fn anova_group(&self, d: usize, u: f64, value_label: &str) -> String {
+        match &self.dims[d].spec {
+            DimSpec::Range { integer: false, .. } => format!("Q{}", level_index(u, 4) + 1),
+            _ => value_label.to_string(),
+        }
+    }
+
+    /// Structural validation: at least one dimension, unique known
+    /// names, at most one grid, well-formed levels/ranges — and the
+    /// space's midpoint must realize into a valid point, so authoring
+    /// mistakes surface at load time, not mid-campaign.
+    pub fn check(&self) -> Result<(), String> {
+        if self.dims.is_empty() {
+            return Err("parameter space has no dimensions".into());
+        }
+        if self.rpn == 0 {
+            return Err("rpn must be positive".into());
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for d in &self.dims {
+            if !seen.insert(d.name.as_str()) {
+                return Err(format!("duplicate dimension {:?}", d.name));
+            }
+            match &d.spec {
+                DimSpec::Levels(vals) => {
+                    if vals.is_empty() {
+                        return Err(format!("dimension {}: empty level set", d.name));
+                    }
+                }
+                DimSpec::Range { min, max, integer } => {
+                    if !(min.is_finite() && max.is_finite() && min <= max) {
+                        return Err(format!(
+                            "dimension {}: need finite min <= max, got [{min}, {max}]",
+                            d.name
+                        ));
+                    }
+                    if *integer && (*min < 0.0 || min.fract() != 0.0 || max.fract() != 0.0) {
+                        return Err(format!(
+                            "dimension {}: integer range needs non-negative integral \
+                             bounds, got [{min}, {max}]",
+                            d.name
+                        ));
+                    }
+                }
+                DimSpec::Grid => {}
+            }
+        }
+        let mid = vec![0.5; self.dims.len()];
+        self.realize(&mid, "check", 0)
+            .map_err(|e| format!("space midpoint does not realize: {e}"))?;
+        Ok(())
+    }
+
+    /// A stable hash of the canonical JSON encoding — the tune-state
+    /// guard that refuses to resume against a different space.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a_str(&self.to_json().to_string())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("rpn", Json::Num(self.rpn as f64)),
+            ("platform", self.scenario.to_json()),
+            (
+                "dims",
+                Json::Arr(
+                    self.dims
+                        .iter()
+                        .map(|d| {
+                            let mut pairs = vec![("name", Json::Str(d.name.clone()))];
+                            match &d.spec {
+                                DimSpec::Levels(vals) => {
+                                    pairs.push(("levels", Json::Arr(vals.clone())));
+                                }
+                                DimSpec::Range { min, max, integer } => {
+                                    pairs.push(("min", Json::num_exact(*min)));
+                                    pairs.push(("max", Json::num_exact(*max)));
+                                    if *integer {
+                                        pairs.push(("integer", Json::Bool(true)));
+                                    }
+                                }
+                                DimSpec::Grid => pairs.push(("grid", Json::Bool(true))),
+                            }
+                            Json::obj(pairs)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ParamSpace, String> {
+        let n = v
+            .get("n")
+            .and_then(Json::as_usize)
+            .ok_or("parameter space needs a positive integer \"n\"")?;
+        let rpn = v
+            .get("rpn")
+            .and_then(Json::as_usize)
+            .ok_or("parameter space needs a positive integer \"rpn\"")?;
+        let scenario = PlatformScenario::from_json(
+            v.get("platform").ok_or("parameter space needs a \"platform\" scenario")?,
+        )
+        .ok_or("parameter space: malformed \"platform\" scenario")?;
+        let dims_json = v
+            .get("dims")
+            .and_then(Json::as_arr)
+            .ok_or("parameter space needs a \"dims\" array")?;
+        let mut dims = Vec::with_capacity(dims_json.len());
+        for (i, dv) in dims_json.iter().enumerate() {
+            let name = dv
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("dims[{i}]: missing \"name\""))?
+                .to_string();
+            let spec = if let Some(levels) = dv.get("levels").and_then(Json::as_arr) {
+                DimSpec::Levels(levels.clone())
+            } else if dv.get("grid").is_some() {
+                DimSpec::Grid
+            } else if let (Some(min), Some(max)) = (
+                dv.get("min").and_then(Json::as_f64),
+                dv.get("max").and_then(Json::as_f64),
+            ) {
+                let integer = matches!(dv.get("integer"), Some(Json::Bool(true)));
+                DimSpec::Range { min, max, integer }
+            } else {
+                return Err(format!(
+                    "dims[{i}] ({name}): need \"levels\", \"min\"/\"max\", or \"grid\""
+                ));
+            };
+            dims.push(Dim { name, spec });
+        }
+        let space = ParamSpace { n, rpn, scenario, dims };
+        space.check()?;
+        Ok(space)
+    }
+
+    /// Load and validate a parameter-space JSON file (`hplsim sa
+    /// --space FILE`). Invalid spaces fail here, at the author's
+    /// terminal.
+    pub fn load(path: &Path) -> Result<ParamSpace, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        ParamSpace::from_json(&v).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::NodeCoef;
+    use crate::platform::{HierSpec, NetSpec, SampleOpts};
+    use crate::stats::Matrix;
+
+    fn diag3(d: [f64; 3]) -> Matrix {
+        let mut m = Matrix::zeros(3, 3);
+        for (i, v) in d.iter().enumerate() {
+            m[(i, i)] = *v;
+        }
+        m
+    }
+
+    fn base_scenario() -> PlatformScenario {
+        PlatformScenario {
+            topo: TopoSpec::Star { nodes: 8, node_bw: 12.5e9, loop_bw: 40e9 },
+            net: NetSpec::Ideal,
+            compute: ComputeSpec::Homogeneous(NodeCoef::naive(1e-11)),
+            links: LinkVariability::Degraded { fraction: 0.1, factor: 0.5, seed: Some(3) },
+        }
+    }
+
+    fn space() -> ParamSpace {
+        ParamSpace {
+            n: 2048,
+            rpn: 1,
+            scenario: base_scenario(),
+            dims: vec![
+                Dim {
+                    name: "nb".into(),
+                    spec: DimSpec::Levels(vec![Json::Num(64.0), Json::Num(128.0)]),
+                },
+                Dim {
+                    name: "bcast".into(),
+                    spec: DimSpec::Levels(vec![
+                        Json::Str("1ring".into()),
+                        Json::Str("long".into()),
+                    ]),
+                },
+                Dim {
+                    name: "links.fraction".into(),
+                    spec: DimSpec::Range { min: 0.0, max: 0.4, integer: false },
+                },
+                Dim { name: "grid".into(), spec: DimSpec::Grid },
+            ],
+        }
+    }
+
+    #[test]
+    fn realize_maps_levels_ranges_and_grid() {
+        let s = space();
+        let r = s.realize_full(&[0.0, 0.9, 0.5, 1.0], "t", 7).unwrap();
+        let cfg = &r.point.cfg;
+        assert_eq!(cfg.nb, 64);
+        assert_eq!(cfg.bcast, Bcast::Long);
+        // 8 ranks -> pairs (1,8), (2,4); u=1.0 picks the last (2,4).
+        assert_eq!((cfg.p, cfg.q), (2, 4));
+        assert_eq!(r.labels, vec!["64", "long", "0.200000", "2x4"]);
+        match &r.point.platform {
+            crate::coordinator::backend::Platform::Scenario(sc) => match sc.links {
+                LinkVariability::Degraded { fraction, .. } => {
+                    assert!((fraction - 0.2).abs() < 1e-12)
+                }
+                _ => panic!("links kind changed"),
+            },
+            _ => panic!("expected a scenario platform"),
+        }
+    }
+
+    #[test]
+    fn realize_is_deterministic() {
+        let s = space();
+        let u = [0.3, 0.6, 0.25, 0.5];
+        let a = s.realize(&u, "t", 9).unwrap();
+        let b = s.realize(&u, "t", 9).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn swept_nodes_resize_topology_and_sampling() {
+        let mut s = space();
+        s.scenario.compute = ComputeSpec::Hierarchical {
+            model: HierSpec {
+                mu: [5.6e-11, 8e-7, 1.7e-12],
+                sigma_s: diag3([2.8e-24, 6.4e-15, 1.2e-25]),
+                sigma_t: diag3([2.0e-25, 1.6e-15, 2.9e-26]),
+            },
+            opts: SampleOpts::plain(8, None),
+        };
+        s.dims.push(Dim {
+            name: "nodes".into(),
+            spec: DimSpec::Range { min: 4.0, max: 16.0, integer: true },
+        });
+        s.check().unwrap();
+        let r = s.realize_full(&[0.0, 0.0, 0.0, 1.0, 1.0], "t", 1).unwrap();
+        match &r.point.platform {
+            crate::coordinator::backend::Platform::Scenario(sc) => {
+                assert_eq!(sc.topo.nodes(), 16);
+                assert_eq!(sc.compute.nodes(), Some(16));
+            }
+            _ => panic!("expected a scenario platform"),
+        }
+        // The grid tracked the realized rank count (16 ranks).
+        assert_eq!((r.point.cfg.p, r.point.cfg.q), (4, 4));
+    }
+
+    #[test]
+    fn unknown_and_mismatched_knobs_are_rejected() {
+        let mut s = space();
+        s.dims[0].name = "frobnicate".into();
+        assert!(s.check().unwrap_err().contains("unknown dimension"));
+
+        let mut s = space();
+        s.dims[2].name = "links.cv".into(); // base links are degraded, not jitter
+        assert!(s.check().unwrap_err().contains("jitter"));
+
+        let mut s = space();
+        s.dims.push(Dim { name: "x".into(), spec: DimSpec::Grid });
+        assert!(s.check().unwrap_err().contains("more than one grid"));
+    }
+
+    #[test]
+    fn json_roundtrip_is_byte_stable() {
+        let s = space();
+        let text = s.to_json().to_string();
+        let back = ParamSpace::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.fingerprint(), s.fingerprint());
+    }
+
+    #[test]
+    fn cardinality_respects_level_counts() {
+        let s = space();
+        assert_eq!(s.cardinality(0, 4), 2); // two NB levels
+        assert_eq!(s.cardinality(2, 4), 4); // continuous range -> default
+        assert_eq!(s.cardinality(3, 4), 2); // 8 ranks -> (1,8), (2,4)
+        let mut s = s;
+        s.dims[2].spec = DimSpec::Range { min: 0.0, max: 1.0, integer: true };
+        assert_eq!(s.cardinality(2, 4), 2); // integer span of 2 caps the cells
+    }
+}

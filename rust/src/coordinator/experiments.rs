@@ -1121,6 +1121,86 @@ pub fn fig16(ctx: &ExpCtx) -> Table {
     t
 }
 
+/// Sensitivity analysis — the "variability matters" lens as one figure:
+/// Sobol first-order/total indices of HPL throughput over tuning knobs
+/// (NB, broadcast variant, process grid) *and* platform-variability
+/// knobs (compute-sampling CV, link jitter), on a Saltelli design
+/// routed through the campaign runtime like every other experiment.
+/// Interaction mass (`ST - S1`) is where tuning advice computed on a
+/// variability-free platform stops transferring. The full CLI surface
+/// over authored spaces is `hplsim sa` (same planner and estimators).
+pub fn exp_sa(ctx: &ExpCtx) -> (Table, Table) {
+    use crate::coordinator::doe::{Dim, DimSpec, ParamSpace};
+    use crate::coordinator::sa;
+    use crate::stats::json::Json;
+
+    let (nodes, n, n_base) = if ctx.is_full() {
+        (64, 50_000, 256)
+    } else {
+        (16, 4_096, 24)
+    };
+    let gt = GroundTruth::generate(32, Scenario::Normal, ctx.seed);
+    let h = HierSpec::of(&Hierarchical::fit(&observe_linear(&gt, 10, 250, ctx.seed + 81)));
+    // One pinned cluster draw shared by every design point: the Sobol
+    // decomposition then attributes variance to the swept knobs, not to
+    // population re-sampling.
+    let scenario = PlatformScenario {
+        topo: TopoSpec::Star { nodes, node_bw: gt.node_bw, loop_bw: gt.loop_bw },
+        net: NetSpec::GroundTruth(gt_ref(ctx, 32, Scenario::Normal)),
+        compute: ComputeSpec::Hierarchical {
+            model: h,
+            opts: SampleOpts {
+                nodes,
+                cluster_seed: Some(derive_seed(ctx.seed + 82, 0)),
+                day: DayDraw::None,
+                gamma_cv: Some(0.0),
+                alpha_scale: ctx.node_threads(),
+                evict_slowest: 0,
+            },
+        },
+        links: LinkVariability::Jitter { cv: 0.0, seed: derive_seed(ctx.seed + 83, 0) },
+    };
+    let space = ParamSpace {
+        n,
+        rpn: 1,
+        scenario,
+        dims: vec![
+            Dim {
+                name: "nb".into(),
+                spec: DimSpec::Levels(
+                    [32.0, 64.0, 128.0, 256.0].iter().map(|&v| Json::Num(v)).collect(),
+                ),
+            },
+            Dim {
+                name: "bcast".into(),
+                spec: DimSpec::Levels(
+                    Bcast::ALL.iter().map(|b| Json::Str(b.name().into())).collect(),
+                ),
+            },
+            Dim { name: "grid".into(), spec: DimSpec::Grid },
+            Dim {
+                name: "compute.gamma_cv".into(),
+                spec: DimSpec::Range { min: 0.0, max: 0.10, integer: false },
+            },
+            Dim {
+                name: "links.cv".into(),
+                spec: DimSpec::Range { min: 0.0, max: 0.30, integer: false },
+            },
+        ],
+    };
+    let plan = sa::plan(&space, sa::Design::Saltelli, n_base, 4, 1, ctx.seed + 84)
+        .expect("the built-in SA space must plan");
+    let mut res = ctx.run_points(plan.points.clone());
+    let results: Vec<HplResult> = plan.points.iter().map(|_| res.pop()).collect();
+    res.finish();
+    let (gflops, _seconds) = sa::row_means(&plan, &results);
+    let sobol = sa::sobol_table(&space, &gflops, plan.n_base);
+    let anova = sa::anova_table(&space, &plan, &gflops);
+    ctx.save(&sobol, "exp_sa_sobol");
+    ctx.save(&anova, "exp_sa_anova");
+    (sobol, anova)
+}
+
 /// Fig. 4-style summary — per-node dgemm fits: heterogeneity and the
 /// linear vs polynomial gap.
 pub fn fig4(ctx: &ExpCtx) -> Table {
@@ -1189,6 +1269,7 @@ pub fn run_all(ctx: &ExpCtx) {
     fig13_15(ctx, Scenario::Normal);
     fig13_15(ctx, Scenario::Multimodal);
     fig16(ctx);
+    exp_sa(ctx);
 }
 
 #[cfg(test)]

@@ -5,17 +5,23 @@
 
 pub mod backend;
 pub mod cli;
+pub mod doe;
 pub mod experiments;
 pub mod manifest;
+pub mod sa;
 pub mod sweep;
 pub mod table;
+pub mod tune;
 
 pub use backend::{
     Campaign, CampaignReport, ExecBackend, ExecError, FileQueue, InProcess,
     MaterializeMemo, Platform, PointError, ProgressEvent, SimPoint, Subprocess,
     SweepOptions, WorkPlan,
 };
+pub use doe::{Dim, DimSpec, ParamSpace};
 pub use experiments::{ExpCtx, PointResults, Scale};
 pub use manifest::Manifest;
+pub use sa::{Design, SaPlan};
 pub use sweep::run_campaign;
 pub use table::Table;
+pub use tune::{TuneOptions, TuneState};

@@ -1,0 +1,378 @@
+//! Sensitivity-analysis campaigns: sample plans over a [`ParamSpace`]
+//! and the Sobol / ANOVA / OLS report tables.
+//!
+//! A plan is an ordinary `SimPoint` list — it exports to a manifest,
+//! shards, merges, caches, and runs on every execution backend exactly
+//! like a sweep. All design points of one replicate share a common
+//! simulation seed (common random numbers): the response is a
+//! deterministic function of the unit coordinates, so variance
+//! decomposition attributes *parameter* effects, not seed noise — and
+//! Saltelli hybrid rows that realize to an already-planned
+//! configuration collapse to the same fingerprint, which the campaign
+//! runtime computes only once.
+
+use crate::coordinator::backend::{point_seed, SimPoint};
+use crate::coordinator::doe::ParamSpace;
+use crate::coordinator::table::{fnum, Table};
+use crate::hpl::HplResult;
+use crate::stats::{anova_one_way, derive_seed, lhs, ols_fit, saltelli, sobol_indices, Rng};
+
+/// Sample-plan family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Design {
+    /// Saltelli A/B/AB_i matrices — the only design Sobol indices can
+    /// be estimated from.
+    Saltelli,
+    /// Latin hypercube (space-filling screening; ANOVA/OLS reports).
+    Lhs,
+    /// Full factorial over level cells (paper-style §4.2 ranking).
+    Factorial,
+}
+
+impl Design {
+    pub fn parse(s: &str) -> Option<Design> {
+        match s.to_ascii_lowercase().as_str() {
+            "saltelli" | "sobol" => Some(Design::Saltelli),
+            "lhs" | "latin" => Some(Design::Lhs),
+            "factorial" | "full-factorial" | "grid" => Some(Design::Factorial),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Design::Saltelli => "saltelli",
+            Design::Lhs => "lhs",
+            Design::Factorial => "factorial",
+        }
+    }
+}
+
+/// A fully planned SA campaign: the design rows (unit coordinates +
+/// value labels) and the runnable points, `replicates` per row in
+/// row-major order.
+#[derive(Clone, Debug)]
+pub struct SaPlan {
+    pub design: Design,
+    /// Unit coordinates, one per design row.
+    pub rows: Vec<Vec<f64>>,
+    /// Per-dimension value labels, parallel to `rows`.
+    pub labels: Vec<Vec<String>>,
+    /// `rows.len() * replicates` points: row `i`, replicate `r` at
+    /// index `i * replicates + r`.
+    pub points: Vec<SimPoint>,
+    pub replicates: usize,
+    /// Saltelli base size (`0` for LHS / factorial plans).
+    pub n_base: usize,
+}
+
+/// Stream offset separating the design-sampling RNG from the per-point
+/// simulation seeds.
+const DESIGN_STREAM: u64 = 0x5a17_e111;
+
+/// Cap on full-factorial cells — beyond this an authored space almost
+/// certainly meant LHS/Saltelli.
+const FACTORIAL_CAP: usize = 1 << 18;
+
+/// Generate the design rows and realize every point.
+///
+/// `n` is the Saltelli base size or the LHS row count (ignored for
+/// factorial); `levels` is the cell count factorial plans give each
+/// continuous dimension; every replicate `r` runs with the common seed
+/// `point_seed(seed, r)`.
+pub fn plan(
+    space: &ParamSpace,
+    design: Design,
+    n: usize,
+    levels: usize,
+    replicates: usize,
+    seed: u64,
+) -> Result<SaPlan, String> {
+    space.check()?;
+    if replicates == 0 {
+        return Err("replicates must be >= 1".into());
+    }
+    let d = space.dim_count();
+    let (rows, n_base) = match design {
+        Design::Saltelli => {
+            if n == 0 {
+                return Err("saltelli base size must be >= 1".into());
+            }
+            (saltelli(&mut Rng::new(derive_seed(seed, DESIGN_STREAM)), n, d), n)
+        }
+        Design::Lhs => {
+            if n == 0 {
+                return Err("lhs sample size must be >= 1".into());
+            }
+            (lhs(&mut Rng::new(derive_seed(seed, DESIGN_STREAM)), n, d), 0)
+        }
+        Design::Factorial => {
+            let cards: Vec<usize> = (0..d).map(|j| space.cardinality(j, levels)).collect();
+            let total: usize = cards.iter().product();
+            if total > FACTORIAL_CAP {
+                return Err(format!(
+                    "factorial plan has {total} cells (cap {FACTORIAL_CAP}); \
+                     use --design lhs or --design saltelli"
+                ));
+            }
+            let mut rows = Vec::with_capacity(total);
+            let mut cell = vec![0usize; d];
+            loop {
+                rows.push(
+                    cell.iter()
+                        .zip(&cards)
+                        .map(|(&c, &k)| (c as f64 + 0.5) / k as f64)
+                        .collect::<Vec<f64>>(),
+                );
+                let mut j = d;
+                loop {
+                    if j == 0 {
+                        break;
+                    }
+                    j -= 1;
+                    cell[j] += 1;
+                    if cell[j] < cards[j] {
+                        break;
+                    }
+                    cell[j] = 0;
+                }
+                if cell.iter().all(|&c| c == 0) {
+                    break;
+                }
+            }
+            (rows, 0)
+        }
+    };
+
+    let mut points = Vec::with_capacity(rows.len() * replicates);
+    let mut labels = Vec::with_capacity(rows.len());
+    for (i, u) in rows.iter().enumerate() {
+        for r in 0..replicates {
+            let label = if replicates == 1 {
+                format!("{}-{i:05}", design.name())
+            } else {
+                format!("{}-{i:05}-r{r}", design.name())
+            };
+            let sim_seed = point_seed(seed, r as u64);
+            if r == 0 {
+                let realized = space.realize_full(u, label, sim_seed)?;
+                labels.push(realized.labels);
+                points.push(realized.point);
+            } else {
+                points.push(space.realize(u, label, sim_seed)?);
+            }
+        }
+    }
+    Ok(SaPlan { design, rows, labels, points, replicates, n_base })
+}
+
+/// Per-design-row mean `(gflops, seconds)` across replicates, in row
+/// order. `results` must be in plan order (`points[i]` ↔ `results[i]`).
+pub fn row_means(plan: &SaPlan, results: &[HplResult]) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(results.len(), plan.points.len(), "results must match the plan");
+    let reps = plan.replicates as f64;
+    let mut gflops = Vec::with_capacity(plan.rows.len());
+    let mut seconds = Vec::with_capacity(plan.rows.len());
+    for chunk in results.chunks(plan.replicates) {
+        gflops.push(chunk.iter().map(|r| r.gflops).sum::<f64>() / reps);
+        seconds.push(chunk.iter().map(|r| r.seconds).sum::<f64>() / reps);
+    }
+    (gflops, seconds)
+}
+
+/// First-order / total Sobol indices of the response, one row per
+/// dimension. Only meaningful for a Saltelli plan; indices are
+/// formatted at fixed six-decimal precision so the report is a
+/// byte-stable cross-backend artifact.
+pub fn sobol_table(space: &ParamSpace, y: &[f64], n_base: usize) -> Table {
+    let ix = sobol_indices(y, n_base, space.dim_count());
+    let mut t = Table::new("Sobol sensitivity indices", &["dim", "S1", "ST"]);
+    for (j, name) in space.names().iter().enumerate() {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.6}", ix.s1[j]),
+            format!("{:.6}", ix.st[j]),
+        ]);
+    }
+    t
+}
+
+/// The per-row design table (`sa.csv`): unit-realized value labels per
+/// dimension plus the replicate-averaged response.
+pub fn sa_table(space: &ParamSpace, plan: &SaPlan, gflops: &[f64], seconds: &[f64]) -> Table {
+    let mut headers = vec!["row"];
+    headers.extend(space.names());
+    headers.push("gflops");
+    headers.push("seconds");
+    let mut t = Table::new("SA design points", &headers);
+    for (i, labels) in plan.labels.iter().enumerate() {
+        let mut row = Vec::with_capacity(headers.len());
+        row.push(i.to_string());
+        row.extend(labels.iter().cloned());
+        row.push(fnum(gflops[i]));
+        row.push(fnum(seconds[i]));
+        t.row(row);
+    }
+    t
+}
+
+/// One-way ANOVA of the response per dimension: categorical dimensions
+/// group by realized level, continuous ranges by unit-interval
+/// quartile.
+pub fn anova_table(space: &ParamSpace, plan: &SaPlan, y: &[f64]) -> Table {
+    let mut t = Table::new(
+        "One-way ANOVA per dimension",
+        &["factor", "eta_sq", "F", "df_between", "df_within"],
+    );
+    for (j, dim) in space.dims.iter().enumerate() {
+        let groups: Vec<String> = plan
+            .rows
+            .iter()
+            .zip(&plan.labels)
+            .map(|(u, ls)| space.anova_group(j, u[j], &ls[j]))
+            .collect();
+        let row = anova_one_way(&dim.name, &groups, y);
+        t.row(vec![
+            row.factor,
+            format!("{:.6}", row.eta_sq),
+            fnum(row.f_stat),
+            row.df_between.to_string(),
+            row.df_within.to_string(),
+        ]);
+    }
+    t
+}
+
+/// OLS regression of the response on the unit coordinates (plus an
+/// explicit intercept column): a cheap linear-effects summary
+/// complementing the variance decomposition.
+pub fn ols_table(space: &ParamSpace, plan: &SaPlan, y: &[f64]) -> Table {
+    let x: Vec<Vec<f64>> = plan
+        .rows
+        .iter()
+        .map(|u| {
+            let mut row = u.clone();
+            row.push(1.0);
+            row
+        })
+        .collect();
+    let fit = ols_fit(&x, y);
+    let mut t = Table::new("OLS response regression", &["term", "value"]);
+    for (j, name) in space.names().iter().enumerate() {
+        t.row(vec![name.to_string(), format!("{:.6e}", fit.coef[j])]);
+    }
+    t.row(vec!["intercept".into(), format!("{:.6e}", fit.coef[space.dim_count()])]);
+    t.row(vec!["r2".into(), format!("{:.6}", fit.r2)]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::NodeCoef;
+    use crate::coordinator::doe::{Dim, DimSpec};
+    use crate::platform::{
+        ComputeSpec, LinkVariability, NetSpec, PlatformScenario, TopoSpec,
+    };
+    use crate::stats::json::Json;
+    use crate::stats::saltelli_len;
+
+    fn space() -> ParamSpace {
+        ParamSpace {
+            n: 1024,
+            rpn: 1,
+            scenario: PlatformScenario {
+                topo: TopoSpec::Star { nodes: 4, node_bw: 12.5e9, loop_bw: 40e9 },
+                net: NetSpec::Ideal,
+                compute: ComputeSpec::Homogeneous(NodeCoef::naive(1e-11)),
+                // The `links.fraction` dimension below requires degraded
+                // links in the base scenario.
+                links: LinkVariability::Degraded { fraction: 0.1, factor: 0.5, seed: Some(1) },
+            },
+            dims: vec![
+                Dim {
+                    name: "nb".into(),
+                    spec: DimSpec::Levels(vec![Json::Num(32.0), Json::Num(64.0)]),
+                },
+                Dim {
+                    name: "links.fraction".into(),
+                    spec: DimSpec::Range { min: 0.0, max: 0.2, integer: false },
+                },
+            ],
+        }
+    }
+
+    fn res(gflops: f64) -> HplResult {
+        HplResult { gflops, seconds: 1.0 / gflops.max(1e-9), ..Default::default() }
+    }
+
+    #[test]
+    fn saltelli_plan_shape_and_common_seeds() {
+        let mut s = space();
+        s.dims[1].spec = DimSpec::Range { min: 0.0, max: 0.2, integer: false };
+        s.scenario.links =
+            LinkVariability::Degraded { fraction: 0.1, factor: 0.5, seed: Some(1) };
+        let p = plan(&s, Design::Saltelli, 4, 4, 2, 9).unwrap();
+        assert_eq!(p.rows.len(), saltelli_len(4, 2));
+        assert_eq!(p.points.len(), p.rows.len() * 2);
+        assert_eq!(p.labels.len(), p.rows.len());
+        // Common random numbers: every replicate-r point shares one seed.
+        for i in 0..p.rows.len() {
+            assert_eq!(p.points[2 * i].seed, p.points[0].seed);
+            assert_eq!(p.points[2 * i + 1].seed, p.points[1].seed);
+        }
+        assert_ne!(p.points[0].seed, p.points[1].seed);
+    }
+
+    #[test]
+    fn plans_are_deterministic_per_seed() {
+        let s = space();
+        let a = plan(&s, Design::Lhs, 6, 4, 1, 3).unwrap();
+        let b = plan(&s, Design::Lhs, 6, 4, 1, 3).unwrap();
+        assert_eq!(a.rows, b.rows);
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.fingerprint(), y.fingerprint());
+        }
+        let c = plan(&s, Design::Lhs, 6, 4, 1, 4).unwrap();
+        assert_ne!(a.rows, c.rows);
+    }
+
+    #[test]
+    fn factorial_enumerates_every_cell() {
+        let s = space();
+        let p = plan(&s, Design::Factorial, 0, 3, 1, 1).unwrap();
+        // 2 NB levels x 3 range cells.
+        assert_eq!(p.rows.len(), 6);
+        let mut seen = std::collections::BTreeSet::new();
+        for ls in &p.labels {
+            assert!(seen.insert(ls.join("|")), "duplicate cell {ls:?}");
+        }
+    }
+
+    #[test]
+    fn row_means_average_replicates() {
+        let s = space();
+        let p = plan(&s, Design::Lhs, 3, 4, 2, 5).unwrap();
+        let results: Vec<HplResult> =
+            (0..p.points.len()).map(|i| res((i + 1) as f64)).collect();
+        let (g, sec) = row_means(&p, &results);
+        assert_eq!(g.len(), 3);
+        assert_eq!(g[0], 1.5); // mean of 1, 2
+        assert_eq!(g[1], 3.5); // mean of 3, 4
+        assert!(sec.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn tables_have_one_row_per_dimension() {
+        let s = space();
+        let p = plan(&s, Design::Saltelli, 4, 4, 1, 2).unwrap();
+        let y: Vec<f64> =
+            p.rows.iter().map(|u| 100.0 + 10.0 * u[0] + 3.0 * u[1]).collect();
+        let sob = sobol_table(&s, &y, p.n_base);
+        assert_eq!(sob.rows.len(), 2);
+        let an = anova_table(&s, &p, &y);
+        assert_eq!(an.rows.len(), 2);
+        let ols = ols_table(&s, &p, &y);
+        assert_eq!(ols.rows.len(), 4); // 2 dims + intercept + r2
+    }
+}

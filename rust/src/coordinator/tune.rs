@@ -1,0 +1,478 @@
+//! Iterative tuning campaigns (`hplsim tune`): successive-halving
+//! refinement over a [`ParamSpace`], resumable bit-identically from
+//! on-disk wave state.
+//!
+//! Wave 0 is a Latin hypercube over the whole space; each later wave
+//! re-samples around the best configurations found so far with a
+//! shrinking perturbation radius. The sampling of wave `w` is a pure
+//! function of `(seed, w, results of waves < w)` — never of the total
+//! wave budget — so a tune interrupted after any wave resumes from its
+//! serialized [`TuneState`] and produces byte-identical reports, and a
+//! finished tune can simply be continued with a larger `--waves`
+//! (the UQ_PhysiCell resume-by-fixed-seed idiom).
+//!
+//! Every point of a tune shares one common simulation seed, so a
+//! survivor re-visited in a later wave maps to the same fingerprint and
+//! is served from the campaign cache instead of re-simulated.
+
+use std::path::Path;
+
+use crate::coordinator::backend::{point_seed, SimPoint};
+use crate::coordinator::doe::ParamSpace;
+use crate::coordinator::table::{fnum, Table};
+use crate::hpl::HplResult;
+use crate::stats::json::Json;
+use crate::stats::{derive_seed, lhs, Rng};
+
+/// Format marker of the serialized wave state.
+pub const STATE_FORMAT: &str = "hplsim-tune-state-v1";
+
+/// Fraction of the unit interval the wave-1 perturbation radius spans
+/// (shrinking by `shrink` each wave after that).
+const BASE_RADIUS: f64 = 0.25;
+
+/// Successive-halving schedule.
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    /// Total waves to run (including already-completed ones on resume).
+    pub waves: usize,
+    /// Points per wave.
+    pub wave_size: usize,
+    /// Survivors each refinement wave re-samples around.
+    pub keep: usize,
+    /// Radius decay per wave, in (0, 1].
+    pub shrink: f64,
+    /// Root seed: drives wave sampling and the common simulation seed.
+    pub seed: u64,
+}
+
+impl TuneOptions {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.waves == 0 || self.wave_size == 0 {
+            return Err("waves and wave-size must be >= 1".into());
+        }
+        if self.keep == 0 || self.keep > self.wave_size {
+            return Err("keep must be in [1, wave-size]".into());
+        }
+        if !(self.shrink > 0.0 && self.shrink <= 1.0) {
+            return Err("shrink must be in (0, 1]".into());
+        }
+        Ok(())
+    }
+}
+
+/// One evaluated tune point.
+#[derive(Clone, Debug)]
+pub struct TuneEntry {
+    pub wave: usize,
+    /// Index within the wave.
+    pub idx: usize,
+    /// Unit coordinates.
+    pub coords: Vec<f64>,
+    pub gflops: f64,
+    pub seconds: f64,
+}
+
+impl TuneEntry {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wave", Json::Num(self.wave as f64)),
+            ("idx", Json::Num(self.idx as f64)),
+            (
+                "coords",
+                Json::Arr(self.coords.iter().map(|&c| Json::num_exact(c)).collect()),
+            ),
+            ("gflops", Json::num_exact(self.gflops)),
+            ("seconds", Json::num_exact(self.seconds)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<TuneEntry> {
+        let arr = v.get("coords")?.as_arr()?;
+        let mut coords = Vec::with_capacity(arr.len());
+        for c in arr {
+            coords.push(c.as_f64_exact()?);
+        }
+        Some(TuneEntry {
+            wave: v.get("wave")?.as_usize()?,
+            idx: v.get("idx")?.as_usize()?,
+            coords,
+            gflops: v.get("gflops")?.as_f64_exact()?,
+            seconds: v.get("seconds")?.as_f64_exact()?,
+        })
+    }
+}
+
+/// The resumable tune state: every evaluated entry, bit-exact.
+#[derive(Clone, Debug)]
+pub struct TuneState {
+    /// Fingerprint of the parameter space the state belongs to —
+    /// resuming against a different space is refused.
+    pub space_fp: u64,
+    pub seed: u64,
+    pub waves_done: usize,
+    pub entries: Vec<TuneEntry>,
+}
+
+impl TuneState {
+    pub fn new(space: &ParamSpace, seed: u64) -> TuneState {
+        TuneState { space_fp: space.fingerprint(), seed, waves_done: 0, entries: Vec::new() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::Str(STATE_FORMAT.into())),
+            ("space_fp", Json::u64_str(self.space_fp)),
+            ("seed", Json::u64_str(self.seed)),
+            ("waves_done", Json::Num(self.waves_done as f64)),
+            ("entries", Json::Arr(self.entries.iter().map(TuneEntry::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TuneState, String> {
+        if v.get("format").and_then(Json::as_str) != Some(STATE_FORMAT) {
+            return Err(format!("not a tune state (expected format \"{STATE_FORMAT}\")"));
+        }
+        let space_fp =
+            v.get("space_fp").and_then(Json::as_u64).ok_or("tune state: missing space_fp")?;
+        let seed = v.get("seed").and_then(Json::as_u64).ok_or("tune state: missing seed")?;
+        let waves_done = v
+            .get("waves_done")
+            .and_then(Json::as_usize)
+            .ok_or("tune state: missing waves_done")?;
+        let arr =
+            v.get("entries").and_then(Json::as_arr).ok_or("tune state: missing entries")?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for (i, ev) in arr.iter().enumerate() {
+            entries
+                .push(TuneEntry::from_json(ev).ok_or_else(|| format!("tune state: entry {i} is malformed"))?);
+        }
+        Ok(TuneState { space_fp, seed, waves_done, entries })
+    }
+
+    /// Atomic save (temp + rename), mirroring `Manifest::save`: an
+    /// interrupted tune never leaves a truncated state file behind.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut tmp_name = path.file_name().unwrap_or_default().to_os_string();
+        tmp_name.push(format!(".tmp.{}", std::process::id()));
+        let tmp = path.with_file_name(tmp_name);
+        let res = std::fs::write(&tmp, self.to_json().to_string())
+            .and_then(|()| std::fs::rename(&tmp, path));
+        if res.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        res
+    }
+
+    pub fn load(path: &Path) -> Result<TuneState, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        TuneState::from_json(&v)
+    }
+}
+
+/// The `keep` best entries among waves `< wave`, ranked by gflops
+/// descending with deterministic `(wave, idx)` tie-breaking.
+fn survivors(state: &TuneState, keep: usize, wave: usize) -> Vec<&TuneEntry> {
+    let mut prior: Vec<&TuneEntry> =
+        state.entries.iter().filter(|e| e.wave < wave).collect();
+    prior.sort_by(|a, b| {
+        b.gflops
+            .partial_cmp(&a.gflops)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| (a.wave, a.idx).cmp(&(b.wave, b.idx)))
+    });
+    prior.truncate(keep);
+    prior
+}
+
+/// Unit coordinates of wave `wave` — a pure function of
+/// `(opts.seed, wave, entries of waves < wave)`.
+pub fn wave_coords(
+    space: &ParamSpace,
+    opts: &TuneOptions,
+    state: &TuneState,
+    wave: usize,
+) -> Vec<Vec<f64>> {
+    let d = space.dim_count();
+    if wave == 0 {
+        return lhs(&mut Rng::new(derive_seed(opts.seed, 0)), opts.wave_size, d);
+    }
+    let top = survivors(state, opts.keep, wave);
+    debug_assert!(!top.is_empty(), "refinement wave with no prior entries");
+    let mut rng = Rng::new(derive_seed(opts.seed, wave as u64));
+    let radius = BASE_RADIUS * opts.shrink.powi(wave as i32);
+    (0..opts.wave_size)
+        .map(|i| {
+            let parent = &top[i % top.len()].coords;
+            parent.iter().map(|&c| (c + radius * rng.normal()).clamp(0.0, 1.0)).collect()
+        })
+        .collect()
+}
+
+/// Run (or resume) a tune up to `opts.waves` completed waves.
+///
+/// `eval` executes one wave's points — in the CLI this is a
+/// `Campaign::run` on the selected backend; tests substitute analytic
+/// responses. `on_wave` is called after each completed wave with the
+/// updated state (the CLI persists it to disk there).
+pub fn run_tune(
+    space: &ParamSpace,
+    opts: &TuneOptions,
+    state: &mut TuneState,
+    eval: &mut dyn FnMut(&[SimPoint]) -> Result<Vec<HplResult>, String>,
+    on_wave: &mut dyn FnMut(&TuneState) -> Result<(), String>,
+) -> Result<(), String> {
+    opts.validate()?;
+    if state.space_fp != space.fingerprint() {
+        return Err("tune state belongs to a different parameter space \
+                    (delete the state file to start over)"
+            .into());
+    }
+    if state.seed != opts.seed {
+        return Err(format!(
+            "tune state was created with seed {} (got --seed {})",
+            state.seed, opts.seed
+        ));
+    }
+    // One common simulation seed for the whole tune: revisited
+    // configurations fingerprint identically and replay from cache.
+    let sim_seed = point_seed(opts.seed, 0);
+    while state.waves_done < opts.waves {
+        let w = state.waves_done;
+        let coords = wave_coords(space, opts, state, w);
+        let points: Vec<SimPoint> = coords
+            .iter()
+            .enumerate()
+            .map(|(i, u)| space.realize(u, format!("w{w}-{i:03}"), sim_seed))
+            .collect::<Result<_, String>>()?;
+        let results = eval(&points)?;
+        if results.len() != points.len() {
+            return Err(format!(
+                "wave {w}: backend returned {} result(s) for {} point(s)",
+                results.len(),
+                points.len()
+            ));
+        }
+        for (i, (u, r)) in coords.into_iter().zip(&results).enumerate() {
+            state.entries.push(TuneEntry {
+                wave: w,
+                idx: i,
+                coords: u,
+                gflops: r.gflops,
+                seconds: r.seconds,
+            });
+        }
+        state.waves_done = w + 1;
+        on_wave(state)?;
+    }
+    Ok(())
+}
+
+/// Every evaluated point in wave order (`tune.csv`).
+pub fn tune_table(space: &ParamSpace, state: &TuneState) -> Table {
+    let mut headers = vec!["wave", "idx"];
+    headers.extend(space.names());
+    headers.push("gflops");
+    headers.push("seconds");
+    let mut t = Table::new("Tune evaluations", &headers);
+    for e in &state.entries {
+        let labels = realize_labels(space, &e.coords);
+        let mut row = Vec::with_capacity(headers.len());
+        row.push(e.wave.to_string());
+        row.push(e.idx.to_string());
+        row.extend(labels);
+        row.push(fnum(e.gflops));
+        row.push(fnum(e.seconds));
+        t.row(row);
+    }
+    t
+}
+
+/// The `keep` best configurations found so far (`tune_best.csv`).
+pub fn best_table(space: &ParamSpace, state: &TuneState, keep: usize) -> Table {
+    let mut headers = vec!["rank", "wave", "idx"];
+    headers.extend(space.names());
+    headers.push("gflops");
+    headers.push("seconds");
+    let mut t = Table::new("Best tuned configurations", &headers);
+    for (rank, e) in survivors(state, keep, usize::MAX).iter().enumerate() {
+        let labels = realize_labels(space, &e.coords);
+        let mut row = Vec::with_capacity(headers.len());
+        row.push(rank.to_string());
+        row.push(e.wave.to_string());
+        row.push(e.idx.to_string());
+        row.extend(labels);
+        row.push(fnum(e.gflops));
+        row.push(fnum(e.seconds));
+        t.row(row);
+    }
+    t
+}
+
+fn realize_labels(space: &ParamSpace, coords: &[f64]) -> Vec<String> {
+    space
+        .realize_full(coords, "row", 0)
+        .map(|r| r.labels)
+        .expect("stored tune coordinates must realize")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::NodeCoef;
+    use crate::coordinator::doe::{Dim, DimSpec};
+    use crate::platform::{
+        ComputeSpec, LinkVariability, NetSpec, PlatformScenario, TopoSpec,
+    };
+
+    fn space() -> ParamSpace {
+        ParamSpace {
+            n: 1024,
+            rpn: 1,
+            scenario: PlatformScenario {
+                topo: TopoSpec::Star { nodes: 4, node_bw: 12.5e9, loop_bw: 40e9 },
+                net: NetSpec::Ideal,
+                compute: ComputeSpec::Homogeneous(NodeCoef::naive(1e-11)),
+                links: LinkVariability::None,
+            },
+            dims: vec![
+                Dim {
+                    name: "nb".into(),
+                    spec: DimSpec::Range { min: 16.0, max: 256.0, integer: true },
+                },
+                Dim {
+                    name: "swap_threshold".into(),
+                    spec: DimSpec::Range { min: 16.0, max: 128.0, integer: true },
+                },
+            ],
+        }
+    }
+
+    fn opts(waves: usize) -> TuneOptions {
+        TuneOptions { waves, wave_size: 8, keep: 3, shrink: 0.5, seed: 42 }
+    }
+
+    /// Analytic response peaked at (0.7, 0.3) in unit space.
+    fn eval_fn(points: &[SimPoint], coords: &[Vec<f64>]) -> Vec<HplResult> {
+        assert_eq!(points.len(), coords.len());
+        coords
+            .iter()
+            .map(|u| {
+                let g = 100.0 - 50.0 * (u[0] - 0.7).powi(2) - 30.0 * (u[1] - 0.3).powi(2);
+                HplResult { gflops: g, seconds: 1.0, ..Default::default() }
+            })
+            .collect()
+    }
+
+    /// Run a tune against the analytic response, returning the state.
+    fn run(waves: usize, mut state: TuneState) -> TuneState {
+        let s = space();
+        let o = opts(waves);
+        // The analytic eval needs the coords; recover them through the
+        // same wave_coords call run_tune makes (pure function).
+        while state.waves_done < o.waves {
+            let w = state.waves_done;
+            let coords = wave_coords(&s, &o, &state, w);
+            let mut eval = |pts: &[SimPoint]| Ok(eval_fn(pts, &coords));
+            let target = w + 1;
+            let mut o1 = o.clone();
+            o1.waves = target;
+            run_tune(&s, &o1, &mut state, &mut eval, &mut |_| Ok(())).unwrap();
+        }
+        state
+    }
+
+    #[test]
+    fn wave_zero_is_deterministic_and_stratified() {
+        let s = space();
+        let st = TuneState::new(&s, 42);
+        let a = wave_coords(&s, &opts(3), &st, 0);
+        let b = wave_coords(&s, &opts(3), &st, 0);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    fn refinement_concentrates_near_the_optimum() {
+        let s = space();
+        let state = run(4, TuneState::new(&s, 42));
+        assert_eq!(state.waves_done, 4);
+        assert_eq!(state.entries.len(), 32);
+        let best = survivors(&state, 1, usize::MAX)[0];
+        assert!(best.gflops > 99.0, "best {}", best.gflops);
+    }
+
+    #[test]
+    fn resume_reproduces_the_uninterrupted_run_bit_exactly() {
+        let s = space();
+        // Uninterrupted: 3 waves in one go.
+        let full = run(3, TuneState::new(&s, 42));
+        // Interrupted: 1 wave, serialize, reload, 2 more.
+        let partial = run(1, TuneState::new(&s, 42));
+        let reloaded =
+            TuneState::from_json(&Json::parse(&partial.to_json().to_string()).unwrap())
+                .unwrap();
+        let resumed = run(3, reloaded);
+        assert_eq!(full.to_json().to_string(), resumed.to_json().to_string());
+        // Bit-exact coords survive the round-trip (num_exact encoding).
+        for (a, b) in full.entries.iter().zip(&resumed.entries) {
+            assert_eq!(a.coords, b.coords);
+            assert_eq!(a.gflops.to_bits(), b.gflops.to_bits());
+        }
+    }
+
+    #[test]
+    fn state_guards_space_and_seed() {
+        let s = space();
+        let o = opts(1);
+        let mut noop = |_: &TuneState| Ok(());
+        let mut eval =
+            |pts: &[SimPoint]| Ok(vec![HplResult::default(); pts.len()]);
+
+        let mut other = space();
+        other.dims.pop();
+        let mut st = TuneState::new(&other, 42);
+        let e = run_tune(&s, &o, &mut st, &mut eval, &mut noop).unwrap_err();
+        assert!(e.contains("different parameter space"), "{e}");
+
+        let mut st = TuneState::new(&s, 7);
+        let e = run_tune(&s, &o, &mut st, &mut eval, &mut noop).unwrap_err();
+        assert!(e.contains("seed"), "{e}");
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let s = space();
+        let state = run(2, TuneState::new(&s, 42));
+        let dir = std::env::temp_dir()
+            .join(format!("hplsim_tune_state_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.json");
+        state.save(&path).unwrap();
+        let back = TuneState::load(&path).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(back.to_json().to_string(), state.to_json().to_string());
+    }
+
+    #[test]
+    fn rejects_malformed_state() {
+        assert!(TuneState::from_json(&Json::parse("{}").unwrap()).is_err());
+        let wrong =
+            r#"{"format":"other","space_fp":"1","seed":"2","waves_done":0,"entries":[]}"#;
+        assert!(TuneState::from_json(&Json::parse(wrong).unwrap()).is_err());
+    }
+
+    #[test]
+    fn tables_cover_all_entries() {
+        let s = space();
+        let state = run(2, TuneState::new(&s, 42));
+        let t = tune_table(&s, &state);
+        assert_eq!(t.rows.len(), 16);
+        assert_eq!(t.headers.len(), 2 + 2 + 2); // wave, idx, 2 dims, gflops, seconds
+        let b = best_table(&s, &state, 3);
+        assert_eq!(b.rows.len(), 3);
+    }
+}

@@ -12,10 +12,12 @@ pub mod json;
 pub mod linalg;
 pub mod ols;
 pub mod rng;
+pub mod sobol;
 pub mod summary;
 
 pub use anova::{anova_one_way, AnovaRow};
 pub use linalg::{cholesky_solve, Matrix};
 pub use ols::{ols_fit, ols_rel_fit, OlsFit};
 pub use rng::{derive_seed, Rng};
+pub use sobol::{lhs, saltelli, saltelli_len, sobol_indices, SobolIndices};
 pub use summary::{mean, mean_ci95, quantile, std_dev, Summary};

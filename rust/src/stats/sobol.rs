@@ -1,0 +1,262 @@
+//! Variance-based global sensitivity analysis: sample-plan generators
+//! (Latin hypercube, Saltelli) and Sobol index estimators.
+//!
+//! All plans live on the unit hypercube `[0,1)^d`; the
+//! design-of-experiments layer (`coordinator::doe`) owns the mapping
+//! from unit coordinates to concrete `(HplConfig, PlatformScenario)`
+//! points. Keeping the generators dimension-agnostic here means the
+//! estimator can be validated against analytic test functions
+//! (Ishigami) with no simulator in the loop.
+//!
+//! Estimators are the Saltelli-2010 first-order form and the Jansen
+//! total-order form, the same pairing the UQ literature (and the
+//! SALib/UQ_PhysiCell harnesses this reproduces) default to:
+//!
+//! ```text
+//! S_i  = mean_j( f(B)_j * (f(AB_i)_j - f(A)_j) ) / V
+//! ST_i = mean_j( (f(A)_j - f(AB_i)_j)^2 ) / (2 V)
+//! ```
+//!
+//! with `V` the variance of the pooled `f(A) ∪ f(B)` sample.
+
+use super::rng::Rng;
+
+/// Latin hypercube sample: `n` points in `[0,1)^dims`, each dimension
+/// stratified into `n` equal strata with exactly one point per stratum,
+/// strata paired across dimensions by independent random permutations.
+pub fn lhs(rng: &mut Rng, n: usize, dims: usize) -> Vec<Vec<f64>> {
+    assert!(n > 0 && dims > 0, "lhs needs n > 0 and dims > 0");
+    let mut out = vec![vec![0.0; dims]; n];
+    let mut strata: Vec<usize> = (0..n).collect();
+    for d in 0..dims {
+        for (i, s) in strata.iter_mut().enumerate() {
+            *s = i;
+        }
+        rng.shuffle(&mut strata);
+        for (row, &s) in out.iter_mut().zip(strata.iter()) {
+            row[d] = (s as f64 + rng.uniform()) / n as f64;
+        }
+    }
+    out
+}
+
+/// Number of rows a Saltelli plan of base size `n_base` over `dims`
+/// dimensions contains: the A and B matrices plus one AB_i matrix per
+/// dimension.
+pub fn saltelli_len(n_base: usize, dims: usize) -> usize {
+    n_base * (dims + 2)
+}
+
+/// Saltelli sample plan: two independent uniform matrices `A` and `B`
+/// (`n_base` rows each) followed by the `dims` hybrid matrices `AB_i`
+/// (`A` with column `i` replaced by `B`'s column `i`), concatenated in
+/// the fixed order `[A; B; AB_0; ...; AB_{d-1}]` that
+/// [`sobol_indices`] expects.
+///
+/// The layout is what makes campaign-level dedup free downstream: every
+/// `AB_i` row shares `d-1` coordinates with an `A` row, so coarse
+/// (categorical / low-level-count) dimensions frequently map `AB_i`
+/// rows onto configurations the campaign already fingerprinted.
+pub fn saltelli(rng: &mut Rng, n_base: usize, dims: usize) -> Vec<Vec<f64>> {
+    assert!(n_base > 0 && dims > 0, "saltelli needs n_base > 0 and dims > 0");
+    let a: Vec<Vec<f64>> =
+        (0..n_base).map(|_| (0..dims).map(|_| rng.uniform()).collect()).collect();
+    let b: Vec<Vec<f64>> =
+        (0..n_base).map(|_| (0..dims).map(|_| rng.uniform()).collect()).collect();
+    let mut rows = Vec::with_capacity(saltelli_len(n_base, dims));
+    rows.extend(a.iter().cloned());
+    rows.extend(b.iter().cloned());
+    for i in 0..dims {
+        for (ra, rb) in a.iter().zip(&b) {
+            let mut h = ra.clone();
+            h[i] = rb[i];
+            rows.push(h);
+        }
+    }
+    rows
+}
+
+/// First-order and total-order Sobol indices.
+#[derive(Clone, Debug)]
+pub struct SobolIndices {
+    /// First-order index per dimension (Saltelli 2010 estimator).
+    pub s1: Vec<f64>,
+    /// Total-order index per dimension (Jansen estimator).
+    pub st: Vec<f64>,
+    /// Mean of the pooled `f(A) ∪ f(B)` sample.
+    pub mean: f64,
+    /// Variance of the pooled `f(A) ∪ f(B)` sample.
+    pub variance: f64,
+}
+
+/// Estimate Sobol indices from responses `y` evaluated on a
+/// [`saltelli`] plan of base size `n_base` over `dims` dimensions, in
+/// plan order. A degenerate (zero-variance) response — e.g. the
+/// plan-only placeholder results — yields all-zero indices rather than
+/// NaNs.
+pub fn sobol_indices(y: &[f64], n_base: usize, dims: usize) -> SobolIndices {
+    assert_eq!(
+        y.len(),
+        saltelli_len(n_base, dims),
+        "response length must match the Saltelli plan"
+    );
+    let f_a = &y[..n_base];
+    let f_b = &y[n_base..2 * n_base];
+
+    let pooled = 2 * n_base;
+    let mean = (f_a.iter().sum::<f64>() + f_b.iter().sum::<f64>()) / pooled as f64;
+    let variance = (f_a.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+        + f_b.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>())
+        / pooled as f64;
+
+    let mut s1 = vec![0.0; dims];
+    let mut st = vec![0.0; dims];
+    if variance > 0.0 {
+        for i in 0..dims {
+            let f_abi = &y[(2 + i) * n_base..(3 + i) * n_base];
+            let mut first = 0.0;
+            let mut total = 0.0;
+            for j in 0..n_base {
+                first += f_b[j] * (f_abi[j] - f_a[j]);
+                let d = f_a[j] - f_abi[j];
+                total += d * d;
+            }
+            s1[i] = first / n_base as f64 / variance;
+            st[i] = total / (2.0 * n_base as f64) / variance;
+        }
+    }
+    SobolIndices { s1, st, mean, variance }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lhs_is_stratified_per_dimension() {
+        let mut rng = Rng::new(11);
+        let n = 16;
+        let dims = 3;
+        let pts = lhs(&mut rng, n, dims);
+        assert_eq!(pts.len(), n);
+        for d in 0..dims {
+            let mut seen = vec![false; n];
+            for row in &pts {
+                assert!(row[d] >= 0.0 && row[d] < 1.0, "out of unit cube: {}", row[d]);
+                let stratum = (row[d] * n as f64) as usize;
+                assert!(!seen[stratum], "dimension {d} stratum {stratum} hit twice");
+                seen[stratum] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "dimension {d} missed a stratum");
+        }
+    }
+
+    #[test]
+    fn lhs_is_deterministic_per_seed() {
+        let a = lhs(&mut Rng::new(5), 8, 2);
+        let b = lhs(&mut Rng::new(5), 8, 2);
+        assert_eq!(a, b);
+        let c = lhs(&mut Rng::new(6), 8, 2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn saltelli_layout_and_hybrid_rows() {
+        let n = 4;
+        let dims = 3;
+        let rows = saltelli(&mut Rng::new(3), n, dims);
+        assert_eq!(rows.len(), saltelli_len(n, dims));
+        let a = &rows[..n];
+        let b = &rows[n..2 * n];
+        for i in 0..dims {
+            let abi = &rows[(2 + i) * n..(3 + i) * n];
+            for j in 0..n {
+                for d in 0..dims {
+                    let want = if d == i { b[j][d] } else { a[j][d] };
+                    assert_eq!(abi[j][d], want, "AB_{i} row {j} dim {d}");
+                }
+            }
+        }
+    }
+
+    /// Ishigami function: the standard analytic benchmark for Sobol
+    /// estimators. With `a = 7`, `b = 0.1` on `x ∈ [-π, π]^3` the
+    /// closed-form indices are
+    /// `S1 ≈ 0.3139, S2 ≈ 0.4424, S3 = 0`,
+    /// `ST1 ≈ 0.5576, ST2 ≈ 0.4424, ST3 ≈ 0.2437`.
+    #[test]
+    fn ishigami_closed_form_within_tolerance() {
+        use std::f64::consts::PI;
+        let (a, b) = (7.0, 0.1);
+        let n_base = 16384;
+        let dims = 3;
+        let plan = saltelli(&mut Rng::new(20260807), n_base, dims);
+        let y: Vec<f64> = plan
+            .iter()
+            .map(|u| {
+                let x: Vec<f64> = u.iter().map(|&v| -PI + 2.0 * PI * v).collect();
+                x[0].sin() + a * x[1].sin().powi(2) + b * x[2].powi(4) * x[0].sin()
+            })
+            .collect();
+        let ix = sobol_indices(&y, n_base, dims);
+
+        // Closed form: V1 = (1 + b π^4 / 5)^2 / 2, V2 = a^2 / 8,
+        // V13 = 8 b^2 π^8 / 225, D = V1 + V2 + V13.
+        let v1 = 0.5 * (1.0 + b * PI.powi(4) / 5.0).powi(2);
+        let v2 = a * a / 8.0;
+        let v13 = 8.0 * b * b * PI.powi(8) / 225.0;
+        let d = v1 + v2 + v13;
+        let want_s1 = [v1 / d, v2 / d, 0.0];
+        let want_st = [(v1 + v13) / d, v2 / d, v13 / d];
+
+        let tol = 0.03;
+        assert!((ix.variance - d).abs() < 0.05 * d, "variance {} want {d}", ix.variance);
+        for i in 0..dims {
+            assert!(
+                (ix.s1[i] - want_s1[i]).abs() < tol,
+                "S{}: {} want {}",
+                i + 1,
+                ix.s1[i],
+                want_s1[i]
+            );
+            assert!(
+                (ix.st[i] - want_st[i]).abs() < tol,
+                "ST{}: {} want {}",
+                i + 1,
+                ix.st[i],
+                want_st[i]
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_response_yields_zero_indices() {
+        let n_base = 8;
+        let dims = 2;
+        let y = vec![3.5; saltelli_len(n_base, dims)];
+        let ix = sobol_indices(&y, n_base, dims);
+        assert_eq!(ix.variance, 0.0);
+        assert!(ix.s1.iter().chain(&ix.st).all(|&v| v == 0.0));
+    }
+
+    /// Additive linear function: S_i known exactly, ST_i == S_i.
+    #[test]
+    fn additive_function_first_equals_total() {
+        let n_base = 8192;
+        let dims = 3;
+        let w = [3.0, 2.0, 1.0];
+        let plan = saltelli(&mut Rng::new(99), n_base, dims);
+        let y: Vec<f64> = plan
+            .iter()
+            .map(|u| u.iter().zip(&w).map(|(v, c)| c * v).sum())
+            .collect();
+        let ix = sobol_indices(&y, n_base, dims);
+        // V_i = w_i^2 / 12 for uniform inputs on [0,1).
+        let d: f64 = w.iter().map(|c| c * c / 12.0).sum();
+        for i in 0..dims {
+            let want = w[i] * w[i] / 12.0 / d;
+            assert!((ix.s1[i] - want).abs() < 0.02, "S{i}: {} want {want}", ix.s1[i]);
+            assert!((ix.st[i] - want).abs() < 0.02, "ST{i}: {} want {want}", ix.st[i]);
+        }
+    }
+}

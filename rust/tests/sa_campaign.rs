@@ -1,0 +1,236 @@
+//! Sensitivity-analysis campaigns end-to-end: a Saltelli plan runs
+//! through the ordinary campaign runtime, so equal-configuration hybrid
+//! rows collapse to one fingerprint (computed once), thread count never
+//! changes the results, the CLI emits byte-identical reports across
+//! execution backends, and `--plan-only --export-manifest` round-trips
+//! through the standard manifest format.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use hplsim::blas::NodeCoef;
+use hplsim::coordinator::backend::{Campaign, InProcess};
+use hplsim::coordinator::doe::{Dim, DimSpec, ParamSpace};
+use hplsim::coordinator::manifest::Manifest;
+use hplsim::coordinator::sa::{self, Design};
+use hplsim::platform::{
+    ComputeSpec, LinkVariability, NetSpec, PlatformScenario, TopoSpec,
+};
+use hplsim::stats::json::Json;
+use hplsim::stats::saltelli_len;
+
+fn hplsim_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_hplsim"))
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("hplsim_sa_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A cheap all-discrete space: 2 NB levels x 2 broadcast variants x 2
+/// factor pairs of 4 ranks = at most 8 distinct configurations, far
+/// fewer than any Saltelli plan over it — dedup is guaranteed by
+/// pigeonhole, deterministically.
+fn space() -> ParamSpace {
+    ParamSpace {
+        n: 512,
+        rpn: 1,
+        scenario: PlatformScenario {
+            topo: TopoSpec::Star { nodes: 4, node_bw: 12.5e9, loop_bw: 40e9 },
+            net: NetSpec::Ideal,
+            compute: ComputeSpec::Homogeneous(NodeCoef::naive(1e-11)),
+            links: LinkVariability::None,
+        },
+        dims: vec![
+            Dim {
+                name: "nb".into(),
+                spec: DimSpec::Levels(vec![Json::Num(32.0), Json::Num(64.0)]),
+            },
+            Dim {
+                name: "bcast".into(),
+                spec: DimSpec::Levels(vec![
+                    Json::Str("1ring".into()),
+                    Json::Str("long".into()),
+                ]),
+            },
+            Dim { name: "grid".into(), spec: DimSpec::Grid },
+        ],
+    }
+}
+
+/// Saltelli hybrid rows that realize to an already-planned
+/// configuration are computed exactly once, and the in-process pool is
+/// bit-identical at any thread count.
+#[test]
+fn saltelli_hybrid_rows_dedup_and_threads_do_not_matter() {
+    let s = space();
+    let plan = sa::plan(&s, Design::Saltelli, 8, 4, 1, 42).unwrap();
+    assert_eq!(plan.points.len(), saltelli_len(8, 3));
+
+    let distinct: HashSet<u64> = plan.points.iter().map(|p| p.fingerprint()).collect();
+    assert!(distinct.len() <= 8, "only 8 configurations exist");
+    assert!(distinct.len() < plan.points.len(), "the plan must contain duplicates");
+
+    let r1 = Campaign::new(&plan.points).threads(1).run(&InProcess::new()).unwrap();
+    assert_eq!(r1.results.len(), plan.points.len());
+    assert_eq!(
+        r1.computed,
+        distinct.len(),
+        "one simulation per distinct fingerprint, the rest fanned out"
+    );
+
+    let r4 = Campaign::new(&plan.points).threads(4).run(&InProcess::new()).unwrap();
+    for (a, b) in r1.results.iter().zip(&r4.results) {
+        assert_eq!(a.gflops.to_bits(), b.gflops.to_bits());
+        assert_eq!(a.seconds.to_bits(), b.seconds.to_bits());
+    }
+
+    // Equal-fingerprint duplicates received identical results.
+    let (g, _) = sa::row_means(&plan, &r1.results);
+    for (i, pi) in plan.points.iter().enumerate() {
+        for (j, pj) in plan.points.iter().enumerate().skip(i + 1) {
+            if pi.fingerprint() == pj.fingerprint() {
+                assert_eq!(g[i].to_bits(), g[j].to_bits());
+            }
+        }
+    }
+}
+
+/// The CLI surface end-to-end: `hplsim sa` over one space file emits
+/// sobol.csv / sa.csv byte-identical on the in-process pool and a file
+/// queue drained by two real worker processes.
+#[test]
+fn cli_sa_backends_emit_identical_reports() {
+    let base = fresh_dir("cli");
+    let spath = base.join("space.json");
+    std::fs::write(&spath, space().to_json().to_string()).unwrap();
+
+    let run = |extra: &[&str], out: &Path| -> (Vec<u8>, Vec<u8>) {
+        let mut cmd = std::process::Command::new(hplsim_exe());
+        cmd.arg("sa")
+            .arg("--space")
+            .arg(&spath)
+            .arg("--design")
+            .arg("saltelli")
+            .arg("--points")
+            .arg("4")
+            .arg("--seed")
+            .arg("7")
+            .arg("--threads")
+            .arg("2")
+            .arg("--no-cache")
+            .arg("--out")
+            .arg(out);
+        for a in extra {
+            cmd.arg(a);
+        }
+        let status = cmd
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .status()
+            .expect("spawn hplsim sa");
+        assert!(status.success(), "sa {extra:?} exited with {status}");
+        (
+            std::fs::read(out.join("sobol.csv")).expect("sobol.csv written"),
+            std::fs::read(out.join("sa.csv")).expect("sa.csv written"),
+        )
+    };
+
+    let want = run(&[], &base.join("out-inproc"));
+    let got = run(
+        &[
+            "--backend",
+            "queue",
+            "--queue-dir",
+            base.join("queue").to_str().unwrap(),
+            "--queue-workers",
+            "2",
+            "--queue-tasks",
+            "3",
+        ],
+        &base.join("out-queue"),
+    );
+    assert_eq!(got.0, want.0, "sobol.csv diverged across backends");
+    assert_eq!(got.1, want.1, "sa.csv diverged across backends");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Non-Saltelli designs skip the Sobol report (the estimator needs the
+/// A/B/AB structure) but still emit the design table and ANOVA/OLS
+/// summaries.
+#[test]
+fn cli_lhs_design_skips_sobol_but_writes_summaries() {
+    let base = fresh_dir("lhs");
+    let spath = base.join("space.json");
+    std::fs::write(&spath, space().to_json().to_string()).unwrap();
+    let out = base.join("out");
+    let status = std::process::Command::new(hplsim_exe())
+        .arg("sa")
+        .arg("--space")
+        .arg(&spath)
+        .arg("--design")
+        .arg("lhs")
+        .arg("--points")
+        .arg("6")
+        .arg("--threads")
+        .arg("2")
+        .arg("--no-cache")
+        .arg("--out")
+        .arg(&out)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .status()
+        .expect("spawn hplsim sa");
+    assert!(status.success(), "sa --design lhs exited with {status}");
+    assert!(!out.join("sobol.csv").exists(), "LHS plans must not emit Sobol indices");
+    for name in ["sa.csv", "anova.csv", "ols.csv"] {
+        assert!(out.join(name).exists(), "{name} missing");
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// `--plan-only --export-manifest` writes a standard campaign manifest
+/// without running anything: the exported points match an in-process
+/// regeneration of the same plan fingerprint-for-fingerprint.
+#[test]
+fn cli_plan_only_exports_a_loadable_manifest() {
+    let base = fresh_dir("manifest");
+    let spath = base.join("space.json");
+    std::fs::write(&spath, space().to_json().to_string()).unwrap();
+    let mpath = base.join("plan.json");
+    let status = std::process::Command::new(hplsim_exe())
+        .arg("sa")
+        .arg("--space")
+        .arg(&spath)
+        .arg("--design")
+        .arg("saltelli")
+        .arg("--points")
+        .arg("4")
+        .arg("--replicates")
+        .arg("2")
+        .arg("--plan-only")
+        .arg("--export-manifest")
+        .arg(&mpath)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .status()
+        .expect("spawn hplsim sa --plan-only");
+    assert!(status.success(), "plan-only export exited with {status}");
+
+    let m = Manifest::load(&mpath).unwrap();
+    assert_eq!(m.points.len(), saltelli_len(4, 3) * 2);
+
+    // Seed-deterministic: regenerating the plan (default --seed 42)
+    // yields the same points in the same order.
+    let plan = sa::plan(&space(), Design::Saltelli, 4, 4, 2, 42).unwrap();
+    assert_eq!(m.points.len(), plan.points.len());
+    for (a, b) in m.points.iter().zip(&plan.points) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}

@@ -1,0 +1,129 @@
+//! Golden byte-pins of the SA report formats (mirroring
+//! `campaign_csv_golden.rs`): `sobol.csv` and `sa.csv` are committed
+//! cross-backend comparison artifacts, so their exact bytes — header
+//! order, label rendering, fixed six-decimal indices — are part of the
+//! interface. A diff here means every stored artifact silently changed
+//! meaning; bump deliberately.
+
+use hplsim::blas::NodeCoef;
+use hplsim::coordinator::doe::{Dim, DimSpec, ParamSpace};
+use hplsim::coordinator::sa::{self, Design};
+use hplsim::coordinator::Table;
+use hplsim::platform::{
+    ComputeSpec, LinkVariability, NetSpec, PlatformScenario, TopoSpec,
+};
+use hplsim::stats::json::Json;
+
+fn read_csv(t: &Table, name: &str) -> String {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "hplsim_sa_golden_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    t.write_csv(&dir, name).unwrap();
+    let s = std::fs::read_to_string(dir.join(format!("{name}.csv"))).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    s
+}
+
+/// The doc-example space: HPL knobs, a scenario knob, and the process
+/// grid over 8 ranks (factor pairs (1,8) and (2,4)).
+fn space() -> ParamSpace {
+    ParamSpace {
+        n: 2048,
+        rpn: 1,
+        scenario: PlatformScenario {
+            topo: TopoSpec::Star { nodes: 8, node_bw: 12.5e9, loop_bw: 40e9 },
+            net: NetSpec::Ideal,
+            compute: ComputeSpec::Homogeneous(NodeCoef::naive(1e-11)),
+            // The links.fraction dimension mutates a degraded-links base.
+            links: LinkVariability::Degraded { fraction: 0.1, factor: 0.5, seed: Some(3) },
+        },
+        dims: vec![
+            Dim {
+                name: "nb".into(),
+                spec: DimSpec::Levels(vec![Json::Num(64.0), Json::Num(128.0)]),
+            },
+            Dim {
+                name: "bcast".into(),
+                spec: DimSpec::Levels(vec![
+                    Json::Str("1ring".into()),
+                    Json::Str("long".into()),
+                ]),
+            },
+            Dim {
+                name: "links.fraction".into(),
+                spec: DimSpec::Range { min: 0.0, max: 0.4, integer: false },
+            },
+            Dim { name: "grid".into(), spec: DimSpec::Grid },
+        ],
+    }
+}
+
+/// `sobol.csv`: one row per dimension, S1/ST at fixed six decimals. A
+/// constant response has zero variance, which the estimator guard maps
+/// to exactly zero indices — pinning both the format and the guard.
+#[test]
+fn sobol_csv_bytes_are_pinned() {
+    let s = space();
+    let y = vec![5.0; hplsim::stats::saltelli_len(2, 4)];
+    let got = read_csv(&sa::sobol_table(&s, &y, 2), "sobol");
+    let want = "\
+dim,S1,ST
+nb,0.000000,0.000000
+bcast,0.000000,0.000000
+links.fraction,0.000000,0.000000
+grid,0.000000,0.000000
+";
+    assert_eq!(got, want);
+}
+
+/// `sa.csv`: row index, one realized value label per dimension
+/// (levels verbatim, ranges at six decimals, grids as PxQ), then the
+/// fnum-formatted responses. A full factorial with one cell per
+/// continuous range enumerates all 2x2x1x2 = 8 cells in a fixed order
+/// (last dimension fastest).
+#[test]
+fn sa_csv_bytes_are_pinned() {
+    let s = space();
+    let plan = sa::plan(&s, Design::Factorial, 0, 1, 1, 1).unwrap();
+    assert_eq!(plan.rows.len(), 8);
+    let gflops: Vec<f64> = (0..8).map(|i| 10.0 + i as f64).collect();
+    let seconds = vec![0.5; 8];
+    let got = read_csv(&sa::sa_table(&s, &plan, &gflops, &seconds), "sa");
+    let want = "\
+row,nb,bcast,links.fraction,grid,gflops,seconds
+0,64,1ring,0.200000,1x8,10.0,0.500
+1,64,1ring,0.200000,2x4,11.0,0.500
+2,64,long,0.200000,1x8,12.0,0.500
+3,64,long,0.200000,2x4,13.0,0.500
+4,128,1ring,0.200000,1x8,14.0,0.500
+5,128,1ring,0.200000,2x4,15.0,0.500
+6,128,long,0.200000,1x8,16.0,0.500
+7,128,long,0.200000,2x4,17.0,0.500
+";
+    assert_eq!(got, want);
+}
+
+/// The ANOVA and OLS summaries carry values that depend on numerics,
+/// so only their shapes are pinned: headers, row counts, and the fixed
+/// trailing OLS rows.
+#[test]
+fn anova_and_ols_shapes_are_pinned() {
+    let s = space();
+    let plan = sa::plan(&s, Design::Factorial, 0, 2, 1, 1).unwrap();
+    let y: Vec<f64> = plan.rows.iter().map(|u| 50.0 + 10.0 * u[0] + u[2]).collect();
+
+    let an = sa::anova_table(&s, &plan, &y);
+    assert_eq!(an.headers, ["factor", "eta_sq", "F", "df_between", "df_within"]);
+    assert_eq!(an.rows.len(), 4);
+    assert_eq!(an.rows[0][0], "nb");
+
+    let ols = sa::ols_table(&s, &plan, &y);
+    assert_eq!(ols.headers, ["term", "value"]);
+    assert_eq!(ols.rows.len(), 6); // 4 dims + intercept + r2
+    assert_eq!(ols.rows[4][0], "intercept");
+    assert_eq!(ols.rows[5][0], "r2");
+}

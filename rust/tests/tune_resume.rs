@@ -1,0 +1,130 @@
+//! `hplsim tune` resume-by-fixed-seed, exercised on the real binary: a
+//! tune stopped after wave 1 and resumed from its on-disk state file
+//! produces reports byte-identical to an uninterrupted run, because
+//! wave sampling is a pure function of (seed, wave, prior results) and
+//! never of the total wave budget. Resuming against the wrong seed or a
+//! different parameter space is refused.
+
+use std::path::{Path, PathBuf};
+
+use hplsim::blas::NodeCoef;
+use hplsim::coordinator::doe::{Dim, DimSpec, ParamSpace};
+use hplsim::platform::{
+    ComputeSpec, LinkVariability, NetSpec, PlatformScenario, TopoSpec,
+};
+use hplsim::stats::json::Json;
+
+fn hplsim_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_hplsim"))
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("hplsim_tune_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn space() -> ParamSpace {
+    ParamSpace {
+        n: 512,
+        rpn: 1,
+        scenario: PlatformScenario {
+            topo: TopoSpec::Star { nodes: 4, node_bw: 12.5e9, loop_bw: 40e9 },
+            net: NetSpec::Ideal,
+            compute: ComputeSpec::Homogeneous(NodeCoef::naive(1e-11)),
+            links: LinkVariability::None,
+        },
+        dims: vec![
+            Dim {
+                name: "nb".into(),
+                // Stay above nbmin = 8 of the default config.
+                spec: DimSpec::Range { min: 16.0, max: 128.0, integer: true },
+            },
+            Dim {
+                name: "depth".into(),
+                spec: DimSpec::Levels(vec![Json::Num(0.0), Json::Num(1.0)]),
+            },
+        ],
+    }
+}
+
+/// `hplsim tune` invocation against `dir` (out, state, and cache all
+/// live under it), returning the exit status.
+fn tune(spath: &Path, dir: &Path, waves: usize, seed: u64) -> std::process::ExitStatus {
+    std::process::Command::new(hplsim_exe())
+        .arg("tune")
+        .arg("--space")
+        .arg(spath)
+        .arg("--waves")
+        .arg(waves.to_string())
+        .arg("--wave-size")
+        .arg("4")
+        .arg("--keep")
+        .arg("2")
+        .arg("--seed")
+        .arg(seed.to_string())
+        .arg("--threads")
+        .arg("2")
+        .arg("--out")
+        .arg(dir)
+        .arg("--state")
+        .arg(dir.join("state.json"))
+        .arg("--cache")
+        .arg(dir.join("cache"))
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .status()
+        .expect("spawn hplsim tune")
+}
+
+#[test]
+fn interrupted_tune_resumes_bit_identically() {
+    let base = fresh_dir("resume");
+    let spath = base.join("space.json");
+    std::fs::write(&spath, space().to_json().to_string()).unwrap();
+
+    // Uninterrupted: three waves in one invocation.
+    let full = base.join("full");
+    assert!(tune(&spath, &full, 3, 11).success());
+
+    // Interrupted: stop after wave 1, then resume from the state file.
+    let part = base.join("part");
+    assert!(tune(&spath, &part, 1, 11).success());
+    assert!(part.join("state.json").exists(), "wave state must persist");
+    assert!(tune(&spath, &part, 3, 11).success());
+
+    for name in ["tune.csv", "tune_best.csv"] {
+        let a = std::fs::read(full.join(name)).unwrap();
+        let b = std::fs::read(part.join(name)).unwrap();
+        assert_eq!(a, b, "{name} diverged after resume");
+    }
+    let a = std::fs::read_to_string(full.join("state.json")).unwrap();
+    let b = std::fs::read_to_string(part.join("state.json")).unwrap();
+    assert_eq!(a, b, "serialized tune state diverged after resume");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn resume_with_wrong_seed_or_space_is_refused() {
+    let base = fresh_dir("guard");
+    let spath = base.join("space.json");
+    std::fs::write(&spath, space().to_json().to_string()).unwrap();
+
+    let dir = base.join("run");
+    assert!(tune(&spath, &dir, 1, 11).success());
+
+    // Same state file, different seed: the guard refuses (exit 2).
+    let status = tune(&spath, &dir, 2, 12);
+    assert_eq!(status.code(), Some(2), "wrong-seed resume must be refused");
+
+    // Same state file, different space: also refused.
+    let mut other = space();
+    other.dims.pop();
+    let opath = base.join("other-space.json");
+    std::fs::write(&opath, other.to_json().to_string()).unwrap();
+    let status = tune(&opath, &dir, 2, 11);
+    assert_eq!(status.code(), Some(2), "wrong-space resume must be refused");
+    let _ = std::fs::remove_dir_all(&base);
+}
