@@ -24,6 +24,13 @@
 //!    campaign cache — so batched results are interchangeable currency
 //!    with every other backend and `shard`/`merge` stay bit-identical.
 //!
+//! The phases of *successive* waves overlap as a software pipeline:
+//! while wave k's durations replay on one half of the pool, wave k+1
+//! records on the other half, leaving the coordinator-thread batch
+//! phase as the only serial section. Results are unchanged — every
+//! duration is a pure function of its own point — so the overlap is
+//! invisible to everything downstream.
+//!
 //! A replay divergence (the schedule check in `PoolSource`) is caught
 //! here and surfaced as a structured [`ExecError::Replay`] instead of
 //! tearing the whole campaign down with a panic.
@@ -98,25 +105,9 @@ struct Recorded {
     request: DgemmRequest,
 }
 
-/// Run `f` over every item on up to `workers` scoped threads (shared
-/// atomic cursor; no ordering guarantees) — the pool scaffolding shared
-/// by the record and replay phases. A panicking `f` propagates when the
-/// scope joins, like the direct in-process pool.
-fn parallel_for<T: Sync>(workers: usize, items: &[T], f: impl Fn(&T) + Sync) {
-    if items.is_empty() {
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..workers.min(items.len()) {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                let Some(item) = items.get(i) else { break };
-                f(item);
-            });
-        }
-    });
-}
+/// One batched point awaiting replay: its index, recorded schedule, and
+/// duration slice, claimed (taken) by exactly one replay worker.
+type ReplaySlot = Mutex<Option<(usize, RecordedCalls, Vec<f64>)>>;
 
 /// Execute every `plan.todo` point through record → batch → replay (see
 /// module docs). Results accumulate into `finished`, exactly like the
@@ -142,21 +133,119 @@ pub(super) fn execute_batched(
     let cache_dir = campaign.cache_dir();
     let failure: Mutex<Option<ExecError>> = Mutex::new(None);
 
-    for wave in todo.chunks(batch) {
-        // -- Record phase (parallel) --
+    let eval = mode.eval_tag();
+
+    // Record one point (pool worker): cheap mean-duration pass, ships
+    // the flattened request stream to the coordinator.
+    let record_one = |idx: usize, recorded: &Mutex<Vec<Recorded>>| {
+        let p = &points[idx];
+        let plat = realize(&memo, p);
+        let (topo, net, dgemm) = plat.parts();
+        let rec = Recorder::new(dgemm.clone(), p.cfg.nranks());
+        run_once(&p.cfg, topo.clone(), net.clone(), rec.clone(), p.rpn);
+        let request = rec.request(p.seed);
+        // Move (not clone) the schedule out: the recorder is done,
+        // and the schedule is the dominant per-point allocation.
+        let calls = rec.calls.take();
+        recorded.lock().unwrap().push(Recorded { idx, calls, request });
+    };
+
+    // Replay one batched point (pool worker). Each slot is taken
+    // (moved) by exactly one worker: the recorded schedule is the
+    // dominant per-point allocation, and cloning it just so
+    // `PoolSource::from_calls` can own shapes would double it.
+    let replay_one = |slot: &ReplaySlot| {
+        let Some((idx, calls, durs)) = slot.lock().unwrap().take() else {
+            return;
+        };
+        if failure.lock().unwrap().is_some() {
+            return; // the campaign is lost; stop burning CPU
+        }
+        let p = &points[idx];
+        let plat = realize(&memo, p);
+        let (topo, net, _) = plat.parts();
+        let total = durs.len();
+        let pool = PoolSource::from_calls(calls, &durs);
+        let run = {
+            let pool = pool.clone();
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_once(&p.cfg, topo.clone(), net.clone(), pool, p.rpn)
+            }))
+        };
+        match run {
+            Ok(mut r) => {
+                r.dgemm_calls = total;
+                if let Some(dir) = cache_dir {
+                    store_fp(dir, &p.label, plan.fps[idx], &r, eval);
+                }
+                finished.lock().unwrap().push((idx, r));
+                progress.tick();
+            }
+            Err(payload) => match pool.failure() {
+                Some(err) => {
+                    *failure.lock().unwrap() = Some(ExecError::Replay {
+                        label: p.label.clone(),
+                        err,
+                    });
+                }
+                // Not a replay divergence: a genuine bug — keep the
+                // historical panic behavior.
+                None => std::panic::resume_unwind(payload),
+            },
+        }
+    };
+
+    // Software pipeline: while wave k's durations replay on one half of
+    // the pool, wave k+1 records on the other half, so the coordinator
+    // batch phase is the only serial section. Iteration i runs
+    // {record wave i, replay wave i-1} concurrently, then batches wave
+    // i on this thread (the PJRT client is not Send); a final drain
+    // iteration replays the last wave with nothing left to record.
+    // Results are unchanged relative to the serial
+    // record → batch → replay order: every duration (and therefore
+    // every result) is a pure function of its own point.
+    let mut waves = todo.chunks(batch);
+    let mut current: Option<&[usize]> = waves.next();
+    let mut pending: Vec<ReplaySlot> = Vec::new();
+    while current.is_some() || !pending.is_empty() {
+        let wave = current.unwrap_or(&[]);
         let recorded: Mutex<Vec<Recorded>> = Mutex::new(Vec::with_capacity(wave.len()));
-        parallel_for(workers, wave, |&idx| {
-            let p = &points[idx];
-            let plat = realize(&memo, p);
-            let (topo, net, dgemm) = plat.parts();
-            let rec = Recorder::new(dgemm.clone(), p.cfg.nranks());
-            run_once(&p.cfg, topo.clone(), net.clone(), rec.clone(), p.rpn);
-            let request = rec.request(p.seed);
-            // Move (not clone) the schedule out: the recorder is done,
-            // and the schedule is the dominant per-point allocation.
-            let calls = rec.calls.take();
-            recorded.lock().unwrap().push(Recorded { idx, calls, request });
+        // Split the pool between the two concurrent groups (roughly
+        // half each, at least one each — a budget of one oversubscribes
+        // by one thread rather than serializing the pipeline).
+        let (rec_workers, rep_workers) = if pending.is_empty() {
+            (workers, 0)
+        } else if wave.is_empty() {
+            (0, workers)
+        } else {
+            let rec = (workers / 2).max(1);
+            (rec, (workers - rec).max(1))
+        };
+        let rec_cursor = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let recorded = &recorded;
+            let record_one = &record_one;
+            let replay_one = &replay_one;
+            let rec_cursor = &rec_cursor;
+            let pending = &pending;
+            for _ in 0..rec_workers.min(wave.len()) {
+                s.spawn(move || loop {
+                    let i = rec_cursor.fetch_add(1, Ordering::Relaxed);
+                    let Some(&idx) = wave.get(i) else { break };
+                    record_one(idx, recorded);
+                });
+            }
+            for _ in 0..rep_workers.min(pending.len()) {
+                s.spawn(move || {
+                    for slot in pending {
+                        replay_one(slot);
+                    }
+                });
+            }
         });
+        if let Some(e) = failure.lock().unwrap().take() {
+            return Err(e);
+        }
         let mut recorded = recorded.into_inner().unwrap();
         // Deterministic wave composition (values do not depend on it —
         // every duration is a function of its own point — but stable
@@ -164,71 +253,26 @@ pub(super) fn execute_batched(
         recorded.sort_by_key(|r| r.idx);
 
         // -- Batch phase (this thread; the PJRT client is not Send) --
-        let mut requests = Vec::with_capacity(recorded.len());
-        let mut items: Vec<(usize, RecordedCalls)> = Vec::with_capacity(recorded.len());
-        for r in recorded {
-            requests.push(r.request);
-            items.push((r.idx, r.calls));
-        }
-        let durations = mode.arts.evaluate_batch(&requests).map_err(|e| {
-            ExecError::backend("inproc", format!("batched artifact evaluation: {e}"))
-        })?;
-        drop(requests);
-        // Each item is taken (moved) by exactly one replay worker: the
-        // recorded schedule is the dominant per-point allocation, and
-        // cloning it just so `PoolSource::from_calls` can own shapes
-        // would double it.
-        let work: Vec<Mutex<Option<(usize, RecordedCalls, Vec<f64>)>>> = items
-            .into_iter()
-            .zip(durations)
-            .map(|((idx, calls), durs)| Mutex::new(Some((idx, calls, durs))))
-            .collect();
-
-        // -- Replay phase (parallel) --
-        let eval = mode.eval_tag();
-        parallel_for(workers, &work, |slot| {
-            let Some((idx, calls, durs)) = slot.lock().unwrap().take() else {
-                return;
-            };
-            if failure.lock().unwrap().is_some() {
-                return; // the campaign is lost; stop burning CPU
+        pending = if recorded.is_empty() {
+            Vec::new()
+        } else {
+            let mut requests = Vec::with_capacity(recorded.len());
+            let mut items: Vec<(usize, RecordedCalls)> =
+                Vec::with_capacity(recorded.len());
+            for r in recorded {
+                requests.push(r.request);
+                items.push((r.idx, r.calls));
             }
-            let p = &points[idx];
-            let plat = realize(&memo, p);
-            let (topo, net, _) = plat.parts();
-            let total = durs.len();
-            let pool = PoolSource::from_calls(calls, &durs);
-            let run = {
-                let pool = pool.clone();
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_once(&p.cfg, topo.clone(), net.clone(), pool, p.rpn)
-                }))
-            };
-            match run {
-                Ok(mut r) => {
-                    r.dgemm_calls = total;
-                    if let Some(dir) = cache_dir {
-                        store_fp(dir, &p.label, plan.fps[idx], &r, eval);
-                    }
-                    finished.lock().unwrap().push((idx, r));
-                    progress.tick();
-                }
-                Err(payload) => match pool.failure() {
-                    Some(err) => {
-                        *failure.lock().unwrap() = Some(ExecError::Replay {
-                            label: p.label.clone(),
-                            err,
-                        });
-                    }
-                    // Not a replay divergence: a genuine bug — keep the
-                    // historical panic behavior.
-                    None => std::panic::resume_unwind(payload),
-                },
-            }
-        });
-        if let Some(e) = failure.lock().unwrap().take() {
-            return Err(e);
-        }
+            let durations = mode.arts.evaluate_batch(&requests).map_err(|e| {
+                ExecError::backend("inproc", format!("batched artifact evaluation: {e}"))
+            })?;
+            items
+                .into_iter()
+                .zip(durations)
+                .map(|((idx, calls), durs)| Mutex::new(Some((idx, calls, durs))))
+                .collect()
+        };
+        current = waves.next();
     }
     Ok(())
 }

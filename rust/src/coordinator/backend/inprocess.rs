@@ -21,7 +21,28 @@ use super::artifact::{self, ArtifactMode};
 use super::cache::{store_fp, EVAL_DIRECT};
 use super::memo::MaterializeMemo;
 use super::point::Platform;
+use super::skeleton::ScheduleMemo;
 use super::{Campaign, ExecBackend, ExecError, ProgressEvent, WorkPlan};
+
+/// Evaluate one point: through the campaign's [`ScheduleMemo`] when the
+/// skeleton fast path is on (trace once per structure class, replay
+/// every structurally identical point), or straight through the engine.
+/// Byte-identical results either way — the memo pilots and cross-checks
+/// against the engine and falls back on any divergence.
+fn eval_point(
+    sched: Option<&ScheduleMemo>,
+    cfg: &crate::hpl::HplConfig,
+    topo: &crate::network::Topology,
+    net: &crate::network::NetModel,
+    dgemm: &crate::blas::DgemmModel,
+    rpn: usize,
+    seed: u64,
+) -> HplResult {
+    match sched {
+        Some(m) => m.evaluate(cfg, topo, net, dgemm, rpn, seed),
+        None => simulate_direct(cfg, topo, net, dgemm, rpn, seed),
+    }
+}
 
 /// Throttled progress/ETA reporter shared by all pool workers (and the
 /// batched artifact pipeline): at most one [`ProgressEvent::PointDone`]
@@ -151,6 +172,7 @@ impl ExecBackend for InProcess {
 
         let progress = Progress::new(campaign, todo.len());
         let memo = MaterializeMemo::new();
+        let sched = campaign.skeleton_enabled().then(ScheduleMemo::new);
         let finished = &self.finished;
         let cache_dir = campaign.cache_dir();
 
@@ -158,6 +180,7 @@ impl ExecBackend for InProcess {
             let deques = &deques;
             let progress = &progress;
             let memo = &memo;
+            let sched = &sched;
             let fps = &plan.fps;
             for me in 0..workers {
                 s.spawn(move || {
@@ -172,14 +195,28 @@ impl ExecBackend for InProcess {
                         // (keying them would serialize O(nodes) JSON
                         // per point for nothing).
                         let r = match &p.platform {
-                            Platform::Explicit { topo, net, dgemm } => {
-                                simulate_direct(&p.cfg, topo, net, dgemm, p.rpn, p.seed)
-                            }
+                            Platform::Explicit { topo, net, dgemm } => eval_point(
+                                sched.as_ref(),
+                                &p.cfg,
+                                topo,
+                                net,
+                                dgemm,
+                                p.rpn,
+                                p.seed,
+                            ),
                             Platform::Scenario(_) => {
                                 let plat =
                                     memo.realize(p).expect("validated before dispatch");
                                 let (topo, net, dgemm) = &*plat;
-                                simulate_direct(&p.cfg, topo, net, dgemm, p.rpn, p.seed)
+                                eval_point(
+                                    sched.as_ref(),
+                                    &p.cfg,
+                                    topo,
+                                    net,
+                                    dgemm,
+                                    p.rpn,
+                                    p.seed,
+                                )
                             }
                         };
                         if let Some(dir) = cache_dir {

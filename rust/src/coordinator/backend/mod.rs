@@ -38,6 +38,7 @@ pub mod inprocess;
 pub mod memo;
 pub mod point;
 pub mod queue;
+pub mod skeleton;
 pub mod subprocess;
 
 use std::collections::HashMap;
@@ -59,6 +60,7 @@ pub use point::{
     point_seed, Platform, PointError, RealizedPlatform, SimPoint, MODEL_VERSION,
 };
 pub use queue::{run_worker, FileQueue, WorkerOptions, WorkerSummary};
+pub use skeleton::{structure_key, ScheduleMemo, Skeleton, SKELETON_VERSION};
 pub use subprocess::Subprocess;
 
 /// Options of a campaign run (the original `run_campaign` surface; the
@@ -73,6 +75,10 @@ pub struct SweepOptions {
     pub cache_dir: Option<PathBuf>,
     /// Emit progress/ETA lines on stderr.
     pub progress: bool,
+    /// Disable the schedule-skeleton fast path (`--no-skeleton`); the
+    /// default (`false`) leaves skeletons on, matching
+    /// [`Campaign::new`].
+    pub no_skeleton: bool,
 }
 
 /// Outcome of a campaign: per-point results in point order plus
@@ -256,11 +262,18 @@ pub struct Campaign<'a> {
     threads: usize,
     cache_dir: Option<PathBuf>,
     progress: Option<Box<dyn Fn(&ProgressEvent<'_>) + Sync + 'a>>,
+    skeleton: bool,
 }
 
 impl<'a> Campaign<'a> {
     pub fn new(points: &'a [SimPoint]) -> Campaign<'a> {
-        Campaign { points, threads: 0, cache_dir: None, progress: None }
+        Campaign {
+            points,
+            threads: 0,
+            cache_dir: None,
+            progress: None,
+            skeleton: true,
+        }
     }
 
     /// Worker threads (0 = `$HPLSIM_THREADS` or available cores).
@@ -273,6 +286,22 @@ impl<'a> Campaign<'a> {
     pub fn cache(mut self, dir: Option<PathBuf>) -> Self {
         self.cache_dir = dir;
         self
+    }
+
+    /// Enable or disable the schedule-skeleton fast path (default on).
+    /// When on, backends that evaluate points in-process trace the
+    /// event schedule once per structure class and replay every
+    /// structurally identical point through the recorded skeleton
+    /// ([`ScheduleMemo`]); results are byte-identical either way, so
+    /// this is purely a throughput knob (`--no-skeleton` on the CLI).
+    pub fn skeleton(mut self, on: bool) -> Self {
+        self.skeleton = on;
+        self
+    }
+
+    /// Whether the schedule-skeleton fast path is enabled.
+    pub fn skeleton_enabled(&self) -> bool {
+        self.skeleton
     }
 
     /// Install a progress callback. Without one the campaign is silent —

@@ -100,6 +100,11 @@ struct QueueMeta {
     /// so external workers agree with the coordinator on the evaluation
     /// path (a split would produce divergent reports).
     artifact_batch: Option<u64>,
+    /// Whether workers should use the schedule-skeleton fast path.
+    /// Results are byte-identical either way, so a queue written before
+    /// this key existed (key absent) defaults to `true` — stale readers
+    /// and writers can mix freely without splitting the campaign.
+    skeleton: bool,
 }
 
 fn read_meta(dir: &Path) -> Result<QueueMeta, String> {
@@ -141,7 +146,8 @@ fn read_meta(dir: &Path) -> Result<QueueMeta, String> {
     } else {
         None
     };
-    Ok(QueueMeta { tasks, lease_secs, artifact_batch })
+    let skeleton = v.get("skeleton").and_then(Json::as_bool).unwrap_or(true);
+    Ok(QueueMeta { tasks, lease_secs, artifact_batch, skeleton })
 }
 
 /// Names currently present in one of the marker directories.
@@ -191,6 +197,7 @@ pub fn init_queue(
     tasks: u64,
     lease_secs: f64,
     artifact_batch: Option<u64>,
+    skeleton: bool,
 ) -> Result<(), String> {
     if tasks == 0 {
         return Err("queue needs tasks >= 1".into());
@@ -229,6 +236,10 @@ pub fn init_queue(
         ("tasks", Json::Num(tasks as f64)),
         ("lease_secs", Json::Num(lease_secs)),
         ("batch_points", Json::Num(artifact_batch.unwrap_or(0) as f64)),
+        // Unlike the artifact flag, this stays a plain key under the
+        // existing formats: a stale worker that ignores it still
+        // produces byte-identical results, just slower or faster.
+        ("skeleton", Json::Bool(skeleton)),
     ]);
     let tmp = dir.join(format!("queue.json.tmp.{}", std::process::id()));
     std::fs::write(&tmp, meta.to_string())
@@ -533,6 +544,7 @@ fn execute_task(
     let result = Campaign::new(&points)
         .threads(threads)
         .cache(Some(cache.to_path_buf()))
+        .skeleton(meta.skeleton)
         .run(&backend);
 
     stop.store(true, Ordering::Relaxed);
@@ -692,6 +704,7 @@ impl ExecBackend for FileQueue {
             self.tasks,
             self.lease_secs,
             self.artifact_batch.map(|b| b as u64),
+            campaign.skeleton_enabled(),
         )
         .map_err(|e| ExecError::backend("queue", e))
     }

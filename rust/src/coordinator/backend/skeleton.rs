@@ -1,0 +1,1583 @@
+//! Schedule skeletons: the compile-once / replay-many fast path.
+//!
+//! A campaign typically evaluates hundreds of points that differ only in
+//! their *stochastic draws* (dgemm coefficients and noise seeds) while
+//! sharing one schedule **structure**: the HPL config, the topology, the
+//! protocol model and the rank placement. For such a structure class the
+//! discrete-event engine is run **once** with a [`crate::mpi::Tracer`]
+//! attached, capturing the complete per-rank op stream ([`Skeleton`]);
+//! every further point of the class is evaluated by *replaying* the
+//! per-point draws through the skeleton with a flat interpreter — no
+//! futures, no task polling — that mirrors the engine scheduler op for
+//! op and therefore produces **byte-identical** results (same
+//! fingerprints, same `campaign.csv`).
+//!
+//! Trust is earned, not assumed: the first [`VALIDATE_POINTS`] points
+//! after compilation are dual-run (engine + replay, every result field
+//! compared with exact `==`) and the engine result is returned; any
+//! mismatch, replay error or panic permanently fails the class back to
+//! the full engine — the memo's dual-run *is* the campaign's sampled
+//! self-validation against the engine.
+//!
+//! The replay VM models the engine exactly:
+//!
+//! * tasks are frame stacks executed to quiescence in FIFO wake order
+//!   (provably the same global order as the engine's double-buffered
+//!   scratch drain);
+//! * timers live in a binary heap ordered by `(at, seq)` exactly like
+//!   `engine::sim::Timer`, popped one at a time between quiescence
+//!   rounds, each pop counting one event and advancing `now`;
+//! * the fluid network (max-min sharing, completion watchers, epoch
+//!   staleness) is re-implemented field for field after
+//!   `network::NetState`.
+//!
+//! What is *not* replayed from the trace is anything timing-dependent:
+//! message matching, Iprobe outcomes and link contention are resolved
+//! dynamically, which is why a skeleton stays valid across draws that
+//! reorder message arrivals.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::blas::{DgemmModel, DgemmSource, DirectSource};
+use crate::hpl::driver::run_once_traced;
+use crate::hpl::{simulate_direct, HplConfig, HplResult};
+use crate::mpi::{CommStats, Op, RankTrace, Tracer, CALL_OVERHEAD, IPROBE_COST};
+use crate::network::{sharing, LinkId, NetClass, NetModel, SegTable, Topology};
+
+/// Bump when the trace format or replay semantics change: the version is
+/// part of the structure key, so stale skeletons can never be replayed
+/// by a newer VM.
+pub const SKELETON_VERSION: u32 = 1;
+
+/// How many post-compilation points are dual-run (engine + replay,
+/// compared exactly) before replays are trusted on their own.
+pub const VALIDATE_POINTS: u32 = 2;
+
+/// Bound on memoized structure classes ([`super::memo::MaterializeMemo`]
+/// -style generation clearing: when full and a new class arrives, the
+/// whole table is dropped and re-warmed).
+pub const MAX_CLASSES: usize = 64;
+
+/// Hash of every structure-determining input of a simulation point.
+///
+/// Deliberately **excluded**: dgemm coefficients and the seed — those
+/// are the variability axes a campaign sweeps, and the whole point of
+/// the skeleton is to replay across them.
+pub fn structure_key(
+    cfg: &HplConfig,
+    topo: &Topology,
+    net: &NetModel,
+    ranks_per_node: usize,
+) -> u64 {
+    let s = format!(
+        "skel-v{SKELETON_VERSION}|n={}|nb={}|p={}|q={}|depth={}|bcast={}|swap={}|swapth={}|rfact={}|nbmin={}|rpn={}|topo={}|net={}",
+        cfg.n,
+        cfg.nb,
+        cfg.p,
+        cfg.q,
+        cfg.depth,
+        cfg.bcast.name(),
+        cfg.swap.name(),
+        cfg.swap_threshold,
+        cfg.rfact.name(),
+        cfg.nbmin,
+        ranks_per_node,
+        topo.to_json().to_string(),
+        net.to_json().to_string(),
+    );
+    super::point::fnv1a_str(&s)
+}
+
+/// A compiled schedule: one op stream + broadcast-descriptor table per
+/// rank. Plain data (`Send + Sync`), shared across campaign workers via
+/// `Arc`.
+#[derive(Clone, Debug)]
+pub struct Skeleton {
+    pub(crate) ranks: Vec<RankTrace>,
+}
+
+impl Skeleton {
+    pub fn nranks(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Total ops across all ranks (diagnostics).
+    pub fn ops(&self) -> usize {
+        self.ranks.iter().map(|r| r.ops.len()).sum()
+    }
+}
+
+/// Why a replay refused to produce a result. Any error fails the class
+/// back to the engine — replay never guesses.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VmError {
+    /// The skeleton was captured for a different rank count.
+    RankMismatch { skeleton: usize, config: usize },
+    /// A `WaitIsend` op with no outstanding isend.
+    WaitWithoutIsend { rank: usize },
+    /// A broadcast marker referenced a descriptor the rank never
+    /// registered.
+    BadDesc { rank: usize, desc: usize },
+    /// A delivery matched a posted receive whose task was not blocked
+    /// where the engine semantics say it must be.
+    MatchDivergence { task: usize },
+    /// Tasks remain blocked with no pending event.
+    Deadlock { live: usize },
+}
+
+impl std::fmt::Display for VmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VmError::RankMismatch { skeleton, config } => {
+                write!(f, "skeleton has {skeleton} ranks, config needs {config}")
+            }
+            VmError::WaitWithoutIsend { rank } => {
+                write!(f, "rank {rank}: WaitIsend with no outstanding isend")
+            }
+            VmError::BadDesc { rank, desc } => {
+                write!(f, "rank {rank}: unknown bcast descriptor {desc}")
+            }
+            VmError::MatchDivergence { task } => {
+                write!(f, "task {task}: receive-match divergence")
+            }
+            VmError::Deadlock { live } => {
+                write!(f, "replay deadlock: {live} task(s) blocked")
+            }
+        }
+    }
+}
+
+type TaskId = usize;
+type SigId = usize;
+type EnvId = usize;
+
+/// Heap entry mirroring `engine::sim::Timer` (same `(at, seq)` total
+/// order, so simultaneous events fire in identical sequence).
+struct VmTimer {
+    at: f64,
+    seq: u64,
+    task: TaskId,
+}
+
+impl PartialEq for VmTimer {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for VmTimer {}
+impl PartialOrd for VmTimer {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for VmTimer {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at
+            .partial_cmp(&other.at)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// One replay task: a stack of frames (innermost await on top), the
+/// VM's moral equivalent of a boxed future.
+struct VmTask {
+    frames: Vec<Frame>,
+    done: bool,
+    /// Tasks to wake when this one completes (JoinHandle waiters).
+    join_waiters: Vec<TaskId>,
+}
+
+/// One-shot broadcast flag (mirror of `engine::cell::Signal`).
+#[derive(Default)]
+struct VmSignal {
+    set: bool,
+    waiters: Vec<TaskId>,
+}
+
+/// An in-flight message envelope (mirror of `mpi::Envelope`).
+struct VmEnv {
+    src: usize,
+    tag: u64,
+    payload_done: SigId,
+    rndv_ack: Option<SigId>,
+}
+
+/// A receive posted with no matching arrival yet.
+struct VmPending {
+    src: Option<usize>,
+    tag: u64,
+    task: TaskId,
+}
+
+/// Mirror of `mpi::inbox::Inbox`.
+#[derive(Default)]
+struct VmInbox {
+    arrived: VecDeque<EnvId>,
+    pending: VecDeque<VmPending>,
+}
+
+/// Broadcast progress on one rank (mirror of `hpl::bcast::BcastOp`'s
+/// `done` + `handles`, re-enacted from the descriptor).
+#[derive(Clone, Default)]
+struct VmMachine {
+    done: bool,
+    handles: Vec<TaskId>,
+}
+
+struct RankState {
+    /// Outstanding unsuppressed isends, FIFO (`WaitIsend` pops front).
+    isends: VecDeque<TaskId>,
+    /// One machine per registered broadcast descriptor.
+    machines: Vec<VmMachine>,
+}
+
+/// Mirror of `network::NetState` + its workspace.
+struct VmNet {
+    caps: Vec<f64>,
+    flows: Vec<Option<VmFlow>>,
+    free: Vec<usize>,
+    last: f64,
+    epoch: u64,
+    active: usize,
+    ws: sharing::Workspace,
+}
+
+struct VmFlow {
+    route: Vec<LinkId>,
+    remaining: f64,
+    rate: f64,
+    done: SigId,
+}
+
+/// Where a send body is between its awaits.
+enum SendStage {
+    Init,
+    Overhead,
+}
+
+enum DeliverStage {
+    Init,
+    Deposit,
+    RndvWait,
+    Transfer,
+    TransferDone,
+    FlowWait(SigId),
+}
+
+enum RecvStage {
+    Init,
+    Post,
+    WaitMatch,
+    Matched,
+    PayloadWait,
+}
+
+enum PollStage {
+    Init,
+    Probe,
+    AfterRecv,
+}
+
+enum FinishStage {
+    Init,
+    AfterRecv,
+    Drain { i: usize, registered: bool },
+}
+
+/// One suspended activation record. The stack of frames per task plays
+/// the role the nested-future state machines play in the engine; each
+/// frame's `stage` is its resumption point.
+enum Frame {
+    /// A rank's main loop: dispatches the next traced op at `pc`.
+    Rank { rank: usize, pc: usize },
+    /// `Sim::sleep` (armed-once, like `engine::sim::Delay`).
+    Sleep { at: f64, armed: bool },
+    /// `Ctx::send_raw` (stats, call overhead, protocol dispatch).
+    Send { src: usize, dst: usize, tag: u64, bytes: f64, stage: SendStage },
+    /// `mpi::deliver` (envelope latency, deposit, rendezvous, payload).
+    Deliver {
+        src: usize,
+        dst: usize,
+        tag: u64,
+        bytes: f64,
+        rndv: bool,
+        stage: DeliverStage,
+        env: Option<EnvId>,
+    },
+    /// `Ctx::recv`.
+    Recv {
+        rank: usize,
+        src: Option<usize>,
+        tag: u64,
+        stage: RecvStage,
+        env: Option<EnvId>,
+    },
+    /// Await a spawned task (JoinHandle / SendHandle).
+    Join { task: TaskId, registered: bool },
+    /// `BcastOp::poll` body (iprobe + conditional recv + forwards).
+    BcastPoll { rank: usize, desc: usize, stage: PollStage },
+    /// `BcastOp::finish` body (conditional recv + handle drain).
+    BcastFinish { rank: usize, desc: usize, stage: FinishStage },
+    /// Network completion watcher (`Network::schedule_watcher` task).
+    Watcher { epoch: u64, at: f64, armed: bool },
+}
+
+/// What an activation's execution decided.
+enum Step {
+    /// Stay suspended (frame pushed back).
+    Block,
+    /// Re-execute this frame immediately (stage advanced).
+    Continue,
+    /// Frame finished; resume the parent frame.
+    Pop,
+    /// Suspend this frame under a child (child runs first).
+    Push(Frame),
+    /// Replace this frame (tail call, same task).
+    Replace(Frame),
+}
+
+struct Vm<'a> {
+    skel: &'a Skeleton,
+    topo: &'a Topology,
+    source: Rc<dyn DgemmSource>,
+    segs: SegTable,
+    async_threshold: f64,
+    rendezvous_threshold: f64,
+    rank_node: Vec<usize>,
+
+    now: f64,
+    seq: u64,
+    timers: BinaryHeap<Reverse<VmTimer>>,
+    queue: VecDeque<TaskId>,
+    tasks: Vec<VmTask>,
+    live: usize,
+    events: u64,
+
+    signals: Vec<VmSignal>,
+    envs: Vec<VmEnv>,
+    inboxes: Vec<VmInbox>,
+    rstate: Vec<RankState>,
+    net: VmNet,
+    stats: CommStats,
+}
+
+/// Replay one point's draws through a skeleton. Returns exactly what
+/// `simulate_direct` would for the same `(cfg, topo, net, dgemm,
+/// ranks_per_node, seed)` — or an error if the skeleton and the VM's
+/// engine model diverge (callers fall back to the engine).
+pub fn replay(
+    skel: &Skeleton,
+    cfg: &HplConfig,
+    topo: &Topology,
+    net: &NetModel,
+    dgemm: &DgemmModel,
+    ranks_per_node: usize,
+    seed: u64,
+) -> Result<HplResult, VmError> {
+    let nranks = cfg.nranks();
+    if skel.ranks.len() != nranks {
+        return Err(VmError::RankMismatch { skeleton: skel.ranks.len(), config: nranks });
+    }
+    let mut vm = Vm {
+        skel,
+        topo,
+        source: DirectSource::new(dgemm.clone(), nranks, seed),
+        segs: SegTable::new(net),
+        async_threshold: net.async_threshold,
+        rendezvous_threshold: net.rendezvous_threshold,
+        rank_node: (0..nranks).map(|r| r / ranks_per_node).collect(),
+        now: 0.0,
+        seq: 0,
+        timers: BinaryHeap::new(),
+        queue: VecDeque::new(),
+        tasks: Vec::new(),
+        live: 0,
+        events: 0,
+        signals: Vec::new(),
+        envs: Vec::new(),
+        inboxes: (0..nranks).map(|_| VmInbox::default()).collect(),
+        rstate: skel
+            .ranks
+            .iter()
+            .map(|rt| RankState {
+                isends: VecDeque::new(),
+                machines: vec![VmMachine::default(); rt.descs.len()],
+            })
+            .collect(),
+        net: VmNet {
+            caps: topo.link_capacities().to_vec(),
+            flows: Vec::new(),
+            free: Vec::new(),
+            last: 0.0,
+            epoch: 0,
+            active: 0,
+            ws: sharing::Workspace::default(),
+        },
+        stats: CommStats::default(),
+    };
+    // Ranks spawn in order, exactly like `run_once_traced`.
+    for r in 0..nranks {
+        vm.spawn_task(vec![Frame::Rank { rank: r, pc: 0 }]);
+    }
+    vm.run()?;
+    let seconds = vm.now;
+    Ok(HplResult {
+        seconds,
+        gflops: cfg.flops() / seconds / 1e9,
+        comm: vm.stats,
+        events: vm.events,
+        // `run_once` leaves this 0 (only the artifact pipeline fills it).
+        dgemm_calls: 0,
+    })
+}
+
+impl<'a> Vm<'a> {
+    /// Engine `run_with_stats`: drain the wake queue to quiescence, pop
+    /// one timer (advancing `now`, counting one event), repeat until the
+    /// heap empties — *even after every rank completed*: stale watcher
+    /// timers still fire and advance the final clock, exactly as in the
+    /// engine.
+    fn run(&mut self) -> Result<(), VmError> {
+        loop {
+            while let Some(tid) = self.queue.pop_front() {
+                self.exec_task(tid)?;
+            }
+            match self.timers.pop() {
+                Some(Reverse(t)) => {
+                    debug_assert!(t.at >= self.now, "time went backwards");
+                    self.now = t.at.max(self.now);
+                    self.events += 1;
+                    self.queue.push_back(t.task);
+                }
+                None => break,
+            }
+        }
+        if self.live != 0 {
+            return Err(VmError::Deadlock { live: self.live });
+        }
+        Ok(())
+    }
+
+    fn spawn_task(&mut self, frames: Vec<Frame>) -> TaskId {
+        let tid = self.tasks.len();
+        self.tasks.push(VmTask { frames, done: false, join_waiters: Vec::new() });
+        self.live += 1;
+        self.queue.push_back(tid);
+        tid
+    }
+
+    fn complete_task(&mut self, tid: TaskId) {
+        let waiters = {
+            let t = &mut self.tasks[tid];
+            t.done = true;
+            std::mem::take(&mut t.join_waiters)
+        };
+        self.live -= 1;
+        for w in waiters {
+            self.queue.push_back(w);
+        }
+    }
+
+    /// One engine poll: execute the top frame repeatedly until the task
+    /// blocks or finishes. The frame is detached from the stack during
+    /// execution so `exec_frame` can freely mutate the rest of the VM
+    /// (including *other* tasks' frames, for receive matching).
+    fn exec_task(&mut self, tid: TaskId) -> Result<(), VmError> {
+        if self.tasks[tid].done {
+            return Ok(()); // spurious wake of a finished task
+        }
+        loop {
+            let mut frame = match self.tasks[tid].frames.pop() {
+                Some(f) => f,
+                None => {
+                    self.complete_task(tid);
+                    return Ok(());
+                }
+            };
+            match self.exec_frame(tid, &mut frame)? {
+                Step::Block => {
+                    self.tasks[tid].frames.push(frame);
+                    return Ok(());
+                }
+                Step::Continue => self.tasks[tid].frames.push(frame),
+                Step::Pop => {}
+                Step::Push(child) => {
+                    self.tasks[tid].frames.push(frame);
+                    self.tasks[tid].frames.push(child);
+                }
+                Step::Replace(next) => self.tasks[tid].frames.push(next),
+            }
+        }
+    }
+
+    fn arm_timer(&mut self, at: f64, task: TaskId) {
+        assert!(at.is_finite(), "non-finite timer {at}");
+        let seq = self.seq;
+        self.seq += 1;
+        self.timers.push(Reverse(VmTimer { at, seq, task }));
+    }
+
+    fn new_signal(&mut self) -> SigId {
+        self.signals.push(VmSignal::default());
+        self.signals.len() - 1
+    }
+
+    fn set_signal(&mut self, sid: SigId) {
+        let waiters = {
+            let s = &mut self.signals[sid];
+            s.set = true;
+            std::mem::take(&mut s.waiters)
+        };
+        for t in waiters {
+            self.queue.push_back(t);
+        }
+    }
+
+    fn class_of(&self, src_rank: usize, dst_rank: usize) -> NetClass {
+        if self.rank_node[src_rank] == self.rank_node[dst_rank] {
+            NetClass::Local
+        } else {
+            NetClass::Remote
+        }
+    }
+
+    fn desc_bounds(&self, rank: usize, desc: usize) -> Result<(), VmError> {
+        if desc < self.skel.ranks[rank].descs.len() {
+            Ok(())
+        } else {
+            Err(VmError::BadDesc { rank, desc })
+        }
+    }
+
+    /// `Inbox::deliver`: match the first pending receive (post order) or
+    /// queue as an unexpected arrival.
+    fn deliver_env(&mut self, dst: usize, eid: EnvId) -> Result<(), VmError> {
+        let pos = {
+            let e = &self.envs[eid];
+            self.inboxes[dst]
+                .pending
+                .iter()
+                .position(|p| e.tag == p.tag && p.src.map_or(true, |s| s == e.src))
+        };
+        match pos {
+            Some(i) => {
+                let p = self.inboxes[dst].pending.remove(i).unwrap();
+                self.hand_env(p.task, eid)?;
+                self.queue.push_back(p.task);
+                Ok(())
+            }
+            None => {
+                self.inboxes[dst].arrived.push_back(eid);
+                Ok(())
+            }
+        }
+    }
+
+    /// Write the matched envelope into the receiver's suspended `Recv`
+    /// frame (the engine's `RecvSlot` fill + wake).
+    fn hand_env(&mut self, task: TaskId, eid: EnvId) -> Result<(), VmError> {
+        match self.tasks[task].frames.last_mut() {
+            Some(Frame::Recv { stage: RecvStage::WaitMatch, env: slot @ None, .. }) => {
+                *slot = Some(eid);
+                Ok(())
+            }
+            _ => Err(VmError::MatchDivergence { task }),
+        }
+    }
+
+    // ---- fluid network (mirror of network::Network) -----------------
+
+    fn net_advance(&mut self, now: f64) {
+        let net = &mut self.net;
+        let dt = now - net.last;
+        if dt > 0.0 {
+            for f in net.flows.iter_mut().flatten() {
+                f.remaining = (f.remaining - f.rate * dt).max(0.0);
+            }
+        }
+        net.last = now;
+    }
+
+    fn net_reshare(&mut self) {
+        let net = &mut self.net;
+        net.epoch += 1;
+        let idx: Vec<usize> =
+            (0..net.flows.len()).filter(|&i| net.flows[i].is_some()).collect();
+        let routes: Vec<&[LinkId]> = idx
+            .iter()
+            .map(|&i| net.flows[i].as_ref().unwrap().route.as_slice())
+            .collect();
+        let rates: Vec<f64> =
+            sharing::max_min_rates_into(&net.caps, &routes, &mut net.ws).to_vec();
+        drop(routes);
+        for (&i, r) in idx.iter().zip(rates) {
+            net.flows[i].as_mut().unwrap().rate = r;
+        }
+    }
+
+    fn net_next_completion(&self) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for f in self.net.flows.iter().flatten() {
+            if f.rate > 0.0 {
+                let t = self.net.last + f.remaining / f.rate;
+                best = Some(match best {
+                    Some(b) => b.min(t),
+                    None => t,
+                });
+            }
+        }
+        best
+    }
+
+    fn net_schedule_watcher(&mut self) {
+        let (epoch, at) = match self.net_next_completion() {
+            Some(t) => (self.net.epoch, t),
+            None => return,
+        };
+        self.spawn_task(vec![Frame::Watcher { epoch, at, armed: false }]);
+    }
+
+    fn net_start_flow(&mut self, src_node: usize, dst_node: usize, effective: f64) -> SigId {
+        let route = self.topo.route(src_node, dst_node);
+        let done = self.new_signal();
+        let now = self.now;
+        self.net_advance(now);
+        let flow = VmFlow { route, remaining: effective.max(1.0), rate: 0.0, done };
+        {
+            let net = &mut self.net;
+            match net.free.pop() {
+                Some(i) => net.flows[i] = Some(flow),
+                None => net.flows.push(Some(flow)),
+            }
+            net.active += 1;
+        }
+        self.net_reshare();
+        self.net_schedule_watcher();
+        done
+    }
+
+    fn net_on_tick(&mut self, epoch: u64) {
+        if self.net.epoch != epoch {
+            return; // stale watcher
+        }
+        let now = self.now;
+        self.net_advance(now);
+        let mut finished: Vec<SigId> = Vec::new();
+        {
+            let net = &mut self.net;
+            for i in 0..net.flows.len() {
+                let done = matches!(&net.flows[i], Some(f) if f.remaining <= 1e-3);
+                if done {
+                    let f = net.flows[i].take().unwrap();
+                    net.free.push(i);
+                    net.active -= 1;
+                    finished.push(f.done);
+                }
+            }
+        }
+        if !finished.is_empty() {
+            self.net_reshare();
+        }
+        for s in finished {
+            self.set_signal(s);
+        }
+        self.net_schedule_watcher();
+    }
+
+    // ---- frame interpreter ------------------------------------------
+
+    fn exec_frame(&mut self, tid: TaskId, f: &mut Frame) -> Result<Step, VmError> {
+        match f {
+            Frame::Rank { rank, pc } => self.exec_rank(*rank, pc),
+
+            Frame::Sleep { at, armed } => {
+                if self.now >= *at {
+                    Ok(Step::Pop)
+                } else {
+                    if !*armed {
+                        *armed = true;
+                        self.arm_timer(*at, tid);
+                    }
+                    Ok(Step::Block)
+                }
+            }
+
+            Frame::Send { src, dst, tag, bytes, stage } => match stage {
+                SendStage::Init => {
+                    self.stats.messages += 1;
+                    self.stats.bytes += *bytes;
+                    *stage = SendStage::Overhead;
+                    self.arm_timer(self.now + CALL_OVERHEAD, tid);
+                    Ok(Step::Block)
+                }
+                SendStage::Overhead => {
+                    let (src, dst, tag, bytes) = (*src, *dst, *tag, *bytes);
+                    if bytes <= self.async_threshold {
+                        // Buffered: fire and forget.
+                        self.spawn_task(vec![Frame::Deliver {
+                            src,
+                            dst,
+                            tag,
+                            bytes,
+                            rndv: false,
+                            stage: DeliverStage::Init,
+                            env: None,
+                        }]);
+                        Ok(Step::Pop)
+                    } else {
+                        let rndv = bytes > self.rendezvous_threshold;
+                        Ok(Step::Replace(Frame::Deliver {
+                            src,
+                            dst,
+                            tag,
+                            bytes,
+                            rndv,
+                            stage: DeliverStage::Init,
+                            env: None,
+                        }))
+                    }
+                }
+            },
+
+            Frame::Deliver { src, dst, tag, bytes, rndv, stage, env } => match stage {
+                DeliverStage::Init => {
+                    // Envelope travels one latency ahead of the payload.
+                    let class = self.class_of(*src, *dst);
+                    let seg = self.segs.lookup(class, *bytes);
+                    *stage = DeliverStage::Deposit;
+                    if seg.latency > 0.0 {
+                        self.arm_timer(self.now + seg.latency, tid);
+                        Ok(Step::Block)
+                    } else {
+                        Ok(Step::Continue)
+                    }
+                }
+                DeliverStage::Deposit => {
+                    let payload = self.new_signal();
+                    let ack = if *rndv { Some(self.new_signal()) } else { None };
+                    let eid = self.envs.len();
+                    self.envs.push(VmEnv {
+                        src: *src,
+                        tag: *tag,
+                        payload_done: payload,
+                        rndv_ack: ack,
+                    });
+                    *env = Some(eid);
+                    self.deliver_env(*dst, eid)?;
+                    if let Some(a) = ack {
+                        if !self.signals[a].set {
+                            self.signals[a].waiters.push(tid);
+                            *stage = DeliverStage::RndvWait;
+                            return Ok(Step::Block);
+                        }
+                    }
+                    *stage = DeliverStage::Transfer;
+                    Ok(Step::Continue)
+                }
+                DeliverStage::RndvWait => {
+                    let a = self.envs[env.unwrap()].rndv_ack.unwrap();
+                    if self.signals[a].set {
+                        *stage = DeliverStage::Transfer;
+                        Ok(Step::Continue)
+                    } else {
+                        Ok(Step::Block)
+                    }
+                }
+                DeliverStage::Transfer => {
+                    // `Network::transfer` looks the segment up again and
+                    // sleeps its latency a second time — engine behavior,
+                    // reproduced deliberately.
+                    let class = self.class_of(*src, *dst);
+                    let seg = self.segs.lookup(class, *bytes);
+                    *stage = DeliverStage::TransferDone;
+                    if seg.latency > 0.0 {
+                        self.arm_timer(self.now + seg.latency, tid);
+                        Ok(Step::Block)
+                    } else {
+                        Ok(Step::Continue)
+                    }
+                }
+                DeliverStage::TransferDone => {
+                    if *bytes <= 0.0 {
+                        let p = self.envs[env.unwrap()].payload_done;
+                        self.set_signal(p);
+                        return Ok(Step::Pop);
+                    }
+                    let class = self.class_of(*src, *dst);
+                    let seg = self.segs.lookup(class, *bytes);
+                    let effective = *bytes / seg.bw_factor.max(1e-12);
+                    let (sn, dn) = (self.rank_node[*src], self.rank_node[*dst]);
+                    let done = self.net_start_flow(sn, dn, effective);
+                    if self.signals[done].set {
+                        let p = self.envs[env.unwrap()].payload_done;
+                        self.set_signal(p);
+                        return Ok(Step::Pop);
+                    }
+                    self.signals[done].waiters.push(tid);
+                    *stage = DeliverStage::FlowWait(done);
+                    Ok(Step::Block)
+                }
+                DeliverStage::FlowWait(done) => {
+                    if !self.signals[*done].set {
+                        return Ok(Step::Block);
+                    }
+                    let p = self.envs[env.unwrap()].payload_done;
+                    self.set_signal(p);
+                    Ok(Step::Pop)
+                }
+            },
+
+            Frame::Recv { rank, src, tag, stage, env } => match stage {
+                RecvStage::Init => {
+                    *stage = RecvStage::Post;
+                    self.arm_timer(self.now + CALL_OVERHEAD, tid);
+                    Ok(Step::Block)
+                }
+                RecvStage::Post => {
+                    let (rank, srcf, tagf) = (*rank, *src, *tag);
+                    let pos = self.inboxes[rank].arrived.iter().position(|&eid| {
+                        let e = &self.envs[eid];
+                        e.tag == tagf && srcf.map_or(true, |s| s == e.src)
+                    });
+                    match pos {
+                        Some(i) => {
+                            let eid = self.inboxes[rank].arrived.remove(i).unwrap();
+                            *env = Some(eid);
+                            *stage = RecvStage::Matched;
+                            Ok(Step::Continue)
+                        }
+                        None => {
+                            self.inboxes[rank].pending.push_back(VmPending {
+                                src: srcf,
+                                tag: tagf,
+                                task: tid,
+                            });
+                            *stage = RecvStage::WaitMatch;
+                            Ok(Step::Block)
+                        }
+                    }
+                }
+                RecvStage::WaitMatch => {
+                    if env.is_some() {
+                        *stage = RecvStage::Matched;
+                        Ok(Step::Continue)
+                    } else {
+                        Ok(Step::Block)
+                    }
+                }
+                RecvStage::Matched => {
+                    let eid = env.unwrap();
+                    // Rendezvous: unblock the sender, then wait payload.
+                    if let Some(a) = self.envs[eid].rndv_ack {
+                        self.set_signal(a);
+                    }
+                    let p = self.envs[eid].payload_done;
+                    if self.signals[p].set {
+                        Ok(Step::Pop)
+                    } else {
+                        self.signals[p].waiters.push(tid);
+                        *stage = RecvStage::PayloadWait;
+                        Ok(Step::Block)
+                    }
+                }
+                RecvStage::PayloadWait => {
+                    let p = self.envs[env.unwrap()].payload_done;
+                    if self.signals[p].set {
+                        Ok(Step::Pop)
+                    } else {
+                        Ok(Step::Block)
+                    }
+                }
+            },
+
+            Frame::Join { task, registered } => {
+                if self.tasks[*task].done {
+                    Ok(Step::Pop)
+                } else {
+                    if !*registered {
+                        *registered = true;
+                        let t = *task;
+                        self.tasks[t].join_waiters.push(tid);
+                    }
+                    Ok(Step::Block)
+                }
+            }
+
+            Frame::BcastPoll { rank, desc, stage } => match stage {
+                PollStage::Init => {
+                    if self.rstate[*rank].machines[*desc].done {
+                        // Engine `poll` returns before the iprobe.
+                        return Ok(Step::Pop);
+                    }
+                    self.stats.iprobes += 1;
+                    *stage = PollStage::Probe;
+                    self.arm_timer(self.now + IPROBE_COST, tid);
+                    Ok(Step::Block)
+                }
+                PollStage::Probe => {
+                    let (r, di) = (*rank, *desc);
+                    let (src_abs, tag) = {
+                        let d = &self.skel.ranks[r].descs[di];
+                        (d.src_abs, d.tag)
+                    };
+                    let hit = self.inboxes[r].arrived.iter().any(|&eid| {
+                        let e = &self.envs[eid];
+                        e.tag == tag && e.src == src_abs
+                    });
+                    if !hit {
+                        return Ok(Step::Pop);
+                    }
+                    *stage = PollStage::AfterRecv;
+                    Ok(Step::Push(Frame::Recv {
+                        rank: r,
+                        src: Some(src_abs),
+                        tag,
+                        stage: RecvStage::Init,
+                        env: None,
+                    }))
+                }
+                PollStage::AfterRecv => {
+                    self.bcast_forward(*rank, *desc);
+                    Ok(Step::Pop)
+                }
+            },
+
+            Frame::BcastFinish { rank, desc, stage } => match stage {
+                FinishStage::Init => {
+                    if !self.rstate[*rank].machines[*desc].done {
+                        let (src_abs, tag) = {
+                            let d = &self.skel.ranks[*rank].descs[*desc];
+                            (d.src_abs, d.tag)
+                        };
+                        let r = *rank;
+                        *stage = FinishStage::AfterRecv;
+                        Ok(Step::Push(Frame::Recv {
+                            rank: r,
+                            src: Some(src_abs),
+                            tag,
+                            stage: RecvStage::Init,
+                            env: None,
+                        }))
+                    } else {
+                        *stage = FinishStage::Drain { i: 0, registered: false };
+                        Ok(Step::Continue)
+                    }
+                }
+                FinishStage::AfterRecv => {
+                    self.bcast_forward(*rank, *desc);
+                    *stage = FinishStage::Drain { i: 0, registered: false };
+                    Ok(Step::Continue)
+                }
+                FinishStage::Drain { i, registered } => {
+                    let (r, di) = (*rank, *desc);
+                    if *i >= self.rstate[r].machines[di].handles.len() {
+                        // Engine drains (clears) the handle list.
+                        self.rstate[r].machines[di].handles.clear();
+                        return Ok(Step::Pop);
+                    }
+                    let h = self.rstate[r].machines[di].handles[*i];
+                    if self.tasks[h].done {
+                        *i += 1;
+                        *registered = false;
+                        Ok(Step::Continue)
+                    } else {
+                        if !*registered {
+                            *registered = true;
+                            self.tasks[h].join_waiters.push(tid);
+                        }
+                        Ok(Step::Block)
+                    }
+                }
+            },
+
+            Frame::Watcher { epoch, at, armed } => {
+                if self.now >= *at {
+                    let e = *epoch;
+                    self.net_on_tick(e);
+                    Ok(Step::Pop)
+                } else {
+                    if !*armed {
+                        *armed = true;
+                        let a = *at;
+                        self.arm_timer(a, tid);
+                    }
+                    Ok(Step::Block)
+                }
+            }
+        }
+    }
+
+    /// Spawn the forward sends of a just-received panel and mark the
+    /// machine done (shared tail of `poll` and `finish`).
+    fn bcast_forward(&mut self, rank: usize, desc: usize) {
+        let (tag, bytes, fwd) = {
+            let d = &self.skel.ranks[rank].descs[desc];
+            (d.tag, d.bytes, d.fwd_abs.clone())
+        };
+        for dst in fwd {
+            let t = self.spawn_task(vec![Frame::Send {
+                src: rank,
+                dst,
+                tag,
+                bytes,
+                stage: SendStage::Init,
+            }]);
+            self.rstate[rank].machines[desc].handles.push(t);
+        }
+        self.rstate[rank].machines[desc].done = true;
+    }
+
+    /// Dispatch the next traced op of a rank's program.
+    fn exec_rank(&mut self, rank: usize, pc: &mut usize) -> Result<Step, VmError> {
+        let ops = &self.skel.ranks[rank].ops;
+        if *pc >= ops.len() {
+            return Ok(Step::Pop);
+        }
+        let op = ops[*pc];
+        *pc += 1;
+        match op {
+            Op::Aux { seconds } => {
+                // Only positive durations are traced; always sleeps.
+                Ok(Step::Push(Frame::Sleep { at: self.now + seconds, armed: false }))
+            }
+            Op::Dgemm { node, epoch, m, n, k } => {
+                let d = self.source.next(rank, node, epoch, m, n, k);
+                if d > 0.0 {
+                    Ok(Step::Push(Frame::Sleep { at: self.now + d, armed: false }))
+                } else {
+                    Ok(Step::Continue)
+                }
+            }
+            Op::Send { dst, tag, bytes } => Ok(Step::Push(Frame::Send {
+                src: rank,
+                dst,
+                tag,
+                bytes,
+                stage: SendStage::Init,
+            })),
+            Op::Isend { dst, tag, bytes } => {
+                let t = self.spawn_task(vec![Frame::Send {
+                    src: rank,
+                    dst,
+                    tag,
+                    bytes,
+                    stage: SendStage::Init,
+                }]);
+                self.rstate[rank].isends.push_back(t);
+                Ok(Step::Continue)
+            }
+            Op::WaitIsend => {
+                let t = self.rstate[rank]
+                    .isends
+                    .pop_front()
+                    .ok_or(VmError::WaitWithoutIsend { rank })?;
+                Ok(Step::Push(Frame::Join { task: t, registered: false }))
+            }
+            Op::Recv { src, tag } => Ok(Step::Push(Frame::Recv {
+                rank,
+                src,
+                tag,
+                stage: RecvStage::Init,
+                env: None,
+            })),
+            Op::BcastStart { desc } => {
+                self.desc_bounds(rank, desc)?;
+                let (is_root, tag, bytes, targets) = {
+                    let d = &self.skel.ranks[rank].descs[desc];
+                    (d.is_root, d.tag, d.bytes, d.root_targets_abs.clone())
+                };
+                if is_root {
+                    for dst in targets {
+                        let t = self.spawn_task(vec![Frame::Send {
+                            src: rank,
+                            dst,
+                            tag,
+                            bytes,
+                            stage: SendStage::Init,
+                        }]);
+                        self.rstate[rank].machines[desc].handles.push(t);
+                    }
+                    self.rstate[rank].machines[desc].done = true;
+                }
+                Ok(Step::Continue)
+            }
+            Op::BcastPoll { desc } => {
+                self.desc_bounds(rank, desc)?;
+                Ok(Step::Push(Frame::BcastPoll { rank, desc, stage: PollStage::Init }))
+            }
+            Op::BcastFinish { desc } => {
+                self.desc_bounds(rank, desc)?;
+                Ok(Step::Push(Frame::BcastFinish { rank, desc, stage: FinishStage::Init }))
+            }
+        }
+    }
+}
+
+/// Exact (bitwise on floats) equality of every result field — the
+/// definition of "byte-identical" the whole module is held to.
+pub fn results_identical(a: &HplResult, b: &HplResult) -> bool {
+    a.seconds == b.seconds
+        && a.gflops == b.gflops
+        && a.events == b.events
+        && a.dgemm_calls == b.dgemm_calls
+        && a.comm.messages == b.comm.messages
+        && a.comm.bytes == b.comm.bytes
+        && a.comm.iprobes == b.comm.iprobes
+}
+
+/// Run a replay, converting panics into errors: a VM bug must degrade a
+/// campaign to engine speed, never crash or corrupt it.
+fn catch_replay(
+    skel: &Skeleton,
+    cfg: &HplConfig,
+    topo: &Topology,
+    net: &NetModel,
+    dgemm: &DgemmModel,
+    ranks_per_node: usize,
+    seed: u64,
+) -> Result<HplResult, ()> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        replay(skel, cfg, topo, net, dgemm, ranks_per_node, seed)
+    }))
+    .map_err(|_| ())
+    .and_then(|r| r.map_err(|_| ()))
+}
+
+/// Per-class compilation state.
+struct ClassState {
+    skeleton: Option<Arc<Skeleton>>,
+    /// Dual-run validations passed so far.
+    checks: u32,
+    /// Latched: this class permanently uses the engine.
+    failed: bool,
+}
+
+enum Phase {
+    Fallback,
+    Pilot,
+    Check(Arc<Skeleton>),
+    Trusted(Arc<Skeleton>),
+}
+
+/// Bounded memo of compiled skeletons, shared across campaign workers.
+///
+/// Per structure class: the **pilot** (first point) runs the engine with
+/// a tracer and stores the skeleton — the slot lock is held across the
+/// run, so a class compiles exactly once no matter how many workers race
+/// on it. The next [`VALIDATE_POINTS`] points dual-run engine + replay
+/// and return the engine result; only then do points replay without an
+/// engine run (lock released during replay — trusted replays of one
+/// class proceed in parallel). Any divergence, error, panic or poisoned
+/// trace latches `failed` and the class falls back to the engine for
+/// the rest of the campaign.
+pub struct ScheduleMemo {
+    classes: Mutex<HashMap<u64, Arc<Mutex<ClassState>>>>,
+    compiles: AtomicUsize,
+    replays: AtomicUsize,
+    fallbacks: AtomicUsize,
+    checks: AtomicUsize,
+}
+
+impl Default for ScheduleMemo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScheduleMemo {
+    pub fn new() -> ScheduleMemo {
+        ScheduleMemo {
+            classes: Mutex::new(HashMap::new()),
+            compiles: AtomicUsize::new(0),
+            replays: AtomicUsize::new(0),
+            fallbacks: AtomicUsize::new(0),
+            checks: AtomicUsize::new(0),
+        }
+    }
+
+    /// Structure classes compiled (pilot engine runs with tracer).
+    pub fn compiles(&self) -> usize {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Points evaluated by trusted skeleton replay (no engine run).
+    pub fn replays(&self) -> usize {
+        self.replays.load(Ordering::Relaxed)
+    }
+
+    /// Points that fell back to the engine on a failed class.
+    pub fn fallbacks(&self) -> usize {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Dual-run validations performed.
+    pub fn checks(&self) -> usize {
+        self.checks.load(Ordering::Relaxed)
+    }
+
+    /// Evaluate one point, choosing pilot / dual-run / replay / engine
+    /// per the class state. The result is byte-identical to
+    /// `simulate_direct` with the same arguments, whichever path ran.
+    pub fn evaluate(
+        &self,
+        cfg: &HplConfig,
+        topo: &Topology,
+        net: &NetModel,
+        dgemm: &DgemmModel,
+        ranks_per_node: usize,
+        seed: u64,
+    ) -> HplResult {
+        let key = structure_key(cfg, topo, net, ranks_per_node);
+        let slot = {
+            let mut map = self.classes.lock().unwrap();
+            if map.len() >= MAX_CLASSES && !map.contains_key(&key) {
+                map.clear(); // generation clear, like MaterializeMemo
+            }
+            map.entry(key)
+                .or_insert_with(|| {
+                    Arc::new(Mutex::new(ClassState {
+                        skeleton: None,
+                        checks: 0,
+                        failed: false,
+                    }))
+                })
+                .clone()
+        };
+
+        let mut st = slot.lock().unwrap();
+        let phase = if st.failed {
+            Phase::Fallback
+        } else {
+            match &st.skeleton {
+                None => Phase::Pilot,
+                Some(s) if st.checks < VALIDATE_POINTS => Phase::Check(s.clone()),
+                Some(s) => Phase::Trusted(s.clone()),
+            }
+        };
+
+        match phase {
+            Phase::Fallback => {
+                drop(st);
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                simulate_direct(cfg, topo, net, dgemm, ranks_per_node, seed)
+            }
+            Phase::Pilot => {
+                // Engine + tracer; identical to simulate_direct in every
+                // observable (the tracer only records).
+                self.compiles.fetch_add(1, Ordering::Relaxed);
+                let tracer = Rc::new(Tracer::new(cfg.nranks()));
+                let source = DirectSource::new(dgemm.clone(), cfg.nranks(), seed);
+                let res = run_once_traced(
+                    cfg,
+                    topo.clone(),
+                    net.clone(),
+                    source,
+                    ranks_per_node,
+                    Some(tracer.clone()),
+                );
+                if tracer.poisoned() {
+                    st.failed = true;
+                } else {
+                    st.skeleton = Some(Arc::new(Skeleton { ranks: tracer.take_ranks() }));
+                }
+                res
+            }
+            Phase::Check(skel) => {
+                // Dual-run: the engine result is authoritative; replay
+                // must agree exactly or the class fails.
+                self.checks.fetch_add(1, Ordering::Relaxed);
+                let engine = simulate_direct(cfg, topo, net, dgemm, ranks_per_node, seed);
+                match catch_replay(&skel, cfg, topo, net, dgemm, ranks_per_node, seed) {
+                    Ok(r) if results_identical(&r, &engine) => st.checks += 1,
+                    _ => {
+                        st.failed = true;
+                        st.skeleton = None;
+                    }
+                }
+                engine
+            }
+            Phase::Trusted(skel) => {
+                drop(st); // replays of one class run in parallel
+                match catch_replay(&skel, cfg, topo, net, dgemm, ranks_per_node, seed) {
+                    Ok(r) => {
+                        self.replays.fetch_add(1, Ordering::Relaxed);
+                        r
+                    }
+                    Err(()) => {
+                        {
+                            let mut st = slot.lock().unwrap();
+                            st.failed = true;
+                            st.skeleton = None;
+                        }
+                        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                        simulate_direct(cfg, topo, net, dgemm, ranks_per_node, seed)
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::NodeCoef;
+    use crate::hpl::config::{Bcast, Rfact, SwapAlg};
+    use crate::network::Segment;
+
+    fn proto_model() -> NetModel {
+        // Latencies on both classes plus thresholds that the byte sizes
+        // of a small run actually cross: async (<=1e4), eager, and
+        // rendezvous (>1e6) protocols all get exercised.
+        let seg = |lat: f64| Segment { max_bytes: f64::INFINITY, latency: lat, bw_factor: 1.0 };
+        NetModel::from_segments(vec![seg(5e-7)], vec![seg(2e-6)], 1e4, 1e6)
+    }
+
+    fn noisy_dgemm() -> DgemmModel {
+        let mut c = NodeCoef::naive(6e-11);
+        c.sigma = [2e-12, 0.0, 0.0, 0.0, 0.0];
+        DgemmModel::homogeneous(c)
+    }
+
+    fn cfg(bcast: Bcast, swap: SwapAlg, rfact: Rfact, depth: usize, p: usize, q: usize) -> HplConfig {
+        HplConfig {
+            n: 192,
+            nb: 64,
+            p,
+            q,
+            depth,
+            bcast,
+            swap,
+            swap_threshold: 32,
+            rfact,
+            nbmin: 8,
+        }
+    }
+
+    fn compile(
+        cfg: &HplConfig,
+        topo: &Topology,
+        net: &NetModel,
+        dgemm: &DgemmModel,
+        rpn: usize,
+        seed: u64,
+    ) -> (Skeleton, HplResult) {
+        let tracer = Rc::new(Tracer::new(cfg.nranks()));
+        let source = DirectSource::new(dgemm.clone(), cfg.nranks(), seed);
+        let res = run_once_traced(cfg, topo.clone(), net.clone(), source, rpn, Some(tracer.clone()));
+        assert!(!tracer.poisoned(), "HPL emulation poisoned the trace");
+        (Skeleton { ranks: tracer.take_ranks() }, res)
+    }
+
+    /// Compile from one seed, then check replay == engine exactly for
+    /// *different* seeds (the headline replay-across-draws use case).
+    fn assert_replay_identical(cfg: &HplConfig, topo: &Topology, net: &NetModel, rpn: usize) {
+        let dgemm = noisy_dgemm();
+        let (skel, pilot) = compile(cfg, topo, net, &dgemm, rpn, 11);
+        // Tracing must not perturb the engine run itself.
+        let engine0 = simulate_direct(cfg, topo, net, &dgemm, rpn, 11);
+        assert!(
+            results_identical(&pilot, &engine0),
+            "tracer perturbed the engine: {pilot:?} vs {engine0:?}"
+        );
+        for seed in [1u64, 42] {
+            let engine = simulate_direct(cfg, topo, net, &dgemm, rpn, seed);
+            let rep = replay(&skel, cfg, topo, net, &dgemm, rpn, seed)
+                .unwrap_or_else(|e| panic!("replay error ({e}) for {cfg:?}"));
+            assert!(
+                results_identical(&rep, &engine),
+                "seed {seed} {:?}/{:?}/{:?}: replay {rep:?} != engine {engine:?}",
+                cfg.bcast,
+                cfg.swap,
+                cfg.rfact,
+            );
+        }
+    }
+
+    #[test]
+    fn replay_identical_across_bcast_algorithms() {
+        let topo = Topology::star(6, 1e9, 4e9);
+        let net = proto_model();
+        for bcast in Bcast::ALL {
+            let c = cfg(bcast, SwapAlg::BinExch, Rfact::Crout, 1, 2, 3);
+            assert_replay_identical(&c, &topo, &net, 1);
+        }
+    }
+
+    #[test]
+    fn replay_identical_across_swap_and_rfact() {
+        let topo = Topology::star(4, 1e9, 4e9);
+        let net = proto_model();
+        for swap in SwapAlg::ALL {
+            for rfact in Rfact::ALL {
+                let c = cfg(Bcast::TwoRing, swap, rfact, 0, 2, 2);
+                assert_replay_identical(&c, &topo, &net, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn replay_identical_on_fat_tree_with_shared_ranks() {
+        // Contended trunk links + two ranks per node (Local class and
+        // loopback sharing in play), look-ahead on.
+        let topo = Topology::fat_tree(2, 2, 1, 1, 1e9, 2e9, 4e9);
+        let net = proto_model();
+        let c = cfg(Bcast::RingM, SwapAlg::Mix, Rfact::Right, 1, 2, 4);
+        assert_replay_identical(&c, &topo, &net, 2);
+    }
+
+    #[test]
+    fn structure_key_sensitive_to_every_structural_field() {
+        let topo = Topology::star(4, 1e9, 4e9);
+        let net = proto_model();
+        let base = cfg(Bcast::TwoRing, SwapAlg::BinExch, Rfact::Crout, 1, 2, 2);
+        let k0 = structure_key(&base, &topo, &net, 1);
+
+        let mutations: Vec<HplConfig> = vec![
+            HplConfig { n: 256, ..base.clone() },
+            HplConfig { nb: 32, ..base.clone() },
+            HplConfig { depth: 0, ..base.clone() },
+            HplConfig { bcast: Bcast::Ring, ..base.clone() },
+            HplConfig { swap: SwapAlg::SpreadRoll, ..base.clone() },
+            HplConfig { swap_threshold: 48, ..base.clone() },
+            HplConfig { rfact: Rfact::Left, ..base.clone() },
+            HplConfig { nbmin: 16, ..base.clone() },
+        ];
+        for m in &mutations {
+            assert_ne!(structure_key(m, &topo, &net, 1), k0, "{m:?}");
+        }
+        // Topology, protocol model and placement are structural too.
+        assert_ne!(structure_key(&base, &Topology::star(4, 2e9, 4e9), &net, 1), k0);
+        assert_ne!(structure_key(&base, &topo, &NetModel::ideal(), 1), k0);
+        assert_ne!(structure_key(&base, &topo, &net, 2), k0);
+        // Same inputs -> same key (and nothing else is hashed).
+        assert_eq!(structure_key(&base.clone(), &topo, &net, 1), k0);
+    }
+
+    #[test]
+    fn memo_compiles_once_and_every_path_is_byte_identical() {
+        let topo = Topology::star(6, 1e9, 4e9);
+        let net = proto_model();
+        let dgemm = noisy_dgemm();
+        let c = cfg(Bcast::TwoRingM, SwapAlg::BinExch, Rfact::Crout, 1, 2, 3);
+        let memo = ScheduleMemo::new();
+        // Pilot (seed 0), VALIDATE_POINTS checks, then trusted replays:
+        // every one must equal the plain engine result exactly.
+        for seed in 0..6u64 {
+            let got = memo.evaluate(&c, &topo, &net, &dgemm, 1, seed);
+            let want = simulate_direct(&c, &topo, &net, &dgemm, 1, seed);
+            assert!(
+                results_identical(&got, &want),
+                "seed {seed}: memo {got:?} != engine {want:?}"
+            );
+        }
+        assert_eq!(memo.compiles(), 1, "class must compile exactly once");
+        assert_eq!(memo.checks(), VALIDATE_POINTS as usize);
+        assert_eq!(memo.replays(), 6 - 1 - VALIDATE_POINTS as usize);
+        assert_eq!(memo.fallbacks(), 0);
+    }
+
+    #[test]
+    fn memo_second_class_compiles_separately() {
+        let topo = Topology::star(6, 1e9, 4e9);
+        let net = proto_model();
+        let dgemm = noisy_dgemm();
+        let memo = ScheduleMemo::new();
+        let a = cfg(Bcast::Ring, SwapAlg::BinExch, Rfact::Crout, 1, 2, 3);
+        let b = cfg(Bcast::RingM, SwapAlg::BinExch, Rfact::Crout, 1, 2, 3);
+        memo.evaluate(&a, &topo, &net, &dgemm, 1, 1);
+        memo.evaluate(&b, &topo, &net, &dgemm, 1, 1);
+        memo.evaluate(&a, &topo, &net, &dgemm, 1, 2);
+        assert_eq!(memo.compiles(), 2);
+    }
+
+    #[test]
+    fn malformed_skeleton_errors_out() {
+        let topo = Topology::star(2, 1e9, 4e9);
+        let net = proto_model();
+        let dgemm = noisy_dgemm();
+        let c = HplConfig {
+            n: 64,
+            nb: 64,
+            p: 1,
+            q: 2,
+            depth: 0,
+            bcast: Bcast::Ring,
+            swap: SwapAlg::BinExch,
+            swap_threshold: 32,
+            rfact: Rfact::Crout,
+            nbmin: 8,
+        };
+        // WaitIsend with no isend outstanding.
+        let mut rt = RankTrace::default();
+        rt.ops.push(Op::WaitIsend);
+        let bad = Skeleton { ranks: vec![rt, RankTrace::default()] };
+        assert_eq!(
+            replay(&bad, &c, &topo, &net, &dgemm, 1, 1),
+            Err(VmError::WaitWithoutIsend { rank: 0 })
+        );
+        // A receive nobody ever sends: deadlock, not a hang.
+        let mut rt = RankTrace::default();
+        rt.ops.push(Op::Recv { src: Some(1), tag: 7 });
+        let dead = Skeleton { ranks: vec![rt, RankTrace::default()] };
+        assert!(matches!(
+            replay(&dead, &c, &topo, &net, &dgemm, 1, 1),
+            Err(VmError::Deadlock { .. })
+        ));
+        // Wrong rank count is rejected before anything runs.
+        let short = Skeleton { ranks: vec![RankTrace::default()] };
+        assert_eq!(
+            replay(&short, &c, &topo, &net, &dgemm, 1, 1),
+            Err(VmError::RankMismatch { skeleton: 1, config: 2 })
+        );
+    }
+
+    #[test]
+    fn memo_falls_back_to_engine_when_replay_breaks() {
+        let topo = Topology::star(6, 1e9, 4e9);
+        let net = proto_model();
+        let dgemm = noisy_dgemm();
+        let c = cfg(Bcast::TwoRing, SwapAlg::BinExch, Rfact::Crout, 0, 2, 3);
+        let memo = ScheduleMemo::new();
+        // Drive the class into the trusted phase.
+        for seed in 0..4u64 {
+            memo.evaluate(&c, &topo, &net, &dgemm, 1, seed);
+        }
+        assert_eq!(memo.replays(), 1);
+        // Corrupt the stored skeleton (same-module access): the next
+        // trusted replay errors, latches `failed`, and the point — and
+        // every later one — still returns the exact engine result.
+        let key = structure_key(&c, &topo, &net, 1);
+        let slot = memo.classes.lock().unwrap().get(&key).unwrap().clone();
+        {
+            let mut rt = RankTrace::default();
+            rt.ops.push(Op::WaitIsend);
+            let bad = vec![rt; c.nranks()];
+            slot.lock().unwrap().skeleton = Some(Arc::new(Skeleton { ranks: bad }));
+        }
+        for seed in 10..12u64 {
+            let got = memo.evaluate(&c, &topo, &net, &dgemm, 1, seed);
+            let want = simulate_direct(&c, &topo, &net, &dgemm, 1, seed);
+            assert!(results_identical(&got, &want), "fallback not identical");
+        }
+        assert!(memo.fallbacks() >= 2, "failed class must latch");
+        assert!(slot.lock().unwrap().failed);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let topo = Topology::star(4, 1e9, 4e9);
+        let net = proto_model();
+        let dgemm = noisy_dgemm();
+        let c = cfg(Bcast::Long, SwapAlg::SpreadRoll, Rfact::Left, 0, 2, 2);
+        let (skel, _) = compile(&c, &topo, &net, &dgemm, 1, 3);
+        let a = replay(&skel, &c, &topo, &net, &dgemm, 1, 9).unwrap();
+        let b = replay(&skel, &c, &topo, &net, &dgemm, 1, 9).unwrap();
+        assert!(results_identical(&a, &b));
+    }
+}

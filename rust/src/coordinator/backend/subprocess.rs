@@ -179,6 +179,12 @@ impl ExecBackend for Subprocess {
                     cmd.arg("--no-artifacts");
                 }
             }
+            // Same story for the skeleton fast path: results are
+            // byte-identical either way, but the children should honor
+            // an explicit `--no-skeleton` on the coordinator.
+            if !campaign.skeleton_enabled() {
+                cmd.arg("--no-skeleton");
+            }
             let spawned = cmd
                 .stdin(Stdio::null())
                 .stdout(Stdio::piped())

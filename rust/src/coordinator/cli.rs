@@ -47,7 +47,8 @@ USAGE:
                [--manifest FILE] [--export-manifest FILE] [--plan-only]
                [--backend inproc|subprocess|queue] [--shards S]
                [--queue-dir DIR] [--queue-workers W] [--queue-tasks K]
-               [--lease-secs S] [--bench-json FILE]
+               [--lease-secs S] [--bench-json FILE] [--no-skeleton]
+               [--structured]
       Random HPL parameter-space campaign (NB, depth, bcast, swap, rfact,
       geometry) on the calibrated surrogate: K points (default 100) with
       per-point seeds derived from the campaign seed, executed by a
@@ -71,15 +72,25 @@ USAGE:
                     --queue-workers local workers (default 2; 0 = only
                     external `hplsim worker` processes) with --queue-tasks
                     leases expiring after --lease-secs
-      --bench-json writes the run's execution accounting (points/s,
-      wall-clock, computed/cached split) as a `hplsim-bench-sweep-v1`
-      JSON document — the CI perf-baseline artifact (see
-      bench/BENCH_sweep.schema.json).
+      Structurally identical points (same config/topology/network, only
+      coefficient and seed draws differing) share one compiled schedule
+      skeleton: the engine runs once per structure class and every
+      sibling replays the recorded event stream, byte-identical to the
+      full engine path (see README \"Schedule skeletons\");
+      --no-skeleton forces the full engine for every point.
+      --structured samples the structural axes once so the whole
+      campaign is a single structure class (the skeleton benchmark
+      shape). --bench-json writes the run's execution accounting plus
+      an engine-vs-skeleton A/B measurement (uncached in-process
+      points/s with the skeleton off and on, and their ratio) as a
+      `hplsim-bench-sweep-v2` JSON document — the CI perf-baseline
+      artifact (see bench/BENCH_sweep.schema.json).
   hplsim sa --space FILE [--design saltelli|lhs|factorial] [--points N]
             [--levels L] [--replicates R] [--seed N] [--out DIR]
             [--cache DIR] [--no-cache] [--threads T] [--batch-size B]
             [--no-artifacts] [--export-manifest FILE] [--plan-only]
-            [--backend inproc|subprocess|queue] [backend knobs as sweep]
+            [--backend inproc|subprocess|queue] [--no-skeleton]
+            [backend knobs as sweep]
       Sensitivity-analysis campaign over a declared (HPL config x
       platform scenario) parameter space — a JSON file naming the swept
       dimensions (NB, broadcast variant, process grid, node count,
@@ -102,6 +113,7 @@ USAGE:
             [--shrink F] [--seed N] [--state FILE] [--out DIR]
             [--cache DIR] [--no-cache] [--threads T] [--batch-size B]
             [--no-artifacts] [--backend inproc|subprocess|queue]
+            [--no-skeleton]
       Successive-halving auto-tune over the same parameter-space JSON:
       wave 0 evaluates K latin-hypercube points, every later wave
       re-samples K points around the S best configurations seen so far
@@ -122,6 +134,7 @@ USAGE:
       on any machines sharing DIR.
   hplsim shard --manifest FILE --shards S --shard-index I --cache DIR
                [--threads T] [--quiet] [--artifacts] [--batch-size B]
+               [--no-skeleton]
       Execute one deterministic partition of a campaign manifest — the
       points with fingerprint % S == I — writing results into the
       fingerprint-keyed cache DIR. Run one shard per machine, then
@@ -485,29 +498,48 @@ fn sample_sweep_points(
     // the campaign seed and the point index, so the campaign is
     // bit-reproducible at any thread count.
     let mut cfg_rng = crate::stats::Rng::new(seed ^ 0x7377_6565_70);
+    // --structured: sample the structural axes once and reuse them for
+    // every point, so the whole campaign is one structure class and
+    // only the per-point seeds (the variability draws) differ — the
+    // shape the schedule-skeleton fast path replays, and what the
+    // committed skeleton benchmark sweeps.
+    let structured = opts.contains_key("structured");
+    let mut fixed_cfg: Option<HplConfig> = None;
     let mut points = Vec::with_capacity(npoints);
     for i in 0..npoints {
-        let (p, q) = geos[cfg_rng.below(geos.len())];
-        let nb = nbs[cfg_rng.below(nbs.len())];
-        let cfg = HplConfig {
-            n,
-            nb,
-            p,
-            q,
-            depth: cfg_rng.below(2),
-            bcast: Bcast::ALL[cfg_rng.below(Bcast::ALL.len())],
-            swap: SwapAlg::ALL[cfg_rng.below(SwapAlg::ALL.len())],
-            swap_threshold: 64,
-            rfact: Rfact::ALL[cfg_rng.below(Rfact::ALL.len())],
-            nbmin: 8,
+        let cfg = match (structured, &fixed_cfg) {
+            (true, Some(c)) => c.clone(),
+            _ => {
+                let (p, q) = geos[cfg_rng.below(geos.len())];
+                let nb = nbs[cfg_rng.below(nbs.len())];
+                let c = HplConfig {
+                    n,
+                    nb,
+                    p,
+                    q,
+                    depth: cfg_rng.below(2),
+                    bcast: Bcast::ALL[cfg_rng.below(Bcast::ALL.len())],
+                    swap: SwapAlg::ALL[cfg_rng.below(SwapAlg::ALL.len())],
+                    swap_threshold: 64,
+                    rfact: Rfact::ALL[cfg_rng.below(Rfact::ALL.len())],
+                    nbmin: 8,
+                };
+                if structured {
+                    fixed_cfg = Some(c.clone());
+                }
+                c
+            }
         };
         points.push(SimPoint {
             label: format!(
-                "sweep/{i}/nb{nb}-d{}-{}-{}-{}-{p}x{q}",
+                "sweep/{i}/nb{}-d{}-{}-{}-{}-{}x{}",
+                cfg.nb,
                 cfg.depth,
                 cfg.bcast.name(),
                 cfg.swap.name(),
-                cfg.rfact.name()
+                cfg.rfact.name(),
+                cfg.p,
+                cfg.q
             ),
             cfg,
             platform: platform.clone(),
@@ -651,6 +683,7 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
     let campaign = Campaign::new(&points)
         .threads(num(opts, "threads", 0usize))
         .cache(cache_dir)
+        .skeleton(!opts.contains_key("no-skeleton"))
         .stderr_progress();
     let report = match bcfg.run("sweep", &campaign) {
         Ok(r) => r,
@@ -668,12 +701,53 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
         points.len() as f64 / report.wall_seconds.max(1e-9),
     );
     if let Some(path) = bench_p {
-        if let Err(e) = write_bench_json(Path::new(path), points.len(), &report, &bcfg.name)
-        {
+        // Engine-vs-skeleton A/B measurement: two additional uncached
+        // in-process passes over the same points on the pure-Rust path,
+        // one with the skeleton fast path off (the full engine per
+        // point) and one with it on (trace once per structure class,
+        // replay the rest). Results are byte-identical by construction;
+        // only the wall-clocks differ, and their ratio is the committed
+        // skeleton speedup baseline.
+        let threads = num(opts, "threads", 0usize);
+        let timed = |skeleton: bool| -> Result<CampaignReport, i32> {
+            let c = Campaign::new(&points).threads(threads).skeleton(skeleton);
+            match c.run(&InProcess::new()) {
+                Ok(r) => Ok(r),
+                Err(e) => {
+                    eprintln!(
+                        "sweep: bench {} pass failed: {e}",
+                        if skeleton { "skeleton" } else { "engine" }
+                    );
+                    Err(1)
+                }
+            }
+        };
+        let engine = match timed(false) {
+            Ok(r) => r,
+            Err(code) => return code,
+        };
+        let skeleton = match timed(true) {
+            Ok(r) => r,
+            Err(code) => return code,
+        };
+        if let Err(e) = write_bench_json(
+            Path::new(path),
+            points.len(),
+            &report,
+            &bcfg.name,
+            &engine,
+            &skeleton,
+        ) {
             eprintln!("sweep: cannot write bench JSON {path}: {e}");
             return 1;
         }
-        println!("sweep: wrote bench timings to {path}");
+        println!(
+            "sweep: wrote bench timings to {path} (engine {:.2} pts/s, skeleton \
+             {:.2} pts/s, speedup {:.2}x)",
+            points.len() as f64 / engine.wall_seconds.max(1e-9),
+            points.len() as f64 / skeleton.wall_seconds.max(1e-9),
+            engine.wall_seconds.max(1e-9) / skeleton.wall_seconds.max(1e-9),
+        );
     }
     if wrote_csv {
         0
@@ -683,16 +757,23 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
 }
 
 /// `--bench-json`: the committed perf-baseline artifact
-/// (`hplsim-bench-sweep-v1`, schema in bench/BENCH_sweep.schema.json)
-/// that CI trends run-over-run.
+/// (`hplsim-bench-sweep-v2`, schema in bench/BENCH_sweep.schema.json)
+/// that CI trends run-over-run. On top of the primary run's accounting
+/// (the v1 fields), v2 records the engine-vs-skeleton A/B passes:
+/// uncached in-process points/sec with the schedule-skeleton fast path
+/// off and on, plus their ratio.
 fn write_bench_json(
     path: &Path,
     points: usize,
     report: &CampaignReport,
     backend: &str,
+    engine: &CampaignReport,
+    skeleton: &CampaignReport,
 ) -> std::io::Result<()> {
+    let engine_pps = points as f64 / engine.wall_seconds.max(1e-9);
+    let skeleton_pps = points as f64 / skeleton.wall_seconds.max(1e-9);
     let doc = Json::obj(vec![
-        ("schema", Json::Str("hplsim-bench-sweep-v1".into())),
+        ("schema", Json::Str("hplsim-bench-sweep-v2".into())),
         ("backend", Json::Str(backend.into())),
         ("points", Json::Num(points as f64)),
         ("computed", Json::Num(report.computed as f64)),
@@ -702,6 +783,14 @@ fn write_bench_json(
         (
             "points_per_sec",
             Json::Num(points as f64 / report.wall_seconds.max(1e-9)),
+        ),
+        ("engine_wall_seconds", Json::Num(engine.wall_seconds)),
+        ("engine_points_per_sec", Json::Num(engine_pps)),
+        ("skeleton_wall_seconds", Json::Num(skeleton.wall_seconds)),
+        ("skeleton_points_per_sec", Json::Num(skeleton_pps)),
+        (
+            "skeleton_speedup",
+            Json::Num(engine.wall_seconds.max(1e-9) / skeleton.wall_seconds.max(1e-9)),
         ),
     ]);
     if let Some(dir) = path.parent() {
@@ -802,6 +891,7 @@ fn cmd_sa(opts: &HashMap<String, String>) -> i32 {
     let campaign = Campaign::new(&plan.points)
         .threads(num(opts, "threads", 0usize))
         .cache(cache_dir)
+        .skeleton(!opts.contains_key("no-skeleton"))
         .stderr_progress();
     let report = match bcfg.run("sa", &campaign) {
         Ok(r) => r,
@@ -922,6 +1012,7 @@ fn cmd_tune(opts: &HashMap<String, String>) -> i32 {
         let campaign = Campaign::new(points)
             .threads(threads)
             .cache(cache_dir.clone())
+            .skeleton(!opts.contains_key("no-skeleton"))
             .stderr_progress();
         match bcfg.run("tune", &campaign) {
             Ok(r) => Ok(r.results),
@@ -1070,8 +1161,10 @@ fn cmd_shard(opts: &HashMap<String, String>) -> i32 {
         let batch =
             num(opts, "batch-size", crate::runtime::DEFAULT_BATCH_POINTS).max(1);
         eval = eval_tag_for(Some(arts.as_ref()));
-        let mut campaign =
-            Campaign::new(&mine).threads(threads).cache(Some(cache.into()));
+        let mut campaign = Campaign::new(&mine)
+            .threads(threads)
+            .cache(Some(cache.into()))
+            .skeleton(!opts.contains_key("no-skeleton"));
         if progress {
             campaign = campaign.stderr_progress();
         }
@@ -1091,6 +1184,7 @@ fn cmd_shard(opts: &HashMap<String, String>) -> i32 {
             threads,
             cache_dir: Some(cache.into()),
             progress,
+            no_skeleton: opts.contains_key("no-skeleton"),
         };
         match run_campaign(&mine, &sweep_opts) {
             Ok(r) => r,

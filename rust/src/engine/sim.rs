@@ -164,12 +164,12 @@ impl Sim {
     pub fn sleep(&self, dur: f64) -> Delay {
         debug_assert!(dur >= 0.0 && dur.is_finite(), "bad delay {dur}");
         let at = self.k.borrow().now + dur;
-        Delay { k: self.k.clone(), at }
+        Delay { k: self.k.clone(), at, armed: false }
     }
 
     /// Sleep until an absolute simulated time.
     pub fn sleep_until(&self, at: f64) -> Delay {
-        Delay { k: self.k.clone(), at }
+        Delay { k: self.k.clone(), at, armed: false }
     }
 
     /// Register a waker to fire at absolute time `at` (used by the
@@ -248,24 +248,28 @@ impl Sim {
     }
 
     fn poll_task(&self, id: usize) {
-        // Take the future out so polling can re-borrow the kernel.
+        // Take the future — and its cached waker — out so polling can
+        // re-borrow the kernel. Moving the waker instead of cloning it
+        // saves an Arc refcount round-trip on every poll; it goes back
+        // into its slot (same identity) when the task stays pending.
         let (fut, waker) = {
             let mut k = self.k.borrow_mut();
             let fut = match k.tasks.get_mut(id) {
                 Some(slot) => slot.take(),
                 None => None,
             };
-            let waker = fut.as_ref().map(|_| {
-                k.wakers[id]
-                    .get_or_insert_with(|| {
+            match fut {
+                Some(f) => {
+                    let w = k.wakers[id].take().unwrap_or_else(|| {
                         Waker::from(Arc::new(TaskWaker {
                             id,
                             queue: self.queue.clone(),
                         }))
-                    })
-                    .clone()
-            });
-            (fut, waker)
+                    });
+                    (Some(f), Some(w))
+                }
+                None => (None, None),
+            }
         };
         let Some(mut fut) = fut else { return };
         let waker = waker.unwrap();
@@ -275,12 +279,13 @@ impl Sim {
             Poll::Ready(()) => {
                 let mut k = self.k.borrow_mut();
                 k.live -= 1;
-                // Slot stays None: task is finished. Drop its waker too.
-                k.wakers[id] = None;
+                // Slot stays None: task is finished; its waker (still in
+                // the local) drops here instead of going back.
             }
             Poll::Pending => {
                 let mut k = self.k.borrow_mut();
                 k.tasks[id] = Some(fut);
+                k.wakers[id] = Some(waker);
             }
         }
     }
@@ -290,22 +295,32 @@ impl Sim {
 pub struct Delay {
     k: Rc<RefCell<Kernel>>,
     at: f64,
+    /// Whether this delay's timer is already on the heap. A pending
+    /// delay re-polled by a spurious wake (a task woken by some *other*
+    /// source while suspended here) used to push a fresh timer on every
+    /// poll, leaving duplicate heap entries and firing spurious wakes at
+    /// `at`; the timer is registered exactly once now.
+    armed: bool,
 }
 
 impl Future for Delay {
     type Output = ();
     fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
-        let mut k = self.k.borrow_mut();
-        if k.now >= self.at {
+        let this = self.get_mut();
+        let mut k = this.k.borrow_mut();
+        if k.now >= this.at {
             Poll::Ready(())
         } else {
-            let seq = k.seq;
-            k.seq += 1;
-            k.timers.push(Reverse(Timer {
-                at: self.at,
-                seq,
-                waker: cx.waker().clone(),
-            }));
+            if !this.armed {
+                this.armed = true;
+                let seq = k.seq;
+                k.seq += 1;
+                k.timers.push(Reverse(Timer {
+                    at: this.at,
+                    seq,
+                    waker: cx.waker().clone(),
+                }));
+            }
             Poll::Pending
         }
     }
@@ -428,6 +443,40 @@ mod tests {
             s2.wait().await; // never set
         });
         sim.run();
+    }
+
+    #[test]
+    fn repolled_delay_registers_one_timer() {
+        // Regression: a pending Delay re-polled by spurious wakes (the
+        // task is woken twice by external timers while suspended on the
+        // delay) must not push duplicate heap entries. Event budget:
+        // two provoker timers (t=1, t=2) + exactly one delay timer
+        // (t=10) = 3 events. The old every-poll registration fired 5.
+        struct Provoker {
+            sim: Sim,
+            delay: Delay,
+            primed: bool,
+        }
+        impl Future for Provoker {
+            type Output = ();
+            fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+                let this = self.get_mut();
+                if !this.primed {
+                    this.primed = true;
+                    this.sim.wake_at(1.0, cx.waker().clone());
+                    this.sim.wake_at(2.0, cx.waker().clone());
+                }
+                Pin::new(&mut this.delay).poll(cx)
+            }
+        }
+        let sim = Sim::new();
+        let delay = sim.sleep_until(10.0);
+        sim.spawn(Provoker { sim: sim.clone(), delay, primed: false });
+        let (end, stats) = sim.run_with_stats();
+        assert_eq!(end, 10.0);
+        assert_eq!(stats.events, 3, "duplicate delay timers on the heap");
+        // Initial poll + one per wake (t=1, t=2, t=10).
+        assert_eq!(stats.polls, 4);
     }
 
     #[test]

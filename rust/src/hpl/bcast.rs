@@ -6,8 +6,8 @@
 //! their Iprobe capability is disabled (§2 of the paper).
 
 use super::config::Bcast;
-use crate::engine::JoinHandle;
-use crate::mpi::Ctx;
+use crate::mpi::trace::{BcastDesc, Op};
+use crate::mpi::{Ctx, SendHandle, TraceSuppress};
 
 /// Tag layout: see [`super::driver::tag`].
 fn fwd_tag(base: u64) -> u64 {
@@ -124,7 +124,16 @@ pub struct BcastOp {
     bytes: f64,
     tag: u64,
     done: bool,
-    handles: Vec<JoinHandle<()>>,
+    handles: Vec<SendHandle>,
+    /// Skeleton-trace descriptor id, registered on first marker.
+    trace_id: Option<usize>,
+}
+
+/// Which lifecycle marker a call site emits when tracing.
+enum Marker {
+    Start,
+    Poll,
+    Finish,
 }
 
 impl BcastOp {
@@ -136,7 +145,17 @@ impl BcastOp {
         bytes: f64,
         tag: u64,
     ) -> BcastOp {
-        BcastOp { alg, group, me_pos, root_pos, bytes, tag, done: false, handles: vec![] }
+        BcastOp {
+            alg,
+            group,
+            me_pos,
+            root_pos,
+            bytes,
+            tag,
+            done: false,
+            handles: vec![],
+            trace_id: None,
+        }
     }
 
     fn q(&self) -> usize {
@@ -151,6 +170,52 @@ impl BcastOp {
         self.group[(d + self.root_pos) % self.q()]
     }
 
+    /// Emit the lifecycle marker for one `start`/`poll`/`finish` call
+    /// (registering this rank's descriptor on first use), and suppress
+    /// the body's primitives until the guard drops: which calls do
+    /// work is timing-dependent, so the replay VM re-enacts the
+    /// broadcast from the descriptor rather than from a literal trace.
+    /// No-op without a tracer.
+    fn trace_marker(&mut self, ctx: &Ctx, marker: Marker) -> Option<TraceSuppress> {
+        if !ctx.tracing() {
+            return None;
+        }
+        if self.trace_id.is_none() {
+            let d = self.d();
+            let desc = if d == 0 {
+                BcastDesc {
+                    is_root: true,
+                    src_abs: self.abs(0),
+                    fwd_abs: vec![],
+                    root_targets_abs: root_plan(self.alg, self.q())
+                        .into_iter()
+                        .map(|x| self.abs(x))
+                        .collect(),
+                    tag: fwd_tag(self.tag),
+                    bytes: self.bytes,
+                }
+            } else {
+                let (src_d, fwd) = ring_plan(self.alg, self.q(), d);
+                BcastDesc {
+                    is_root: false,
+                    src_abs: self.abs(src_d),
+                    fwd_abs: fwd.into_iter().map(|x| self.abs(x)).collect(),
+                    root_targets_abs: vec![],
+                    tag: fwd_tag(self.tag),
+                    bytes: self.bytes,
+                }
+            };
+            self.trace_id = Some(ctx.trace_desc(desc));
+        }
+        let id = self.trace_id.unwrap();
+        ctx.trace_log(|| match marker {
+            Marker::Start => Op::BcastStart { desc: id },
+            Marker::Poll => Op::BcastPoll { desc: id },
+            Marker::Finish => Op::BcastFinish { desc: id },
+        });
+        ctx.trace_suppress()
+    }
+
     /// Kick off the broadcast. Roots of ring variants launch their
     /// sends in the background; everything else is lazy.
     pub fn start(&mut self, ctx: &Ctx) {
@@ -158,7 +223,11 @@ impl BcastOp {
             self.done = true;
             return;
         }
-        if self.alg.overlaps() && self.d() == 0 {
+        if !self.alg.overlaps() {
+            return;
+        }
+        let _g = self.trace_marker(ctx, Marker::Start);
+        if self.d() == 0 {
             for dst_d in root_plan(self.alg, self.q()) {
                 let dst = self.abs(dst_d);
                 self.handles.push(ctx.isend(dst, fwd_tag(self.tag), self.bytes));
@@ -175,6 +244,11 @@ impl BcastOp {
     /// the panel has arrived locally. Long variants make no progress
     /// here (no Iprobe in HPL 2.1/2.2).
     pub async fn poll(&mut self, ctx: &Ctx) -> bool {
+        let _g = if self.alg.overlaps() && self.q() > 1 {
+            self.trace_marker(ctx, Marker::Poll)
+        } else {
+            None
+        };
         if self.done {
             return true;
         }
@@ -204,6 +278,11 @@ impl BcastOp {
             self.done = true;
             return;
         }
+        let _g = if self.alg.overlaps() {
+            self.trace_marker(ctx, Marker::Finish)
+        } else {
+            None
+        };
         if !self.done {
             if self.alg.overlaps() {
                 let (src_d, fwd) = ring_plan(self.alg, self.q(), self.d());

@@ -26,6 +26,23 @@ const K_FACT: u64 = 2;
 const K_PRESWAP: u64 = 3;
 const K_SWAP: u64 = 4;
 
+/// Draw a dgemm duration for `(rank, node, epoch, m, n, k)` and advance
+/// the rank's clock by it, tracing the call *shape* so skeleton replay
+/// can re-draw the duration for another point of the same structure
+/// class. Every dgemm of the emulation goes through here.
+pub(crate) async fn compute_dgemm(
+    ctx: &Ctx,
+    models: &KernelModels,
+    node: usize,
+    epoch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    let d = models.dgemm.next(ctx.rank, node, epoch, m, n, k);
+    ctx.compute_dgemm_traced(d, node, epoch, m, n, k).await;
+}
+
 /// Outcome of one simulated HPL run. The all-zero `Default` is the
 /// placeholder used when a campaign is *planned* (manifest export, see
 /// `coordinator::manifest`) rather than executed.
@@ -102,8 +119,7 @@ async fn update(
     while done_cols < nq {
         let c = cfg.nb.min(nq - done_cols);
         if mp > 0 {
-            let d = models.dgemm.next(ctx.rank, node, j, mp, c, jb);
-            ctx.compute(d).await;
+            compute_dgemm(ctx, models, node, j, mp, c, jb).await;
         }
         done_cols += c;
         if let Some(b) = bcast_next.as_deref_mut() {
@@ -183,8 +199,7 @@ async fn rank_main(ctx: Ctx, cfg: Rc<HplConfig>, models: KernelModels) {
                     .await;
                     ctx.compute(models.dtrsm.of((jb * jb * jb_next) as f64)).await;
                     if mp > 0 {
-                        let d = models.dgemm.next(ctx.rank, node, j, mp, jb_next, jb);
-                        ctx.compute(d).await;
+                        compute_dgemm(&ctx, &models, node, j, mp, jb_next, jb).await;
                     }
                 }
                 // ...then factor panel j+1 immediately.
@@ -231,10 +246,24 @@ pub fn run_once(
     source: Rc<dyn DgemmSource>,
     ranks_per_node: usize,
 ) -> HplResult {
+    run_once_traced(cfg, topo, model, source, ranks_per_node, None)
+}
+
+/// [`run_once`] with an optional schedule tracer attached to the world
+/// — the capture side of `coordinator::backend::skeleton`.
+pub(crate) fn run_once_traced(
+    cfg: &HplConfig,
+    topo: Topology,
+    model: NetModel,
+    source: Rc<dyn DgemmSource>,
+    ranks_per_node: usize,
+    tracer: Option<Rc<crate::mpi::Tracer>>,
+) -> HplResult {
     cfg.validate().expect("invalid HPL config");
     let sim = Sim::with_capacity(cfg.nranks());
     let net = Network::new(sim.clone(), topo, model);
     let world = World::new(sim.clone(), net, cfg.nranks(), ranks_per_node);
+    world.set_tracer(tracer);
     let cfg_rc = Rc::new(cfg.clone());
     let models = KernelModels::default_aux(source);
     for r in 0..cfg.nranks() {

@@ -16,6 +16,7 @@ use std::future::Future;
 use std::pin::Pin;
 
 use super::config::Rfact;
+use super::driver::compute_dgemm;
 use crate::blas::KernelModels;
 use crate::mpi::{collectives, Ctx};
 
@@ -93,8 +94,7 @@ impl<'a> PanelFact<'a> {
         collectives::allreduce_tree(self.ctx, self.group, self.me_pos, tag, bytes).await;
         // Rank-1 update cascade of the leaf ≈ one (mp, cols, cols) GEMM.
         if mp > 0 && cols > 0 {
-            let d = m.dgemm.next(self.ctx.rank, self.node, self.epoch, mp, cols, cols);
-            self.ctx.compute(d).await;
+            compute_dgemm(self.ctx, m, self.node, self.epoch, mp, cols, cols).await;
         }
     }
 
@@ -120,8 +120,7 @@ impl<'a> PanelFact<'a> {
                     self.ctx.compute(m.dtrsm.of((n1 * n1 * n2) as f64)).await;
                     let rows = mp.saturating_sub(n1);
                     if rows > 0 {
-                        let d = m.dgemm.next(self.ctx.rank, self.node, self.epoch, rows, n2, n1);
-                        self.ctx.compute(d).await;
+                        compute_dgemm(self.ctx, m, self.node, self.epoch, rows, n2, n1).await;
                     }
                     self.rec(mp, n2).await;
                 }
@@ -132,8 +131,7 @@ impl<'a> PanelFact<'a> {
                     self.rec(mp, n1).await;
                     let rows = mp.saturating_sub(n1);
                     if rows > 0 {
-                        let d = m.dgemm.next(self.ctx.rank, self.node, self.epoch, rows, n2, n1);
-                        self.ctx.compute(d).await;
+                        compute_dgemm(self.ctx, m, self.node, self.epoch, rows, n2, n1).await;
                     }
                     self.ctx.compute(m.dtrsm.of((n1 * n1 * n2) as f64)).await;
                     self.rec(mp, n2).await;
@@ -143,8 +141,7 @@ impl<'a> PanelFact<'a> {
                     self.rec(mp, n1).await;
                     self.ctx.compute(m.dtrsm.of((n1 * n1 * n2) as f64)).await;
                     if mp > 0 {
-                        let d = m.dgemm.next(self.ctx.rank, self.node, self.epoch, mp, n2, n1);
-                        self.ctx.compute(d).await;
+                        compute_dgemm(self.ctx, m, self.node, self.epoch, mp, n2, n1).await;
                     }
                     self.rec(mp, n2).await;
                 }

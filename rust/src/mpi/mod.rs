@@ -17,11 +17,16 @@
 
 pub mod collectives;
 mod inbox;
+pub mod trace;
 
 pub use inbox::Envelope;
+pub use trace::{BcastDesc, Op, RankTrace, Tracer};
 
 use std::cell::RefCell;
+use std::future::Future;
+use std::pin::Pin;
 use std::rc::Rc;
+use std::task::{Context, Poll};
 
 use crate::engine::{JoinHandle, Sim};
 use crate::network::Network;
@@ -29,6 +34,12 @@ use inbox::Inbox;
 
 /// Match-any source marker.
 pub const ANY_SOURCE: Option<usize> = None;
+
+/// Simulated CPU cost of one MPI_Iprobe call (seconds).
+pub const IPROBE_COST: f64 = 1.0e-7;
+
+/// Simulated per-call overhead of send/recv bookkeeping (seconds).
+pub const CALL_OVERHEAD: f64 = 2.5e-7;
 
 /// Aggregate communication counters (per world).
 #[derive(Clone, Copy, Debug, Default)]
@@ -46,6 +57,8 @@ pub struct World {
     rank_node: Vec<usize>,
     inboxes: Vec<RefCell<Inbox>>,
     stats: RefCell<CommStats>,
+    /// Schedule tracer for skeleton capture (normally absent).
+    tracer: RefCell<Option<Rc<Tracer>>>,
     /// Simulated CPU cost of one MPI_Iprobe call.
     pub iprobe_cost: f64,
     /// Simulated per-call overhead of send/recv bookkeeping.
@@ -70,8 +83,9 @@ impl World {
             rank_node,
             inboxes: (0..nranks).map(|_| RefCell::new(Inbox::default())).collect(),
             stats: RefCell::new(CommStats::default()),
-            iprobe_cost: 1.0e-7,
-            call_overhead: 2.5e-7,
+            tracer: RefCell::new(None),
+            iprobe_cost: IPROBE_COST,
+            call_overhead: CALL_OVERHEAD,
         })
     }
 
@@ -85,9 +99,16 @@ impl World {
             rank_node,
             inboxes: (0..nranks).map(|_| RefCell::new(Inbox::default())).collect(),
             stats: RefCell::new(CommStats::default()),
-            iprobe_cost: 1.0e-7,
-            call_overhead: 2.5e-7,
+            tracer: RefCell::new(None),
+            iprobe_cost: IPROBE_COST,
+            call_overhead: CALL_OVERHEAD,
         })
+    }
+
+    /// Attach (or detach) a schedule tracer; affects every `Ctx` of
+    /// this world from the next primitive on.
+    pub fn set_tracer(&self, t: Option<Rc<Tracer>>) {
+        *self.tracer.borrow_mut() = t;
     }
 
     pub fn nranks(&self) -> usize {
@@ -128,12 +149,40 @@ impl Ctx {
     /// Advance this rank's clock by a compute duration.
     pub async fn compute(&self, seconds: f64) {
         if seconds > 0.0 {
+            self.trace_log(|| Op::Aux { seconds });
+            self.world.sim.sleep(seconds).await;
+        }
+    }
+
+    /// Like [`Ctx::compute`], but traced as a dgemm call with its
+    /// shape so skeleton replay can re-draw the duration per point.
+    /// Traced even when the drawn duration is zero: the call site is
+    /// structural, another point's draw may not be.
+    pub async fn compute_dgemm_traced(
+        &self,
+        seconds: f64,
+        node: usize,
+        epoch: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) {
+        self.trace_log(|| Op::Dgemm { node, epoch, m, n, k });
+        if seconds > 0.0 {
             self.world.sim.sleep(seconds).await;
         }
     }
 
     /// Blocking (in simulated time) send.
     pub async fn send(&self, dst: usize, tag: u64, bytes: f64) {
+        self.trace_log(|| Op::Send { dst, tag, bytes });
+        self.send_raw(dst, tag, bytes).await;
+    }
+
+    /// The untraced send machinery. [`Ctx::isend`] bodies run this
+    /// directly: the isend is traced once, synchronously, at the call
+    /// site — never from inside the spawned task.
+    async fn send_raw(&self, dst: usize, tag: u64, bytes: f64) {
         let w = &self.world;
         {
             let mut st = w.stats.borrow_mut();
@@ -146,7 +195,7 @@ impl Ctx {
         let src_node = w.node_of(self.rank);
         let dst_node = w.node_of(dst);
         let class = w.net.class_of(src_node, dst_node);
-        let seg = w.net.model().segment(class, bytes);
+        let seg = w.net.seg(class, bytes);
         let model = w.net.model();
 
         if bytes <= model.async_threshold {
@@ -166,15 +215,23 @@ impl Ctx {
     }
 
     /// Non-blocking send.
-    pub fn isend(&self, dst: usize, tag: u64, bytes: f64) -> JoinHandle<()> {
+    pub fn isend(&self, dst: usize, tag: u64, bytes: f64) -> SendHandle {
+        let traced = self.trace_log(|| Op::Isend { dst, tag, bytes });
+        let trace = if traced {
+            self.world.tracer.borrow().as_ref().map(|t| (t.clone(), self.rank))
+        } else {
+            None
+        };
         let this = self.clone();
-        self.world.sim.spawn_join(async move {
-            this.send(dst, tag, bytes).await;
-        })
+        let inner = self.world.sim.spawn_join(async move {
+            this.send_raw(dst, tag, bytes).await;
+        });
+        SendHandle { inner, trace }
     }
 
     /// Blocking receive. `src = None` matches any source.
     pub async fn recv(&self, src: Option<usize>, tag: u64) -> Envelope {
+        self.trace_log(|| Op::Recv { src, tag });
         let w = &self.world;
         if w.call_overhead > 0.0 {
             w.sim.sleep(w.call_overhead).await;
@@ -196,6 +253,7 @@ impl Ctx {
 
     /// Non-blocking receive.
     pub fn irecv(&self, src: Option<usize>, tag: u64) -> JoinHandle<Envelope> {
+        self.trace_poison_if_unsuppressed();
         let this = self.clone();
         self.world.sim.spawn_join(async move { this.recv(src, tag).await })
     }
@@ -203,6 +261,7 @@ impl Ctx {
     /// Non-blocking probe: true iff a matching envelope has arrived.
     /// Costs `iprobe_cost` simulated seconds (HPL busy-waits on this).
     pub async fn iprobe(&self, src: Option<usize>, tag: u64) -> bool {
+        self.trace_poison_if_unsuppressed();
         let w = &self.world;
         w.stats.borrow_mut().iprobes += 1;
         if w.iprobe_cost > 0.0 {
@@ -213,7 +272,90 @@ impl Ctx {
 
     /// Probe that never consumes time (used internally by collectives).
     pub fn probe_now(&self, src: Option<usize>, tag: u64) -> bool {
+        self.trace_poison_if_unsuppressed();
         self.world.inboxes[self.rank].borrow().probe(src, tag)
+    }
+
+    /// Whether a schedule tracer is attached to this world.
+    pub(crate) fn tracing(&self) -> bool {
+        self.world.tracer.borrow().is_some()
+    }
+
+    /// Log one op to the attached tracer. No-op (returns false) when
+    /// no tracer is attached or this rank is suppressed; the closure
+    /// keeps op construction off the untraced path.
+    pub(crate) fn trace_log(&self, op: impl FnOnce() -> Op) -> bool {
+        match &*self.world.tracer.borrow() {
+            Some(t) => t.log(self.rank, op()),
+            None => false,
+        }
+    }
+
+    /// Register a broadcast descriptor; returns its index in this
+    /// rank's table (0 without a tracer — callers only consume the id
+    /// while tracing).
+    pub(crate) fn trace_desc(&self, desc: BcastDesc) -> usize {
+        match &*self.world.tracer.borrow() {
+            Some(t) => t.add_desc(self.rank, desc),
+            None => 0,
+        }
+    }
+
+    /// Suppress primitive tracing for this rank until the returned
+    /// guard drops (used around broadcast bodies, which the replay VM
+    /// re-enacts from the descriptor instead).
+    pub(crate) fn trace_suppress(&self) -> Option<TraceSuppress> {
+        self.world.tracer.borrow().as_ref().map(|t| {
+            t.suppress(self.rank);
+            TraceSuppress { tracer: t.clone(), rank: self.rank }
+        })
+    }
+
+    /// Primitives the skeleton cannot represent poison the trace
+    /// (unless issued inside a suppressed broadcast body).
+    fn trace_poison_if_unsuppressed(&self) {
+        if let Some(t) = &*self.world.tracer.borrow() {
+            if !t.suppressed(self.rank) {
+                t.poison();
+            }
+        }
+    }
+}
+
+/// RAII guard: undoes one level of per-rank trace suppression.
+pub(crate) struct TraceSuppress {
+    tracer: Rc<Tracer>,
+    rank: usize,
+}
+
+impl Drop for TraceSuppress {
+    fn drop(&mut self) {
+        self.tracer.unsuppress(self.rank);
+    }
+}
+
+/// Handle returned by [`Ctx::isend`]; awaiting it joins the send.
+/// It carries the tracing context so the *join point* is recorded in
+/// the issuing rank's program order (the spawned body is untraced).
+pub struct SendHandle {
+    inner: JoinHandle<()>,
+    trace: Option<(Rc<Tracer>, usize)>,
+}
+
+impl Future for SendHandle {
+    type Output = ();
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        let this = self.get_mut();
+        match Pin::new(&mut this.inner).poll(cx) {
+            Poll::Ready(()) => {
+                if let Some((t, rank)) = this.trace.take() {
+                    t.log(rank, Op::WaitIsend);
+                }
+                Poll::Ready(())
+            }
+            Poll::Pending => Poll::Pending,
+        }
     }
 }
 

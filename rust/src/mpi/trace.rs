@@ -1,0 +1,208 @@
+//! Schedule tracing: the capture side of the skeleton fast path.
+//!
+//! A [`Tracer`] attached to a [`super::World`] records, per rank and in
+//! program order, every simulation-visible primitive the HPL emulation
+//! issues: compute segments (auxiliary kernels with their durations,
+//! dgemm calls with their shapes — durations are re-drawn per point at
+//! replay), point-to-point sends/receives with partners and sizes, and
+//! panel-broadcast *markers*. The op stream is a pure function of
+//! (config, topology): everything timing- or draw-dependent is either
+//! re-derived at replay (dgemm durations) or resolved dynamically by
+//! the replay VM (iprobe outcomes, message matching, contention).
+//!
+//! Panel broadcasts are the one place HPL's control flow depends on
+//! *timing* (which poll's Iprobe sees the panel differs between draws),
+//! so their bodies are not traced literally. Instead `hpl::bcast` emits
+//! a marker per `start`/`poll`/`finish` call — the call *sites* are
+//! structural — plus a [`BcastDesc`] describing the rank's role, and
+//! suppresses the primitives issued inside; the replay VM re-enacts the
+//! broadcast state machine from the descriptor.
+//!
+//! Any unsuppressed primitive the tracer cannot represent (a raw
+//! `iprobe`, `irecv` or `probe_now` outside a broadcast body) *poisons*
+//! the trace: the skeleton is discarded and the point class permanently
+//! falls back to the full engine. The HPL emulation never triggers this
+//! today; the guard is what keeps future driver changes honest.
+
+use std::cell::{Cell, RefCell};
+
+/// One traced primitive of a rank's program-order schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    /// Auxiliary compute (dtrsm/dlatcpy/pivot search...): duration is
+    /// class-invariant, so it is captured literally. Only positive
+    /// durations are traced (zero-duration computes never sleep).
+    Aux { seconds: f64 },
+    /// A dgemm call: the shape is structural, the duration is re-drawn
+    /// per point at replay. Always traced, whatever the pilot's
+    /// duration — another point's draw may differ in zero-ness.
+    Dgemm { node: usize, epoch: usize, m: usize, n: usize, k: usize },
+    /// Blocking send.
+    Send { dst: usize, tag: u64, bytes: f64 },
+    /// Non-blocking send; the handle joins at the matching
+    /// [`Op::WaitIsend`] (unsuppressed isends are awaited in FIFO
+    /// order everywhere in the HPL emulation).
+    Isend { dst: usize, tag: u64, bytes: f64 },
+    /// Await of the oldest outstanding unsuppressed isend.
+    WaitIsend,
+    /// Blocking receive.
+    Recv { src: Option<usize>, tag: u64 },
+    /// Panel-broadcast lifecycle markers; `desc` indexes the rank's
+    /// [`BcastDesc`] table. Emitted on *every* call (even when the
+    /// broadcast already completed): whether a given call does work is
+    /// timing-dependent and re-decided by the replay VM.
+    BcastStart { desc: usize },
+    BcastPoll { desc: usize },
+    BcastFinish { desc: usize },
+}
+
+/// One rank's role in one ring-family panel broadcast, precomputed at
+/// trace time from the broadcast plan (`hpl::bcast::{ring_plan,
+/// root_plan}` resolved to absolute ranks).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BcastDesc {
+    /// Whether this rank is the broadcast root.
+    pub is_root: bool,
+    /// Non-root: the absolute rank the panel arrives from.
+    pub src_abs: usize,
+    /// Non-root: absolute ranks to forward to after receiving.
+    pub fwd_abs: Vec<usize>,
+    /// Root: absolute ranks of the initial sends.
+    pub root_targets_abs: Vec<usize>,
+    pub tag: u64,
+    pub bytes: f64,
+}
+
+/// Per-rank trace state.
+#[derive(Clone, Debug, Default)]
+pub struct RankTrace {
+    /// Program-order op stream.
+    pub ops: Vec<Op>,
+    /// Broadcast descriptors, indexed by the marker ops.
+    pub descs: Vec<BcastDesc>,
+    /// Suppression depth: while > 0, primitives are not logged
+    /// (broadcast bodies — re-enacted from the descriptor instead).
+    suppress: u32,
+}
+
+/// Trace collector for one simulation run (attach via
+/// [`super::World::set_tracer`]).
+pub struct Tracer {
+    ranks: Vec<RefCell<RankTrace>>,
+    poisoned: Cell<bool>,
+}
+
+impl Tracer {
+    pub fn new(nranks: usize) -> Tracer {
+        Tracer {
+            ranks: (0..nranks).map(|_| RefCell::new(RankTrace::default())).collect(),
+            poisoned: Cell::new(false),
+        }
+    }
+
+    /// Log one op unless `rank` is currently suppressed. Returns whether
+    /// the op was recorded.
+    pub fn log(&self, rank: usize, op: Op) -> bool {
+        let mut t = self.ranks[rank].borrow_mut();
+        if t.suppress > 0 {
+            return false;
+        }
+        t.ops.push(op);
+        true
+    }
+
+    /// Register a broadcast descriptor; returns its index in the rank's
+    /// table (what the marker ops carry).
+    pub fn add_desc(&self, rank: usize, desc: BcastDesc) -> usize {
+        let mut t = self.ranks[rank].borrow_mut();
+        t.descs.push(desc);
+        t.descs.len() - 1
+    }
+
+    pub fn suppress(&self, rank: usize) {
+        self.ranks[rank].borrow_mut().suppress += 1;
+    }
+
+    pub fn unsuppress(&self, rank: usize) {
+        let mut t = self.ranks[rank].borrow_mut();
+        debug_assert!(t.suppress > 0);
+        t.suppress = t.suppress.saturating_sub(1);
+    }
+
+    pub fn suppressed(&self, rank: usize) -> bool {
+        self.ranks[rank].borrow().suppress > 0
+    }
+
+    /// Mark the trace unusable (an untraceable primitive was issued).
+    pub fn poison(&self) {
+        self.poisoned.set(true);
+    }
+
+    pub fn poisoned(&self) -> bool {
+        self.poisoned.get()
+    }
+
+    /// Move the captured per-rank traces out (leaves empty traces).
+    pub fn take_ranks(&self) -> Vec<RankTrace> {
+        self.ranks.iter().map(|r| r.take()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logs_in_program_order_per_rank() {
+        let tr = Tracer::new(2);
+        assert!(tr.log(0, Op::Aux { seconds: 1.0 }));
+        assert!(tr.log(1, Op::WaitIsend));
+        assert!(tr.log(0, Op::Recv { src: Some(1), tag: 7 }));
+        let ranks = tr.take_ranks();
+        assert_eq!(
+            ranks[0].ops,
+            vec![Op::Aux { seconds: 1.0 }, Op::Recv { src: Some(1), tag: 7 }]
+        );
+        assert_eq!(ranks[1].ops, vec![Op::WaitIsend]);
+    }
+
+    #[test]
+    fn suppression_is_per_rank_and_nested() {
+        let tr = Tracer::new(2);
+        tr.suppress(0);
+        tr.suppress(0);
+        assert!(!tr.log(0, Op::WaitIsend));
+        assert!(tr.log(1, Op::WaitIsend), "rank 1 unaffected");
+        tr.unsuppress(0);
+        assert!(!tr.log(0, Op::WaitIsend), "still one level deep");
+        tr.unsuppress(0);
+        assert!(tr.log(0, Op::WaitIsend));
+        let ranks = tr.take_ranks();
+        assert_eq!(ranks[0].ops.len(), 1);
+    }
+
+    #[test]
+    fn descs_index_in_registration_order() {
+        let tr = Tracer::new(1);
+        let d = |tag| BcastDesc {
+            is_root: false,
+            src_abs: 0,
+            fwd_abs: vec![],
+            root_targets_abs: vec![],
+            tag,
+            bytes: 8.0,
+        };
+        assert_eq!(tr.add_desc(0, d(1)), 0);
+        assert_eq!(tr.add_desc(0, d(2)), 1);
+        let ranks = tr.take_ranks();
+        assert_eq!(ranks[0].descs[1].tag, 2);
+    }
+
+    #[test]
+    fn poison_latches() {
+        let tr = Tracer::new(1);
+        assert!(!tr.poisoned());
+        tr.poison();
+        assert!(tr.poisoned());
+    }
+}

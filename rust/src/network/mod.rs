@@ -16,7 +16,7 @@ pub mod pwl;
 pub mod sharing;
 pub mod topology;
 
-pub use pwl::{NetClass, NetModel, Segment};
+pub use pwl::{NetClass, NetModel, SegTable, Segment};
 pub use topology::{LinkId, Topology};
 
 use std::cell::RefCell;
@@ -52,16 +52,24 @@ pub struct Network {
     sim: Sim,
     topo: Rc<Topology>,
     model: Rc<NetModel>,
+    /// Flattened segment tables: `segment()` without the per-call
+    /// fallback-chain HashMap probes (hot: twice per message).
+    segs: Rc<SegTable>,
     state: Rc<RefCell<NetState>>,
+    /// Scratch buffers for max-min resharing (separate cell from
+    /// `state` so a reshare can borrow both without conflict).
+    ws: Rc<RefCell<sharing::Workspace>>,
 }
 
 impl Network {
     pub fn new(sim: Sim, topo: Topology, model: NetModel) -> Network {
         let caps = topo.link_capacities().to_vec();
+        let segs = Rc::new(SegTable::new(&model));
         Network {
             sim,
             topo: Rc::new(topo),
             model: Rc::new(model),
+            segs,
             state: Rc::new(RefCell::new(NetState {
                 caps,
                 flows: Vec::new(),
@@ -70,11 +78,19 @@ impl Network {
                 epoch: 0,
                 active: 0,
             })),
+            ws: Rc::new(RefCell::new(sharing::Workspace::default())),
         }
     }
 
     pub fn model(&self) -> &NetModel {
         &self.model
+    }
+
+    /// Protocol segment for a transfer of `bytes` in `class` — the
+    /// flattened fast path (no fallback-chain probes), used by the MPI
+    /// send path which looks a segment up once per message.
+    pub fn seg(&self, class: NetClass, bytes: f64) -> Segment {
+        self.segs.lookup(class, bytes)
     }
 
     pub fn topology(&self) -> &Topology {
@@ -99,7 +115,7 @@ impl Network {
     /// (used by calibration procedures to build piecewise models).
     pub fn unloaded_time(&self, src_node: usize, dst_node: usize, bytes: f64) -> f64 {
         let class = self.class_of(src_node, dst_node);
-        let seg = self.model.segment(class, bytes);
+        let seg = self.segs.lookup(class, bytes);
         let route = self.topo.route(src_node, dst_node);
         let bw = route
             .iter()
@@ -114,7 +130,7 @@ impl Network {
     pub async fn transfer(&self, src_node: usize, dst_node: usize, bytes: f64) {
         debug_assert!(bytes >= 0.0);
         let class = self.class_of(src_node, dst_node);
-        let seg = self.model.segment(class, bytes);
+        let seg = self.segs.lookup(class, bytes);
         if seg.latency > 0.0 {
             self.sim.sleep(seg.latency).await;
         }
@@ -152,7 +168,7 @@ impl Network {
             };
             let _ = id;
             st.active += 1;
-            Self::reshare(&mut st);
+            Self::reshare(&mut st, &mut self.ws.borrow_mut());
         }
         self.schedule_watcher();
         done
@@ -170,19 +186,20 @@ impl Network {
     }
 
     /// Recompute max-min rates; bumps the epoch.
-    fn reshare(st: &mut NetState) {
+    fn reshare(st: &mut NetState, ws: &mut sharing::Workspace) {
         st.epoch += 1;
         let flows: Vec<usize> = (0..st.flows.len())
             .filter(|&i| st.flows[i].is_some())
             .collect();
-        let rates = sharing::max_min_rates(
+        let rates = sharing::max_min_rates_into(
             &st.caps,
             &flows
                 .iter()
                 .map(|&i| st.flows[i].as_ref().unwrap().route.as_slice())
                 .collect::<Vec<_>>(),
+            ws,
         );
-        for (&i, r) in flows.iter().zip(rates) {
+        for (&i, &r) in flows.iter().zip(rates) {
             st.flows[i].as_mut().unwrap().rate = r;
         }
     }
@@ -245,7 +262,7 @@ impl Network {
                 }
             }
             if !finished.is_empty() {
-                Self::reshare(&mut st);
+                Self::reshare(&mut st, &mut self.ws.borrow_mut());
             }
         }
         for s in finished {

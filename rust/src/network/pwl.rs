@@ -186,9 +186,83 @@ impl NetModel {
     }
 }
 
+/// Fallback-resolved segment tables: one flat, non-empty segment list
+/// per class, precomputed once so the per-message hot path
+/// ([`SegTable::lookup`]) is a linear scan with no `BTreeMap` walk and
+/// no allocation. Built from a [`NetModel`] by applying the exact
+/// fallback chain of [`NetModel::segment`] up front; the two lookups
+/// agree bit-for-bit on every (class, size), which
+/// `seg_table_matches_segment_everywhere` pins down.
+#[derive(Clone, Debug)]
+pub struct SegTable {
+    local: Vec<Segment>,
+    remote: Vec<Segment>,
+}
+
+impl SegTable {
+    pub fn new(model: &NetModel) -> SegTable {
+        let resolve = |class: NetClass| -> Vec<Segment> {
+            [class, NetClass::Remote, NetClass::Local]
+                .iter()
+                .find_map(|c| model.classes.get(c).filter(|s| !s.is_empty()))
+                .cloned()
+                .unwrap_or_else(|| {
+                    vec![Segment { max_bytes: f64::INFINITY, latency: 0.0, bw_factor: 1.0 }]
+                })
+        };
+        SegTable { local: resolve(NetClass::Local), remote: resolve(NetClass::Remote) }
+    }
+
+    /// Allocation-free equivalent of [`NetModel::segment`].
+    pub fn lookup(&self, class: NetClass, bytes: f64) -> Segment {
+        let segs = match class {
+            NetClass::Local => &self.local,
+            NetClass::Remote => &self.remote,
+        };
+        for s in segs {
+            if bytes <= s.max_bytes {
+                return *s;
+            }
+        }
+        *segs.last().expect("SegTable classes are never empty")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn seg_table_matches_segment_everywhere() {
+        let full = NetModel::from_segments(
+            vec![Segment { max_bytes: 4096.0, latency: 1e-7, bw_factor: 1.0 },
+                 Segment { max_bytes: f64::INFINITY, latency: 3e-7, bw_factor: 0.7 }],
+            vec![
+                Segment { max_bytes: 1e3, latency: 1e-6, bw_factor: 0.5 },
+                Segment { max_bytes: 1e6, latency: 2e-6, bw_factor: 0.9 },
+                Segment { max_bytes: f64::INFINITY, latency: 4e-6, bw_factor: 1.0 },
+            ],
+            64.0,
+            65536.0,
+        );
+        // A degenerate hand-built model exercises the fallback chain.
+        let mut degenerate = full.clone();
+        degenerate.classes.insert(NetClass::Local, Vec::new());
+        let empty =
+            NetModel { classes: BTreeMap::new(), async_threshold: 0.0, rendezvous_threshold: 0.0 };
+        for m in [&full, &degenerate, &empty] {
+            let t = SegTable::new(m);
+            for class in [NetClass::Local, NetClass::Remote] {
+                for bytes in [0.0, 1.0, 1e3, 1e3 + 1.0, 4096.0, 5e5, 1e6, 1e9] {
+                    let a = m.segment(class, bytes);
+                    let b = t.lookup(class, bytes);
+                    assert_eq!(a.max_bytes, b.max_bytes);
+                    assert_eq!(a.latency, b.latency);
+                    assert_eq!(a.bw_factor, b.bw_factor);
+                }
+            }
+        }
+    }
 
     #[test]
     fn segment_lookup_picks_first_match() {

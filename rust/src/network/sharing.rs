@@ -7,18 +7,52 @@
 
 use super::topology::LinkId;
 
+/// Reusable buffers for [`max_min_rates_into`]: the residual-capacity
+/// vector is O(links) (about a thousand entries on the paper's
+/// fat-trees), and resharing runs on every flow arrival/departure — a
+/// workspace held by the network turns those per-reshare allocations
+/// into `clear()`s.
+#[derive(Default)]
+pub struct Workspace {
+    residual: Vec<f64>,
+    unfixed: Vec<usize>,
+    fixed: Vec<bool>,
+    out: Vec<f64>,
+}
+
 /// Compute max-min fair rates. `routes[i]` lists the links of flow `i`.
 /// Returns one rate per flow (bytes/s).
 pub fn max_min_rates(caps: &[f64], routes: &[&[LinkId]]) -> Vec<f64> {
+    let mut ws = Workspace::default();
+    max_min_rates_into(caps, routes, &mut ws);
+    ws.out
+}
+
+/// Allocation-reusing form of [`max_min_rates`]: identical algorithm
+/// and arithmetic, with every scratch vector drawn from `ws`. The
+/// result lives in the returned slice (valid until the next call).
+pub fn max_min_rates_into<'w>(
+    caps: &[f64],
+    routes: &[&[LinkId]],
+    ws: &'w mut Workspace,
+) -> &'w [f64] {
     let nf = routes.len();
     let nl = caps.len();
-    let mut rate = vec![0.0f64; nf];
+    let rate = &mut ws.out;
+    rate.clear();
+    rate.resize(nf, 0.0);
     if nf == 0 {
         return rate;
     }
-    let mut residual = caps.to_vec();
-    let mut unfixed_per_link = vec![0usize; nl];
-    let mut fixed = vec![false; nf];
+    let residual = &mut ws.residual;
+    residual.clear();
+    residual.extend_from_slice(caps);
+    let unfixed_per_link = &mut ws.unfixed;
+    unfixed_per_link.clear();
+    unfixed_per_link.resize(nl, 0);
+    let fixed = &mut ws.fixed;
+    fixed.clear();
+    fixed.resize(nf, false);
     for r in routes {
         for &l in *r {
             unfixed_per_link[l as usize] += 1;
@@ -42,9 +76,9 @@ pub fn max_min_rates(caps: &[f64], routes: &[&[LinkId]]) -> Vec<f64> {
             // Remaining flows cross no links at all: unconstrained. Give
             // them an effectively infinite rate (placeholder; routes are
             // never empty in practice).
-            for i in 0..nf {
+            for (i, r) in rate.iter_mut().enumerate() {
                 if !fixed[i] {
-                    rate[i] = f64::INFINITY;
+                    *r = f64::INFINITY;
                 }
             }
             break;

@@ -211,7 +211,7 @@ fn queue_lease_expiry_reclaims_dead_workers_task() {
 
     // Build the queue directly (what FileQueue::prepare does), with a
     // short lease so expiry is immediate in test time.
-    queue::init_queue(&qdir, &points, 4, 2.0, None).unwrap();
+    queue::init_queue(&qdir, &points, 4, 2.0, None, true).unwrap();
 
     // Simulate a worker that claimed task-0000 and died: the lease
     // exists but its heartbeat stopped an hour ago.
@@ -316,6 +316,109 @@ fn cached_campaigns_skip_the_substrate() {
     let _ = std::fs::remove_dir_all(&base);
 }
 
+/// The schedule-skeleton fast path is invisible in the output: the same
+/// campaign with skeletons on (the default) and off (`--no-skeleton`)
+/// yields byte-identical campaign.csv through the in-process pool, the
+/// subprocess shards and the file queue. The skeleton-on runs of the
+/// other tests in this file cover the on/on cross-backend contract;
+/// this one pins on-vs-off per backend.
+#[test]
+fn skeleton_on_and_off_reports_are_byte_identical_on_every_backend() {
+    let base = fresh_dir("skelab");
+    let points = campaign(12, 57);
+
+    let off = Campaign::new(&points)
+        .threads(2)
+        .skeleton(false)
+        .run(&InProcess::new())
+        .expect("engine reference");
+    assert_eq!(off.computed, 12);
+    let want = csv(&points, &off.results);
+
+    let on = Campaign::new(&points).threads(2).run(&InProcess::new()).unwrap();
+    assert_eq!(csv(&points, &on.results), want, "in-process skeleton diverged");
+
+    // Subprocess children inherit the coordinator's choice: skeleton-on
+    // children (the default) and --no-skeleton children both match.
+    for (tag, skeleton) in [("on", true), ("off", false)] {
+        let mut sp = Subprocess::new(2, base.join(format!("sp-{tag}")));
+        sp.exe = Some(hplsim_exe());
+        sp.child_threads = 2;
+        let rep = Campaign::new(&points)
+            .threads(2)
+            .skeleton(skeleton)
+            .cache(Some(base.join(format!("sp-cache-{tag}"))))
+            .run(&sp)
+            .expect("subprocess backend");
+        assert_eq!(rep.computed, 12);
+        assert_eq!(
+            csv(&points, &rep.results),
+            want,
+            "subprocess report diverged (skeleton {tag})"
+        );
+    }
+
+    // FileQueue with skeleton recorded off in queue.json (the on case
+    // is the default of the main equivalence test above).
+    let mut fq = FileQueue::new(base.join("queue-off"), 3, 2);
+    fq.exe = Some(hplsim_exe());
+    fq.timeout_secs = 240.0;
+    let rep = Campaign::new(&points)
+        .threads(2)
+        .skeleton(false)
+        .run(&fq)
+        .expect("queue backend");
+    assert_eq!(rep.computed, 12);
+    assert_eq!(csv(&points, &rep.results), want, "queue report diverged (skeleton off)");
+
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// A single-structure-class campaign compiles its schedule exactly
+/// once: the pilot traces, the next [`VALIDATE_POINTS`] points dual-run
+/// against the engine, and everything else replays — no fallbacks.
+#[test]
+fn schedule_memo_compiles_once_per_structure_class() {
+    use hplsim::coordinator::backend::skeleton::VALIDATE_POINTS;
+    use hplsim::coordinator::backend::ScheduleMemo;
+
+    let dgemm = DgemmModel {
+        nodes: (0..4)
+            .map(|i| NodeCoef {
+                mu: [1e-11 * (1.0 + 0.02 * i as f64), 0.0, 0.0, 0.0, 5e-7],
+                sigma: [3e-13, 0.0, 0.0, 0.0, 0.0],
+            })
+            .collect(),
+    };
+    let topo = Topology::star(4, 12.5e9, 40e9);
+    let net = NetModel::ideal();
+    let cfg = HplConfig {
+        n: 192,
+        nb: 32,
+        p: 2,
+        q: 2,
+        depth: 1,
+        bcast: Bcast::ALL[1],
+        swap: SwapAlg::ALL[0],
+        swap_threshold: 64,
+        rfact: Rfact::ALL[0],
+        nbmin: 8,
+    };
+    let total = 8u64;
+    let memo = ScheduleMemo::new();
+    for i in 0..total {
+        memo.evaluate(&cfg, &topo, &net, &dgemm, 2, point_seed(91, i));
+    }
+    assert_eq!(memo.compiles(), 1, "one structure class, one compilation");
+    assert_eq!(memo.checks(), VALIDATE_POINTS as usize);
+    assert_eq!(
+        memo.replays(),
+        (total - 1) as usize - VALIDATE_POINTS as usize,
+        "everything after pilot + validation replays through the skeleton"
+    );
+    assert_eq!(memo.fallbacks(), 0);
+}
+
 /// `$HPLSIM_THREADS` pins campaign parallelism when no --threads flag
 /// is given (how CI steps and queue workers control parallelism).
 /// Asserted on a real child process — the variable is set on the
@@ -380,6 +483,8 @@ fn cli_backends_emit_identical_campaign_csv() {
     };
 
     let want = run(&[], &base.join("out-inproc"));
+    let ns = run(&["--no-skeleton"], &base.join("out-noskel"));
+    assert_eq!(ns, want, "--no-skeleton campaign.csv diverged");
     let sp = run(&["--backend", "subprocess", "--shards", "2"], &base.join("out-sp"));
     assert_eq!(sp, want, "subprocess campaign.csv diverged");
     let q = run(
