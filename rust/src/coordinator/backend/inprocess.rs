@@ -20,8 +20,8 @@ use crate::runtime::Artifacts;
 use super::artifact::{self, ArtifactMode};
 use super::cache::{store_fp, EVAL_DIRECT};
 use super::memo::MaterializeMemo;
-use super::point::Platform;
-use super::skeleton::ScheduleMemo;
+use super::point::{fnv1a_str, Platform, SimPoint};
+use super::skeleton::{ReplayArena, ScheduleMemo};
 use super::{Campaign, ExecBackend, ExecError, ProgressEvent, WorkPlan};
 
 /// Evaluate one point: through the campaign's [`ScheduleMemo`] when the
@@ -92,6 +92,36 @@ impl<'c, 'a> Progress<'c, 'a> {
     }
 }
 
+/// Group consecutive `todo` indices into replay waves: a run of points
+/// that share everything but the seed (configuration, rank placement,
+/// and a byte-identical platform payload) collapses into chunks of at
+/// most `wave` points, which one worker evaluates through a single
+/// [`ScheduleMemo::evaluate_wave`] pass over its persistent
+/// [`ReplayArena`]. Seed-sensitive scenarios realize a *different*
+/// platform per point, so they never share a wave; with `wave <= 1`
+/// every point is its own chunk (the per-point PR-7 path).
+fn plan_waves(points: &[SimPoint], todo: &[usize], wave: usize) -> Vec<Vec<usize>> {
+    let mut chunks: Vec<Vec<usize>> = Vec::new();
+    let mut last_key: Option<u64> = None;
+    for &idx in todo {
+        let p = &points[idx];
+        // The key covers every replay input except the seed: the full
+        // HPL configuration, ranks-per-node, and the canonical platform
+        // encoding (the same JSON the fingerprint hashes).
+        let key = (wave > 1 && !p.platform.seed_sensitive()).then(|| {
+            fnv1a_str(&format!("{:?}|{}|{}", p.cfg, p.rpn, p.platform.to_json()))
+        });
+        match (key, last_key, chunks.last_mut()) {
+            (Some(k), Some(prev), Some(chunk)) if k == prev && chunk.len() < wave => {
+                chunk.push(idx);
+            }
+            _ => chunks.push(vec![idx]),
+        }
+        last_key = key;
+    }
+    chunks
+}
+
 /// Pop the next point index: own deque front first, then steal from the
 /// back of the busiest-looking victim (round-robin scan).
 fn next_task(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
@@ -119,11 +149,21 @@ fn next_task(deques: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
 pub struct InProcess {
     finished: Mutex<Vec<(usize, HplResult)>>,
     artifacts: Option<ArtifactMode>,
+    stage_seconds: Mutex<[f64; 4]>,
 }
 
 impl InProcess {
     pub fn new() -> InProcess {
         InProcess::default()
+    }
+
+    /// Per-stage skeleton CPU-seconds of the last `execute` —
+    /// `[compile, draw-gen, replay, validate]`, summed across workers
+    /// (see [`ScheduleMemo::stage_seconds`]). All zeros when the
+    /// campaign ran with skeletons off. Feeds the `--bench-json` v3
+    /// per-stage breakdown.
+    pub fn stage_seconds(&self) -> [f64; 4] {
+        *self.stage_seconds.lock().unwrap()
     }
 
     /// Batched-artifact mode: execute through record → batch → replay
@@ -134,6 +174,7 @@ impl InProcess {
         InProcess {
             finished: Mutex::default(),
             artifacts: Some(ArtifactMode { arts, batch_points }),
+            stage_seconds: Mutex::default(),
         }
     }
 }
@@ -163,11 +204,17 @@ impl ExecBackend for InProcess {
             return Ok(());
         }
         let points = campaign.points();
-        let workers = plan.threads.min(todo.len()).max(1);
+        // Lane-batch the work: consecutive same-structure points become
+        // wave chunks a worker replays in one arena pass. With
+        // skeletons off (or `--wave-size 1`) every chunk is one point
+        // and this is exactly the original per-point pool.
+        let wave = if campaign.skeleton_enabled() { campaign.wave_size() } else { 1 };
+        let chunks = plan_waves(points, todo, wave);
+        let workers = plan.threads.min(chunks.len()).max(1);
         let deques: Vec<Mutex<VecDeque<usize>>> =
             (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
-        for (i, &idx) in todo.iter().enumerate() {
-            deques[i % workers].lock().unwrap().push_back(idx);
+        for (i, _) in chunks.iter().enumerate() {
+            deques[i % workers].lock().unwrap().push_back(i);
         }
 
         let progress = Progress::new(campaign, todo.len());
@@ -178,13 +225,63 @@ impl ExecBackend for InProcess {
 
         std::thread::scope(|s| {
             let deques = &deques;
+            let chunks = &chunks;
             let progress = &progress;
             let memo = &memo;
             let sched = &sched;
             let fps = &plan.fps;
             for me in 0..workers {
                 s.spawn(move || {
-                    while let Some(idx) = next_task(deques, me) {
+                    // Worker-persistent replay state: one arena whose
+                    // buffers every wave (and every lane within a wave)
+                    // reuses, plus scratch vectors for the wave inputs
+                    // and outputs.
+                    let mut arena = ReplayArena::new();
+                    let mut seeds: Vec<u64> = Vec::new();
+                    let mut wave_out: Vec<HplResult> = Vec::new();
+                    while let Some(ci) = next_task(deques, me) {
+                        let chunk = &chunks[ci];
+                        if chunk.len() > 1 {
+                            // Wave chunk: all points share one platform
+                            // and configuration — realize once, replay
+                            // every seed through one executor pass.
+                            let m = sched
+                                .as_ref()
+                                .expect("waves are only planned with skeletons on");
+                            let p0 = &points[chunk[0]];
+                            seeds.clear();
+                            seeds.extend(chunk.iter().map(|&i| points[i].seed));
+                            wave_out.clear();
+                            match &p0.platform {
+                                Platform::Explicit { topo, net, dgemm } => m
+                                    .evaluate_wave(
+                                        &p0.cfg, topo, net, dgemm, p0.rpn, &seeds,
+                                        &mut arena, &mut wave_out,
+                                    ),
+                                Platform::Scenario(_) => {
+                                    let plat = memo
+                                        .realize(p0)
+                                        .expect("validated before dispatch");
+                                    let (topo, net, dgemm) = &*plat;
+                                    m.evaluate_wave(
+                                        &p0.cfg, topo, net, dgemm, p0.rpn, &seeds,
+                                        &mut arena, &mut wave_out,
+                                    );
+                                }
+                            }
+                            for (&idx, r) in chunk.iter().zip(wave_out.drain(..)) {
+                                if let Some(dir) = cache_dir {
+                                    store_fp(
+                                        dir, &points[idx].label, fps[idx], &r,
+                                        EVAL_DIRECT,
+                                    );
+                                }
+                                finished.lock().unwrap().push((idx, r));
+                                progress.tick();
+                            }
+                            continue;
+                        }
+                        let idx = chunk[0];
                         let p = &points[idx];
                         // Scenario payloads materialize here, in the
                         // worker, from the point's own data — validated
@@ -228,6 +325,9 @@ impl ExecBackend for InProcess {
                 });
             }
         });
+        if let Some(m) = &sched {
+            *self.stage_seconds.lock().unwrap() = m.stage_seconds();
+        }
         Ok(())
     }
 

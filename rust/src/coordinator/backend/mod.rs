@@ -60,7 +60,10 @@ pub use point::{
     point_seed, Platform, PointError, RealizedPlatform, SimPoint, MODEL_VERSION,
 };
 pub use queue::{run_worker, FileQueue, WorkerOptions, WorkerSummary};
-pub use skeleton::{structure_key, ScheduleMemo, Skeleton, SKELETON_VERSION};
+pub use skeleton::{
+    replay, replay_wave, results_identical, structure_key, ReplayArena, ScheduleMemo,
+    Skeleton, SKELETON_VERSION,
+};
 pub use subprocess::Subprocess;
 
 /// Options of a campaign run (the original `run_campaign` surface; the
@@ -79,7 +82,16 @@ pub struct SweepOptions {
     /// default (`false`) leaves skeletons on, matching
     /// [`Campaign::new`].
     pub no_skeleton: bool,
+    /// Replay wave size (`--wave-size`); 0 = [`DEFAULT_WAVE`]. 1
+    /// degenerates to per-point replay (the PR-7 behavior).
+    pub wave: usize,
 }
+
+/// Default replay wave size: how many same-structure points one
+/// [`replay_wave`] pass batches through a worker's [`ReplayArena`].
+/// Large enough to amortize draw generation and arena warm-up, small
+/// enough that work stealing still balances short campaigns.
+pub const DEFAULT_WAVE: usize = 32;
 
 /// Outcome of a campaign: per-point results in point order plus
 /// execution accounting.
@@ -263,6 +275,7 @@ pub struct Campaign<'a> {
     cache_dir: Option<PathBuf>,
     progress: Option<Box<dyn Fn(&ProgressEvent<'_>) + Sync + 'a>>,
     skeleton: bool,
+    wave: usize,
 }
 
 impl<'a> Campaign<'a> {
@@ -273,6 +286,7 @@ impl<'a> Campaign<'a> {
             cache_dir: None,
             progress: None,
             skeleton: true,
+            wave: 0,
         }
     }
 
@@ -302,6 +316,22 @@ impl<'a> Campaign<'a> {
     /// Whether the schedule-skeleton fast path is enabled.
     pub fn skeleton_enabled(&self) -> bool {
         self.skeleton
+    }
+
+    /// Replay wave size: how many consecutive same-structure points a
+    /// worker batches through one [`replay_wave`] pass (0 = default).
+    /// `1` degenerates to per-point replay; results are byte-identical
+    /// at every setting, so this is purely a throughput knob
+    /// (`--wave-size` on the CLI).
+    pub fn wave(mut self, wave: usize) -> Self {
+        self.wave = wave;
+        self
+    }
+
+    /// The resolved replay wave size (an unset or zero request yields
+    /// [`DEFAULT_WAVE`]).
+    pub fn wave_size(&self) -> usize {
+        if self.wave == 0 { DEFAULT_WAVE } else { self.wave }
     }
 
     /// Install a progress callback. Without one the campaign is silent —

@@ -105,6 +105,9 @@ struct QueueMeta {
     /// this key existed (key absent) defaults to `true` — stale readers
     /// and writers can mix freely without splitting the campaign.
     skeleton: bool,
+    /// Replay wave size for skeleton-enabled workers (another pure
+    /// throughput knob; 0 or an absent key = the worker's default).
+    wave: u64,
 }
 
 fn read_meta(dir: &Path) -> Result<QueueMeta, String> {
@@ -147,7 +150,8 @@ fn read_meta(dir: &Path) -> Result<QueueMeta, String> {
         None
     };
     let skeleton = v.get("skeleton").and_then(Json::as_bool).unwrap_or(true);
-    Ok(QueueMeta { tasks, lease_secs, artifact_batch, skeleton })
+    let wave = v.get("wave").and_then(Json::as_u64).unwrap_or(0);
+    Ok(QueueMeta { tasks, lease_secs, artifact_batch, skeleton, wave })
 }
 
 /// Names currently present in one of the marker directories.
@@ -198,6 +202,7 @@ pub fn init_queue(
     lease_secs: f64,
     artifact_batch: Option<u64>,
     skeleton: bool,
+    wave: u64,
 ) -> Result<(), String> {
     if tasks == 0 {
         return Err("queue needs tasks >= 1".into());
@@ -240,6 +245,7 @@ pub fn init_queue(
         // existing formats: a stale worker that ignores it still
         // produces byte-identical results, just slower or faster.
         ("skeleton", Json::Bool(skeleton)),
+        ("wave", Json::Num(wave as f64)),
     ]);
     let tmp = dir.join(format!("queue.json.tmp.{}", std::process::id()));
     std::fs::write(&tmp, meta.to_string())
@@ -545,6 +551,7 @@ fn execute_task(
         .threads(threads)
         .cache(Some(cache.to_path_buf()))
         .skeleton(meta.skeleton)
+        .wave(meta.wave as usize)
         .run(&backend);
 
     stop.store(true, Ordering::Relaxed);
@@ -705,6 +712,7 @@ impl ExecBackend for FileQueue {
             self.lease_secs,
             self.artifact_batch.map(|b| b as u64),
             campaign.skeleton_enabled(),
+            campaign.wave_size() as u64,
         )
         .map_err(|e| ExecError::backend("queue", e))
     }

@@ -35,14 +35,32 @@
 //! message matching, Iprobe outcomes and link contention are resolved
 //! dynamically, which is why a skeleton stays valid across draws that
 //! reorder message arrivals.
+//!
+//! ## Lane-batched replay
+//!
+//! Replay itself is allocation-free in the steady state: every VM
+//! buffer (timer heap, wake queue, task records, signals, envelopes,
+//! inboxes, rank state, flow table, sharing workspace) lives in a
+//! per-worker [`ReplayArena`] that is cleared — never reallocated —
+//! between points. [`replay_wave`] runs K same-class points ("lanes")
+//! through one executor pass: the op-IR is decoded once, the
+//! per-(rank, epoch) variability draws of *all* lanes are generated
+//! up front in structure-of-arrays form (site μ/σ computed once per
+//! wave, the per-epoch normal draw once per change), and each lane
+//! then replays against a flat duration array instead of re-deriving
+//! its RNG per dgemm call. [`replay`] keeps the original per-point
+//! contract (fresh arena, per-call draws) — it is the baseline the
+//! wave path's `replay_wave_speedup` benchmark is measured against.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-use crate::blas::{DgemmModel, DgemmSource, DirectSource};
+use crate::blas::provider::epoch_z;
+use crate::blas::{DgemmModel, DirectSource};
 use crate::hpl::driver::run_once_traced;
 use crate::hpl::{simulate_direct, HplConfig, HplResult};
 use crate::mpi::{CommStats, Op, RankTrace, Tracer, CALL_OVERHEAD, IPROBE_COST};
@@ -98,9 +116,71 @@ pub fn structure_key(
 #[derive(Clone, Debug)]
 pub struct Skeleton {
     pub(crate) ranks: Vec<RankTrace>,
+    /// rank → node, hoisted at compile time (placement is structural).
+    rank_node: Vec<usize>,
+    /// Every dgemm call site, rank-major in program order — the batched
+    /// draw generator walks this instead of re-decoding the op stream.
+    sites: Vec<DgemmSite>,
+    /// Per-rank offsets into `sites` (`len == nranks + 1`).
+    site_off: Vec<usize>,
+}
+
+/// One dgemm call site of the compiled schedule (shape + placement;
+/// the duration is what varies per point).
+#[derive(Clone, Copy, Debug)]
+struct DgemmSite {
+    node: usize,
+    epoch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
 }
 
 impl Skeleton {
+    /// Freeze a traced schedule, hoisting everything structural the
+    /// replay VM would otherwise rebuild per point.
+    pub(crate) fn new(ranks: Vec<RankTrace>, ranks_per_node: usize) -> Skeleton {
+        let rank_node = (0..ranks.len()).map(|r| r / ranks_per_node).collect();
+        let mut sites = Vec::new();
+        let mut site_off = Vec::with_capacity(ranks.len() + 1);
+        site_off.push(0);
+        for rt in &ranks {
+            for op in &rt.ops {
+                if let Op::Dgemm { node, epoch, m, n, k } = *op {
+                    sites.push(DgemmSite { node, epoch, m, n, k });
+                }
+            }
+            site_off.push(sites.len());
+        }
+        Skeleton { ranks, rank_node, sites, site_off }
+    }
+
+    /// Trace one engine run into a skeleton. Returns `None` if the
+    /// trace was poisoned (a primitive the VM cannot represent); the
+    /// engine result is returned either way by the caller's own run.
+    pub fn compile(
+        cfg: &HplConfig,
+        topo: &Topology,
+        net: &NetModel,
+        dgemm: &DgemmModel,
+        ranks_per_node: usize,
+        seed: u64,
+    ) -> (Option<Skeleton>, HplResult) {
+        let tracer = Rc::new(Tracer::new(cfg.nranks()));
+        let source = DirectSource::new(dgemm.clone(), cfg.nranks(), seed);
+        let res = run_once_traced(
+            cfg,
+            topo.clone(),
+            net.clone(),
+            source,
+            ranks_per_node,
+            Some(tracer.clone()),
+        );
+        let skel = (!tracer.poisoned())
+            .then(|| Skeleton::new(tracer.take_ranks(), ranks_per_node));
+        (skel, res)
+    }
+
     pub fn nranks(&self) -> usize {
         self.ranks.len()
     }
@@ -108,6 +188,11 @@ impl Skeleton {
     /// Total ops across all ranks (diagnostics).
     pub fn ops(&self) -> usize {
         self.ranks.iter().map(|r| r.ops.len()).sum()
+    }
+
+    /// Total dgemm call sites (diagnostics).
+    pub fn dgemm_sites(&self) -> usize {
+        self.sites.len()
     }
 }
 
@@ -184,7 +269,10 @@ impl Ord for VmTimer {
 }
 
 /// One replay task: a stack of frames (innermost await on top), the
-/// VM's moral equivalent of a boxed future.
+/// VM's moral equivalent of a boxed future. Records are recycled
+/// through the arena's spare pool so frame/waiter capacity survives
+/// across points.
+#[derive(Default)]
 struct VmTask {
     frames: Vec<Frame>,
     done: bool,
@@ -229,6 +317,7 @@ struct VmMachine {
     handles: Vec<TaskId>,
 }
 
+#[derive(Default)]
 struct RankState {
     /// Outstanding unsuppressed isends, FIFO (`WaitIsend` pops front).
     isends: VecDeque<TaskId>,
@@ -245,6 +334,9 @@ struct VmNet {
     epoch: u64,
     active: usize,
     ws: sharing::Workspace,
+    /// Incrementally maintained per-link flow counts (mirror of
+    /// `NetState::load`): a flow add/remove touches only its route.
+    load: sharing::LinkLoad,
 }
 
 struct VmFlow {
@@ -341,28 +433,83 @@ enum Step {
     Replace(Frame),
 }
 
+/// Where a lane's dgemm durations come from.
+#[derive(Clone, Copy)]
+enum Draws<'a> {
+    /// Per-call arithmetic identical to `DirectSource::next` with the
+    /// model *borrowed* — no per-point `dgemm.clone()`.
+    Direct { model: &'a DgemmModel, seed: u64 },
+    /// Batched wave draws: a flat per-lane duration array indexed by
+    /// the skeleton's site table (consumed via per-rank cursors).
+    Batched { durs: &'a [f64] },
+}
+
+/// Every buffer a replay VM mutates, owned across points by one worker
+/// and cleared — never reallocated — between them. A fresh arena costs
+/// nothing beyond empty containers; a warmed one makes replay
+/// allocation-free in the steady state (asserted by
+/// `tests/replay_wave.rs` with a counting allocator).
+#[derive(Default)]
+pub struct ReplayArena {
+    segs: SegTable,
+    timers: BinaryHeap<Reverse<VmTimer>>,
+    queue: VecDeque<TaskId>,
+    tasks: Vec<VmTask>,
+    task_spares: Vec<VmTask>,
+    signals: Vec<VmSignal>,
+    envs: Vec<VmEnv>,
+    inboxes: Vec<VmInbox>,
+    rstate: Vec<RankState>,
+    net_caps: Vec<f64>,
+    net_flows: Vec<Option<VmFlow>>,
+    net_free: Vec<usize>,
+    net_ws: sharing::Workspace,
+    net_load: sharing::LinkLoad,
+    route_spares: Vec<Vec<LinkId>>,
+    finished: Vec<SigId>,
+    dgemm_cursor: Vec<usize>,
+    // Wave draw-generation buffers (structure-of-arrays).
+    site_mu: Vec<f64>,
+    site_sigma: Vec<f64>,
+    durs: Vec<f64>,
+    /// Nanoseconds spent generating batched draws (bench stage).
+    drawgen_ns: u64,
+}
+
+impl ReplayArena {
+    pub fn new() -> ReplayArena {
+        ReplayArena::default()
+    }
+}
+
 struct Vm<'a> {
     skel: &'a Skeleton,
     topo: &'a Topology,
-    source: Rc<dyn DgemmSource>,
+    draws: Draws<'a>,
     segs: SegTable,
     async_threshold: f64,
     rendezvous_threshold: f64,
-    rank_node: Vec<usize>,
 
     now: f64,
     seq: u64,
     timers: BinaryHeap<Reverse<VmTimer>>,
     queue: VecDeque<TaskId>,
     tasks: Vec<VmTask>,
+    task_spares: Vec<VmTask>,
     live: usize,
     events: u64,
 
     signals: Vec<VmSignal>,
+    /// Signals handed out so far; entries past this index are stale
+    /// capacity from a previous point, reset lazily by `new_signal`.
+    nsignals: usize,
     envs: Vec<VmEnv>,
     inboxes: Vec<VmInbox>,
     rstate: Vec<RankState>,
     net: VmNet,
+    route_spares: Vec<Vec<LinkId>>,
+    finished: Vec<SigId>,
+    dgemm_cursor: Vec<usize>,
     stats: CommStats,
 }
 
@@ -370,6 +517,13 @@ struct Vm<'a> {
 /// `simulate_direct` would for the same `(cfg, topo, net, dgemm,
 /// ranks_per_node, seed)` — or an error if the skeleton and the VM's
 /// engine model diverge (callers fall back to the engine).
+///
+/// This is the per-point path: a fresh arena per call, draws computed
+/// call by call — deliberately kept as the PR-7 baseline the wave
+/// path's speedup is measured against. `ranks_per_node` must match the
+/// placement the skeleton was compiled with (it now lives *in* the
+/// skeleton; the parameter is kept for callers' symmetry with
+/// `simulate_direct` and checked in debug builds).
 pub fn replay(
     skel: &Skeleton,
     cfg: &HplConfig,
@@ -379,64 +533,232 @@ pub fn replay(
     ranks_per_node: usize,
     seed: u64,
 ) -> Result<HplResult, VmError> {
+    debug_assert!(
+        skel.rank_node.iter().enumerate().all(|(r, &n)| n == r / ranks_per_node),
+        "skeleton compiled for a different placement"
+    );
+    let mut arena = ReplayArena::new();
+    replay_with(skel, cfg, topo, net, Draws::Direct { model: dgemm, seed }, &mut arena)
+}
+
+/// Replay a wave of K same-class lanes (seeds) through one executor
+/// pass: draws for *all* lanes are generated up front (site μ/σ once
+/// per wave, the per-(rank, epoch) normal draw once per epoch change),
+/// then each lane replays against its flat duration slice reusing the
+/// arena's buffers. Results are pushed onto `out` in lane order and
+/// are bit-identical to K sequential [`replay`] calls.
+///
+/// On error, `out` holds the results of the lanes completed before the
+/// failure; the caller falls back to the engine for the rest.
+pub fn replay_wave(
+    skel: &Skeleton,
+    cfg: &HplConfig,
+    topo: &Topology,
+    net: &NetModel,
+    dgemm: &DgemmModel,
+    seeds: &[u64],
+    arena: &mut ReplayArena,
+    out: &mut Vec<HplResult>,
+) -> Result<(), VmError> {
     let nranks = cfg.nranks();
     if skel.ranks.len() != nranks {
         return Err(VmError::RankMismatch { skeleton: skel.ranks.len(), config: nranks });
     }
-    let mut vm = Vm {
-        skel,
-        topo,
-        source: DirectSource::new(dgemm.clone(), nranks, seed),
-        segs: SegTable::new(net),
-        async_threshold: net.async_threshold,
-        rendezvous_threshold: net.rendezvous_threshold,
-        rank_node: (0..nranks).map(|r| r / ranks_per_node).collect(),
-        now: 0.0,
-        seq: 0,
-        timers: BinaryHeap::new(),
-        queue: VecDeque::new(),
-        tasks: Vec::new(),
-        live: 0,
-        events: 0,
-        signals: Vec::new(),
-        envs: Vec::new(),
-        inboxes: (0..nranks).map(|_| VmInbox::default()).collect(),
-        rstate: skel
-            .ranks
-            .iter()
-            .map(|rt| RankState {
-                isends: VecDeque::new(),
-                machines: vec![VmMachine::default(); rt.descs.len()],
-            })
-            .collect(),
-        net: VmNet {
-            caps: topo.link_capacities().to_vec(),
-            flows: Vec::new(),
-            free: Vec::new(),
-            last: 0.0,
-            epoch: 0,
-            active: 0,
-            ws: sharing::Workspace::default(),
-        },
-        stats: CommStats::default(),
-    };
+    let t0 = Instant::now();
+    let nsites = skel.sites.len();
+    arena.site_mu.clear();
+    arena.site_sigma.clear();
+    arena.site_mu.reserve(nsites);
+    arena.site_sigma.reserve(nsites);
+    for s in &skel.sites {
+        let c = dgemm.coef(s.node);
+        let (mf, nf, kf) = (s.m as f64, s.n as f64, s.k as f64);
+        arena.site_mu.push(c.mu_of(mf, nf, kf));
+        arena.site_sigma.push(c.sigma_of(mf, nf, kf));
+    }
+    arena.durs.clear();
+    arena.durs.reserve(nsites * seeds.len());
+    for &seed in seeds {
+        for r in 0..nranks {
+            // The draw is episodic — one per (rank, epoch) — so it is
+            // derived once per epoch *change* along the program order;
+            // `epoch_z` is pure, so this equals the per-call path bit
+            // for bit.
+            let mut last_epoch = usize::MAX;
+            let mut z = 0.0;
+            for i in skel.site_off[r]..skel.site_off[r + 1] {
+                let s = skel.sites[i];
+                if s.epoch != last_epoch {
+                    last_epoch = s.epoch;
+                    z = epoch_z(seed, r, s.epoch).abs();
+                }
+                arena.durs.push((arena.site_mu[i] + z * arena.site_sigma[i]).max(0.0));
+            }
+        }
+    }
+    arena.drawgen_ns += t0.elapsed().as_nanos() as u64;
+
+    // The duration array leaves the arena while lanes borrow it
+    // mutably, and returns whatever happens.
+    let durs = std::mem::take(&mut arena.durs);
+    let mut result = Ok(());
+    for j in 0..seeds.len() {
+        let lane = &durs[j * nsites..(j + 1) * nsites];
+        match replay_with(skel, cfg, topo, net, Draws::Batched { durs: lane }, arena) {
+            Ok(r) => out.push(r),
+            Err(e) => {
+                result = Err(e);
+                break;
+            }
+        }
+    }
+    arena.durs = durs;
+    result
+}
+
+/// The shared replay body: build a VM over the arena's buffers, run,
+/// stash the buffers back (keeping capacity) whatever the outcome.
+fn replay_with(
+    skel: &Skeleton,
+    cfg: &HplConfig,
+    topo: &Topology,
+    net: &NetModel,
+    draws: Draws<'_>,
+    arena: &mut ReplayArena,
+) -> Result<HplResult, VmError> {
+    let nranks = cfg.nranks();
+    if skel.ranks.len() != nranks {
+        return Err(VmError::RankMismatch { skeleton: skel.ranks.len(), config: nranks });
+    }
+    let mut vm = Vm::start(skel, topo, net, draws, arena);
     // Ranks spawn in order, exactly like `run_once_traced`.
     for r in 0..nranks {
-        vm.spawn_task(vec![Frame::Rank { rank: r, pc: 0 }]);
+        vm.spawn_task(Frame::Rank { rank: r, pc: 0 });
     }
-    vm.run()?;
-    let seconds = vm.now;
+    let run = vm.run();
+    let (seconds, events, stats) = (vm.now, vm.events, vm.stats);
+    vm.stash(arena);
+    run?;
     Ok(HplResult {
         seconds,
         gflops: cfg.flops() / seconds / 1e9,
-        comm: vm.stats,
-        events: vm.events,
+        comm: stats,
+        events,
         // `run_once` leaves this 0 (only the artifact pipeline fills it).
         dgemm_calls: 0,
     })
 }
 
 impl<'a> Vm<'a> {
+    /// Borrow every buffer out of the arena, logically cleared but with
+    /// its capacity intact. The inverse is [`Vm::stash`].
+    fn start(
+        skel: &'a Skeleton,
+        topo: &'a Topology,
+        net: &NetModel,
+        draws: Draws<'a>,
+        arena: &mut ReplayArena,
+    ) -> Vm<'a> {
+        let nranks = skel.ranks.len();
+        arena.segs.rebuild(net);
+        arena.timers.clear();
+        arena.queue.clear();
+        // `tasks` was drained into the spare pool by the last stash.
+        arena.envs.clear();
+        arena.finished.clear();
+        arena.inboxes.resize_with(nranks, VmInbox::default);
+        for ib in &mut arena.inboxes {
+            ib.arrived.clear();
+            ib.pending.clear();
+        }
+        arena.rstate.resize_with(nranks, RankState::default);
+        for (rs, rt) in arena.rstate.iter_mut().zip(&skel.ranks) {
+            rs.isends.clear();
+            rs.machines.resize_with(rt.descs.len(), VmMachine::default);
+            for m in &mut rs.machines {
+                m.done = false;
+                m.handles.clear();
+            }
+        }
+        arena.net_caps.clear();
+        arena.net_caps.extend_from_slice(topo.link_capacities());
+        for f in arena.net_flows.drain(..).flatten() {
+            arena.route_spares.push(f.route);
+        }
+        arena.net_free.clear();
+        arena.net_load.ensure_links(arena.net_caps.len());
+        arena.net_load.clear();
+        arena.dgemm_cursor.clear();
+        if matches!(draws, Draws::Batched { .. }) {
+            arena.dgemm_cursor.extend_from_slice(&skel.site_off[..nranks]);
+        }
+        Vm {
+            skel,
+            topo,
+            draws,
+            segs: std::mem::take(&mut arena.segs),
+            async_threshold: net.async_threshold,
+            rendezvous_threshold: net.rendezvous_threshold,
+            now: 0.0,
+            seq: 0,
+            timers: std::mem::take(&mut arena.timers),
+            queue: std::mem::take(&mut arena.queue),
+            tasks: std::mem::take(&mut arena.tasks),
+            task_spares: std::mem::take(&mut arena.task_spares),
+            live: 0,
+            events: 0,
+            signals: std::mem::take(&mut arena.signals),
+            nsignals: 0,
+            envs: std::mem::take(&mut arena.envs),
+            inboxes: std::mem::take(&mut arena.inboxes),
+            rstate: std::mem::take(&mut arena.rstate),
+            net: VmNet {
+                caps: std::mem::take(&mut arena.net_caps),
+                flows: std::mem::take(&mut arena.net_flows),
+                free: std::mem::take(&mut arena.net_free),
+                last: 0.0,
+                epoch: 0,
+                active: 0,
+                ws: std::mem::take(&mut arena.net_ws),
+                load: std::mem::take(&mut arena.net_load),
+            },
+            route_spares: std::mem::take(&mut arena.route_spares),
+            finished: std::mem::take(&mut arena.finished),
+            dgemm_cursor: std::mem::take(&mut arena.dgemm_cursor),
+            stats: CommStats::default(),
+        }
+    }
+
+    /// Return every buffer to the arena so the next point reuses the
+    /// capacity. Runs on error paths too (the buffers' logical content
+    /// is cleared again by the next [`Vm::start`]).
+    fn stash(mut self, arena: &mut ReplayArena) {
+        arena.segs = self.segs;
+        self.timers.clear();
+        arena.timers = self.timers;
+        self.queue.clear();
+        arena.queue = self.queue;
+        // Recycle task records wholesale: their frame/waiter vectors
+        // keep their capacity inside the spare pool.
+        for t in self.tasks.drain(..) {
+            self.task_spares.push(t);
+        }
+        arena.tasks = self.tasks;
+        arena.task_spares = self.task_spares;
+        arena.signals = self.signals;
+        arena.envs = self.envs;
+        arena.inboxes = self.inboxes;
+        arena.rstate = self.rstate;
+        arena.net_caps = self.net.caps;
+        arena.net_flows = self.net.flows;
+        arena.net_free = self.net.free;
+        arena.net_ws = self.net.ws;
+        arena.net_load = self.net.load;
+        arena.route_spares = self.route_spares;
+        arena.finished = self.finished;
+        arena.dgemm_cursor = self.dgemm_cursor;
+    }
+
     /// Engine `run_with_stats`: drain the wake queue to quiescence, pop
     /// one timer (advancing `now`, counting one event), repeat until the
     /// heap empties — *even after every rank completed*: stale watcher
@@ -463,9 +785,14 @@ impl<'a> Vm<'a> {
         Ok(())
     }
 
-    fn spawn_task(&mut self, frames: Vec<Frame>) -> TaskId {
+    fn spawn_task(&mut self, frame: Frame) -> TaskId {
         let tid = self.tasks.len();
-        self.tasks.push(VmTask { frames, done: false, join_waiters: Vec::new() });
+        let mut t = self.task_spares.pop().unwrap_or_default();
+        t.frames.clear();
+        t.frames.push(frame);
+        t.done = false;
+        t.join_waiters.clear();
+        self.tasks.push(t);
         self.live += 1;
         self.queue.push_back(tid);
         tid
@@ -523,8 +850,18 @@ impl<'a> Vm<'a> {
     }
 
     fn new_signal(&mut self) -> SigId {
-        self.signals.push(VmSignal::default());
-        self.signals.len() - 1
+        let sid = self.nsignals;
+        if sid == self.signals.len() {
+            self.signals.push(VmSignal::default());
+        } else {
+            // Reuse a record from a previous point (waiter capacity
+            // survives; content is reset here, on first hand-out).
+            let s = &mut self.signals[sid];
+            s.set = false;
+            s.waiters.clear();
+        }
+        self.nsignals += 1;
+        sid
     }
 
     fn set_signal(&mut self, sid: SigId) {
@@ -539,7 +876,7 @@ impl<'a> Vm<'a> {
     }
 
     fn class_of(&self, src_rank: usize, dst_rank: usize) -> NetClass {
-        if self.rank_node[src_rank] == self.rank_node[dst_rank] {
+        if self.skel.rank_node[src_rank] == self.skel.rank_node[dst_rank] {
             NetClass::Local
         } else {
             NetClass::Remote
@@ -604,19 +941,18 @@ impl<'a> Vm<'a> {
     }
 
     fn net_reshare(&mut self) {
-        let net = &mut self.net;
-        net.epoch += 1;
-        let idx: Vec<usize> =
-            (0..net.flows.len()).filter(|&i| net.flows[i].is_some()).collect();
-        let routes: Vec<&[LinkId]> = idx
-            .iter()
-            .map(|&i| net.flows[i].as_ref().unwrap().route.as_slice())
-            .collect();
-        let rates: Vec<f64> =
-            sharing::max_min_rates_into(&net.caps, &routes, &mut net.ws).to_vec();
-        drop(routes);
-        for (&i, r) in idx.iter().zip(rates) {
-            net.flows[i].as_mut().unwrap().rate = r;
+        // Mirror of `Network::reshare`: routes are staged into the
+        // workspace (no per-reshare vectors) and the solver runs over
+        // the incrementally maintained link loads.
+        let VmNet { caps, flows, ws, load, epoch, .. } = &mut self.net;
+        *epoch += 1;
+        ws.begin_routes();
+        for f in flows.iter().flatten() {
+            ws.push_route(&f.route);
+        }
+        let rates = sharing::max_min_rates_staged(caps, load, ws);
+        for (f, &r) in flows.iter_mut().flatten().zip(rates) {
+            f.rate = r;
         }
     }
 
@@ -639,14 +975,16 @@ impl<'a> Vm<'a> {
             Some(t) => (self.net.epoch, t),
             None => return,
         };
-        self.spawn_task(vec![Frame::Watcher { epoch, at, armed: false }]);
+        self.spawn_task(Frame::Watcher { epoch, at, armed: false });
     }
 
     fn net_start_flow(&mut self, src_node: usize, dst_node: usize, effective: f64) -> SigId {
-        let route = self.topo.route(src_node, dst_node);
+        let mut route = self.route_spares.pop().unwrap_or_default();
+        self.topo.route_into(src_node, dst_node, &mut route);
         let done = self.new_signal();
         let now = self.now;
         self.net_advance(now);
+        self.net.load.add_route(&route);
         let flow = VmFlow { route, remaining: effective.max(1.0), rate: 0.0, done };
         {
             let net = &mut self.net;
@@ -667,7 +1005,8 @@ impl<'a> Vm<'a> {
         }
         let now = self.now;
         self.net_advance(now);
-        let mut finished: Vec<SigId> = Vec::new();
+        let mut finished = std::mem::take(&mut self.finished);
+        finished.clear();
         {
             let net = &mut self.net;
             for i in 0..net.flows.len() {
@@ -676,16 +1015,19 @@ impl<'a> Vm<'a> {
                     let f = net.flows[i].take().unwrap();
                     net.free.push(i);
                     net.active -= 1;
+                    net.load.remove_route(&f.route);
                     finished.push(f.done);
+                    self.route_spares.push(f.route);
                 }
             }
         }
         if !finished.is_empty() {
             self.net_reshare();
         }
-        for s in finished {
+        for &s in &finished {
             self.set_signal(s);
         }
+        self.finished = finished;
         self.net_schedule_watcher();
     }
 
@@ -719,7 +1061,7 @@ impl<'a> Vm<'a> {
                     let (src, dst, tag, bytes) = (*src, *dst, *tag, *bytes);
                     if bytes <= self.async_threshold {
                         // Buffered: fire and forget.
-                        self.spawn_task(vec![Frame::Deliver {
+                        self.spawn_task(Frame::Deliver {
                             src,
                             dst,
                             tag,
@@ -727,7 +1069,7 @@ impl<'a> Vm<'a> {
                             rndv: false,
                             stage: DeliverStage::Init,
                             env: None,
-                        }]);
+                        });
                         Ok(Step::Pop)
                     } else {
                         let rndv = bytes > self.rendezvous_threshold;
@@ -811,7 +1153,7 @@ impl<'a> Vm<'a> {
                     let class = self.class_of(*src, *dst);
                     let seg = self.segs.lookup(class, *bytes);
                     let effective = *bytes / seg.bw_factor.max(1e-12);
-                    let (sn, dn) = (self.rank_node[*src], self.rank_node[*dst]);
+                    let (sn, dn) = (self.skel.rank_node[*src], self.skel.rank_node[*dst]);
                     let done = self.net_start_flow(sn, dn, effective);
                     if self.signals[done].set {
                         let p = self.envs[env.unwrap()].payload_done;
@@ -1013,20 +1355,19 @@ impl<'a> Vm<'a> {
     }
 
     /// Spawn the forward sends of a just-received panel and mark the
-    /// machine done (shared tail of `poll` and `finish`).
+    /// machine done (shared tail of `poll` and `finish`). The target
+    /// list is read through the `'a` skeleton borrow — no clone.
     fn bcast_forward(&mut self, rank: usize, desc: usize) {
-        let (tag, bytes, fwd) = {
-            let d = &self.skel.ranks[rank].descs[desc];
-            (d.tag, d.bytes, d.fwd_abs.clone())
-        };
-        for dst in fwd {
-            let t = self.spawn_task(vec![Frame::Send {
+        let skel = self.skel;
+        let d = &skel.ranks[rank].descs[desc];
+        for &dst in &d.fwd_abs {
+            let t = self.spawn_task(Frame::Send {
                 src: rank,
                 dst,
-                tag,
-                bytes,
+                tag: d.tag,
+                bytes: d.bytes,
                 stage: SendStage::Init,
-            }]);
+            });
             self.rstate[rank].machines[desc].handles.push(t);
         }
         self.rstate[rank].machines[desc].done = true;
@@ -1046,7 +1387,22 @@ impl<'a> Vm<'a> {
                 Ok(Step::Push(Frame::Sleep { at: self.now + seconds, armed: false }))
             }
             Op::Dgemm { node, epoch, m, n, k } => {
-                let d = self.source.next(rank, node, epoch, m, n, k);
+                let d = match self.draws {
+                    // Bit-identical to `DirectSource::next` (stochastic).
+                    Draws::Direct { model, seed } => {
+                        let z = epoch_z(seed, rank, epoch).abs();
+                        let c = model.coef(node);
+                        let (mf, nf, kf) = (m as f64, n as f64, k as f64);
+                        (c.mu_of(mf, nf, kf) + z * c.sigma_of(mf, nf, kf)).max(0.0)
+                    }
+                    // Wave lane: precomputed, consumed in program order.
+                    Draws::Batched { durs } => {
+                        let cur = &mut self.dgemm_cursor[rank];
+                        let d = durs[*cur];
+                        *cur += 1;
+                        d
+                    }
+                };
                 if d > 0.0 {
                     Ok(Step::Push(Frame::Sleep { at: self.now + d, armed: false }))
                 } else {
@@ -1061,13 +1417,13 @@ impl<'a> Vm<'a> {
                 stage: SendStage::Init,
             })),
             Op::Isend { dst, tag, bytes } => {
-                let t = self.spawn_task(vec![Frame::Send {
+                let t = self.spawn_task(Frame::Send {
                     src: rank,
                     dst,
                     tag,
                     bytes,
                     stage: SendStage::Init,
-                }]);
+                });
                 self.rstate[rank].isends.push_back(t);
                 Ok(Step::Continue)
             }
@@ -1087,19 +1443,17 @@ impl<'a> Vm<'a> {
             })),
             Op::BcastStart { desc } => {
                 self.desc_bounds(rank, desc)?;
-                let (is_root, tag, bytes, targets) = {
-                    let d = &self.skel.ranks[rank].descs[desc];
-                    (d.is_root, d.tag, d.bytes, d.root_targets_abs.clone())
-                };
-                if is_root {
-                    for dst in targets {
-                        let t = self.spawn_task(vec![Frame::Send {
+                let skel = self.skel;
+                let d = &skel.ranks[rank].descs[desc];
+                if d.is_root {
+                    for &dst in &d.root_targets_abs {
+                        let t = self.spawn_task(Frame::Send {
                             src: rank,
                             dst,
-                            tag,
-                            bytes,
+                            tag: d.tag,
+                            bytes: d.bytes,
                             stage: SendStage::Init,
-                        }]);
+                        });
                         self.rstate[rank].machines[desc].handles.push(t);
                     }
                     self.rstate[rank].machines[desc].done = true;
@@ -1181,6 +1535,13 @@ pub struct ScheduleMemo {
     replays: AtomicUsize,
     fallbacks: AtomicUsize,
     checks: AtomicUsize,
+    // Per-stage wall-clock (nanoseconds, summed across workers — on a
+    // threaded campaign the stages overlap, so these are CPU-seconds
+    // per stage, not elapsed time). Feeds `--bench-json` v3.
+    compile_ns: AtomicU64,
+    drawgen_ns: AtomicU64,
+    replay_ns: AtomicU64,
+    validate_ns: AtomicU64,
 }
 
 impl Default for ScheduleMemo {
@@ -1197,6 +1558,10 @@ impl ScheduleMemo {
             replays: AtomicUsize::new(0),
             fallbacks: AtomicUsize::new(0),
             checks: AtomicUsize::new(0),
+            compile_ns: AtomicU64::new(0),
+            drawgen_ns: AtomicU64::new(0),
+            replay_ns: AtomicU64::new(0),
+            validate_ns: AtomicU64::new(0),
         }
     }
 
@@ -1220,6 +1585,55 @@ impl ScheduleMemo {
         self.checks.load(Ordering::Relaxed)
     }
 
+    /// Per-stage wall-clock seconds `[compile, draw-gen, replay,
+    /// validate]`, summed across workers.
+    pub fn stage_seconds(&self) -> [f64; 4] {
+        [
+            self.compile_ns.load(Ordering::Relaxed),
+            self.drawgen_ns.load(Ordering::Relaxed),
+            self.replay_ns.load(Ordering::Relaxed),
+            self.validate_ns.load(Ordering::Relaxed),
+        ]
+        .map(|ns| ns as f64 * 1e-9)
+    }
+
+    /// The class slot for a structure key (creating it if absent, with
+    /// the generation clear when the table is full).
+    fn slot(&self, key: u64) -> Arc<Mutex<ClassState>> {
+        let mut map = self.classes.lock().unwrap();
+        if map.len() >= MAX_CLASSES && !map.contains_key(&key) {
+            map.clear(); // generation clear, like MaterializeMemo
+        }
+        map.entry(key)
+            .or_insert_with(|| {
+                Arc::new(Mutex::new(ClassState {
+                    skeleton: None,
+                    checks: 0,
+                    failed: false,
+                }))
+            })
+            .clone()
+    }
+
+    /// The trusted skeleton for a class, if it has one (compiled,
+    /// validated, not failed).
+    fn trusted(&self, key: u64) -> Option<Arc<Skeleton>> {
+        let slot = self.slot(key);
+        let st = slot.lock().unwrap();
+        if st.failed || st.checks < VALIDATE_POINTS {
+            return None;
+        }
+        st.skeleton.clone()
+    }
+
+    /// Permanently fail a class back to the engine.
+    fn latch_failed(&self, key: u64) {
+        let slot = self.slot(key);
+        let mut st = slot.lock().unwrap();
+        st.failed = true;
+        st.skeleton = None;
+    }
+
     /// Evaluate one point, choosing pilot / dual-run / replay / engine
     /// per the class state. The result is byte-identical to
     /// `simulate_direct` with the same arguments, whichever path ran.
@@ -1233,21 +1647,7 @@ impl ScheduleMemo {
         seed: u64,
     ) -> HplResult {
         let key = structure_key(cfg, topo, net, ranks_per_node);
-        let slot = {
-            let mut map = self.classes.lock().unwrap();
-            if map.len() >= MAX_CLASSES && !map.contains_key(&key) {
-                map.clear(); // generation clear, like MaterializeMemo
-            }
-            map.entry(key)
-                .or_insert_with(|| {
-                    Arc::new(Mutex::new(ClassState {
-                        skeleton: None,
-                        checks: 0,
-                        failed: false,
-                    }))
-                })
-                .clone()
-        };
+        let slot = self.slot(key);
 
         let mut st = slot.lock().unwrap();
         let phase = if st.failed {
@@ -1270,27 +1670,22 @@ impl ScheduleMemo {
                 // Engine + tracer; identical to simulate_direct in every
                 // observable (the tracer only records).
                 self.compiles.fetch_add(1, Ordering::Relaxed);
-                let tracer = Rc::new(Tracer::new(cfg.nranks()));
-                let source = DirectSource::new(dgemm.clone(), cfg.nranks(), seed);
-                let res = run_once_traced(
-                    cfg,
-                    topo.clone(),
-                    net.clone(),
-                    source,
-                    ranks_per_node,
-                    Some(tracer.clone()),
-                );
-                if tracer.poisoned() {
-                    st.failed = true;
-                } else {
-                    st.skeleton = Some(Arc::new(Skeleton { ranks: tracer.take_ranks() }));
+                let t0 = Instant::now();
+                let (skel, res) =
+                    Skeleton::compile(cfg, topo, net, dgemm, ranks_per_node, seed);
+                match skel {
+                    None => st.failed = true,
+                    Some(s) => st.skeleton = Some(Arc::new(s)),
                 }
+                self.compile_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 res
             }
             Phase::Check(skel) => {
                 // Dual-run: the engine result is authoritative; replay
                 // must agree exactly or the class fails.
                 self.checks.fetch_add(1, Ordering::Relaxed);
+                let t0 = Instant::now();
                 let engine = simulate_direct(cfg, topo, net, dgemm, ranks_per_node, seed);
                 match catch_replay(&skel, cfg, topo, net, dgemm, ranks_per_node, seed) {
                     Ok(r) if results_identical(&r, &engine) => st.checks += 1,
@@ -1299,11 +1694,17 @@ impl ScheduleMemo {
                         st.skeleton = None;
                     }
                 }
+                self.validate_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 engine
             }
             Phase::Trusted(skel) => {
                 drop(st); // replays of one class run in parallel
-                match catch_replay(&skel, cfg, topo, net, dgemm, ranks_per_node, seed) {
+                let t0 = Instant::now();
+                let replayed = catch_replay(&skel, cfg, topo, net, dgemm, ranks_per_node, seed);
+                self.replay_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                match replayed {
                     Ok(r) => {
                         self.replays.fetch_add(1, Ordering::Relaxed);
                         r
@@ -1319,6 +1720,66 @@ impl ScheduleMemo {
                     }
                 }
             }
+        }
+    }
+
+    /// Evaluate a wave of same-structure points (differing only in
+    /// seed), pushing one result per seed onto `out` in order. Lanes
+    /// evaluated while the class is still compiling/validating go
+    /// through [`ScheduleMemo::evaluate`] one by one; as soon as the
+    /// class is trusted, the remaining lanes run through one
+    /// [`replay_wave`] pass over `arena`. Every result is byte-identical
+    /// to `simulate_direct`, whichever path produced it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn evaluate_wave(
+        &self,
+        cfg: &HplConfig,
+        topo: &Topology,
+        net: &NetModel,
+        dgemm: &DgemmModel,
+        ranks_per_node: usize,
+        seeds: &[u64],
+        arena: &mut ReplayArena,
+        out: &mut Vec<HplResult>,
+    ) {
+        let key = structure_key(cfg, topo, net, ranks_per_node);
+        let mut i = 0;
+        while i < seeds.len() {
+            let skel = match self.trusted(key) {
+                Some(s) => s,
+                None => {
+                    out.push(self.evaluate(cfg, topo, net, dgemm, ranks_per_node, seeds[i]));
+                    i += 1;
+                    continue;
+                }
+            };
+            let lanes = &seeds[i..];
+            let before = out.len();
+            let draw0 = arena.drawgen_ns;
+            let t0 = Instant::now();
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                replay_wave(&skel, cfg, topo, net, dgemm, lanes, arena, out)
+            }));
+            let elapsed = t0.elapsed().as_nanos() as u64;
+            let drawgen = arena.drawgen_ns - draw0;
+            self.drawgen_ns.fetch_add(drawgen, Ordering::Relaxed);
+            self.replay_ns
+                .fetch_add(elapsed.saturating_sub(drawgen), Ordering::Relaxed);
+            let done = out.len() - before;
+            self.replays.fetch_add(done, Ordering::Relaxed);
+            i += done;
+            if matches!(res, Ok(Ok(()))) {
+                debug_assert_eq!(i, seeds.len());
+                return;
+            }
+            // Replay error or panic: latch the class, finish the wave
+            // (including the failed lane) on the engine.
+            self.latch_failed(key);
+            for &seed in &seeds[i..] {
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                out.push(simulate_direct(cfg, topo, net, dgemm, ranks_per_node, seed));
+            }
+            return;
         }
     }
 }
@@ -1367,11 +1828,8 @@ mod tests {
         rpn: usize,
         seed: u64,
     ) -> (Skeleton, HplResult) {
-        let tracer = Rc::new(Tracer::new(cfg.nranks()));
-        let source = DirectSource::new(dgemm.clone(), cfg.nranks(), seed);
-        let res = run_once_traced(cfg, topo.clone(), net.clone(), source, rpn, Some(tracer.clone()));
-        assert!(!tracer.poisoned(), "HPL emulation poisoned the trace");
-        (Skeleton { ranks: tracer.take_ranks() }, res)
+        let (skel, res) = Skeleton::compile(cfg, topo, net, dgemm, rpn, seed);
+        (skel.expect("HPL emulation poisoned the trace"), res)
     }
 
     /// Compile from one seed, then check replay == engine exactly for
@@ -1516,7 +1974,7 @@ mod tests {
         // WaitIsend with no isend outstanding.
         let mut rt = RankTrace::default();
         rt.ops.push(Op::WaitIsend);
-        let bad = Skeleton { ranks: vec![rt, RankTrace::default()] };
+        let bad = Skeleton::new(vec![rt, RankTrace::default()], 1);
         assert_eq!(
             replay(&bad, &c, &topo, &net, &dgemm, 1, 1),
             Err(VmError::WaitWithoutIsend { rank: 0 })
@@ -1524,13 +1982,13 @@ mod tests {
         // A receive nobody ever sends: deadlock, not a hang.
         let mut rt = RankTrace::default();
         rt.ops.push(Op::Recv { src: Some(1), tag: 7 });
-        let dead = Skeleton { ranks: vec![rt, RankTrace::default()] };
+        let dead = Skeleton::new(vec![rt, RankTrace::default()], 1);
         assert!(matches!(
             replay(&dead, &c, &topo, &net, &dgemm, 1, 1),
             Err(VmError::Deadlock { .. })
         ));
         // Wrong rank count is rejected before anything runs.
-        let short = Skeleton { ranks: vec![RankTrace::default()] };
+        let short = Skeleton::new(vec![RankTrace::default()], 1);
         assert_eq!(
             replay(&short, &c, &topo, &net, &dgemm, 1, 1),
             Err(VmError::RankMismatch { skeleton: 1, config: 2 })
@@ -1558,7 +2016,7 @@ mod tests {
             let mut rt = RankTrace::default();
             rt.ops.push(Op::WaitIsend);
             let bad = vec![rt; c.nranks()];
-            slot.lock().unwrap().skeleton = Some(Arc::new(Skeleton { ranks: bad }));
+            slot.lock().unwrap().skeleton = Some(Arc::new(Skeleton::new(bad, 1)));
         }
         for seed in 10..12u64 {
             let got = memo.evaluate(&c, &topo, &net, &dgemm, 1, seed);
@@ -1567,6 +2025,61 @@ mod tests {
         }
         assert!(memo.fallbacks() >= 2, "failed class must latch");
         assert!(slot.lock().unwrap().failed);
+    }
+
+    #[test]
+    fn wave_replay_is_bit_identical_to_sequential_and_engine() {
+        let topo = Topology::star(6, 1e9, 4e9);
+        let net = proto_model();
+        let dgemm = noisy_dgemm();
+        let c = cfg(Bcast::TwoRing, SwapAlg::BinExch, Rfact::Crout, 1, 2, 3);
+        let (skel, _) = compile(&c, &topo, &net, &dgemm, 1, 5);
+        let seeds: Vec<u64> = (0..8).collect();
+        let mut arena = ReplayArena::new();
+        let mut wave = Vec::new();
+        replay_wave(&skel, &c, &topo, &net, &dgemm, &seeds, &mut arena, &mut wave)
+            .expect("wave replay failed");
+        assert_eq!(wave.len(), seeds.len());
+        for (i, &seed) in seeds.iter().enumerate() {
+            let one = replay(&skel, &c, &topo, &net, &dgemm, 1, seed).unwrap();
+            assert!(results_identical(&wave[i], &one), "lane {i} != per-point replay");
+            let engine = simulate_direct(&c, &topo, &net, &dgemm, 1, seed);
+            assert!(results_identical(&wave[i], &engine), "lane {i} != engine");
+        }
+        // A second wave through the *same* arena (buffer reuse path)
+        // reproduces the first exactly.
+        let mut again = Vec::new();
+        replay_wave(&skel, &c, &topo, &net, &dgemm, &seeds, &mut arena, &mut again)
+            .expect("warm wave replay failed");
+        for (a, b) in wave.iter().zip(&again) {
+            assert!(results_identical(a, b), "warm arena diverged");
+        }
+    }
+
+    #[test]
+    fn evaluate_wave_matches_engine_and_counts_stages() {
+        let topo = Topology::star(6, 1e9, 4e9);
+        let net = proto_model();
+        let dgemm = noisy_dgemm();
+        let c = cfg(Bcast::Ring, SwapAlg::BinExch, Rfact::Crout, 1, 2, 3);
+        let memo = ScheduleMemo::new();
+        let mut arena = ReplayArena::new();
+        let seeds: Vec<u64> = (0..8).collect();
+        let mut out = Vec::new();
+        memo.evaluate_wave(&c, &topo, &net, &dgemm, 1, &seeds, &mut arena, &mut out);
+        assert_eq!(out.len(), seeds.len());
+        for (i, &seed) in seeds.iter().enumerate() {
+            let want = simulate_direct(&c, &topo, &net, &dgemm, 1, seed);
+            assert!(results_identical(&out[i], &want), "lane {i} != engine");
+        }
+        // Pilot + checks per lane until trusted, then one batched pass.
+        assert_eq!(memo.compiles(), 1);
+        assert_eq!(memo.checks(), VALIDATE_POINTS as usize);
+        assert_eq!(memo.replays(), seeds.len() - 1 - VALIDATE_POINTS as usize);
+        assert_eq!(memo.fallbacks(), 0);
+        let [compile_s, _drawgen_s, _replay_s, validate_s] = memo.stage_seconds();
+        assert!(compile_s > 0.0, "pilot must be timed");
+        assert!(validate_s > 0.0, "dual-runs must be timed");
     }
 
     #[test]

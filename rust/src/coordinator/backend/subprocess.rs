@@ -185,6 +185,9 @@ impl ExecBackend for Subprocess {
             if !campaign.skeleton_enabled() {
                 cmd.arg("--no-skeleton");
             }
+            // And for the replay wave size — another pure throughput
+            // knob the children must inherit verbatim.
+            cmd.arg("--wave-size").arg(campaign.wave_size().to_string());
             let spawned = cmd
                 .stdin(Stdio::null())
                 .stdout(Stdio::piped())

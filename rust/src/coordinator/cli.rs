@@ -48,7 +48,7 @@ USAGE:
                [--backend inproc|subprocess|queue] [--shards S]
                [--queue-dir DIR] [--queue-workers W] [--queue-tasks K]
                [--lease-secs S] [--bench-json FILE] [--no-skeleton]
-               [--structured]
+               [--wave-size K] [--structured]
       Random HPL parameter-space campaign (NB, depth, bcast, swap, rfact,
       geometry) on the calibrated surrogate: K points (default 100) with
       per-point seeds derived from the campaign seed, executed by a
@@ -78,19 +78,24 @@ USAGE:
       sibling replays the recorded event stream, byte-identical to the
       full engine path (see README \"Schedule skeletons\");
       --no-skeleton forces the full engine for every point.
-      --structured samples the structural axes once so the whole
-      campaign is a single structure class (the skeleton benchmark
-      shape). --bench-json writes the run's execution accounting plus
-      an engine-vs-skeleton A/B measurement (uncached in-process
-      points/s with the skeleton off and on, and their ratio) as a
-      `hplsim-bench-sweep-v2` JSON document — the CI perf-baseline
-      artifact (see bench/BENCH_sweep.schema.json).
+      Replays are lane-batched: each worker runs up to --wave-size K
+      structurally identical points (default 32) through one
+      allocation-free executor pass over a persistent arena;
+      --wave-size 1 restores per-point replay. Results are identical
+      at every setting. --structured samples the structural axes once
+      so the whole campaign is a single structure class (the skeleton
+      benchmark shape). --bench-json writes the run's execution
+      accounting plus an engine / per-point-replay / wave-replay A/B/C
+      measurement (uncached in-process points/s on each path, their
+      ratios, and the per-stage compile/draw-gen/replay/validate
+      breakdown) as a `hplsim-bench-sweep-v3` JSON document — the CI
+      perf-baseline artifact (see bench/BENCH_sweep.schema.json).
   hplsim sa --space FILE [--design saltelli|lhs|factorial] [--points N]
             [--levels L] [--replicates R] [--seed N] [--out DIR]
             [--cache DIR] [--no-cache] [--threads T] [--batch-size B]
             [--no-artifacts] [--export-manifest FILE] [--plan-only]
             [--backend inproc|subprocess|queue] [--no-skeleton]
-            [backend knobs as sweep]
+            [--wave-size K] [backend knobs as sweep]
       Sensitivity-analysis campaign over a declared (HPL config x
       platform scenario) parameter space — a JSON file naming the swept
       dimensions (NB, broadcast variant, process grid, node count,
@@ -134,7 +139,7 @@ USAGE:
       on any machines sharing DIR.
   hplsim shard --manifest FILE --shards S --shard-index I --cache DIR
                [--threads T] [--quiet] [--artifacts] [--batch-size B]
-               [--no-skeleton]
+               [--no-skeleton] [--wave-size K]
       Execute one deterministic partition of a campaign manifest — the
       points with fingerprint % S == I — writing results into the
       fingerprint-keyed cache DIR. Run one shard per machine, then
@@ -684,6 +689,7 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
         .threads(num(opts, "threads", 0usize))
         .cache(cache_dir)
         .skeleton(!opts.contains_key("no-skeleton"))
+        .wave(num(opts, "wave-size", 0usize))
         .stderr_progress();
     let report = match bcfg.run("sweep", &campaign) {
         Ok(r) => r,
@@ -701,32 +707,41 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
         points.len() as f64 / report.wall_seconds.max(1e-9),
     );
     if let Some(path) = bench_p {
-        // Engine-vs-skeleton A/B measurement: two additional uncached
-        // in-process passes over the same points on the pure-Rust path,
-        // one with the skeleton fast path off (the full engine per
-        // point) and one with it on (trace once per structure class,
-        // replay the rest). Results are byte-identical by construction;
-        // only the wall-clocks differ, and their ratio is the committed
-        // skeleton speedup baseline.
+        // Engine / per-point-replay / wave-replay A/B/C measurement:
+        // three additional uncached in-process passes over the same
+        // points on the pure-Rust path — the full engine per point
+        // (skeleton off), per-point skeleton replay (`--wave-size 1`,
+        // the PR-7 fast path), and lane-batched wave replay (the
+        // default). Results are byte-identical across all three by
+        // construction; only the wall-clocks differ, and their ratios
+        // are the committed skeleton and wave speedup baselines. The
+        // wave pass also reports the per-stage CPU-seconds breakdown
+        // (compile / draw-gen / replay / validate) from its memo.
         let threads = num(opts, "threads", 0usize);
-        let timed = |skeleton: bool| -> Result<CampaignReport, i32> {
-            let c = Campaign::new(&points).threads(threads).skeleton(skeleton);
-            match c.run(&InProcess::new()) {
-                Ok(r) => Ok(r),
-                Err(e) => {
-                    eprintln!(
-                        "sweep: bench {} pass failed: {e}",
-                        if skeleton { "skeleton" } else { "engine" }
-                    );
-                    Err(1)
+        let timed =
+            |label: &str, skeleton: bool, wave: usize| -> Result<(CampaignReport, [f64; 4]), i32> {
+                let c = Campaign::new(&points)
+                    .threads(threads)
+                    .skeleton(skeleton)
+                    .wave(wave);
+                let backend = InProcess::new();
+                match c.run(&backend) {
+                    Ok(r) => Ok((r, backend.stage_seconds())),
+                    Err(e) => {
+                        eprintln!("sweep: bench {label} pass failed: {e}");
+                        Err(1)
+                    }
                 }
-            }
-        };
-        let engine = match timed(false) {
+            };
+        let (engine, _) = match timed("engine", false, 1) {
             Ok(r) => r,
             Err(code) => return code,
         };
-        let skeleton = match timed(true) {
+        let (perpoint, _) = match timed("per-point replay", true, 1) {
+            Ok(r) => r,
+            Err(code) => return code,
+        };
+        let (wave, stages) = match timed("wave replay", true, 0) {
             Ok(r) => r,
             Err(code) => return code,
         };
@@ -736,17 +751,22 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
             &report,
             &bcfg.name,
             &engine,
-            &skeleton,
+            &perpoint,
+            &wave,
+            &stages,
         ) {
             eprintln!("sweep: cannot write bench JSON {path}: {e}");
             return 1;
         }
         println!(
-            "sweep: wrote bench timings to {path} (engine {:.2} pts/s, skeleton \
-             {:.2} pts/s, speedup {:.2}x)",
+            "sweep: wrote bench timings to {path} (engine {:.2} pts/s, per-point \
+             replay {:.2} pts/s, wave replay {:.2} pts/s, skeleton speedup {:.2}x, \
+             wave speedup {:.2}x)",
             points.len() as f64 / engine.wall_seconds.max(1e-9),
-            points.len() as f64 / skeleton.wall_seconds.max(1e-9),
-            engine.wall_seconds.max(1e-9) / skeleton.wall_seconds.max(1e-9),
+            points.len() as f64 / perpoint.wall_seconds.max(1e-9),
+            points.len() as f64 / wave.wall_seconds.max(1e-9),
+            engine.wall_seconds.max(1e-9) / perpoint.wall_seconds.max(1e-9),
+            perpoint.wall_seconds.max(1e-9) / wave.wall_seconds.max(1e-9),
         );
     }
     if wrote_csv {
@@ -757,11 +777,16 @@ fn cmd_sweep(opts: &HashMap<String, String>) -> i32 {
 }
 
 /// `--bench-json`: the committed perf-baseline artifact
-/// (`hplsim-bench-sweep-v2`, schema in bench/BENCH_sweep.schema.json)
+/// (`hplsim-bench-sweep-v3`, schema in bench/BENCH_sweep.schema.json)
 /// that CI trends run-over-run. On top of the primary run's accounting
-/// (the v1 fields), v2 records the engine-vs-skeleton A/B passes:
+/// (the v1 fields), v2 recorded the engine-vs-skeleton A/B passes:
 /// uncached in-process points/sec with the schedule-skeleton fast path
-/// off and on, plus their ratio.
+/// off and on (`--wave-size 1`, i.e. per-point replay), plus their
+/// ratio. v3 adds the lane-batched wave-replay pass — its wall-clock,
+/// throughput and speedup over per-point replay — and the wave pass's
+/// per-stage CPU-seconds breakdown (compile / draw-gen / replay /
+/// validate, summed across workers).
+#[allow(clippy::too_many_arguments)]
 fn write_bench_json(
     path: &Path,
     points: usize,
@@ -769,11 +794,14 @@ fn write_bench_json(
     backend: &str,
     engine: &CampaignReport,
     skeleton: &CampaignReport,
+    wave: &CampaignReport,
+    stages: &[f64; 4],
 ) -> std::io::Result<()> {
     let engine_pps = points as f64 / engine.wall_seconds.max(1e-9);
     let skeleton_pps = points as f64 / skeleton.wall_seconds.max(1e-9);
+    let wave_pps = points as f64 / wave.wall_seconds.max(1e-9);
     let doc = Json::obj(vec![
-        ("schema", Json::Str("hplsim-bench-sweep-v2".into())),
+        ("schema", Json::Str("hplsim-bench-sweep-v3".into())),
         ("backend", Json::Str(backend.into())),
         ("points", Json::Num(points as f64)),
         ("computed", Json::Num(report.computed as f64)),
@@ -792,6 +820,16 @@ fn write_bench_json(
             "skeleton_speedup",
             Json::Num(engine.wall_seconds.max(1e-9) / skeleton.wall_seconds.max(1e-9)),
         ),
+        ("wave_wall_seconds", Json::Num(wave.wall_seconds)),
+        ("wave_points_per_sec", Json::Num(wave_pps)),
+        (
+            "replay_wave_speedup",
+            Json::Num(skeleton.wall_seconds.max(1e-9) / wave.wall_seconds.max(1e-9)),
+        ),
+        ("compile_seconds", Json::Num(stages[0])),
+        ("draw_gen_seconds", Json::Num(stages[1])),
+        ("replay_seconds", Json::Num(stages[2])),
+        ("validate_seconds", Json::Num(stages[3])),
     ]);
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
@@ -892,6 +930,7 @@ fn cmd_sa(opts: &HashMap<String, String>) -> i32 {
         .threads(num(opts, "threads", 0usize))
         .cache(cache_dir)
         .skeleton(!opts.contains_key("no-skeleton"))
+        .wave(num(opts, "wave-size", 0usize))
         .stderr_progress();
     let report = match bcfg.run("sa", &campaign) {
         Ok(r) => r,
@@ -1164,7 +1203,8 @@ fn cmd_shard(opts: &HashMap<String, String>) -> i32 {
         let mut campaign = Campaign::new(&mine)
             .threads(threads)
             .cache(Some(cache.into()))
-            .skeleton(!opts.contains_key("no-skeleton"));
+            .skeleton(!opts.contains_key("no-skeleton"))
+            .wave(num(opts, "wave-size", 0usize));
         if progress {
             campaign = campaign.stderr_progress();
         }
@@ -1185,6 +1225,7 @@ fn cmd_shard(opts: &HashMap<String, String>) -> i32 {
             cache_dir: Some(cache.into()),
             progress,
             no_skeleton: opts.contains_key("no-skeleton"),
+            wave: num(opts, "wave-size", 0usize),
         };
         match run_campaign(&mine, &sweep_opts) {
             Ok(r) => r,

@@ -30,7 +30,8 @@ pub fn run_campaign(
     let mut campaign = Campaign::new(points)
         .threads(opts.threads)
         .cache(opts.cache_dir.clone())
-        .skeleton(!opts.no_skeleton);
+        .skeleton(!opts.no_skeleton)
+        .wave(opts.wave);
     if opts.progress {
         campaign = campaign.stderr_progress();
     }
@@ -169,7 +170,13 @@ mod tests {
         let dir =
             std::env::temp_dir().join(format!("hplsim_dupcache_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
-        let opts = SweepOptions { threads: 1, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false };
+        let opts = SweepOptions {
+            threads: 1,
+            cache_dir: Some(dir.clone()),
+            progress: false,
+            no_skeleton: false,
+            wave: 0,
+        };
         run_campaign(&[tiny_point(5)], &opts).unwrap();
         let pts = vec![tiny_point(5), tiny_point(5), tiny_point(5)];
         let rep = run_campaign(&pts, &opts).unwrap();

@@ -44,6 +44,10 @@ struct NetState {
     /// Bumped on every reshare; stale completion watchers exit.
     epoch: u64,
     active: usize,
+    /// Per-link flow counts + loaded-link set, maintained incrementally
+    /// on flow add/remove so each reshare solves over the loaded links
+    /// only (bit-identical to the from-scratch solve — see `sharing`).
+    load: sharing::LinkLoad,
 }
 
 /// The network: topology + fluid flows + protocol model.
@@ -65,6 +69,8 @@ impl Network {
     pub fn new(sim: Sim, topo: Topology, model: NetModel) -> Network {
         let caps = topo.link_capacities().to_vec();
         let segs = Rc::new(SegTable::new(&model));
+        let mut load = sharing::LinkLoad::default();
+        load.ensure_links(caps.len());
         Network {
             sim,
             topo: Rc::new(topo),
@@ -77,6 +83,7 @@ impl Network {
                 last: 0.0,
                 epoch: 0,
                 active: 0,
+                load,
             })),
             ws: Rc::new(RefCell::new(sharing::Workspace::default())),
         }
@@ -150,6 +157,7 @@ impl Network {
             let mut st = self.state.borrow_mut();
             let now = self.sim.now();
             Self::advance(&mut st, now);
+            st.load.add_route(&route);
             let flow = Flow {
                 route,
                 remaining: effective_bytes.max(1.0),
@@ -185,22 +193,20 @@ impl Network {
         st.last = now;
     }
 
-    /// Recompute max-min rates; bumps the epoch.
+    /// Recompute max-min rates; bumps the epoch. Routes are staged flat
+    /// into the workspace (no per-reshare Vec of indices or slices) and
+    /// the solve runs over the incrementally maintained link load —
+    /// both in ascending slab order, matching the from-scratch path's
+    /// f64 operation order exactly.
     fn reshare(st: &mut NetState, ws: &mut sharing::Workspace) {
         st.epoch += 1;
-        let flows: Vec<usize> = (0..st.flows.len())
-            .filter(|&i| st.flows[i].is_some())
-            .collect();
-        let rates = sharing::max_min_rates_into(
-            &st.caps,
-            &flows
-                .iter()
-                .map(|&i| st.flows[i].as_ref().unwrap().route.as_slice())
-                .collect::<Vec<_>>(),
-            ws,
-        );
-        for (&i, &r) in flows.iter().zip(rates) {
-            st.flows[i].as_mut().unwrap().rate = r;
+        ws.begin_routes();
+        for f in st.flows.iter().flatten() {
+            ws.push_route(&f.route);
+        }
+        let rates = sharing::max_min_rates_staged(&st.caps, &st.load, ws);
+        for (f, &r) in st.flows.iter_mut().flatten().zip(rates) {
+            f.rate = r;
         }
     }
 
@@ -256,6 +262,7 @@ impl Network {
                 };
                 if done {
                     let f = st.flows[i].take().unwrap();
+                    st.load.remove_route(&f.route);
                     st.free.push(i);
                     st.active -= 1;
                     finished.push(f.done);

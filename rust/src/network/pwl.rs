@@ -193,7 +193,7 @@ impl NetModel {
 /// fallback chain of [`NetModel::segment`] up front; the two lookups
 /// agree bit-for-bit on every (class, size), which
 /// `seg_table_matches_segment_everywhere` pins down.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SegTable {
     local: Vec<Segment>,
     remote: Vec<Segment>,
@@ -201,16 +201,30 @@ pub struct SegTable {
 
 impl SegTable {
     pub fn new(model: &NetModel) -> SegTable {
-        let resolve = |class: NetClass| -> Vec<Segment> {
-            [class, NetClass::Remote, NetClass::Local]
+        let mut t = SegTable::default();
+        t.rebuild(model);
+        t
+    }
+
+    /// In-place [`SegTable::new`]: refills the tables without giving up
+    /// their capacity (the replay arena rebuilds per point).
+    pub fn rebuild(&mut self, model: &NetModel) {
+        fn resolve_into(model: &NetModel, class: NetClass, out: &mut Vec<Segment>) {
+            out.clear();
+            match [class, NetClass::Remote, NetClass::Local]
                 .iter()
                 .find_map(|c| model.classes.get(c).filter(|s| !s.is_empty()))
-                .cloned()
-                .unwrap_or_else(|| {
-                    vec![Segment { max_bytes: f64::INFINITY, latency: 0.0, bw_factor: 1.0 }]
-                })
-        };
-        SegTable { local: resolve(NetClass::Local), remote: resolve(NetClass::Remote) }
+            {
+                Some(s) => out.extend_from_slice(s),
+                None => out.push(Segment {
+                    max_bytes: f64::INFINITY,
+                    latency: 0.0,
+                    bw_factor: 1.0,
+                }),
+            }
+        }
+        resolve_into(model, NetClass::Local, &mut self.local);
+        resolve_into(model, NetClass::Remote, &mut self.remote);
     }
 
     /// Allocation-free equivalent of [`NetModel::segment`].

@@ -4,20 +4,115 @@
 //! crosses), compute the unique max-min fair allocation: repeatedly find
 //! the most contended link, fix its flows at the equal share, remove
 //! their consumption everywhere, repeat.
+//!
+//! The solver is *incremental-friendly*: a [`LinkLoad`] maintains the
+//! per-link flow counts and the sorted set of loaded links across
+//! reshares, so a flow add/remove touches only the links on that flow's
+//! route, and each fixing round scans only the loaded links instead of
+//! every link in the topology (a fat-tree has thousands of links but a
+//! handful carry flows at any instant). The allocation is exactly — bit
+//! for bit — what the from-scratch reference computes; debug builds
+//! assert that on every solve.
 
 use super::topology::LinkId;
 
-/// Reusable buffers for [`max_min_rates_into`]: the residual-capacity
-/// vector is O(links) (about a thousand entries on the paper's
-/// fat-trees), and resharing runs on every flow arrival/departure — a
-/// workspace held by the network turns those per-reshare allocations
-/// into `clear()`s.
+/// Per-link flow counts plus the ascending set of links with at least
+/// one flow, maintained incrementally across reshares: adding or
+/// removing a flow touches only the links on its route. Feeding this to
+/// [`max_min_rates_staged`] turns the per-round bottleneck scan from
+/// O(all links) into O(loaded links).
+#[derive(Default, Clone)]
+pub struct LinkLoad {
+    counts: Vec<u32>,
+    /// Links with `counts > 0`, kept sorted ascending (the solver's
+    /// first-strict-minimum tie-break is defined on ascending link id).
+    active: Vec<LinkId>,
+}
+
+impl LinkLoad {
+    /// Grow the count table to cover `nl` links (never shrinks).
+    pub fn ensure_links(&mut self, nl: usize) {
+        if self.counts.len() < nl {
+            self.counts.resize(nl, 0);
+        }
+    }
+
+    /// Drop every flow (O(loaded links), not O(all links)).
+    pub fn clear(&mut self) {
+        for &l in &self.active {
+            self.counts[l as usize] = 0;
+        }
+        self.active.clear();
+    }
+
+    pub fn add_route(&mut self, route: &[LinkId]) {
+        for &l in route {
+            let c = &mut self.counts[l as usize];
+            if *c == 0 {
+                let pos = self.active.binary_search(&l).unwrap_err();
+                self.active.insert(pos, l);
+            }
+            *c += 1;
+        }
+    }
+
+    pub fn remove_route(&mut self, route: &[LinkId]) {
+        for &l in route {
+            let c = &mut self.counts[l as usize];
+            debug_assert!(*c > 0, "removing a route that was never added");
+            *c -= 1;
+            if *c == 0 {
+                let pos = self.active.binary_search(&l).expect("loaded link is active");
+                self.active.remove(pos);
+            }
+        }
+    }
+
+    pub fn count(&self, l: usize) -> u32 {
+        self.counts[l]
+    }
+
+    /// The loaded links, ascending.
+    pub fn active(&self) -> &[LinkId] {
+        &self.active
+    }
+}
+
+/// Reusable buffers for the solver: the residual-capacity vector is
+/// O(links) (about a thousand entries on the paper's fat-trees), and
+/// resharing runs on every flow arrival/departure — a workspace held by
+/// the network turns those per-reshare allocations into `clear()`s.
+/// Routes are staged *flat* ([`Workspace::begin_routes`] /
+/// [`Workspace::push_route`]) so a reshare never allocates a
+/// `Vec<&[LinkId]>` either.
 #[derive(Default)]
 pub struct Workspace {
     residual: Vec<f64>,
-    unfixed: Vec<usize>,
+    unfixed: Vec<u32>,
     fixed: Vec<bool>,
     out: Vec<f64>,
+    route_flat: Vec<LinkId>,
+    route_off: Vec<usize>,
+    scan: Vec<LinkId>,
+    load: LinkLoad,
+}
+
+impl Workspace {
+    /// Start staging a fresh set of flow routes.
+    pub fn begin_routes(&mut self) {
+        self.route_flat.clear();
+        self.route_off.clear();
+        self.route_off.push(0);
+    }
+
+    /// Stage the next flow's route. Flow order is allocation order: the
+    /// progressive-filling subtraction order depends on it, so callers
+    /// must push routes in the same order on every path that claims
+    /// bit-identical rates.
+    pub fn push_route(&mut self, route: &[LinkId]) {
+        self.route_flat.extend_from_slice(route);
+        self.route_off.push(self.route_flat.len());
+    }
 }
 
 /// Compute max-min fair rates. `routes[i]` lists the links of flow `i`.
@@ -28,31 +123,164 @@ pub fn max_min_rates(caps: &[f64], routes: &[&[LinkId]]) -> Vec<f64> {
     ws.out
 }
 
-/// Allocation-reusing form of [`max_min_rates`]: identical algorithm
-/// and arithmetic, with every scratch vector drawn from `ws`. The
-/// result lives in the returned slice (valid until the next call).
+/// Allocation-reusing form of [`max_min_rates`]: identical results,
+/// with every scratch vector drawn from `ws`. The result lives in the
+/// returned slice (valid until the next call).
 pub fn max_min_rates_into<'w>(
     caps: &[f64],
     routes: &[&[LinkId]],
     ws: &'w mut Workspace,
 ) -> &'w [f64] {
+    ws.begin_routes();
+    let Workspace { route_flat, route_off, load, .. } = &mut *ws;
+    load.ensure_links(caps.len());
+    load.clear();
+    for r in routes {
+        route_flat.extend_from_slice(r);
+        route_off.push(route_flat.len());
+        load.add_route(r);
+    }
+    let Workspace { residual, unfixed, fixed, out, route_flat, route_off, scan, load } = ws;
+    solve(caps, load, route_flat, route_off, residual, unfixed, fixed, scan, out);
+    out
+}
+
+/// Solve over routes already staged in `ws` (via
+/// [`Workspace::begin_routes`]/[`Workspace::push_route`]) and a
+/// [`LinkLoad`] maintained incrementally by the caller. The load's
+/// counts must equal the per-link route counts of the staged routes —
+/// this is the reshare fast path where a flow add/remove has already
+/// updated only its own links.
+pub fn max_min_rates_staged<'w>(
+    caps: &[f64],
+    load: &LinkLoad,
+    ws: &'w mut Workspace,
+) -> &'w [f64] {
+    let Workspace { residual, unfixed, fixed, out, route_flat, route_off, scan, .. } = ws;
+    solve(caps, load, route_flat, route_off, residual, unfixed, fixed, scan, out);
+    out
+}
+
+/// The progressive-filling core. Only links in `load.active()` are
+/// seeded and scanned; every other `residual`/`unfixed` entry is stale
+/// from a previous solve and provably never read, because flows only
+/// cross links the load counts. Bottleneck candidates live in `scan`, a
+/// per-solve copy of the active list compacted in place as links drain —
+/// ascending order is preserved, so the first-strict-minimum tie-break
+/// matches the from-scratch full scan exactly.
+#[allow(clippy::too_many_arguments)]
+fn solve(
+    caps: &[f64],
+    load: &LinkLoad,
+    route_flat: &[LinkId],
+    route_off: &[usize],
+    residual: &mut Vec<f64>,
+    unfixed: &mut Vec<u32>,
+    fixed: &mut Vec<bool>,
+    scan: &mut Vec<LinkId>,
+    out: &mut Vec<f64>,
+) {
+    let nf = route_off.len().saturating_sub(1);
+    let nl = caps.len();
+    out.clear();
+    out.resize(nf, 0.0);
+    if nf == 0 {
+        return;
+    }
+    // Lazy seeding: grow without zeroing, then write only active links.
+    if residual.len() < nl {
+        residual.resize(nl, 0.0);
+    }
+    if unfixed.len() < nl {
+        unfixed.resize(nl, 0);
+    }
+    fixed.clear();
+    fixed.resize(nf, false);
+    scan.clear();
+    scan.extend_from_slice(load.active());
+    for &l in scan.iter() {
+        residual[l as usize] = caps[l as usize];
+        unfixed[l as usize] = load.count(l as usize);
+    }
+    let mut remaining = nf;
+    while remaining > 0 {
+        // Bottleneck link: minimal fair share among links with unfixed
+        // flows, first strict minimum in ascending link order. Drained
+        // links are compacted out of the candidate list as we pass.
+        let mut best_link = usize::MAX;
+        let mut best_share = f64::INFINITY;
+        let mut w = 0;
+        for r in 0..scan.len() {
+            let l = scan[r] as usize;
+            if unfixed[l] == 0 {
+                continue;
+            }
+            scan[w] = scan[r];
+            w += 1;
+            let share = residual[l].max(0.0) / unfixed[l] as f64;
+            if share < best_share {
+                best_share = share;
+                best_link = l;
+            }
+        }
+        scan.truncate(w);
+        if best_link == usize::MAX {
+            // Remaining flows cross no links at all: unconstrained. Give
+            // them an effectively infinite rate (placeholder; routes are
+            // never empty in practice).
+            for (i, r) in out.iter_mut().enumerate() {
+                if !fixed[i] {
+                    *r = f64::INFINITY;
+                }
+            }
+            break;
+        }
+        // Fix every unfixed flow crossing the bottleneck, in flow order.
+        for i in 0..nf {
+            let route = &route_flat[route_off[i]..route_off[i + 1]];
+            if fixed[i] || !route.iter().any(|&l| l as usize == best_link) {
+                continue;
+            }
+            fixed[i] = true;
+            remaining -= 1;
+            out[i] = best_share;
+            for &l in route {
+                residual[l as usize] -= best_share;
+                unfixed[l as usize] -= 1;
+            }
+        }
+    }
+    #[cfg(debug_assertions)]
+    {
+        let routes: Vec<&[LinkId]> = (0..nf)
+            .map(|i| &route_flat[route_off[i]..route_off[i + 1]])
+            .collect();
+        let want = max_min_rates_reference(caps, &routes);
+        for (i, (&got, &want)) in out.iter().zip(&want).enumerate() {
+            assert!(
+                got.to_bits() == want.to_bits(),
+                "incremental solver diverged from reference at flow {i}: \
+                 {got:?} != {want:?}"
+            );
+        }
+    }
+}
+
+/// The from-scratch O(links)-per-round implementation this module
+/// shipped with, kept verbatim as the bit-exactness oracle: debug
+/// builds check every [`solve`] against it, and the property tests
+/// below randomize over it. Do not "optimize" this function — its
+/// f64 operation order *is* the contract.
+pub fn max_min_rates_reference(caps: &[f64], routes: &[&[LinkId]]) -> Vec<f64> {
     let nf = routes.len();
     let nl = caps.len();
-    let rate = &mut ws.out;
-    rate.clear();
-    rate.resize(nf, 0.0);
+    let mut rate = vec![0.0; nf];
     if nf == 0 {
         return rate;
     }
-    let residual = &mut ws.residual;
-    residual.clear();
-    residual.extend_from_slice(caps);
-    let unfixed_per_link = &mut ws.unfixed;
-    unfixed_per_link.clear();
-    unfixed_per_link.resize(nl, 0);
-    let fixed = &mut ws.fixed;
-    fixed.clear();
-    fixed.resize(nf, false);
+    let mut residual = caps.to_vec();
+    let mut unfixed_per_link = vec![0usize; nl];
+    let mut fixed = vec![false; nf];
     for r in routes {
         for &l in *r {
             unfixed_per_link[l as usize] += 1;
@@ -73,9 +301,6 @@ pub fn max_min_rates_into<'w>(
             }
         }
         if best_link == usize::MAX {
-            // Remaining flows cross no links at all: unconstrained. Give
-            // them an effectively infinite rate (placeholder; routes are
-            // never empty in practice).
             for (i, r) in rate.iter_mut().enumerate() {
                 if !fixed[i] {
                     *r = f64::INFINITY;
@@ -176,5 +401,111 @@ mod tests {
     #[test]
     fn empty_inputs() {
         assert!(max_min_rates(&[1.0], &[]).is_empty());
+    }
+
+    /// Property: the incremental active-set solver is bit-identical to
+    /// the from-scratch reference over randomized capacities and routes
+    /// — including skewed capacities that force share ties, sparse link
+    /// usage (most links idle, the incremental solver's home turf), and
+    /// a reused workspace carrying stale residuals between solves.
+    #[test]
+    fn incremental_solver_is_bit_identical_to_reference() {
+        let mut rng = crate::stats::Rng::new(0xC0FFEE);
+        let mut ws = Workspace::default();
+        for round in 0..400 {
+            let nl = 1 + rng.below(40);
+            let caps: Vec<f64> = (0..nl)
+                .map(|_| {
+                    // A fifth of the links share one exact capacity so
+                    // equal-share ties exercise the tie-break order.
+                    if rng.below(5) == 0 {
+                        4.0
+                    } else {
+                        rng.uniform_in(0.5, 20.0)
+                    }
+                })
+                .collect();
+            let nf = rng.below(12);
+            let routes_owned: Vec<Vec<LinkId>> = (0..nf)
+                .map(|_| {
+                    let len = 1 + rng.below(4.min(nl));
+                    let mut ls: Vec<LinkId> = Vec::new();
+                    while ls.len() < len {
+                        let l = rng.below(nl) as LinkId;
+                        if !ls.contains(&l) {
+                            ls.push(l);
+                        }
+                    }
+                    ls
+                })
+                .collect();
+            let routes: Vec<&[LinkId]> =
+                routes_owned.iter().map(|r| r.as_slice()).collect();
+            let want = max_min_rates_reference(&caps, &routes);
+            let got = max_min_rates_into(&caps, &routes, &mut ws);
+            assert_eq!(got.len(), want.len());
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    g.to_bits() == w.to_bits(),
+                    "round {round} flow {i}: {g:?} != {w:?}"
+                );
+            }
+        }
+    }
+
+    /// Property: a [`LinkLoad`] maintained by interleaved add/remove
+    /// equals one rebuilt from scratch over the surviving routes, and
+    /// [`max_min_rates_staged`] over it matches the reference.
+    #[test]
+    fn incremental_link_load_tracks_from_scratch_rebuild() {
+        let mut rng = crate::stats::Rng::new(31337);
+        let nl = 25usize;
+        let caps: Vec<f64> = (0..nl).map(|_| rng.uniform_in(1.0, 10.0)).collect();
+        let mut load = LinkLoad::default();
+        load.ensure_links(nl);
+        let mut ws = Workspace::default();
+        let mut live: Vec<Vec<LinkId>> = Vec::new();
+        for step in 0..300 {
+            if !live.is_empty() && rng.below(2) == 0 {
+                let victim = rng.below(live.len());
+                let route = live.remove(victim);
+                load.remove_route(&route);
+            } else {
+                let len = 1 + rng.below(4);
+                let mut ls: Vec<LinkId> = Vec::new();
+                while ls.len() < len {
+                    let l = rng.below(nl) as LinkId;
+                    if !ls.contains(&l) {
+                        ls.push(l);
+                    }
+                }
+                load.add_route(&ls);
+                live.push(ls);
+            }
+            // The maintained load must equal a from-scratch rebuild.
+            let mut fresh = LinkLoad::default();
+            fresh.ensure_links(nl);
+            for r in &live {
+                fresh.add_route(r);
+            }
+            assert_eq!(load.active(), fresh.active(), "step {step}");
+            for l in 0..nl {
+                assert_eq!(load.count(l), fresh.count(l), "step {step} link {l}");
+            }
+            // And the staged solve over it must match the reference.
+            ws.begin_routes();
+            for r in &live {
+                ws.push_route(r);
+            }
+            let routes: Vec<&[LinkId]> = live.iter().map(|r| r.as_slice()).collect();
+            let want = max_min_rates_reference(&caps, &routes);
+            let got = max_min_rates_staged(&caps, &load, &mut ws);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    g.to_bits() == w.to_bits(),
+                    "step {step} flow {i}: {g:?} != {w:?}"
+                );
+            }
+        }
     }
 }

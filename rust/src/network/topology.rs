@@ -90,20 +90,34 @@ impl Topology {
 
     /// Route between two nodes (list of links crossed, in order).
     pub fn route(&self, src: usize, dst: usize) -> Vec<LinkId> {
+        let mut out = Vec::new();
+        self.route_into(src, dst, &mut out);
+        out
+    }
+
+    /// Allocation-free form of [`Topology::route`]: clears `out` and
+    /// appends the same links in the same order (the skeleton replay VM
+    /// recycles route vectors through this).
+    pub fn route_into(&self, src: usize, dst: usize, out: &mut Vec<LinkId>) {
+        out.clear();
         if src == dst {
             // Intra-node: loopback only.
-            return vec![(3 * src + 2) as LinkId];
+            out.push((3 * src + 2) as LinkId);
+            return;
         }
         match self {
             Topology::Star { .. } => {
-                vec![(3 * src) as LinkId, (3 * dst + 1) as LinkId]
+                out.push((3 * src) as LinkId);
+                out.push((3 * dst + 1) as LinkId);
             }
             Topology::FatTree { down_leaf, leaves: _, tops, para, .. } => {
                 let src_leaf = src / down_leaf;
                 let dst_leaf = dst / down_leaf;
                 if src_leaf == dst_leaf {
                     // Stays under one leaf switch (non-blocking).
-                    return vec![(3 * src) as LinkId, (3 * dst + 1) as LinkId];
+                    out.push((3 * src) as LinkId);
+                    out.push((3 * dst + 1) as LinkId);
+                    return;
                 }
                 // Deterministic per-pair lane choice (ECMP-style hash).
                 // A strong mix avoids harmonic collisions between HPL's
@@ -121,12 +135,10 @@ impl Topology {
                 let trunk_base = 3 * self.nodes();
                 let up_idx = trunk_base + 2 * ((src_leaf * tops + top) * para + k);
                 let down_idx = trunk_base + 2 * ((dst_leaf * tops + top) * para + k) + 1;
-                vec![
-                    (3 * src) as LinkId,
-                    up_idx as LinkId,
-                    down_idx as LinkId,
-                    (3 * dst + 1) as LinkId,
-                ]
+                out.push((3 * src) as LinkId);
+                out.push(up_idx as LinkId);
+                out.push(down_idx as LinkId);
+                out.push((3 * dst + 1) as LinkId);
             }
         }
     }

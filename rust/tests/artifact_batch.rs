@@ -340,7 +340,7 @@ fn queue_worker_without_the_runtime_fails_structured() {
     let base = fresh_dir("noart");
     let points = campaign(4, 23);
     hplsim::coordinator::backend::queue::init_queue(
-        &base, &points, 2, 30.0, Some(4), true,
+        &base, &points, 2, 30.0, Some(4), true, 0,
     )
     .unwrap();
     let out = std::process::Command::new(hplsim_exe())

@@ -211,7 +211,7 @@ fn queue_lease_expiry_reclaims_dead_workers_task() {
 
     // Build the queue directly (what FileQueue::prepare does), with a
     // short lease so expiry is immediate in test time.
-    queue::init_queue(&qdir, &points, 4, 2.0, None, true).unwrap();
+    queue::init_queue(&qdir, &points, 4, 2.0, None, true, 0).unwrap();
 
     // Simulate a worker that claimed task-0000 and died: the lease
     // exists but its heartbeat stopped an hour ago.

@@ -193,7 +193,7 @@ fn loaded_manifest_simulates_identically() {
     let path = dir.join("campaign.json");
     Manifest::new(points.clone()).save(&path).unwrap();
     let loaded = Manifest::load(&path).unwrap();
-    let opts = SweepOptions { threads: 2, cache_dir: None, progress: false, no_skeleton: false };
+    let opts = SweepOptions { threads: 2, cache_dir: None, progress: false, no_skeleton: false, wave: 0 };
     let a = run_campaign(&points, &opts).unwrap();
     let b = run_campaign(&loaded.points, &opts).unwrap();
     assert_eq!(serialize(&a.results), serialize(&b.results));
@@ -210,7 +210,7 @@ fn sharded_execution_merges_bit_identical() {
     let points = campaign(24, 99);
     let single = run_campaign(
         &points,
-        &SweepOptions { threads: 2, cache_dir: None, progress: false, no_skeleton: false },
+        &SweepOptions { threads: 2, cache_dir: None, progress: false, no_skeleton: false, wave: 0 },
     )
     .unwrap();
 
@@ -226,7 +226,7 @@ fn sharded_execution_merges_bit_identical() {
         let part = loaded.shard_points(shards, index);
         run_campaign(
             &part,
-            &SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false },
+            &SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false, wave: 0 },
         )
         .unwrap();
         dirs.push(dir);
@@ -395,13 +395,13 @@ fn scenario_campaign_shards_merge_bit_identical() {
     // Thread-count determinism of seed-materialization.
     let single = run_campaign(
         &points,
-        &SweepOptions { threads: 1, cache_dir: None, progress: false, no_skeleton: false },
+        &SweepOptions { threads: 1, cache_dir: None, progress: false, no_skeleton: false, wave: 0 },
     )
     .unwrap();
     for threads in [2usize, 8] {
         let rep = run_campaign(
             &points,
-            &SweepOptions { threads, cache_dir: None, progress: false, no_skeleton: false },
+            &SweepOptions { threads, cache_dir: None, progress: false, no_skeleton: false, wave: 0 },
         )
         .unwrap();
         assert_eq!(
@@ -422,7 +422,7 @@ fn scenario_campaign_shards_merge_bit_identical() {
         let part = loaded.shard_points(shards, index);
         run_campaign(
             &part,
-            &SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false },
+            &SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false, wave: 0 },
         )
         .unwrap();
         dirs.push(dir);

@@ -61,7 +61,7 @@ fn worker_opts() -> WorkerOptions {
 #[test]
 fn truncated_queue_json_is_a_structured_error() {
     let qdir = fresh_dir("trunc_meta");
-    queue::init_queue(&qdir, &points(2), 2, 5.0, None, true).unwrap();
+    queue::init_queue(&qdir, &points(2), 2, 5.0, None, true, 0).unwrap();
     // Truncate queue.json mid-token: the worker must report the damaged
     // file once its init wait expires — no hang, no panic.
     let meta = std::fs::read_to_string(qdir.join("queue.json")).unwrap();
@@ -74,7 +74,7 @@ fn truncated_queue_json_is_a_structured_error() {
 #[test]
 fn wrong_format_queue_json_is_a_structured_error() {
     let qdir = fresh_dir("format_meta");
-    queue::init_queue(&qdir, &points(2), 2, 5.0, None, true).unwrap();
+    queue::init_queue(&qdir, &points(2), 2, 5.0, None, true, 0).unwrap();
     // Valid JSON, wrong format marker: not a queue.
     std::fs::write(qdir.join("queue.json"), r#"{"format":"something-else"}"#).unwrap();
     let err = run_worker(&qdir, &worker_opts()).unwrap_err();
@@ -85,7 +85,7 @@ fn wrong_format_queue_json_is_a_structured_error() {
 #[test]
 fn corrupt_manifest_is_a_structured_error() {
     let qdir = fresh_dir("bad_manifest");
-    queue::init_queue(&qdir, &points(2), 2, 5.0, None, true).unwrap();
+    queue::init_queue(&qdir, &points(2), 2, 5.0, None, true, 0).unwrap();
     std::fs::write(qdir.join("manifest.json"), "{\"format\": \"hplsim-man").unwrap();
     let err = run_worker(&qdir, &worker_opts()).unwrap_err();
     // read_meta succeeds, Manifest::load must fail loudly.
@@ -99,7 +99,7 @@ fn corrupt_manifest_is_a_structured_error() {
 #[test]
 fn corrupt_task_markers_are_a_structured_error_not_a_hang() {
     let qdir = fresh_dir("bad_markers");
-    queue::init_queue(&qdir, &points(2), 2, 5.0, None, true).unwrap();
+    queue::init_queue(&qdir, &points(2), 2, 5.0, None, true, 0).unwrap();
     // Replace the real todo markers with garbage names the queue cannot
     // attribute to any task: nothing is claimable, nothing is leased,
     // nothing is done — a persistent hole, which the worker must report
@@ -122,7 +122,7 @@ fn corrupt_task_markers_are_a_structured_error_not_a_hang() {
 fn future_mtime_lease_is_reclaimed_not_pinned_forever() {
     let qdir = fresh_dir("future_lease");
     let pts = points(3);
-    queue::init_queue(&qdir, &pts, 2, 2.0, None, true).unwrap();
+    queue::init_queue(&qdir, &pts, 2, 2.0, None, true, 0).unwrap();
     // A lease whose heartbeat stamp is an hour in the *future* (clock
     // skew, a corrupted filesystem, or a hostile touch). duration_since
     // fails for future stamps, and treating that as "not expired" would
@@ -151,7 +151,7 @@ fn future_mtime_lease_is_reclaimed_not_pinned_forever() {
 fn done_marker_without_cache_entry_is_a_structured_error() {
     let qdir = fresh_dir("done_no_cache");
     let pts = points(2);
-    queue::init_queue(&qdir, &pts, 2, 5.0, None, true).unwrap();
+    queue::init_queue(&qdir, &pts, 2, 5.0, None, true, 0).unwrap();
     // Every task claims to be done, but no result ever reached the
     // shared cache (e.g. a worker whose cache writes all failed on a
     // full disk, with the completion rename racing ahead). Collection
@@ -182,7 +182,7 @@ fn done_marker_without_cache_entry_is_a_structured_error() {
 #[test]
 fn out_of_range_task_marker_cannot_complete_the_queue() {
     let qdir = fresh_dir("oob_marker");
-    queue::init_queue(&qdir, &points(2), 2, 5.0, None, true).unwrap();
+    queue::init_queue(&qdir, &points(2), 2, 5.0, None, true, 0).unwrap();
     // Replace task-0001 with a marker addressing a partition that does
     // not exist: its (empty) execution completes, but the queue can
     // then never reach `tasks` done markers with real names — the

@@ -1,0 +1,286 @@
+//! Lane-batched replay-wave equivalence and allocation discipline:
+//!
+//! * a wave of K seeds through [`replay_wave`] is bit-identical to K
+//!   sequential [`replay`] calls and to the full engine
+//!   (`simulate_direct`), lane for lane;
+//! * the CLI emits byte-identical `campaign.csv` across wave sizes
+//!   {1, uneven, default}, `--no-skeleton`, and all three backends;
+//! * steady-state wave replay through a warmed [`ReplayArena`]
+//!   performs **zero** heap allocations, asserted by a counting global
+//!   allocator (release builds only — the debug build's incremental-
+//!   resharing bit-identity guard allocates on purpose).
+//!
+//! The child processes are the actual `hplsim` binary
+//! (`CARGO_BIN_EXE_hplsim`), so the CLI tests exercise the same code
+//! path a deployment runs.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use hplsim::blas::{DgemmModel, NodeCoef};
+use hplsim::coordinator::backend::{
+    point_seed, replay, replay_wave, results_identical, ReplayArena, SimPoint,
+    Skeleton,
+};
+use hplsim::coordinator::manifest::Manifest;
+use hplsim::hpl::{simulate_direct, Bcast, HplConfig, HplResult, Rfact, SwapAlg};
+use hplsim::network::{NetModel, Topology};
+
+/// Counting allocator: every alloc/realloc on a thread that opted in
+/// (`TRACK`) bumps the counter. `try_with` keeps thread teardown safe,
+/// and threads that never opt in (the test harness, sibling tests) are
+/// invisible to the count.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TRACK: Cell<bool> = const { Cell::new(false) };
+}
+
+fn count() {
+    let _ = TRACK.try_with(|t| {
+        if t.get() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        count();
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        count();
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        count();
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn hplsim_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_hplsim"))
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("hplsim_wave_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A platform with real per-node heterogeneity and nonzero variability,
+/// so the batched draw generation is exercised for every (rank, epoch).
+fn platform() -> (Topology, NetModel, DgemmModel) {
+    let dgemm = DgemmModel {
+        nodes: (0..3)
+            .map(|i| NodeCoef {
+                mu: [1e-11 * (1.0 + 0.03 * i as f64), 0.0, 0.0, 0.0, 5e-7],
+                sigma: [4e-13, 0.0, 0.0, 0.0, 0.0],
+            })
+            .collect(),
+    };
+    (Topology::star(3, 12.5e9, 40e9), NetModel::ideal(), dgemm)
+}
+
+fn cfg() -> HplConfig {
+    HplConfig {
+        n: 192,
+        nb: 32,
+        p: 2,
+        q: 3,
+        depth: 1,
+        bcast: Bcast::RingM,
+        swap: SwapAlg::BinExch,
+        swap_threshold: 64,
+        rfact: Rfact::Crout,
+        nbmin: 8,
+    }
+}
+
+/// Wave-of-K replay is bit-identical to K sequential per-point replays
+/// and to the engine, lane by lane — and a second wave through the
+/// *same* arena reproduces the first exactly (no state leaks between
+/// waves).
+#[test]
+fn wave_matches_sequential_replay_and_engine() {
+    let (topo, net, dgemm) = platform();
+    let cfg = cfg();
+    let rpn = 2;
+    let (skel, _pilot) = Skeleton::compile(&cfg, &topo, &net, &dgemm, rpn, 5);
+    let skel = skel.expect("trace poisoned");
+    let seeds: Vec<u64> = (0..8).map(|i| point_seed(77, i)).collect();
+
+    let mut arena = ReplayArena::new();
+    let mut wave: Vec<HplResult> = Vec::new();
+    replay_wave(&skel, &cfg, &topo, &net, &dgemm, &seeds, &mut arena, &mut wave)
+        .expect("wave replay");
+    assert_eq!(wave.len(), seeds.len());
+
+    for (j, &seed) in seeds.iter().enumerate() {
+        let seq =
+            replay(&skel, &cfg, &topo, &net, &dgemm, rpn, seed).expect("seq replay");
+        let eng = simulate_direct(&cfg, &topo, &net, &dgemm, rpn, seed);
+        assert!(
+            results_identical(&wave[j], &seq),
+            "lane {j}: wave vs sequential replay diverged"
+        );
+        assert!(
+            results_identical(&wave[j], &eng),
+            "lane {j}: wave vs engine diverged"
+        );
+        // Exact f64 identity on the headline numbers, belt and braces.
+        assert_eq!(wave[j].seconds.to_bits(), eng.seconds.to_bits());
+        assert_eq!(wave[j].gflops.to_bits(), eng.gflops.to_bits());
+    }
+
+    // Same seeds through the same (now warm) arena: bit-identical.
+    let mut again: Vec<HplResult> = Vec::new();
+    replay_wave(&skel, &cfg, &topo, &net, &dgemm, &seeds, &mut arena, &mut again)
+        .expect("second wave");
+    for (a, b) in wave.iter().zip(&again) {
+        assert!(results_identical(a, b), "arena reuse changed a result");
+    }
+}
+
+/// Steady-state wave replay allocates nothing: after a warm-up wave
+/// sized the arena, a second identical wave through it performs zero
+/// heap allocations. Release builds only — the debug build's
+/// max-min-resharing reference guard allocates by design (and
+/// `structure_key` would too, which is why this drives `replay_wave`
+/// directly rather than `ScheduleMemo`).
+#[test]
+fn warmed_arena_wave_replay_is_allocation_free() {
+    let (topo, net, dgemm) = platform();
+    let cfg = cfg();
+    let (skel, _pilot) = Skeleton::compile(&cfg, &topo, &net, &dgemm, 2, 5);
+    let skel = skel.expect("trace poisoned");
+    let seeds: Vec<u64> = (0..6).map(|i| point_seed(31, i)).collect();
+
+    let mut arena = ReplayArena::new();
+    let mut out: Vec<HplResult> = Vec::with_capacity(seeds.len());
+    // Two warm-up waves: the first sizes every buffer, the second
+    // proves the sizes are stable before measuring.
+    for _ in 0..2 {
+        out.clear();
+        replay_wave(&skel, &cfg, &topo, &net, &dgemm, &seeds, &mut arena, &mut out)
+            .expect("warm-up wave");
+    }
+
+    out.clear();
+    ALLOCS.store(0, Ordering::Relaxed);
+    TRACK.with(|t| t.set(true));
+    let res = replay_wave(&skel, &cfg, &topo, &net, &dgemm, &seeds, &mut arena, &mut out);
+    TRACK.with(|t| t.set(false));
+    res.expect("measured wave");
+    assert_eq!(out.len(), seeds.len());
+
+    let allocs = ALLOCS.load(Ordering::Relaxed);
+    #[cfg(not(debug_assertions))]
+    assert_eq!(
+        allocs, 0,
+        "steady-state wave replay must not touch the heap ({allocs} allocations)"
+    );
+    #[cfg(debug_assertions)]
+    let _ = allocs; // debug builds allocate in the resharing guard
+}
+
+/// A structured campaign (one structure class, seeds varying) plus a
+/// second interleaved class, so wave grouping sees both a long
+/// same-class run and class boundaries.
+fn wave_campaign() -> Vec<SimPoint> {
+    let (topo, net, dgemm) = platform();
+    let base = cfg();
+    (0..12)
+        .map(|i| {
+            let mut c = base.clone();
+            if i % 4 == 3 {
+                c.nb = 16; // a second structure class, interleaved
+            }
+            SimPoint::explicit(
+                format!("wv{i}"),
+                c,
+                topo.clone(),
+                net.clone(),
+                dgemm.clone(),
+                2,
+                point_seed(13, i as u64),
+            )
+        })
+        .collect()
+}
+
+/// The CLI surface: `campaign.csv` is byte-identical across wave sizes
+/// (1 = per-point, an uneven 5, and the default), `--no-skeleton`, and
+/// the subprocess/queue backends with explicit `--wave-size`.
+#[test]
+fn cli_wave_sizes_emit_identical_campaign_csv() {
+    let base = fresh_dir("cli");
+    let points = wave_campaign();
+    let mpath = base.join("campaign.json");
+    Manifest::new(points).save(&mpath).unwrap();
+
+    let run = |extra: &[&str], out: &Path| {
+        let mut cmd = std::process::Command::new(hplsim_exe());
+        cmd.arg("sweep")
+            .arg("--manifest")
+            .arg(&mpath)
+            .arg("--threads")
+            .arg("2")
+            .arg("--no-cache")
+            .arg("--out")
+            .arg(out);
+        for a in extra {
+            cmd.arg(a);
+        }
+        let status = cmd
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .status()
+            .expect("spawn hplsim sweep");
+        assert!(status.success(), "sweep {extra:?} exited with {status}");
+        std::fs::read(out.join("campaign.csv")).expect("campaign.csv written")
+    };
+
+    let want = run(&["--no-skeleton"], &base.join("out-engine"));
+    let per_point = run(&["--wave-size", "1"], &base.join("out-w1"));
+    assert_eq!(per_point, want, "--wave-size 1 diverged from the engine");
+    let uneven = run(&["--wave-size", "5"], &base.join("out-w5"));
+    assert_eq!(uneven, want, "--wave-size 5 diverged");
+    let default = run(&[], &base.join("out-wdef"));
+    assert_eq!(default, want, "default wave size diverged");
+    let sp = run(
+        &["--backend", "subprocess", "--shards", "2", "--wave-size", "3"],
+        &base.join("out-sp"),
+    );
+    assert_eq!(sp, want, "subprocess wave replay diverged");
+    let q = run(
+        &[
+            "--backend",
+            "queue",
+            "--queue-dir",
+            base.join("queue").to_str().unwrap(),
+            "--queue-workers",
+            "2",
+            "--queue-tasks",
+            "3",
+            "--wave-size",
+            "4",
+        ],
+        &base.join("out-queue"),
+    );
+    assert_eq!(q, want, "queue wave replay diverged");
+    let _ = std::fs::remove_dir_all(&base);
+}

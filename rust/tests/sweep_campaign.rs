@@ -74,7 +74,7 @@ fn campaign_is_bit_identical_across_thread_counts() {
     let points = campaign(32, 42);
     let baseline = run_campaign(
         &points,
-        &SweepOptions { threads: 1, cache_dir: None, progress: false, no_skeleton: false },
+        &SweepOptions { threads: 1, cache_dir: None, progress: false, no_skeleton: false, wave: 0 },
     )
     .unwrap();
     let expected = serialize(&baseline.results);
@@ -82,7 +82,7 @@ fn campaign_is_bit_identical_across_thread_counts() {
     for threads in [2usize, 8] {
         let rep = run_campaign(
             &points,
-            &SweepOptions { threads, cache_dir: None, progress: false, no_skeleton: false },
+            &SweepOptions { threads, cache_dir: None, progress: false, no_skeleton: false, wave: 0 },
         )
         .unwrap();
         assert_eq!(
@@ -100,7 +100,7 @@ fn campaign_is_bit_identical_across_thread_counts() {
 fn resume_recomputes_only_uncached_points() {
     let dir = fresh_dir("resume");
     let points = campaign(12, 7);
-    let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false };
+    let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false, wave: 0 };
 
     let first = run_campaign(&points, &opts).unwrap();
     assert_eq!(first.computed, 12);
@@ -137,7 +137,7 @@ fn resume_recomputes_only_uncached_points() {
 fn resume_survives_corrupted_and_truncated_cache_files() {
     let dir = fresh_dir("corrupt");
     let points = campaign(8, 21);
-    let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false };
+    let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false, wave: 0 };
     let first = run_campaign(&points, &opts).unwrap();
     assert_eq!(first.computed, 8);
 
@@ -180,7 +180,7 @@ fn stale_tmp_files_cleaned_on_campaign_start() {
     std::fs::write(&fresh, "in flight").unwrap();
 
     let points = campaign(3, 13);
-    let opts = SweepOptions { threads: 1, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false };
+    let opts = SweepOptions { threads: 1, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false, wave: 0 };
     run_campaign(&points, &opts).unwrap();
     assert!(!stale.exists(), "old orphaned tmp file survived campaign start");
     assert!(fresh.exists(), "fresh (possibly in-flight) tmp file was reaped");
@@ -208,7 +208,7 @@ fn stale_tmp_files_cleaned_on_campaign_start() {
 fn cache_misses_on_fingerprint_change() {
     let dir = fresh_dir("fpmiss");
     let points = campaign(4, 3);
-    let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false };
+    let opts = SweepOptions { threads: 2, cache_dir: Some(dir.clone()), progress: false, no_skeleton: false, wave: 0 };
     run_campaign(&points, &opts).unwrap();
 
     // Same campaign with different per-point seeds: all fingerprints
@@ -238,14 +238,14 @@ fn sweep_speedup_at_4_threads() {
     let t0 = std::time::Instant::now();
     let seq = run_campaign(
         &points,
-        &SweepOptions { threads: 1, cache_dir: None, progress: false, no_skeleton: false },
+        &SweepOptions { threads: 1, cache_dir: None, progress: false, no_skeleton: false, wave: 0 },
     )
     .unwrap();
     let t_seq = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
     let par = run_campaign(
         &points,
-        &SweepOptions { threads: 4, cache_dir: None, progress: false, no_skeleton: false },
+        &SweepOptions { threads: 4, cache_dir: None, progress: false, no_skeleton: false, wave: 0 },
     )
     .unwrap();
     let t_par = t1.elapsed().as_secs_f64();
