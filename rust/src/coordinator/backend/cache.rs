@@ -80,12 +80,14 @@ pub fn cache_path_for(dir: &Path, point: &SimPoint) -> PathBuf {
     cache_path_fp(dir, point.fingerprint())
 }
 
-/// Parse one entry: the result plus its evaluation-path tag. `None` on
-/// absence, corruption, a fingerprint mismatch, or a different model
-/// version.
-fn parse_entry(dir: &Path, fp: u64) -> Option<(HplResult, String)> {
-    let text = std::fs::read_to_string(cache_path_fp(dir, fp)).ok()?;
-    let v = Json::parse(&text).ok()?;
+/// Parse the raw text of one cache entry against an expected
+/// fingerprint: the result plus its evaluation-path tag. `None` on
+/// corruption, a fingerprint mismatch, or a different model version.
+/// This is the validity rule of the whole cache, shared by file lookups
+/// and by the `hplsim serve` result store (whose entries arrive as raw
+/// bytes over the wire and must be vetted before landing on disk).
+pub(crate) fn parse_entry_text(text: &str, fp: u64) -> Option<(HplResult, String)> {
+    let v = Json::parse(text).ok()?;
     if v.get("fingerprint")?.as_str()? != format!("{fp:016x}") {
         return None;
     }
@@ -98,6 +100,14 @@ fn parse_entry(dir: &Path, fp: u64) -> Option<(HplResult, String)> {
         .unwrap_or(EVAL_DIRECT)
         .to_string();
     Some((result_from_json(v.get("result")?)?, eval))
+}
+
+/// Parse one entry: the result plus its evaluation-path tag. `None` on
+/// absence, corruption, a fingerprint mismatch, or a different model
+/// version.
+fn parse_entry(dir: &Path, fp: u64) -> Option<(HplResult, String)> {
+    let text = std::fs::read_to_string(cache_path_fp(dir, fp)).ok()?;
+    parse_entry_text(&text, fp)
 }
 
 /// Look a point up in the cache; misses on absence, corruption, a
@@ -213,4 +223,80 @@ pub(crate) fn clean_stale_tmp(dir: &Path) {
             let _ = std::fs::remove_file(entry.path());
         }
     }
+}
+
+/// The fingerprint a cache-entry filename addresses: 16 hex digits
+/// followed by `.` and one or more suffix segments ending in `json` —
+/// matches both the plain campaign caches (`<fp>.json`) and the serve
+/// store's eval-qualified names (`<fp>.<eval>.json`). Everything else
+/// (`queue.json`, `manifest.json`, in-flight `*.tmp.*` files) is not an
+/// entry.
+fn entry_fp(name: &str) -> Option<u64> {
+    if !name.ends_with(".json") || name.contains(".tmp.") {
+        return None;
+    }
+    let b = name.as_bytes();
+    if b.len() < 17 || b[16] != b'.' || !b[..16].iter().all(u8::is_ascii_hexdigit) {
+        return None;
+    }
+    u64::from_str_radix(&name[..16], 16).ok()
+}
+
+/// What [`cache_gc`] did (or, under `--dry-run`, would do).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// Cache entries examined.
+    pub scanned: usize,
+    /// Entries removed (or flagged for removal under dry-run).
+    pub pruned: usize,
+    /// Entries kept.
+    pub kept: usize,
+    /// Bytes the pruned entries occupy on disk.
+    pub bytes: u64,
+}
+
+/// Garbage-collect a fingerprint-keyed cache directory (`hplsim cache
+/// gc`): prune entries whose mtime is older than `max_age_secs`, or —
+/// when a `keep` set of fingerprints is given (the fingerprints of a
+/// manifest) — entries the set does not reference. Either criterion
+/// alone prunes; an entry survives only by passing both that were
+/// given. `dry_run` reports without deleting. Non-entry files
+/// (manifests, queue metadata) are never touched; stale `*.tmp.*`
+/// leftovers are swept opportunistically on a real (non-dry) run.
+pub fn cache_gc(
+    dir: &Path,
+    max_age_secs: Option<f64>,
+    keep: Option<&std::collections::HashSet<u64>>,
+    dry_run: bool,
+) -> Result<GcReport, String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut report = GcReport::default();
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let Some(fp) = entry_fp(&name) else { continue };
+        report.scanned += 1;
+        let too_old = max_age_secs.is_some_and(|max| {
+            entry
+                .metadata()
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| t.elapsed().ok())
+                .is_some_and(|age| age.as_secs_f64() > max)
+        });
+        let unreferenced = keep.is_some_and(|set| !set.contains(&fp));
+        if too_old || unreferenced {
+            report.pruned += 1;
+            report.bytes += entry.metadata().map(|m| m.len()).unwrap_or(0);
+            if !dry_run {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        } else {
+            report.kept += 1;
+        }
+    }
+    if !dry_run {
+        clean_stale_tmp(dir);
+    }
+    Ok(report)
 }

@@ -1,0 +1,327 @@
+//! Transport-agnostic lease semantics shared by the distributed
+//! campaign backends.
+//!
+//! Both distributed substrates hand tasks to workers under one
+//! protocol: a worker *claims* a task, *heartbeats* the claim while
+//! executing, and *completes* it; a holder silent for longer than the
+//! lease duration is presumed dead and its task is requeued for any
+//! sibling to re-claim. [`FileQueue`](super::FileQueue) implements the
+//! protocol over a shared filesystem (atomic renames as the claim
+//! primitive, lease-file mtimes as heartbeats); the `hplsim serve`
+//! coordinator (`coordinator::serve`) implements it over HTTP against
+//! an in-memory [`LeaseTable`]. The *decisions* — when a lease counts
+//! as expired, how often a holder must heartbeat, how an idle worker
+//! should pace its polling — live here, once, so the two transports
+//! cannot drift apart.
+
+use std::time::{Duration, Instant, SystemTime};
+
+/// Whether a lease stamped at `stamp` has expired by `now`. The rule
+/// both transports share:
+///
+/// * older than `lease_secs` — the holder missed every heartbeat window
+///   (heartbeats restamp "now" every [`heartbeat_interval`], a third of
+///   the lease), so it is presumed dead;
+/// * stamped further than `lease_secs` in the *future* — clock skew, a
+///   corrupted filesystem, or a hostile touch. Ordinary skew stays well
+///   under a lease, but a timestamp further ahead than a whole lease
+///   can never belong to a live heartbeat, and treating it as
+///   unexpirable would pin the task until the end of time — a hang,
+///   where fault injection demands recovery.
+pub fn stamp_expired(now: SystemTime, stamp: SystemTime, lease_secs: f64) -> bool {
+    match now.duration_since(stamp) {
+        Ok(age) => age.as_secs_f64() > lease_secs,
+        Err(ahead) => ahead.duration().as_secs_f64() > lease_secs,
+    }
+}
+
+/// How often a lease holder must refresh its claim: a third of the
+/// lease, so two missed beats still leave slack before expiry (floored
+/// for the sub-second leases fault-injection tests run with).
+pub fn heartbeat_interval(lease_secs: f64) -> Duration {
+    Duration::from_secs_f64((lease_secs / 3.0).max(0.05))
+}
+
+/// Idle-poll pacing with capped exponential backoff: the first wait is
+/// `base` (the historical fixed poll), and every consecutive idle wait
+/// doubles up to `10 * base`. Any sign of progress — a claim, a
+/// reclaim, a status change — resets the next wait back to `base`, so a
+/// busy queue polls exactly as before while a big idle one stops
+/// hammering its shared filesystem (or coordinator) ten times a second.
+#[derive(Clone, Debug)]
+pub struct PollBackoff {
+    base: Duration,
+    cap: Duration,
+    next: Duration,
+}
+
+impl PollBackoff {
+    pub fn new(base: Duration) -> PollBackoff {
+        let base = base.max(Duration::from_millis(1));
+        PollBackoff { base, cap: base * 10, next: base }
+    }
+
+    /// The configured base interval (what a single idle poll waits).
+    pub fn base(&self) -> Duration {
+        self.base
+    }
+
+    /// Forget accumulated backoff: the next wait is `base` again.
+    pub fn reset(&mut self) {
+        self.next = self.base;
+    }
+
+    /// Sleep for the current interval, then double it (capped).
+    pub fn wait(&mut self) {
+        std::thread::sleep(self.next);
+        self.next = (self.next * 2).min(self.cap);
+    }
+
+    /// The interval [`PollBackoff::wait`] would sleep next (exposed for
+    /// tests; `wait` itself is the production path).
+    pub fn next_interval(&self) -> Duration {
+        self.next
+    }
+}
+
+/// Outcome of [`LeaseTable::complete`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompleteOutcome {
+    /// The holder still owned the lease; the task is now done.
+    Completed,
+    /// The task was already done (a duplicate completion — idempotent,
+    /// e.g. a retried HTTP request whose first attempt landed).
+    AlreadyDone,
+    /// The lease was reclaimed from under the holder (it was presumed
+    /// dead); the current holder — or a fresh claim — owns completion.
+    Lost,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum TaskState {
+    Todo,
+    Leased { holder: u64, stamp: Instant },
+    Done,
+}
+
+/// The in-memory side of the lease protocol: per-task
+/// todo → leased → done state with claim / heartbeat / expiry-reclaim /
+/// complete transitions. This is exactly the state machine the
+/// `FileQueue` marker directories encode on disk (`todo/`, `leases/`
+/// with mtime heartbeats, `done/`), factored out so the `hplsim serve`
+/// coordinator can run the same semantics over HTTP without a shared
+/// filesystem. Single-process by construction (the server owns it
+/// behind a mutex), so stamps are monotonic [`Instant`]s — no clock
+/// skew, no future-stamp case.
+#[derive(Debug)]
+pub struct LeaseTable {
+    lease_secs: f64,
+    states: Vec<TaskState>,
+    next_holder: u64,
+    reclaimed: u64,
+}
+
+impl LeaseTable {
+    pub fn new(tasks: usize, lease_secs: f64) -> LeaseTable {
+        LeaseTable {
+            lease_secs: if lease_secs > 0.0 && lease_secs.is_finite() {
+                lease_secs
+            } else {
+                30.0
+            },
+            states: vec![TaskState::Todo; tasks],
+            next_holder: 0,
+            reclaimed: 0,
+        }
+    }
+
+    pub fn lease_secs(&self) -> f64 {
+        self.lease_secs
+    }
+
+    pub fn total(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn done(&self) -> usize {
+        self.states.iter().filter(|s| matches!(s, TaskState::Done)).count()
+    }
+
+    pub fn leased(&self) -> usize {
+        self.states.iter().filter(|s| matches!(s, TaskState::Leased { .. })).count()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.done() == self.states.len()
+    }
+
+    /// Cumulative count of leases reclaimed from presumed-dead holders.
+    pub fn reclaimed(&self) -> u64 {
+        self.reclaimed
+    }
+
+    /// Requeue every lease whose last heartbeat is older than the lease
+    /// duration. Returns the reclaimed task indices.
+    pub fn reclaim_expired(&mut self, now: Instant) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (t, s) in self.states.iter_mut().enumerate() {
+            if let TaskState::Leased { stamp, .. } = *s {
+                if now.saturating_duration_since(stamp).as_secs_f64() > self.lease_secs {
+                    *s = TaskState::Todo;
+                    out.push(t);
+                }
+            }
+        }
+        self.reclaimed += out.len() as u64;
+        out
+    }
+
+    /// Claim the first unclaimed task, returning `(task, holder token)`.
+    /// The token is what every later heartbeat/complete must present —
+    /// a reclaimed-and-reassigned task has a new holder, and the old
+    /// one's stale token no longer completes it.
+    pub fn claim(&mut self, now: Instant) -> Option<(usize, u64)> {
+        for (t, s) in self.states.iter_mut().enumerate() {
+            if matches!(s, TaskState::Todo) {
+                self.next_holder += 1;
+                let holder = self.next_holder;
+                *s = TaskState::Leased { holder, stamp: now };
+                return Some((t, holder));
+            }
+        }
+        None
+    }
+
+    /// Refresh a held lease; `false` means the lease was lost (the
+    /// holder should skip completion, exactly like a failed lease-file
+    /// open in the file queue).
+    pub fn heartbeat(&mut self, task: usize, holder: u64, now: Instant) -> bool {
+        match self.states.get_mut(task) {
+            Some(TaskState::Leased { holder: h, stamp }) if *h == holder => {
+                *stamp = now;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Complete a held task (idempotent: completing an already-done
+    /// task reports [`CompleteOutcome::AlreadyDone`], so a retried
+    /// completion request is harmless).
+    pub fn complete(&mut self, task: usize, holder: u64) -> CompleteOutcome {
+        let Some(s) = self.states.get_mut(task) else {
+            return CompleteOutcome::Lost;
+        };
+        match *s {
+            TaskState::Done => CompleteOutcome::AlreadyDone,
+            TaskState::Leased { holder: h, .. } if h == holder => {
+                *s = TaskState::Done;
+                CompleteOutcome::Completed
+            }
+            _ => CompleteOutcome::Lost,
+        }
+    }
+
+    /// Give a held task back (a worker failing loudly rather than
+    /// letting its lease expire). `false` if the lease was already
+    /// lost.
+    pub fn fail(&mut self, task: usize, holder: u64) -> bool {
+        let Some(s) = self.states.get_mut(task) else { return false };
+        match *s {
+            TaskState::Leased { holder: h, .. } if h == holder => {
+                *s = TaskState::Todo;
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claim_heartbeat_complete_roundtrip() {
+        let mut lt = LeaseTable::new(2, 5.0);
+        let now = Instant::now();
+        let (t0, h0) = lt.claim(now).unwrap();
+        let (t1, h1) = lt.claim(now).unwrap();
+        assert_eq!((t0, t1), (0, 1));
+        assert_ne!(h0, h1);
+        assert!(lt.claim(now).is_none(), "no third task");
+        assert!(lt.heartbeat(t0, h0, now));
+        assert!(!lt.heartbeat(t0, h1, now), "wrong holder cannot heartbeat");
+        assert_eq!(lt.complete(t0, h0), CompleteOutcome::Completed);
+        assert_eq!(lt.complete(t0, h0), CompleteOutcome::AlreadyDone);
+        assert_eq!(lt.complete(t1, h0), CompleteOutcome::Lost);
+        assert_eq!(lt.complete(t1, h1), CompleteOutcome::Completed);
+        assert!(lt.all_done());
+    }
+
+    #[test]
+    fn expiry_reclaims_and_invalidates_the_old_holder() {
+        let mut lt = LeaseTable::new(1, 1.0);
+        let t0 = Instant::now();
+        let (task, old) = lt.claim(t0).unwrap();
+        // Not yet expired: nothing reclaimed.
+        assert!(lt.reclaim_expired(t0 + Duration::from_millis(500)).is_empty());
+        // Past the lease: reclaimed and claimable again.
+        let later = t0 + Duration::from_secs(2);
+        assert_eq!(lt.reclaim_expired(later), vec![task]);
+        assert_eq!(lt.reclaimed(), 1);
+        let (task2, new) = lt.claim(later).unwrap();
+        assert_eq!(task2, task);
+        assert_ne!(old, new);
+        // The dead holder's token no longer heartbeats or completes.
+        assert!(!lt.heartbeat(task, old, later));
+        assert_eq!(lt.complete(task, old), CompleteOutcome::Lost);
+        assert_eq!(lt.complete(task, new), CompleteOutcome::Completed);
+    }
+
+    #[test]
+    fn heartbeat_defers_expiry_and_fail_requeues() {
+        let mut lt = LeaseTable::new(1, 1.0);
+        let t0 = Instant::now();
+        let (task, holder) = lt.claim(t0).unwrap();
+        // Heartbeat at +0.8s moves the stamp; +1.5s is then unexpired.
+        assert!(lt.heartbeat(task, holder, t0 + Duration::from_millis(800)));
+        assert!(lt.reclaim_expired(t0 + Duration::from_millis(1500)).is_empty());
+        assert!(lt.fail(task, holder));
+        assert!(!lt.fail(task, holder), "already given back");
+        assert!(lt.claim(t0).is_some(), "failed task is claimable again");
+    }
+
+    #[test]
+    fn stamp_expiry_covers_past_and_future_skew() {
+        let now = SystemTime::now();
+        let lease = 2.0;
+        assert!(!stamp_expired(now, now, lease));
+        assert!(!stamp_expired(now, now - Duration::from_secs(1), lease));
+        assert!(stamp_expired(now, now - Duration::from_secs(3), lease));
+        // Future stamps within a lease are skew; beyond one can never be
+        // a live heartbeat.
+        assert!(!stamp_expired(now, now + Duration::from_secs(1), lease));
+        assert!(stamp_expired(now, now + Duration::from_secs(3), lease));
+    }
+
+    #[test]
+    fn poll_backoff_doubles_to_the_cap_and_resets() {
+        let mut b = PollBackoff::new(Duration::from_millis(1));
+        assert_eq!(b.base(), Duration::from_millis(1));
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            seen.push(b.next_interval());
+            b.wait();
+        }
+        assert_eq!(
+            seen,
+            [1u64, 2, 4, 8, 10, 10]
+                .iter()
+                .map(|&ms| Duration::from_millis(ms))
+                .collect::<Vec<_>>()
+        );
+        b.reset();
+        assert_eq!(b.next_interval(), Duration::from_millis(1));
+    }
+}

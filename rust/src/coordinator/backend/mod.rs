@@ -14,7 +14,7 @@
 //! 3. [`ExecBackend::collect`] — hand the computed results back (from
 //!    memory, or read back out of the shared fingerprint-keyed cache).
 //!
-//! Three backends ship:
+//! Four backends ship:
 //!
 //! * [`InProcess`] — the work-stealing thread pool, with a per-campaign
 //!   [`MaterializeMemo`] so equal platforms calibrate once; with
@@ -24,7 +24,12 @@
 //!   manifest, merged through the shared cache;
 //! * [`FileQueue`] — a directory work queue any number of independent
 //!   `hplsim worker --queue DIR` processes pull shard leases from, with
-//!   heartbeats and crash recovery via lease expiry.
+//!   heartbeats and crash recovery via lease expiry;
+//! * `Remote` (`coordinator::serve`) — the same lease protocol over
+//!   HTTP against an `hplsim serve` coordinator daemon with a
+//!   content-addressed result store, for workers that share no
+//!   filesystem. The claim/heartbeat/expiry-reclaim semantics the file
+//!   queue and the daemon share live in [`lease`].
 //!
 //! Every backend produces bit-identical results (and therefore
 //! byte-identical `campaign.csv` reports) for the same point list —
@@ -35,6 +40,7 @@
 pub mod artifact;
 pub mod cache;
 pub mod inprocess;
+pub mod lease;
 pub mod memo;
 pub mod point;
 pub mod queue;
@@ -50,16 +56,17 @@ use crate::coordinator::table::{fnum, Table};
 
 pub use artifact::ArtifactMode;
 pub use cache::{
-    cache_lookup, cache_lookup_fp, cache_lookup_fp_eval, cache_lookup_fp_with_eval,
-    cache_path_for, cache_path_fp, cache_store, eval_tag_for, result_from_json,
-    result_to_json, EVAL_DIRECT, EVAL_PJRT,
+    cache_gc, cache_lookup, cache_lookup_fp, cache_lookup_fp_eval,
+    cache_lookup_fp_with_eval, cache_path_for, cache_path_fp, cache_store,
+    eval_tag_for, result_from_json, result_to_json, GcReport, EVAL_DIRECT, EVAL_PJRT,
 };
 pub use inprocess::InProcess;
+pub use lease::{CompleteOutcome, LeaseTable, PollBackoff};
 pub use memo::MaterializeMemo;
 pub use point::{
     point_seed, Platform, PointError, RealizedPlatform, SimPoint, MODEL_VERSION,
 };
-pub use queue::{run_worker, FileQueue, WorkerOptions, WorkerSummary};
+pub use queue::{run_worker, FileQueue, WorkerOptions, WorkerSummary, DEFAULT_POLL_MS};
 pub use skeleton::{
     replay, replay_wave, results_identical, structure_key, ReplayArena, ScheduleMemo,
     Skeleton, SKELETON_VERSION,

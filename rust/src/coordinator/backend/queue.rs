@@ -47,6 +47,7 @@ use crate::stats::json::Json;
 
 use super::cache::{cache_lookup_fp_eval, copy_entry};
 use super::inprocess::InProcess;
+use super::lease::{self, PollBackoff};
 use super::{
     collect_from_cache, kill_and_reap, resolve_exe, Campaign, ExecBackend, ExecError,
     WorkPlan,
@@ -66,7 +67,11 @@ pub const QUEUE_FORMAT: &str = "hplsim-queue-v1";
 /// error instead.
 pub const QUEUE_FORMAT_ARTIFACT: &str = "hplsim-queue-v2-artifact";
 
-const POLL: Duration = Duration::from_millis(100);
+/// Default base poll interval (historically a fixed 100 ms). Idle
+/// workers back off exponentially from this base up to 10x (see
+/// [`PollBackoff`]); any claim or reclaim resets to the base, so a busy
+/// queue polls exactly as before.
+pub const DEFAULT_POLL_MS: u64 = 100;
 
 /// The shared cache of a queue directory (where workers persist
 /// results and [`FileQueue::collect`] reads them back).
@@ -303,21 +308,12 @@ fn reclaim_expired(dir: &Path, tasks: u64, lease_secs: f64) -> Vec<String> {
     let mut reclaimed = Vec::new();
     for name in names {
         let path = leases.join(&name);
+        // Expiry policy (including the future-stamp rule) is shared
+        // with the HTTP coordinator — see `lease::stamp_expired`.
         let expired = std::fs::metadata(&path)
             .and_then(|m| m.modified())
             .ok()
-            .is_some_and(|t| match now.duration_since(t) {
-                Ok(age) => age.as_secs_f64() > lease_secs,
-                // A lease stamped in the *future*: ordinary probe skew
-                // stays well under a lease, but a timestamp further
-                // ahead than a whole lease can never belong to a live
-                // heartbeat (heartbeats restamp "now" every
-                // lease_secs/3). Treating it as unexpirable would pin
-                // the task forever — a hang, where fault injection
-                // demands recovery — so reclaim it like any other dead
-                // lease.
-                Err(ahead) => ahead.duration().as_secs_f64() > lease_secs,
-            });
+            .is_some_and(|t| lease::stamp_expired(now, t, lease_secs));
         if expired && std::fs::rename(&path, dir.join("todo").join(&name)).is_ok() {
             reclaimed.push(name);
         }
@@ -380,7 +376,7 @@ fn spawn_heartbeat(
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         use std::io::Write;
-        let interval = Duration::from_secs_f64((lease_secs / 3.0).max(0.05));
+        let interval = lease::heartbeat_interval(lease_secs);
         let slice = Duration::from_millis(20);
         loop {
             let mut waited = Duration::ZERO;
@@ -415,11 +411,15 @@ pub struct WorkerOptions {
     /// How long to wait for the queue to be initialized before giving
     /// up (lets workers start before the coordinating campaign).
     pub wait_secs: f64,
+    /// Base poll interval in milliseconds when no task is claimable.
+    /// Idle polls back off exponentially up to 10x this base; any
+    /// claimed or reclaimed task resets to the base.
+    pub poll_ms: u64,
 }
 
 impl Default for WorkerOptions {
     fn default() -> WorkerOptions {
-        WorkerOptions { threads: 0, wait_secs: 30.0 }
+        WorkerOptions { threads: 0, wait_secs: 30.0, poll_ms: DEFAULT_POLL_MS }
     }
 }
 
@@ -441,6 +441,7 @@ pub struct WorkerSummary {
 pub fn run_worker(dir: &Path, opts: &WorkerOptions) -> Result<WorkerSummary, String> {
     // Wait for the queue to exist (the coordinator may still be
     // initializing it).
+    let mut poll = PollBackoff::new(Duration::from_millis(opts.poll_ms));
     let deadline = Instant::now() + Duration::from_secs_f64(opts.wait_secs.max(0.0));
     let meta = loop {
         match read_meta(dir) {
@@ -452,7 +453,9 @@ pub fn run_worker(dir: &Path, opts: &WorkerOptions) -> Result<WorkerSummary, Str
                     opts.wait_secs
                 ));
             }
-            _ => std::thread::sleep(POLL),
+            // Fixed-interval wait here: the queue appearing is a
+            // one-shot event this worker must catch promptly.
+            _ => std::thread::sleep(poll.base()),
         }
     };
     let manifest = Manifest::load(&manifest_path(dir))?;
@@ -489,10 +492,12 @@ pub fn run_worker(dir: &Path, opts: &WorkerOptions) -> Result<WorkerSummary, Str
                 summary.computed += computed;
             }
             inconsistent = 0;
+            poll.reset();
             continue;
         }
         if !reclaim_expired(dir, meta.tasks, meta.lease_secs).is_empty() {
             inconsistent = 0;
+            poll.reset();
             continue; // a crashed sibling's task is claimable again
         }
         let todo_n = list_tasks(&dir.join("todo"), meta.tasks).len();
@@ -515,8 +520,10 @@ pub fn run_worker(dir: &Path, opts: &WorkerOptions) -> Result<WorkerSummary, Str
             inconsistent = 0;
         }
         // Unexpired leases are owned by live siblings — wait for them
-        // (we may still need to reclaim if one dies).
-        std::thread::sleep(POLL);
+        // (we may still need to reclaim if one dies), backing off while
+        // nothing is claimable so an idle worker stops hammering the
+        // shared filesystem.
+        poll.wait();
     }
 }
 
@@ -627,6 +634,11 @@ pub struct FileQueue {
     /// set and the runtime is the real PJRT client). Drives the
     /// coordinator's tag-checked prefetch and collection.
     pub eval: &'static str,
+    /// Base coordinator poll interval in milliseconds (progress checks
+    /// and lease reclaim). The coordinator polls at this fixed rate —
+    /// backoff is a *worker-side* idle behavior; delaying completion
+    /// detection here would only slow the campaign down.
+    pub poll_ms: u64,
 }
 
 impl FileQueue {
@@ -640,6 +652,7 @@ impl FileQueue {
             exe: None,
             artifact_batch: None,
             eval: super::EVAL_DIRECT,
+            poll_ms: DEFAULT_POLL_MS,
         }
     }
 
@@ -822,7 +835,7 @@ impl ExecBackend for FileQueue {
                     ),
                 ));
             }
-            std::thread::sleep(POLL);
+            std::thread::sleep(Duration::from_millis(self.poll_ms.max(1)));
         }
         // Every task is done — the spawned workers observe the drained
         // queue and exit on their own.

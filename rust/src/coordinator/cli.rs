@@ -5,13 +5,18 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use crate::coordinator::backend::{
-    campaign_table, eval_tag_for, run_worker, Campaign, CampaignReport, ExecError,
-    FileQueue, InProcess, Platform, SimPoint, Subprocess, WorkerOptions,
+    cache_gc, campaign_table, eval_tag_for, run_worker, Campaign, CampaignReport,
+    ExecError, FileQueue, InProcess, Platform, SimPoint, Subprocess, WorkerOptions,
+    DEFAULT_POLL_MS, EVAL_DIRECT,
 };
 use crate::coordinator::doe::ParamSpace;
 use crate::coordinator::experiments::{self, ExpCtx, Scale};
 use crate::coordinator::manifest::Manifest;
 use crate::coordinator::sa::{self, Design};
+use crate::coordinator::serve::{
+    parse_server, run_remote_worker, run_serve, Remote, RemoteWorkerOptions,
+    ServeOptions,
+};
 use crate::coordinator::sweep::{self, run_campaign, SweepOptions};
 use crate::coordinator::table::Table;
 use crate::coordinator::tune;
@@ -45,9 +50,10 @@ USAGE:
                [--platform FILE] [--out DIR] [--cache DIR] [--no-cache]
                [--no-artifacts] [--batch-size B]
                [--manifest FILE] [--export-manifest FILE] [--plan-only]
-               [--backend inproc|subprocess|queue] [--shards S]
+               [--backend inproc|subprocess|queue|remote] [--shards S]
                [--queue-dir DIR] [--queue-workers W] [--queue-tasks K]
-               [--lease-secs S] [--bench-json FILE] [--no-skeleton]
+               [--lease-secs S] [--server URL] [--remote-workers W]
+               [--poll-ms MS] [--bench-json FILE] [--no-skeleton]
                [--wave-size K] [--structured]
       Random HPL parameter-space campaign (NB, depth, bcast, swap, rfact,
       geometry) on the calibrated surrogate: K points (default 100) with
@@ -65,13 +71,20 @@ USAGE:
       points per batched runtime invocation, on every backend
       (subprocess shards and queue workers batch within themselves).
       --backend picks the execution substrate (identical results on all
-      three; see README \"Execution backends\"):
+      four; see README \"Execution backends\"):
         inproc      in-process work-stealing pool (default)
         subprocess  --shards S `hplsim shard` child processes (default 2)
         queue       a file work queue under --queue-dir, drained by
                     --queue-workers local workers (default 2; 0 = only
                     external `hplsim worker` processes) with --queue-tasks
                     leases expiring after --lease-secs
+        remote      submit the campaign to an `hplsim serve` coordinator
+                    at --server URL and collect results from its store;
+                    work is done by `hplsim worker --server` processes
+                    (--remote-workers spawns W locally; default 0 = only
+                    external workers). --queue-tasks and --lease-secs
+                    shape the coordinator leases as with queue. Requires
+                    the pure-Rust evaluation path (no PJRT artifacts).
       Structurally identical points (same config/topology/network, only
       coefficient and seed draws differing) share one compiled schedule
       skeleton: the engine runs once per structure class and every
@@ -94,7 +107,7 @@ USAGE:
             [--levels L] [--replicates R] [--seed N] [--out DIR]
             [--cache DIR] [--no-cache] [--threads T] [--batch-size B]
             [--no-artifacts] [--export-manifest FILE] [--plan-only]
-            [--backend inproc|subprocess|queue] [--no-skeleton]
+            [--backend inproc|subprocess|queue|remote] [--no-skeleton]
             [--wave-size K] [backend knobs as sweep]
       Sensitivity-analysis campaign over a declared (HPL config x
       platform scenario) parameter space — a JSON file naming the swept
@@ -117,7 +130,7 @@ USAGE:
   hplsim tune --space FILE [--waves W] [--wave-size K] [--keep S]
             [--shrink F] [--seed N] [--state FILE] [--out DIR]
             [--cache DIR] [--no-cache] [--threads T] [--batch-size B]
-            [--no-artifacts] [--backend inproc|subprocess|queue]
+            [--no-artifacts] [--backend inproc|subprocess|queue|remote]
             [--no-skeleton]
       Successive-halving auto-tune over the same parameter-space JSON:
       wave 0 evaluates K latin-hypercube points, every later wave
@@ -131,12 +144,32 @@ USAGE:
       --waves extends it. All evaluations share one simulation seed,
       so revisited configurations replay from the --cache. Results:
       tune.csv (every evaluation), tune_best.csv (top --keep).
-  hplsim worker --queue DIR [--threads T] [--wait-secs S]
-      Pull shard leases off a file work queue (created by
-      `sweep --backend queue`) until it is drained: claim a task,
-      simulate its points into the shared queue cache, heartbeat the
-      lease, requeue expired leases of crashed workers. Run any number,
-      on any machines sharing DIR.
+  hplsim worker (--queue DIR | --server URL) [--threads T]
+                [--wait-secs S] [--poll-ms MS]
+      Pull task leases off a file work queue (created by
+      `sweep --backend queue`) or an `hplsim serve` coordinator until
+      the work is drained: claim a task, simulate its points, submit
+      the results, heartbeat the lease so the coordinator can requeue
+      expired leases of crashed workers. Run any number, on any
+      machines sharing DIR or with network reach to URL. When no task
+      is claimable the worker polls with capped exponential backoff
+      starting at --poll-ms (default 100); with --server it exits after
+      --wait-secs of a fully idle coordinator.
+  hplsim serve --store DIR [--addr HOST:PORT] [--lease-secs S]
+      Run the campaign coordinator daemon: accept campaign manifests
+      over HTTP (POST /api/campaigns), lease tasks to `hplsim worker
+      --server` processes, and keep every result in a content-addressed
+      store under DIR keyed by (point fingerprint, evaluation-path
+      tag). Resubmitting a manifest joins the existing campaign;
+      fully-stored campaigns plan zero tasks. Default --addr is
+      127.0.0.1:7070; see README \"Campaign as a service\" for the wire
+      protocol.
+  hplsim cache gc --dir DIR [--max-age AGE] [--manifest FILE] [--dry-run]
+      Prune campaign-cache / result-store entries: delete entries older
+      than AGE (suffix s/m/h/d, e.g. 36h) or not referenced by the
+      given campaign manifest (either criterion alone prunes; at least
+      one is required). --dry-run reports what would be deleted without
+      touching anything.
   hplsim shard --manifest FILE --shards S --shard-index I --cache DIR
                [--threads T] [--quiet] [--artifacts] [--batch-size B]
                [--no-skeleton] [--wave-size K]
@@ -261,6 +294,9 @@ struct BackendCfg {
     queue_workers: usize,
     queue_tasks: u64,
     lease_secs: f64,
+    server: Option<String>,
+    remote_workers: usize,
+    poll_ms: u64,
 }
 
 /// Resolve and validate `--backend` (shared by every campaign verb, and
@@ -268,8 +304,14 @@ struct BackendCfg {
 /// calibration runs).
 fn backend_name_of(cmd: &str, opts: &HashMap<String, String>) -> Result<String, i32> {
     let name = opts.get("backend").map(String::as_str).unwrap_or("inproc").to_string();
-    if !matches!(name.as_str(), "inproc" | "in-process" | "subprocess" | "queue") {
-        eprintln!("{cmd}: unknown backend '{name}' (expected inproc, subprocess or queue)");
+    if !matches!(
+        name.as_str(),
+        "inproc" | "in-process" | "subprocess" | "queue" | "remote"
+    ) {
+        eprintln!(
+            "{cmd}: unknown backend '{name}' (expected inproc, subprocess, queue \
+             or remote)"
+        );
         return Err(2);
     }
     Ok(name)
@@ -299,9 +341,40 @@ impl BackendCfg {
                 4 * queue_workers.max(1) as u64
             }
         };
+        let server = match path_opt(opts, "server", cmd) {
+            Ok(s) => s,
+            Err(code) => return Err(code),
+        };
+        let server = match server {
+            Some(s) => match parse_server(&s) {
+                Ok(addr) => Some(addr),
+                Err(e) => {
+                    eprintln!("{cmd}: {e}");
+                    return Err(2);
+                }
+            },
+            None => None,
+        };
+        let arts = load_artifacts(opts);
+        if name == "remote" {
+            if server.is_none() {
+                eprintln!("{cmd}: --backend remote requires --server URL\n{USAGE}");
+                return Err(2);
+            }
+            // The coordinator store keys entries by evaluation-path tag
+            // and remote workers run the pure-Rust path; a client asking
+            // for PJRT-tagged results would never find them.
+            if eval_tag_for(arts.as_deref()) != EVAL_DIRECT {
+                eprintln!(
+                    "{cmd}: --backend remote runs the pure-Rust evaluation path; \
+                     pass --no-artifacts (or unload the PJRT artifacts)"
+                );
+                return Err(2);
+            }
+        }
         Ok(BackendCfg {
             name,
-            arts: load_artifacts(opts),
+            arts,
             batch_points: num(opts, "batch-size", crate::runtime::DEFAULT_BATCH_POINTS)
                 .max(1),
             shards: num(opts, "shards", 2u64),
@@ -310,6 +383,9 @@ impl BackendCfg {
             queue_workers,
             queue_tasks,
             lease_secs: num(opts, "lease-secs", 30.0f64),
+            server,
+            remote_workers: num(opts, "remote-workers", 0usize),
+            poll_ms: num(opts, "poll-ms", DEFAULT_POLL_MS),
         })
     }
 
@@ -342,6 +418,14 @@ impl BackendCfg {
                 q.artifact_batch = self.arts.is_some().then_some(self.batch_points);
                 q.eval = self.eval();
                 campaign.run(&q)
+            }
+            "remote" => {
+                // --server presence was validated in from_opts.
+                let server = self.server.clone().unwrap_or_default();
+                let mut r = Remote::new(server, self.queue_tasks, self.remote_workers);
+                r.lease_secs = self.lease_secs;
+                r.poll_ms = self.poll_ms;
+                campaign.run(&r)
             }
             _ => match &self.arts {
                 Some(a) => {
@@ -1100,22 +1184,52 @@ fn cmd_tune(opts: &HashMap<String, String>) -> i32 {
     }
 }
 
-/// Drain a file work queue as one worker process (see the `queue`
-/// backend and `backend::run_worker`).
+/// Drain a file work queue or an `hplsim serve` coordinator as one
+/// worker process (see the `queue`/`remote` backends,
+/// `backend::run_worker` and `serve::run_remote_worker`).
 fn cmd_worker(opts: &HashMap<String, String>) -> i32 {
     let qdir = match path_opt(opts, "queue", "worker") {
-        Ok(Some(d)) => PathBuf::from(d),
-        Ok(None) => {
-            eprintln!("worker: --queue DIR is required\n{USAGE}");
-            return 2;
-        }
+        Ok(d) => d.map(PathBuf::from),
         Err(code) => return code,
     };
-    let wopts = WorkerOptions {
-        threads: num(opts, "threads", 0usize),
-        wait_secs: num(opts, "wait-secs", 30.0f64),
+    let server = match path_opt(opts, "server", "worker") {
+        Ok(s) => s,
+        Err(code) => return code,
     };
-    match run_worker(&qdir, &wopts) {
+    let summary = match (qdir, server) {
+        (Some(_), Some(_)) => {
+            eprintln!("worker: --queue and --server are mutually exclusive");
+            return 2;
+        }
+        (None, None) => {
+            eprintln!("worker: --queue DIR or --server URL is required\n{USAGE}");
+            return 2;
+        }
+        (Some(qdir), None) => {
+            let wopts = WorkerOptions {
+                threads: num(opts, "threads", 0usize),
+                wait_secs: num(opts, "wait-secs", 30.0f64),
+                poll_ms: num(opts, "poll-ms", DEFAULT_POLL_MS),
+            };
+            run_worker(&qdir, &wopts)
+        }
+        (None, Some(server)) => {
+            let server = match parse_server(&server) {
+                Ok(addr) => addr,
+                Err(e) => {
+                    eprintln!("worker: {e}");
+                    return 2;
+                }
+            };
+            let wopts = RemoteWorkerOptions {
+                threads: num(opts, "threads", 0usize),
+                wait_secs: num(opts, "wait-secs", 30.0f64),
+                poll_ms: num(opts, "poll-ms", DEFAULT_POLL_MS),
+            };
+            run_remote_worker(&server, &wopts)
+        }
+    };
+    match summary {
         Ok(s) => {
             println!(
                 "worker: {} task(s), {} point(s), {} computed",
@@ -1125,6 +1239,138 @@ fn cmd_worker(opts: &HashMap<String, String>) -> i32 {
         }
         Err(e) => {
             eprintln!("worker: {e}");
+            1
+        }
+    }
+}
+
+/// Run the campaign coordinator daemon (`hplsim serve`).
+fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
+    let store = match path_opt(opts, "store", "serve") {
+        Ok(Some(d)) => PathBuf::from(d),
+        Ok(None) => {
+            eprintln!("serve: --store DIR is required\n{USAGE}");
+            return 2;
+        }
+        Err(code) => return code,
+    };
+    let addr = match path_opt(opts, "addr", "serve") {
+        Ok(a) => a.unwrap_or_else(|| "127.0.0.1:7070".to_string()),
+        Err(code) => return code,
+    };
+    let lease_secs = num(opts, "lease-secs", 30.0f64);
+    if !(lease_secs.is_finite() && lease_secs > 0.0) {
+        eprintln!("serve: --lease-secs must be a positive number");
+        return 2;
+    }
+    let mut sopts = ServeOptions::new(addr, store);
+    sopts.lease_secs = lease_secs;
+    sopts.log = true;
+    match run_serve(sopts) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            1
+        }
+    }
+}
+
+/// Parse a `--max-age` value: seconds, with an optional s/m/h/d suffix.
+fn parse_age(s: &str) -> Option<f64> {
+    let (digits, mult) = match s.strip_suffix(|c| matches!(c, 's' | 'm' | 'h' | 'd')) {
+        Some(rest) => {
+            let mult = match s.as_bytes()[s.len() - 1] {
+                b'm' => 60.0,
+                b'h' => 3600.0,
+                b'd' => 86400.0,
+                _ => 1.0,
+            };
+            (rest, mult)
+        }
+        None => (s, 1.0),
+    };
+    let v: f64 = digits.trim().parse().ok()?;
+    (v.is_finite() && v >= 0.0).then_some(v * mult)
+}
+
+/// `hplsim cache gc`: prune cache/store entries by age and/or manifest
+/// reachability.
+fn cmd_cache(positional: &[String], opts: &HashMap<String, String>) -> i32 {
+    match positional.first().map(String::as_str) {
+        Some("gc") => cmd_cache_gc(opts),
+        Some(other) => {
+            eprintln!("cache: unknown subcommand '{other}' (expected gc)\n{USAGE}");
+            2
+        }
+        None => {
+            eprintln!("cache: missing subcommand (expected gc)\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn cmd_cache_gc(opts: &HashMap<String, String>) -> i32 {
+    let dir = match path_opt(opts, "dir", "cache gc") {
+        Ok(Some(d)) => PathBuf::from(d),
+        Ok(None) => {
+            eprintln!("cache gc: --dir DIR is required\n{USAGE}");
+            return 2;
+        }
+        Err(code) => return code,
+    };
+    let max_age = match opts.get("max-age") {
+        Some(raw) => match parse_age(raw) {
+            Some(secs) => Some(secs),
+            None => {
+                eprintln!(
+                    "cache gc: --max-age {raw:?} is not a duration \
+                     (number with optional s/m/h/d suffix, e.g. 36h)"
+                );
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let manifest_p = match path_opt(opts, "manifest", "cache gc") {
+        Ok(m) => m,
+        Err(code) => return code,
+    };
+    if max_age.is_none() && manifest_p.is_none() {
+        eprintln!(
+            "cache gc: nothing to prune by — pass --max-age AGE and/or \
+             --manifest FILE\n{USAGE}"
+        );
+        return 2;
+    }
+    let keep: Option<std::collections::HashSet<u64>> = match manifest_p {
+        Some(p) => {
+            let m = match Manifest::load(Path::new(&p)) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("cache gc: {e}");
+                    return 1;
+                }
+            };
+            Some(m.points.iter().map(SimPoint::fingerprint).collect())
+        }
+        None => None,
+    };
+    let dry_run = opts.contains_key("dry-run");
+    match cache_gc(&dir, max_age, keep.as_ref(), dry_run) {
+        Ok(r) => {
+            let verb = if dry_run { "would prune" } else { "pruned" };
+            println!(
+                "cache gc: {} entr{} scanned | {verb} {} ({} bytes) | {} kept",
+                r.scanned,
+                if r.scanned == 1 { "y" } else { "ies" },
+                r.pruned,
+                r.bytes,
+                r.kept
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("cache gc: {e}");
             1
         }
     }
@@ -1477,6 +1723,8 @@ pub fn main_with_args(args: &[String]) -> i32 {
         Some("tune") => cmd_tune(&opts),
         Some("shard") => cmd_shard(&opts),
         Some("worker") => cmd_worker(&opts),
+        Some("serve") => cmd_serve(&opts),
+        Some("cache") => cmd_cache(&positional[1..], &opts),
         Some("merge") => cmd_merge(&positional[1..], &opts),
         Some("run") => cmd_run(&opts),
         Some("configs") => {
@@ -1584,8 +1832,11 @@ mod tests {
             let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
             main_with_args(&v)
         };
-        assert_eq!(run(&["worker"]), 2); // missing --queue
+        assert_eq!(run(&["worker"]), 2); // neither --queue nor --server
         assert_eq!(run(&["worker", "--queue"]), 2); // valueless --queue
+        assert_eq!(run(&["worker", "--server"]), 2); // valueless --server
+        assert_eq!(run(&["worker", "--server", "not-an-address"]), 2); // no port
+        assert_eq!(run(&["worker", "--queue", "q", "--server", "h:1"]), 2); // both
         // Unknown backend is a usage error before anything simulates.
         assert_eq!(run(&["sweep", "--points", "5", "--backend", "carrier-pigeon"]), 2);
         // A worker pointed at a directory that never becomes a queue
@@ -1594,5 +1845,57 @@ mod tests {
         let _ = std::fs::create_dir_all(&dir);
         assert_eq!(run(&["worker", "--queue", dir.to_str().unwrap(), "--wait-secs", "0"]), 1);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_and_remote_validate_arguments() {
+        let run = |args: &[&str]| {
+            let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            main_with_args(&v)
+        };
+        assert_eq!(run(&["serve"]), 2); // missing --store
+        assert_eq!(run(&["serve", "--store"]), 2); // valueless --store
+        assert_eq!(run(&["serve", "--store", "s", "--lease-secs", "0"]), 2);
+        // The remote backend needs a coordinator address, validated
+        // before any sampling or calibration happens.
+        assert_eq!(run(&["sweep", "--points", "5", "--backend", "remote"]), 2);
+        assert_eq!(
+            run(&["sweep", "--points", "5", "--backend", "remote", "--server", "nope"]),
+            2
+        );
+        assert_eq!(run(&["sa", "--space", "s.json", "--backend", "remote"]), 2);
+    }
+
+    #[test]
+    fn cache_gc_validates_arguments() {
+        let run = |args: &[&str]| {
+            let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            main_with_args(&v)
+        };
+        assert_eq!(run(&["cache"]), 2); // missing subcommand
+        assert_eq!(run(&["cache", "prune"]), 2); // unknown subcommand
+        assert_eq!(run(&["cache", "gc"]), 2); // missing --dir
+        assert_eq!(run(&["cache", "gc", "--dir", "d"]), 2); // no criterion
+        assert_eq!(run(&["cache", "gc", "--dir", "d", "--max-age", "soon"]), 2);
+        assert_eq!(
+            run(&["cache", "gc", "--dir", "/nonexistent", "--max-age", "1h"]),
+            1 // unreadable cache directory is a runtime error
+        );
+        assert_eq!(
+            run(&["cache", "gc", "--dir", "d", "--manifest", "/nonexistent/m.json"]),
+            1
+        );
+    }
+
+    #[test]
+    fn age_suffixes_parse() {
+        assert_eq!(parse_age("90"), Some(90.0));
+        assert_eq!(parse_age("90s"), Some(90.0));
+        assert_eq!(parse_age("2m"), Some(120.0));
+        assert_eq!(parse_age("1.5h"), Some(5400.0));
+        assert_eq!(parse_age("2d"), Some(172800.0));
+        assert_eq!(parse_age("-1"), None);
+        assert_eq!(parse_age("true"), None); // the valueless-flag sentinel
+        assert_eq!(parse_age("h"), None);
     }
 }

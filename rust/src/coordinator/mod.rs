@@ -1,7 +1,8 @@
 //! Experiment coordination: the CLI, the per-figure experiment
 //! registry, the pluggable campaign execution backends (in-process
-//! pool, subprocess shards, file-queue workers), serializable campaign
-//! manifests (shard/merge), and result tables.
+//! pool, subprocess shards, file-queue workers, HTTP remote),
+//! serializable campaign manifests (shard/merge), the `hplsim serve`
+//! coordinator daemon, and result tables.
 
 pub mod backend;
 pub mod cli;
@@ -9,6 +10,7 @@ pub mod doe;
 pub mod experiments;
 pub mod manifest;
 pub mod sa;
+pub mod serve;
 pub mod sweep;
 pub mod table;
 pub mod tune;
@@ -22,6 +24,7 @@ pub use doe::{Dim, DimSpec, ParamSpace};
 pub use experiments::{ExpCtx, PointResults, Scale};
 pub use manifest::Manifest;
 pub use sa::{Design, SaPlan};
+pub use serve::{Remote, Server};
 pub use sweep::run_campaign;
 pub use table::Table;
 pub use tune::{TuneOptions, TuneState};

@@ -1,0 +1,597 @@
+//! The `hplsim serve` coordinator daemon.
+//!
+//! One process owns a [`Store`] and an in-memory campaign registry.
+//! Clients POST whole campaign manifests (the ordinary v2 manifest
+//! JSON); the daemon plans tasks exactly like the file queue does
+//! (distinct uncached fingerprints, partitioned by `fp % tasks`) and
+//! hands them to any number of `hplsim worker --server URL` processes
+//! under the shared [`LeaseTable`] claim/heartbeat/expiry-reclaim
+//! protocol. Results travel as verbatim cache-entry bytes into the
+//! content-addressed store, so overlapping campaigns — from the same
+//! client or different ones — dedup for free: a second submission of an
+//! already-served manifest computes zero points.
+//!
+//! ### Wire protocol (all bodies JSON unless noted)
+//!
+//! | Endpoint | Meaning |
+//! |---|---|
+//! | `GET  /api/health` | liveness + campaign count |
+//! | `POST /api/campaigns` | submit `{manifest, tasks?, lease_secs?, eval?, skeleton?, wave?}` → plan (idempotent by content) |
+//! | `GET  /api/campaigns/<id>` | progress counters |
+//! | `GET  /api/campaigns/<id>/manifest` | the canonical manifest text |
+//! | `POST /api/claim` | claim one task (any campaign) or `{"idle":true}` |
+//! | `POST /api/heartbeat` | `{campaign, task, holder}` keep a lease alive |
+//! | `POST /api/result/<fp>?eval=T` | store raw entry bytes (idempotent) |
+//! | `GET  /api/result/<fp>?eval=T` | fetch raw entry bytes |
+//! | `POST /api/complete` | `{campaign, task, holder}` finish a task |
+//! | `POST /api/fail` | `{campaign, task, holder, error}` requeue a task |
+//!
+//! Malformed input of any kind yields a structured `{"error": ...}`
+//! with a 4xx status — the daemon never panics on peer input.
+
+use std::collections::BTreeMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::backend::cache::EVAL_DIRECT;
+use crate::coordinator::backend::lease::{CompleteOutcome, LeaseTable};
+use crate::coordinator::backend::point::fnv1a_str;
+use crate::coordinator::backend::SimPoint;
+use crate::coordinator::manifest::Manifest;
+use crate::stats::json::Json;
+
+use super::http::{read_request, write_response, Request, Response, MAX_BODY};
+use super::store::{valid_eval, Store};
+
+/// Options of [`Server::start`] (the body of `hplsim serve`).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address (`host:port`; port 0 picks a free one — tests).
+    pub addr: String,
+    /// Directory of the content-addressed result store.
+    pub store_dir: PathBuf,
+    /// Default lease duration for campaigns that don't request one.
+    pub lease_secs: f64,
+    /// Per-connection socket read/write timeout.
+    pub io_timeout_secs: f64,
+    /// Log requests and lease events to stderr (the CLI daemon does;
+    /// embedded test servers stay silent).
+    pub log: bool,
+}
+
+impl ServeOptions {
+    pub fn new(addr: impl Into<String>, store_dir: impl Into<PathBuf>) -> ServeOptions {
+        ServeOptions {
+            addr: addr.into(),
+            store_dir: store_dir.into(),
+            lease_secs: 30.0,
+            io_timeout_secs: 10.0,
+            log: false,
+        }
+    }
+}
+
+/// One submitted campaign: the canonical manifest, the task partition
+/// over its distinct uncached fingerprints, and the lease table workers
+/// claim from.
+struct CampaignState {
+    /// Canonical serialized manifest (what `/manifest` serves — workers
+    /// re-validate it through the ordinary `Manifest::from_json`).
+    manifest_text: String,
+    /// Fingerprint of every point, in point order.
+    fps: Vec<u64>,
+    eval: String,
+    skeleton: bool,
+    wave: usize,
+    /// Per task: representative point indices, one per distinct
+    /// fingerprint the task must compute.
+    task_points: Vec<Vec<usize>>,
+    leases: LeaseTable,
+    /// Entries newly landed in the store on behalf of this campaign.
+    computed: u64,
+}
+
+struct Inner {
+    store: Store,
+    campaigns: BTreeMap<String, CampaignState>,
+    default_lease: f64,
+    log: bool,
+}
+
+impl Inner {
+    fn log(&self, text: &str) {
+        if self.log {
+            eprintln!("serve: {text}");
+        }
+    }
+}
+
+/// A running coordinator. Binding happens in [`Server::start`] (so the
+/// chosen port is known before any client runs); the accept loop and
+/// every connection run on background threads.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    state: Arc<Mutex<Inner>>,
+}
+
+fn lock(state: &Mutex<Inner>) -> MutexGuard<'_, Inner> {
+    // A handler that panicked (it should not — every path returns a
+    // Response) must not take the whole daemon down with poisoning.
+    state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Server {
+    pub fn start(opts: ServeOptions) -> Result<Server, String> {
+        let store = Store::open(&opts.store_dir)?;
+        let listener = TcpListener::bind(&opts.addr)
+            .map_err(|e| format!("cannot bind {}: {e}", opts.addr))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("cannot resolve bound address: {e}"))?;
+        let state = Arc::new(Mutex::new(Inner {
+            store,
+            campaigns: BTreeMap::new(),
+            default_lease: if opts.lease_secs > 0.0 && opts.lease_secs.is_finite() {
+                opts.lease_secs
+            } else {
+                30.0
+            },
+            log: opts.log,
+        }));
+        let stop = Arc::new(AtomicBool::new(false));
+        let timeout = Duration::from_secs_f64(opts.io_timeout_secs.clamp(0.05, 600.0));
+        let accept = {
+            let state = state.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(mut stream) = conn else { continue };
+                    let state = state.clone();
+                    std::thread::spawn(move || {
+                        let _ = stream.set_read_timeout(Some(timeout));
+                        let _ = stream.set_write_timeout(Some(timeout));
+                        serve_connection(&state, &mut stream);
+                    });
+                }
+            })
+        };
+        Ok(Server { addr, stop, accept: Some(accept), state })
+    }
+
+    /// The bound address (resolves port 0 binds).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop. In-flight connection
+    /// handlers finish on their own (they hold only the state Arc).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Poke the blocking accept so it observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block on the accept loop forever (the CLI daemon's main thread).
+    pub fn run_forever(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Campaigns currently registered (tests).
+    pub fn campaigns(&self) -> usize {
+        lock(&self.state).campaigns.len()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+fn serve_connection(state: &Mutex<Inner>, stream: &mut TcpStream) {
+    let resp = match read_request(stream, MAX_BODY) {
+        Ok(req) => handle(state, &req),
+        Err(e) => Response::error(400, e),
+    };
+    // The peer may be gone (it dropped the connection mid-response —
+    // its problem; every endpoint is idempotent and it will retry).
+    let _ = write_response(stream, &resp);
+}
+
+fn handle(state: &Mutex<Inner>, req: &Request) -> Response {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["api", "health"]) => {
+            let inner = lock(state);
+            Response::ok_json(&Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("campaigns", Json::Num(inner.campaigns.len() as f64)),
+            ]))
+        }
+        ("POST", ["api", "campaigns"]) => submit(state, &req.body),
+        ("GET", ["api", "campaigns", id]) => {
+            let inner = lock(state);
+            match inner.campaigns.get(*id) {
+                Some(c) => Response::ok_json(&status_json(id, c)),
+                None => Response::error(404, format!("unknown campaign {id}")),
+            }
+        }
+        ("GET", ["api", "campaigns", id, "manifest"]) => {
+            let inner = lock(state);
+            match inner.campaigns.get(*id) {
+                Some(c) => Response {
+                    status: 200,
+                    content_type: "application/json",
+                    body: c.manifest_text.clone().into_bytes(),
+                },
+                None => Response::error(404, format!("unknown campaign {id}")),
+            }
+        }
+        ("POST", ["api", "claim"]) => claim(state),
+        ("POST", ["api", "heartbeat"]) => lease_verb(state, &req.body, LeaseVerb::Heartbeat),
+        ("POST", ["api", "complete"]) => lease_verb(state, &req.body, LeaseVerb::Complete),
+        ("POST", ["api", "fail"]) => lease_verb(state, &req.body, LeaseVerb::Fail),
+        ("POST", ["api", "result", fphex]) => put_result(state, fphex, &req.query, &req.body),
+        ("GET", ["api", "result", fphex]) => get_result(state, fphex, &req.query),
+        _ => Response::error(404, format!("no such endpoint: {} {}", req.method, req.path)),
+    }
+}
+
+fn status_json(id: &str, c: &CampaignState) -> Json {
+    Json::obj(vec![
+        ("id", Json::Str(id.to_string())),
+        ("points", Json::Num(c.fps.len() as f64)),
+        ("tasks", Json::Num(c.leases.total() as f64)),
+        ("tasks_done", Json::Num(c.leases.done() as f64)),
+        ("computed", Json::Num(c.computed as f64)),
+        ("reclaimed", Json::Num(c.leases.reclaimed() as f64)),
+        ("done", Json::Bool(c.leases.all_done())),
+    ])
+}
+
+/// The deterministic campaign identity: a hash of the eval tag plus the
+/// *canonical* manifest serialization (BTreeMap keys make it
+/// order-independent), so equal campaigns from different clients land
+/// on the same registry entry and share one task plan.
+fn campaign_id(eval: &str, canonical_manifest: &str) -> String {
+    format!("{:016x}", fnv1a_str(&format!("{eval}\n{canonical_manifest}")))
+}
+
+fn submit(state: &Mutex<Inner>, body: &[u8]) -> Response {
+    let Ok(text) = std::str::from_utf8(body) else {
+        return Response::error(400, "submission body is not UTF-8");
+    };
+    let v = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, format!("malformed submission JSON: {e}")),
+    };
+    let Some(mv) = v.get("manifest") else {
+        return Response::error(400, "submission has no \"manifest\" field");
+    };
+    let manifest = match Manifest::from_json(mv) {
+        Ok(m) => m,
+        Err(e) => return Response::error(400, format!("malformed manifest: {e}")),
+    };
+    if manifest.points.is_empty() {
+        return Response::error(400, "manifest has no points");
+    }
+    let eval = v.get("eval").and_then(Json::as_str).unwrap_or(EVAL_DIRECT);
+    if eval != EVAL_DIRECT {
+        // Remote workers execute the pure-Rust path; accepting another
+        // tag here would promise results the fleet cannot produce.
+        return Response::error(
+            400,
+            format!("remote campaigns run eval path \"{EVAL_DIRECT}\" only, not \"{eval}\""),
+        );
+    }
+    let tasks = v
+        .get("tasks")
+        .and_then(Json::as_usize)
+        .filter(|&t| t > 0)
+        .unwrap_or(8);
+    let skeleton = v.get("skeleton").and_then(Json::as_bool).unwrap_or(true);
+    let wave = v.get("wave").and_then(Json::as_usize).unwrap_or(0);
+
+    let mut inner = lock(state);
+    let canonical = manifest.to_json().to_string();
+    let id = campaign_id(eval, &canonical);
+    let lease_secs = v
+        .get("lease_secs")
+        .and_then(Json::as_f64)
+        .filter(|s| *s > 0.0 && s.is_finite())
+        .unwrap_or(inner.default_lease);
+
+    let fps: Vec<u64> = manifest.points.iter().map(SimPoint::fingerprint).collect();
+    // Distinct fingerprints, first-occurrence order (the representative
+    // point a worker will execute for each).
+    let mut first: Vec<(u64, usize)> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for (i, &fp) in fps.iter().enumerate() {
+        if seen.insert(fp) {
+            first.push((fp, i));
+        }
+    }
+    let distinct = first.len();
+    let hits = first.iter().filter(|(fp, _)| inner.store.has(*fp, eval)).count();
+
+    if let Some(c) = inner.campaigns.get(&id) {
+        // Idempotent resubmission: same content → same campaign. The
+        // first submission's task partition and throughput knobs stand.
+        let resp = with_hits(status_json(&id, c), distinct, hits);
+        inner.log(&format!(
+            "campaign {id} resubmitted ({} points, {hits}/{distinct} in store)",
+            fps.len()
+        ));
+        return Response::ok_json(&resp);
+    }
+
+    // Task partition over the *misses*, by `fp % tasks` — the same
+    // deterministic rule `hplsim shard` and the file queue use. Empty
+    // groups are dropped, so the lease table counts only real work.
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); tasks];
+    for &(fp, i) in &first {
+        if !inner.store.has(fp, eval) {
+            groups[(fp % tasks as u64) as usize].push(i);
+        }
+    }
+    groups.retain(|g| !g.is_empty());
+    let c = CampaignState {
+        manifest_text: canonical,
+        fps,
+        eval: eval.to_string(),
+        skeleton,
+        wave,
+        leases: LeaseTable::new(groups.len(), lease_secs),
+        task_points: groups,
+        computed: 0,
+    };
+    inner.log(&format!(
+        "campaign {id} submitted: {} points, {distinct} distinct, {hits} in store, \
+         {} task(s)",
+        c.fps.len(),
+        c.leases.total()
+    ));
+    let resp = with_hits(status_json(&id, &c), distinct, hits);
+    inner.campaigns.insert(id, c);
+    Response::ok_json(&resp)
+}
+
+/// Extend a status object with submission-time planning counters.
+fn with_hits(status: Json, distinct: usize, hits: usize) -> Json {
+    let mut m = match status {
+        Json::Obj(m) => m,
+        _ => unreachable!("status_json returns an object"),
+    };
+    m.insert("distinct".into(), Json::Num(distinct as f64));
+    m.insert("hits".into(), Json::Num(hits as f64));
+    Json::Obj(m)
+}
+
+fn claim(state: &Mutex<Inner>) -> Response {
+    let now = Instant::now();
+    let mut inner = lock(state);
+    let mut reclaim_log: Vec<String> = Vec::new();
+    for (id, c) in inner.campaigns.iter_mut() {
+        for t in c.leases.reclaim_expired(now) {
+            reclaim_log.push(format!("campaign {id}: lease of task {t} expired — requeued"));
+        }
+    }
+    for line in &reclaim_log {
+        inner.log(line);
+    }
+    // BTreeMap order: deterministic round across campaigns.
+    let mut claimed: Option<(String, usize, u64)> = None;
+    for (id, c) in inner.campaigns.iter_mut() {
+        if let Some((task, holder)) = c.leases.claim(now) {
+            claimed = Some((id.clone(), task, holder));
+            break;
+        }
+    }
+    if let Some((id, task, holder)) = claimed {
+        let c = &inner.campaigns[&id];
+        let resp = Json::obj(vec![
+            ("campaign", Json::Str(id.clone())),
+            ("task", Json::Num(task as f64)),
+            // u64 as a string: holder tokens must survive JSON exactly.
+            ("holder", Json::u64_str(holder)),
+            ("lease_secs", Json::Num(c.leases.lease_secs())),
+            ("eval", Json::Str(c.eval.clone())),
+            ("skeleton", Json::Bool(c.skeleton)),
+            ("wave", Json::Num(c.wave as f64)),
+            (
+                "points",
+                Json::Arr(c.task_points[task].iter().map(|&i| Json::Num(i as f64)).collect()),
+            ),
+        ]);
+        inner.log(&format!("campaign {id}: task {task} claimed (holder {holder})"));
+        return Response::ok_json(&resp);
+    }
+    let active = inner.campaigns.values().filter(|c| !c.leases.all_done()).count();
+    Response::ok_json(&Json::obj(vec![
+        ("idle", Json::Bool(true)),
+        ("active", Json::Num(active as f64)),
+    ]))
+}
+
+enum LeaseVerb {
+    Heartbeat,
+    Complete,
+    Fail,
+}
+
+fn lease_verb(state: &Mutex<Inner>, body: &[u8], verb: LeaseVerb) -> Response {
+    let v = match std::str::from_utf8(body).ok().map(Json::parse) {
+        Some(Ok(v)) => v,
+        _ => return Response::error(400, "malformed lease request body"),
+    };
+    let Some(id) = v.get("campaign").and_then(Json::as_str).map(String::from) else {
+        return Response::error(400, "lease request has no \"campaign\"");
+    };
+    let Some(task) = v.get("task").and_then(Json::as_usize) else {
+        return Response::error(400, "lease request has no \"task\"");
+    };
+    let Some(holder) = v.get("holder").and_then(Json::as_u64) else {
+        return Response::error(400, "lease request has no \"holder\"");
+    };
+    let mut inner = lock(state);
+    // Borrow dance: completion validation reads the store, so split the
+    // campaign lookup from the store access.
+    let Some(c) = inner.campaigns.get(&id) else {
+        return Response::error(404, format!("unknown campaign {id}"));
+    };
+    if task >= c.leases.total() {
+        return Response::error(400, format!("campaign {id} has no task {task}"));
+    }
+    match verb {
+        LeaseVerb::Heartbeat => {
+            let ok = inner
+                .campaigns
+                .get_mut(&id)
+                .map(|c| c.leases.heartbeat(task, holder, Instant::now()))
+                .unwrap_or(false);
+            if ok {
+                Response::ok_json(&Json::obj(vec![("ok", Json::Bool(true))]))
+            } else {
+                Response::error(409, format!("lease of task {task} was lost"))
+            }
+        }
+        LeaseVerb::Complete => {
+            // The store is the output channel: a task only completes
+            // once every one of its results actually landed (the same
+            // persistence check queue workers run on themselves). A
+            // completion without results requeues nothing — the lease
+            // stays with the holder, which should resubmit or fail.
+            let missing = c.task_points[task]
+                .iter()
+                .filter(|&&i| !inner.store.has(c.fps[i], &c.eval))
+                .count();
+            if missing > 0 {
+                return Response::error(
+                    409,
+                    format!(
+                        "task {task} of campaign {id} has {missing} result(s) \
+                         missing from the store"
+                    ),
+                );
+            }
+            let c = inner.campaigns.get_mut(&id).expect("checked above");
+            match c.leases.complete(task, holder) {
+                CompleteOutcome::Lost => {
+                    Response::error(409, format!("lease of task {task} was lost"))
+                }
+                outcome => {
+                    let already = outcome == CompleteOutcome::AlreadyDone;
+                    let resp = Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("already", Json::Bool(already)),
+                        ("tasks_done", Json::Num(c.leases.done() as f64)),
+                        ("done", Json::Bool(c.leases.all_done())),
+                    ]);
+                    inner.log(&format!("campaign {id}: task {task} complete"));
+                    Response::ok_json(&resp)
+                }
+            }
+        }
+        LeaseVerb::Fail => {
+            let why = v
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("no reason given")
+                .to_string();
+            let c = inner.campaigns.get_mut(&id).expect("checked above");
+            let requeued = c.leases.fail(task, holder);
+            inner.log(&format!(
+                "campaign {id}: task {task} failed on its worker ({why}) — requeued: \
+                 {requeued}"
+            ));
+            Response::ok_json(&Json::obj(vec![("requeued", Json::Bool(requeued))]))
+        }
+    }
+}
+
+fn parse_fp(fphex: &str) -> Option<u64> {
+    if fphex.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(fphex, 16).ok()
+}
+
+fn put_result(
+    state: &Mutex<Inner>,
+    fphex: &str,
+    query: &std::collections::HashMap<String, String>,
+    body: &[u8],
+) -> Response {
+    let Some(fp) = parse_fp(fphex) else {
+        return Response::error(400, format!("bad fingerprint {fphex:?}"));
+    };
+    let eval = query.get("eval").map(String::as_str).unwrap_or(EVAL_DIRECT);
+    if !valid_eval(eval) {
+        return Response::error(400, format!("bad eval tag {eval:?}"));
+    }
+    let mut inner = lock(state);
+    let new = match inner.store.put(fp, eval, body) {
+        Ok(new) => new,
+        Err(e) => return Response::error(400, e),
+    };
+    // Credit the submitting campaign's computed counter (display only).
+    if new {
+        if let Some(c) = query.get("campaign").and_then(|id| inner.campaigns.get_mut(id)) {
+            c.computed += 1;
+        }
+    }
+    Response::ok_json(&Json::obj(vec![
+        ("stored", Json::Bool(true)),
+        ("new", Json::Bool(new)),
+    ]))
+}
+
+fn get_result(
+    state: &Mutex<Inner>,
+    fphex: &str,
+    query: &std::collections::HashMap<String, String>,
+) -> Response {
+    let Some(fp) = parse_fp(fphex) else {
+        return Response::error(400, format!("bad fingerprint {fphex:?}"));
+    };
+    let eval = query.get("eval").map(String::as_str).unwrap_or(EVAL_DIRECT);
+    if !valid_eval(eval) {
+        return Response::error(400, format!("bad eval tag {eval:?}"));
+    }
+    let inner = lock(state);
+    match inner.store.get(fp, eval) {
+        Some(bytes) => Response::raw(200, bytes),
+        None => Response::error(
+            404,
+            format!("no \"{eval}\" entry for fingerprint {fp:016x}"),
+        ),
+    }
+}
+
+/// The body of `hplsim serve`: start, announce, block forever.
+pub fn run_serve(opts: ServeOptions) -> Result<(), String> {
+    let server = Server::start(opts.clone())?;
+    eprintln!(
+        "serve: listening on {} (store {}, default lease {:.0}s)",
+        server.addr(),
+        opts.store_dir.display(),
+        opts.lease_secs
+    );
+    server.run_forever();
+    Ok(())
+}

@@ -1,0 +1,350 @@
+//! A deliberately small HTTP/1.1 layer over `std::net` — just enough
+//! for the campaign wire protocol, with no external crates (the build
+//! is offline). One request per connection (`Connection: close`),
+//! explicit `Content-Length` on both sides, hard caps on header and
+//! body sizes, and read/write timeouts everywhere so a stalled or
+//! malicious peer can never wedge a server thread or hang a client.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::stats::json::Json;
+
+/// Cap on the request/response head (request line + headers). Campaign
+/// requests carry everything interesting in the body.
+const MAX_HEAD: usize = 16 * 1024;
+
+/// Cap on request bodies. The largest legitimate payload is a whole
+/// campaign manifest; 64 MiB is orders of magnitude above any real one
+/// while still bounding what a hostile peer can make the server buffer.
+pub const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path with the query string stripped.
+    pub path: String,
+    /// Query parameters (`k=v` pairs; the protocol uses only hex/word
+    /// values, so no percent-decoding is needed or performed).
+    pub query: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+/// One HTTP response ready to serialize.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: v.to_string().into_bytes(),
+        }
+    }
+
+    /// 200 with a JSON body.
+    pub fn ok_json(v: &Json) -> Response {
+        Response::json(200, v)
+    }
+
+    /// A structured error: `{"error": msg}` with the given status.
+    pub fn error(status: u16, msg: impl Into<String>) -> Response {
+        Response::json(status, &Json::obj(vec![("error", Json::Str(msg.into()))]))
+    }
+
+    /// Raw bytes (store entries travel verbatim).
+    pub fn raw(status: u16, body: Vec<u8>) -> Response {
+        Response { status, content_type: "application/octet-stream", body }
+    }
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Read one request off a connection. Bounded in every dimension: the
+/// head is capped at [`MAX_HEAD`], the body at `max_body`, and the
+/// socket carries a read timeout set by the caller — a peer that sends
+/// half a request and stalls (or closes) yields an `Err`, never a hang.
+pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request, String> {
+    // Head: read byte-wise state machine would syscall per byte; read
+    // chunks and scan for the terminator instead.
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            return Err("request head exceeds limit".into());
+        }
+        let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed before request head".into());
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| "request head is not UTF-8".to_string())?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let target = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() {
+        return Err(format!("malformed request line {request_line:?}"));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad content-length {:?}", v.trim()))?;
+            }
+        }
+    }
+    if content_length > max_body {
+        return Err(format!("request body of {content_length} bytes exceeds limit"));
+    }
+    // Body: whatever followed the head in the buffer, then read the
+    // rest to exactly Content-Length.
+    let mut body = buf[head_end + 4..].to_vec();
+    if body.len() > content_length {
+        return Err("request body longer than content-length".into());
+    }
+    let mut remaining = content_length - body.len();
+    while remaining > 0 {
+        let want = remaining.min(chunk.len());
+        let n = stream.read(&mut chunk[..want]).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err(format!(
+                "connection closed mid-body ({} of {content_length} bytes)",
+                content_length - remaining
+            ));
+        }
+        body.extend_from_slice(&chunk[..n]);
+        remaining -= n;
+    }
+    let (path, query) = parse_target(target);
+    Ok(Request { method, path, query, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn parse_target(target: &str) -> (String, HashMap<String, String>) {
+    let (path, qs) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let mut query = HashMap::new();
+    for pair in qs.split('&').filter(|p| !p.is_empty()) {
+        match pair.split_once('=') {
+            Some((k, v)) => query.insert(k.to_string(), v.to_string()),
+            None => query.insert(pair.to_string(), String::new()),
+        };
+    }
+    (path.to_string(), query)
+}
+
+/// Serialize one response. Always `Connection: close` — the protocol is
+/// strictly one request per connection, which keeps both sides trivial
+/// and makes a dropped connection equivalent to a failed request (the
+/// client retries; every endpoint is idempotent).
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<(), String> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(&resp.body))
+        .and_then(|()| stream.flush())
+        .map_err(|e| format!("write: {e}"))
+}
+
+/// The client half: bounded per-request timeouts plus capped-backoff
+/// retries, so a flaky or absent coordinator degrades to a structured
+/// error after a few seconds instead of hanging a campaign. Retries are
+/// safe because every protocol endpoint is idempotent (claims mint a
+/// fresh holder, results are content-addressed, completion tolerates
+/// duplicates).
+#[derive(Clone, Debug)]
+pub struct Client {
+    /// `host:port` of the coordinator.
+    pub addr: String,
+    /// Per-attempt connect/read/write timeout.
+    pub timeout: Duration,
+    /// Total attempts per request (>= 1).
+    pub retries: u32,
+}
+
+impl Client {
+    pub fn new(addr: impl Into<String>) -> Client {
+        Client { addr: addr.into(), timeout: Duration::from_secs(10), retries: 4 }
+    }
+
+    /// Perform one request, retrying transport failures with doubling
+    /// backoff (50 ms up to 2 s). An HTTP-level error status is a
+    /// *response*, not a transport failure — it is returned to the
+    /// caller untouched and never retried.
+    pub fn request(
+        &self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> Result<(u16, Vec<u8>), String> {
+        let attempts = self.retries.max(1);
+        let mut backoff = Duration::from_millis(50);
+        let mut last = String::new();
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(2));
+            }
+            match self.once(method, path, body) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => last = e,
+            }
+        }
+        Err(format!("{method} {path} failed after {attempts} attempt(s): {last}"))
+    }
+
+    fn once(&self, method: &str, path: &str, body: &[u8]) -> Result<(u16, Vec<u8>), String> {
+        let addr = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| format!("resolve {}: {e}", self.addr))?
+            .next()
+            .ok_or_else(|| format!("resolve {}: no address", self.addr))?;
+        let mut stream = TcpStream::connect_timeout(&addr, self.timeout)
+            .map_err(|e| format!("connect {}: {e}", self.addr))?;
+        stream.set_read_timeout(Some(self.timeout)).map_err(|e| format!("socket: {e}"))?;
+        stream.set_write_timeout(Some(self.timeout)).map_err(|e| format!("socket: {e}"))?;
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.addr,
+            body.len()
+        );
+        stream
+            .write_all(head.as_bytes())
+            .and_then(|()| stream.write_all(body))
+            .and_then(|()| stream.flush())
+            .map_err(|e| format!("write: {e}"))?;
+
+        let mut buf: Vec<u8> = Vec::with_capacity(1024);
+        let mut chunk = [0u8; 1024];
+        let head_end = loop {
+            if let Some(pos) = find_head_end(&buf) {
+                break pos;
+            }
+            if buf.len() > MAX_HEAD {
+                return Err("response head exceeds limit".into());
+            }
+            let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+            if n == 0 {
+                return Err("connection closed before response head".into());
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        let head_text = std::str::from_utf8(&buf[..head_end])
+            .map_err(|_| "response head is not UTF-8".to_string())?;
+        let mut lines = head_text.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format!("malformed status line {status_line:?}"))?;
+        let mut content_length: Option<usize> = None;
+        for line in lines {
+            if let Some((k, v)) = line.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().ok();
+                }
+            }
+        }
+        let mut body = buf[head_end + 4..].to_vec();
+        match content_length {
+            Some(len) => {
+                if len > MAX_BODY {
+                    return Err(format!("response body of {len} bytes exceeds limit"));
+                }
+                if body.len() > len {
+                    body.truncate(len);
+                }
+                let mut remaining = len - body.len();
+                while remaining > 0 {
+                    let want = remaining.min(chunk.len());
+                    let n = stream
+                        .read(&mut chunk[..want])
+                        .map_err(|e| format!("read: {e}"))?;
+                    if n == 0 {
+                        return Err(format!(
+                            "connection closed mid-response ({} of {len} bytes)",
+                            len - remaining
+                        ));
+                    }
+                    body.extend_from_slice(&chunk[..n]);
+                    remaining -= n;
+                }
+            }
+            // Connection-close delimited (not produced by our server,
+            // but cheap to tolerate): read to EOF, bounded.
+            None => loop {
+                if body.len() > MAX_BODY {
+                    return Err("response body exceeds limit".into());
+                }
+                let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+                if n == 0 {
+                    break;
+                }
+                body.extend_from_slice(&chunk[..n]);
+            },
+        }
+        Ok((status, body))
+    }
+}
+
+/// `request` + parse-as-JSON + map non-2xx to a structured error using
+/// the server's `{"error": ...}` payload when present.
+pub fn request_json(
+    client: &Client,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<Json, String> {
+    let (status, bytes) = client.request(method, path, body)?;
+    let text = String::from_utf8_lossy(&bytes).into_owned();
+    if !(200..300).contains(&status) {
+        let detail = Json::parse(&text)
+            .ok()
+            .and_then(|v| v.get("error").and_then(Json::as_str).map(String::from))
+            .unwrap_or(text);
+        return Err(format!("{method} {path}: HTTP {status}: {detail}"));
+    }
+    Json::parse(&text).map_err(|e| format!("{method} {path}: bad response JSON: {e}"))
+}

@@ -1,0 +1,25 @@
+//! Campaign as a service: the `hplsim serve` coordinator daemon, its
+//! dependency-free HTTP transport, the content-addressed result store,
+//! and the `Remote` execution backend + `hplsim worker --server` loop
+//! that speak to it.
+//!
+//! The deployment shape is one [`daemon::Server`] owning a [`store::Store`],
+//! any number of `hplsim worker --server URL` processes anywhere with
+//! network reach, and any number of clients running
+//! `sweep/sa/tune --backend remote --server URL`. Task hand-off uses
+//! the same claim/heartbeat/expiry-reclaim lease semantics as the file
+//! queue — both transports share
+//! [`lease`](crate::coordinator::backend::lease) — and results travel
+//! as verbatim cache entries, so overlapping campaigns from different
+//! clients dedup through the store and every report stays byte-identical
+//! to an in-process run.
+
+pub mod daemon;
+pub mod http;
+pub mod remote;
+pub mod store;
+
+pub use daemon::{run_serve, ServeOptions, Server};
+pub use http::Client;
+pub use remote::{parse_server, run_remote_worker, Remote, RemoteWorkerOptions};
+pub use store::Store;

@@ -1,0 +1,661 @@
+//! The `Remote` execution backend and the HTTP worker loop.
+//!
+//! `Remote` is the client half of the campaign-as-a-service deployment:
+//! `prepare` submits the campaign manifest to an `hplsim serve`
+//! coordinator (seeding the coordinator's store from the local cache
+//! first, like the file queue seeds its queue cache), `execute` watches
+//! the coordinator's progress counters while `hplsim worker --server`
+//! processes — spawned locally or running anywhere with network reach —
+//! drain the task leases, and `collect` fetches the result entries back
+//! out of the content-addressed store. Every result is an ordinary
+//! cache entry traveling verbatim, so a remote campaign's
+//! `campaign.csv` is byte-identical to an `InProcess` run of the same
+//! points (the invariant `backend_equiv.rs` pins).
+//!
+//! Every request goes through the bounded-retry [`Client`], so a flaky
+//! or dead coordinator surfaces as a structured [`ExecError`] after a
+//! few seconds — never a hang.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::backend::cache::{cache_path_fp, parse_entry_text, EVAL_DIRECT};
+use crate::coordinator::backend::lease::{heartbeat_interval, PollBackoff};
+use crate::coordinator::backend::queue::DEFAULT_POLL_MS;
+use crate::coordinator::backend::{
+    kill_and_reap, resolve_exe, Campaign, ExecBackend, ExecError, InProcess, WorkPlan,
+    WorkerSummary,
+};
+use crate::coordinator::manifest::Manifest;
+use crate::hpl::HplResult;
+use crate::stats::json::Json;
+
+use super::http::{request_json, Client};
+
+/// Normalize a `--server` value to `host:port`: accepts a bare
+/// `host:port` or an `http://host:port[/]` URL.
+pub fn parse_server(url: &str) -> Result<String, String> {
+    let addr = url.strip_prefix("http://").unwrap_or(url).trim_end_matches('/');
+    if addr.is_empty() || !addr.contains(':') {
+        return Err(format!(
+            "server {url:?} is not host:port (e.g. 127.0.0.1:7070 or \
+             http://127.0.0.1:7070)"
+        ));
+    }
+    Ok(addr.to_string())
+}
+
+/// The remote campaign backend (`--backend remote --server URL`).
+pub struct Remote {
+    /// Coordinator address (`host:port`).
+    pub server: String,
+    /// Task count requested at submission — the lease granularity.
+    pub tasks: u64,
+    /// Local `hplsim worker --server` processes to spawn (0 = rely on
+    /// external workers already pointed at the coordinator).
+    pub workers: usize,
+    /// Lease duration requested at submission.
+    pub lease_secs: f64,
+    /// Give up after this many seconds without completion (0 = wait
+    /// forever — the external-worker deployment mode).
+    pub timeout_secs: f64,
+    /// The `hplsim` binary for spawned workers; `None` = current
+    /// executable.
+    pub exe: Option<PathBuf>,
+    /// Base status-poll interval in milliseconds (backs off while
+    /// nothing changes).
+    pub poll_ms: u64,
+    /// Campaign id assigned at submission (prepare → execute/collect).
+    id: RefCell<Option<String>>,
+}
+
+impl Remote {
+    pub fn new(server: impl Into<String>, tasks: u64, workers: usize) -> Remote {
+        Remote {
+            server: server.into(),
+            tasks,
+            workers,
+            lease_secs: 30.0,
+            timeout_secs: 0.0,
+            exe: None,
+            poll_ms: DEFAULT_POLL_MS,
+            id: RefCell::new(None),
+        }
+    }
+
+    fn client(&self) -> Client {
+        Client::new(self.server.clone())
+    }
+
+    fn campaign_id(&self) -> Result<String, ExecError> {
+        self.id.borrow().clone().ok_or_else(|| {
+            ExecError::backend("remote", "execute/collect before prepare".to_string())
+        })
+    }
+
+    fn spawn_worker(&self, threads: usize) -> Result<Child, ExecError> {
+        let exe = resolve_exe("remote", &self.exe)?;
+        Command::new(&exe)
+            .arg("worker")
+            .arg("--server")
+            .arg(&self.server)
+            .arg("--threads")
+            .arg(threads.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .map_err(|e| {
+                ExecError::backend(
+                    "remote",
+                    format!("cannot spawn worker {}: {e}", exe.display()),
+                )
+            })
+    }
+}
+
+impl ExecBackend for Remote {
+    fn name(&self) -> &str {
+        "remote"
+    }
+
+    fn prepare(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
+        if plan.todo.is_empty() {
+            return Ok(()); // pure cache replay — the coordinator is not involved
+        }
+        let client = self.client();
+        // Seed the store with locally cached entries the plan is *not*
+        // recomputing, so the coordinator doesn't schedule points this
+        // client already has (mirrors the file queue's cache seeding).
+        // Best-effort: a failed seed only costs a recomputation.
+        if let Some(dir) = campaign.cache_dir() {
+            let todo: HashSet<u64> = plan.todo.iter().map(|&i| plan.fps[i]).collect();
+            let mut seeded = HashSet::new();
+            for &fp in &plan.fps {
+                if !todo.contains(&fp) && seeded.insert(fp) {
+                    if let Ok(bytes) = std::fs::read(cache_path_fp(dir, fp)) {
+                        let _ = client.request(
+                            "POST",
+                            &format!("/api/result/{fp:016x}?eval={EVAL_DIRECT}"),
+                            &bytes,
+                        );
+                    }
+                }
+            }
+        }
+        let body = Json::obj(vec![
+            ("manifest", Manifest::new(campaign.points().to_vec()).to_json()),
+            ("tasks", Json::Num(self.tasks.max(1) as f64)),
+            ("lease_secs", Json::Num(self.lease_secs)),
+            ("eval", Json::Str(EVAL_DIRECT.into())),
+            ("skeleton", Json::Bool(campaign.skeleton_enabled())),
+            ("wave", Json::Num(campaign.wave_size() as f64)),
+        ]);
+        let v = request_json(&client, "POST", "/api/campaigns", body.to_string().as_bytes())
+            .map_err(|e| ExecError::backend("remote", e))?;
+        let id = v
+            .get("id")
+            .and_then(Json::as_str)
+            .ok_or_else(|| {
+                ExecError::backend("remote", "submission response has no campaign id")
+            })?
+            .to_string();
+        campaign.message(
+            "remote",
+            format!(
+                "submitted campaign {id}: {} point(s), {} distinct, {} in store, {} \
+                 task(s)",
+                campaign.points().len(),
+                v.get("distinct").and_then(Json::as_usize).unwrap_or(0),
+                v.get("hits").and_then(Json::as_usize).unwrap_or(0),
+                v.get("tasks").and_then(Json::as_usize).unwrap_or(0),
+            ),
+        );
+        *self.id.borrow_mut() = Some(id);
+        Ok(())
+    }
+
+    fn execute(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
+        if plan.todo.is_empty() {
+            return Ok(());
+        }
+        let id = self.campaign_id()?;
+        let client = self.client();
+        let mut children: Vec<(u32, Option<Child>)> = Vec::new();
+        let per_worker = (plan.threads / self.workers.max(1)).max(1);
+        for _ in 0..self.workers {
+            let child = self.spawn_worker(per_worker)?;
+            campaign.message(
+                "remote",
+                format!("spawned local worker (pid {}, {per_worker} threads)", child.id()),
+            );
+            children.push((child.id(), Some(child)));
+        }
+        if self.workers == 0 {
+            campaign.message(
+                "remote",
+                format!(
+                    "waiting for external workers — run `hplsim worker --server {}`",
+                    self.server
+                ),
+            );
+        }
+        let kill_all = |children: &mut Vec<(u32, Option<Child>)>| {
+            for (_, c) in children.iter_mut() {
+                if let Some(c) = c.as_mut() {
+                    kill_and_reap(c);
+                }
+            }
+        };
+
+        let t0 = Instant::now();
+        let mut poll = PollBackoff::new(Duration::from_millis(self.poll_ms));
+        let mut last_done = 0usize;
+        let mut last_reclaimed = 0usize;
+        let mut failures: Vec<String> = Vec::new();
+        loop {
+            let status =
+                match request_json(&client, "GET", &format!("/api/campaigns/{id}"), b"") {
+                    Ok(v) => v,
+                    Err(e) => {
+                        kill_all(&mut children);
+                        return Err(ExecError::backend("remote", e));
+                    }
+                };
+            let tasks = status.get("tasks").and_then(Json::as_usize).unwrap_or(0);
+            let done = status.get("tasks_done").and_then(Json::as_usize).unwrap_or(0);
+            let reclaimed =
+                status.get("reclaimed").and_then(Json::as_usize).unwrap_or(0);
+            if reclaimed != last_reclaimed {
+                campaign.message(
+                    "remote",
+                    format!("{} lease(s) expired — requeued", reclaimed - last_reclaimed),
+                );
+                last_reclaimed = reclaimed;
+                poll.reset();
+            }
+            if done != last_done {
+                campaign.message("remote", format!("{done}/{tasks} tasks done"));
+                last_done = done;
+                poll.reset();
+            }
+            if status.get("done").and_then(Json::as_bool) == Some(true) {
+                break;
+            }
+            // Liveness of the locally spawned workers (external-worker
+            // deployments wait indefinitely unless timeout_secs caps it).
+            let mut alive = self.workers == 0;
+            for (pid, slot) in children.iter_mut() {
+                let Some(child) = slot.as_mut() else { continue };
+                match child.try_wait() {
+                    Ok(None) => alive = true,
+                    Ok(Some(exit)) => {
+                        let out = slot.take().unwrap().wait_with_output().ok();
+                        if !exit.success() {
+                            let tail = out
+                                .map(|o| String::from_utf8_lossy(&o.stderr).trim().to_string())
+                                .unwrap_or_default();
+                            let what = format!("worker {pid}: {exit} — {tail}");
+                            campaign.message("remote", format!("local {what}"));
+                            failures.push(what);
+                        }
+                    }
+                    Err(_) => {}
+                }
+            }
+            if !alive {
+                kill_all(&mut children);
+                return Err(ExecError::backend(
+                    "remote",
+                    format!(
+                        "all {} local worker(s) exited with tasks remaining: {}",
+                        self.workers,
+                        if failures.is_empty() {
+                            "no failure output".to_string()
+                        } else {
+                            failures.join(" ; ")
+                        }
+                    ),
+                ));
+            }
+            if self.timeout_secs > 0.0 && t0.elapsed().as_secs_f64() > self.timeout_secs {
+                kill_all(&mut children);
+                return Err(ExecError::backend(
+                    "remote",
+                    format!(
+                        "campaign {id} not complete after {:.0}s ({last_done}/{tasks} \
+                         tasks done)",
+                        self.timeout_secs
+                    ),
+                ));
+            }
+            poll.wait();
+        }
+        // Campaign complete: the spawned workers are idling against the
+        // coordinator (or serving other tenants' campaigns we must not
+        // wait on) — reap them.
+        kill_all(&mut children);
+        Ok(())
+    }
+
+    fn collect(
+        &self,
+        campaign: &Campaign<'_>,
+        plan: &WorkPlan,
+    ) -> Result<Vec<(usize, HplResult)>, ExecError> {
+        let client = self.client();
+        let mut out = Vec::with_capacity(plan.todo.len());
+        let mut fetched: HashMap<u64, HplResult> = HashMap::new();
+        for &idx in &plan.todo {
+            let fp = plan.fps[idx];
+            if let Some(&r) = fetched.get(&fp) {
+                out.push((idx, r));
+                continue;
+            }
+            let path = format!("/api/result/{fp:016x}?eval={EVAL_DIRECT}");
+            let (status, bytes) = client
+                .request("GET", &path, b"")
+                .map_err(|e| ExecError::backend("remote", e))?;
+            let entry = if status == 200 {
+                std::str::from_utf8(&bytes)
+                    .ok()
+                    .and_then(|t| parse_entry_text(t, fp))
+                    .filter(|(_, tag)| tag == EVAL_DIRECT)
+            } else {
+                None
+            };
+            let Some((r, _)) = entry else {
+                return Err(ExecError::backend(
+                    "remote",
+                    format!(
+                        "point {idx} ({}) missing from the coordinator store (as a \
+                         \"{EVAL_DIRECT}\" entry) — was it never computed, or \
+                         submitted on a different evaluation path?",
+                        campaign.points()[idx].label
+                    ),
+                ));
+            };
+            // Results flow into the local campaign cache, so a remote
+            // run leaves the same artifacts as any other backend. Same
+            // temp+rename discipline as every cache write.
+            if let Some(dir) = campaign.cache_dir() {
+                let tmp = dir.join(format!(
+                    "{fp:016x}.tmp.{}.remote{idx}",
+                    std::process::id()
+                ));
+                let res = std::fs::write(&tmp, &bytes)
+                    .and_then(|()| std::fs::rename(&tmp, cache_path_fp(dir, fp)));
+                if res.is_err() {
+                    let _ = std::fs::remove_file(&tmp);
+                }
+            }
+            fetched.insert(fp, r);
+            out.push((idx, r));
+        }
+        Ok(out)
+    }
+}
+
+/// Options of [`run_remote_worker`] (the body of
+/// `hplsim worker --server URL`).
+#[derive(Clone, Debug)]
+pub struct RemoteWorkerOptions {
+    /// Pool threads per task (0 = `$HPLSIM_THREADS` or available cores).
+    pub threads: usize,
+    /// Exit after this long idle with no active campaign anywhere on
+    /// the coordinator (0 = exit the moment the coordinator is idle).
+    pub wait_secs: f64,
+    /// Base claim-poll interval in milliseconds (backs off while no
+    /// task is claimable).
+    pub poll_ms: u64,
+}
+
+impl Default for RemoteWorkerOptions {
+    fn default() -> RemoteWorkerOptions {
+        RemoteWorkerOptions { threads: 0, wait_secs: 30.0, poll_ms: DEFAULT_POLL_MS }
+    }
+}
+
+fn scratch_dir() -> PathBuf {
+    use std::hash::{BuildHasher, Hasher};
+    let token =
+        std::collections::hash_map::RandomState::new().build_hasher().finish();
+    std::env::temp_dir().join(format!(
+        "hplsim-worker-{}-{token:016x}",
+        std::process::id()
+    ))
+}
+
+/// Drain a coordinator over HTTP: claim tasks, execute each through the
+/// in-process pool into a private scratch cache, stream the result
+/// entries back to the content-addressed store, and return once the
+/// coordinator has been idle (no active campaign) for `wait_secs`.
+pub fn run_remote_worker(
+    server: &str,
+    opts: &RemoteWorkerOptions,
+) -> Result<WorkerSummary, String> {
+    let addr = parse_server(server)?;
+    let client = Client::new(addr);
+    // Private scratch cache, reused across tasks: repeated fingerprints
+    // within this worker's lifetime replay locally instead of
+    // re-simulating or re-fetching.
+    let scratch = scratch_dir();
+    std::fs::create_dir_all(&scratch)
+        .map_err(|e| format!("cannot create scratch cache {}: {e}", scratch.display()))?;
+    let mut manifests: HashMap<String, Manifest> = HashMap::new();
+    let mut poll = PollBackoff::new(Duration::from_millis(opts.poll_ms));
+    let mut idle_since: Option<Instant> = None;
+    let mut summary = WorkerSummary::default();
+
+    let outcome = loop {
+        let v = match request_json(&client, "POST", "/api/claim", b"{}") {
+            Ok(v) => v,
+            Err(e) => break Err(e),
+        };
+        if v.get("idle").and_then(Json::as_bool) == Some(true) {
+            let active = v.get("active").and_then(Json::as_usize).unwrap_or(0);
+            if active == 0 {
+                let since = *idle_since.get_or_insert_with(Instant::now);
+                if since.elapsed().as_secs_f64() >= opts.wait_secs {
+                    break Ok(());
+                }
+            } else {
+                // Campaigns are in flight on other workers — one may
+                // yet die and its task come back to us.
+                idle_since = None;
+            }
+            poll.wait();
+            continue;
+        }
+        idle_since = None;
+        poll.reset();
+        match run_claimed_task(&client, &v, &scratch, &mut manifests, opts, &mut summary)
+        {
+            Ok(()) => {}
+            Err(e) => break Err(e),
+        }
+    };
+    let _ = std::fs::remove_dir_all(&scratch);
+    outcome.map(|()| summary)
+}
+
+/// Execute one claimed task end to end. A lost lease is not an error
+/// (the reclaimer's new holder owns completion; our store submissions
+/// make its run a replay) — only local failures and transport failures
+/// are.
+fn run_claimed_task(
+    client: &Client,
+    claim: &Json,
+    scratch: &std::path::Path,
+    manifests: &mut HashMap<String, Manifest>,
+    opts: &RemoteWorkerOptions,
+    summary: &mut WorkerSummary,
+) -> Result<(), String> {
+    let id = claim
+        .get("campaign")
+        .and_then(Json::as_str)
+        .ok_or("claim response has no campaign id")?
+        .to_string();
+    let task = claim.get("task").and_then(Json::as_usize).ok_or("claim has no task")?;
+    let holder =
+        claim.get("holder").and_then(Json::as_u64).ok_or("claim has no holder")?;
+    let lease_secs = claim
+        .get("lease_secs")
+        .and_then(Json::as_f64)
+        .filter(|s| *s > 0.0 && s.is_finite())
+        .unwrap_or(30.0);
+    let eval = claim.get("eval").and_then(Json::as_str).unwrap_or(EVAL_DIRECT);
+    let skeleton = claim.get("skeleton").and_then(Json::as_bool).unwrap_or(true);
+    let wave = claim.get("wave").and_then(Json::as_usize).unwrap_or(0);
+    let lease_body = Json::obj(vec![
+        ("campaign", Json::Str(id.clone())),
+        ("task", Json::Num(task as f64)),
+        ("holder", Json::u64_str(holder)),
+    ])
+    .to_string();
+    let fail_task = |why: &str| {
+        let body = Json::obj(vec![
+            ("campaign", Json::Str(id.clone())),
+            ("task", Json::Num(task as f64)),
+            ("holder", Json::u64_str(holder)),
+            ("error", Json::Str(why.to_string())),
+        ]);
+        let _ = request_json(client, "POST", "/api/fail", body.to_string().as_bytes());
+    };
+    if eval != EVAL_DIRECT {
+        // This worker executes the pure-Rust path only; claiming an
+        // incompatible task and computing it anyway would mis-tag the
+        // campaign's results.
+        let why = format!("worker executes \"{EVAL_DIRECT}\" only, task wants \"{eval}\"");
+        fail_task(&why);
+        return Err(format!("task {task} of campaign {id}: {why}"));
+    }
+
+    // The campaign's manifest, fetched once per campaign and then
+    // reused across its tasks (validated by the ordinary loader).
+    if !manifests.contains_key(&id) {
+        let (status, bytes) = client
+            .request("GET", &format!("/api/campaigns/{id}/manifest"), b"")?;
+        let parsed = if status == 200 {
+            std::str::from_utf8(&bytes)
+                .ok()
+                .and_then(|t| Json::parse(t).ok())
+                .ok_or_else(|| format!("campaign {id}: manifest does not parse"))
+                .and_then(|v| Manifest::from_json(&v))
+        } else {
+            Err(format!("campaign {id}: manifest fetch returned HTTP {status}"))
+        };
+        match parsed {
+            Ok(m) => {
+                manifests.insert(id.clone(), m);
+            }
+            Err(e) => {
+                fail_task(&e);
+                return Err(e);
+            }
+        }
+    }
+    let manifest = &manifests[&id];
+    let mut points = Vec::new();
+    for pv in claim.get("points").and_then(Json::as_arr).unwrap_or(&[]) {
+        match pv.as_usize().and_then(|i| manifest.points.get(i)) {
+            Some(p) => points.push(p.clone()),
+            None => {
+                let why = "claim addresses a point outside the manifest".to_string();
+                fail_task(&why);
+                return Err(format!("task {task} of campaign {id}: {why}"));
+            }
+        }
+    }
+    if points.is_empty() {
+        // An empty task cannot be planned (empty groups are dropped),
+        // but complete it defensively rather than looping on it.
+        let _ =
+            request_json(client, "POST", "/api/complete", lease_body.as_bytes());
+        return Ok(());
+    }
+    // Seed the scratch cache from the store: a sibling campaign (or a
+    // racing duplicate of this one) may have computed some of these
+    // points since the task was planned.
+    let fps: Vec<u64> = points.iter().map(|p| p.fingerprint()).collect();
+    for &fp in &fps {
+        let path = cache_path_fp(scratch, fp);
+        if path.exists() {
+            continue;
+        }
+        if let Ok((200, bytes)) =
+            client.request("GET", &format!("/api/result/{fp:016x}?eval={eval}"), b"")
+        {
+            let tmp = scratch.join(format!("{fp:016x}.tmp.{}.seed", std::process::id()));
+            let res = std::fs::write(&tmp, &bytes)
+                .and_then(|()| std::fs::rename(&tmp, &path));
+            if res.is_err() {
+                let _ = std::fs::remove_file(&tmp);
+            }
+        }
+    }
+
+    // Heartbeat from a background thread, exactly like the file-queue
+    // worker: a definitive "lease lost" (HTTP 4xx) — or a coordinator
+    // unreachable through every retry — raises `lost`, and the owner
+    // skips completion instead of fighting the new holder.
+    let stop = Arc::new(AtomicBool::new(false));
+    let lost = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let client = client.clone();
+        let body = lease_body.clone();
+        let stop = stop.clone();
+        let lost = lost.clone();
+        std::thread::spawn(move || {
+            let interval = heartbeat_interval(lease_secs);
+            let slice = Duration::from_millis(20);
+            loop {
+                let mut waited = Duration::ZERO;
+                while waited < interval {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    std::thread::sleep(slice);
+                    waited += slice;
+                }
+                if request_json(&client, "POST", "/api/heartbeat", body.as_bytes())
+                    .is_err()
+                {
+                    lost.store(true, Ordering::Relaxed);
+                    return;
+                }
+            }
+        })
+    };
+
+    let result = Campaign::new(&points)
+        .threads(opts.threads)
+        .cache(Some(scratch.to_path_buf()))
+        .skeleton(skeleton)
+        .wave(wave)
+        .run(&InProcess::new());
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+
+    let report = match result {
+        Ok(r) => r,
+        Err(e) => {
+            // Give the task back before dying: a local failure must not
+            // strand the lease until expiry.
+            fail_task(&e.to_string());
+            return Err(format!("task {task} of campaign {id}: {e}"));
+        }
+    };
+
+    // Stream every distinct result entry back to the store (verbatim
+    // bytes — the scratch cache entries ARE the wire format). The store
+    // is the output channel: an entry that did not persist locally is a
+    // failure, mirroring the file-queue worker's persistence check.
+    let mut submitted = HashSet::new();
+    for (p, &fp) in points.iter().zip(&fps) {
+        if !submitted.insert(fp) {
+            continue;
+        }
+        let bytes = match std::fs::read(cache_path_fp(scratch, fp)) {
+            Ok(b) => b,
+            Err(e) => {
+                let why = format!(
+                    "result of point '{}' did not persist in the scratch cache: {e}",
+                    p.label
+                );
+                fail_task(&why);
+                return Err(format!("task {task} of campaign {id}: {why}"));
+            }
+        };
+        let path = format!(
+            "/api/result/{fp:016x}?eval={eval}&campaign={id}&task={task}&holder={holder}"
+        );
+        request_json(client, "POST", &path, &bytes)
+            .map_err(|e| format!("task {task} of campaign {id}: {e}"))?;
+    }
+
+    if lost.load(Ordering::Relaxed) {
+        // Presumed dead and the task reassigned; the new holder owns
+        // completion. Our store submissions make its run a replay.
+        return Ok(());
+    }
+    match request_json(client, "POST", "/api/complete", lease_body.as_bytes()) {
+        Ok(_) => {
+            summary.tasks += 1;
+            summary.points += points.len();
+            summary.computed += report.computed;
+            Ok(())
+        }
+        // A 409 here is the lost-lease race (reclaimed between the last
+        // heartbeat and now) — not an error. Transport failures were
+        // already retried inside the client; treat what remains as lost
+        // too: the lease will expire and a sibling re-executes.
+        Err(_) => Ok(()),
+    }
+}

@@ -1,0 +1,114 @@
+//! The coordinator's content-addressed result store.
+//!
+//! Entries are the exact bytes of `cache.rs` cache files, keyed by
+//! `(fingerprint, eval tag)` — filename `<fp as 16 hex>.<eval>.json`.
+//! Keying by the tag too (where per-campaign caches key by fingerprint
+//! alone and carry the tag inside the entry) lets one long-lived store
+//! serve tenants on *both* evaluation paths without a `direct` entry
+//! masking a `pjrt` one or vice versa; each campaign still only ever
+//! sees entries matching its own tag, so no report can mix paths.
+//!
+//! Every entry is validated on the way in (parseable, fingerprint and
+//! tag match the key, current model version) and again on the way out,
+//! so a corrupted or adversarial upload can never poison another
+//! tenant's campaign — an invalid entry is rejected or treated as a
+//! miss and the point recomputed, exactly like a damaged local cache.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::coordinator::backend::cache::parse_entry_text;
+
+/// An eval tag safe to embed in a filename and a URL: short, lowercase
+/// alphanumeric (`direct`, `pjrt`, and future siblings).
+pub fn valid_eval(eval: &str) -> bool {
+    !eval.is_empty()
+        && eval.len() <= 16
+        && eval.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit())
+}
+
+/// Validate raw entry bytes against the key they claim: UTF-8, parseable
+/// as a cache entry, fingerprint and eval tag matching, current model
+/// version. Returns a reason on failure.
+pub fn validate_entry(bytes: &[u8], fp: u64, eval: &str) -> Result<(), String> {
+    let text = std::str::from_utf8(bytes).map_err(|_| "entry is not UTF-8".to_string())?;
+    match parse_entry_text(text, fp) {
+        Some((_, tag)) if tag == eval => Ok(()),
+        Some((_, tag)) => Err(format!(
+            "entry carries eval tag \"{tag}\" but was submitted as \"{eval}\""
+        )),
+        None => Err(format!(
+            "entry does not parse as a model-version-current cache entry for \
+             fingerprint {fp:016x}"
+        )),
+    }
+}
+
+/// The on-disk store. All writes are temp+rename (the same discipline as
+/// the campaign caches — readers never observe torn entries) and
+/// idempotent: storing an already-present key is a no-op, so duplicate
+/// submissions from racing workers are harmless.
+pub struct Store {
+    dir: PathBuf,
+}
+
+impl Store {
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Store, String> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("cannot create store {}: {e}", dir.display()))?;
+        Ok(Store { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn entry_path(&self, fp: u64, eval: &str) -> PathBuf {
+        self.dir.join(format!("{fp:016x}.{eval}.json"))
+    }
+
+    pub fn has(&self, fp: u64, eval: &str) -> bool {
+        valid_eval(eval) && self.entry_path(fp, eval).exists()
+    }
+
+    /// Entry bytes, validated — a corrupted on-disk entry reads as a
+    /// miss, never as data.
+    pub fn get(&self, fp: u64, eval: &str) -> Option<Vec<u8>> {
+        if !valid_eval(eval) {
+            return None;
+        }
+        let bytes = std::fs::read(self.entry_path(fp, eval)).ok()?;
+        validate_entry(&bytes, fp, eval).ok()?;
+        Some(bytes)
+    }
+
+    /// Store entry bytes under `(fp, eval)`. Returns `Ok(true)` when the
+    /// entry is new, `Ok(false)` when an entry already existed (the
+    /// submitted bytes are discarded — first write wins, and since
+    /// entries are deterministic functions of the fingerprint the bytes
+    /// are identical anyway), `Err` when the bytes fail validation.
+    pub fn put(&self, fp: u64, eval: &str, bytes: &[u8]) -> Result<bool, String> {
+        if !valid_eval(eval) {
+            return Err(format!("invalid eval tag {eval:?}"));
+        }
+        validate_entry(bytes, fp, eval)?;
+        let final_path = self.entry_path(fp, eval);
+        if final_path.exists() {
+            return Ok(false);
+        }
+        static TMP_SEQ: AtomicUsize = AtomicUsize::new(0);
+        let tmp = self.dir.join(format!(
+            "{fp:016x}.{eval}.tmp.{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, bytes)
+            .and_then(|()| std::fs::rename(&tmp, &final_path))
+            .map_err(|e| {
+                let _ = std::fs::remove_file(&tmp);
+                format!("cannot store {}: {e}", final_path.display())
+            })?;
+        Ok(true)
+    }
+}

@@ -1,9 +1,10 @@
 //! Execution-backend equivalence: one campaign executed via the
-//! in-process pool (1/2/8 threads), `hplsim shard` subprocesses, and a
-//! file work queue drained by real `hplsim worker` processes yields
-//! bit-identical results and byte-identical `campaign.csv` reports —
-//! plus crash recovery: a killed queue worker's expired lease is
-//! reclaimed and the merged report is still identical.
+//! in-process pool (1/2/8 threads), `hplsim shard` subprocesses, a
+//! file work queue drained by real `hplsim worker` processes, and an
+//! `hplsim serve` coordinator driven over HTTP yields bit-identical
+//! results and byte-identical `campaign.csv` reports — plus crash
+//! recovery: a killed queue worker's expired lease is reclaimed and
+//! the merged report is still identical.
 //!
 //! The child processes are the actual `hplsim` binary (Cargo exposes it
 //! to integration tests via `CARGO_BIN_EXE_hplsim`), so these tests
@@ -165,6 +166,59 @@ fn all_backends_produce_byte_identical_reports() {
     assert_eq!(rep.computed, 12);
     assert_eq!(csv(&points, &rep.results), want, "file-queue report diverged");
 
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// The remote backend — an embedded `hplsim serve` coordinator plus two
+/// real `hplsim worker --server` processes — produces a byte-identical
+/// report, and resubmitting the identical campaign is answered entirely
+/// from the coordinator's content-addressed store (zero new entries,
+/// zero workers).
+#[test]
+fn remote_backend_produces_byte_identical_reports() {
+    use hplsim::coordinator::serve::{Remote, ServeOptions, Server};
+    let base = fresh_dir("remote");
+    let points = campaign(12, 42);
+
+    let reference =
+        Campaign::new(&points).threads(2).run(&InProcess::new()).unwrap();
+    let want = csv(&points, &reference.results);
+
+    let mut server =
+        Server::start(ServeOptions::new("127.0.0.1:0", base.join("store"))).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut remote = Remote::new(addr.clone(), 3, 2);
+    remote.exe = Some(hplsim_exe());
+    remote.timeout_secs = 240.0;
+    let rep = Campaign::new(&points).threads(2).run(&remote).expect("remote backend");
+    assert_eq!(rep.computed, 12);
+    assert_eq!(csv(&points, &rep.results), want, "remote report diverged");
+
+    // Twelve distinct results landed in the store, all tagged "direct".
+    let entries = || {
+        let mut names: Vec<String> = std::fs::read_dir(base.join("store"))
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        names
+    };
+    let after_first = entries();
+    assert_eq!(after_first.len(), 12);
+    assert!(after_first.iter().all(|n| n.ends_with(".direct.json")));
+
+    // Resubmission: same manifest, zero local workers — the daemon joins
+    // the finished campaign and every result is served from the store.
+    let remote2 = Remote::new(addr, 3, 0);
+    let rep2 = Campaign::new(&points)
+        .threads(2)
+        .run(&remote2)
+        .expect("remote resubmission");
+    assert_eq!(csv(&points, &rep2.results), want, "resubmitted report diverged");
+    assert_eq!(entries(), after_first, "resubmission must not grow the store");
+
+    server.shutdown();
     let _ = std::fs::remove_dir_all(&base);
 }
 

@@ -55,7 +55,7 @@ fn points(n: usize) -> Vec<SimPoint> {
 }
 
 fn worker_opts() -> WorkerOptions {
-    WorkerOptions { threads: 1, wait_secs: 0.5 }
+    WorkerOptions { threads: 1, wait_secs: 0.5, ..WorkerOptions::default() }
 }
 
 #[test]
@@ -138,8 +138,7 @@ fn future_mtime_lease_is_reclaimed_not_pinned_forever() {
         .unwrap()
         .set_times(std::fs::FileTimes::new().set_modified(future))
         .unwrap();
-    let summary =
-        run_worker(&qdir, &WorkerOptions { threads: 1, wait_secs: 0.5 }).unwrap();
+    let summary = run_worker(&qdir, &worker_opts()).unwrap();
     assert_eq!(summary.tasks, 2, "both tasks completed, including the reclaimed one");
     for t in 0..2 {
         assert!(qdir.join("done").join(format!("task-{t:04}")).exists());

@@ -1,0 +1,316 @@
+//! Fault injection for the `hplsim serve` coordinator: truncated
+//! request bodies, connections dropped mid-request and mid-response,
+//! workers that die after claiming a task, duplicate result
+//! submissions and malformed manifests must every one surface as a
+//! *structured* error (or be recovered from) — never a hang, never a
+//! panic. Every socket carries a bounded timeout so a regression shows
+//! up as a test failure, not a CI timeout.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hplsim::blas::{DgemmModel, NodeCoef};
+use hplsim::coordinator::backend::{cache_path_fp, Campaign, InProcess, SimPoint};
+use hplsim::coordinator::manifest::Manifest;
+use hplsim::coordinator::serve::http::request_json;
+use hplsim::coordinator::serve::{Client, ServeOptions, Server};
+use hplsim::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
+use hplsim::network::{NetModel, Topology};
+use hplsim::stats::json::Json;
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("hplsim_sfault_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A tiny all-explicit campaign (fast to simulate).
+fn points(n: usize) -> Vec<SimPoint> {
+    (0..n)
+        .map(|i| {
+            SimPoint::explicit(
+                format!("sf{i}"),
+                HplConfig {
+                    n: 96 + 32 * (i % 2),
+                    nb: 32,
+                    p: 2,
+                    q: 2,
+                    depth: 0,
+                    bcast: Bcast::Ring,
+                    swap: SwapAlg::BinExch,
+                    swap_threshold: 64,
+                    rfact: Rfact::Crout,
+                    nbmin: 8,
+                },
+                Topology::star(4, 12.5e9, 40e9),
+                NetModel::ideal(),
+                DgemmModel::homogeneous(NodeCoef {
+                    mu: [1e-11, 0.0, 0.0, 0.0, 5e-7],
+                    sigma: [3e-13, 0.0, 0.0, 0.0, 0.0],
+                }),
+                1,
+                1000 + i as u64,
+            )
+        })
+        .collect()
+}
+
+/// An embedded coordinator on an ephemeral port plus a client for it.
+fn start_server(tag: &str) -> (Server, Client, PathBuf) {
+    let store = fresh_dir(&format!("{tag}_store"));
+    let mut opts = ServeOptions::new("127.0.0.1:0", store.clone());
+    opts.io_timeout_secs = 2.0;
+    let server = Server::start(opts).unwrap();
+    let client = Client::new(server.addr().to_string());
+    (server, client, store)
+}
+
+fn submit(client: &Client, pts: &[SimPoint], tasks: usize, lease_secs: f64) -> Json {
+    let body = Json::obj(vec![
+        ("manifest", Manifest::new(pts.to_vec()).to_json()),
+        ("tasks", Json::Num(tasks as f64)),
+        ("lease_secs", Json::Num(lease_secs)),
+    ])
+    .to_string();
+    request_json(client, "POST", "/api/campaigns", body.as_bytes()).unwrap()
+}
+
+fn lease_body(campaign: &str, task: usize, holder: u64) -> String {
+    Json::obj(vec![
+        ("campaign", Json::Str(campaign.to_string())),
+        ("task", Json::Num(task as f64)),
+        ("holder", Json::u64_str(holder)),
+    ])
+    .to_string()
+}
+
+/// Simulate `pts` locally and return each point's verbatim cache-entry
+/// bytes (what a worker submits to the store).
+fn entry_bytes(tag: &str, pts: &[SimPoint]) -> Vec<(u64, Vec<u8>)> {
+    let cache = fresh_dir(&format!("{tag}_cache"));
+    Campaign::new(pts)
+        .threads(1)
+        .cache(Some(cache.clone()))
+        .run(&InProcess::new())
+        .unwrap();
+    let out = pts
+        .iter()
+        .map(|p| {
+            let fp = p.fingerprint();
+            (fp, std::fs::read(cache_path_fp(&cache, fp)).unwrap())
+        })
+        .collect();
+    let _ = std::fs::remove_dir_all(&cache);
+    out
+}
+
+#[test]
+fn truncated_request_body_is_a_400_not_a_hang() {
+    let (mut server, client, store) = start_server("trunc");
+    // Promise 100 body bytes, deliver 5, close the write side.
+    let mut s = TcpStream::connect(server.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(b"POST /api/campaigns HTTP/1.1\r\nContent-Length: 100\r\n\r\nshort")
+        .unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    let mut resp = String::new();
+    let _ = s.read_to_string(&mut resp);
+    assert!(resp.starts_with("HTTP/1.1 400"), "want a 400, got: {resp:?}");
+    assert!(resp.contains("mid-body"), "want the truncation named: {resp:?}");
+    // The daemon is still serving.
+    let health = request_json(&client, "GET", "/api/health", b"").unwrap();
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn connection_drops_leave_the_daemon_serving() {
+    let (mut server, client, store) = start_server("drop");
+    // Drop mid-request-line.
+    {
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let _ = s.write_all(b"GET /api/hea");
+    }
+    // Full request, then drop without reading the response (the server's
+    // write fails into the void — its problem, not ours).
+    {
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let _ = s.write_all(b"GET /api/health HTTP/1.1\r\nContent-Length: 0\r\n\r\n");
+    }
+    // Connect and say nothing at all.
+    drop(TcpStream::connect(server.addr()).unwrap());
+    // The daemon shrugs all three off.
+    for _ in 0..3 {
+        let health = request_json(&client, "GET", "/api/health", b"").unwrap();
+        assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn dead_worker_lease_is_reclaimed_and_reexecuted() {
+    let (mut server, client, store) = start_server("reclaim");
+    let pts = points(3);
+    let st = submit(&client, &pts, 1, 0.4);
+    let cid = st.get("id").and_then(Json::as_str).unwrap().to_string();
+    assert_eq!(st.get("tasks").and_then(Json::as_usize), Some(1));
+    assert_eq!(st.get("hits").and_then(Json::as_usize), Some(0));
+
+    // "Worker" one claims the only task and dies (never heartbeats).
+    let claim1 = request_json(&client, "POST", "/api/claim", b"{}").unwrap();
+    assert_eq!(claim1.get("campaign").and_then(Json::as_str), Some(cid.as_str()));
+    assert_eq!(claim1.get("task").and_then(Json::as_usize), Some(0));
+    let holder1 = claim1.get("holder").and_then(Json::as_u64).unwrap();
+
+    // While the lease is live there is nothing to hand out.
+    let idle = request_json(&client, "POST", "/api/claim", b"{}").unwrap();
+    assert_eq!(idle.get("idle").and_then(Json::as_bool), Some(true));
+    assert_eq!(idle.get("active").and_then(Json::as_usize), Some(1));
+
+    // Past the lease the task is requeued and goes to the next claimant.
+    std::thread::sleep(Duration::from_millis(600));
+    let claim2 = request_json(&client, "POST", "/api/claim", b"{}").unwrap();
+    assert_eq!(claim2.get("task").and_then(Json::as_usize), Some(0));
+    let holder2 = claim2.get("holder").and_then(Json::as_u64).unwrap();
+    assert_ne!(holder1, holder2, "a reclaimed lease gets a fresh holder token");
+    let status =
+        request_json(&client, "GET", &format!("/api/campaigns/{cid}"), b"").unwrap();
+    assert_eq!(status.get("reclaimed").and_then(Json::as_usize), Some(1));
+
+    // The dead worker's credentials are gone for good.
+    let stale = lease_body(&cid, 0, holder1);
+    let err =
+        request_json(&client, "POST", "/api/heartbeat", stale.as_bytes()).unwrap_err();
+    assert!(err.contains("409"), "stale heartbeat must conflict: {err}");
+
+    // Completion without results in the store is refused...
+    let live = lease_body(&cid, 0, holder2);
+    let err =
+        request_json(&client, "POST", "/api/complete", live.as_bytes()).unwrap_err();
+    assert!(err.contains("missing"), "resultless completion must be refused: {err}");
+
+    // ... and accepted once the re-executed results actually land.
+    for (fp, bytes) in entry_bytes("reclaim", &pts) {
+        let path = format!("/api/result/{fp:016x}?eval=direct&campaign={cid}");
+        let ok = request_json(&client, "POST", &path, &bytes).unwrap();
+        assert_eq!(ok.get("stored").and_then(Json::as_bool), Some(true));
+    }
+    let done = request_json(&client, "POST", "/api/complete", live.as_bytes()).unwrap();
+    assert_eq!(done.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(done.get("done").and_then(Json::as_bool), Some(true));
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn duplicate_result_submission_is_idempotent() {
+    let (mut server, client, store) = start_server("dup");
+    let pts = points(1);
+    let (fp, bytes) = entry_bytes("dup", &pts).remove(0);
+    let path = format!("/api/result/{fp:016x}?eval=direct");
+
+    let first = request_json(&client, "POST", &path, &bytes).unwrap();
+    assert_eq!(first.get("new").and_then(Json::as_bool), Some(true));
+    let second = request_json(&client, "POST", &path, &bytes).unwrap();
+    assert_eq!(second.get("new").and_then(Json::as_bool), Some(false));
+
+    // The stored entry is the verbatim bytes.
+    let (status, got) = client.request("GET", &path, b"").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(got, bytes);
+
+    // Bytes that don't validate against their claimed key are rejected.
+    let other = format!("/api/result/{:016x}?eval=direct", fp ^ 1);
+    let (status, _) = client.request("POST", &other, &bytes).unwrap();
+    assert_eq!(status, 400, "fingerprint-mismatched entry must be rejected");
+    let (status, _) = client.request("POST", &path, b"not an entry").unwrap();
+    assert_eq!(status, 400, "garbage entry must be rejected");
+
+    // A campaign whose every point is already stored plans zero tasks
+    // and is born done.
+    let st = submit(&client, &pts, 4, 5.0);
+    assert_eq!(st.get("hits").and_then(Json::as_usize), Some(1));
+    assert_eq!(st.get("tasks").and_then(Json::as_usize), Some(0));
+    assert_eq!(st.get("done").and_then(Json::as_bool), Some(true));
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn malformed_submissions_are_structured_400s() {
+    let (mut server, client, store) = start_server("badsub");
+    let bad_bodies: Vec<Vec<u8>> = vec![
+        b"\xff\xfe".to_vec(),                             // not UTF-8
+        b"{not json".to_vec(),                            // not JSON
+        b"{}".to_vec(),                                   // no manifest field
+        br#"{"manifest": {"format": "bogus"}}"#.to_vec(), // foreign format
+    ];
+    for body in bad_bodies {
+        let (status, resp) = client.request("POST", "/api/campaigns", &body).unwrap();
+        assert_eq!(status, 400, "body {body:?} must be a 400");
+        let v = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+        assert!(
+            v.get("error").and_then(Json::as_str).is_some(),
+            "400s carry a structured error: {v:?}"
+        );
+    }
+    // An empty manifest plans nothing and is refused.
+    let empty = Json::obj(vec![("manifest", Manifest::new(Vec::new()).to_json())])
+        .to_string();
+    let (status, _) = client.request("POST", "/api/campaigns", empty.as_bytes()).unwrap();
+    assert_eq!(status, 400);
+    // Remote campaigns run the pure-Rust path only.
+    let pjrt = Json::obj(vec![
+        ("manifest", Manifest::new(points(1)).to_json()),
+        ("eval", Json::Str("pjrt".to_string())),
+    ])
+    .to_string();
+    let (status, _) = client.request("POST", "/api/campaigns", pjrt.as_bytes()).unwrap();
+    assert_eq!(status, 400);
+    // Lease verbs validate their bodies and targets.
+    let (status, _) = client.request("POST", "/api/heartbeat", b"{}").unwrap();
+    assert_eq!(status, 400);
+    let (status, _) =
+        client.request("POST", "/api/complete", lease_body("nope", 0, 1).as_bytes()).unwrap();
+    assert_eq!(status, 404, "unknown campaign");
+    // Unknown endpoints and bad fingerprints.
+    let (status, _) = client.request("GET", "/api/nope", b"").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = client.request("GET", "/api/campaigns/00000000deadbeef", b"").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = client.request("POST", "/api/result/zzz?eval=direct", b"").unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = client
+        .request("GET", &format!("/api/result/{:016x}?eval=UP", 7u64), b"")
+        .unwrap();
+    assert_eq!(status, 400, "eval tags are lowercase alphanumeric");
+    // After all that abuse the daemon still serves.
+    let health = request_json(&client, "GET", "/api/health", b"").unwrap();
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn absent_coordinator_degrades_to_a_structured_error() {
+    // Nobody listens here; the port is from the ephemeral range of a
+    // listener we immediately drop.
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut client = Client::new(addr);
+    client.retries = 2;
+    client.timeout = Duration::from_millis(500);
+    let err = request_json(&client, "GET", "/api/health", b"").unwrap_err();
+    assert!(
+        err.contains("after 2 attempt(s)"),
+        "bounded retries, then a structured error: {err}"
+    );
+}
