@@ -57,6 +57,12 @@ pub struct ArtifactMode {
     pub arts: Rc<Artifacts>,
     /// Points per batched evaluation (>= 1; `sweep --batch-size`).
     pub batch_points: usize,
+    /// Store results under this tag instead of the runtime's natural
+    /// one. A remote worker serving a `pjrt`-tagged campaign through
+    /// the functional stub (whose natural tag is `direct`, being
+    /// bit-identical) must still emit entries the campaign's store key
+    /// accepts.
+    pub eval_override: Option<&'static str>,
 }
 
 impl ArtifactMode {
@@ -65,7 +71,8 @@ impl ArtifactMode {
     /// real PJRT client is f32-rounded and tags its entries so they
     /// never silently mix with pure-Rust ones (see `cache::EVAL_PJRT`).
     pub fn eval_tag(&self) -> &'static str {
-        eval_tag_for(Some(self.arts.as_ref()))
+        self.eval_override
+            .unwrap_or_else(|| eval_tag_for(Some(self.arts.as_ref())))
     }
 }
 

@@ -173,7 +173,24 @@ impl InProcess {
     pub fn with_artifacts(arts: Rc<Artifacts>, batch_points: usize) -> InProcess {
         InProcess {
             finished: Mutex::default(),
-            artifacts: Some(ArtifactMode { arts, batch_points }),
+            artifacts: Some(ArtifactMode { arts, batch_points, eval_override: None }),
+            stage_seconds: Mutex::default(),
+        }
+    }
+
+    /// Batched-artifact mode with a pinned eval tag. A remote worker
+    /// serving a `pjrt`-tagged campaign must store its entries under
+    /// the campaign's tag even when its local runtime is the functional
+    /// stub (whose natural tag is `direct`, being bit-identical to the
+    /// pure-Rust engine).
+    pub fn with_artifacts_eval(
+        arts: Rc<Artifacts>,
+        batch_points: usize,
+        eval: &'static str,
+    ) -> InProcess {
+        InProcess {
+            finished: Mutex::default(),
+            artifacts: Some(ArtifactMode { arts, batch_points, eval_override: Some(eval) }),
             stage_seconds: Mutex::default(),
         }
     }

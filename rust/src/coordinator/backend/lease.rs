@@ -14,7 +14,7 @@
 //! should pace its polling — live here, once, so the two transports
 //! cannot drift apart.
 
-use std::time::{Duration, Instant, SystemTime};
+use std::time::{Duration, SystemTime};
 
 /// Whether a lease stamped at `stamp` has expired by `now`. The rule
 /// both transports share:
@@ -100,7 +100,7 @@ pub enum CompleteOutcome {
 #[derive(Clone, Copy, Debug)]
 enum TaskState {
     Todo,
-    Leased { holder: u64, stamp: Instant },
+    Leased { holder: u64, stamp: SystemTime },
     Done,
 }
 
@@ -110,9 +110,12 @@ enum TaskState {
 /// `FileQueue` marker directories encode on disk (`todo/`, `leases/`
 /// with mtime heartbeats, `done/`), factored out so the `hplsim serve`
 /// coordinator can run the same semantics over HTTP without a shared
-/// filesystem. Single-process by construction (the server owns it
-/// behind a mutex), so stamps are monotonic [`Instant`]s — no clock
-/// skew, no future-stamp case.
+/// filesystem. Stamps are wall-clock [`SystemTime`]s judged by
+/// [`stamp_expired`] — the same rule the file queue applies to its
+/// lease-file mtimes — so a table rebuilt from a persisted journal
+/// (a restarted daemon) keeps expiring leases correctly across the
+/// restart, and the future-skew guard covers a corrupted or hostile
+/// stamp exactly as it does on disk.
 #[derive(Debug)]
 pub struct LeaseTable {
     lease_secs: f64,
@@ -161,12 +164,13 @@ impl LeaseTable {
     }
 
     /// Requeue every lease whose last heartbeat is older than the lease
-    /// duration. Returns the reclaimed task indices.
-    pub fn reclaim_expired(&mut self, now: Instant) -> Vec<usize> {
+    /// duration (or stamped impossibly far in the future — see
+    /// [`stamp_expired`]). Returns the reclaimed task indices.
+    pub fn reclaim_expired(&mut self, now: SystemTime) -> Vec<usize> {
         let mut out = Vec::new();
         for (t, s) in self.states.iter_mut().enumerate() {
             if let TaskState::Leased { stamp, .. } = *s {
-                if now.saturating_duration_since(stamp).as_secs_f64() > self.lease_secs {
+                if stamp_expired(now, stamp, self.lease_secs) {
                     *s = TaskState::Todo;
                     out.push(t);
                 }
@@ -180,7 +184,7 @@ impl LeaseTable {
     /// The token is what every later heartbeat/complete must present —
     /// a reclaimed-and-reassigned task has a new holder, and the old
     /// one's stale token no longer completes it.
-    pub fn claim(&mut self, now: Instant) -> Option<(usize, u64)> {
+    pub fn claim(&mut self, now: SystemTime) -> Option<(usize, u64)> {
         for (t, s) in self.states.iter_mut().enumerate() {
             if matches!(s, TaskState::Todo) {
                 self.next_holder += 1;
@@ -195,7 +199,7 @@ impl LeaseTable {
     /// Refresh a held lease; `false` means the lease was lost (the
     /// holder should skip completion, exactly like a failed lease-file
     /// open in the file queue).
-    pub fn heartbeat(&mut self, task: usize, holder: u64, now: Instant) -> bool {
+    pub fn heartbeat(&mut self, task: usize, holder: u64, now: SystemTime) -> bool {
         match self.states.get_mut(task) {
             Some(TaskState::Leased { holder: h, stamp }) if *h == holder => {
                 *stamp = now;
@@ -235,6 +239,62 @@ impl LeaseTable {
             _ => false,
         }
     }
+
+    // ---- journal-replay restoration (a rebuilding daemon) ----------
+    //
+    // These bypass the ordinary transitions: the journal already
+    // recorded that the transition happened, so replay forces the state
+    // rather than re-validating it. Holder tokens stay monotonic —
+    // every restored lease raises the mint floor, so tokens issued
+    // after a restart can never collide with tokens issued before it.
+
+    /// Force a task to `Done` (replaying a completion record).
+    pub fn restore_done(&mut self, task: usize) {
+        if let Some(s) = self.states.get_mut(task) {
+            *s = TaskState::Done;
+        }
+    }
+
+    /// Force a task back to `Todo` (replaying a fail/reclaim record).
+    pub fn restore_todo(&mut self, task: usize) {
+        if let Some(s) = self.states.get_mut(task) {
+            if !matches!(s, TaskState::Done) {
+                *s = TaskState::Todo;
+            }
+        }
+    }
+
+    /// Restore a live lease with its original holder token, stamped at
+    /// `stamp` (replay passes "now": the holder — if still alive — will
+    /// re-heartbeat within one interval, and a dead one expires one
+    /// lease later; heartbeats are deliberately not journaled).
+    pub fn restore_lease(&mut self, task: usize, holder: u64, stamp: SystemTime) {
+        if let Some(s) = self.states.get_mut(task) {
+            if !matches!(s, TaskState::Done) {
+                *s = TaskState::Leased { holder, stamp };
+            }
+        }
+        self.next_holder = self.next_holder.max(holder);
+    }
+
+    /// Restore the cumulative reclaim counter (compaction snapshots it).
+    pub fn restore_reclaimed(&mut self, reclaimed: u64) {
+        self.reclaimed = self.reclaimed.max(reclaimed);
+    }
+
+    /// The holder token of a task's live lease, if any (journal
+    /// compaction snapshots live leases).
+    pub fn lease_holder(&self, task: usize) -> Option<u64> {
+        match self.states.get(task) {
+            Some(TaskState::Leased { holder, .. }) => Some(*holder),
+            _ => None,
+        }
+    }
+
+    /// Whether a task is done (journal compaction).
+    pub fn task_done(&self, task: usize) -> bool {
+        matches!(self.states.get(task), Some(TaskState::Done))
+    }
 }
 
 #[cfg(test)]
@@ -244,7 +304,7 @@ mod tests {
     #[test]
     fn claim_heartbeat_complete_roundtrip() {
         let mut lt = LeaseTable::new(2, 5.0);
-        let now = Instant::now();
+        let now = SystemTime::now();
         let (t0, h0) = lt.claim(now).unwrap();
         let (t1, h1) = lt.claim(now).unwrap();
         assert_eq!((t0, t1), (0, 1));
@@ -262,7 +322,7 @@ mod tests {
     #[test]
     fn expiry_reclaims_and_invalidates_the_old_holder() {
         let mut lt = LeaseTable::new(1, 1.0);
-        let t0 = Instant::now();
+        let t0 = SystemTime::now();
         let (task, old) = lt.claim(t0).unwrap();
         // Not yet expired: nothing reclaimed.
         assert!(lt.reclaim_expired(t0 + Duration::from_millis(500)).is_empty());
@@ -282,7 +342,7 @@ mod tests {
     #[test]
     fn heartbeat_defers_expiry_and_fail_requeues() {
         let mut lt = LeaseTable::new(1, 1.0);
-        let t0 = Instant::now();
+        let t0 = SystemTime::now();
         let (task, holder) = lt.claim(t0).unwrap();
         // Heartbeat at +0.8s moves the stamp; +1.5s is then unexpired.
         assert!(lt.heartbeat(task, holder, t0 + Duration::from_millis(800)));
@@ -303,6 +363,34 @@ mod tests {
         // a live heartbeat.
         assert!(!stamp_expired(now, now + Duration::from_secs(1), lease));
         assert!(stamp_expired(now, now + Duration::from_secs(3), lease));
+    }
+
+    #[test]
+    fn restore_rebuilds_state_and_keeps_holders_monotonic() {
+        // Simulate a journal replay: task 0 done, task 1 live under
+        // holder 7, task 2 todo, 3 reclaims on record.
+        let now = SystemTime::now();
+        let mut lt = LeaseTable::new(3, 5.0);
+        lt.restore_done(0);
+        lt.restore_lease(1, 7, now);
+        lt.restore_reclaimed(3);
+        assert_eq!(lt.done(), 1);
+        assert_eq!(lt.leased(), 1);
+        assert_eq!(lt.reclaimed(), 3);
+        assert_eq!(lt.lease_holder(1), Some(7));
+        assert!(lt.task_done(0) && !lt.task_done(1));
+        // The restored holder resumes heartbeating and completes.
+        assert!(lt.heartbeat(1, 7, now));
+        assert_eq!(lt.complete(1, 7), CompleteOutcome::Completed);
+        // Fresh tokens mint above every restored one.
+        let (task, holder) = lt.claim(now).unwrap();
+        assert_eq!(task, 2);
+        assert!(holder > 7, "post-restart token {holder} must exceed restored 7");
+        // A future-skewed stamp beyond one lease is reclaimed (wall
+        // clocks, unlike the old monotonic stamps, can be hostile).
+        let mut skew = LeaseTable::new(1, 1.0);
+        skew.restore_lease(0, 1, now + Duration::from_secs(60));
+        assert_eq!(skew.reclaim_expired(now), vec![0]);
     }
 
     #[test]

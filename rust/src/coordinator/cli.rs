@@ -7,7 +7,7 @@ use std::rc::Rc;
 use crate::coordinator::backend::{
     cache_gc, campaign_table, eval_tag_for, run_worker, Campaign, CampaignReport,
     ExecError, FileQueue, InProcess, Platform, SimPoint, Subprocess, WorkerOptions,
-    DEFAULT_POLL_MS, EVAL_DIRECT,
+    DEFAULT_POLL_MS, EVAL_DIRECT, EVAL_PJRT,
 };
 use crate::coordinator::doe::ParamSpace;
 use crate::coordinator::experiments::{self, ExpCtx, Scale};
@@ -83,8 +83,13 @@ USAGE:
                     work is done by `hplsim worker --server` processes
                     (--remote-workers spawns W locally; default 0 = only
                     external workers). --queue-tasks and --lease-secs
-                    shape the coordinator leases as with queue. Requires
-                    the pure-Rust evaluation path (no PJRT artifacts).
+                    shape the coordinator leases as with queue. The
+                    campaign carries the local evaluation-path tag
+                    (direct, or pjrt with a real runtime loaded);
+                    --remote-eval direct|pjrt pins it explicitly, and
+                    only workers with a loadable runtime serve pjrt
+                    tasks. --token authenticates against a coordinator
+                    running with --token-file.
       Structurally identical points (same config/topology/network, only
       coefficient and seed draws differing) share one compiled schedule
       skeleton: the engine runs once per structure class and every
@@ -145,7 +150,7 @@ USAGE:
       so revisited configurations replay from the --cache. Results:
       tune.csv (every evaluation), tune_best.csv (top --keep).
   hplsim worker (--queue DIR | --server URL) [--threads T]
-                [--wait-secs S] [--poll-ms MS]
+                [--wait-secs S] [--poll-ms MS] [--token TOKEN]
       Pull task leases off a file work queue (created by
       `sweep --backend queue`) or an `hplsim serve` coordinator until
       the work is drained: claim a task, simulate its points, submit
@@ -154,14 +159,25 @@ USAGE:
       machines sharing DIR or with network reach to URL. When no task
       is claimable the worker polls with capped exponential backoff
       starting at --poll-ms (default 100); with --server it exits after
-      --wait-secs of a fully idle coordinator.
+      --wait-secs of a fully idle coordinator. Tasks tagged `pjrt` are
+      served only when the worker's PJRT runtime loads (refused with a
+      structured error otherwise); --token authenticates against a
+      coordinator running with --token-file.
   hplsim serve --store DIR [--addr HOST:PORT] [--lease-secs S]
+               [--handlers N] [--evict-secs S] [--token-file FILE]
       Run the campaign coordinator daemon: accept campaign manifests
       over HTTP (POST /api/campaigns), lease tasks to `hplsim worker
       --server` processes, and keep every result in a content-addressed
       store under DIR keyed by (point fingerprint, evaluation-path
       tag). Resubmitting a manifest joins the existing campaign;
-      fully-stored campaigns plan zero tasks. Default --addr is
+      fully-stored campaigns plan zero tasks. Campaign registrations
+      and lease transitions journal to DIR/journal.jsonl, so a
+      restarted daemon resumes in-flight campaigns and their workers
+      keep heartbeating. A fixed pool of --handlers threads (default 8)
+      serves connections; finished campaigns leave the registry after
+      --evict-secs (default 600, negative disables). --token-file
+      enables bearer-token auth: one `token [max_campaigns
+      [max_leases]]` per line, `#` comments. Default --addr is
       127.0.0.1:7070; see README \"Campaign as a service\" for the wire
       protocol.
   hplsim cache gc --dir DIR [--max-age AGE] [--manifest FILE] [--dry-run]
@@ -297,6 +313,12 @@ struct BackendCfg {
     server: Option<String>,
     remote_workers: usize,
     poll_ms: u64,
+    /// Evaluation path a remote campaign is submitted under
+    /// (`--remote-eval`); `None` = the local artifact state decides
+    /// (the same rule every other backend applies).
+    remote_eval: Option<&'static str>,
+    /// Bearer token for a coordinator running with `--token-file`.
+    token: Option<String>,
 }
 
 /// Resolve and validate `--backend` (shared by every campaign verb, and
@@ -356,22 +378,24 @@ impl BackendCfg {
             None => None,
         };
         let arts = load_artifacts(opts);
-        if name == "remote" {
-            if server.is_none() {
-                eprintln!("{cmd}: --backend remote requires --server URL\n{USAGE}");
-                return Err(2);
-            }
-            // The coordinator store keys entries by evaluation-path tag
-            // and remote workers run the pure-Rust path; a client asking
-            // for PJRT-tagged results would never find them.
-            if eval_tag_for(arts.as_deref()) != EVAL_DIRECT {
-                eprintln!(
-                    "{cmd}: --backend remote runs the pure-Rust evaluation path; \
-                     pass --no-artifacts (or unload the PJRT artifacts)"
-                );
-                return Err(2);
-            }
+        if name == "remote" && server.is_none() {
+            eprintln!("{cmd}: --backend remote requires --server URL\n{USAGE}");
+            return Err(2);
         }
+        // The submission tag a remote campaign carries. By default the
+        // local artifact state decides (exactly like every other
+        // backend); `--remote-eval` pins it — e.g. a client with no
+        // loadable runtime submitting `pjrt` work for workers that have
+        // one (only workers execute points on the remote backend).
+        let remote_eval = match opts.get("remote-eval").map(String::as_str) {
+            None => None,
+            Some(e) if e == EVAL_DIRECT => Some(EVAL_DIRECT),
+            Some(e) if e == EVAL_PJRT => Some(EVAL_PJRT),
+            Some(e) => {
+                eprintln!("{cmd}: --remote-eval must be direct or pjrt (got '{e}')");
+                return Err(2);
+            }
+        };
         Ok(BackendCfg {
             name,
             arts,
@@ -386,6 +410,8 @@ impl BackendCfg {
             server,
             remote_workers: num(opts, "remote-workers", 0usize),
             poll_ms: num(opts, "poll-ms", DEFAULT_POLL_MS),
+            remote_eval,
+            token: opts.get("token").cloned(),
         })
     }
 
@@ -425,6 +451,9 @@ impl BackendCfg {
                 let mut r = Remote::new(server, self.queue_tasks, self.remote_workers);
                 r.lease_secs = self.lease_secs;
                 r.poll_ms = self.poll_ms;
+                r.eval = self.remote_eval.unwrap_or_else(|| self.eval());
+                r.batch_points = self.batch_points;
+                r.token = self.token.clone();
                 campaign.run(&r)
             }
             _ => match &self.arts {
@@ -1225,6 +1254,7 @@ fn cmd_worker(opts: &HashMap<String, String>) -> i32 {
                 threads: num(opts, "threads", 0usize),
                 wait_secs: num(opts, "wait-secs", 30.0f64),
                 poll_ms: num(opts, "poll-ms", DEFAULT_POLL_MS),
+                token: opts.get("token").cloned(),
             };
             run_remote_worker(&server, &wopts)
         }
@@ -1263,9 +1293,30 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         eprintln!("serve: --lease-secs must be a positive number");
         return 2;
     }
+    let handlers = num(opts, "handlers", crate::coordinator::serve::daemon::DEFAULT_HANDLERS);
+    if handlers == 0 {
+        eprintln!("serve: --handlers must be at least 1");
+        return 2;
+    }
+    let evict_secs = num(
+        opts,
+        "evict-secs",
+        crate::coordinator::serve::daemon::DEFAULT_EVICT_SECS,
+    );
+    if evict_secs.is_nan() {
+        eprintln!("serve: --evict-secs must be a number (negative disables eviction)");
+        return 2;
+    }
+    let token_file = match path_opt(opts, "token-file", "serve") {
+        Ok(p) => p.map(PathBuf::from),
+        Err(code) => return code,
+    };
     let mut sopts = ServeOptions::new(addr, store);
     sopts.lease_secs = lease_secs;
     sopts.log = true;
+    sopts.handlers = handlers;
+    sopts.evict_secs = evict_secs;
+    sopts.token_file = token_file;
     match run_serve(sopts) {
         Ok(()) => 0,
         Err(e) => {

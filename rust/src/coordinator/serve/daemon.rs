@@ -1,25 +1,49 @@
 //! The `hplsim serve` coordinator daemon.
 //!
-//! One process owns a [`Store`] and an in-memory campaign registry.
-//! Clients POST whole campaign manifests (the ordinary v2 manifest
-//! JSON); the daemon plans tasks exactly like the file queue does
-//! (distinct uncached fingerprints, partitioned by `fp % tasks`) and
-//! hands them to any number of `hplsim worker --server URL` processes
-//! under the shared [`LeaseTable`] claim/heartbeat/expiry-reclaim
-//! protocol. Results travel as verbatim cache-entry bytes into the
-//! content-addressed store, so overlapping campaigns — from the same
-//! client or different ones — dedup for free: a second submission of an
-//! already-served manifest computes zero points.
+//! One process owns a [`Store`] and a campaign registry. Clients POST
+//! whole campaign manifests (the ordinary v2 manifest JSON); the daemon
+//! plans tasks exactly like the file queue does (distinct uncached
+//! fingerprints, partitioned by `fp % tasks`) and hands them to any
+//! number of `hplsim worker --server URL` processes under the shared
+//! [`LeaseTable`] claim/heartbeat/expiry-reclaim protocol. Results
+//! travel as verbatim cache-entry bytes into the content-addressed
+//! store, so overlapping campaigns — from the same client or different
+//! ones — dedup for free: a second submission of an already-served
+//! manifest computes zero points.
+//!
+//! The daemon is built for real multi-tenant traffic:
+//!
+//! * **Durable**: campaign registration and every lease transition
+//!   append to a journal in the store directory (see
+//!   [`super::journal`]); a restarted daemon replays it, so in-flight
+//!   workers keep heartbeating and completing against the same holder
+//!   tokens and the final report is byte-identical to an uninterrupted
+//!   run. Lease stamps are wall-clock [`SystemTime`]s under the shared
+//!   [`stamp_expired`](crate::coordinator::backend::lease::stamp_expired)
+//!   rule, so expiry semantics survive the restart too.
+//! * **Bounded**: a fixed pool of `--handlers` threads drains a bounded
+//!   connection queue; a connection flood degrades to queuing and then
+//!   structured 503s, never unbounded thread spawning.
+//! * **Both evaluation paths**: submissions tagged `direct` *or* `pjrt`
+//!   are accepted, and the tag rides plan → claim → result → fetch
+//!   end to end (the store already keys entries by `(fingerprint,
+//!   eval)`). Workers without a loadable PJRT runtime refuse `pjrt`
+//!   claims with a structured error, mirroring the file queue's
+//!   v2-format rule.
+//! * **Multi-tenant**: optional `--token-file` bearer-token auth with
+//!   per-token quotas on active campaigns and in-flight leases (401 /
+//!   429, structured), and a round-robin claim cursor so no campaign
+//!   can starve its neighbors.
 //!
 //! ### Wire protocol (all bodies JSON unless noted)
 //!
 //! | Endpoint | Meaning |
 //! |---|---|
-//! | `GET  /api/health` | liveness + campaign count |
-//! | `POST /api/campaigns` | submit `{manifest, tasks?, lease_secs?, eval?, skeleton?, wave?}` → plan (idempotent by content) |
+//! | `GET  /api/health` | liveness + campaign count (never requires auth) |
+//! | `POST /api/campaigns` | submit `{manifest, tasks?, lease_secs?, eval?, skeleton?, wave?, batch?}` → plan (idempotent by content; 409 on conflicting settings) |
 //! | `GET  /api/campaigns/<id>` | progress counters |
 //! | `GET  /api/campaigns/<id>/manifest` | the canonical manifest text |
-//! | `POST /api/claim` | claim one task (any campaign) or `{"idle":true}` |
+//! | `POST /api/claim` | claim one task (round-robin across campaigns) or `{"idle":true}` |
 //! | `POST /api/heartbeat` | `{campaign, task, holder}` keep a lease alive |
 //! | `POST /api/result/<fp>?eval=T` | store raw entry bytes (idempotent) |
 //! | `GET  /api/result/<fp>?eval=T` | fetch raw entry bytes |
@@ -29,14 +53,14 @@
 //! Malformed input of any kind yields a structured `{"error": ...}`
 //! with a 4xx status — the daemon never panics on peer input.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, SystemTime};
 
-use crate::coordinator::backend::cache::EVAL_DIRECT;
+use crate::coordinator::backend::cache::{EVAL_DIRECT, EVAL_PJRT};
 use crate::coordinator::backend::lease::{CompleteOutcome, LeaseTable};
 use crate::coordinator::backend::point::fnv1a_str;
 use crate::coordinator::backend::SimPoint;
@@ -44,14 +68,30 @@ use crate::coordinator::manifest::Manifest;
 use crate::stats::json::Json;
 
 use super::http::{read_request, write_response, Request, Response, MAX_BODY};
+use super::journal::Journal;
 use super::store::{valid_eval, Store};
+
+/// Default size of the connection-handler pool.
+pub const DEFAULT_HANDLERS: usize = 8;
+
+/// Default grace period (seconds) before a finished campaign is evicted
+/// from the registry. Results stay in the store forever — eviction is
+/// observationally safe (a resubmission replans to zero tasks) — the
+/// grace only keeps progress counters queryable briefly after the
+/// final completion.
+pub const DEFAULT_EVICT_SECS: f64 = 600.0;
+
+/// Per-token quota defaults when the token file doesn't override them.
+pub const DEFAULT_MAX_CAMPAIGNS: usize = 8;
+pub const DEFAULT_MAX_LEASES: usize = 64;
 
 /// Options of [`Server::start`] (the body of `hplsim serve`).
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
     /// Bind address (`host:port`; port 0 picks a free one — tests).
     pub addr: String,
-    /// Directory of the content-addressed result store.
+    /// Directory of the content-addressed result store (also holds the
+    /// state journal and the registered campaign manifests).
     pub store_dir: PathBuf,
     /// Default lease duration for campaigns that don't request one.
     pub lease_secs: f64,
@@ -60,6 +100,14 @@ pub struct ServeOptions {
     /// Log requests and lease events to stderr (the CLI daemon does;
     /// embedded test servers stay silent).
     pub log: bool,
+    /// Connection-handler pool size (`--handlers`).
+    pub handlers: usize,
+    /// Seconds after a campaign finishes before its registry entry is
+    /// evicted (`--evict-secs`; negative disables eviction).
+    pub evict_secs: f64,
+    /// Bearer-token auth: a file of `token [max_campaigns [max_leases]]`
+    /// lines (`--token-file`). `None` disables auth entirely.
+    pub token_file: Option<PathBuf>,
 }
 
 impl ServeOptions {
@@ -70,8 +118,54 @@ impl ServeOptions {
             lease_secs: 30.0,
             io_timeout_secs: 10.0,
             log: false,
+            handlers: DEFAULT_HANDLERS,
+            evict_secs: DEFAULT_EVICT_SECS,
+            token_file: None,
         }
     }
+}
+
+/// Per-token quota limits (the optional second and third columns of the
+/// token file).
+#[derive(Clone, Copy, Debug)]
+struct TokenLimits {
+    max_campaigns: usize,
+    max_leases: usize,
+}
+
+/// Parse a token file: one token per line, optionally followed by its
+/// active-campaign and in-flight-lease limits; `#` starts a comment.
+fn parse_token_file(text: &str) -> Result<HashMap<String, TokenLimits>, String> {
+    let mut out = HashMap::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut fields = line.split_whitespace();
+        let token = fields.next().expect("non-empty line").to_string();
+        let mut limit = |name: &str, default: usize| -> Result<usize, String> {
+            match fields.next() {
+                None => Ok(default),
+                Some(s) => s.parse::<usize>().map_err(|_| {
+                    format!("token file line {}: bad {name} {s:?}", i + 1)
+                }),
+            }
+        };
+        let max_campaigns = limit("max_campaigns", DEFAULT_MAX_CAMPAIGNS)?;
+        let max_leases = limit("max_leases", DEFAULT_MAX_LEASES)?;
+        if fields.next().is_some() {
+            return Err(format!(
+                "token file line {}: expected `token [max_campaigns [max_leases]]`",
+                i + 1
+            ));
+        }
+        out.insert(token, TokenLimits { max_campaigns, max_leases });
+    }
+    if out.is_empty() {
+        return Err("token file has no tokens — every request would be refused".into());
+    }
+    Ok(out)
 }
 
 /// One submitted campaign: the canonical manifest, the task partition
@@ -86,19 +180,39 @@ struct CampaignState {
     eval: String,
     skeleton: bool,
     wave: usize,
+    /// Points per batched runtime invocation for `pjrt` campaigns.
+    batch: usize,
+    /// Task count requested at submission (what the partition divided
+    /// by — the settings-conflict check compares against this, since
+    /// the live lease table only counts non-empty groups).
+    requested_tasks: usize,
     /// Per task: representative point indices, one per distinct
     /// fingerprint the task must compute.
     task_points: Vec<Vec<usize>>,
     leases: LeaseTable,
     /// Entries newly landed in the store on behalf of this campaign.
     computed: u64,
+    /// Submitting bearer token (campaign-quota accounting). `None`
+    /// when the daemon runs without auth.
+    owner: Option<String>,
+    /// Claiming token per leased task (lease-quota accounting).
+    lease_tokens: HashMap<usize, String>,
+    /// When the final task completed (starts the eviction grace).
+    done_at: Option<SystemTime>,
 }
 
 struct Inner {
     store: Store,
     campaigns: BTreeMap<String, CampaignState>,
     default_lease: f64,
+    evict_secs: f64,
     log: bool,
+    journal: Journal,
+    /// Round-robin cursor: where the next claim scan starts, so one
+    /// campaign cannot starve the others (head-of-line fairness).
+    rr: usize,
+    /// Bearer-token table; `None` = auth disabled.
+    auth: Option<HashMap<String, TokenLimits>>,
 }
 
 impl Inner {
@@ -109,13 +223,301 @@ impl Inner {
     }
 }
 
+/// Where a registered campaign's canonical manifest persists (the
+/// journal records everything *about* the campaign except its manifest
+/// text, which can be megabytes and deserves its own file).
+fn manifest_path(store_dir: &Path, id: &str) -> PathBuf {
+    store_dir.join("campaigns").join(format!("{id}.manifest.json"))
+}
+
+// ---- journal records -------------------------------------------------
+
+fn rec_campaign(id: &str, c: &CampaignState) -> Json {
+    let tasks = c
+        .task_points
+        .iter()
+        .map(|pts| Json::Arr(pts.iter().map(|&i| Json::Num(i as f64)).collect()))
+        .collect();
+    let mut pairs = vec![
+        ("t", Json::Str("campaign".into())),
+        ("id", Json::Str(id.to_string())),
+        ("eval", Json::Str(c.eval.clone())),
+        ("skeleton", Json::Bool(c.skeleton)),
+        ("wave", Json::Num(c.wave as f64)),
+        ("batch", Json::Num(c.batch as f64)),
+        ("tasks", Json::Num(c.requested_tasks as f64)),
+        ("lease_secs", Json::Num(c.leases.lease_secs())),
+        ("task_points", Json::Arr(tasks)),
+        ("reclaimed", Json::u64_str(c.leases.reclaimed())),
+        ("computed", Json::u64_str(c.computed)),
+    ];
+    if let Some(owner) = &c.owner {
+        pairs.push(("owner", Json::Str(owner.clone())));
+    }
+    Json::obj(pairs)
+}
+
+fn rec_lease(t: &str, id: &str, task: usize, holder: u64, token: Option<&str>) -> Json {
+    let mut pairs = vec![
+        ("t", Json::Str(t.into())),
+        ("id", Json::Str(id.to_string())),
+        ("task", Json::Num(task as f64)),
+        ("holder", Json::u64_str(holder)),
+    ];
+    if let Some(tok) = token {
+        pairs.push(("token", Json::Str(tok.to_string())));
+    }
+    Json::obj(pairs)
+}
+
+fn rec_task(t: &str, id: &str, task: usize) -> Json {
+    Json::obj(vec![
+        ("t", Json::Str(t.into())),
+        ("id", Json::Str(id.to_string())),
+        ("task", Json::Num(task as f64)),
+    ])
+}
+
+fn rec_evict(id: &str) -> Json {
+    Json::obj(vec![("t", Json::Str("evict".into())), ("id", Json::Str(id.to_string()))])
+}
+
+/// Rebuild the campaign registry from journal records (a restarting
+/// daemon). Lease stamps restore to `now`: a surviving holder
+/// re-heartbeats within one interval, a dead one expires one lease
+/// later — the same outcome as an uninterrupted run.
+fn replay_journal(
+    records: &[Json],
+    store_dir: &Path,
+    now: SystemTime,
+    log: bool,
+) -> BTreeMap<String, CampaignState> {
+    let mut campaigns: BTreeMap<String, CampaignState> = BTreeMap::new();
+    let warn = |text: String| {
+        if log {
+            eprintln!("serve: journal replay: {text}");
+        }
+    };
+    for rec in records {
+        let kind = rec.get("t").and_then(Json::as_str).unwrap_or("");
+        let Some(id) = rec.get("id").and_then(Json::as_str).map(String::from) else {
+            continue;
+        };
+        match kind {
+            "campaign" => {
+                let path = manifest_path(store_dir, &id);
+                let manifest = std::fs::read_to_string(&path)
+                    .ok()
+                    .and_then(|t| Json::parse(&t).ok())
+                    .and_then(|v| Manifest::from_json(&v).ok());
+                let Some(manifest) = manifest else {
+                    warn(format!(
+                        "campaign {id}: manifest {} missing or invalid — dropped",
+                        path.display()
+                    ));
+                    continue;
+                };
+                let task_points: Vec<Vec<usize>> = rec
+                    .get("task_points")
+                    .and_then(Json::as_arr)
+                    .map(|tasks| {
+                        tasks
+                            .iter()
+                            .map(|t| {
+                                t.as_arr()
+                                    .map(|pts| {
+                                        pts.iter().filter_map(Json::as_usize).collect()
+                                    })
+                                    .unwrap_or_default()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                let npoints = manifest.points.len();
+                if task_points.iter().flatten().any(|&i| i >= npoints) {
+                    warn(format!("campaign {id}: task partition out of range — dropped"));
+                    continue;
+                }
+                let fps: Vec<u64> =
+                    manifest.points.iter().map(SimPoint::fingerprint).collect();
+                let lease_secs = rec
+                    .get("lease_secs")
+                    .and_then(Json::as_f64)
+                    .filter(|s| *s > 0.0 && s.is_finite())
+                    .unwrap_or(30.0);
+                let mut leases = LeaseTable::new(task_points.len(), lease_secs);
+                leases.restore_reclaimed(
+                    rec.get("reclaimed").and_then(Json::as_u64).unwrap_or(0),
+                );
+                campaigns.insert(
+                    id,
+                    CampaignState {
+                        manifest_text: manifest.to_json().to_string(),
+                        fps,
+                        eval: rec
+                            .get("eval")
+                            .and_then(Json::as_str)
+                            .unwrap_or(EVAL_DIRECT)
+                            .to_string(),
+                        skeleton: rec
+                            .get("skeleton")
+                            .and_then(Json::as_bool)
+                            .unwrap_or(true),
+                        wave: rec.get("wave").and_then(Json::as_usize).unwrap_or(0),
+                        batch: rec.get("batch").and_then(Json::as_usize).unwrap_or(0),
+                        requested_tasks: rec
+                            .get("tasks")
+                            .and_then(Json::as_usize)
+                            .unwrap_or(task_points.len()),
+                        task_points,
+                        leases,
+                        computed: rec
+                            .get("computed")
+                            .and_then(Json::as_u64)
+                            .unwrap_or(0),
+                        owner: rec
+                            .get("owner")
+                            .and_then(Json::as_str)
+                            .map(String::from),
+                        lease_tokens: HashMap::new(),
+                        done_at: None,
+                    },
+                );
+            }
+            "evict" => {
+                campaigns.remove(&id);
+            }
+            _ => {
+                let Some(c) = campaigns.get_mut(&id) else { continue };
+                let Some(task) = rec.get("task").and_then(Json::as_usize) else {
+                    continue;
+                };
+                match kind {
+                    "claim" => {
+                        let holder =
+                            rec.get("holder").and_then(Json::as_u64).unwrap_or(0);
+                        c.leases.restore_lease(task, holder, now);
+                        match rec.get("token").and_then(Json::as_str) {
+                            Some(tok) => {
+                                c.lease_tokens.insert(task, tok.to_string());
+                            }
+                            None => {
+                                c.lease_tokens.remove(&task);
+                            }
+                        }
+                    }
+                    "complete" => {
+                        c.leases.restore_done(task);
+                        c.lease_tokens.remove(&task);
+                    }
+                    "fail" | "reclaim" => {
+                        c.leases.restore_todo(task);
+                        if kind == "reclaim" {
+                            c.leases.restore_reclaimed(c.leases.reclaimed() + 1);
+                        }
+                        c.lease_tokens.remove(&task);
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    // Campaigns that finished before the restart begin their eviction
+    // grace now.
+    for c in campaigns.values_mut() {
+        if c.leases.all_done() {
+            c.done_at = Some(now);
+        }
+    }
+    campaigns
+}
+
+/// The registry as a compact record list (startup compaction: one
+/// campaign record plus one record per completed task and live lease).
+fn snapshot_records(campaigns: &BTreeMap<String, CampaignState>) -> Vec<Json> {
+    let mut out = Vec::new();
+    for (id, c) in campaigns {
+        out.push(rec_campaign(id, c));
+        for task in 0..c.leases.total() {
+            if c.leases.task_done(task) {
+                out.push(rec_task("complete", id, task));
+            } else if let Some(holder) = c.leases.lease_holder(task) {
+                out.push(rec_lease(
+                    "claim",
+                    id,
+                    task,
+                    holder,
+                    c.lease_tokens.get(&task).map(String::as_str),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---- the bounded connection queue ------------------------------------
+
+/// Accepted-but-unhandled connections, bounded: the accept loop pushes,
+/// the handler pool pops, and a push over capacity fails so the accept
+/// loop can answer 503 instead of buffering without limit.
+struct ConnQueue {
+    q: Mutex<(VecDeque<TcpStream>, bool)>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl ConnQueue {
+    fn new(cap: usize) -> ConnQueue {
+        ConnQueue { q: Mutex::new((VecDeque::new(), false)), cv: Condvar::new(), cap }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, (VecDeque<TcpStream>, bool)> {
+        self.q.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Enqueue a connection; gives it back when the queue is full or
+    /// closed (the caller answers 503 / drops it).
+    fn push(&self, stream: TcpStream) -> Result<(), TcpStream> {
+        let mut g = self.lock();
+        if g.1 || g.0.len() >= self.cap {
+            return Err(stream);
+        }
+        g.0.push_back(stream);
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue the next connection, blocking; `None` once the queue is
+    /// closed and drained (handler shutdown).
+    fn pop(&self) -> Option<TcpStream> {
+        let mut g = self.lock();
+        loop {
+            if let Some(s) = g.0.pop_front() {
+                return Some(s);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn close(&self) {
+        self.lock().1 = true;
+        self.cv.notify_all();
+    }
+}
+
 /// A running coordinator. Binding happens in [`Server::start`] (so the
 /// chosen port is known before any client runs); the accept loop and
-/// every connection run on background threads.
+/// the handler pool run on background threads.
 pub struct Server {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept: Option<std::thread::JoinHandle<()>>,
+    handlers: Vec<std::thread::JoinHandle<()>>,
+    queue: Arc<ConnQueue>,
     state: Arc<Mutex<Inner>>,
 }
 
@@ -128,42 +530,100 @@ fn lock(state: &Mutex<Inner>) -> MutexGuard<'_, Inner> {
 impl Server {
     pub fn start(opts: ServeOptions) -> Result<Server, String> {
         let store = Store::open(&opts.store_dir)?;
+        let campaign_dir = store.dir().join("campaigns");
+        std::fs::create_dir_all(&campaign_dir).map_err(|e| {
+            format!("cannot create campaign directory {}: {e}", campaign_dir.display())
+        })?;
+        let auth = match &opts.token_file {
+            Some(path) => {
+                let text = std::fs::read_to_string(path).map_err(|e| {
+                    format!("cannot read token file {}: {e}", path.display())
+                })?;
+                Some(parse_token_file(&text)?)
+            }
+            None => None,
+        };
         let listener = TcpListener::bind(&opts.addr)
             .map_err(|e| format!("cannot bind {}: {e}", opts.addr))?;
         let addr = listener
             .local_addr()
             .map_err(|e| format!("cannot resolve bound address: {e}"))?;
+
+        // Rebuild from the journal, then compact it: replayed history
+        // collapses to one record per surviving fact, so the journal
+        // stays proportional to live state across restarts.
+        let now = SystemTime::now();
+        let records = Journal::read(store.dir());
+        let campaigns = replay_journal(&records, store.dir(), now, opts.log);
+        let mut journal = Journal::open(store.dir());
+        journal.rewrite(&snapshot_records(&campaigns));
+        if opts.log && !campaigns.is_empty() {
+            let live: usize =
+                campaigns.values().filter(|c| !c.leases.all_done()).count();
+            eprintln!(
+                "serve: restored {} campaign(s) from the journal ({live} still \
+                 in flight)",
+                campaigns.len()
+            );
+        }
+
         let state = Arc::new(Mutex::new(Inner {
             store,
-            campaigns: BTreeMap::new(),
+            campaigns,
             default_lease: if opts.lease_secs > 0.0 && opts.lease_secs.is_finite() {
                 opts.lease_secs
             } else {
                 30.0
             },
+            evict_secs: opts.evict_secs,
             log: opts.log,
+            journal,
+            rr: 0,
+            auth,
         }));
         let stop = Arc::new(AtomicBool::new(false));
         let timeout = Duration::from_secs_f64(opts.io_timeout_secs.clamp(0.05, 600.0));
+        let nhandlers = opts.handlers.clamp(1, 256);
+        // Capacity 4× the pool: enough slack to absorb a burst, small
+        // enough that a flood sees 503s within milliseconds.
+        let queue = Arc::new(ConnQueue::new(nhandlers * 4));
         let accept = {
-            let state = state.clone();
             let stop = stop.clone();
+            let queue = queue.clone();
             std::thread::spawn(move || {
                 for conn in listener.incoming() {
                     if stop.load(Ordering::Relaxed) {
                         break;
                     }
                     let Ok(mut stream) = conn else { continue };
-                    let state = state.clone();
-                    std::thread::spawn(move || {
-                        let _ = stream.set_read_timeout(Some(timeout));
-                        let _ = stream.set_write_timeout(Some(timeout));
-                        serve_connection(&state, &mut stream);
-                    });
+                    let _ = stream.set_read_timeout(Some(timeout));
+                    let _ = stream.set_write_timeout(Some(timeout));
+                    if let Err(mut stream) = queue.push(stream) {
+                        // Full house: shed load with a structured 503
+                        // instead of spawning a thread per connection.
+                        let _ = write_response(
+                            &mut stream,
+                            &Response::error(
+                                503,
+                                "connection queue full — retry shortly",
+                            ),
+                        );
+                    }
                 }
             })
         };
-        Ok(Server { addr, stop, accept: Some(accept), state })
+        let handlers = (0..nhandlers)
+            .map(|_| {
+                let state = state.clone();
+                let queue = queue.clone();
+                std::thread::spawn(move || {
+                    while let Some(mut stream) = queue.pop() {
+                        serve_connection(&state, &mut stream);
+                    }
+                })
+            })
+            .collect();
+        Ok(Server { addr, stop, accept: Some(accept), handlers, queue, state })
     }
 
     /// The bound address (resolves port 0 binds).
@@ -171,13 +631,17 @@ impl Server {
         self.addr
     }
 
-    /// Stop accepting and join the accept loop. In-flight connection
-    /// handlers finish on their own (they hold only the state Arc).
+    /// Stop accepting, drain the connection queue, and join the accept
+    /// loop plus every pool handler.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // Poke the blocking accept so it observes the stop flag.
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.queue.close();
+        for h in self.handlers.drain(..) {
             let _ = h.join();
         }
     }
@@ -197,7 +661,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        if self.accept.is_some() {
+        if self.accept.is_some() || !self.handlers.is_empty() {
             self.shutdown();
         }
     }
@@ -215,6 +679,25 @@ fn serve_connection(state: &Mutex<Inner>, stream: &mut TcpStream) {
 
 fn handle(state: &Mutex<Inner>, req: &Request) -> Response {
     let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    let token = req.token.as_deref();
+    // Health stays unauthenticated (liveness probes carry no secrets
+    // and leak none); everything else requires a known token once a
+    // token file is configured.
+    if !matches!((req.method.as_str(), segs.as_slice()), ("GET", ["api", "health"])) {
+        let inner = lock(state);
+        if let Some(table) = &inner.auth {
+            match token {
+                Some(t) if table.contains_key(t) => {}
+                Some(_) => return Response::error(401, "unknown bearer token"),
+                None => {
+                    return Response::error(
+                        401,
+                        "authorization required (Authorization: Bearer <token>)",
+                    )
+                }
+            }
+        }
+    }
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["api", "health"]) => {
             let inner = lock(state);
@@ -223,7 +706,7 @@ fn handle(state: &Mutex<Inner>, req: &Request) -> Response {
                 ("campaigns", Json::Num(inner.campaigns.len() as f64)),
             ]))
         }
-        ("POST", ["api", "campaigns"]) => submit(state, &req.body),
+        ("POST", ["api", "campaigns"]) => submit(state, &req.body, token),
         ("GET", ["api", "campaigns", id]) => {
             let inner = lock(state);
             match inner.campaigns.get(*id) {
@@ -242,7 +725,7 @@ fn handle(state: &Mutex<Inner>, req: &Request) -> Response {
                 None => Response::error(404, format!("unknown campaign {id}")),
             }
         }
-        ("POST", ["api", "claim"]) => claim(state),
+        ("POST", ["api", "claim"]) => claim(state, token),
         ("POST", ["api", "heartbeat"]) => lease_verb(state, &req.body, LeaseVerb::Heartbeat),
         ("POST", ["api", "complete"]) => lease_verb(state, &req.body, LeaseVerb::Complete),
         ("POST", ["api", "fail"]) => lease_verb(state, &req.body, LeaseVerb::Fail),
@@ -256,11 +739,26 @@ fn status_json(id: &str, c: &CampaignState) -> Json {
     Json::obj(vec![
         ("id", Json::Str(id.to_string())),
         ("points", Json::Num(c.fps.len() as f64)),
+        ("eval", Json::Str(c.eval.clone())),
         ("tasks", Json::Num(c.leases.total() as f64)),
         ("tasks_done", Json::Num(c.leases.done() as f64)),
         ("computed", Json::Num(c.computed as f64)),
         ("reclaimed", Json::Num(c.leases.reclaimed() as f64)),
         ("done", Json::Bool(c.leases.all_done())),
+    ])
+}
+
+/// The campaign's registered throughput knobs, echoed in every submit
+/// response so a joining client can *see* the settings that stand (the
+/// first submission's) instead of silently assuming its own.
+fn settings_json(c: &CampaignState) -> Json {
+    Json::obj(vec![
+        ("eval", Json::Str(c.eval.clone())),
+        ("tasks", Json::Num(c.requested_tasks as f64)),
+        ("lease_secs", Json::Num(c.leases.lease_secs())),
+        ("skeleton", Json::Bool(c.skeleton)),
+        ("wave", Json::Num(c.wave as f64)),
+        ("batch", Json::Num(c.batch as f64)),
     ])
 }
 
@@ -272,7 +770,35 @@ fn campaign_id(eval: &str, canonical_manifest: &str) -> String {
     format!("{:016x}", fnv1a_str(&format!("{eval}\n{canonical_manifest}")))
 }
 
-fn submit(state: &Mutex<Inner>, body: &[u8]) -> Response {
+/// Evict finished campaigns whose grace period has lapsed. Results live
+/// in the store, so eviction is observationally safe: a resubmission
+/// finds every fingerprint already stored and replans to zero tasks.
+fn evict_finished(inner: &mut Inner, now: SystemTime) {
+    if inner.evict_secs < 0.0 {
+        return;
+    }
+    let grace = inner.evict_secs;
+    let expired: Vec<String> = inner
+        .campaigns
+        .iter()
+        .filter(|(_, c)| {
+            c.done_at.is_some_and(|t| {
+                now.duration_since(t)
+                    .map(|d| d.as_secs_f64() >= grace)
+                    .unwrap_or(false)
+            })
+        })
+        .map(|(id, _)| id.clone())
+        .collect();
+    for id in expired {
+        inner.campaigns.remove(&id);
+        inner.journal.append(&rec_evict(&id));
+        let _ = std::fs::remove_file(manifest_path(inner.store.dir(), &id));
+        inner.log(&format!("campaign {id} evicted (finished, grace lapsed)"));
+    }
+}
+
+fn submit(state: &Mutex<Inner>, body: &[u8], token: Option<&str>) -> Response {
     let Ok(text) = std::str::from_utf8(body) else {
         return Response::error(400, "submission body is not UTF-8");
     };
@@ -291,12 +817,15 @@ fn submit(state: &Mutex<Inner>, body: &[u8]) -> Response {
         return Response::error(400, "manifest has no points");
     }
     let eval = v.get("eval").and_then(Json::as_str).unwrap_or(EVAL_DIRECT);
-    if eval != EVAL_DIRECT {
-        // Remote workers execute the pure-Rust path; accepting another
-        // tag here would promise results the fleet cannot produce.
+    if eval != EVAL_DIRECT && eval != EVAL_PJRT {
+        // The store keys by (fingerprint, eval); accepting an arbitrary
+        // tag would promise results no worker knows how to produce.
         return Response::error(
             400,
-            format!("remote campaigns run eval path \"{EVAL_DIRECT}\" only, not \"{eval}\""),
+            format!(
+                "unknown eval path \"{eval}\" (campaigns run \"{EVAL_DIRECT}\" or \
+                 \"{EVAL_PJRT}\")"
+            ),
         );
     }
     let tasks = v
@@ -306,8 +835,13 @@ fn submit(state: &Mutex<Inner>, body: &[u8]) -> Response {
         .unwrap_or(8);
     let skeleton = v.get("skeleton").and_then(Json::as_bool).unwrap_or(true);
     let wave = v.get("wave").and_then(Json::as_usize).unwrap_or(0);
+    let batch = v
+        .get("batch")
+        .and_then(Json::as_usize)
+        .unwrap_or(crate::runtime::DEFAULT_BATCH_POINTS);
 
     let mut inner = lock(state);
+    evict_finished(&mut inner, SystemTime::now());
     let canonical = manifest.to_json().to_string();
     let id = campaign_id(eval, &canonical);
     let lease_secs = v
@@ -330,14 +864,84 @@ fn submit(state: &Mutex<Inner>, body: &[u8]) -> Response {
     let hits = first.iter().filter(|(fp, _)| inner.store.has(*fp, eval)).count();
 
     if let Some(c) = inner.campaigns.get(&id) {
-        // Idempotent resubmission: same content → same campaign. The
-        // first submission's task partition and throughput knobs stand.
-        let resp = with_hits(status_json(&id, c), distinct, hits);
+        // Idempotent resubmission: same content → same campaign, under
+        // the *first* submission's settings. A caller explicitly asking
+        // for different settings would otherwise silently get the old
+        // ones — reject the conflict instead.
+        let mut conflicts: Vec<String> = Vec::new();
+        if let Some(t) = v.get("tasks").and_then(Json::as_usize).filter(|&t| t > 0) {
+            if t != c.requested_tasks {
+                conflicts.push(format!("tasks {t} != {}", c.requested_tasks));
+            }
+        }
+        if let Some(l) = v
+            .get("lease_secs")
+            .and_then(Json::as_f64)
+            .filter(|s| *s > 0.0 && s.is_finite())
+        {
+            if l != c.leases.lease_secs() {
+                conflicts.push(format!("lease_secs {l} != {}", c.leases.lease_secs()));
+            }
+        }
+        if let Some(s) = v.get("skeleton").and_then(Json::as_bool) {
+            if s != c.skeleton {
+                conflicts.push(format!("skeleton {s} != {}", c.skeleton));
+            }
+        }
+        if let Some(w) = v.get("wave").and_then(Json::as_usize) {
+            if w != c.wave {
+                conflicts.push(format!("wave {w} != {}", c.wave));
+            }
+        }
+        if let Some(b) = v.get("batch").and_then(Json::as_usize) {
+            if b != c.batch {
+                conflicts.push(format!("batch {b} != {}", c.batch));
+            }
+        }
+        if !conflicts.is_empty() {
+            return Response::json(
+                409,
+                &Json::obj(vec![
+                    (
+                        "error",
+                        Json::Str(format!(
+                            "campaign {id} is already registered with different \
+                             settings: {}",
+                            conflicts.join(", ")
+                        )),
+                    ),
+                    ("id", Json::Str(id.clone())),
+                    ("settings", settings_json(c)),
+                ]),
+            );
+        }
+        let resp = with_settings(with_hits(status_json(&id, c), distinct, hits), c);
         inner.log(&format!(
             "campaign {id} resubmitted ({} points, {hits}/{distinct} in store)",
             fps.len()
         ));
         return Response::ok_json(&resp);
+    }
+
+    // Per-token campaign quota: a token may only have so many unfinished
+    // campaigns registered at once (joins above don't count — they add
+    // no state).
+    if let (Some(table), Some(tok)) = (&inner.auth, token) {
+        let limit = table[tok].max_campaigns;
+        let active = inner
+            .campaigns
+            .values()
+            .filter(|c| c.owner.as_deref() == Some(tok) && !c.leases.all_done())
+            .count();
+        if active >= limit {
+            return Response::error(
+                429,
+                format!(
+                    "token has {active} active campaign(s) (limit {limit}) — wait \
+                     for one to finish"
+                ),
+            );
+        }
     }
 
     // Task partition over the *misses*, by `fp % tasks` — the same
@@ -350,23 +954,42 @@ fn submit(state: &Mutex<Inner>, body: &[u8]) -> Response {
         }
     }
     groups.retain(|g| !g.is_empty());
+    let born_done = groups.is_empty();
     let c = CampaignState {
         manifest_text: canonical,
         fps,
         eval: eval.to_string(),
         skeleton,
         wave,
+        batch,
+        requested_tasks: tasks,
         leases: LeaseTable::new(groups.len(), lease_secs),
         task_points: groups,
         computed: 0,
+        owner: token.map(String::from),
+        lease_tokens: HashMap::new(),
+        done_at: born_done.then(SystemTime::now),
     };
+    // Durability order: manifest file, then journal record, then the
+    // response — an acknowledged registration always survives a
+    // restart (and a torn write before acknowledgement never matters,
+    // because the client retries the idempotent submission).
+    let mpath = manifest_path(inner.store.dir(), &id);
+    if let Err(e) = std::fs::write(&mpath, c.manifest_text.as_bytes()) {
+        return Response::error(
+            500,
+            format!("cannot persist campaign manifest {}: {e}", mpath.display()),
+        );
+    }
+    let rec = rec_campaign(&id, &c);
+    inner.journal.append(&rec);
     inner.log(&format!(
         "campaign {id} submitted: {} points, {distinct} distinct, {hits} in store, \
          {} task(s)",
         c.fps.len(),
         c.leases.total()
     ));
-    let resp = with_hits(status_json(&id, &c), distinct, hits);
+    let resp = with_settings(with_hits(status_json(&id, &c), distinct, hits), &c);
     inner.campaigns.insert(id, c);
     Response::ok_json(&resp)
 }
@@ -382,27 +1005,71 @@ fn with_hits(status: Json, distinct: usize, hits: usize) -> Json {
     Json::Obj(m)
 }
 
-fn claim(state: &Mutex<Inner>) -> Response {
-    let now = Instant::now();
+/// Extend a status object with the campaign's effective settings.
+fn with_settings(status: Json, c: &CampaignState) -> Json {
+    let mut m = match status {
+        Json::Obj(m) => m,
+        _ => unreachable!("status_json returns an object"),
+    };
+    m.insert("settings".into(), settings_json(c));
+    Json::Obj(m)
+}
+
+fn claim(state: &Mutex<Inner>, token: Option<&str>) -> Response {
+    let now = SystemTime::now();
     let mut inner = lock(state);
-    let mut reclaim_log: Vec<String> = Vec::new();
+    evict_finished(&mut inner, now);
+    let mut reclaims: Vec<(String, usize)> = Vec::new();
     for (id, c) in inner.campaigns.iter_mut() {
         for t in c.leases.reclaim_expired(now) {
-            reclaim_log.push(format!("campaign {id}: lease of task {t} expired — requeued"));
+            c.lease_tokens.remove(&t);
+            reclaims.push((id.clone(), t));
         }
     }
-    for line in &reclaim_log {
-        inner.log(line);
+    for (id, t) in reclaims {
+        inner.journal.append(&rec_task("reclaim", &id, t));
+        inner.log(&format!("campaign {id}: lease of task {t} expired — requeued"));
     }
-    // BTreeMap order: deterministic round across campaigns.
+    // Per-token lease quota: in-flight leases across every campaign.
+    if let (Some(table), Some(tok)) = (&inner.auth, token) {
+        let limit = table[tok].max_leases;
+        let held: usize = inner
+            .campaigns
+            .values()
+            .map(|c| c.lease_tokens.values().filter(|t| t.as_str() == tok).count())
+            .sum();
+        if held >= limit {
+            return Response::error(
+                429,
+                format!(
+                    "token holds {held} in-flight lease(s) (limit {limit}) — \
+                     complete or fail one first"
+                ),
+            );
+        }
+    }
+    // Round-robin across campaigns: the scan starts one past where the
+    // previous claim landed, so the lexicographically-first campaign
+    // cannot starve the rest (head-of-line fairness between tenants).
+    let ids: Vec<String> = inner.campaigns.keys().cloned().collect();
     let mut claimed: Option<(String, usize, u64)> = None;
-    for (id, c) in inner.campaigns.iter_mut() {
-        if let Some((task, holder)) = c.leases.claim(now) {
-            claimed = Some((id.clone(), task, holder));
-            break;
+    if !ids.is_empty() {
+        let start = inner.rr % ids.len();
+        for off in 0..ids.len() {
+            let idx = (start + off) % ids.len();
+            let c = inner.campaigns.get_mut(&ids[idx]).expect("keys just listed");
+            if let Some((task, holder)) = c.leases.claim(now) {
+                if let Some(tok) = token {
+                    c.lease_tokens.insert(task, tok.to_string());
+                }
+                claimed = Some((ids[idx].clone(), task, holder));
+                inner.rr = idx + 1;
+                break;
+            }
         }
     }
     if let Some((id, task, holder)) = claimed {
+        inner.journal.append(&rec_lease("claim", &id, task, holder, token));
         let c = &inner.campaigns[&id];
         let resp = Json::obj(vec![
             ("campaign", Json::Str(id.clone())),
@@ -413,6 +1080,7 @@ fn claim(state: &Mutex<Inner>) -> Response {
             ("eval", Json::Str(c.eval.clone())),
             ("skeleton", Json::Bool(c.skeleton)),
             ("wave", Json::Num(c.wave as f64)),
+            ("batch", Json::Num(c.batch as f64)),
             (
                 "points",
                 Json::Arr(c.task_points[task].iter().map(|&i| Json::Num(i as f64)).collect()),
@@ -462,7 +1130,7 @@ fn lease_verb(state: &Mutex<Inner>, body: &[u8], verb: LeaseVerb) -> Response {
             let ok = inner
                 .campaigns
                 .get_mut(&id)
-                .map(|c| c.leases.heartbeat(task, holder, Instant::now()))
+                .map(|c| c.leases.heartbeat(task, holder, SystemTime::now()))
                 .unwrap_or(false);
             if ok {
                 Response::ok_json(&Json::obj(vec![("ok", Json::Bool(true))]))
@@ -496,12 +1164,20 @@ fn lease_verb(state: &Mutex<Inner>, body: &[u8], verb: LeaseVerb) -> Response {
                 }
                 outcome => {
                     let already = outcome == CompleteOutcome::AlreadyDone;
+                    c.lease_tokens.remove(&task);
+                    let all_done = c.leases.all_done();
+                    if all_done && c.done_at.is_none() {
+                        c.done_at = Some(SystemTime::now());
+                    }
                     let resp = Json::obj(vec![
                         ("ok", Json::Bool(true)),
                         ("already", Json::Bool(already)),
                         ("tasks_done", Json::Num(c.leases.done() as f64)),
-                        ("done", Json::Bool(c.leases.all_done())),
+                        ("done", Json::Bool(all_done)),
                     ]);
+                    if !already {
+                        inner.journal.append(&rec_task("complete", &id, task));
+                    }
                     inner.log(&format!("campaign {id}: task {task} complete"));
                     Response::ok_json(&resp)
                 }
@@ -515,6 +1191,10 @@ fn lease_verb(state: &Mutex<Inner>, body: &[u8], verb: LeaseVerb) -> Response {
                 .to_string();
             let c = inner.campaigns.get_mut(&id).expect("checked above");
             let requeued = c.leases.fail(task, holder);
+            if requeued {
+                c.lease_tokens.remove(&task);
+                inner.journal.append(&rec_task("fail", &id, task));
+            }
             inner.log(&format!(
                 "campaign {id}: task {task} failed on its worker ({why}) — requeued: \
                  {requeued}"
@@ -583,14 +1263,155 @@ fn get_result(
     }
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{DgemmModel, NodeCoef};
+    use crate::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
+    use crate::network::{NetModel, Topology};
+
+    #[test]
+    fn token_file_parses_limits_and_rejects_garbage() {
+        let table = parse_token_file(
+            "# comment\nalpha\nbeta 2\ngamma 3 9 # trailing comment\n",
+        )
+        .unwrap();
+        assert_eq!(table.len(), 3);
+        assert_eq!(table["alpha"].max_campaigns, DEFAULT_MAX_CAMPAIGNS);
+        assert_eq!(table["alpha"].max_leases, DEFAULT_MAX_LEASES);
+        assert_eq!(table["beta"].max_campaigns, 2);
+        assert_eq!(table["gamma"].max_campaigns, 3);
+        assert_eq!(table["gamma"].max_leases, 9);
+        assert!(parse_token_file("tok notanumber").is_err());
+        assert!(parse_token_file("tok 1 2 3").is_err());
+        assert!(parse_token_file("# only comments\n").is_err());
+    }
+
+    fn test_manifest() -> Manifest {
+        let points = (0..4u64)
+            .map(|seed| {
+                SimPoint::explicit(
+                    format!("p{seed}"),
+                    HplConfig {
+                        n: 128,
+                        nb: 32,
+                        p: 2,
+                        q: 2,
+                        depth: 0,
+                        bcast: Bcast::Ring,
+                        swap: SwapAlg::BinExch,
+                        swap_threshold: 64,
+                        rfact: Rfact::Crout,
+                        nbmin: 8,
+                    },
+                    Topology::star(4, 12.5e9, 40e9),
+                    NetModel::ideal(),
+                    DgemmModel::homogeneous(NodeCoef {
+                        mu: [1e-11, 0.0, 0.0, 0.0, 5e-7],
+                        sigma: [0.0; 5],
+                    }),
+                    1,
+                    seed,
+                )
+            })
+            .collect();
+        Manifest::new(points)
+    }
+
+    #[test]
+    fn journal_roundtrip_restores_leases_and_survives_compaction() {
+        let dir = std::env::temp_dir()
+            .join(format!("hplsim-daemon-replay-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("campaigns")).unwrap();
+
+        let manifest = test_manifest();
+        let canonical = manifest.to_json().to_string();
+        let id = campaign_id(EVAL_PJRT, &canonical);
+        std::fs::write(manifest_path(&dir, &id), canonical.as_bytes()).unwrap();
+
+        let fps: Vec<u64> = manifest.points.iter().map(SimPoint::fingerprint).collect();
+        let mut c = CampaignState {
+            manifest_text: canonical,
+            fps,
+            eval: EVAL_PJRT.to_string(),
+            skeleton: false,
+            wave: 2,
+            batch: 16,
+            requested_tasks: 3,
+            task_points: vec![vec![0, 1], vec![2], vec![3]],
+            leases: LeaseTable::new(3, 7.5),
+            computed: 1,
+            owner: Some("alpha".into()),
+            lease_tokens: HashMap::new(),
+            done_at: None,
+        };
+        let now = SystemTime::now();
+        let (t0, h0) = c.leases.claim(now).unwrap();
+        c.lease_tokens.insert(t0, "alpha".into());
+        assert_eq!(c.leases.complete(t0, h0), CompleteOutcome::Completed);
+        c.lease_tokens.remove(&t0);
+        let (t1, h1) = c.leases.claim(now).unwrap();
+        c.lease_tokens.insert(t1, "beta".into());
+
+        // What the daemon would have journaled, in order.
+        let mut records = vec![rec_campaign(&id, &c)];
+        records.push(rec_lease("claim", &id, t0, h0, Some("alpha")));
+        records.push(rec_task("complete", &id, t0));
+        records.push(rec_lease("claim", &id, t1, h1, Some("beta")));
+
+        let restored = replay_journal(&records, &dir, now, false);
+        let r = &restored[&id];
+        assert_eq!(r.eval, EVAL_PJRT);
+        assert!(!r.skeleton);
+        assert_eq!((r.wave, r.batch, r.requested_tasks), (2, 16, 3));
+        assert_eq!(r.task_points, c.task_points);
+        assert_eq!(r.computed, 1);
+        assert_eq!(r.owner.as_deref(), Some("alpha"));
+        assert!(r.leases.task_done(t0));
+        assert_eq!(r.leases.lease_holder(t1), Some(h1));
+        assert_eq!(r.lease_tokens.get(&t1).map(String::as_str), Some("beta"));
+        assert!(r.done_at.is_none());
+        assert_eq!(r.leases.lease_secs(), 7.5);
+
+        // The compacted snapshot replays to the same state again.
+        let again = replay_journal(&snapshot_records(&restored), &dir, now, false);
+        let a = &again[&id];
+        assert!(a.leases.task_done(t0));
+        assert_eq!(a.leases.lease_holder(t1), Some(h1));
+        assert_eq!(a.lease_tokens.get(&t1).map(String::as_str), Some("beta"));
+
+        // An evict record erases the campaign; a finished campaign
+        // starts its grace on replay.
+        let mut evicted = records.clone();
+        evicted.push(rec_evict(&id));
+        assert!(replay_journal(&evicted, &dir, now, false).is_empty());
+        let mut finished = records.clone();
+        finished.push(rec_task("complete", &id, t1));
+        finished.push(rec_task("complete", &id, 2));
+        let f = replay_journal(&finished, &dir, now, false);
+        assert!(f[&id].leases.all_done());
+        assert!(f[&id].done_at.is_some());
+
+        // A campaign whose manifest file vanished is dropped, not
+        // resurrected half-formed.
+        std::fs::remove_file(manifest_path(&dir, &id)).unwrap();
+        assert!(replay_journal(&records, &dir, now, false).is_empty());
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
 /// The body of `hplsim serve`: start, announce, block forever.
 pub fn run_serve(opts: ServeOptions) -> Result<(), String> {
     let server = Server::start(opts.clone())?;
     eprintln!(
-        "serve: listening on {} (store {}, default lease {:.0}s)",
+        "serve: listening on {} (store {}, default lease {:.0}s, {} handler(s){})",
         server.addr(),
         opts.store_dir.display(),
-        opts.lease_secs
+        opts.lease_secs,
+        opts.handlers.clamp(1, 256),
+        if opts.token_file.is_some() { ", auth on" } else { "" }
     );
     server.run_forever();
     Ok(())

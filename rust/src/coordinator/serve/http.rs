@@ -30,6 +30,9 @@ pub struct Request {
     /// Query parameters (`k=v` pairs; the protocol uses only hex/word
     /// values, so no percent-decoding is needed or performed).
     pub query: HashMap<String, String>,
+    /// Bearer token from an `Authorization: Bearer <token>` header, if
+    /// one was sent (the daemon's optional `--token-file` auth).
+    pub token: Option<String>,
     pub body: Vec<u8>,
 }
 
@@ -70,11 +73,14 @@ fn status_text(status: u16) -> &'static str {
     match status {
         200 => "OK",
         400 => "Bad Request",
+        401 => "Unauthorized",
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
 }
@@ -112,6 +118,7 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request, 
         return Err(format!("malformed request line {request_line:?}"));
     }
     let mut content_length = 0usize;
+    let mut token = None;
     for line in lines {
         if let Some((k, v)) = line.split_once(':') {
             if k.trim().eq_ignore_ascii_case("content-length") {
@@ -119,6 +126,20 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request, 
                     .trim()
                     .parse()
                     .map_err(|_| format!("bad content-length {:?}", v.trim()))?;
+            } else if k.trim().eq_ignore_ascii_case("authorization") {
+                // Only the Bearer scheme is meaningful to the protocol;
+                // anything else reads as "no token" and fails auth with
+                // a structured 401 rather than a parse error.
+                let v = v.trim();
+                if let Some(t) = v
+                    .strip_prefix("Bearer ")
+                    .or_else(|| v.strip_prefix("bearer "))
+                {
+                    let t = t.trim();
+                    if !t.is_empty() {
+                        token = Some(t.to_string());
+                    }
+                }
             }
         }
     }
@@ -145,7 +166,7 @@ pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request, 
         remaining -= n;
     }
     let (path, query) = parse_target(target);
-    Ok(Request { method, path, query, body })
+    Ok(Request { method, path, query, token, body })
 }
 
 fn find_head_end(buf: &[u8]) -> Option<usize> {
@@ -200,11 +221,19 @@ pub struct Client {
     pub timeout: Duration,
     /// Total attempts per request (>= 1).
     pub retries: u32,
+    /// Bearer token sent as `Authorization: Bearer <token>` on every
+    /// request (daemons without `--token-file` ignore it).
+    pub token: Option<String>,
 }
 
 impl Client {
     pub fn new(addr: impl Into<String>) -> Client {
-        Client { addr: addr.into(), timeout: Duration::from_secs(10), retries: 4 }
+        Client {
+            addr: addr.into(),
+            timeout: Duration::from_secs(10),
+            retries: 4,
+            token: None,
+        }
     }
 
     /// Perform one request, retrying transport failures with doubling
@@ -244,8 +273,12 @@ impl Client {
             .map_err(|e| format!("connect {}: {e}", self.addr))?;
         stream.set_read_timeout(Some(self.timeout)).map_err(|e| format!("socket: {e}"))?;
         stream.set_write_timeout(Some(self.timeout)).map_err(|e| format!("socket: {e}"))?;
+        let auth = match &self.token {
+            Some(t) => format!("Authorization: Bearer {t}\r\n"),
+            None => String::new(),
+        };
         let head = format!(
-            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\n{auth}Connection: close\r\n\r\n",
             self.addr,
             body.len()
         );

@@ -1,0 +1,182 @@
+//! The daemon's append-only state journal.
+//!
+//! Campaign registration and every lease transition (claim, complete,
+//! fail, expiry-reclaim, eviction) append one JSON record per line to
+//! `journal.jsonl` inside the `--store` directory; each record is
+//! flushed before the response that acknowledges it leaves the daemon.
+//! A restarted `hplsim serve` replays the journal to rebuild its
+//! campaign registry — lease tables, holder-token counters, reclaim
+//! statistics — so in-flight workers keep heartbeating and completing
+//! against the same holder tokens across a `kill -9`.
+//!
+//! Heartbeats are deliberately *not* journaled: a restart restores
+//! every live lease stamped "now", so a surviving holder re-heartbeats
+//! within one interval and a dead one expires one lease period later —
+//! the same outcome as an uninterrupted run, without a disk write per
+//! heartbeat.
+//!
+//! The format is tolerant by construction: a `kill -9` can tear at most
+//! the final line, and replay skips any line that does not parse as a
+//! JSON object. After replay the daemon rewrites the journal as a
+//! compact snapshot of the surviving state (temp + rename, like every
+//! other on-disk artifact), so the file stays proportional to live
+//! state rather than to history.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::stats::json::Json;
+
+/// File name of the journal inside the store directory.
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+
+/// An open journal: appends are write-then-flush, so an acknowledged
+/// transition is on disk before its HTTP response is.
+pub struct Journal {
+    path: PathBuf,
+    file: Option<std::fs::File>,
+    /// Journal writes are best-effort (a full disk must not take the
+    /// daemon down mid-campaign), but each distinct failure mode is
+    /// worth one stderr line, not one per request.
+    warned: bool,
+}
+
+impl Journal {
+    /// Open (creating if absent) the journal of a store directory.
+    pub fn open(store_dir: &Path) -> Journal {
+        let path = store_dir.join(JOURNAL_FILE);
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .ok();
+        let mut j = Journal { path, file, warned: false };
+        if j.file.is_none() {
+            j.warn("cannot open journal for append");
+        }
+        j
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn warn(&mut self, what: &str) {
+        if !self.warned {
+            eprintln!(
+                "serve: {what} ({}); state changes will not survive a restart",
+                self.path.display()
+            );
+            self.warned = true;
+        }
+    }
+
+    /// Append one record as a single line and flush it.
+    pub fn append(&mut self, rec: &Json) {
+        let Some(file) = self.file.as_mut() else {
+            self.warn("journal unavailable");
+            return;
+        };
+        let line = format!("{}\n", rec.to_string());
+        if file.write_all(line.as_bytes()).and_then(|()| file.flush()).is_err() {
+            self.warn("journal append failed");
+        }
+    }
+
+    /// Read every parseable record of a store directory's journal, in
+    /// order. A missing file is an empty journal; an unparseable line —
+    /// the torn tail of a `kill -9` mid-append — is skipped, because
+    /// every record is only appended *before* its acknowledgement, so a
+    /// torn record's transition was never acknowledged to any client.
+    pub fn read(store_dir: &Path) -> Vec<Json> {
+        let path = store_dir.join(JOURNAL_FILE);
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return Vec::new();
+        };
+        text.lines()
+            .filter(|l| !l.trim().is_empty())
+            .filter_map(|l| Json::parse(l).ok())
+            .filter(|v| v.as_obj().is_some())
+            .collect()
+    }
+
+    /// Replace the journal with a compact snapshot (startup compaction:
+    /// replayed history collapses to one record per surviving fact).
+    /// Temp + rename, then the append handle reopens on the new file.
+    pub fn rewrite(&mut self, records: &[Json]) {
+        let mut text = String::new();
+        for r in records {
+            text.push_str(&r.to_string());
+            text.push('\n');
+        }
+        let tmp = self.path.with_extension(format!("tmp.{}", std::process::id()));
+        let res = std::fs::write(&tmp, text.as_bytes())
+            .and_then(|()| std::fs::rename(&tmp, &self.path));
+        if res.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+            self.warn("journal compaction failed");
+            return;
+        }
+        self.file = std::fs::OpenOptions::new().append(true).open(&self.path).ok();
+        if self.file.is_none() {
+            self.warn("cannot reopen compacted journal");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hplsim-journal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn append_read_roundtrip_skips_torn_tail() {
+        let d = dir("roundtrip");
+        let mut j = Journal::open(&d);
+        j.append(&Json::obj(vec![("t", Json::Str("a".into()))]));
+        j.append(&Json::obj(vec![("t", Json::Str("b".into()))]));
+        // A kill -9 mid-append leaves a torn final line.
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(d.join(JOURNAL_FILE))
+                .unwrap();
+            f.write_all(b"{\"t\":\"torn").unwrap();
+        }
+        let recs = Journal::read(&d);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("t").and_then(Json::as_str), Some("a"));
+        assert_eq!(recs[1].get("t").and_then(Json::as_str), Some("b"));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn rewrite_compacts_and_appends_continue() {
+        let d = dir("rewrite");
+        let mut j = Journal::open(&d);
+        for i in 0..5 {
+            j.append(&Json::obj(vec![("i", Json::Num(i as f64))]));
+        }
+        j.rewrite(&[Json::obj(vec![("t", Json::Str("snapshot".into()))])]);
+        j.append(&Json::obj(vec![("t", Json::Str("after".into()))]));
+        let recs = Journal::read(&d);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("t").and_then(Json::as_str), Some("snapshot"));
+        assert_eq!(recs[1].get("t").and_then(Json::as_str), Some("after"));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_journal_reads_empty() {
+        let d = dir("missing");
+        assert!(Journal::read(&d).is_empty());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

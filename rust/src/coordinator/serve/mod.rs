@@ -16,6 +16,7 @@
 
 pub mod daemon;
 pub mod http;
+pub mod journal;
 pub mod remote;
 pub mod store;
 

@@ -20,11 +20,14 @@ use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
+use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::backend::cache::{cache_path_fp, parse_entry_text, EVAL_DIRECT};
+use crate::coordinator::backend::cache::{
+    cache_path_fp, parse_entry_text, EVAL_DIRECT, EVAL_PJRT,
+};
 use crate::coordinator::backend::lease::{heartbeat_interval, PollBackoff};
 use crate::coordinator::backend::queue::DEFAULT_POLL_MS;
 use crate::coordinator::backend::{
@@ -33,6 +36,7 @@ use crate::coordinator::backend::{
 };
 use crate::coordinator::manifest::Manifest;
 use crate::hpl::HplResult;
+use crate::runtime::{Artifacts, DEFAULT_BATCH_POINTS};
 use crate::stats::json::Json;
 
 use super::http::{request_json, Client};
@@ -70,6 +74,16 @@ pub struct Remote {
     /// Base status-poll interval in milliseconds (backs off while
     /// nothing changes).
     pub poll_ms: u64,
+    /// Evaluation path the campaign is submitted under
+    /// ([`EVAL_DIRECT`] or [`EVAL_PJRT`]); the tag rides submission →
+    /// claim → result → fetch end to end, and only workers with a
+    /// loadable runtime may serve `pjrt` claims.
+    pub eval: &'static str,
+    /// Points per batched runtime invocation for `pjrt` campaigns
+    /// (forwarded to workers through the claim response).
+    pub batch_points: usize,
+    /// Bearer token for a coordinator running with `--token-file`.
+    pub token: Option<String>,
     /// Campaign id assigned at submission (prepare → execute/collect).
     id: RefCell<Option<String>>,
 }
@@ -84,12 +98,17 @@ impl Remote {
             timeout_secs: 0.0,
             exe: None,
             poll_ms: DEFAULT_POLL_MS,
+            eval: EVAL_DIRECT,
+            batch_points: DEFAULT_BATCH_POINTS,
+            token: None,
             id: RefCell::new(None),
         }
     }
 
     fn client(&self) -> Client {
-        Client::new(self.server.clone())
+        let mut c = Client::new(self.server.clone());
+        c.token = self.token.clone();
+        c
     }
 
     fn campaign_id(&self) -> Result<String, ExecError> {
@@ -100,13 +119,16 @@ impl Remote {
 
     fn spawn_worker(&self, threads: usize) -> Result<Child, ExecError> {
         let exe = resolve_exe("remote", &self.exe)?;
-        Command::new(&exe)
-            .arg("worker")
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker")
             .arg("--server")
             .arg(&self.server)
             .arg("--threads")
-            .arg(threads.to_string())
-            .stdin(Stdio::null())
+            .arg(threads.to_string());
+        if let Some(t) = &self.token {
+            cmd.arg("--token").arg(t);
+        }
+        cmd.stdin(Stdio::null())
             .stdout(Stdio::piped())
             .stderr(Stdio::piped())
             .spawn()
@@ -122,6 +144,10 @@ impl Remote {
 impl ExecBackend for Remote {
     fn name(&self) -> &str {
         "remote"
+    }
+
+    fn eval_tag(&self) -> &'static str {
+        self.eval
     }
 
     fn prepare(&self, campaign: &Campaign<'_>, plan: &WorkPlan) -> Result<(), ExecError> {
@@ -141,7 +167,7 @@ impl ExecBackend for Remote {
                     if let Ok(bytes) = std::fs::read(cache_path_fp(dir, fp)) {
                         let _ = client.request(
                             "POST",
-                            &format!("/api/result/{fp:016x}?eval={EVAL_DIRECT}"),
+                            &format!("/api/result/{fp:016x}?eval={}", self.eval),
                             &bytes,
                         );
                     }
@@ -152,9 +178,10 @@ impl ExecBackend for Remote {
             ("manifest", Manifest::new(campaign.points().to_vec()).to_json()),
             ("tasks", Json::Num(self.tasks.max(1) as f64)),
             ("lease_secs", Json::Num(self.lease_secs)),
-            ("eval", Json::Str(EVAL_DIRECT.into())),
+            ("eval", Json::Str(self.eval.into())),
             ("skeleton", Json::Bool(campaign.skeleton_enabled())),
             ("wave", Json::Num(campaign.wave_size() as f64)),
+            ("batch", Json::Num(self.batch_points.max(1) as f64)),
         ]);
         let v = request_json(&client, "POST", "/api/campaigns", body.to_string().as_bytes())
             .map_err(|e| ExecError::backend("remote", e))?;
@@ -218,13 +245,36 @@ impl ExecBackend for Remote {
         let mut last_done = 0usize;
         let mut last_reclaimed = 0usize;
         let mut failures: Vec<String> = Vec::new();
+        // A coordinator restart (its journal restores the campaign) or a
+        // load-shedding 503 looks like a failed poll; ride it out for up
+        // to a lease period before declaring the campaign lost.
+        let mut down_since: Option<Instant> = None;
+        let down_limit = self.lease_secs.max(30.0);
         loop {
             let status =
                 match request_json(&client, "GET", &format!("/api/campaigns/{id}"), b"") {
-                    Ok(v) => v,
+                    Ok(v) => {
+                        down_since = None;
+                        v
+                    }
                     Err(e) => {
-                        kill_all(&mut children);
-                        return Err(ExecError::backend("remote", e));
+                        let since = *down_since.get_or_insert_with(Instant::now);
+                        if since.elapsed().as_secs_f64() > down_limit {
+                            kill_all(&mut children);
+                            return Err(ExecError::backend(
+                                "remote",
+                                format!(
+                                    "coordinator unreachable for {:.0}s: {e}",
+                                    since.elapsed().as_secs_f64()
+                                ),
+                            ));
+                        }
+                        campaign.message(
+                            "remote",
+                            format!("status poll failed ({e}) — retrying"),
+                        );
+                        poll.wait();
+                        continue;
                     }
                 };
             let tasks = status.get("tasks").and_then(Json::as_usize).unwrap_or(0);
@@ -317,7 +367,7 @@ impl ExecBackend for Remote {
                 out.push((idx, r));
                 continue;
             }
-            let path = format!("/api/result/{fp:016x}?eval={EVAL_DIRECT}");
+            let path = format!("/api/result/{fp:016x}?eval={}", self.eval);
             let (status, bytes) = client
                 .request("GET", &path, b"")
                 .map_err(|e| ExecError::backend("remote", e))?;
@@ -325,7 +375,7 @@ impl ExecBackend for Remote {
                 std::str::from_utf8(&bytes)
                     .ok()
                     .and_then(|t| parse_entry_text(t, fp))
-                    .filter(|(_, tag)| tag == EVAL_DIRECT)
+                    .filter(|(_, tag)| tag == self.eval)
             } else {
                 None
             };
@@ -334,9 +384,10 @@ impl ExecBackend for Remote {
                     "remote",
                     format!(
                         "point {idx} ({}) missing from the coordinator store (as a \
-                         \"{EVAL_DIRECT}\" entry) — was it never computed, or \
-                         submitted on a different evaluation path?",
-                        campaign.points()[idx].label
+                         \"{}\" entry) — was it never computed, or submitted on a \
+                         different evaluation path?",
+                        campaign.points()[idx].label,
+                        self.eval
                     ),
                 ));
             };
@@ -373,12 +424,28 @@ pub struct RemoteWorkerOptions {
     /// Base claim-poll interval in milliseconds (backs off while no
     /// task is claimable).
     pub poll_ms: u64,
+    /// Bearer token for a coordinator running with `--token-file`.
+    pub token: Option<String>,
 }
 
 impl Default for RemoteWorkerOptions {
     fn default() -> RemoteWorkerOptions {
-        RemoteWorkerOptions { threads: 0, wait_secs: 30.0, poll_ms: DEFAULT_POLL_MS }
+        RemoteWorkerOptions {
+            threads: 0,
+            wait_secs: 30.0,
+            poll_ms: DEFAULT_POLL_MS,
+            token: None,
+        }
     }
+}
+
+/// The `error` field of a structured error body, or the raw text.
+fn error_detail(bytes: &[u8]) -> String {
+    let text = String::from_utf8_lossy(bytes).into_owned();
+    Json::parse(&text)
+        .ok()
+        .and_then(|v| v.get("error").and_then(Json::as_str).map(String::from))
+        .unwrap_or(text)
 }
 
 fn scratch_dir() -> PathBuf {
@@ -400,7 +467,9 @@ pub fn run_remote_worker(
     opts: &RemoteWorkerOptions,
 ) -> Result<WorkerSummary, String> {
     let addr = parse_server(server)?;
-    let client = Client::new(addr);
+    let mut client = Client::new(addr);
+    client.token = opts.token.clone();
+    let client = client;
     // Private scratch cache, reused across tasks: repeated fingerprints
     // within this worker's lifetime replay locally instead of
     // re-simulating or re-fetching.
@@ -413,9 +482,41 @@ pub fn run_remote_worker(
     let mut summary = WorkerSummary::default();
 
     let outcome = loop {
-        let v = match request_json(&client, "POST", "/api/claim", b"{}") {
-            Ok(v) => v,
-            Err(e) => break Err(e),
+        let (status, bytes) = match client.request("POST", "/api/claim", b"{}") {
+            Ok(r) => r,
+            Err(e) => break Err(e), // transport failure through every retry
+        };
+        let v = match status {
+            200..=299 => match std::str::from_utf8(&bytes).ok().and_then(|t| Json::parse(t).ok())
+            {
+                Some(v) => v,
+                None => break Err("claim response is not JSON".to_string()),
+            },
+            // Auth refusals are definitive — retrying the same token
+            // forever would just spin.
+            401 => {
+                break Err(format!(
+                    "coordinator refused the claim: {}",
+                    error_detail(&bytes)
+                ))
+            }
+            // Over the lease quota: like idle time, this counts toward
+            // the wait_secs exit — a quota-starved worker drains out
+            // instead of hammering the coordinator (or hanging forever).
+            429 => {
+                let since = *idle_since.get_or_insert_with(Instant::now);
+                if since.elapsed().as_secs_f64() >= opts.wait_secs {
+                    break Ok(());
+                }
+                poll.wait();
+                continue;
+            }
+            s => {
+                break Err(format!(
+                    "POST /api/claim: HTTP {s}: {}",
+                    error_detail(&bytes)
+                ))
+            }
         };
         if v.get("idle").and_then(Json::as_bool) == Some(true) {
             let active = v.get("active").and_then(Json::as_usize).unwrap_or(0);
@@ -487,14 +588,46 @@ fn run_claimed_task(
         ]);
         let _ = request_json(client, "POST", "/api/fail", body.to_string().as_bytes());
     };
-    if eval != EVAL_DIRECT {
-        // This worker executes the pure-Rust path only; claiming an
-        // incompatible task and computing it anyway would mis-tag the
-        // campaign's results.
-        let why = format!("worker executes \"{EVAL_DIRECT}\" only, task wants \"{eval}\"");
-        fail_task(&why);
-        return Err(format!("task {task} of campaign {id}: {why}"));
-    }
+    // Resolve the claim's evaluation path to a backend up front, before
+    // any lease machinery spins up. A `pjrt` claim on a worker whose
+    // runtime does not load is refused with a structured failure — the
+    // same rule the file queue applies to artifact-backed queues —
+    // never computed through the wrong path and mis-tagged.
+    let batch = claim
+        .get("batch")
+        .and_then(Json::as_usize)
+        .filter(|&b| b > 0)
+        .unwrap_or(DEFAULT_BATCH_POINTS);
+    let backend = match eval {
+        EVAL_PJRT => match Artifacts::load_default() {
+            Ok(a) => InProcess::with_artifacts_eval(Rc::new(a), batch, EVAL_PJRT),
+            Err(e) => {
+                let why = format!(
+                    "task wants \"{EVAL_PJRT}\" but this worker's PJRT runtime \
+                     failed to load: {e}"
+                );
+                fail_task(&why);
+                return Err(format!("task {task} of campaign {id}: {why}"));
+            }
+        },
+        EVAL_DIRECT => InProcess::new(),
+        other => {
+            let why = format!(
+                "worker executes \"{EVAL_DIRECT}\" or \"{EVAL_PJRT}\", task wants \
+                 \"{other}\""
+            );
+            fail_task(&why);
+            return Err(format!("task {task} of campaign {id}: {why}"));
+        }
+    };
+    // Per-eval scratch subdirectory: scratch entries are keyed by
+    // fingerprint alone (the tag lives inside the entry), so a worker
+    // alternating between a `direct` and a `pjrt` campaign over the
+    // same points must not thrash one shared file per fingerprint.
+    let scratch = scratch.join(eval);
+    std::fs::create_dir_all(&scratch)
+        .map_err(|e| format!("cannot create scratch cache {}: {e}", scratch.display()))?;
+    let scratch = scratch.as_path();
 
     // The campaign's manifest, fetched once per campaign and then
     // reused across its tasks (validated by the ordinary loader).
@@ -560,10 +693,14 @@ fn run_claimed_task(
         }
     }
 
-    // Heartbeat from a background thread, exactly like the file-queue
-    // worker: a definitive "lease lost" (HTTP 4xx) — or a coordinator
-    // unreachable through every retry — raises `lost`, and the owner
-    // skips completion instead of fighting the new holder.
+    // Heartbeat from a background thread, like the file-queue worker —
+    // but only a *definitive* refusal (HTTP 4xx: the lease was
+    // reclaimed, or the campaign is gone) raises `lost`. A transport
+    // failure or 5xx means the coordinator is unreachable or shedding
+    // load — possibly restarting mid-campaign — and a restarted daemon
+    // restores every live lease from its journal, so the right move is
+    // to keep heartbeating into the next interval, not to abandon a
+    // computation already in flight.
     let stop = Arc::new(AtomicBool::new(false));
     let lost = Arc::new(AtomicBool::new(false));
     let hb = {
@@ -583,11 +720,12 @@ fn run_claimed_task(
                     std::thread::sleep(slice);
                     waited += slice;
                 }
-                if request_json(&client, "POST", "/api/heartbeat", body.as_bytes())
-                    .is_err()
-                {
-                    lost.store(true, Ordering::Relaxed);
-                    return;
+                match client.request("POST", "/api/heartbeat", body.as_bytes()) {
+                    Ok((status, _)) if (400..500).contains(&status) => {
+                        lost.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                    _ => {}
                 }
             }
         })
@@ -598,7 +736,7 @@ fn run_claimed_task(
         .cache(Some(scratch.to_path_buf()))
         .skeleton(skeleton)
         .wave(wave)
-        .run(&InProcess::new());
+        .run(&backend);
 
     stop.store(true, Ordering::Relaxed);
     let _ = hb.join();

@@ -1,0 +1,448 @@
+//! Durability and multi-tenancy of the `hplsim serve` coordinator: a
+//! daemon restarted on the same `--store` must rebuild its campaign
+//! registry and live leases from the state journal (workers in flight
+//! keep heartbeating and complete against the restarted process, with
+//! zero replanning and byte-identical results), claims must round-robin
+//! across tenant campaigns, finished campaigns must be evicted after
+//! their grace period, and `pjrt`-tagged campaigns must carry the tag
+//! end to end — through claim, result submission, the store's file
+//! names, and a real `hplsim worker --server` subprocess running the
+//! functional stub runtime.
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::rc::Rc;
+
+use hplsim::blas::{DgemmModel, NodeCoef};
+use hplsim::coordinator::backend::{
+    cache_path_fp, Campaign, InProcess, SimPoint, EVAL_PJRT,
+};
+use hplsim::coordinator::manifest::Manifest;
+use hplsim::coordinator::serve::http::request_json;
+use hplsim::coordinator::serve::{Client, ServeOptions, Server};
+use hplsim::hpl::{Bcast, HplConfig, Rfact, SwapAlg};
+use hplsim::network::{NetModel, Topology};
+use hplsim::runtime::Artifacts;
+use hplsim::stats::json::Json;
+
+fn hplsim_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_hplsim"))
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("hplsim_sdur_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Tiny all-explicit points (fast to simulate); `seed0` keeps distinct
+/// campaigns distinct.
+fn points(n: usize, seed0: u64) -> Vec<SimPoint> {
+    (0..n)
+        .map(|i| {
+            SimPoint::explicit(
+                format!("sd{seed0}_{i}"),
+                HplConfig {
+                    n: 96 + 32 * (i % 2),
+                    nb: 32,
+                    p: 2,
+                    q: 2,
+                    depth: 0,
+                    bcast: Bcast::Ring,
+                    swap: SwapAlg::BinExch,
+                    swap_threshold: 64,
+                    rfact: Rfact::Crout,
+                    nbmin: 8,
+                },
+                Topology::star(4, 12.5e9, 40e9),
+                NetModel::ideal(),
+                DgemmModel::homogeneous(NodeCoef {
+                    mu: [1e-11, 0.0, 0.0, 0.0, 5e-7],
+                    sigma: [3e-13, 0.0, 0.0, 0.0, 0.0],
+                }),
+                1,
+                seed0 + i as u64,
+            )
+        })
+        .collect()
+}
+
+fn start_server(tag: &str) -> (Server, Client, PathBuf) {
+    let store = fresh_dir(&format!("{tag}_store"));
+    let server = start_on(&store);
+    let client = Client::new(server.addr().to_string());
+    (server, client, store)
+}
+
+/// Start (or restart) a coordinator on an existing store directory.
+fn start_on(store: &PathBuf) -> Server {
+    let mut opts = ServeOptions::new("127.0.0.1:0", store.clone());
+    opts.io_timeout_secs = 2.0;
+    Server::start(opts).unwrap()
+}
+
+fn submit(client: &Client, pts: &[SimPoint], tasks: usize, lease_secs: f64) -> Json {
+    let body = Json::obj(vec![
+        ("manifest", Manifest::new(pts.to_vec()).to_json()),
+        ("tasks", Json::Num(tasks as f64)),
+        ("lease_secs", Json::Num(lease_secs)),
+    ])
+    .to_string();
+    request_json(client, "POST", "/api/campaigns", body.as_bytes()).unwrap()
+}
+
+fn lease_body(campaign: &str, task: usize, holder: u64) -> String {
+    Json::obj(vec![
+        ("campaign", Json::Str(campaign.to_string())),
+        ("task", Json::Num(task as f64)),
+        ("holder", Json::u64_str(holder)),
+    ])
+    .to_string()
+}
+
+/// Simulate `pts` locally (the direct path) and return each point's
+/// verbatim cache-entry bytes — what a worker submits to the store.
+fn entry_bytes(tag: &str, pts: &[SimPoint]) -> Vec<(u64, Vec<u8>)> {
+    entry_bytes_with(tag, pts, &InProcess::new())
+}
+
+/// Same, through the functional stub runtime tagged `pjrt` — the local
+/// reference a stub-backed remote worker's store entries must match
+/// byte for byte.
+fn pjrt_entry_bytes(tag: &str, pts: &[SimPoint]) -> Vec<(u64, Vec<u8>)> {
+    let backend =
+        InProcess::with_artifacts_eval(Rc::new(Artifacts::stub()), 4, EVAL_PJRT);
+    entry_bytes_with(tag, pts, &backend)
+}
+
+fn entry_bytes_with(
+    tag: &str,
+    pts: &[SimPoint],
+    backend: &InProcess,
+) -> Vec<(u64, Vec<u8>)> {
+    let cache = fresh_dir(&format!("{tag}_cache"));
+    Campaign::new(pts).threads(1).cache(Some(cache.clone())).run(backend).unwrap();
+    let out = pts
+        .iter()
+        .map(|p| {
+            let fp = p.fingerprint();
+            (fp, std::fs::read(cache_path_fp(&cache, fp)).unwrap())
+        })
+        .collect();
+    let _ = std::fs::remove_dir_all(&cache);
+    out
+}
+
+/// Post `entries` into the coordinator's store under `eval`.
+fn post_entries(client: &Client, entries: &[(u64, Vec<u8>)], eval: &str) {
+    for (fp, bytes) in entries {
+        let r = request_json(
+            client,
+            "POST",
+            &format!("/api/result/{fp:016x}?eval={eval}"),
+            bytes,
+        )
+        .unwrap();
+        assert_eq!(r.get("stored").and_then(Json::as_bool), Some(true));
+    }
+}
+
+fn claim(client: &Client) -> Json {
+    request_json(client, "POST", "/api/claim", b"{}").unwrap()
+}
+
+#[test]
+fn restart_restores_campaigns_and_live_leases_byte_identically() {
+    let (mut server, client, store) = start_server("restart");
+    // Two single-task tenant campaigns with very different point sets.
+    let pts_a = points(4, 1000);
+    let pts_b = points(3, 9000);
+    let id_a = submit(&client, &pts_a, 1, 30.0)
+        .get("id")
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string();
+    let id_b = submit(&client, &pts_b, 1, 30.0)
+        .get("id")
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string();
+    assert_ne!(id_a, id_b);
+
+    // A worker claims one task and streams its results to the store,
+    // but the daemon dies before the completion arrives. (The journal
+    // is flushed record by record as operations are acknowledged, so a
+    // graceful shutdown and a SIGKILL leave the same bytes behind — CI
+    // additionally kills a real daemon process mid-drain.)
+    let c = claim(&client);
+    let cid = c.get("campaign").and_then(Json::as_str).unwrap().to_string();
+    let task = c.get("task").and_then(Json::as_usize).unwrap();
+    let holder = c.get("holder").and_then(Json::as_u64).unwrap();
+    let (claimed_pts, other_pts, other_id) = if cid == id_a {
+        (&pts_a, &pts_b, &id_b)
+    } else {
+        (&pts_b, &pts_a, &id_a)
+    };
+    let claimed_entries = entry_bytes("restart_claimed", claimed_pts);
+    post_entries(&client, &claimed_entries, "direct");
+    server.shutdown();
+    drop(server);
+
+    // Restart on the same store: both campaigns come back, and the
+    // in-flight lease still belongs to the old holder — it heartbeats
+    // and completes with zero replanning.
+    let mut server = start_on(&store);
+    let client = Client::new(server.addr().to_string());
+    for id in [&id_a, &id_b] {
+        let st = request_json(&client, "GET", &format!("/api/campaigns/{id}"), b"")
+            .unwrap();
+        assert_eq!(st.get("id").and_then(Json::as_str), Some(id.as_str()));
+    }
+    let hb = request_json(
+        &client,
+        "POST",
+        "/api/heartbeat",
+        lease_body(&cid, task, holder).as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(hb.get("ok").and_then(Json::as_bool), Some(true), "lease survived");
+    let done = request_json(
+        &client,
+        "POST",
+        "/api/complete",
+        lease_body(&cid, task, holder).as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(done.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(done.get("done").and_then(Json::as_bool), Some(true));
+
+    // The other campaign's task is still claimable after the restart;
+    // drain it the ordinary way.
+    let c = claim(&client);
+    assert_eq!(c.get("campaign").and_then(Json::as_str), Some(other_id.as_str()));
+    let task = c.get("task").and_then(Json::as_usize).unwrap();
+    let holder = c.get("holder").and_then(Json::as_u64).unwrap();
+    let other_entries = entry_bytes("restart_other", other_pts);
+    post_entries(&client, &other_entries, "direct");
+    let done = request_json(
+        &client,
+        "POST",
+        "/api/complete",
+        lease_body(other_id, task, holder).as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(done.get("done").and_then(Json::as_bool), Some(true));
+
+    // Every store entry is byte-identical to an uninterrupted local
+    // run — the restart is invisible in the results.
+    for (fp, want) in claimed_entries.iter().chain(&other_entries) {
+        let got = std::fs::read(store.join(format!("{fp:016x}.direct.json"))).unwrap();
+        assert_eq!(&got, want, "store entry {fp:016x} diverged across the restart");
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn claims_round_robin_across_tenant_campaigns() {
+    let (mut server, client, store) = start_server("rr");
+    // Build two campaigns that each provably partition into two tasks
+    // under `fp % 2`: pick two points of each fingerprint parity from a
+    // generated pool (fingerprints are deterministic, so this selection
+    // is too).
+    let pick = |seed0: u64| -> Vec<SimPoint> {
+        let pool = points(16, seed0);
+        let even: Vec<&SimPoint> =
+            pool.iter().filter(|p| p.fingerprint() % 2 == 0).take(2).collect();
+        let odd: Vec<&SimPoint> =
+            pool.iter().filter(|p| p.fingerprint() % 2 == 1).take(2).collect();
+        assert!(even.len() == 2 && odd.len() == 2, "pool lacks a parity class");
+        even.into_iter().chain(odd).cloned().collect()
+    };
+    let id_a = submit(&client, &pick(2000), 2, 30.0)
+        .get("id")
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string();
+    let id_b = submit(&client, &pick(3000), 2, 30.0)
+        .get("id")
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string();
+    assert_ne!(id_a, id_b);
+
+    // Four claims with both campaigns claimable throughout: each lands
+    // one past the previous one — strict alternation, not
+    // first-campaign starvation.
+    let ids: Vec<String> = (0..4)
+        .map(|_| {
+            claim(&client)
+                .get("campaign")
+                .and_then(Json::as_str)
+                .expect("a task is claimable")
+                .to_string()
+        })
+        .collect();
+    assert_ne!(ids[0], ids[1], "consecutive claims hit different campaigns");
+    assert_eq!(ids[0], ids[2], "round-robin wraps back");
+    assert_eq!(ids[1], ids[3]);
+    // All four tasks are now leased; a fifth claim reports idle (but
+    // campaigns still active).
+    let idle = claim(&client);
+    assert_eq!(idle.get("idle").and_then(Json::as_bool), Some(true));
+    assert_eq!(idle.get("active").and_then(Json::as_usize), Some(2));
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn finished_campaigns_are_evicted_and_resubmission_replans_from_store() {
+    let store = fresh_dir("evict_store");
+    let mut opts = ServeOptions::new("127.0.0.1:0", store.clone());
+    opts.io_timeout_secs = 2.0;
+    opts.evict_secs = 0.0; // evict the moment a campaign finishes
+    let mut server = Server::start(opts).unwrap();
+    let client = Client::new(server.addr().to_string());
+
+    // Every result is already in the store, so the submission plans
+    // zero tasks and is born finished.
+    let pts = points(3, 4000);
+    let entries = entry_bytes("evict", &pts);
+    post_entries(&client, &entries, "direct");
+    let st = submit(&client, &pts, 2, 30.0);
+    let id = st.get("id").and_then(Json::as_str).unwrap().to_string();
+    assert_eq!(st.get("done").and_then(Json::as_bool), Some(true));
+    let distinct = st.get("distinct").and_then(Json::as_usize).unwrap();
+    assert_eq!(st.get("hits").and_then(Json::as_usize), Some(distinct));
+
+    // Any later request sweeps the grace-expired campaign out of the
+    // registry...
+    let idle = claim(&client);
+    assert_eq!(idle.get("idle").and_then(Json::as_bool), Some(true));
+    let (status, _) = client
+        .request("GET", &format!("/api/campaigns/{id}"), b"")
+        .unwrap();
+    assert_eq!(status, 404, "finished campaign was evicted");
+
+    // ...and a resubmission registers afresh, replanning entirely from
+    // store hits — eviction is observationally safe.
+    let st = submit(&client, &pts, 2, 30.0);
+    assert_eq!(st.get("id").and_then(Json::as_str), Some(id.as_str()));
+    assert_eq!(st.get("done").and_then(Json::as_bool), Some(true));
+    assert_eq!(st.get("hits").and_then(Json::as_usize), Some(distinct));
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn pjrt_tag_rides_claim_store_and_fetch_end_to_end() {
+    let (mut server, client, store) = start_server("pjrt");
+    let pts = points(3, 5000);
+    let body = Json::obj(vec![
+        ("manifest", Manifest::new(pts.clone()).to_json()),
+        ("eval", Json::Str("pjrt".to_string())),
+        ("tasks", Json::Num(1.0)),
+    ])
+    .to_string();
+    let st = request_json(&client, "POST", "/api/campaigns", body.as_bytes()).unwrap();
+    let id = st.get("id").and_then(Json::as_str).unwrap().to_string();
+    assert_eq!(st.get("eval").and_then(Json::as_str), Some("pjrt"));
+
+    // The claim carries the tag, so a worker knows which runtime the
+    // task demands before touching the manifest.
+    let c = claim(&client);
+    assert_eq!(c.get("eval").and_then(Json::as_str), Some("pjrt"));
+    let task = c.get("task").and_then(Json::as_usize).unwrap();
+    let holder = c.get("holder").and_then(Json::as_u64).unwrap();
+
+    // Results computed through the functional stub tagged `pjrt` (what
+    // a stub-backed worker produces), posted under the same tag.
+    let entries = pjrt_entry_bytes("pjrt_ref", &pts);
+    post_entries(&client, &entries, "pjrt");
+    let done = request_json(
+        &client,
+        "POST",
+        "/api/complete",
+        lease_body(&id, task, holder).as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(done.get("done").and_then(Json::as_bool), Some(true));
+
+    for (fp, want) in &entries {
+        // The store keys by (fingerprint, eval): the pjrt entry exists
+        // under its tagged name and round-trips verbatim...
+        let disk = std::fs::read(store.join(format!("{fp:016x}.pjrt.json"))).unwrap();
+        assert_eq!(&disk, want);
+        let (status, fetched) = client
+            .request("GET", &format!("/api/result/{fp:016x}?eval=pjrt"), b"")
+            .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(&fetched, want);
+        // ...while the direct tag stays a miss — paths never mix.
+        let (status, _) = client
+            .request("GET", &format!("/api/result/{fp:016x}?eval=direct"), b"")
+            .unwrap();
+        assert_eq!(status, 404);
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn worker_subprocess_drains_pjrt_campaign_under_stub_runtime() {
+    let (mut server, client, store) = start_server("pjrt_worker");
+    let pts = points(3, 6000);
+    let body = Json::obj(vec![
+        ("manifest", Manifest::new(pts.clone()).to_json()),
+        ("eval", Json::Str("pjrt".to_string())),
+        ("tasks", Json::Num(1.0)),
+        ("lease_secs", Json::Num(10.0)),
+    ])
+    .to_string();
+    let st = request_json(&client, "POST", "/api/campaigns", body.as_bytes()).unwrap();
+    let id = st.get("id").and_then(Json::as_str).unwrap().to_string();
+
+    // A worker without a loadable PJRT runtime must refuse the claim
+    // with a structured failure (requeueing the task), never compute it
+    // through the wrong path. The env var is scrubbed explicitly so the
+    // test holds even when CI exports the stub for the whole suite.
+    let refused = Command::new(hplsim_bin())
+        .args(["worker", "--server", &server.addr().to_string()])
+        .args(["--wait-secs", "0", "--poll-ms", "50", "--threads", "1"])
+        .env_remove("HPLSIM_PJRT_STUB")
+        .output()
+        .unwrap();
+    assert!(
+        !refused.status.success(),
+        "a stub-less worker must refuse a pjrt task"
+    );
+    let err = String::from_utf8_lossy(&refused.stderr);
+    assert!(err.contains("pjrt"), "refusal names the missing runtime: {err}");
+
+    // A worker running the functional stub drains the campaign.
+    let drained = Command::new(hplsim_bin())
+        .args(["worker", "--server", &server.addr().to_string()])
+        .args(["--wait-secs", "0", "--poll-ms", "50", "--threads", "1"])
+        .env("HPLSIM_PJRT_STUB", "1")
+        .output()
+        .unwrap();
+    assert!(
+        drained.status.success(),
+        "stub worker failed: {}",
+        String::from_utf8_lossy(&drained.stderr)
+    );
+    let st =
+        request_json(&client, "GET", &format!("/api/campaigns/{id}"), b"").unwrap();
+    assert_eq!(st.get("done").and_then(Json::as_bool), Some(true));
+
+    // The worker's store entries are byte-identical to a local stub
+    // run, under the pjrt-tagged store names.
+    for (fp, want) in pjrt_entry_bytes("pjrt_worker_ref", &pts) {
+        let disk = std::fs::read(store.join(format!("{fp:016x}.pjrt.json"))).unwrap();
+        assert_eq!(disk, want, "store entry {fp:016x} diverged from the local stub");
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}

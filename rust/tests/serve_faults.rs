@@ -265,14 +265,26 @@ fn malformed_submissions_are_structured_400s() {
         .to_string();
     let (status, _) = client.request("POST", "/api/campaigns", empty.as_bytes()).unwrap();
     assert_eq!(status, 400);
-    // Remote campaigns run the pure-Rust path only.
+    // Campaigns run "direct" or "pjrt" — an arbitrary tag would promise
+    // results no worker knows how to produce.
+    let bogus_eval = Json::obj(vec![
+        ("manifest", Manifest::new(points(1)).to_json()),
+        ("eval", Json::Str("xla".to_string())),
+    ])
+    .to_string();
+    let (status, _) =
+        client.request("POST", "/api/campaigns", bogus_eval.as_bytes()).unwrap();
+    assert_eq!(status, 400);
+    // ... while "pjrt" registers and the tag rides into the claim.
     let pjrt = Json::obj(vec![
         ("manifest", Manifest::new(points(1)).to_json()),
         ("eval", Json::Str("pjrt".to_string())),
     ])
     .to_string();
-    let (status, _) = client.request("POST", "/api/campaigns", pjrt.as_bytes()).unwrap();
-    assert_eq!(status, 400);
+    let st = request_json(&client, "POST", "/api/campaigns", pjrt.as_bytes()).unwrap();
+    assert_eq!(st.get("eval").and_then(Json::as_str), Some("pjrt"));
+    let claim = request_json(&client, "POST", "/api/claim", b"{}").unwrap();
+    assert_eq!(claim.get("eval").and_then(Json::as_str), Some("pjrt"));
     // Lease verbs validate their bodies and targets.
     let (status, _) = client.request("POST", "/api/heartbeat", b"{}").unwrap();
     assert_eq!(status, 400);
@@ -293,6 +305,121 @@ fn malformed_submissions_are_structured_400s() {
     // After all that abuse the daemon still serves.
     let health = request_json(&client, "GET", "/api/health", b"").unwrap();
     assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn conflicting_resubmission_is_a_409_with_the_standing_settings() {
+    let (mut server, client, store) = start_server("conflict");
+    let pts = points(3);
+    let st = submit(&client, &pts, 2, 5.0);
+    let cid = st.get("id").and_then(Json::as_str).unwrap().to_string();
+    let settings = st.get("settings").expect("submit echoes effective settings");
+    assert_eq!(settings.get("tasks").and_then(Json::as_usize), Some(2));
+    assert_eq!(settings.get("lease_secs").and_then(Json::as_f64), Some(5.0));
+    assert_eq!(settings.get("eval").and_then(Json::as_str), Some("direct"));
+
+    // Identical settings (or settings left implicit) join idempotently.
+    let again = submit(&client, &pts, 2, 5.0);
+    assert_eq!(again.get("id").and_then(Json::as_str), Some(cid.as_str()));
+    let implicit = Json::obj(vec![("manifest", Manifest::new(pts.clone()).to_json())])
+        .to_string();
+    let joined =
+        request_json(&client, "POST", "/api/campaigns", implicit.as_bytes()).unwrap();
+    assert_eq!(joined.get("id").and_then(Json::as_str), Some(cid.as_str()));
+
+    // Explicitly different settings are a conflict, not a silent join.
+    for (key, val) in [
+        ("tasks", Json::Num(3.0)),
+        ("lease_secs", Json::Num(9.0)),
+        ("skeleton", Json::Bool(false)),
+        ("wave", Json::Num(7.0)),
+        ("batch", Json::Num(2.0)),
+    ] {
+        let body = Json::obj(vec![
+            ("manifest", Manifest::new(pts.clone()).to_json()),
+            (key, val),
+        ])
+        .to_string();
+        let (status, resp) =
+            client.request("POST", "/api/campaigns", body.as_bytes()).unwrap();
+        assert_eq!(status, 409, "conflicting {key} must be refused");
+        let v = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+        assert!(v.get("error").and_then(Json::as_str).is_some());
+        assert!(
+            v.get("settings").is_some(),
+            "the 409 carries the standing settings: {v:?}"
+        );
+    }
+    // The registered campaign's settings are untouched by the refused
+    // submissions.
+    let joined = submit(&client, &pts, 2, 5.0);
+    let settings = joined.get("settings").unwrap();
+    assert_eq!(settings.get("tasks").and_then(Json::as_usize), Some(2));
+    assert_eq!(settings.get("lease_secs").and_then(Json::as_f64), Some(5.0));
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn auth_and_quota_refusals_are_structured_not_hangs() {
+    let store = fresh_dir("auth_store");
+    let tokens = store.join("tokens.txt");
+    // alpha: at most 1 active campaign and 1 in-flight lease; beta:
+    // default limits. Comments and blank lines are fine.
+    std::fs::write(&tokens, "# staff\nalpha 1 1\nbeta\n\n").unwrap();
+    let mut opts = ServeOptions::new("127.0.0.1:0", store.clone());
+    opts.io_timeout_secs = 2.0;
+    opts.token_file = Some(tokens);
+    let mut server = Server::start(opts).unwrap();
+    let mut client = Client::new(server.addr().to_string());
+
+    // Health needs no token; everything else does.
+    let health = request_json(&client, "GET", "/api/health", b"").unwrap();
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    let (status, resp) = client.request("POST", "/api/claim", b"{}").unwrap();
+    assert_eq!(status, 401, "missing token");
+    let v = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+    assert!(v.get("error").and_then(Json::as_str).is_some());
+    client.token = Some("garbage".into());
+    let (status, _) = client.request("POST", "/api/claim", b"{}").unwrap();
+    assert_eq!(status, 401, "unknown token");
+
+    // alpha registers one campaign (tasks=1 so the single lease below
+    // is the whole campaign); a second active one trips the quota.
+    client.token = Some("alpha".into());
+    let st = submit(&client, &points(2), 1, 30.0);
+    assert!(st.get("id").and_then(Json::as_str).is_some());
+    let more = Json::obj(vec![("manifest", Manifest::new(points(4)).to_json())])
+        .to_string();
+    let (status, resp) =
+        client.request("POST", "/api/campaigns", more.as_bytes()).unwrap();
+    assert_eq!(status, 429, "campaign quota");
+    let v = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+    assert!(v.get("error").and_then(Json::as_str).unwrap().contains("campaign"));
+
+    // alpha may hold one lease; the second claim trips the lease quota.
+    let claim = request_json(&client, "POST", "/api/claim", b"{}").unwrap();
+    assert!(claim.get("task").is_some());
+    let (status, _) = client.request("POST", "/api/claim", b"{}").unwrap();
+    assert_eq!(status, 429, "lease quota");
+
+    // beta has default limits — registers and claims untroubled by
+    // alpha's quotas.
+    client.token = Some("beta".into());
+    let st = submit(&client, &points(3), 1, 30.0);
+    assert!(st.get("id").and_then(Json::as_str).is_some());
+    let claim = request_json(&client, "POST", "/api/claim", b"{}").unwrap();
+    assert!(claim.get("task").is_some(), "beta claims its own task: {claim:?}");
+
+    // And a token file with no tokens refuses to start at all.
+    let empty = store.join("empty.txt");
+    std::fs::write(&empty, "# nobody\n").unwrap();
+    let mut bad = ServeOptions::new("127.0.0.1:0", store.clone());
+    bad.token_file = Some(empty);
+    assert!(Server::start(bad).is_err());
+
     server.shutdown();
     let _ = std::fs::remove_dir_all(&store);
 }
